@@ -1,0 +1,92 @@
+//! Quickstart: sparse-code a synthetic 1-D signal and learn its
+//! dictionary.
+//!
+//! The workload matches the `quickstart_1d` AOT configuration
+//! (T=2000, K=5, L=32, P=1), so when `make artifacts` has run, the
+//! beta bootstrap executes through the JAX/Pallas HLO artifact on the
+//! PJRT CPU client; otherwise the native rust path is used — the
+//! printed dispatch counters show which.
+//!
+//!     cargo run --release --example quickstart
+
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig};
+use dicodile::csc::cd::{solve_cd, CdConfig};
+use dicodile::csc::problem::CscProblem;
+use dicodile::csc::select::Strategy;
+use dicodile::data::synthetic::{best_atom_correlation, SyntheticConfig};
+use dicodile::runtime::HybridOps;
+
+fn main() -> anyhow::Result<()> {
+    println!("== DiCoDiLe quickstart ==\n");
+
+    // ---- 1. generate a workload from the paper's model (§5.1) -----------
+    let gen = SyntheticConfig {
+        rho: 0.01,
+        act_std: 5.0,
+        noise_std: 0.05,
+        ..SyntheticConfig::signal_1d(2000, 5, 32)
+    };
+    let w = gen.generate(42);
+    println!(
+        "workload: X {:?}, D_true {:?}, Z_true nnz {}, SNR {:.1} dB",
+        w.x.dims(),
+        w.d_true.dims(),
+        w.z_true.nnz(),
+        w.snr_db()
+    );
+
+    // ---- 2. sparse-code with the true dictionary -------------------------
+    let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), 0.1);
+
+    // beta bootstrap through the AOT artifact when available.
+    let ops = HybridOps::from_env();
+    let beta0 = ops.beta_init(&problem);
+    let (artifact, native) = ops.call_counts();
+    println!(
+        "beta bootstrap: {:?} via {} (artifact calls {}, native calls {})",
+        beta0.dims(),
+        if artifact > 0 { "PJRT artifact" } else { "native rust" },
+        artifact,
+        native
+    );
+
+    let r = solve_cd(
+        &problem,
+        &CdConfig { strategy: Strategy::LocallyGreedy, tol: 1e-6, ..Default::default() },
+    );
+    println!(
+        "LGCD: cost {:.4e}, nnz {}, {} updates in {:.3}s (converged: {})",
+        problem.cost(&r.z),
+        r.z.nnz(),
+        r.stats.updates,
+        r.stats.runtime,
+        r.stats.converged
+    );
+
+    // decomposition check against ground truth (Fig. 1 of the paper)
+    let recon = dicodile::conv::reconstruct(&r.z, &problem.d);
+    let resid = w.x.sub(&recon);
+    println!(
+        "reconstruction: ||X - Z*D|| / ||X|| = {:.3}",
+        resid.norm2() / w.x.norm2()
+    );
+
+    // ---- 3. learn the dictionary from scratch ----------------------------
+    println!("\nlearning a fresh dictionary (K=5, L=32)...");
+    let cfg = CdlConfig {
+        n_atoms: 5,
+        atom_dims: vec![32],
+        lambda_frac: 0.05,
+        max_iter: 12,
+        csc_tol: 1e-5,
+        seed: 7,
+        ..Default::default()
+    };
+    let learned = learn_dictionary(&w.x, &cfg)?;
+    println!("{}", dicodile::cdl::report::trace_table(&learned));
+    for k in 0..5 {
+        let c = best_atom_correlation(learned.d.slice0(k), &w.d_true, &[32]);
+        println!("atom {k}: best correlation with ground truth = {c:.3}");
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO
+text artifacts + manifest.json for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Artifacts are lowered in f32 for a fixed set of workload configurations
+(the shapes the examples/benches/parity-tests use). The rust runtime
+matches artifacts by (op name, exact input shapes) and falls back to
+its native implementations for any other shape.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Workload configurations to lower. Keep in sync with:
+#   examples/quickstart.rs           (quickstart_1d)
+#   examples/hubble_patterns.rs      (hubble_2d)
+#   rust/tests/artifact_parity.rs    (tiny_1d, tiny_2d)
+CONFIGS = {
+    "tiny_1d": dict(p=1, k=3, l=(8,), t=(64,)),
+    "tiny_2d": dict(p=1, k=2, l=(4, 4), t=(16, 16)),
+    "quickstart_1d": dict(p=1, k=5, l=(32,), t=(2000,)),
+    "hubble_2d": dict(p=1, k=9, l=(12, 12), t=(200, 300)),
+}
+
+DTYPE = jnp.float32
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPE)
+
+
+def shapes_for(cfg):
+    """All tensor shapes of a workload configuration."""
+    p, k = cfg["p"], cfg["k"]
+    l, t = tuple(cfg["l"]), tuple(cfg["t"])
+    v = tuple(ti - li + 1 for ti, li in zip(t, l))
+    cc = tuple(2 * li - 1 for li in l)
+    return {
+        "x": (p,) + t,
+        "d": (k, p) + l,
+        "z": (k,) + v,
+        "phi": (k, k) + cc,
+        "psi": (k, p) + l,
+        "norms": (k,),
+        "lam": (1,),
+    }
+
+
+def ops_for(cfg):
+    """(op name, callable, input shapes) triples for one configuration."""
+    s = shapes_for(cfg)
+    ldims = tuple(cfg["l"])
+    return [
+        ("beta_init", lambda x, d: model.beta_init(x, d), [s["x"], s["d"]]),
+        ("cost_eval", lambda x, d, z: model.cost_eval(x, d, z), [s["x"], s["d"], s["z"]]),
+        (
+            "dict_grad",
+            lambda phi, psi, d: model.dict_grad(phi, psi, d),
+            [s["phi"], s["psi"], s["d"]],
+        ),
+        ("phi_psi", lambda z, x: model.phi_psi(z, x, ldims), [s["z"], s["x"]]),
+        (
+            "lgcd_step",
+            lambda beta, z, norms, lam: model.lgcd_step(beta, z, norms, lam),
+            [s["z"], s["z"], s["norms"], s["lam"]],
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str, configs=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "dtype": "f32", "artifacts": []}
+    for cfg_name, cfg in (configs or CONFIGS).items():
+        for op_name, fn, in_shapes in ops_for(cfg):
+            args = [spec(sh) for sh in in_shapes]
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            out_shapes = [
+                list(o.shape) for o in jax.eval_shape(fn, *args)
+            ]
+            fname = f"{op_name}__{cfg_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": op_name,
+                    "config": cfg_name,
+                    "file": fname,
+                    "inputs": [list(sh) for sh in in_shapes],
+                    "outputs": out_shapes,
+                }
+            )
+            print(f"  {op_name:10} {cfg_name:14} {len(text):>9} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--configs",
+        default="",
+        help="comma-separated subset of configs (default: all)",
+    )
+    args = ap.parse_args()
+    configs = CONFIGS
+    if args.configs:
+        names = [c for c in args.configs.split(",") if c]
+        configs = {n: CONFIGS[n] for n in names}
+    manifest = lower_all(args.out, configs)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

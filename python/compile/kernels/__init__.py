@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import corr, lgcd_step, ref  # noqa: F401

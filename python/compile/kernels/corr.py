@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: dictionary correlation (the beta bootstrap).
+
+    out[k, u] = sum_{p, l} X[p, u + l] D[k, p, l]
+
+This is the single most FLOP-heavy step of each CSC solve
+(O(K P |Theta| |Omega|)), and the body of the `beta_init` artifact.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the output is tiled over
+(atom, spatial block). Each grid step holds one output tile of BLOCK
+positions, the full observation window it needs (BLOCK + L - 1 halo per
+spatial dim, channels-major) and one atom in VMEM, and reduces over the
+atom support with unrolled shifted windows — each shift is a
+(P,BLOCK)x(P,) contraction, which batches into an MXU matmul of shape
+(BLOCK, P*|Theta|) x (P*|Theta|, 1) after the unroll. For the artifact
+shapes (P<=8, L<=32, BLOCK=1024) the VMEM footprint is
+(BLOCK + L) * P * 4B + P * L * 4B < 300 KiB per step. interpret=True on
+CPU; checked against ref.correlate_dict_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output positions per grid step.
+BLOCK = 1024
+
+
+def _make_kernel_1d(p, length, block):
+    def kernel(x_ref, d_ref, out_ref):
+        ti = pl.program_id(1)
+        xs = x_ref[...]  # [P, T_padded] (full observation in VMEM)
+        dk = d_ref[...]  # [1, P, L]
+        acc = jnp.zeros((block,), dtype=xs.dtype)
+        zero = jnp.int32(0)
+        u0 = (ti * block).astype(jnp.int32)
+        for li in range(length):  # unrolled over the atom support
+            win = jax.lax.dynamic_slice(xs, (zero, u0 + jnp.int32(li)), (p, block))
+            acc = acc + jnp.einsum("pt,p->t", win, dk[0, :, li])
+        out_ref[...] = acc[None, :]
+
+    return kernel
+
+
+def correlate_dict(x, d):
+    """Pallas-backed corr(X, D) -> [K, T'..] (1-D or 2-D spatial)."""
+    k, p = d.shape[0], d.shape[1]
+    ldims = d.shape[2:]
+    tdims = x.shape[1:]
+    vdims = tuple(t - l + 1 for t, l in zip(tdims, ldims))
+    if len(ldims) == 1:
+        return _corr_1d(x, d, k, p, ldims[0], vdims[0])
+    if len(ldims) == 2:
+        # 2-D: flatten rows into the grid, block along the last axis.
+        return _corr_2d(x, d, k, p, ldims, vdims)
+    raise ValueError(f"unsupported spatial rank {len(ldims)}")
+
+
+def _corr_1d(x, d, k, p, length, v):
+    pad = (-v) % BLOCK
+    vp = v + pad
+    # x must cover indices up to vp - 1 + L - 1.
+    xp = jnp.pad(x, ((0, 0), (0, vp + length - 1 - x.shape[1])))
+    out = pl.pallas_call(
+        _make_kernel_1d(p, length, BLOCK),
+        grid=(k, vp // BLOCK),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda ki, ti: (0, 0)),
+            pl.BlockSpec((1, p, length), lambda ki, ti: (ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda ki, ti: (ki, ti)),
+        out_shape=jax.ShapeDtypeStruct((k, vp), x.dtype),
+        interpret=True,
+    )(xp, d)
+    return out[:, :v]
+
+
+# 2-D: one output row per grid step, blocked along the width.
+ROW_BLOCK = 256
+
+
+def _make_kernel_2d(p, l0, l1, block):
+    def kernel(x_ref, d_ref, out_ref):
+        ri = pl.program_id(1).astype(jnp.int32)
+        ci = pl.program_id(2)
+        xs = x_ref[...]  # [P, Hp, Wp]
+        dk = d_ref[...]  # [1, P, L0, L1]
+        acc = jnp.zeros((block,), dtype=xs.dtype)
+        zero = jnp.int32(0)
+        c0 = (ci * block).astype(jnp.int32)
+        for li in range(l0):
+            for lj in range(l1):
+                win = jax.lax.dynamic_slice(
+                    xs, (zero, ri + jnp.int32(li), c0 + jnp.int32(lj)), (p, 1, block)
+                )
+                acc = acc + jnp.einsum("pt,p->t", win[:, 0, :], dk[0, :, li, lj])
+        out_ref[...] = acc[None, None, :]
+
+    return kernel
+
+
+def _corr_2d(x, d, k, p, ldims, vdims):
+    l0, l1 = ldims
+    v0, v1 = vdims
+    pad1 = (-v1) % ROW_BLOCK
+    v1p = v1 + pad1
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (0, v0 + l0 - 1 - x.shape[1]),
+            (0, v1p + l1 - 1 - x.shape[2]),
+        ),
+    )
+    out = pl.pallas_call(
+        _make_kernel_2d(p, l0, l1, ROW_BLOCK),
+        grid=(k, v0, v1p // ROW_BLOCK),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda ki, ri, ci: (0, 0, 0)),
+            pl.BlockSpec((1, p, l0, l1), lambda ki, ri, ci: (ki, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ROW_BLOCK), lambda ki, ri, ci: (ki, ri, ci)),
+        out_shape=jax.ShapeDtypeStruct((k, v0, v1p), x.dtype),
+        interpret=True,
+    )(xp, d)
+    return out[:, :, :v1]

@@ -1,0 +1,172 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+Every kernel in this package is checked against these reference
+implementations (pytest + hypothesis sweeps). They mirror the rust
+conventions exactly (see rust/src/conv/mod.rs):
+
+  X : [P, T..]       observation (channels-first)
+  D : [K, P, L..]    dictionary
+  Z : [K, T'..]      activations on the valid domain T' = T - L + 1
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold(u, lam):
+    """ST(u, lam) = sign(u) max(|u| - lam, 0)."""
+    return jnp.sign(u) * jnp.maximum(jnp.abs(u) - lam, 0.0)
+
+
+def lgcd_step_ref(beta, z, norms_sq, lam):
+    """Optimal additive updates dZ = ST(beta, lam)/||D_k||^2 - Z.
+
+    beta, z : [K, T'..] ; norms_sq : [K] ; lam : scalar.
+    The per-coordinate LGCD candidate map (eq. 7 of the paper).
+    """
+    expand = (...,) + (None,) * (beta.ndim - 1)
+    return soft_threshold(beta, lam) / norms_sq[expand] - z
+
+
+def correlate_dict_ref(x, d):
+    """beta bootstrap corr(X, D)[k, u] = sum_{p,l} X[p, u+l] D[k,p,l].
+
+    Works for d = 1 or 2 spatial dims. Returns [K, T'..].
+    """
+    k, p = d.shape[0], d.shape[1]
+    ldims = d.shape[2:]
+    tdims = x.shape[1:]
+    vdims = tuple(t - l + 1 for t, l in zip(tdims, ldims))
+    out = jnp.zeros((k,) + vdims, dtype=x.dtype)
+    if len(ldims) == 1:
+        (L,) = ldims
+        for li in range(L):
+            # window X[:, li : li + T'] against D[:, :, li]
+            win = x[:, li : li + vdims[0]]  # [P, T']
+            out = out + jnp.einsum("pt,kp->kt", win, d[:, :, li])
+    elif len(ldims) == 2:
+        L0, L1 = ldims
+        for li in range(L0):
+            for lj in range(L1):
+                win = x[:, li : li + vdims[0], lj : lj + vdims[1]]
+                out = out + jnp.einsum("pij,kp->kij", win, d[:, :, li, lj])
+    else:
+        raise ValueError(f"unsupported spatial rank {len(ldims)}")
+    return out
+
+
+def reconstruct_ref(z, d):
+    """Z * D : [P, T..] = sum_k full_conv(Z_k, D_k[p])."""
+    k, p = d.shape[0], d.shape[1]
+    ldims = d.shape[2:]
+    vdims = z.shape[1:]
+    tdims = tuple(v + l - 1 for v, l in zip(vdims, ldims))
+    out = jnp.zeros((p,) + tdims, dtype=z.dtype)
+    if len(ldims) == 1:
+        (L,) = ldims
+        for li in range(L):
+            out = out.at[:, li : li + vdims[0]].add(
+                jnp.einsum("kt,kp->pt", z, d[:, :, li])
+            )
+    elif len(ldims) == 2:
+        L0, L1 = ldims
+        for li in range(L0):
+            for lj in range(L1):
+                out = out.at[:, li : li + vdims[0], lj : lj + vdims[1]].add(
+                    jnp.einsum("kij,kp->pij", z, d[:, :, li, lj])
+                )
+    else:
+        raise ValueError(f"unsupported spatial rank {len(ldims)}")
+    return out
+
+
+def cost_ref(x, d, z, lam):
+    """Full objective 1/2 ||X - Z*D||^2 + lam ||Z||_1."""
+    resid = x - reconstruct_ref(z, d)
+    return 0.5 * jnp.sum(resid * resid) + lam * jnp.sum(jnp.abs(z))
+
+
+def data_fit_ref(x, d, z):
+    """1/2 ||X - Z*D||^2 only (the artifact-side part of the cost)."""
+    resid = x - reconstruct_ref(z, d)
+    return 0.5 * jnp.sum(resid * resid)
+
+
+def phi_ref(z, ldims):
+    """phi[k,k'][delta + L - 1] = sum_u Z_k[u] Z_k'[u + delta]."""
+    k = z.shape[0]
+    vdims = z.shape[1:]
+    cc = tuple(2 * l - 1 for l in ldims)
+    out = jnp.zeros((k, k) + cc, dtype=z.dtype)
+    if len(ldims) == 1:
+        (L,) = ldims
+        zp = jnp.pad(z, ((0, 0), (L - 1, L - 1)))
+        for i, delta in enumerate(range(-(L - 1), L)):
+            shifted = zp[:, L - 1 + delta : L - 1 + delta + vdims[0]]
+            out = out.at[:, :, i].set(jnp.einsum("kt,jt->kj", z, shifted))
+    elif len(ldims) == 2:
+        L0, L1 = ldims
+        zp = jnp.pad(z, ((0, 0), (L0 - 1, L0 - 1), (L1 - 1, L1 - 1)))
+        for i, d0 in enumerate(range(-(L0 - 1), L0)):
+            for j, d1 in enumerate(range(-(L1 - 1), L1)):
+                shifted = zp[
+                    :,
+                    L0 - 1 + d0 : L0 - 1 + d0 + vdims[0],
+                    L1 - 1 + d1 : L1 - 1 + d1 + vdims[1],
+                ]
+                out = out.at[:, :, i, j].set(jnp.einsum("kab,jab->kj", z, shifted))
+    else:
+        raise ValueError(f"unsupported spatial rank {len(ldims)}")
+    return out
+
+
+def psi_ref(z, x, ldims):
+    """psi[k][p, l] = sum_u Z_k[u] X[p, u + l]."""
+    k = z.shape[0]
+    p = x.shape[0]
+    vdims = z.shape[1:]
+    out = jnp.zeros((k, p) + tuple(ldims), dtype=z.dtype)
+    if len(ldims) == 1:
+        (L,) = ldims
+        for li in range(L):
+            win = x[:, li : li + vdims[0]]
+            out = out.at[:, :, li].set(jnp.einsum("kt,pt->kp", z, win))
+    elif len(ldims) == 2:
+        L0, L1 = ldims
+        for li in range(L0):
+            for lj in range(L1):
+                win = x[:, li : li + vdims[0], lj : lj + vdims[1]]
+                out = out.at[:, :, li, lj].set(jnp.einsum("kab,pab->kp", z, win))
+    else:
+        raise ValueError(f"unsupported spatial rank {len(ldims)}")
+    return out
+
+
+def dict_grad_ref(phi, psi, d):
+    """grad[k,p,l] = sum_{k', tau} phi[k,k'][tau] D[k',p,l-tau] - psi[k,p,l]."""
+    k, p = d.shape[0], d.shape[1]
+    ldims = d.shape[2:]
+    grad = -psi
+    if len(ldims) == 1:
+        (L,) = ldims
+        dp = jnp.pad(d, ((0, 0), (0, 0), (L - 1, L - 1)))
+        for i, tau in enumerate(range(-(L - 1), L)):
+            # D[k', p, l - tau] for l in [0, L)
+            win = dp[:, :, L - 1 - tau : 2 * L - 1 - tau]
+            grad = grad + jnp.einsum("kj,jpl->kpl", phi[:, :, i], win)
+    elif len(ldims) == 2:
+        L0, L1 = ldims
+        dp = jnp.pad(d, ((0, 0), (0, 0), (L0 - 1, L0 - 1), (L1 - 1, L1 - 1)))
+        for i, t0 in enumerate(range(-(L0 - 1), L0)):
+            for j, t1 in enumerate(range(-(L1 - 1), L1)):
+                win = dp[
+                    :,
+                    :,
+                    L0 - 1 - t0 : 2 * L0 - 1 - t0,
+                    L1 - 1 - t1 : 2 * L1 - 1 - t1,
+                ]
+                grad = grad + jnp.einsum("kj,jpab->kpab", phi[:, :, i, j], win)
+    else:
+        raise ValueError(f"unsupported spatial rank {len(ldims)}")
+    return grad

@@ -1,0 +1,118 @@
+"""Layer-2 JAX compute graph: the batch-heavy algebra of DiCoDiLe.
+
+Five jit-able functions, each lowered to one HLO artifact by aot.py
+(shapes are baked at lowering time; see artifacts/manifest.json):
+
+  beta_init(x, d)         -> (beta,)        corr(X, D), via the Pallas kernel
+  cost_eval(x, d, z)      -> (data_fit,)    1/2 ||X - Z*D||^2
+  dict_grad(phi, psi, d)  -> (grad,)        eq. 16 gradient from the stats
+  phi_psi(z, x)           -> (phi, psi)     eq. 17 sufficient statistics
+  lgcd_step(beta,z,n,lam) -> (dz,)          eq. 7 candidate map (Pallas)
+
+All functions support 1-D and 2-D spatial domains and mirror the rust
+conventions (channels-first; Z on the valid domain). The convolutional
+pieces use lax.conv_general_dilated so XLA emits fused convolutions;
+each is validated against the loop-based oracles in kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import corr as corr_kernel
+from .kernels import lgcd_step as lgcd_kernel
+
+
+def _dn(rank):
+    """Conv dimension numbers for rank spatial dims, channels-first."""
+    if rank == 1:
+        return ("NCH", "OIH", "NCH")
+    if rank == 2:
+        return ("NCHW", "OIHW", "NCHW")
+    raise ValueError(f"unsupported spatial rank {rank}")
+
+
+def _flip_spatial(a, n_lead):
+    axes = tuple(range(n_lead, a.ndim))
+    return jnp.flip(a, axis=axes)
+
+
+def beta_init(x, d):
+    """(corr(X, D),) — the CSC warm start; body is the Pallas kernel."""
+    return (corr_kernel.correlate_dict(x, d),)
+
+
+def reconstruct(z, d):
+    """Z * D : [P, T..] (full convolution, valid-domain activations)."""
+    rank = z.ndim - 1
+    ldims = d.shape[2:]
+    # in: [N=1, C=K, T'..]; ker: [O=P, I=K, L..] spatially flipped;
+    # padding L-1 turns correlation into full convolution.
+    inp = z[None]
+    ker = _flip_spatial(jnp.swapaxes(d, 0, 1), 2)
+    pad = [(l - 1, l - 1) for l in ldims]
+    out = lax.conv_general_dilated(
+        inp, ker, window_strides=(1,) * rank, padding=pad,
+        dimension_numbers=_dn(rank),
+    )
+    return out[0]
+
+
+def cost_eval(x, d, z):
+    """(1/2 ||X - Z*D||^2,) — the lambda ||Z||_1 term is added by the
+    caller in f64 (see rust runtime::hybrid)."""
+    resid = x - reconstruct(z, d)
+    return (0.5 * jnp.sum(resid * resid),)
+
+
+def dict_grad(phi, psi, d):
+    """(grad_D F,) from the sufficient statistics (eq. 16)."""
+    rank = d.ndim - 2
+    k = d.shape[0]
+    ldims = d.shape[2:]
+    # in: [N=P, C=K', L..]; ker: [O=K, I=K', (2L-1)..] = flip(phi);
+    # padding L-1 gives output spatial extent L.
+    inp = jnp.swapaxes(d, 0, 1)
+    ker = _flip_spatial(phi, 2)
+    pad = [(l - 1, l - 1) for l in ldims]
+    out = lax.conv_general_dilated(
+        inp, ker, window_strides=(1,) * rank, padding=pad,
+        dimension_numbers=_dn(rank),
+    )
+    grad = jnp.swapaxes(out, 0, 1)
+    del k
+    return (grad - psi,)
+
+
+def phi_psi(z, x, ldims):
+    """((phi, psi)) — eq. 17 statistics.
+
+    phi via z (*) z correlation with padding L-1 (output (2L-1)..);
+    psi via x (*) z valid correlation (output L..).
+    """
+    rank = z.ndim - 1
+    k = z.shape[0]
+    # phi: in [N=K', C=1, T'..], ker [O=K, I=1, T'..], pad L-1.
+    inp = z[:, None]
+    ker = z[:, None]
+    pad = [(l - 1, l - 1) for l in ldims]
+    phi = lax.conv_general_dilated(
+        inp, ker, window_strides=(1,) * rank, padding=pad,
+        dimension_numbers=_dn(rank),
+    )
+    # out[n=k', o=k, delta] -> [k, k', delta]
+    phi = jnp.swapaxes(phi, 0, 1)
+    # psi: in [N=P, C=1, T..], ker [O=K, I=1, T'..], valid padding.
+    psi = lax.conv_general_dilated(
+        x[:, None], ker, window_strides=(1,) * rank,
+        padding=[(0, 0)] * rank, dimension_numbers=_dn(rank),
+    )
+    psi = jnp.swapaxes(psi, 0, 1)
+    del k
+    return (phi, psi)
+
+
+def lgcd_step(beta, z, norms_sq, lam):
+    """(dZ,) — eq. 7 candidate map; body is the Pallas kernel."""
+    return (lgcd_kernel.lgcd_step(beta, z, norms_sq, lam),)

@@ -1,0 +1,155 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal of the AOT layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import corr, lgcd_step, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# lgcd_step kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 6),
+    n=st.integers(1, 300),
+    lam=st.floats(0.01, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lgcd_step_matches_ref_1d(k, n, lam, seed):
+    r = rng(seed)
+    beta = jnp.asarray(r.normal(size=(k, n)) * 3)
+    z = jnp.asarray(r.normal(size=(k, n)))
+    norms = jnp.asarray(r.uniform(0.5, 2.0, size=(k,)))
+    got = lgcd_step.lgcd_step(beta, z, norms, jnp.asarray(lam))
+    want = ref.lgcd_step_ref(beta, z, norms, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    h=st.integers(1, 24),
+    w=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lgcd_step_matches_ref_2d(k, h, w, seed):
+    r = rng(seed)
+    beta = jnp.asarray(r.normal(size=(k, h, w)) * 3)
+    z = jnp.asarray(r.normal(size=(k, h, w)))
+    norms = jnp.asarray(r.uniform(0.5, 2.0, size=(k,)))
+    got = lgcd_step.lgcd_step(beta, z, norms, jnp.asarray(0.5))
+    want = ref.lgcd_step_ref(beta, z, norms, 0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_lgcd_step_dtypes(dtype):
+    r = rng(0)
+    beta = jnp.asarray(r.normal(size=(3, 50)), dtype=dtype)
+    z = jnp.zeros((3, 50), dtype=dtype)
+    norms = jnp.ones((3,), dtype=dtype)
+    got = lgcd_step.lgcd_step(beta, z, norms, jnp.asarray(0.1, dtype=dtype))
+    assert got.dtype == dtype
+    want = ref.lgcd_step_ref(beta, z, norms, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_lgcd_step_zero_at_fixed_point():
+    # beta = z * norms with |beta| <= lam + z*norms means ST pulls toward
+    # the fixed point; specifically dz = 0 when ST(beta)/n == z.
+    z = jnp.asarray([[0.5, -1.0, 0.0]])
+    norms = jnp.asarray([2.0])
+    lam = 0.3
+    beta = z * norms + jnp.sign(z) * lam  # ST(beta, lam)/n == z on support
+    got = lgcd_step.lgcd_step(beta, z, norms, jnp.asarray(lam))
+    np.testing.assert_allclose(got[0, :2], 0.0, atol=1e-12)
+
+
+def test_lgcd_step_block_boundary_sizes():
+    # Sizes straddling the BLOCK padding logic.
+    for n in [lgcd_step.BLOCK - 1, lgcd_step.BLOCK, lgcd_step.BLOCK + 1]:
+        r = rng(n)
+        beta = jnp.asarray(r.normal(size=(2, n)))
+        z = jnp.asarray(r.normal(size=(2, n)))
+        norms = jnp.asarray([1.0, 2.0])
+        got = lgcd_step.lgcd_step(beta, z, norms, jnp.asarray(0.2))
+        want = ref.lgcd_step_ref(beta, z, norms, 0.2)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# corr kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    p=st.integers(1, 3),
+    length=st.integers(1, 12),
+    extra=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_corr_1d_matches_ref(k, p, length, extra, seed):
+    r = rng(seed)
+    t = length + extra - 1  # T' = extra
+    x = jnp.asarray(r.normal(size=(p, t)))
+    d = jnp.asarray(r.normal(size=(k, p, length)))
+    got = corr.correlate_dict(x, d)
+    want = ref.correlate_dict_ref(x, d)
+    assert got.shape == (k, extra)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 3),
+    p=st.integers(1, 2),
+    l0=st.integers(1, 6),
+    l1=st.integers(1, 6),
+    v0=st.integers(1, 20),
+    v1=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_corr_2d_matches_ref(k, p, l0, l1, v0, v1, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(p, v0 + l0 - 1, v1 + l1 - 1)))
+    d = jnp.asarray(r.normal(size=(k, p, l0, l1)))
+    got = corr.correlate_dict(x, d)
+    want = ref.correlate_dict_ref(x, d)
+    assert got.shape == (k, v0, v1)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+def test_corr_block_boundaries_1d():
+    for v in [corr.BLOCK - 1, corr.BLOCK, corr.BLOCK + 1]:
+        r = rng(v)
+        x = jnp.asarray(r.normal(size=(1, v + 7)))
+        d = jnp.asarray(r.normal(size=(2, 1, 8)))
+        got = corr.correlate_dict(x, d)
+        want = ref.correlate_dict_ref(x, d)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+def test_corr_delta_atom_slides():
+    # A one-hot atom extracts the corresponding window of X.
+    x = jnp.arange(20.0)[None, :]
+    d = jnp.zeros((1, 1, 4)).at[0, 0, 2].set(1.0)
+    got = corr.correlate_dict(x, d)
+    np.testing.assert_allclose(got[0], np.arange(2.0, 19.0))

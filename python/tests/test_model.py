@@ -1,0 +1,111 @@
+"""L2 model correctness: conv-based graph vs the loop-based oracles,
+plus shape checks for every artifact function in 1-D and 2-D."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_workload(seed, rank, k=3, p=2, length=5, v=17):
+    r = rng(seed)
+    if rank == 1:
+        ld, vd = (length,), (v,)
+    else:
+        ld, vd = (length, length), (v, v)
+    td = tuple(a + b - 1 for a, b in zip(vd, ld))
+    x = jnp.asarray(r.normal(size=(p,) + td))
+    d = jnp.asarray(r.normal(size=(k, p) + ld))
+    z = jnp.asarray(r.normal(size=(k,) + vd) * (r.uniform(size=(k,) + vd) < 0.2))
+    return x, d, z, ld
+
+
+@settings(max_examples=10, deadline=None)
+@given(rank=st.integers(1, 2), seed=st.integers(0, 2**31 - 1))
+def test_reconstruct_matches_ref(rank, seed):
+    x, d, z, _ = make_workload(seed, rank)
+    got = model.reconstruct(z, d)
+    want = ref.reconstruct_ref(z, d)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(rank=st.integers(1, 2), seed=st.integers(0, 2**31 - 1))
+def test_cost_eval_matches_ref(rank, seed):
+    x, d, z, _ = make_workload(seed, rank)
+    (got,) = model.cost_eval(x, d, z)
+    want = ref.data_fit_ref(x, d, z)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(rank=st.integers(1, 2), seed=st.integers(0, 2**31 - 1))
+def test_phi_psi_match_ref(rank, seed):
+    x, d, z, ld = make_workload(seed, rank)
+    phi, psi = model.phi_psi(z, x, ld)
+    phi_want = ref.phi_ref(z, ld)
+    psi_want = ref.psi_ref(z, x, ld)
+    assert phi.shape == phi_want.shape
+    assert psi.shape == psi_want.shape
+    np.testing.assert_allclose(phi, phi_want, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(psi, psi_want, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(rank=st.integers(1, 2), seed=st.integers(0, 2**31 - 1))
+def test_dict_grad_matches_ref(rank, seed):
+    x, d, z, ld = make_workload(seed, rank)
+    phi = ref.phi_ref(z, ld)
+    psi = ref.psi_ref(z, x, ld)
+    (got,) = model.dict_grad(phi, psi, d)
+    want = ref.dict_grad_ref(phi, psi, d)
+    assert got.shape == d.shape
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+def test_dict_grad_is_true_gradient():
+    # Autodiff cross-check: grad of 1/2||X - Z*D||^2 wrt D equals the
+    # stats-based gradient.
+    x, d, z, ld = make_workload(7, 1)
+    phi = ref.phi_ref(z, ld)
+    psi = ref.psi_ref(z, x, ld)
+    (got,) = model.dict_grad(phi, psi, d)
+    want = jax.grad(lambda dd: ref.data_fit_ref(x, dd, z))(d)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+def test_beta_init_equals_neg_gradient_at_zero():
+    # beta at Z=0 is corr(X, D) = -grad of the smooth part at 0.
+    x, d, z, _ = make_workload(9, 1)
+    (beta,) = model.beta_init(x, d)
+    want = -jax.grad(lambda zz: ref.data_fit_ref(x, d, zz))(jnp.zeros_like(z))
+    np.testing.assert_allclose(beta, want, rtol=1e-6, atol=1e-8)
+
+
+def test_lgcd_step_wrapper_shapes():
+    x, d, z, _ = make_workload(11, 2)
+    (beta,) = model.beta_init(x, d)
+    norms = jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+    (dz,) = model.lgcd_step(beta, z, norms, jnp.asarray(0.1))
+    assert dz.shape == z.shape
+    want = ref.lgcd_step_ref(beta, z, norms, 0.1)
+    np.testing.assert_allclose(dz, want, rtol=1e-6, atol=1e-8)
+
+
+def test_full_csc_objective_consistency():
+    # cost_eval + lambda * l1 == cost_ref.
+    x, d, z, _ = make_workload(13, 1)
+    lam = 0.37
+    (fit,) = model.cost_eval(x, d, z)
+    total = fit + lam * jnp.sum(jnp.abs(z))
+    np.testing.assert_allclose(total, ref.cost_ref(x, d, z, lam), rtol=1e-6)

@@ -1,0 +1,78 @@
+//! Fig. 4 (and Fig. C.1 with --large) — runtime of DICOD (greedy
+//! workers, line split, no soft-locks) vs DiCoDiLe-Z (LGCD workers,
+//! soft-locks) as a function of the number of workers W, on 1-D
+//! signals.
+//!
+//! Shape to reproduce: DiCoDiLe-Z dominates at low W (GCD's local scan
+//! is expensive on big sub-domains); DICOD catches up super-linearly;
+//! the two become equivalent when W reaches T/(4L) (each worker's
+//! domain fits a single LGCD segment, dashed-green line of the paper).
+//!
+//!     cargo bench --bench fig4_scaling_1d [-- --large]
+
+use dicodile::bench::{fmt_secs, time, BenchConfig, Table};
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::coordinator::solve_distributed;
+
+fn main() {
+    let large = std::env::args().any(|a| a == "--large");
+    let bc = BenchConfig::from_env();
+    let l = 16;
+    let k = 5;
+    let ratio = if large { 750 } else { 150 };
+    let t = ratio * l;
+    println!(
+        "# Fig. {} — DICOD vs DiCoDiLe-Z scaling, T={ratio}L (K={k}, L={l}, P=7)",
+        if large { "C.1" } else { "4" }
+    );
+
+    let gen = SyntheticConfig::paper_1d(t, k, l);
+    let w = gen.generate(7);
+    let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), 0.1);
+    let equiv = (t - l + 1) / (4 * l);
+    println!("equivalence point T/4L = {equiv} workers\n");
+
+    // Simulated per-worker-clock model: the testbed has one physical
+    // core, so parallel runtime = critical-path work x calibrated unit
+    // cost (see DESIGN.md §3). Wall-clock of the threaded run is shown
+    // for reference.
+    let mut table = Table::new(&[
+        "W", "algo", "sim-time", "sim-speedup", "wall", "updates", "msgs", "cost",
+    ]);
+    let workers = [1usize, 2, 4, 8, 16];
+    for algo in ["dicodile", "dicod"] {
+        let mut base_work = None;
+        let mut unit = 0.0f64;
+        for &nw in &workers {
+            let cfg = match algo {
+                "dicodile" => DicodConfig { tol: 1e-2, ..DicodConfig::dicodile(nw) },
+                _ => DicodConfig { tol: 1e-2, ..DicodConfig::dicod(nw) },
+            };
+            let mut last = None;
+            let timing = time(&bc, || {
+                let r = solve_distributed(&problem, &cfg);
+                let cost = problem.cost(&r.z);
+                last = Some((r.stats.updates, r.stats.msgs_sent, cost, r.critical_path_work()));
+            });
+            let (updates, msgs, cost, crit) = last.unwrap();
+            let b = *base_work.get_or_insert(crit);
+            if unit == 0.0 {
+                unit = timing.median / crit.max(1) as f64;
+            }
+            table.row(vec![
+                nw.to_string(),
+                algo.to_string(),
+                fmt_secs(crit as f64 * unit),
+                format!("{:.2}x", b as f64 / crit.max(1) as f64),
+                fmt_secs(timing.median),
+                updates.to_string(),
+                msgs.to_string(),
+                format!("{cost:.4e}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("expected shape: dicodile faster at low W; dicod catches up near W = T/4L = {equiv}.");
+}

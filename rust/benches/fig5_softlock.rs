@@ -1,0 +1,176 @@
+//! Fig. 5 — divergence without soft-locks on a 2-D grid of workers.
+//!
+//! The paper reconstructs Mandrill with soft-locks disabled and 49
+//! workers: interfering updates between >2 workers make the iterates
+//! blow up near sub-domain corners (they stop a worker once
+//! ||Z||_inf > 50 / max_k ||D_k||_inf). With soft-locks on, the same
+//! configuration converges to the sequential solution.
+//!
+//! This bench reproduces the dichotomy on a texture image and reports
+//! the divergence flag, ||Z||_inf and the border-energy ratio (activation
+//! mass within L of a sub-domain corner vs elsewhere).
+//!
+//!     cargo bench --bench fig5_softlock
+
+use dicodile::bench::Table;
+use dicodile::csc::cd::{solve_cd, CdConfig};
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::texture::TextureConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::coordinator::solve_distributed;
+use dicodile::dicod::partition::{PartitionKind, WorkerGrid};
+use dicodile::tensor::NdTensor;
+
+/// Activation mass concentrated in the soft border band of the grid.
+fn border_mass_ratio(z: &NdTensor, grid: &WorkerGrid) -> f64 {
+    let sp: &[usize] = &z.dims()[1..];
+    let k = z.dims()[0];
+    let mut border = 0.0;
+    let mut total = 0.0;
+    let spn: usize = sp.iter().product();
+    for ki in 0..k {
+        for off in 0..spn {
+            let idx = dicodile::tensor::shape::index_of(off, sp);
+            let u: Vec<i64> = idx.iter().map(|&x| x as i64).collect();
+            let v = z.data()[ki * spn + off].abs();
+            total += v;
+            let w = grid.owner_of(&u);
+            if grid.in_soft_border(w, &u) {
+                border += v;
+            }
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        border / total
+    }
+}
+
+fn main() {
+    println!("# Fig. 5 — soft-locks vs none on a worker grid (texture image)");
+    // Paper setup: K=25 atoms of 16x16 on a full-resolution image with 49
+    // workers. Scaled: K=25, 16x16 atoms, 3x3 grid. The single-core
+    // testbed serializes threads (which de-facto removes asynchrony), so
+    // message application is delayed by `inbox_every` iterations to
+    // emulate the MPI cluster's network latency — see DicodConfig.
+    let size = 112;
+    let x = TextureConfig::with_size(size, size).generate(3);
+    let d = dicodile::cdl::init::init_dictionary(
+        &x,
+        25,
+        &[16, 16],
+        dicodile::cdl::init::InitStrategy::RandomPatches,
+        3,
+    );
+    let problem = CscProblem::with_lambda_frac(x, d, 0.1);
+    let guard = 50.0
+        / problem
+            .d
+            .data()
+            .iter()
+            .fold(0.0f64, |m, v| m.max(v.abs()));
+
+    // sequential reference
+    let seq = solve_cd(&problem, &CdConfig { tol: 1e-3, ..Default::default() });
+    let seq_cost = problem.cost(&seq.z);
+
+    let w = 9;
+    let grid = WorkerGrid::new(
+        &problem.z_spatial_dims(),
+        problem.atom_dims(),
+        w,
+        PartitionKind::Grid,
+    );
+
+    let mut table = Table::new(&[
+        "soft-locks", "latency", "diverged", "||Z||inf", "border-mass", "cost", "vs-seq",
+    ]);
+    for (soft_lock, inbox_every) in [(false, 1usize), (false, 512), (true, 512), (true, 1)] {
+        let cfg = DicodConfig {
+            n_workers: w,
+            soft_lock,
+            tol: 1e-3,
+            divergence_guard: Some(guard),
+            timeout: 120.0,
+            inbox_every,
+            ..Default::default()
+        };
+        let r = solve_distributed(&problem, &cfg);
+        let cost = problem.cost(&r.z);
+        table.row(vec![
+            soft_lock.to_string(),
+            inbox_every.to_string(),
+            r.diverged.to_string(),
+            format!("{:.2e}", r.z.norm_inf()),
+            format!("{:.3}", border_mass_ratio(&r.z, &grid)),
+            format!("{cost:.4e}"),
+            format!("{:+.2e}", cost - seq_cost),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("sequential reference cost: {seq_cost:.4e} (||Z||inf guard at {guard:.1e})");
+
+    // ---- adversarial corner workload -----------------------------------
+    // The paper's divergence arises from >2 workers repeatedly updating
+    // mutually-correlated coordinates at a sub-domain corner. Build that
+    // situation directly: three nearly identical smooth atoms and an X
+    // bump centred on the 4-corner junction of a 2x2 grid, with fully
+    // stale message application (emulated network latency).
+    println!("\n## adversarial corner workload (3 near-identical atoms, 2x2 grid)");
+    let l = 8usize;
+    let n = 40usize;
+    let mut dvals = Vec::new();
+    for k in 0..3 {
+        for i in 0..l {
+            for j in 0..l {
+                dvals.push(1.0 + 0.02 * (k as f64) * ((i + j) as f64 / l as f64));
+            }
+        }
+    }
+    for atom in dvals.chunks_mut(l * l) {
+        let nn: f64 = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in atom {
+            *x /= nn;
+        }
+    }
+    let d2 = dicodile::tensor::NdTensor::from_vec(&[3, 1, l, l], dvals);
+    let mut x2 = dicodile::tensor::NdTensor::zeros(&[1, n, n]);
+    for i in 0..n {
+        for j in 0..n {
+            let di = i as f64 - 20.0;
+            let dj = j as f64 - 20.0;
+            *x2.at_mut(&[0, i, j]) = 10.0 * (-(di * di + dj * dj) / 30.0).exp();
+        }
+    }
+    let p2 = CscProblem::with_lambda_frac(x2, d2, 0.05);
+    let seq2 = solve_cd(&p2, &CdConfig { tol: 1e-8, ..Default::default() });
+    let seq2_cost = p2.cost(&seq2.z);
+    let mut t2 = Table::new(&["soft-locks", "converged", "diverged", "updates", "cost", "vs-seq"]);
+    for sl in [false, true] {
+        let cfg = DicodConfig {
+            n_workers: 4,
+            soft_lock: sl,
+            tol: 1e-8,
+            divergence_guard: Some(50.0 / p2.d.norm_inf()),
+            inbox_every: 100_000,
+            timeout: 20.0,
+            max_updates: 100_000_000,
+            ..Default::default()
+        };
+        let r = solve_distributed(&p2, &cfg);
+        let cost = p2.cost(&r.z);
+        t2.row(vec![
+            sl.to_string(),
+            r.converged.to_string(),
+            r.diverged.to_string(),
+            r.stats.updates.to_string(),
+            format!("{cost:.5e}"),
+            format!("{:+.2e}", cost - seq2_cost),
+        ]);
+    }
+    println!("{}", t2.render());
+    println!("expected shape: without soft-locks the corner interference never settles");
+    println!("(orders of magnitude more updates, timeout, worse cost); with soft-locks");
+    println!("the run converges to the sequential optimum.");
+}

@@ -1,0 +1,85 @@
+//! Fig. 6 — line vs grid partitioning of an image.
+//!
+//! Paper setup: K=5, 8x8 atoms on Mandrill. The shape to reproduce:
+//! both partitions scale identically at low W, the line split plateaus
+//! once W approaches T1/(4 L1) (border candidates dominate) and cannot
+//! exceed W = T1/L1 at all, while the grid keeps scaling.
+//!
+//!     cargo bench --bench fig6_grid_vs_line
+
+use dicodile::bench::{fmt_secs, time, BenchConfig, Table};
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::texture::TextureConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::coordinator::solve_distributed;
+use dicodile::dicod::partition::PartitionKind;
+
+fn main() {
+    let bc = BenchConfig::from_env();
+    let size = 96;
+    let l = 8;
+    println!("# Fig. 6 — line vs grid partitioning ({size}x{size} texture, K=5, L={l}x{l})");
+    let x = TextureConfig::with_size(size, size).generate(11);
+    let d = dicodile::cdl::init::init_dictionary(
+        &x,
+        5,
+        &[l, l],
+        dicodile::cdl::init::InitStrategy::RandomPatches,
+        11,
+    );
+    let problem = CscProblem::with_lambda_frac(x, d, 0.1);
+    let t1 = problem.z_spatial_dims()[0];
+    println!("line-split limits: plateau near T1/4L = {}, hard stop at T1/L = {}\n", t1 / (4 * l), t1 / l);
+
+    // Simulated per-worker-clock model (single-core testbed; DESIGN.md §3).
+    let mut table =
+        Table::new(&["W", "partition", "sim-time", "sim-speedup", "wall", "softlocked", "cost"]);
+    for kind in [PartitionKind::Line, PartitionKind::Grid] {
+        let mut base_work = None;
+        let mut unit = 0.0f64;
+        for w in [1usize, 2, 4, 9] {
+            if kind == PartitionKind::Line && w > t1 / l {
+                table.row(vec![
+                    w.to_string(),
+                    format!("{kind:?}"),
+                    "-".into(),
+                    "beyond T1/L".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            let cfg = DicodConfig {
+                n_workers: w,
+                partition: kind,
+                tol: 1e-3,
+                ..Default::default()
+            };
+            let mut cost = 0.0;
+            let mut crit = 0u64;
+            let mut locked = 0u64;
+            let timing = time(&bc, || {
+                let r = solve_distributed(&problem, &cfg);
+                cost = problem.cost(&r.z);
+                crit = r.critical_path_work();
+                locked = r.stats.soft_locked;
+            });
+            let b = *base_work.get_or_insert(crit);
+            if unit == 0.0 {
+                unit = timing.median / crit.max(1) as f64;
+            }
+            table.row(vec![
+                w.to_string(),
+                format!("{kind:?}"),
+                fmt_secs(crit as f64 * unit),
+                format!("{:.2}x", b as f64 / crit.max(1) as f64),
+                fmt_secs(timing.median),
+                locked.to_string(),
+                format!("{cost:.4e}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("expected shape: identical at low W; grid keeps improving where line stalls.");
+}

@@ -1,0 +1,84 @@
+//! Fig. C.3 — DiCoDiLe vs Consensus-ADMM (Skau & Wohlberg 2018):
+//! objective as a function of wall-clock time on a star-field patch,
+//! several seeds, same initial dictionary.
+//!
+//! Shape to reproduce: DiCoDiLe reaches a lower objective faster and
+//! monotonically; the ADMM curve is slower and non-monotone (bumps from
+//! the feasibility projection), as in the paper.
+//!
+//!     cargo bench --bench figc3_admm
+
+use dicodile::admm::consensus::{learn_admm, ConsensusAdmmConfig};
+use dicodile::bench::Table;
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::cdl::init::{init_dictionary, InitStrategy};
+use dicodile::csc::problem::lambda_max;
+use dicodile::data::starfield::StarfieldConfig;
+use dicodile::dicod::config::DicodConfig;
+
+fn main() {
+    let size = 64;
+    let (k, l) = (5, 8);
+    let runs = 3;
+    println!("# Fig. C.3 — DiCoDiLe vs Consensus-ADMM on a {size}x{size} star-field patch");
+    println!("(K={k}, {l}x{l} atoms, lambda = 0.1 lambda_max, {runs} seeds)\n");
+
+    let mut table = Table::new(&["seed", "algo", "time[s]", "final-cost", "monotone"]);
+    for seed in 0..runs as u64 {
+        let x = StarfieldConfig::with_size(size, size).generate(seed);
+        let d0 = init_dictionary(&x, k, &[l, l], InitStrategy::RandomPatches, seed);
+        let lambda = 0.1 * lambda_max(&x, &d0);
+
+        // --- DiCoDiLe ------------------------------------------------------
+        let cfg = CdlConfig {
+            n_atoms: k,
+            atom_dims: vec![l, l],
+            lambda_frac: 0.1,
+            max_iter: 8,
+            csc_tol: 1e-3,
+            csc: CscBackend::Distributed(DicodConfig::dicodile(4)),
+            init: InitStrategy::RandomPatches,
+            seed,
+            ..Default::default()
+        };
+        let r = learn_dictionary(&x, &cfg).expect("cdl");
+        let monotone = r.trace.windows(2).all(|w| w[1].cost <= w[0].cost * (1.0 + 1e-9));
+        table.row(vec![
+            seed.to_string(),
+            "dicodile".into(),
+            format!("{:.2}", r.runtime),
+            format!("{:.5e}", r.trace.last().unwrap().cost),
+            monotone.to_string(),
+        ]);
+        print!("  dicodile seed {seed} cost-vs-time:");
+        for rec in &r.trace {
+            print!(" ({:.2}s, {:.4e})", rec.elapsed, rec.cost);
+        }
+        println!();
+
+        // --- Consensus-ADMM --------------------------------------------------
+        let a = learn_admm(
+            &x,
+            &d0,
+            lambda,
+            &ConsensusAdmmConfig { max_iter: 8, csc_iters: 40, dict_iters: 20, ..Default::default() },
+        );
+        let monotone = a.trace.windows(2).all(|w| w[1].cost <= w[0].cost * (1.0 + 1e-9));
+        table.row(vec![
+            seed.to_string(),
+            "consensus-admm".into(),
+            format!("{:.2}", a.runtime),
+            format!("{:.5e}", a.trace.last().unwrap().cost),
+            monotone.to_string(),
+        ]);
+        print!("  admm     seed {seed} cost-vs-time:");
+        for rec in &a.trace {
+            print!(" ({:.2}s, {:.4e})", rec.time, rec.cost);
+        }
+        println!();
+    }
+    println!("\n{}", table.render());
+    println!("note: the two algorithms optimize slightly different boundary models");
+    println!("(linear vs circular convolution); compare the curve shapes, not the");
+    println!("absolute values — DiCoDiLe should be faster, lower and monotone.");
+}

@@ -1,0 +1,177 @@
+//! Hot-path micro-benchmarks — the §Perf instrumentation.
+//!
+//! Times the four kernels the wall-clock figures are built from:
+//!   1. incremental beta update (eq. 8), d=1 and d=2
+//!   2. LGCD segment scan (candidate selection)
+//!   3. worker->worker message round trip
+//!   4. phi/psi sufficient statistics (seq vs parallel)
+//!   5. beta bootstrap: native vs PJRT artifact (when present)
+//!
+//!     cargo bench --bench micro_hotpath
+
+use dicodile::bench::{fmt_secs, time, BenchConfig, Table};
+use dicodile::csc::beta::{BetaWindow, ZWindow};
+use dicodile::csc::problem::CscProblem;
+use dicodile::csc::select::Segments;
+use dicodile::dict::phi_psi::{compute_stats, compute_stats_parallel};
+use dicodile::runtime::Engine;
+use dicodile::tensor::shape::Rect;
+use dicodile::tensor::NdTensor;
+use dicodile::util::rng::Pcg64;
+
+fn problem_1d(k: usize, l: usize, t: usize) -> CscProblem {
+    let mut rng = Pcg64::seeded(1);
+    let x = NdTensor::from_vec(&[1, t], rng.normal_vec(t));
+    let d = NdTensor::from_vec(&[k, 1, l], rng.normal_vec(k * l));
+    CscProblem::new(x, d, 0.5)
+}
+
+fn problem_2d(k: usize, l: usize, s: usize) -> CscProblem {
+    let mut rng = Pcg64::seeded(2);
+    let x = NdTensor::from_vec(&[1, s, s], rng.normal_vec(s * s));
+    let d = NdTensor::from_vec(&[k, 1, l, l], rng.normal_vec(k * l * l));
+    CscProblem::new(x, d, 0.5)
+}
+
+fn main() {
+    let bc = BenchConfig { warmup: 2, reps: 20 };
+    let mut table = Table::new(&["kernel", "config", "median", "per-unit"]);
+
+    // 1. beta update
+    {
+        let p = problem_1d(25, 64, 20_000);
+        let mut bw = BetaWindow::init_full(&p);
+        let mut rng = Pcg64::seeded(3);
+        let zsp = p.z_spatial_dims()[0];
+        let timing = time(&bc, || {
+            for _ in 0..1000 {
+                let k0 = rng.below(25);
+                let u0 = rng.below(zsp) as i64;
+                bw.apply_update(&p, k0, &[u0], 0.01);
+            }
+        });
+        table.row(vec![
+            "beta update (eq. 8)".into(),
+            "d=1 K=25 L=64".into(),
+            fmt_secs(timing.median),
+            format!("{} /update", fmt_secs(timing.median / 1000.0)),
+        ]);
+    }
+    {
+        let p = problem_2d(25, 16, 256);
+        let mut bw = BetaWindow::init_full(&p);
+        let mut rng = Pcg64::seeded(4);
+        let zsp = p.z_spatial_dims();
+        let timing = time(&bc, || {
+            for _ in 0..200 {
+                let k0 = rng.below(25);
+                let u0 = [rng.below(zsp[0]) as i64, rng.below(zsp[1]) as i64];
+                bw.apply_update(&p, k0, &u0, 0.01);
+            }
+        });
+        table.row(vec![
+            "beta update (eq. 8)".into(),
+            "d=2 K=25 L=16x16".into(),
+            fmt_secs(timing.median),
+            format!("{} /update", fmt_secs(timing.median / 200.0)),
+        ]);
+    }
+
+    // 2. segment scan
+    {
+        let p = problem_2d(25, 16, 256);
+        let bw = BetaWindow::init_full(&p);
+        let zsp = p.z_spatial_dims();
+        let z = ZWindow::zeros(25, &[0, 0], &zsp);
+        let segs = Segments::for_atoms(Rect::full(&zsp), p.atom_dims());
+        let m = segs.len();
+        let timing = time(&bc, || {
+            let mut acc = 0.0;
+            for i in 0..m.min(64) {
+                if let Some((_, _, dz)) = bw.best_candidate(&p, &z, &segs.rect(i)) {
+                    acc += dz;
+                }
+            }
+            acc
+        });
+        table.row(vec![
+            "segment scan (LGCD)".into(),
+            format!("d=2 K=25, {} segs", m.min(64)),
+            fmt_secs(timing.median),
+            format!("{} /segment", fmt_secs(timing.median / m.min(64) as f64)),
+        ]);
+    }
+
+    // 3. channel round trip
+    {
+        let (tx, rx) = std::sync::mpsc::channel::<dicodile::dicod::messages::WorkerMsg>();
+        let timing = time(&bc, || {
+            for _ in 0..10_000 {
+                tx.send(dicodile::dicod::messages::WorkerMsg::Update(
+                    dicodile::dicod::messages::UpdateMsg {
+                        from: 0,
+                        k: 1,
+                        u: vec![3, 4],
+                        dz: 0.5,
+                    },
+                ))
+                .unwrap();
+                let _ = rx.recv().unwrap();
+            }
+        });
+        table.row(vec![
+            "mpsc round trip".into(),
+            "UpdateMsg d=2".into(),
+            fmt_secs(timing.median),
+            format!("{} /msg", fmt_secs(timing.median / 10_000.0)),
+        ]);
+    }
+
+    // 4. phi/psi
+    {
+        let mut rng = Pcg64::seeded(5);
+        let z = NdTensor::from_vec(&[8, 120, 120], rng.bernoulli_gaussian_vec(8 * 120 * 120, 0.02, 0.0, 3.0));
+        let x = NdTensor::from_vec(&[1, 131, 131], rng.normal_vec(131 * 131));
+        let l = [12usize, 12];
+        let t_seq = time(&bc, || compute_stats(&z, &x, &l));
+        let t_par = time(&bc, || compute_stats_parallel(&z, &x, &l, 4));
+        table.row(vec![
+            "phi/psi stats".into(),
+            "seq K=8 120x120".into(),
+            fmt_secs(t_seq.median),
+            "-".into(),
+        ]);
+        table.row(vec![
+            "phi/psi stats".into(),
+            "par(4) K=8 120x120".into(),
+            fmt_secs(t_par.median),
+            format!("{:.2}x vs seq", t_seq.median / t_par.median),
+        ]);
+    }
+
+    // 5. beta bootstrap: native vs artifact
+    {
+        let p = problem_1d(5, 32, 2000); // quickstart_1d artifact shape
+        let t_native = time(&bc, || dicodile::conv::correlate_dict(&p.x, &p.d));
+        table.row(vec![
+            "beta bootstrap".into(),
+            "native d=1 K=5 L=32 T=2000".into(),
+            fmt_secs(t_native.median),
+            "-".into(),
+        ]);
+        if let Some(engine) = Engine::try_default() {
+            let shapes: Vec<&[usize]> = vec![p.x.dims(), p.d.dims()];
+            if engine.supports("beta_init", &shapes) {
+                let t_art = time(&bc, || engine.execute("beta_init", &[&p.x, &p.d]).unwrap());
+                table.row(vec![
+                    "beta bootstrap".into(),
+                    "PJRT artifact (same)".into(),
+                    fmt_secs(t_art.median),
+                    format!("{:.2}x vs native", t_native.median / t_art.median),
+                ]);
+            }
+        }
+    }
+
+    println!("# micro hot-path timings\n{}", table.render());
+}

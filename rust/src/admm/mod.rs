@@ -1,0 +1,8 @@
+//! Consensus-ADMM baseline (Skau & Wohlberg 2018) used by the paper's
+//! Fig. C.3 comparison: Fourier-domain ADMM CSC + ADMM dictionary
+//! update with per-atom parallelism.
+
+pub mod consensus;
+pub mod csc_admm;
+
+pub use consensus::{learn_admm, ConsensusAdmmConfig, ConsensusAdmmResult};

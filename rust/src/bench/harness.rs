@@ -1,0 +1,182 @@
+//! Benchmark harness (criterion substitute for the offline build).
+//!
+//! Provides warmup + repeated timing with robust statistics and aligned
+//! table output. Every `rust/benches/*.rs` target reproduces one of the
+//! paper's figures/tables through this harness and prints the same
+//! series the paper plots.
+
+use std::time::Instant;
+
+/// Timing statistics over repetitions (seconds).
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub reps: usize,
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p10: f64,
+    pub p90: f64,
+}
+
+impl Timing {
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pct = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Timing {
+            reps: n,
+            median: pct(0.5),
+            mean: samples.iter().sum::<f64>() / n as f64,
+            min: samples[0],
+            max: samples[n - 1],
+            p10: pct(0.1),
+            p90: pct(0.9),
+        }
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 1, reps: 3 }
+    }
+}
+
+impl BenchConfig {
+    /// Honour the `DICODILE_BENCH_REPS` env override (quick CI runs).
+    pub fn from_env() -> Self {
+        let reps = std::env::var("DICODILE_BENCH_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        BenchConfig { warmup: if reps > 1 { 1 } else { 0 }, reps }
+    }
+}
+
+/// Time a closure; returns stats over the configured repetitions.
+/// The closure's return value is consumed via `std::hint::black_box` so
+/// work cannot be optimized away.
+pub fn time<T>(cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..cfg.warmup {
+        std::hint::black_box(f());
+    }
+    let samples: Vec<f64> = (0..cfg.reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Timing::from_samples(samples)
+}
+
+/// Simple aligned table builder for paper-style output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format seconds with adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats_ordered() {
+        let t = Timing::from_samples(vec![3.0, 1.0, 2.0, 5.0, 4.0]);
+        assert_eq!(t.min, 1.0);
+        assert_eq!(t.max, 5.0);
+        assert_eq!(t.median, 3.0);
+        assert!(t.p10 <= t.median && t.median <= t.p90);
+    }
+
+    #[test]
+    fn time_measures_positive() {
+        let cfg = BenchConfig { warmup: 0, reps: 2 };
+        let t = time(&cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(t.median > 0.0);
+        assert_eq!(t.reps, 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["W", "time"]);
+        t.row(vec!["1".into(), "5.00s".into()]);
+        t.row(vec!["16".into(), "0.50s".into()]);
+        let s = t.render();
+        assert!(s.contains("W"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2e-6).ends_with("us"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,5 @@
+//! In-repo benchmark harness (criterion substitute).
+
+pub mod harness;
+
+pub use harness::{fmt_secs, time, BenchConfig, Table, Timing};

@@ -1,0 +1,279 @@
+//! Batch CDL: learn one dictionary over a *collection* of observations.
+//!
+//! The paper's formulation is per-signal, but its sufficient-statistics
+//! dictionary update (§4.2) extends directly to corpora: the objective
+//! `sum_n 1/2 ||X_n - Z_n * D||^2 + lambda ||Z_n||_1` has
+//! `phi = sum_n phi_n` and `psi = sum_n psi_n` as sufficient statistics,
+//! so the dictionary step stays independent of both the signal sizes
+//! and the corpus size. The CSC steps are embarrassingly parallel
+//! across signals (each can itself be a DiCoDiLe-Z grid).
+
+use std::time::Instant;
+
+use crate::cdl::driver::{CscBackend, IterRecord};
+use crate::cdl::init::{init_dictionary, InitStrategy};
+use crate::csc::cd::{solve_cd_warm, CdConfig};
+use crate::csc::problem::CscProblem;
+use crate::csc::select::Strategy;
+use crate::dicod::coordinator::solve_distributed;
+use crate::dict::pgd::{update_dict, PgdConfig};
+use crate::dict::phi_psi::{compute_stats_parallel, DictStats};
+use crate::tensor::NdTensor;
+
+/// Batch CDL configuration (mirrors `CdlConfig` plus corpus handling).
+#[derive(Clone, Debug)]
+pub struct BatchCdlConfig {
+    pub n_atoms: usize,
+    pub atom_dims: Vec<usize>,
+    /// `lambda = lambda_frac * max_n lambda_max(X_n, D_0)`.
+    pub lambda_frac: f64,
+    pub max_iter: usize,
+    pub nu: f64,
+    pub csc: CscBackend,
+    pub csc_tol: f64,
+    pub dict_cfg: PgdConfig,
+    pub init: InitStrategy,
+    pub stat_workers: usize,
+    pub seed: u64,
+}
+
+impl Default for BatchCdlConfig {
+    fn default() -> Self {
+        BatchCdlConfig {
+            n_atoms: 5,
+            atom_dims: vec![16],
+            lambda_frac: 0.1,
+            max_iter: 20,
+            nu: 1e-5,
+            csc: CscBackend::Sequential,
+            csc_tol: 1e-4,
+            dict_cfg: PgdConfig::default(),
+            init: InitStrategy::RandomPatches,
+            stat_workers: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// Batch CDL result.
+#[derive(Clone, Debug)]
+pub struct BatchCdlResult {
+    pub d: NdTensor,
+    /// Final activations per signal.
+    pub zs: Vec<NdTensor>,
+    pub lambda: f64,
+    /// Total-objective trace (summed over the corpus).
+    pub trace: Vec<IterRecord>,
+    pub converged: bool,
+    pub runtime: f64,
+}
+
+/// Learn a dictionary over a corpus of observations (all with the same
+/// channel count; spatial sizes may differ).
+pub fn learn_dictionary_batch(
+    xs: &[NdTensor],
+    cfg: &BatchCdlConfig,
+) -> anyhow::Result<BatchCdlResult> {
+    anyhow::ensure!(!xs.is_empty(), "empty corpus");
+    let p = xs[0].dims()[0];
+    for (i, x) in xs.iter().enumerate() {
+        anyhow::ensure!(
+            x.dims()[0] == p,
+            "signal {i} has {} channels, expected {p}",
+            x.dims()[0]
+        );
+        anyhow::ensure!(
+            x.dims().len() == cfg.atom_dims.len() + 1,
+            "signal {i} rank mismatch"
+        );
+    }
+    let start = Instant::now();
+    // Initialize from the first signal's patches.
+    let mut d = init_dictionary(&xs[0], cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
+    let lambda = cfg.lambda_frac
+        * xs.iter()
+            .map(|x| crate::csc::problem::lambda_max(x, &d))
+            .fold(0.0f64, f64::max);
+    anyhow::ensure!(lambda > 0.0, "degenerate corpus: lambda_max = 0");
+
+    let mut zs: Vec<Option<NdTensor>> = vec![None; xs.len()];
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut converged = false;
+
+    for it in 0..cfg.max_iter {
+        // ---- CSC per signal -------------------------------------------------
+        let t0 = Instant::now();
+        let mut cost_after_csc = 0.0;
+        let mut nnz = 0usize;
+        for (x, z_slot) in xs.iter().zip(zs.iter_mut()) {
+            let problem = CscProblem::new(x.clone(), d.clone(), lambda);
+            let z = match &cfg.csc {
+                CscBackend::Sequential => {
+                    solve_cd_warm(
+                        &problem,
+                        &CdConfig {
+                            strategy: Strategy::LocallyGreedy,
+                            tol: cfg.csc_tol,
+                            seed: cfg.seed,
+                            ..Default::default()
+                        },
+                        z_slot.as_ref(),
+                    )
+                    .z
+                }
+                CscBackend::Distributed(dcfg) => {
+                    let mut dcfg = dcfg.clone();
+                    dcfg.tol = cfg.csc_tol;
+                    solve_distributed(&problem, &dcfg).z
+                }
+            };
+            cost_after_csc += problem.cost(&z);
+            nnz += z.nnz();
+            *z_slot = Some(z);
+        }
+        let csc_time = t0.elapsed().as_secs_f64();
+
+        // ---- summed statistics + one dictionary update ----------------------
+        let t1 = Instant::now();
+        let mut agg: Option<DictStats> = None;
+        for (x, z) in xs.iter().zip(&zs) {
+            let s = compute_stats_parallel(
+                z.as_ref().unwrap(),
+                x,
+                &cfg.atom_dims,
+                cfg.stat_workers,
+            );
+            agg = Some(match agg {
+                None => s,
+                Some(mut a) => {
+                    a.phi.add_assign(&s.phi);
+                    a.psi.add_assign(&s.psi);
+                    a.x_norm_sq += s.x_norm_sq;
+                    a.z_l1 += s.z_l1;
+                    a
+                }
+            });
+        }
+        let stats = agg.unwrap();
+        let pgd = update_dict(&stats, &d, lambda, &cfg.dict_cfg);
+        d = pgd.d;
+        let dict_time = t1.elapsed().as_secs_f64();
+
+        let rec = IterRecord {
+            iter: it,
+            cost: pgd.cost,
+            cost_after_csc,
+            z_nnz: nnz,
+            csc_time,
+            dict_time,
+            elapsed: start.elapsed().as_secs_f64(),
+        };
+        let prev = trace.last().map(|r| r.cost);
+        trace.push(rec);
+        if let Some(prev) = prev {
+            let cur = trace.last().unwrap().cost;
+            if (prev - cur).abs() / prev.abs().max(1e-300) < cfg.nu {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    Ok(BatchCdlResult {
+        d,
+        zs: zs.into_iter().map(|z| z.unwrap()).collect(),
+        lambda,
+        trace,
+        converged,
+        runtime: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{best_atom_correlation, SyntheticConfig};
+
+    fn corpus(n: usize, seed: u64) -> (Vec<NdTensor>, NdTensor) {
+        // Signals sharing one ground-truth dictionary.
+        let mut gen = SyntheticConfig::signal_1d(500, 2, 8);
+        gen.rho = 0.02;
+        gen.noise_std = 0.02;
+        let w0 = gen.generate(seed);
+        let d_true = w0.d_true.clone();
+        let mut xs = vec![w0.x];
+        for i in 1..n {
+            let mut rng = crate::util::rng::Pcg64::seeded(seed + 1000 + i as u64);
+            let mut z = NdTensor::zeros(&[2, 493]);
+            for v in z.data_mut().iter_mut() {
+                if rng.bernoulli(0.02) {
+                    *v = rng.normal_ms(0.0, 5.0);
+                }
+            }
+            let clean = crate::conv::reconstruct(&z, &d_true);
+            let noise = NdTensor::from_vec(clean.dims(), rng.normal_vec(clean.len())).scale(0.02);
+            xs.push(clean.add(&noise));
+        }
+        (xs, d_true)
+    }
+
+    #[test]
+    fn batch_cost_decreases() {
+        let (xs, _) = corpus(3, 1);
+        let cfg = BatchCdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![8],
+            max_iter: 6,
+            seed: 1,
+            ..Default::default()
+        };
+        let r = learn_dictionary_batch(&xs, &cfg).unwrap();
+        assert!(r.trace.len() >= 2);
+        for w in r.trace.windows(2) {
+            assert!(w[1].cost <= w[0].cost * (1.0 + 1e-6) + 1e-9);
+        }
+        assert_eq!(r.zs.len(), 3);
+    }
+
+    #[test]
+    fn batch_recovers_shared_dictionary() {
+        let (xs, d_true) = corpus(4, 3);
+        let cfg = BatchCdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![8],
+            max_iter: 20,
+            lambda_frac: 0.03,
+            csc_tol: 1e-5,
+            seed: 3,
+            ..Default::default()
+        };
+        let r = learn_dictionary_batch(&xs, &cfg).unwrap();
+        let c0 = best_atom_correlation(r.d.slice0(0), &d_true, &[8]);
+        let c1 = best_atom_correlation(r.d.slice0(1), &d_true, &[8]);
+        assert!(c0.max(c1) > 0.9, "batch recovery failed: {c0:.3} {c1:.3}");
+    }
+
+    #[test]
+    fn batch_rejects_bad_corpus() {
+        assert!(learn_dictionary_batch(&[], &BatchCdlConfig::default()).is_err());
+        let a = NdTensor::zeros(&[1, 50]);
+        let b = NdTensor::zeros(&[2, 50]);
+        let cfg = BatchCdlConfig { atom_dims: vec![8], ..Default::default() };
+        assert!(learn_dictionary_batch(&[a, b], &cfg).is_err());
+    }
+
+    #[test]
+    fn batch_with_single_signal_matches_driver_shape() {
+        let (xs, _) = corpus(1, 7);
+        let cfg = BatchCdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![8],
+            max_iter: 3,
+            seed: 7,
+            ..Default::default()
+        };
+        let r = learn_dictionary_batch(&xs, &cfg).unwrap();
+        assert_eq!(r.d.dims(), &[2, 1, 8]);
+        assert!(r.trace.last().unwrap().cost.is_finite());
+    }
+}

@@ -1,0 +1,187 @@
+//! Dictionary initialization strategies.
+
+use crate::tensor::NdTensor;
+use crate::util::rng::Pcg64;
+
+/// How to initialize the dictionary before alternating minimization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// iid Gaussian atoms, unit-normalized.
+    Gaussian,
+    /// Random patches extracted from the observation (the paper's image
+    /// experiments initialize from data patches), unit-normalized.
+    RandomPatches,
+}
+
+impl std::str::FromStr for InitStrategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "gaussian" => Ok(InitStrategy::Gaussian),
+            "patches" | "random-patches" => Ok(InitStrategy::RandomPatches),
+            other => Err(format!("unknown init {other:?} (gaussian|patches)")),
+        }
+    }
+}
+
+/// Build an initial dictionary `[K, P, L..]` for observation `x`.
+pub fn init_dictionary(
+    x: &NdTensor,
+    n_atoms: usize,
+    atom_dims: &[usize],
+    strategy: InitStrategy,
+    seed: u64,
+) -> NdTensor {
+    let mut rng = Pcg64::seeded(seed);
+    let p = x.dims()[0];
+    let tdims = &x.dims()[1..];
+    let atom_sp: usize = atom_dims.iter().product();
+    let mut ddims = vec![n_atoms, p];
+    ddims.extend_from_slice(atom_dims);
+    let mut vals = vec![0.0; n_atoms * p * atom_sp];
+
+    match strategy {
+        InitStrategy::Gaussian => {
+            for v in vals.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+        InitStrategy::RandomPatches => {
+            for k in 0..n_atoms {
+                // Random top-left corner such that the patch fits.
+                let corner: Vec<usize> = tdims
+                    .iter()
+                    .zip(atom_dims)
+                    .map(|(&t, &l)| {
+                        assert!(t >= l, "atom larger than signal");
+                        rng.below(t - l + 1)
+                    })
+                    .collect();
+                for pi in 0..p {
+                    let xs = x.slice0(pi);
+                    let dst = &mut vals[(k * p + pi) * atom_sp..][..atom_sp];
+                    copy_patch(xs, tdims, &corner, atom_dims, dst);
+                }
+            }
+        }
+    }
+
+    // Normalize atoms to unit l2 norm (feasible + scale-fixed).
+    for atom in vals.chunks_mut(p * atom_sp) {
+        let n = atom.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if n > 1e-12 {
+            for v in atom.iter_mut() {
+                *v /= n;
+            }
+        } else {
+            // Degenerate (flat) patch: fall back to noise.
+            for v in atom.iter_mut() {
+                *v = rng.normal();
+            }
+            let n2 = atom.iter().map(|v| v * v).sum::<f64>().sqrt();
+            for v in atom.iter_mut() {
+                *v /= n2;
+            }
+        }
+    }
+
+    NdTensor::from_vec(&ddims, vals)
+}
+
+fn copy_patch(src: &[f64], sdims: &[usize], corner: &[usize], pdims: &[usize], dst: &mut [f64]) {
+    match sdims.len() {
+        1 => {
+            dst.copy_from_slice(&src[corner[0]..corner[0] + pdims[0]]);
+        }
+        2 => {
+            let sw = sdims[1];
+            let pw = pdims[1];
+            for i in 0..pdims[0] {
+                let srow = (corner[0] + i) * sw + corner[1];
+                dst[i * pw..(i + 1) * pw].copy_from_slice(&src[srow..srow + pw]);
+            }
+        }
+        _ => {
+            let sstr = crate::tensor::shape::strides_of(sdims);
+            let pstr = crate::tensor::shape::strides_of(pdims);
+            for off in 0..dst.len() {
+                let idx = crate::tensor::shape::index_of(off, pdims);
+                let soff: usize = idx
+                    .iter()
+                    .zip(corner)
+                    .zip(&sstr)
+                    .map(|((i, c), s)| (i + c) * s)
+                    .sum();
+                let _ = &pstr;
+                dst[off] = src[soff];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_init_normalized() {
+        let x = NdTensor::zeros(&[2, 50]);
+        let d = init_dictionary(&x, 4, &[8], InitStrategy::Gaussian, 1);
+        assert_eq!(d.dims(), &[4, 2, 8]);
+        for k in 0..4 {
+            let n: f64 = d.slice0(k).iter().map(|v| v * v).sum();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn patch_init_extracts_from_signal() {
+        let mut rng = Pcg64::seeded(3);
+        let x = NdTensor::from_vec(&[1, 10, 10], rng.normal_vec(100));
+        let d = init_dictionary(&x, 3, &[4, 4], InitStrategy::RandomPatches, 2);
+        assert_eq!(d.dims(), &[3, 1, 4, 4]);
+        // Each atom is a scaled patch of x: check one matches some patch.
+        let atom = d.slice0(0);
+        let mut found = false;
+        'outer: for ci in 0..7 {
+            for cj in 0..7 {
+                // compare up to scale
+                let mut patch = vec![0.0; 16];
+                for i in 0..4 {
+                    for j in 0..4 {
+                        patch[i * 4 + j] = x.at(&[0, ci + i, cj + j]);
+                    }
+                }
+                let pn = patch.iter().map(|v| v * v).sum::<f64>().sqrt();
+                let diff: f64 = patch
+                    .iter()
+                    .zip(atom)
+                    .map(|(p, a)| (p / pn - a).abs())
+                    .sum();
+                if diff < 1e-9 {
+                    found = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(found, "atom is not a normalized patch of x");
+    }
+
+    #[test]
+    fn flat_signal_falls_back_to_noise() {
+        let x = NdTensor::zeros(&[1, 30]);
+        let d = init_dictionary(&x, 2, &[5], InitStrategy::RandomPatches, 4);
+        for k in 0..2 {
+            let n: f64 = d.slice0(k).iter().map(|v| v * v).sum();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let x = NdTensor::zeros(&[1, 30]);
+        let a = init_dictionary(&x, 2, &[5], InitStrategy::Gaussian, 9);
+        let b = init_dictionary(&x, 2, &[5], InitStrategy::Gaussian, 9);
+        assert!(a.allclose(&b, 0.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Convolutional dictionary learning driver (Algorithm 2): alternation
+//! of the distributed sparse coder and the PGD dictionary update, plus
+//! initialization strategies and reporting.
+
+pub mod batch;
+pub mod driver;
+pub mod init;
+pub mod report;
+
+pub use driver::{learn_dictionary, CdlConfig, CdlResult, CscBackend};
+pub use init::InitStrategy;

@@ -1,0 +1,132 @@
+//! Human- and machine-readable reports for CDL runs.
+
+use crate::cdl::driver::CdlResult;
+use crate::util::json::Json;
+
+/// Render the iteration trace as an aligned text table.
+pub fn trace_table(result: &CdlResult) -> String {
+    let mut s = String::new();
+    s.push_str("iter        cost   cost(csc)      nnz   csc[s]  dict[s]\n");
+    for r in &result.trace {
+        s.push_str(&format!(
+            "{:4}  {:10.4e}  {:10.4e}  {:7}  {:7.3}  {:7.3}\n",
+            r.iter, r.cost, r.cost_after_csc, r.z_nnz, r.csc_time, r.dict_time
+        ));
+    }
+    s
+}
+
+/// Serialize the run to JSON (for EXPERIMENTS.md provenance).
+pub fn to_json(result: &CdlResult) -> Json {
+    Json::obj(vec![
+        ("lambda", Json::Num(result.lambda)),
+        ("converged", Json::Bool(result.converged)),
+        ("runtime", Json::Num(result.runtime)),
+        (
+            "trace",
+            Json::Arr(
+                result
+                    .trace
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("iter", Json::Num(r.iter as f64)),
+                            ("cost", Json::Num(r.cost)),
+                            ("cost_after_csc", Json::Num(r.cost_after_csc)),
+                            ("z_nnz", Json::Num(r.z_nnz as f64)),
+                            ("csc_time", Json::Num(r.csc_time)),
+                            ("dict_time", Json::Num(r.dict_time)),
+                            ("elapsed", Json::Num(r.elapsed)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Render learned atoms as a crude ASCII intensity chart (for terminal
+/// inspection of 2-D atoms; one block per atom).
+pub fn ascii_atoms(d: &crate::tensor::NdTensor, max_atoms: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let k = d.dims()[0].min(max_atoms);
+    let p = d.dims()[1];
+    let sp: &[usize] = &d.dims()[2..];
+    let mut out = String::new();
+    if sp.len() != 2 {
+        return format!("({}d atoms; ascii preview only for 2-d)\n", sp.len());
+    }
+    let (h, w) = (sp[0], sp[1]);
+    for ki in 0..k {
+        out.push_str(&format!("atom {ki}\n"));
+        let a = d.slice0(ki);
+        let lo = a.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = a.iter().cloned().fold(f64::MIN, f64::max);
+        let scale = if hi > lo { (RAMP.len() - 1) as f64 / (hi - lo) } else { 0.0 };
+        for i in 0..h {
+            for j in 0..w {
+                // average channels for display
+                let mut v = 0.0;
+                for pi in 0..p {
+                    v += a[pi * h * w + i * w + j];
+                }
+                v /= p as f64;
+                let idx = ((v - lo) * scale).round().clamp(0.0, (RAMP.len() - 1) as f64);
+                out.push(RAMP[idx as usize] as char);
+            }
+            out.push('\n');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cdl::driver::IterRecord;
+    use crate::tensor::NdTensor;
+
+    fn dummy_result() -> CdlResult {
+        CdlResult {
+            d: NdTensor::zeros(&[2, 1, 3, 3]),
+            z: NdTensor::zeros(&[2, 4]),
+            lambda: 0.5,
+            trace: vec![IterRecord {
+                iter: 0,
+                cost: 10.0,
+                cost_after_csc: 11.0,
+                z_nnz: 7,
+                csc_time: 0.1,
+                dict_time: 0.2,
+                elapsed: 0.3,
+            }],
+            converged: true,
+            runtime: 0.3,
+        }
+    }
+
+    #[test]
+    fn table_contains_rows() {
+        let t = trace_table(&dummy_result());
+        assert!(t.contains("iter"));
+        assert!(t.lines().count() >= 2);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = to_json(&dummy_result());
+        let parsed = Json::parse(&j.dumps()).unwrap();
+        assert_eq!(parsed.get("lambda").unwrap().as_f64(), Some(0.5));
+        assert_eq!(parsed.get("trace").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ascii_preview_2d() {
+        let mut d = NdTensor::zeros(&[1, 1, 3, 3]);
+        *d.at_mut(&[0, 0, 1, 1]) = 1.0;
+        let s = ascii_atoms(&d, 5);
+        assert!(s.contains("atom 0"));
+        assert!(s.contains('@'));
+    }
+}

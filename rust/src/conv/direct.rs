@@ -1,0 +1,353 @@
+//! Direct (nested-loop) convolution and cross-correlation primitives.
+//!
+//! Conventions (matching the valid-domain formulation of the paper —
+//! activations `Z` live on the *valid* domain `T' = T - L + 1` so that
+//! the reconstruction `Z * D` exactly covers the observation domain):
+//!
+//! - `conv_full(z, d)`          : `out[t] = sum_u z[u] d[t - u]`,
+//!                                 dims `zdims + ddims - 1`.
+//! - `corr_valid(x, d)`         : `out[u] = sum_l x[u + l] d[l]`,
+//!                                 dims `xdims - ddims + 1`.
+//! - `cross_corr_range(a, b, lo, hi)` : `cc[delta] = sum_l a[l] b[l + delta]`
+//!                                 for `delta` in the box `[lo, hi)`,
+//!                                 out-of-range `b` reads as 0.
+//!
+//! Specialized d=1 / d=2 inner loops; a generic fallback covers any d
+//! (used by tests to cross-check the specializations).
+
+use crate::tensor::shape::Rect;
+
+/// Full convolution `out[t] = sum_u z[u] d[t-u]`, output dims `z + d - 1`.
+pub fn conv_full(z: &[f64], zdims: &[usize], d: &[f64], ddims: &[usize]) -> (Vec<f64>, Vec<usize>) {
+    assert_eq!(zdims.len(), ddims.len());
+    let odims: Vec<usize> = zdims.iter().zip(ddims).map(|(a, b)| a + b - 1).collect();
+    let mut out = vec![0.0; odims.iter().product()];
+    match zdims.len() {
+        1 => {
+            for (u, &zv) in z.iter().enumerate() {
+                if zv == 0.0 {
+                    continue;
+                }
+                for (l, &dv) in d.iter().enumerate() {
+                    out[u + l] += zv * dv;
+                }
+            }
+        }
+        2 => {
+            let (zw, dw, ow) = (zdims[1], ddims[1], odims[1]);
+            for zi in 0..zdims[0] {
+                for zj in 0..zw {
+                    let zv = z[zi * zw + zj];
+                    if zv == 0.0 {
+                        continue;
+                    }
+                    for di in 0..ddims[0] {
+                        let orow = (zi + di) * ow + zj;
+                        let drow = di * dw;
+                        for dj in 0..dw {
+                            out[orow + dj] += zv * d[drow + dj];
+                        }
+                    }
+                }
+            }
+        }
+        _ => {
+            // Generic d: iterate (u, l) boxes.
+            let zr = Rect::full(zdims);
+            let dr = Rect::full(ddims);
+            let ostr = crate::tensor::shape::strides_of(&odims);
+            let zstr = crate::tensor::shape::strides_of(zdims);
+            let dstr = crate::tensor::shape::strides_of(ddims);
+            for u in zr.iter() {
+                let zoff: usize = u.iter().zip(&zstr).map(|(x, s)| *x as usize * s).sum();
+                let zv = z[zoff];
+                if zv == 0.0 {
+                    continue;
+                }
+                for l in dr.iter() {
+                    let doff: usize = l.iter().zip(&dstr).map(|(x, s)| *x as usize * s).sum();
+                    let ooff: usize = u
+                        .iter()
+                        .zip(&l)
+                        .zip(&ostr)
+                        .map(|((x, y), s)| (*x + *y) as usize * s)
+                        .sum();
+                    out[ooff] += zv * d[doff];
+                }
+            }
+        }
+    }
+    (out, odims)
+}
+
+/// Valid cross-correlation `out[u] = sum_l x[u+l] d[l]`, dims `x - d + 1`.
+pub fn corr_valid(x: &[f64], xdims: &[usize], d: &[f64], ddims: &[usize]) -> (Vec<f64>, Vec<usize>) {
+    assert_eq!(xdims.len(), ddims.len());
+    let odims: Vec<usize> = xdims
+        .iter()
+        .zip(ddims)
+        .map(|(a, b)| {
+            assert!(a + 1 > *b, "kernel larger than signal: {xdims:?} vs {ddims:?}");
+            a - b + 1
+        })
+        .collect();
+    let mut out = vec![0.0; odims.iter().product()];
+    match xdims.len() {
+        1 => {
+            for u in 0..odims[0] {
+                let mut acc = 0.0;
+                for (l, &dv) in d.iter().enumerate() {
+                    acc += x[u + l] * dv;
+                }
+                out[u] = acc;
+            }
+        }
+        2 => {
+            let (xw, dw, ow) = (xdims[1], ddims[1], odims[1]);
+            for ui in 0..odims[0] {
+                for uj in 0..ow {
+                    let mut acc = 0.0;
+                    for li in 0..ddims[0] {
+                        let xrow = (ui + li) * xw + uj;
+                        let drow = li * dw;
+                        for lj in 0..dw {
+                            acc += x[xrow + lj] * d[drow + lj];
+                        }
+                    }
+                    out[ui * ow + uj] = acc;
+                }
+            }
+        }
+        _ => {
+            let or = Rect::full(&odims);
+            let dr = Rect::full(ddims);
+            let xstr = crate::tensor::shape::strides_of(xdims);
+            let dstr = crate::tensor::shape::strides_of(ddims);
+            let ostr = crate::tensor::shape::strides_of(&odims);
+            for u in or.iter() {
+                let mut acc = 0.0;
+                for l in dr.iter() {
+                    let xoff: usize = u
+                        .iter()
+                        .zip(&l)
+                        .zip(&xstr)
+                        .map(|((a, b), s)| (*a + *b) as usize * s)
+                        .sum();
+                    let doff: usize = l.iter().zip(&dstr).map(|(a, s)| *a as usize * s).sum();
+                    acc += x[xoff] * d[doff];
+                }
+                let ooff: usize = u.iter().zip(&ostr).map(|(a, s)| *a as usize * s).sum();
+                out[ooff] = acc;
+            }
+        }
+    }
+    (out, odims)
+}
+
+/// Windowed cross-correlation `cc[delta] = sum_l a[l] b[l + delta]` for
+/// `delta` in `[lo, hi)` per dimension; `b` reads as 0 outside its box.
+/// Output is row-major over the delta box (extents `hi - lo`).
+pub fn cross_corr_range(
+    a: &[f64],
+    adims: &[usize],
+    b: &[f64],
+    bdims: &[usize],
+    lo: &[i64],
+    hi: &[i64],
+) -> (Vec<f64>, Vec<usize>) {
+    assert_eq!(adims.len(), bdims.len());
+    assert_eq!(adims.len(), lo.len());
+    let odims: Vec<usize> = lo.iter().zip(hi).map(|(l, h)| (h - l).max(0) as usize).collect();
+    let mut out = vec![0.0; odims.iter().product()];
+    match adims.len() {
+        1 => {
+            let (na, nb) = (adims[0] as i64, bdims[0] as i64);
+            for (oi, delta) in (lo[0]..hi[0]).enumerate() {
+                // l + delta in [0, nb) and l in [0, na)
+                let lmin = 0.max(-delta);
+                let lmax = na.min(nb - delta);
+                let mut acc = 0.0;
+                for l in lmin..lmax {
+                    acc += a[l as usize] * b[(l + delta) as usize];
+                }
+                out[oi] = acc;
+            }
+        }
+        2 => {
+            let (ha, wa) = (adims[0] as i64, adims[1] as i64);
+            let (hb, wb) = (bdims[0] as i64, bdims[1] as i64);
+            let ow = odims[1];
+            for (oi, di) in (lo[0]..hi[0]).enumerate() {
+                let imin = 0.max(-di);
+                let imax = ha.min(hb - di);
+                for (oj, dj) in (lo[1]..hi[1]).enumerate() {
+                    let jmin = 0.max(-dj);
+                    let jmax = wa.min(wb - dj);
+                    let mut acc = 0.0;
+                    for i in imin..imax {
+                        let arow = (i * wa) as usize;
+                        let brow = ((i + di) * wb + dj) as usize;
+                        for j in jmin..jmax {
+                            acc += a[arow + j as usize] * b[(brow as i64 + j) as usize];
+                        }
+                    }
+                    out[oi * ow + oj] = acc;
+                }
+            }
+        }
+        _ => {
+            let delta_box = Rect::new(lo.to_vec(), hi.to_vec());
+            let ar = Rect::full(adims);
+            let astr = crate::tensor::shape::strides_of(adims);
+            let bstr = crate::tensor::shape::strides_of(bdims);
+            let ostr = crate::tensor::shape::strides_of(&odims);
+            for delta in delta_box.iter() {
+                let mut acc = 0.0;
+                for l in ar.iter() {
+                    let bidx: Vec<i64> = l.iter().zip(&delta).map(|(x, d)| x + d).collect();
+                    if bidx.iter().zip(bdims).any(|(x, d)| *x < 0 || *x >= *d as i64) {
+                        continue;
+                    }
+                    let aoff: usize = l.iter().zip(&astr).map(|(x, s)| *x as usize * s).sum();
+                    let boff: usize = bidx.iter().zip(&bstr).map(|(x, s)| *x as usize * s).sum();
+                    acc += a[aoff] * b[boff];
+                }
+                let ooff: usize = delta
+                    .iter()
+                    .zip(lo)
+                    .zip(&ostr)
+                    .map(|((x, l), s)| (*x - *l) as usize * s)
+                    .sum();
+                out[ooff] = acc;
+            }
+        }
+    }
+    (out, odims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn conv_full_1d_known() {
+        // [1,2] * [1,1,1] = [1,3,3,2]
+        let (out, dims) = conv_full(&[1., 2.], &[2], &[1., 1., 1.], &[3]);
+        assert_eq!(dims, vec![4]);
+        assert_eq!(out, vec![1., 3., 3., 2.]);
+    }
+
+    #[test]
+    fn conv_full_2d_known() {
+        // delta at (0,0) convolved with kernel reproduces kernel
+        let z = [1.0, 0.0, 0.0, 0.0]; // 2x2 with 1 at (0,0)
+        let d = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let (out, dims) = conv_full(&z, &[2, 2], &d, &[2, 2]);
+        assert_eq!(dims, vec![3, 3]);
+        assert_eq!(out, vec![1., 2., 0., 3., 4., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn corr_valid_1d_known() {
+        // x=[1,2,3,4], d=[1,1] -> [3,5,7]
+        let (out, dims) = corr_valid(&[1., 2., 3., 4.], &[4], &[1., 1.], &[2]);
+        assert_eq!(dims, vec![3]);
+        assert_eq!(out, vec![3., 5., 7.]);
+    }
+
+    #[test]
+    fn conv_then_corr_adjoint_identity() {
+        // <conv_full(z, d), x> == <z, corr_valid(x, d)> — adjointness, 2-D.
+        let mut rng = Pcg64::seeded(3);
+        let zdims = [4usize, 5];
+        let ddims = [3usize, 2];
+        let xdims = [6usize, 6];
+        let z = rng.normal_vec(20);
+        let d = rng.normal_vec(6);
+        let x = rng.normal_vec(36);
+        let (zd, _) = conv_full(&z, &zdims, &d, &ddims);
+        let lhs: f64 = zd.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let (xd, _) = corr_valid(&x, &xdims, &d, &ddims);
+        let rhs: f64 = xd.iter().zip(&z).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-10, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn cross_corr_range_1d_known() {
+        // a=[1,2], b=[3,4]; cc[delta] = sum a[l] b[l+delta]
+        // delta=-1: a[1]*b[0]=6 ; delta=0: 1*3+2*4=11 ; delta=1: a[0]*b[1]=4
+        let (out, dims) = cross_corr_range(&[1., 2.], &[2], &[3., 4.], &[2], &[-1], &[2]);
+        assert_eq!(dims, vec![3]);
+        assert_eq!(out, vec![6., 11., 4.]);
+    }
+
+    #[test]
+    fn cross_corr_symmetry() {
+        // cc_{a,b}[delta] == cc_{b,a}[-delta]
+        let mut rng = Pcg64::seeded(5);
+        let a = rng.normal_vec(12);
+        let b = rng.normal_vec(12);
+        let dims = [3usize, 4];
+        let (ab, _) = cross_corr_range(&a, &dims, &b, &dims, &[-2, -3], &[3, 4]);
+        let (ba, _) = cross_corr_range(&b, &dims, &a, &dims, &[-2, -3], &[3, 4]);
+        let (eh, ew) = (5usize, 7usize);
+        for i in 0..eh {
+            for j in 0..ew {
+                let lhs = ab[i * ew + j];
+                let rhs = ba[(eh - 1 - i) * ew + (ew - 1 - j)];
+                assert!((lhs - rhs).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn generic_3d_matches_definition() {
+        let mut rng = Pcg64::seeded(7);
+        let zdims = [2usize, 3, 2];
+        let ddims = [2usize, 2, 2];
+        let z = rng.normal_vec(12);
+        let d = rng.normal_vec(8);
+        let (out, odims) = conv_full(&z, &zdims, &d, &ddims);
+        assert_eq!(odims, vec![3, 4, 3]);
+        // Check one entry by hand: out[1,1,1] = sum over u+l = (1,1,1)
+        let mut expect = 0.0;
+        for u0 in 0..2 {
+            for u1 in 0..3 {
+                for u2 in 0..2 {
+                    for l0 in 0..2 {
+                        for l1 in 0..2 {
+                            for l2 in 0..2 {
+                                if u0 + l0 == 1 && u1 + l1 == 1 && u2 + l2 == 1 {
+                                    expect += z[(u0 * 3 + u1) * 2 + u2] * d[(l0 * 2 + l1) * 2 + l2];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!((out[(1 * 4 + 1) * 3 + 1] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn specialized_2d_matches_generic_3d_path() {
+        // Embed a 2-D problem as 3-D with a singleton leading dim; the
+        // generic path must agree with the 2-D specialization.
+        let mut rng = Pcg64::seeded(9);
+        let z = rng.normal_vec(4 * 5);
+        let d = rng.normal_vec(2 * 3);
+        let (a, _) = conv_full(&z, &[4, 5], &d, &[2, 3]);
+        let (b, _) = conv_full(&z, &[1, 4, 5], &d, &[1, 2, 3]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cross_corr_zero_padding_edges() {
+        // With hi beyond b's support the tail contributions are zero.
+        let (out, _) = cross_corr_range(&[1., 1.], &[2], &[1., 1.], &[2], &[-5], &[6]);
+        assert_eq!(out, vec![0., 0., 0., 0., 1., 2., 1., 0., 0., 0., 0.]);
+    }
+}

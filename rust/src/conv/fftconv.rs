@@ -1,0 +1,197 @@
+//! FFT-backed convolution for large operands.
+//!
+//! `conv_full` costs `O(|z| * |d|)` directly; via the FFT it costs
+//! `O(n log n)` with `n = |z + d - 1|`. The dictionary-update statistics
+//! (`phi = Z~*Z`, `psi = Z~*X`) and reconstructions on full images hit
+//! exactly this regime — the paper quotes the same FFT complexities in
+//! §4.2.
+
+use crate::fft::complex::C64;
+use crate::fft::fft::{fftn, ifftn};
+
+/// Full convolution via zero-padded n-d FFT. Same contract as
+/// `direct::conv_full`.
+pub fn conv_full_fft(
+    z: &[f64],
+    zdims: &[usize],
+    d: &[f64],
+    ddims: &[usize],
+) -> (Vec<f64>, Vec<usize>) {
+    assert_eq!(zdims.len(), ddims.len());
+    let odims: Vec<usize> = zdims.iter().zip(ddims).map(|(a, b)| a + b - 1).collect();
+    // Pad each dim to a power of two for the radix-2 fast path.
+    let pdims: Vec<usize> = odims.iter().map(|&n| n.next_power_of_two()).collect();
+    let pn: usize = pdims.iter().product();
+
+    let mut fa = vec![C64::ZERO; pn];
+    embed(z, zdims, &mut fa, &pdims);
+    let mut fb = vec![C64::ZERO; pn];
+    embed(d, ddims, &mut fb, &pdims);
+
+    fftn(&mut fa, &pdims);
+    fftn(&mut fb, &pdims);
+    for (a, b) in fa.iter_mut().zip(&fb) {
+        *a = *a * *b;
+    }
+    ifftn(&mut fa, &pdims);
+
+    let mut out = vec![0.0; odims.iter().product()];
+    extract(&fa, &pdims, &mut out, &odims);
+    (out, odims)
+}
+
+/// Windowed cross-correlation via FFT:
+/// `cc[delta] = sum_l a[l] b[l + delta]` = `conv_full(reverse(a), b)`
+/// shifted by `len(a) - 1`. Same contract as `direct::cross_corr_range`.
+pub fn cross_corr_range_fft(
+    a: &[f64],
+    adims: &[usize],
+    b: &[f64],
+    bdims: &[usize],
+    lo: &[i64],
+    hi: &[i64],
+) -> (Vec<f64>, Vec<usize>) {
+    let ra = crate::tensor::ops::reverse_all(a, adims);
+    let (full, fdims) = conv_full_fft(&ra, adims, b, bdims);
+    // full[s] = cc[s - (adims - 1)] ; slice the delta window [lo, hi).
+    let odims: Vec<usize> = lo.iter().zip(hi).map(|(l, h)| (h - l).max(0) as usize).collect();
+    let mut out = vec![0.0; odims.iter().product()];
+    let fstr = crate::tensor::shape::strides_of(&fdims);
+    let ostr = crate::tensor::shape::strides_of(&odims);
+    let delta_box = crate::tensor::shape::Rect::new(lo.to_vec(), hi.to_vec());
+    for delta in delta_box.iter() {
+        let fidx: Vec<i64> = delta
+            .iter()
+            .zip(adims)
+            .map(|(d, &n)| d + n as i64 - 1)
+            .collect();
+        let inside = fidx.iter().zip(&fdims).all(|(x, &n)| *x >= 0 && *x < n as i64);
+        let v = if inside {
+            let foff: usize = fidx.iter().zip(&fstr).map(|(x, s)| *x as usize * s).sum();
+            full[foff]
+        } else {
+            0.0
+        };
+        let ooff: usize = delta
+            .iter()
+            .zip(lo)
+            .zip(&ostr)
+            .map(|((x, l), s)| (*x - *l) as usize * s)
+            .sum();
+        out[ooff] = v;
+    }
+    (out, odims)
+}
+
+fn embed(src: &[f64], sdims: &[usize], dst: &mut [C64], ddims: &[usize]) {
+    // Copy src into the low corner of the padded complex buffer.
+    match sdims.len() {
+        1 => {
+            for (i, &v) in src.iter().enumerate() {
+                dst[i] = C64::from_re(v);
+            }
+        }
+        2 => {
+            let (sw, dw) = (sdims[1], ddims[1]);
+            for i in 0..sdims[0] {
+                for j in 0..sw {
+                    dst[i * dw + j] = C64::from_re(src[i * sw + j]);
+                }
+            }
+        }
+        _ => {
+            let sstr = crate::tensor::shape::strides_of(sdims);
+            let dstr = crate::tensor::shape::strides_of(ddims);
+            for off in 0..src.len() {
+                let idx = crate::tensor::shape::index_of(off, sdims);
+                let doff: usize = idx.iter().zip(&dstr).map(|(x, s)| x * s).sum();
+                let _ = &sstr;
+                dst[doff] = C64::from_re(src[off]);
+            }
+        }
+    }
+}
+
+fn extract(src: &[C64], sdims: &[usize], dst: &mut [f64], ddims: &[usize]) {
+    match ddims.len() {
+        1 => {
+            for i in 0..ddims[0] {
+                dst[i] = src[i].re;
+            }
+        }
+        2 => {
+            let (sw, dw) = (sdims[1], ddims[1]);
+            for i in 0..ddims[0] {
+                for j in 0..dw {
+                    dst[i * dw + j] = src[i * sw + j].re;
+                }
+            }
+        }
+        _ => {
+            let sstr = crate::tensor::shape::strides_of(sdims);
+            for off in 0..dst.len() {
+                let idx = crate::tensor::shape::index_of(off, ddims);
+                let soff: usize = idx.iter().zip(&sstr).map(|(x, s)| x * s).sum();
+                dst[off] = src[soff].re;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn conv_fft_matches_direct_1d() {
+        let mut rng = Pcg64::seeded(1);
+        for (nz, nd) in [(8usize, 3usize), (100, 17), (63, 64)] {
+            let z = rng.normal_vec(nz);
+            let d = rng.normal_vec(nd);
+            let (a, _) = direct::conv_full(&z, &[nz], &d, &[nd]);
+            let (b, _) = conv_full_fft(&z, &[nz], &d, &[nd]);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-8, "nz={nz} nd={nd}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_fft_matches_direct_2d() {
+        let mut rng = Pcg64::seeded(2);
+        let z = rng.normal_vec(20 * 17);
+        let d = rng.normal_vec(5 * 4);
+        let (a, _) = direct::conv_full(&z, &[20, 17], &d, &[5, 4]);
+        let (b, _) = conv_full_fft(&z, &[20, 17], &d, &[5, 4]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cross_corr_fft_matches_direct() {
+        let mut rng = Pcg64::seeded(3);
+        let a = rng.normal_vec(9 * 7);
+        let b = rng.normal_vec(9 * 7);
+        let lo = [-4i64, -5];
+        let hi = [5i64, 6];
+        let (x, _) = direct::cross_corr_range(&a, &[9, 7], &b, &[9, 7], &lo, &hi);
+        let (y, _) = cross_corr_range_fft(&a, &[9, 7], &b, &[9, 7], &lo, &hi);
+        for (u, v) in x.iter().zip(&y) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cross_corr_fft_window_beyond_support() {
+        let (y, dims) =
+            cross_corr_range_fft(&[1., 1.], &[2], &[1., 1.], &[2], &[-5], &[6]);
+        assert_eq!(dims, vec![11]);
+        assert_eq!(
+            y.iter().map(|v| (v * 1e9).round() / 1e9).collect::<Vec<_>>(),
+            vec![0., 0., 0., 0., 1., 2., 1., 0., 0., 0., 0.]
+        );
+    }
+}

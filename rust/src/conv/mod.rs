@@ -1,0 +1,464 @@
+//! Multichannel convolution API on top of the direct / FFT primitives.
+//!
+//! Tensor conventions throughout the crate (channels-first, row-major):
+//!
+//! - observation  `X : [P, T_1..T_d]`
+//! - dictionary   `D : [K, P, L_1..L_d]`, atoms `D_k : [P, L..]`
+//! - activations  `Z : [K, T'_1..T'_d]` on the *valid* domain
+//!   `T'_i = T_i - L_i + 1`
+//! - atom cross-correlations `DtD : [K, K, (2L_1-1)..(2L_d-1)]` with
+//!   `DtD[k0,k][delta + L - 1] = sum_{p,l} D_k0[p,l] D_k[p,l+delta]`
+//!
+//! `reconstruct` and `correlate_dict` are adjoint maps (tested), which
+//! is what makes the CD updates in `csc::beta` exact.
+
+pub mod direct;
+pub mod fftconv;
+
+use crate::tensor::tensor::NdTensor;
+
+/// Above this output size the FFT path wins over direct loops for
+/// dense operands (empirical crossover on the CPU backend).
+const FFT_THRESHOLD: usize = 1 << 14;
+
+/// Split `X: [P, T..]` dims into (P, spatial dims).
+pub fn split_channels(dims: &[usize]) -> (usize, &[usize]) {
+    (dims[0], &dims[1..])
+}
+
+/// Dict dims `[K, P, L..]` -> (K, P, spatial).
+pub fn split_dict(dims: &[usize]) -> (usize, usize, &[usize]) {
+    (dims[0], dims[1], &dims[2..])
+}
+
+/// Valid activation dims for signal dims `t` and atom dims `l`.
+pub fn valid_dims(t: &[usize], l: &[usize]) -> Vec<usize> {
+    t.iter()
+        .zip(l)
+        .map(|(a, b)| {
+            assert!(a + 1 > *b, "atom {l:?} larger than signal {t:?}");
+            a - b + 1
+        })
+        .collect()
+}
+
+/// Reconstruction `Z * D : [P, T..]` = `sum_k conv_full(Z_k, D_k[p])`.
+pub fn reconstruct(z: &NdTensor, d: &NdTensor) -> NdTensor {
+    let (k_d, p, ldims) = split_dict(d.dims());
+    let k_z = z.dims()[0];
+    assert_eq!(k_d, k_z, "Z and D disagree on K");
+    let zdims = &z.dims()[1..];
+    let tdims: Vec<usize> = zdims.iter().zip(ldims).map(|(a, b)| a + b - 1).collect();
+    let mut xdims = vec![p];
+    xdims.extend_from_slice(&tdims);
+    let mut out = NdTensor::zeros(&xdims);
+    let atom_sp: usize = ldims.iter().product();
+    let use_fft = tdims.iter().product::<usize>() > FFT_THRESHOLD && zdims.iter().product::<usize>() > 4 * atom_sp;
+    for k in 0..k_z {
+        let zk = z.slice0(k);
+        // Sparse fast-path: direct conv skips zero activations, so for very
+        // sparse Z the direct path beats the FFT regardless of size.
+        let nnz = zk.iter().filter(|v| **v != 0.0).count();
+        let fft_here = use_fft && nnz * atom_sp > tdims.iter().product::<usize>();
+        for pi in 0..p {
+            let dk = &d.slice0(k)[pi * atom_sp..(pi + 1) * atom_sp];
+            let (contrib, _) = if fft_here {
+                fftconv::conv_full_fft(zk, zdims, dk, ldims)
+            } else {
+                direct::conv_full(zk, zdims, dk, ldims)
+            };
+            let xk = out.slice0_mut(pi);
+            for (o, c) in xk.iter_mut().zip(&contrib) {
+                *o += c;
+            }
+        }
+    }
+    out
+}
+
+/// Dictionary correlation `corr(X, D) : [K, T'..]` with
+/// `out[k][u] = sum_{p,l} X[p, u+l] D_k[p, l]` — the gradient/beta
+/// bootstrap `D~ * X` of the paper, on the valid domain.
+pub fn correlate_dict(x: &NdTensor, d: &NdTensor) -> NdTensor {
+    let (k, p, ldims) = split_dict(d.dims());
+    let (px, tdims) = split_channels(x.dims());
+    assert_eq!(p, px, "X and D disagree on P");
+    let vdims = valid_dims(tdims, ldims);
+    let mut odims = vec![k];
+    odims.extend_from_slice(&vdims);
+    let mut out = NdTensor::zeros(&odims);
+    let atom_sp: usize = ldims.iter().product();
+    for ki in 0..k {
+        let acc = out.slice0_mut(ki);
+        for pi in 0..p {
+            let dk = &d.slice0(ki)[pi * atom_sp..(pi + 1) * atom_sp];
+            let (c, _) = direct::corr_valid(x.slice0(pi), tdims, dk, ldims);
+            for (o, v) in acc.iter_mut().zip(&c) {
+                *o += v;
+            }
+        }
+    }
+    out
+}
+
+/// Atom cross-correlation tensor `DtD : [K, K, (2L-1)..]`.
+pub fn compute_dtd(d: &NdTensor) -> NdTensor {
+    let (k, p, ldims) = split_dict(d.dims());
+    let lo: Vec<i64> = ldims.iter().map(|&l| 1 - l as i64).collect();
+    let hi: Vec<i64> = ldims.iter().map(|&l| l as i64).collect();
+    let ccdims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let mut odims = vec![k, k];
+    odims.extend_from_slice(&ccdims);
+    let mut out = NdTensor::zeros(&odims);
+    let atom_sp: usize = ldims.iter().product();
+    let cc_sp: usize = ccdims.iter().product();
+    for k0 in 0..k {
+        for k1 in 0..k {
+            let mut acc = vec![0.0; cc_sp];
+            for pi in 0..p {
+                let a = &d.slice0(k0)[pi * atom_sp..(pi + 1) * atom_sp];
+                let b = &d.slice0(k1)[pi * atom_sp..(pi + 1) * atom_sp];
+                let (c, _) = direct::cross_corr_range(a, ldims, b, ldims, &lo, &hi);
+                for (x, y) in acc.iter_mut().zip(&c) {
+                    *x += y;
+                }
+            }
+            let base = (k0 * k + k1) * cc_sp;
+            out.data_mut()[base..base + cc_sp].copy_from_slice(&acc);
+        }
+    }
+    out
+}
+
+/// Per-atom squared norms `||D_k||_2^2` (the CD update denominators).
+pub fn atom_norms_sq(d: &NdTensor) -> Vec<f64> {
+    let k = d.dims()[0];
+    (0..k)
+        .map(|ki| d.slice0(ki).iter().map(|x| x * x).sum())
+        .collect()
+}
+
+/// Density below which the sparse nonzero-pair path beats dense
+/// correlation for the phi/psi statistics.
+const SPARSE_STATS_DENSITY: f64 = 0.05;
+
+/// phi statistic `[K, K, (2L-1)..]`:
+/// `phi[k,k'][delta + L - 1] = sum_u Z_k[u] Z_k'[u + delta]` (eq. 17).
+///
+/// Dispatches between dense correlation (direct / FFT) and a sparse
+/// nonzero-pair accumulation — after a CSC solve Z is typically < 2%
+/// dense, where the sparse path is orders of magnitude faster.
+pub fn compute_phi(z: &NdTensor, ldims: &[usize]) -> NdTensor {
+    let k = z.dims()[0];
+    let zdims = &z.dims()[1..];
+    let lo: Vec<i64> = ldims.iter().map(|&l| 1 - l as i64).collect();
+    let hi: Vec<i64> = ldims.iter().map(|&l| l as i64).collect();
+    let ccdims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let cc_sp: usize = ccdims.iter().product();
+    let mut odims = vec![k, k];
+    odims.extend_from_slice(&ccdims);
+    let mut out = NdTensor::zeros(&odims);
+
+    let density = z.nnz() as f64 / z.len().max(1) as f64;
+    if density < SPARSE_STATS_DENSITY {
+        // Sparse path: iterate nonzero pairs within the delta window.
+        let nz = nonzeros_per_atom(z);
+        let cc_str = crate::tensor::shape::strides_of(&ccdims);
+        for k0 in 0..k {
+            for k1 in 0..k {
+                let base = (k0 * k + k1) * cc_sp;
+                let dst = &mut out.data_mut()[base..base + cc_sp];
+                for &(ref u, zu) in &nz[k0] {
+                    'pair: for &(ref v, zv) in &nz[k1] {
+                        let mut off = 0usize;
+                        for i in 0..u.len() {
+                            let delta = v[i] - u[i];
+                            if delta < lo[i] || delta >= hi[i] {
+                                continue 'pair;
+                            }
+                            off += (delta - lo[i]) as usize * cc_str[i];
+                        }
+                        dst[off] += zu * zv;
+                    }
+                }
+            }
+        }
+        return out;
+    }
+
+    let use_fft = z.dims()[1..].iter().product::<usize>() > FFT_THRESHOLD;
+    for k0 in 0..k {
+        for k1 in 0..k {
+            let (c, _) = if use_fft {
+                fftconv::cross_corr_range_fft(z.slice0(k0), zdims, z.slice0(k1), zdims, &lo, &hi)
+            } else {
+                direct::cross_corr_range(z.slice0(k0), zdims, z.slice0(k1), zdims, &lo, &hi)
+            };
+            let base = (k0 * k + k1) * cc_sp;
+            out.data_mut()[base..base + cc_sp].copy_from_slice(&c);
+        }
+    }
+    out
+}
+
+/// Nonzero (multi-index, value) lists per atom of a `[K, sp..]` tensor.
+fn nonzeros_per_atom(z: &NdTensor) -> Vec<Vec<(Vec<i64>, f64)>> {
+    let k = z.dims()[0];
+    let sp_dims = &z.dims()[1..];
+    let sp: usize = sp_dims.iter().product();
+    (0..k)
+        .map(|ki| {
+            z.data()[ki * sp..(ki + 1) * sp]
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| **v != 0.0)
+                .map(|(off, v)| {
+                    let idx = crate::tensor::shape::index_of(off, sp_dims)
+                        .into_iter()
+                        .map(|x| x as i64)
+                        .collect();
+                    (idx, *v)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// psi statistic `[K, P, L..]`:
+/// `psi[k][p, l] = sum_u Z_k[u] X[p, u + l]` (eq. 17).
+pub fn compute_psi(z: &NdTensor, x: &NdTensor, ldims: &[usize]) -> NdTensor {
+    let k = z.dims()[0];
+    let zdims = &z.dims()[1..];
+    let (p, tdims) = split_channels(x.dims());
+    let lo: Vec<i64> = ldims.iter().map(|_| 0i64).collect();
+    let hi: Vec<i64> = ldims.iter().map(|&l| l as i64).collect();
+    let atom_sp: usize = ldims.iter().product();
+    let mut odims = vec![k, p];
+    odims.extend_from_slice(ldims);
+    let mut out = NdTensor::zeros(&odims);
+
+    let density = z.nnz() as f64 / z.len().max(1) as f64;
+    if density < SPARSE_STATS_DENSITY {
+        // Sparse path: psi[k,p,l] = sum over nonzeros of Z_k of
+        // z[u] * X[p, u + l] — O(nnz * P * |Theta|).
+        let nz = nonzeros_per_atom(z);
+        let t_str = crate::tensor::shape::strides_of(tdims);
+        let theta = crate::tensor::shape::Rect::full(ldims);
+        let a_str = crate::tensor::shape::strides_of(ldims);
+        for (ki, atoms) in nz.iter().enumerate() {
+            for pi in 0..p {
+                let xp = x.slice0(pi);
+                let base = (ki * p + pi) * atom_sp;
+                let dst = &mut out.data_mut()[base..base + atom_sp];
+                for (u, zv) in atoms {
+                    for l in theta.iter() {
+                        let xoff: usize = u
+                            .iter()
+                            .zip(&l)
+                            .zip(&t_str)
+                            .map(|((a, b), s)| (*a + *b) as usize * s)
+                            .sum();
+                        let aoff: usize =
+                            l.iter().zip(&a_str).map(|(a, s)| *a as usize * s).sum();
+                        dst[aoff] += zv * xp[xoff];
+                    }
+                }
+            }
+        }
+        return out;
+    }
+
+    let use_fft = tdims.iter().product::<usize>() > FFT_THRESHOLD;
+    for ki in 0..k {
+        for pi in 0..p {
+            let (c, _) = if use_fft {
+                fftconv::cross_corr_range_fft(z.slice0(ki), zdims, x.slice0(pi), tdims, &lo, &hi)
+            } else {
+                direct::cross_corr_range(z.slice0(ki), zdims, x.slice0(pi), tdims, &lo, &hi)
+            };
+            let base = (ki * p + pi) * atom_sp;
+            out.data_mut()[base..base + atom_sp].copy_from_slice(&c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_tensor(dims: &[usize], seed: u64) -> NdTensor {
+        let mut rng = Pcg64::seeded(seed);
+        NdTensor::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    #[test]
+    fn reconstruct_shape_1d() {
+        let z = rand_tensor(&[3, 10], 1); // K=3, T'=10
+        let d = rand_tensor(&[3, 2, 4], 2); // K=3, P=2, L=4
+        let x = reconstruct(&z, &d);
+        assert_eq!(x.dims(), &[2, 13]);
+    }
+
+    #[test]
+    fn reconstruct_delta_recovers_atom_2d() {
+        // Z = delta at atom 1, position (2,3) -> X contains that atom there.
+        let k = 2;
+        let d = rand_tensor(&[k, 1, 3, 3], 7);
+        let mut z = NdTensor::zeros(&[k, 6, 6]);
+        *z.at_mut(&[1, 2, 3]) = 1.0;
+        let x = reconstruct(&z, &d);
+        assert_eq!(x.dims(), &[1, 8, 8]);
+        for li in 0..3 {
+            for lj in 0..3 {
+                let got = x.at(&[0, 2 + li, 3 + lj]);
+                let want = d.at(&[1, 0, li, lj]);
+                assert!((got - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn correlate_dict_is_adjoint_of_reconstruct() {
+        // <reconstruct(Z,D), X> == <Z, correlate_dict(X,D)>
+        let z = rand_tensor(&[3, 5, 6], 11);
+        let d = rand_tensor(&[3, 2, 2, 3], 12);
+        let x = rand_tensor(&[2, 6, 8], 13);
+        let lhs = reconstruct(&z, &d).dot(&x);
+        let rhs = z.dot(&correlate_dict(&x, &d));
+        assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn dtd_diagonal_center_is_norm_sq() {
+        let d = rand_tensor(&[3, 2, 4], 21);
+        let dtd = compute_dtd(&d);
+        let norms = atom_norms_sq(&d);
+        // center index L-1 = 3 in the (2L-1)=7 axis
+        for k in 0..3 {
+            assert!((dtd.at(&[k, k, 3]) - norms[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dtd_symmetry() {
+        // DtD[k0,k1][delta] == DtD[k1,k0][-delta]
+        let d = rand_tensor(&[2, 1, 3, 3], 22);
+        let dtd = compute_dtd(&d);
+        for di in 0..5 {
+            for dj in 0..5 {
+                let a = dtd.at(&[0, 1, di, dj]);
+                let b = dtd.at(&[1, 0, 4 - di, 4 - dj]);
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn phi_matches_bruteforce() {
+        let z = rand_tensor(&[2, 7], 31);
+        let phi = compute_phi(&z, &[3]);
+        // phi[0,1][delta+2] = sum_u z0[u] z1[u+delta]
+        for (i, delta) in (-2i64..3).enumerate() {
+            let mut acc = 0.0;
+            for u in 0..7i64 {
+                let v = u + delta;
+                if (0..7).contains(&v) {
+                    acc += z.at(&[0, u as usize]) * z.at(&[1, v as usize]);
+                }
+            }
+            assert!((phi.at(&[0, 1, i]) - acc).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn psi_matches_bruteforce() {
+        let z = rand_tensor(&[2, 6], 41);
+        let x = rand_tensor(&[1, 9], 42); // T = T' + L - 1 = 6+4-1
+        let psi = compute_psi(&z, &x, &[4]);
+        assert_eq!(psi.dims(), &[2, 1, 4]);
+        for k in 0..2 {
+            for l in 0..4 {
+                let mut acc = 0.0;
+                for u in 0..6 {
+                    acc += z.at(&[k, u]) * x.at(&[0, u + l]);
+                }
+                assert!((psi.at(&[k, 0, l]) - acc).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_stats_paths_match_dense() {
+        // Density below SPARSE_STATS_DENSITY triggers the nonzero-pair
+        // path; force both and compare.
+        let mut rng = Pcg64::seeded(61);
+        let mut z = NdTensor::zeros(&[3, 40, 40]);
+        for v in z.data_mut().iter_mut() {
+            if rng.bernoulli(0.01) {
+                *v = rng.normal();
+            }
+        }
+        let x = rand_tensor(&[2, 45, 45], 62);
+        let ldims = [6usize, 6];
+        assert!((z.nnz() as f64) < 0.05 * z.len() as f64);
+        let phi_sparse = compute_phi(&z, &ldims);
+        let psi_sparse = compute_psi(&z, &x, &ldims);
+        // dense oracle: densify by bumping density artificially is not
+        // possible without changing values — instead call the dense
+        // primitives directly.
+        let lo = [-5i64, -5];
+        let hi = [6i64, 6];
+        for k0 in 0..3 {
+            for k1 in 0..3 {
+                let (c, _) = direct::cross_corr_range(
+                    z.slice0(k0),
+                    &[40, 40],
+                    z.slice0(k1),
+                    &[40, 40],
+                    &lo,
+                    &hi,
+                );
+                for (i, v) in c.iter().enumerate() {
+                    let idx = crate::tensor::shape::index_of(i, &[11, 11]);
+                    let got = phi_sparse.at(&[k0, k1, idx[0], idx[1]]);
+                    assert!((got - v).abs() < 1e-10, "phi mismatch at {k0},{k1},{idx:?}");
+                }
+            }
+        }
+        let psi_dense = {
+            // direct dense psi via the primitive
+            let mut out = NdTensor::zeros(psi_sparse.dims());
+            for ki in 0..3 {
+                for pi in 0..2 {
+                    let (c, _) = direct::cross_corr_range(
+                        z.slice0(ki),
+                        &[40, 40],
+                        x.slice0(pi),
+                        &[45, 45],
+                        &[0, 0],
+                        &[6, 6],
+                    );
+                    let base = (ki * 2 + pi) * 36;
+                    out.data_mut()[base..base + 36].copy_from_slice(&c);
+                }
+            }
+            out
+        };
+        assert!(psi_sparse.allclose(&psi_dense, 1e-10));
+    }
+
+    #[test]
+    fn psi_equals_correlate_adjoint_identity() {
+        // psi[k] = corr(X, Z_k) restricted to Theta; equivalently
+        // <psi, D> = <X, reconstruct(Z, D)> for any D.
+        let z = rand_tensor(&[2, 5, 5], 51);
+        let x = rand_tensor(&[2, 7, 7], 52);
+        let d = rand_tensor(&[2, 2, 3, 3], 53);
+        let psi = compute_psi(&z, &x, &[3, 3]);
+        let lhs = psi.dot(&d);
+        let rhs = x.dot(&reconstruct(&z, &d));
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+}

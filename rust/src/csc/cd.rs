@@ -1,0 +1,362 @@
+//! Sequential coordinate descent for CSC (Algorithm 1 of the paper),
+//! parameterized by the selection strategy (Greedy / Randomized /
+//! Locally-Greedy).
+//!
+//! The engine maintains `beta` incrementally (eq. 8) and stops when
+//! `||dZ||_inf < tol` over a full pass of the domain. It also counts
+//! the work performed (coordinates scanned for selection, beta entries
+//! touched) so the benches can report the paper's per-iteration
+//! complexity comparison alongside wall-clock times.
+
+use std::time::Instant;
+
+use crate::csc::beta::{dz_value, BetaWindow, ZWindow};
+use crate::csc::problem::CscProblem;
+use crate::csc::select::{Segments, Strategy};
+use crate::tensor::shape::Rect;
+use crate::tensor::NdTensor;
+use crate::util::rng::Pcg64;
+
+/// Configuration for the sequential CD solver.
+#[derive(Clone, Debug)]
+pub struct CdConfig {
+    pub strategy: Strategy,
+    /// Stop when `||dZ||_inf < tol`.
+    pub tol: f64,
+    /// Hard cap on selection iterations.
+    pub max_iter: usize,
+    /// Record the objective every `n` accepted updates (0 = never).
+    pub cost_every: usize,
+    pub seed: u64,
+}
+
+impl Default for CdConfig {
+    fn default() -> Self {
+        CdConfig {
+            strategy: Strategy::LocallyGreedy,
+            tol: 1e-6,
+            max_iter: 1_000_000,
+            cost_every: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Work/convergence statistics of a CD run.
+#[derive(Clone, Debug, Default)]
+pub struct CdStats {
+    /// Selection iterations performed.
+    pub iterations: usize,
+    /// Accepted (non-zero) coordinate updates.
+    pub updates: usize,
+    /// Coordinates examined during selection.
+    pub coords_scanned: u64,
+    /// beta entries touched by incremental updates.
+    pub beta_touched: u64,
+    pub converged: bool,
+    pub runtime: f64,
+}
+
+/// Result of a CD run.
+#[derive(Clone, Debug)]
+pub struct CdResult {
+    pub z: NdTensor,
+    pub stats: CdStats,
+    /// `(accepted updates, cost)` samples if `cost_every > 0`.
+    pub cost_trace: Vec<(usize, f64)>,
+}
+
+/// Solve the CSC problem by coordinate descent from `Z = 0`.
+pub fn solve_cd(problem: &CscProblem, cfg: &CdConfig) -> CdResult {
+    solve_cd_warm(problem, cfg, None)
+}
+
+/// Solve with an optional warm-start activation.
+pub fn solve_cd_warm(problem: &CscProblem, cfg: &CdConfig, z0: Option<&NdTensor>) -> CdResult {
+    let start = Instant::now();
+    let zsp = problem.z_spatial_dims();
+    let k_tot = problem.n_atoms();
+    let full = Rect::full(&zsp);
+
+    let mut beta = match z0 {
+        Some(z) => BetaWindow::init_full_warm(problem, z),
+        None => BetaWindow::init_full(problem),
+    };
+    let mut z = ZWindow::zeros(k_tot, &vec![0i64; zsp.len()], &zsp);
+    if let Some(z0) = z0 {
+        z.data.copy_from_slice(z0.data());
+    }
+
+    let mut stats = CdStats::default();
+    let mut trace = Vec::new();
+    let mut rng = Pcg64::seeded(cfg.seed);
+
+    match cfg.strategy {
+        Strategy::Greedy => {
+            while stats.iterations < cfg.max_iter {
+                stats.iterations += 1;
+                stats.coords_scanned += (k_tot * full.size()) as u64;
+                let Some((k, u, dz)) = beta.best_candidate(problem, &z, &full) else {
+                    break;
+                };
+                if dz.abs() < cfg.tol {
+                    stats.converged = true;
+                    break;
+                }
+                stats.beta_touched += beta.apply_update(problem, k, &u, dz) as u64;
+                z.add_at(k, &u, dz);
+                stats.updates += 1;
+                maybe_trace(problem, &z, cfg, &mut trace, stats.updates);
+            }
+        }
+        Strategy::Randomized => {
+            // Convergence check: a full domain scan every `check` iters.
+            let domain_size = k_tot * full.size();
+            let check = domain_size.max(1);
+            while stats.iterations < cfg.max_iter {
+                stats.iterations += 1;
+                stats.coords_scanned += 1;
+                let k = rng.below(k_tot);
+                let u: Vec<i64> = zsp.iter().map(|&n| rng.below(n) as i64).collect();
+                let dz = dz_value(
+                    beta.at(k, &u),
+                    z.at(k, &u),
+                    problem.lambda,
+                    problem.norms_sq[k],
+                );
+                if dz != 0.0 {
+                    stats.beta_touched += beta.apply_update(problem, k, &u, dz) as u64;
+                    z.add_at(k, &u, dz);
+                    stats.updates += 1;
+                    maybe_trace(problem, &z, cfg, &mut trace, stats.updates);
+                }
+                if stats.iterations % check == 0 {
+                    stats.coords_scanned += domain_size as u64;
+                    if let Some((_, _, best)) = beta.best_candidate(problem, &z, &full) {
+                        if best.abs() < cfg.tol {
+                            stats.converged = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Strategy::LocallyGreedy => {
+            let segs = Segments::for_atoms(full.clone(), problem.atom_dims());
+            let m_tot = segs.len();
+            let mut sweep_max = 0.0f64;
+            let mut m = 0usize;
+            while stats.iterations < cfg.max_iter {
+                stats.iterations += 1;
+                let rect = segs.rect(m);
+                stats.coords_scanned += (k_tot * rect.size()) as u64;
+                if let Some((k, u, dz)) = beta.best_candidate(problem, &z, &rect) {
+                    sweep_max = sweep_max.max(dz.abs());
+                    if dz.abs() >= cfg.tol {
+                        stats.beta_touched += beta.apply_update(problem, k, &u, dz) as u64;
+                        z.add_at(k, &u, dz);
+                        stats.updates += 1;
+                        maybe_trace(problem, &z, cfg, &mut trace, stats.updates);
+                    }
+                }
+                m += 1;
+                if m == m_tot {
+                    m = 0;
+                    if sweep_max < cfg.tol {
+                        stats.converged = true;
+                        break;
+                    }
+                    sweep_max = 0.0;
+                }
+            }
+        }
+    }
+
+    stats.runtime = start.elapsed().as_secs_f64();
+    let mut zt = NdTensor::zeros(&problem.z_dims());
+    zt.data_mut().copy_from_slice(&z.data);
+    CdResult { z: zt, stats, cost_trace: trace }
+}
+
+fn maybe_trace(
+    problem: &CscProblem,
+    z: &ZWindow,
+    cfg: &CdConfig,
+    trace: &mut Vec<(usize, f64)>,
+    updates: usize,
+) {
+    if cfg.cost_every > 0 && updates % cfg.cost_every == 0 {
+        let mut zt = NdTensor::zeros(&problem.z_dims());
+        zt.data_mut().copy_from_slice(&z.data);
+        trace.push((updates, problem.cost(&zt)));
+    }
+}
+
+/// KKT residual of the lasso optimality conditions for `z`:
+/// max over coordinates of the violation (0 at an exact optimum).
+pub fn kkt_violation(problem: &CscProblem, z: &NdTensor) -> f64 {
+    let beta = BetaWindow::init_full_warm(problem, z);
+    let sp: usize = problem.z_spatial_dims().iter().product();
+    let mut worst = 0.0f64;
+    for (i, (&b, &zv)) in beta.data.iter().zip(z.data()).enumerate() {
+        let k = i / sp;
+        // grad of smooth part wrt this coord = -(beta - z*||D_k||^2)... in
+        // beta terms the optimality condition is exactly dz == 0.
+        let dz = dz_value(b, zv, problem.lambda, problem.norms_sq[k]);
+        worst = worst.max(dz.abs() * problem.norms_sq[k]);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy_1d(seed: u64) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        // Signal generated from the true model so there is structure.
+        let k = 3;
+        let l = 6;
+        let t = 60;
+        let d = NdTensor::from_vec(&[k, 1, l], {
+            let mut v = rng.normal_vec(k * l);
+            for atom in v.chunks_mut(l) {
+                let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in atom {
+                    *x /= n;
+                }
+            }
+            v
+        });
+        let mut z = NdTensor::zeros(&[k, t - l + 1]);
+        for v in z.data_mut().iter_mut() {
+            if rng.bernoulli(0.05) {
+                *v = rng.normal_ms(0.0, 3.0);
+            }
+        }
+        let clean = crate::conv::reconstruct(&z, &d);
+        let noise = NdTensor::from_vec(clean.dims(), rng.normal_vec(clean.len())).scale(0.05);
+        let x = clean.add(&noise);
+        CscProblem::with_lambda_frac(x, d, 0.1)
+    }
+
+    fn toy_2d(seed: u64) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        let x = NdTensor::from_vec(&[1, 16, 16], rng.normal_vec(256));
+        let d = NdTensor::from_vec(&[2, 1, 4, 4], rng.normal_vec(32));
+        CscProblem::with_lambda_frac(x, d, 0.2)
+    }
+
+    #[test]
+    fn all_strategies_reach_same_cost_1d() {
+        let p = toy_1d(1);
+        let base = CdConfig { tol: 1e-9, ..Default::default() };
+        let costs: Vec<f64> = [Strategy::Greedy, Strategy::Randomized, Strategy::LocallyGreedy]
+            .iter()
+            .map(|s| {
+                let r = solve_cd(&p, &CdConfig { strategy: *s, ..base.clone() });
+                assert!(r.stats.converged, "{s:?} did not converge");
+                p.cost(&r.z)
+            })
+            .collect();
+        for w in costs.windows(2) {
+            assert!(
+                (w[0] - w[1]).abs() < 1e-6 * (1.0 + costs[0].abs()),
+                "costs diverge: {costs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lgcd_solution_satisfies_kkt() {
+        let p = toy_1d(2);
+        let r = solve_cd(&p, &CdConfig { tol: 1e-10, ..Default::default() });
+        assert!(r.stats.converged);
+        assert!(kkt_violation(&p, &r.z) < 1e-8);
+    }
+
+    #[test]
+    fn greedy_solution_satisfies_kkt_2d() {
+        let p = toy_2d(3);
+        let r = solve_cd(
+            &p,
+            &CdConfig { strategy: Strategy::Greedy, tol: 1e-10, ..Default::default() },
+        );
+        assert!(r.stats.converged);
+        assert!(kkt_violation(&p, &r.z) < 1e-8);
+    }
+
+    #[test]
+    fn lgcd_matches_greedy_2d() {
+        let p = toy_2d(4);
+        let a = solve_cd(&p, &CdConfig { strategy: Strategy::Greedy, tol: 1e-9, ..Default::default() });
+        let b = solve_cd(
+            &p,
+            &CdConfig { strategy: Strategy::LocallyGreedy, tol: 1e-9, ..Default::default() },
+        );
+        let ca = p.cost(&a.z);
+        let cb = p.cost(&b.z);
+        assert!((ca - cb).abs() < 1e-6 * (1.0 + ca.abs()), "{ca} vs {cb}");
+    }
+
+    #[test]
+    fn cost_monotone_under_greedy() {
+        let p = toy_1d(5);
+        let r = solve_cd(
+            &p,
+            &CdConfig {
+                strategy: Strategy::Greedy,
+                tol: 1e-8,
+                cost_every: 1,
+                ..Default::default()
+            },
+        );
+        for w in r.cost_trace.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-10, "cost increased: {w:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_solution_when_lambda_large() {
+        let p = toy_1d(6);
+        let p_big = CscProblem::new(p.x.clone(), p.d.clone(), 100.0 * p.lambda);
+        let r = solve_cd(&p_big, &CdConfig::default());
+        // With lambda >> lambda_max/10 the solution should be very sparse.
+        assert!(r.z.nnz() <= p.z_dims().iter().product::<usize>() / 10);
+    }
+
+    #[test]
+    fn work_counters_populated() {
+        let p = toy_1d(7);
+        let r = solve_cd(&p, &CdConfig::default());
+        assert!(r.stats.iterations > 0);
+        assert!(r.stats.coords_scanned > 0);
+        assert!(r.stats.beta_touched > 0);
+        assert!(r.stats.updates > 0);
+    }
+
+    #[test]
+    fn warm_start_is_noop_at_optimum() {
+        let p = toy_1d(8);
+        let r = solve_cd(&p, &CdConfig { tol: 1e-10, ..Default::default() });
+        let r2 = solve_cd_warm(&p, &CdConfig { tol: 1e-8, ..Default::default() }, Some(&r.z));
+        assert_eq!(r2.stats.updates, 0, "warm start at optimum should do nothing");
+        assert!(r2.stats.converged);
+    }
+
+    #[test]
+    fn greedy_complexity_dominates_lgcd() {
+        // The paper's complexity argument: per-iteration scan cost of GCD
+        // is K|Omega| while LGCD is K|C_m| — check the counters agree.
+        let p = toy_1d(9);
+        let g = solve_cd(&p, &CdConfig { strategy: Strategy::Greedy, ..Default::default() });
+        let l = solve_cd(&p, &CdConfig { strategy: Strategy::LocallyGreedy, ..Default::default() });
+        let g_per_iter = g.stats.coords_scanned as f64 / g.stats.iterations as f64;
+        let l_per_iter = l.stats.coords_scanned as f64 / l.stats.iterations as f64;
+        assert!(
+            g_per_iter > 3.0 * l_per_iter,
+            "greedy/iter {g_per_iter} should far exceed lgcd/iter {l_per_iter}"
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Top-level sparse-coding entry point.
+//!
+//! `sparse_encode` is the one-call API: it builds the `CscProblem`
+//! (lambda as a fraction of `lambda_max`, per the paper) and dispatches
+//! to the sequential CD engine, FISTA, or the distributed DiCoDiLe-Z
+//! solver depending on the configuration.
+
+use crate::csc::cd::{solve_cd, CdConfig, CdStats};
+use crate::csc::fista::{solve_fista, FistaConfig};
+use crate::csc::problem::CscProblem;
+use crate::csc::select::Strategy;
+use crate::dicod::config::DicodConfig;
+use crate::dicod::coordinator::solve_distributed;
+use crate::tensor::NdTensor;
+
+/// Which solver backs `sparse_encode`.
+#[derive(Clone, Debug)]
+pub enum Solver {
+    /// Sequential coordinate descent with the given selection strategy.
+    Sequential(Strategy),
+    /// FISTA (proximal gradient) baseline.
+    Fista,
+    /// Distributed DiCoDiLe-Z over a worker grid.
+    Distributed(DicodConfig),
+}
+
+/// Configuration for `sparse_encode`.
+#[derive(Clone, Debug)]
+pub struct EncodeConfig {
+    /// `lambda = lambda_frac * lambda_max`.
+    pub lambda_frac: f64,
+    pub solver: Solver,
+    pub tol: f64,
+    pub max_iter: usize,
+    pub seed: u64,
+}
+
+impl Default for EncodeConfig {
+    fn default() -> Self {
+        EncodeConfig {
+            lambda_frac: 0.1,
+            solver: Solver::Sequential(Strategy::LocallyGreedy),
+            tol: 1e-6,
+            max_iter: 1_000_000,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of `sparse_encode`.
+#[derive(Clone, Debug)]
+pub struct EncodeResult {
+    pub z: NdTensor,
+    pub cost: f64,
+    pub lambda: f64,
+    pub converged: bool,
+    pub runtime: f64,
+    /// CD work counters when a CD-family solver ran.
+    pub cd_stats: Option<CdStats>,
+}
+
+/// Sparse-code `x` against dictionary `d`.
+pub fn sparse_encode(x: &NdTensor, d: &NdTensor, cfg: &EncodeConfig) -> EncodeResult {
+    let problem = CscProblem::with_lambda_frac(x.clone(), d.clone(), cfg.lambda_frac);
+    encode_problem(&problem, cfg)
+}
+
+/// Sparse-code a pre-built problem (lambda already fixed).
+pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult {
+    match &cfg.solver {
+        Solver::Sequential(strategy) => {
+            let r = solve_cd(
+                problem,
+                &CdConfig {
+                    strategy: *strategy,
+                    tol: cfg.tol,
+                    max_iter: cfg.max_iter,
+                    cost_every: 0,
+                    seed: cfg.seed,
+                },
+            );
+            EncodeResult {
+                cost: problem.cost(&r.z),
+                z: r.z,
+                lambda: problem.lambda,
+                converged: r.stats.converged,
+                runtime: r.stats.runtime,
+                cd_stats: Some(r.stats),
+            }
+        }
+        Solver::Fista => {
+            let r = solve_fista(
+                problem,
+                &FistaConfig { max_iter: cfg.max_iter, tol: cfg.tol, ..Default::default() },
+            );
+            EncodeResult {
+                cost: problem.cost(&r.z),
+                z: r.z,
+                lambda: problem.lambda,
+                converged: r.converged,
+                runtime: r.runtime,
+                cd_stats: None,
+            }
+        }
+        Solver::Distributed(dcfg) => {
+            let mut dcfg = dcfg.clone();
+            dcfg.tol = cfg.tol;
+            dcfg.max_updates = cfg.max_iter;
+            let r = solve_distributed(problem, &dcfg);
+            EncodeResult {
+                cost: problem.cost(&r.z),
+                z: r.z,
+                lambda: problem.lambda,
+                converged: r.converged,
+                runtime: r.runtime,
+                cd_stats: None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy() -> (NdTensor, NdTensor) {
+        let mut rng = Pcg64::seeded(1);
+        let x = NdTensor::from_vec(&[1, 50], rng.normal_vec(50));
+        let d = NdTensor::from_vec(&[2, 1, 6], rng.normal_vec(12));
+        (x, d)
+    }
+
+    #[test]
+    fn default_encode_converges() {
+        let (x, d) = toy();
+        let r = sparse_encode(&x, &d, &EncodeConfig::default());
+        assert!(r.converged);
+        assert!(r.cost <= 0.5 * x.norm_sq() + 1e-9);
+        assert!(r.lambda > 0.0);
+    }
+
+    #[test]
+    fn fista_and_cd_agree() {
+        let (x, d) = toy();
+        let a = sparse_encode(
+            &x,
+            &d,
+            &EncodeConfig { tol: 1e-9, ..Default::default() },
+        );
+        let b = sparse_encode(
+            &x,
+            &d,
+            &EncodeConfig { solver: Solver::Fista, tol: 1e-10, max_iter: 10_000, ..Default::default() },
+        );
+        assert!((a.cost - b.cost).abs() < 1e-4 * (1.0 + a.cost));
+    }
+}

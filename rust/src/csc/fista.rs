@@ -1,0 +1,186 @@
+//! FISTA baseline for CSC (Chalasani et al. 2013; Beck & Teboulle 2009).
+//!
+//! Proximal-gradient on eq. 4 with Nesterov momentum. The Lipschitz
+//! constant of the smooth part is the top eigenvalue of `A^T A` where
+//! `A : Z -> Z * D`; we estimate it by power iteration on
+//! `Z -> corr(conv(Z, D), D)`.
+
+use std::time::Instant;
+
+use crate::conv;
+use crate::csc::problem::CscProblem;
+use crate::tensor::ops::soft_threshold;
+use crate::tensor::NdTensor;
+use crate::util::rng::Pcg64;
+
+/// FISTA configuration.
+#[derive(Clone, Debug)]
+pub struct FistaConfig {
+    pub max_iter: usize,
+    /// Stop when `||Z_{t+1} - Z_t||_inf < tol`.
+    pub tol: f64,
+    /// Power-iteration steps for the Lipschitz estimate.
+    pub power_iters: usize,
+    /// Record the objective every n iterations (0 = never).
+    pub cost_every: usize,
+}
+
+impl Default for FistaConfig {
+    fn default() -> Self {
+        FistaConfig { max_iter: 2000, tol: 1e-7, power_iters: 30, cost_every: 0 }
+    }
+}
+
+/// FISTA run result.
+#[derive(Clone, Debug)]
+pub struct FistaResult {
+    pub z: NdTensor,
+    pub iterations: usize,
+    pub converged: bool,
+    pub runtime: f64,
+    pub lipschitz: f64,
+    pub cost_trace: Vec<(usize, f64)>,
+}
+
+/// Estimate the Lipschitz constant `||A||_2^2` by power iteration.
+pub fn lipschitz_estimate(problem: &CscProblem, iters: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::seeded(seed);
+    let zdims = problem.z_dims();
+    let mut v = NdTensor::from_vec(&zdims, rng.normal_vec(zdims.iter().product()));
+    let mut eig = 1.0;
+    for _ in 0..iters {
+        let av = conv::reconstruct(&v, &problem.d);
+        let atav = conv::correlate_dict(&av, &problem.d);
+        eig = atav.norm2();
+        if eig == 0.0 {
+            return 1.0;
+        }
+        v = atav.scale(1.0 / eig);
+    }
+    eig
+}
+
+/// Solve the CSC problem with FISTA from `Z = 0`.
+pub fn solve_fista(problem: &CscProblem, cfg: &FistaConfig) -> FistaResult {
+    let start = Instant::now();
+    let lip = lipschitz_estimate(problem, cfg.power_iters, 1234).max(1e-12);
+    let step = 1.0 / (1.01 * lip); // small safety margin
+    let zdims = problem.z_dims();
+
+    let mut z = NdTensor::zeros(&zdims);
+    let mut y = z.clone();
+    let mut t = 1.0f64;
+    let mut converged = false;
+    let mut iterations = 0;
+    let mut trace = Vec::new();
+
+    for it in 0..cfg.max_iter {
+        iterations = it + 1;
+        // grad of smooth part at y: -corr(X - y*D, D)
+        let resid = problem.x.sub(&conv::reconstruct(&y, &problem.d));
+        let grad = conv::correlate_dict(&resid, &problem.d); // = -true grad
+        // prox step
+        let mut z_next = y.clone();
+        for (zn, (yv, g)) in z_next
+            .data_mut()
+            .iter_mut()
+            .zip(y.data().iter().zip(grad.data()))
+        {
+            *zn = soft_threshold(yv + step * g, step * problem.lambda);
+        }
+        let delta = z_next.max_abs_diff(&z);
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let gamma = (t - 1.0) / t_next;
+        // y = z_next + gamma (z_next - z)
+        let mut y_next = z_next.clone();
+        y_next.axpy(gamma, &z_next.sub(&z));
+        z = z_next;
+        y = y_next;
+        t = t_next;
+        if cfg.cost_every > 0 && iterations % cfg.cost_every == 0 {
+            trace.push((iterations, problem.cost(&z)));
+        }
+        if delta < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    FistaResult {
+        z,
+        iterations,
+        converged,
+        runtime: start.elapsed().as_secs_f64(),
+        lipschitz: lip,
+        cost_trace: trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csc::cd::{kkt_violation, solve_cd, CdConfig};
+    use crate::util::rng::Pcg64;
+
+    fn toy(seed: u64) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        let x = NdTensor::from_vec(&[1, 40], rng.normal_vec(40));
+        let d = NdTensor::from_vec(&[2, 1, 5], {
+            let mut v = rng.normal_vec(10);
+            for a in v.chunks_mut(5) {
+                let n = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in a {
+                    *x /= n;
+                }
+            }
+            v
+        });
+        CscProblem::with_lambda_frac(x, d, 0.2)
+    }
+
+    #[test]
+    fn lipschitz_bounds_operator() {
+        // For any v: ||A v||^2 <= lip * ||v||^2 (within power-iter accuracy).
+        let p = toy(1);
+        let lip = lipschitz_estimate(&p, 50, 7);
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..5 {
+            let v = NdTensor::from_vec(&p.z_dims(), rng.normal_vec(p.z_dims().iter().product()));
+            let av = conv::reconstruct(&v, &p.d);
+            assert!(av.norm_sq() <= 1.001 * lip * v.norm_sq());
+        }
+    }
+
+    #[test]
+    fn fista_matches_cd_solution() {
+        let p = toy(2);
+        let f = solve_fista(&p, &FistaConfig { max_iter: 5000, tol: 1e-10, ..Default::default() });
+        let c = solve_cd(&p, &CdConfig { tol: 1e-10, ..Default::default() });
+        let cf = p.cost(&f.z);
+        let cc = p.cost(&c.z);
+        assert!(
+            (cf - cc).abs() < 1e-5 * (1.0 + cc.abs()),
+            "fista {cf} vs cd {cc}"
+        );
+    }
+
+    #[test]
+    fn fista_solution_near_kkt() {
+        let p = toy(3);
+        let f = solve_fista(&p, &FistaConfig { max_iter: 8000, tol: 1e-11, ..Default::default() });
+        assert!(f.converged);
+        assert!(kkt_violation(&p, &f.z) < 1e-5);
+    }
+
+    #[test]
+    fn cost_decreases_overall() {
+        let p = toy(4);
+        let f = solve_fista(
+            &p,
+            &FistaConfig { max_iter: 300, tol: 0.0, cost_every: 50, ..Default::default() },
+        );
+        let first = f.cost_trace.first().unwrap().1;
+        let last = f.cost_trace.last().unwrap().1;
+        assert!(last <= first);
+    }
+}

@@ -1,0 +1,10 @@
+//! Convolutional sparse coding: problem definition, beta maintenance,
+//! sequential CD engines (greedy / randomized / locally-greedy), FISTA
+//! baseline and the top-level `sparse_encode` API.
+
+pub mod beta;
+pub mod cd;
+pub mod encode;
+pub mod fista;
+pub mod problem;
+pub mod select;

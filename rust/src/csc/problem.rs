@@ -1,0 +1,196 @@
+//! The convolutional sparse coding problem (eq. 4 of the paper):
+//!
+//! ```text
+//! Z* = argmin_Z  1/2 ||X - Z * D||_2^2 + lambda ||Z||_1
+//! ```
+//!
+//! `CscProblem` owns the observation, the dictionary and the derived
+//! quantities every solver needs: the atom cross-correlation tensor
+//! `DtD` (for the O(K |Theta|) incremental beta updates of eq. 8), the
+//! atom norms (CD update denominators) and `lambda`.
+
+use crate::conv;
+use crate::tensor::NdTensor;
+
+/// A fully-specified CSC instance.
+#[derive(Clone, Debug)]
+pub struct CscProblem {
+    /// Observation `[P, T..]`.
+    pub x: NdTensor,
+    /// Dictionary `[K, P, L..]`.
+    pub d: NdTensor,
+    /// l1 regularization weight.
+    pub lambda: f64,
+    /// Atom cross-correlations `[K, K, (2L-1)..]`.
+    pub dtd: NdTensor,
+    /// `||D_k||_2^2` per atom.
+    pub norms_sq: Vec<f64>,
+    /// `1 / ||D_k||_2^2` per atom (hot-path: avoids a divide per
+    /// scanned coordinate in the LGCD selection loop).
+    pub inv_norms_sq: Vec<f64>,
+}
+
+impl CscProblem {
+    /// Build a problem; precomputes `DtD` and atom norms.
+    pub fn new(x: NdTensor, d: NdTensor, lambda: f64) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive");
+        assert_eq!(
+            x.dims()[0],
+            d.dims()[1],
+            "X channels {:?} vs D channels {:?}",
+            x.dims(),
+            d.dims()
+        );
+        let dtd = conv::compute_dtd(&d);
+        let norms_sq = conv::atom_norms_sq(&d);
+        let inv_norms_sq = norms_sq.iter().map(|&n| 1.0 / n.max(1e-300)).collect();
+        CscProblem { x, d, lambda, dtd, norms_sq, inv_norms_sq }
+    }
+
+    /// Build with `lambda = frac * lambda_max` (the paper's convention,
+    /// `frac = 0.1` throughout its experiments).
+    pub fn with_lambda_frac(x: NdTensor, d: NdTensor, frac: f64) -> Self {
+        let lmax = lambda_max(&x, &d);
+        Self::new(x, d, frac * lmax)
+    }
+
+    /// Number of atoms K.
+    pub fn n_atoms(&self) -> usize {
+        self.d.dims()[0]
+    }
+
+    /// Number of data channels P.
+    pub fn n_channels(&self) -> usize {
+        self.x.dims()[0]
+    }
+
+    /// Atom spatial dims `L..`.
+    pub fn atom_dims(&self) -> &[usize] {
+        &self.d.dims()[2..]
+    }
+
+    /// Observation spatial dims `T..`.
+    pub fn signal_dims(&self) -> &[usize] {
+        &self.x.dims()[1..]
+    }
+
+    /// Valid activation spatial dims `T' = T - L + 1`.
+    pub fn z_spatial_dims(&self) -> Vec<usize> {
+        conv::valid_dims(self.signal_dims(), self.atom_dims())
+    }
+
+    /// Full activation dims `[K, T'..]`.
+    pub fn z_dims(&self) -> Vec<usize> {
+        let mut dims = vec![self.n_atoms()];
+        dims.extend(self.z_spatial_dims());
+        dims
+    }
+
+    /// Fresh all-zero activation tensor.
+    pub fn zero_activation(&self) -> NdTensor {
+        NdTensor::zeros(&self.z_dims())
+    }
+
+    /// Residual `X - Z * D`.
+    pub fn residual(&self, z: &NdTensor) -> NdTensor {
+        self.x.sub(&conv::reconstruct(z, &self.d))
+    }
+
+    /// Objective `1/2 ||X - Z*D||^2 + lambda ||Z||_1`.
+    pub fn cost(&self, z: &NdTensor) -> f64 {
+        0.5 * self.residual(z).norm_sq() + self.lambda * z.norm1()
+    }
+
+    /// Data-fit half only.
+    pub fn data_fit(&self, z: &NdTensor) -> f64 {
+        0.5 * self.residual(z).norm_sq()
+    }
+
+    /// DtD entry for atoms `(k0, k)` at the flat spatial delta offset
+    /// `cc_off` (delta indices already shifted by `L - 1`).
+    #[inline]
+    pub fn dtd_at(&self, k0: usize, k: usize, cc_off: usize) -> f64 {
+        let k_tot = self.n_atoms();
+        let cc_sp: usize = self.atom_dims().iter().map(|&l| 2 * l - 1).product();
+        self.dtd.data()[(k0 * k_tot + k) * cc_sp + cc_off]
+    }
+}
+
+/// Smallest lambda for which `Z = 0` is optimal:
+/// `lambda_max = || corr(X, D) ||_inf` (eq. 5).
+pub fn lambda_max(x: &NdTensor, d: &NdTensor) -> f64 {
+    conv::correlate_dict(x, d).norm_inf()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy_problem(seed: u64) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        let x = NdTensor::from_vec(&[2, 20], rng.normal_vec(40));
+        let d = NdTensor::from_vec(&[3, 2, 4], rng.normal_vec(24));
+        CscProblem::new(x, d, 0.5)
+    }
+
+    #[test]
+    fn dims_are_consistent() {
+        let p = toy_problem(1);
+        assert_eq!(p.n_atoms(), 3);
+        assert_eq!(p.n_channels(), 2);
+        assert_eq!(p.z_spatial_dims(), vec![17]);
+        assert_eq!(p.z_dims(), vec![3, 17]);
+    }
+
+    #[test]
+    fn cost_at_zero_is_half_x_norm() {
+        let p = toy_problem(2);
+        let z = p.zero_activation();
+        assert!((p.cost(&z) - 0.5 * p.x.norm_sq()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lambda_max_makes_zero_optimal() {
+        let p = toy_problem(3);
+        let lmax = lambda_max(&p.x, &p.d);
+        let grad0 = crate::conv::correlate_dict(&p.x, &p.d);
+        assert!(grad0.norm_inf() <= lmax + 1e-12);
+        assert!(grad0.norm_inf() > 0.9 * lmax);
+    }
+
+    #[test]
+    fn with_lambda_frac_scales() {
+        let mut rng = Pcg64::seeded(4);
+        let x = NdTensor::from_vec(&[1, 30], rng.normal_vec(30));
+        let d = NdTensor::from_vec(&[2, 1, 5], rng.normal_vec(10));
+        let lmax = lambda_max(&x, &d);
+        let p = CscProblem::with_lambda_frac(x, d, 0.1);
+        assert!((p.lambda - 0.1 * lmax).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_decreases_with_oracle_update() {
+        // A single optimal CD update can only decrease the cost.
+        let p = toy_problem(5);
+        let mut z = p.zero_activation();
+        let beta0 = crate::conv::correlate_dict(&p.x, &p.d);
+        let (off, _) = beta0.argmax_abs();
+        let idx = beta0.unravel(off);
+        let k = idx[0];
+        let st = crate::tensor::ops::soft_threshold(beta0.get(off), p.lambda);
+        let znew = st / p.norms_sq[k];
+        let before = p.cost(&z);
+        z.set(off, znew);
+        let after = p.cost(&z);
+        assert!(after <= before + 1e-12, "{after} vs {before}");
+    }
+
+    #[test]
+    fn dtd_at_matches_tensor_indexing() {
+        let p = toy_problem(6);
+        // center of atom 1 vs itself = ||D_1||^2
+        let center = p.atom_dims()[0] - 1;
+        assert!((p.dtd_at(1, 1, center) - p.norms_sq[1]).abs() < 1e-12);
+    }
+}

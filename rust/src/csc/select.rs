@@ -1,0 +1,161 @@
+//! Coordinate-selection strategies (§3 of the paper).
+//!
+//! - `Greedy` — Gauss–Southwell over the whole domain, O(K|Omega|)/iter.
+//! - `Randomized` — uniform coordinate, O(1)/iter.
+//! - `LocallyGreedy` — greedy inside a cyclic partition of the domain
+//!   into segments of size `2^d |Theta|` (extent `2 L_i` per dim), the
+//!   paper's sweet spot where selection cost matches the O(2^d K |Theta|)
+//!   beta-update cost.
+
+use crate::tensor::shape::Rect;
+
+/// Coordinate-selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Greedy,
+    Randomized,
+    LocallyGreedy,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Greedy => "greedy",
+            Strategy::Randomized => "randomized",
+            Strategy::LocallyGreedy => "locally-greedy",
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "greedy" | "gcd" => Ok(Strategy::Greedy),
+            "randomized" | "random" | "rcd" => Ok(Strategy::Randomized),
+            "locally-greedy" | "lgcd" => Ok(Strategy::LocallyGreedy),
+            other => Err(format!("unknown strategy {other:?} (greedy|randomized|lgcd)")),
+        }
+    }
+}
+
+/// A partition of a spatial box into a grid of segments `C_m`
+/// (the LGCD sub-domains). Segments tile the box; edge segments may be
+/// smaller.
+#[derive(Clone, Debug)]
+pub struct Segments {
+    /// The partitioned box (global coordinates).
+    pub domain: Rect,
+    /// Segment extent per dimension.
+    pub seg_ext: Vec<usize>,
+    /// Number of segments per dimension.
+    pub counts: Vec<usize>,
+}
+
+impl Segments {
+    /// Partition `domain` into segments of extent `seg_ext` per dim.
+    pub fn new(domain: Rect, seg_ext: &[usize]) -> Self {
+        assert!(!domain.is_empty(), "cannot partition an empty domain");
+        let counts: Vec<usize> = domain
+            .extents()
+            .iter()
+            .zip(seg_ext)
+            .map(|(n, s)| n.div_ceil(*s).max(1))
+            .collect();
+        Segments { domain, seg_ext: seg_ext.to_vec(), counts }
+    }
+
+    /// The paper's default: segments of extent `2 L_i`, giving
+    /// `|C_m| = 2^d |Theta|`.
+    pub fn for_atoms(domain: Rect, atom_dims: &[usize]) -> Self {
+        let ext: Vec<usize> = atom_dims.iter().map(|&l| 2 * l).collect();
+        Segments::new(domain, &ext)
+    }
+
+    /// Total number of segments M.
+    pub fn len(&self) -> usize {
+        self.counts.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The m-th segment as a global-coordinate box.
+    pub fn rect(&self, m: usize) -> Rect {
+        let mut rem = m;
+        let d = self.counts.len();
+        let mut idx = vec![0usize; d];
+        for i in (0..d).rev() {
+            idx[i] = rem % self.counts[i];
+            rem /= self.counts[i];
+        }
+        let lo: Vec<i64> = idx
+            .iter()
+            .zip(&self.seg_ext)
+            .zip(&self.domain.lo)
+            .map(|((i, s), l)| l + (*i * *s) as i64)
+            .collect();
+        let hi: Vec<i64> = lo
+            .iter()
+            .zip(&self.seg_ext)
+            .zip(&self.domain.hi)
+            .map(|((l, s), h)| (*l + *s as i64).min(*h))
+            .collect();
+        Rect::new(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!("lgcd".parse::<Strategy>().unwrap(), Strategy::LocallyGreedy);
+        assert_eq!("greedy".parse::<Strategy>().unwrap(), Strategy::Greedy);
+        assert_eq!("rcd".parse::<Strategy>().unwrap(), Strategy::Randomized);
+        assert!("nope".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn segments_cover_domain_exactly() {
+        let dom = Rect::new(vec![0, 0], vec![13, 9]);
+        let segs = Segments::new(dom.clone(), &[4, 4]);
+        assert_eq!(segs.counts, vec![4, 3]);
+        // Union of all segments == domain, disjoint.
+        let mut seen = std::collections::HashSet::new();
+        for m in 0..segs.len() {
+            for pt in segs.rect(m).iter() {
+                assert!(dom.contains(&pt));
+                assert!(seen.insert(pt), "segments overlap");
+            }
+        }
+        assert_eq!(seen.len(), dom.size());
+    }
+
+    #[test]
+    fn for_atoms_extent_is_2l() {
+        let dom = Rect::new(vec![0], vec![100]);
+        let segs = Segments::for_atoms(dom, &[8]);
+        assert_eq!(segs.seg_ext, vec![16]);
+        assert_eq!(segs.len(), 7); // ceil(100/16)
+        assert_eq!(segs.rect(6).extents(), vec![4]); // tail segment
+    }
+
+    #[test]
+    fn single_segment_when_domain_small() {
+        let dom = Rect::new(vec![0], vec![10]);
+        let segs = Segments::for_atoms(dom.clone(), &[8]);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs.rect(0), dom);
+    }
+
+    #[test]
+    fn offset_domain_segments() {
+        let dom = Rect::new(vec![5], vec![20]);
+        let segs = Segments::new(dom, &[6]);
+        assert_eq!(segs.rect(0), Rect::new(vec![5], vec![11]));
+        assert_eq!(segs.rect(2), Rect::new(vec![17], vec![20]));
+    }
+}

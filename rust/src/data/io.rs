@@ -1,0 +1,151 @@
+//! Tensor serialization: a tiny self-describing binary format (`.ndt`)
+//! and PGM image export for visual inspection of learned atoms.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::NdTensor;
+
+const MAGIC: &[u8; 8] = b"NDTENS01";
+
+/// Save a tensor: magic | ndim (u32 LE) | dims (u64 LE each) | f64 LE data.
+pub fn save_tensor(path: &Path, t: &NdTensor) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(t.ndim() as u32).to_le_bytes())?;
+    for &d in t.dims() {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    let mut buf = Vec::with_capacity(t.len() * 8);
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a tensor written by `save_tensor`.
+pub fn load_tensor(path: &Path) -> anyhow::Result<NdTensor> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let ndim = u32::from_le_bytes(b4) as usize;
+    anyhow::ensure!(ndim <= 8, "suspicious ndim {ndim}");
+    let mut dims = Vec::with_capacity(ndim);
+    let mut b8 = [0u8; 8];
+    for _ in 0..ndim {
+        f.read_exact(&mut b8)?;
+        dims.push(u64::from_le_bytes(b8) as usize);
+    }
+    let n: usize = dims.iter().product();
+    let mut raw = vec![0u8; n * 8];
+    f.read_exact(&mut raw)?;
+    let data: Vec<f64> = raw
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(NdTensor::from_vec(&dims, data))
+}
+
+/// Export a 2-D plane (`[H, W]` slice) as a binary PGM, min-max scaled.
+pub fn save_pgm(path: &Path, data: &[f64], h: usize, w: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(data.len() == h * w, "plane size mismatch");
+    let lo = data.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = data.iter().cloned().fold(f64::MIN, f64::max);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = data
+        .iter()
+        .map(|v| ((v - lo) * scale).round().clamp(0.0, 255.0) as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Tile a dictionary `[K, P, L0, L1]` into one PGM mosaic (channels
+/// averaged), `cols` atoms per row with 1-px separators.
+pub fn save_dict_mosaic(path: &Path, d: &NdTensor, cols: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(d.ndim() == 4, "mosaic wants [K, P, H, W] dims, got {:?}", d.dims());
+    let (k, p, ah, aw) = (d.dims()[0], d.dims()[1], d.dims()[2], d.dims()[3]);
+    let rows = k.div_ceil(cols);
+    let mh = rows * (ah + 1) + 1;
+    let mw = cols * (aw + 1) + 1;
+    let mut canvas = vec![0.0f64; mh * mw];
+    for ki in 0..k {
+        let (r, c) = (ki / cols, ki % cols);
+        let atom = d.slice0(ki);
+        // per-atom min-max normalization for display
+        let lo = atom.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = atom.iter().cloned().fold(f64::MIN, f64::max);
+        let scale = if hi > lo { 1.0 / (hi - lo) } else { 0.0 };
+        for i in 0..ah {
+            for j in 0..aw {
+                let mut v = 0.0;
+                for pi in 0..p {
+                    v += atom[pi * ah * aw + i * aw + j];
+                }
+                v /= p as f64;
+                canvas[(r * (ah + 1) + 1 + i) * mw + c * (aw + 1) + 1 + j] = (v - lo) * scale;
+            }
+        }
+    }
+    save_pgm(path, &canvas, mh, mw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dicodile_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let t = NdTensor::from_vec(&[3, 4, 5], rng.normal_vec(60));
+        let path = tmp("roundtrip.ndt");
+        save_tensor(&path, &t).unwrap();
+        let back = load_tensor(&path).unwrap();
+        assert!(t.allclose(&back, 0.0));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmp("garbage.ndt");
+        std::fs::write(&path, b"not a tensor").unwrap();
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn pgm_header() {
+        let path = tmp("img.pgm");
+        save_pgm(&path, &[0.0, 0.5, 1.0, 0.25], 2, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n2 2\n255\n".len() + 4);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mosaic_dims() {
+        let mut rng = Pcg64::seeded(2);
+        let d = NdTensor::from_vec(&[5, 1, 4, 4], rng.normal_vec(80));
+        let path = tmp("mosaic.pgm");
+        save_dict_mosaic(&path, &d, 3).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // 2 rows x 3 cols of 5x5 cells + border
+        let header = format!("P5\n{} {}\n255\n", 3 * 5 + 1, 2 * 5 + 1);
+        assert!(bytes.starts_with(header.as_bytes()));
+        std::fs::remove_file(path).ok();
+    }
+}

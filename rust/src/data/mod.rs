@@ -1,0 +1,10 @@
+//! Workload generators and I/O: the paper's synthetic model, the
+//! Hubble-like star-field and texture image substitutes, and simple
+//! tensor/PGM serialization.
+
+pub mod io;
+pub mod starfield;
+pub mod synthetic;
+pub mod texture;
+
+pub use synthetic::{SyntheticConfig, SyntheticWorkload};

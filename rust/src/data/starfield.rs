@@ -1,0 +1,168 @@
+//! Hubble-substitute star-field image generator.
+//!
+//! The paper learns patterns on the GOODS-South deep field
+//! (STScI-H-2016-39, 6000×3600). That image is not redistributable
+//! here, so this module synthesizes an image with the statistics that
+//! matter for CDL pattern discovery: a dark background, a power-law
+//! population of point sources convolved with a small PSF, a few
+//! extended elliptical "galaxies", and sensor noise. See DESIGN.md §3.
+
+use crate::tensor::NdTensor;
+use crate::util::rng::Pcg64;
+
+/// Star-field generation parameters.
+#[derive(Clone, Debug)]
+pub struct StarfieldConfig {
+    pub height: usize,
+    pub width: usize,
+    /// Point sources per 10^4 pixels.
+    pub star_density: f64,
+    /// Pareto index of the flux distribution (smaller = heavier tail).
+    pub flux_alpha: f64,
+    /// Gaussian PSF sigma in pixels.
+    pub psf_sigma: f64,
+    /// Number of extended sources (galaxies).
+    pub n_galaxies: usize,
+    /// Background noise std.
+    pub noise_std: f64,
+}
+
+impl Default for StarfieldConfig {
+    fn default() -> Self {
+        StarfieldConfig {
+            height: 600,
+            width: 900,
+            star_density: 8.0,
+            flux_alpha: 1.6,
+            psf_sigma: 1.2,
+            n_galaxies: 6,
+            noise_std: 0.01,
+        }
+    }
+}
+
+impl StarfieldConfig {
+    pub fn with_size(height: usize, width: usize) -> Self {
+        StarfieldConfig { height, width, ..Default::default() }
+    }
+
+    /// Generate the image as a `[1, H, W]` tensor (single luminance
+    /// channel, like the paper's grayscale Hubble crop).
+    pub fn generate(&self, seed: u64) -> NdTensor {
+        let (h, w) = (self.height, self.width);
+        let mut img = vec![0.0f64; h * w];
+        let mut rng = Pcg64::seeded(seed);
+
+        // -- point sources ---------------------------------------------------
+        let n_stars = ((h * w) as f64 / 1e4 * self.star_density).round() as usize;
+        // PSF footprint: +-3 sigma.
+        let r = (3.0 * self.psf_sigma).ceil() as i64;
+        for _ in 0..n_stars {
+            let cy = rng.uniform_in(0.0, h as f64);
+            let cx = rng.uniform_in(0.0, w as f64);
+            // Pareto flux: flux = (1 - u)^{-1/alpha}
+            let flux = (1.0 - rng.uniform()).powf(-1.0 / self.flux_alpha).min(500.0);
+            let s2 = 2.0 * self.psf_sigma * self.psf_sigma;
+            for dy in -r..=r {
+                let y = cy as i64 + dy;
+                if y < 0 || y >= h as i64 {
+                    continue;
+                }
+                for dx in -r..=r {
+                    let x = cx as i64 + dx;
+                    if x < 0 || x >= w as i64 {
+                        continue;
+                    }
+                    let ddy = y as f64 + 0.5 - cy;
+                    let ddx = x as f64 + 0.5 - cx;
+                    img[y as usize * w + x as usize] +=
+                        flux * (-(ddy * ddy + ddx * ddx) / s2).exp();
+                }
+            }
+        }
+
+        // -- extended sources (elliptical exponential profiles) --------------
+        for _ in 0..self.n_galaxies {
+            let cy = rng.uniform_in(0.1 * h as f64, 0.9 * h as f64);
+            let cx = rng.uniform_in(0.1 * w as f64, 0.9 * w as f64);
+            let scale = rng.uniform_in(4.0, 14.0);
+            let q = rng.uniform_in(0.4, 1.0); // axis ratio
+            let theta = rng.uniform_in(0.0, std::f64::consts::PI);
+            let amp = rng.uniform_in(2.0, 12.0);
+            let (ct, st) = (theta.cos(), theta.sin());
+            let rr = (5.0 * scale).ceil() as i64;
+            for dy in -rr..=rr {
+                let y = cy as i64 + dy;
+                if y < 0 || y >= h as i64 {
+                    continue;
+                }
+                for dx in -rr..=rr {
+                    let x = cx as i64 + dx;
+                    if x < 0 || x >= w as i64 {
+                        continue;
+                    }
+                    let ddy = y as f64 + 0.5 - cy;
+                    let ddx = x as f64 + 0.5 - cx;
+                    let u = ct * ddx + st * ddy;
+                    let v = (-st * ddx + ct * ddy) / q;
+                    let rad = (u * u + v * v).sqrt() / scale;
+                    img[y as usize * w + x as usize] += amp * (-rad).exp();
+                }
+            }
+        }
+
+        // -- noise + normalization -------------------------------------------
+        let peak = img.iter().cloned().fold(1e-12, f64::max);
+        for v in img.iter_mut() {
+            *v = *v / peak + self.noise_std * rng.normal();
+        }
+
+        NdTensor::from_vec(&[1, h, w], img)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_range() {
+        let img = StarfieldConfig::with_size(64, 96).generate(1);
+        assert_eq!(img.dims(), &[1, 64, 96]);
+        assert!(img.norm_inf() <= 1.5);
+    }
+
+    #[test]
+    fn image_is_sparse_bright() {
+        // Star fields are mostly dark: the median pixel is far below the max.
+        let img = StarfieldConfig::with_size(128, 128).generate(2);
+        let mut vals: Vec<f64> = img.data().to_vec();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = vals[vals.len() / 2].abs();
+        let max = vals[vals.len() - 1];
+        assert!(max > 20.0 * (median + 1e-3), "max={max} median={median}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = StarfieldConfig::with_size(32, 32).generate(7);
+        let b = StarfieldConfig::with_size(32, 32).generate(7);
+        assert!(a.allclose(&b, 0.0));
+    }
+
+    #[test]
+    fn contains_extended_structure() {
+        // With galaxies, spatial autocorrelation at small lags is high.
+        let cfg = StarfieldConfig { n_galaxies: 4, noise_std: 0.0, ..StarfieldConfig::with_size(96, 96) };
+        let img = cfg.generate(3);
+        let d = img.data();
+        let w = 96;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..95 * 96 {
+            num += d[i] * d[i + w];
+            den += d[i] * d[i];
+        }
+        assert!(num / den > 0.3, "autocorr {}", num / den);
+    }
+}

@@ -1,0 +1,153 @@
+//! Mandrill-substitute natural-texture image generator.
+//!
+//! Figures 5/6 of the paper run on the Mandrill test image — a dense,
+//! broadband natural image. This generator synthesizes a multi-octave
+//! value-noise texture with optional oriented striping (fur-like
+//! structure), matching the property those experiments exercise: dense
+//! activations across the whole domain so every worker has work and
+//! border interactions are frequent.
+
+use crate::tensor::NdTensor;
+use crate::util::rng::Pcg64;
+
+/// Texture generation parameters.
+#[derive(Clone, Debug)]
+pub struct TextureConfig {
+    pub height: usize,
+    pub width: usize,
+    /// Number of octaves of value noise.
+    pub octaves: usize,
+    /// Per-octave amplitude decay.
+    pub persistence: f64,
+    /// Number of color channels (the paper uses RGB; 1 or 3).
+    pub channels: usize,
+    /// Strength of the oriented striping component.
+    pub stripes: f64,
+}
+
+impl Default for TextureConfig {
+    fn default() -> Self {
+        TextureConfig {
+            height: 256,
+            width: 256,
+            octaves: 5,
+            persistence: 0.55,
+            channels: 1,
+            stripes: 0.3,
+        }
+    }
+}
+
+impl TextureConfig {
+    pub fn with_size(height: usize, width: usize) -> Self {
+        TextureConfig { height, width, ..Default::default() }
+    }
+
+    /// Generate a `[channels, H, W]` image in roughly `[-1, 1]`.
+    pub fn generate(&self, seed: u64) -> NdTensor {
+        let (h, w) = (self.height, self.width);
+        let mut out = vec![0.0f64; self.channels * h * w];
+        for c in 0..self.channels {
+            let mut rng = Pcg64::new(seed, c as u64 + 1);
+            let plane = &mut out[c * h * w..(c + 1) * h * w];
+            let mut amp = 1.0;
+            let mut cell = 32usize.min(h.min(w) / 2).max(2);
+            for _ in 0..self.octaves {
+                add_value_noise(plane, h, w, cell, amp, &mut rng);
+                amp *= self.persistence;
+                if cell > 2 {
+                    cell /= 2;
+                }
+            }
+            // Oriented stripes (different angle per channel).
+            if self.stripes > 0.0 {
+                let theta = rng.uniform_in(0.0, std::f64::consts::PI);
+                let freq = rng.uniform_in(0.15, 0.45);
+                let (ct, st) = (theta.cos(), theta.sin());
+                for i in 0..h {
+                    for j in 0..w {
+                        let u = ct * j as f64 + st * i as f64;
+                        plane[i * w + j] += self.stripes * (freq * u).sin();
+                    }
+                }
+            }
+            // normalize to zero mean, unit-ish range
+            let mean = plane.iter().sum::<f64>() / plane.len() as f64;
+            let mx = plane
+                .iter()
+                .map(|v| (v - mean).abs())
+                .fold(1e-12, f64::max);
+            for v in plane.iter_mut() {
+                *v = (*v - mean) / mx;
+            }
+        }
+        let mut dims = vec![self.channels];
+        dims.extend_from_slice(&[h, w]);
+        NdTensor::from_vec(&dims, out)
+    }
+}
+
+/// One octave of bilinear value noise on a `cell`-spaced lattice.
+fn add_value_noise(plane: &mut [f64], h: usize, w: usize, cell: usize, amp: f64, rng: &mut Pcg64) {
+    let gh = h / cell + 2;
+    let gw = w / cell + 2;
+    let grid: Vec<f64> = (0..gh * gw).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    for i in 0..h {
+        let gy = i / cell;
+        let fy = (i % cell) as f64 / cell as f64;
+        let sy = smooth(fy);
+        for j in 0..w {
+            let gx = j / cell;
+            let fx = (j % cell) as f64 / cell as f64;
+            let sx = smooth(fx);
+            let v00 = grid[gy * gw + gx];
+            let v01 = grid[gy * gw + gx + 1];
+            let v10 = grid[(gy + 1) * gw + gx];
+            let v11 = grid[(gy + 1) * gw + gx + 1];
+            let top = v00 + sx * (v01 - v00);
+            let bot = v10 + sx * (v11 - v10);
+            plane[i * w + j] += amp * (top + sy * (bot - top));
+        }
+    }
+}
+
+#[inline]
+fn smooth(t: f64) -> f64 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_channels() {
+        let img = TextureConfig { channels: 3, ..TextureConfig::with_size(32, 48) }.generate(1);
+        assert_eq!(img.dims(), &[3, 32, 48]);
+    }
+
+    #[test]
+    fn normalized_range() {
+        let img = TextureConfig::with_size(64, 64).generate(2);
+        assert!(img.norm_inf() <= 1.0 + 1e-9);
+        let mean: f64 = img.data().iter().sum::<f64>() / img.len() as f64;
+        assert!(mean.abs() < 0.05);
+    }
+
+    #[test]
+    fn dense_unlike_starfield() {
+        // Most pixels should carry signal (broadband texture).
+        let img = TextureConfig::with_size(64, 64).generate(3);
+        let big = img.data().iter().filter(|v| v.abs() > 0.05).count();
+        assert!(big > img.len() / 2, "{big}/{}", img.len());
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = TextureConfig::with_size(16, 16).generate(5);
+        let b = TextureConfig::with_size(16, 16).generate(5);
+        let c = TextureConfig::with_size(16, 16).generate(6);
+        assert!(a.allclose(&b, 0.0));
+        assert!(!a.allclose(&c, 1e-9));
+    }
+}

@@ -1,0 +1,110 @@
+//! Messages exchanged by the distributed solver.
+//!
+//! Workers talk to their grid neighbours (coordinate-update
+//! notifications, the only hot-path traffic) and to the coordinator
+//! (status transitions for the termination protocol). There is no
+//! central data server: the coordinator never sees beta or Z until the
+//! final gather, mirroring the paper's decentralized design.
+
+/// A coordinate update notification `(k0, u0, dZ)` (§4.1, Fig. 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdateMsg {
+    pub from: usize,
+    pub k: usize,
+    pub u: Vec<i64>,
+    pub dz: f64,
+}
+
+/// Worker -> worker traffic.
+#[derive(Clone, Debug)]
+pub enum WorkerMsg {
+    /// A neighbour changed a coordinate whose V-box reaches our window.
+    Update(UpdateMsg),
+    /// Coordinator: stop now and report results.
+    Stop,
+}
+
+/// Worker status transition, carrying message counters for the
+/// Safra-style termination detection: global convergence holds when
+/// every worker is idle and `sum(sent) == sum(received)` (no messages
+/// in flight).
+#[derive(Clone, Debug)]
+pub struct StatusMsg {
+    pub from: usize,
+    pub idle: bool,
+    pub sent: u64,
+    pub received: u64,
+    /// Worker believes it converged locally (vs hit its update cap).
+    pub converged: bool,
+    /// Divergence guard tripped.
+    pub diverged: bool,
+}
+
+/// Final per-worker report.
+#[derive(Clone, Debug)]
+pub struct DoneMsg {
+    pub from: usize,
+    /// Flat activation values over the worker's own cell `S_w`
+    /// (row-major over `[K, cell extents..]`).
+    pub z_cell: Vec<f64>,
+    pub stats: WorkerStats,
+}
+
+/// Worker -> coordinator traffic.
+#[derive(Clone, Debug)]
+pub enum CoordMsg {
+    Status(StatusMsg),
+    Done(DoneMsg),
+}
+
+/// Per-worker work counters.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    /// Selection iterations (segments visited).
+    pub iterations: u64,
+    /// Accepted coordinate updates.
+    pub updates: u64,
+    /// Candidates rejected by the soft-lock.
+    pub soft_locked: u64,
+    /// Update messages sent to neighbours.
+    pub msgs_sent: u64,
+    /// Update messages received.
+    pub msgs_received: u64,
+    /// Full sweeps over the local segments.
+    pub sweeps: u64,
+    /// Times the worker paused (went idle).
+    pub pauses: u64,
+    /// Abstract work units (coordinates scanned + beta entries touched):
+    /// the per-worker clock of the simulated-time model used for the
+    /// scaling figures (this testbed has a single physical core, so
+    /// parallel wall-clock cannot be measured directly — see DESIGN.md).
+    pub work: u64,
+}
+
+impl WorkerStats {
+    pub fn merge(&mut self, other: &WorkerStats) {
+        self.iterations += other.iterations;
+        self.updates += other.updates;
+        self.soft_locked += other.soft_locked;
+        self.msgs_sent += other.msgs_sent;
+        self.msgs_received += other.msgs_received;
+        self.sweeps += other.sweeps;
+        self.pauses += other.pauses;
+        self.work += other.work;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge() {
+        let mut a = WorkerStats { updates: 3, msgs_sent: 1, ..Default::default() };
+        let b = WorkerStats { updates: 4, soft_locked: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.updates, 7);
+        assert_eq!(a.soft_locked, 2);
+        assert_eq!(a.msgs_sent, 1);
+    }
+}

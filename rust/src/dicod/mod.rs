@@ -1,0 +1,12 @@
+//! DiCoDiLe-Z: the distributed, asynchronous convolutional sparse
+//! coder (§4.1 of the paper) and the DICOD baseline.
+
+pub mod config;
+pub mod coordinator;
+pub mod messages;
+pub mod partition;
+pub mod worker;
+
+pub use config::DicodConfig;
+pub use coordinator::{solve_distributed, DicodResult};
+pub use partition::{PartitionKind, WorkerGrid};

@@ -1,0 +1,397 @@
+//! Worker-grid partitioning of the activation domain (§4.1).
+//!
+//! The activation domain `Omega' = prod_i [0, T'_i)` is split into `W`
+//! contiguous sub-domains `S_w`: either along the first dimension only
+//! (the DICOD baseline's *line* partition) or on a d-dimensional *grid*
+//! (DiCoDiLe-Z). Each worker also maintains a halo of width `L_i - 1`
+//! around its cell — the `Theta`-extension `E_L(S_w)` on which beta and
+//! Z are kept up to date via neighbour notifications, and which the
+//! soft-lock rule (eq. 14) inspects.
+
+use crate::tensor::shape::Rect;
+
+/// How the domain is split across workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Split along the first spatial dimension only (as in DICOD).
+    Line,
+    /// Split along all spatial dimensions on a near-square grid.
+    Grid,
+}
+
+impl std::str::FromStr for PartitionKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "line" => Ok(PartitionKind::Line),
+            "grid" => Ok(PartitionKind::Grid),
+            other => Err(format!("unknown partition {other:?} (line|grid)")),
+        }
+    }
+}
+
+/// The worker grid: per-dimension worker counts and cell boundaries.
+#[derive(Clone, Debug)]
+pub struct WorkerGrid {
+    /// Activation spatial dims `T'..`.
+    pub zsp: Vec<usize>,
+    /// Atom spatial dims `L..` (halo width is `L_i - 1`).
+    pub ldims: Vec<usize>,
+    /// Workers per dimension `W_i` (`prod = W`).
+    pub wdims: Vec<usize>,
+    /// Per-dimension cell boundaries, `wdims[i] + 1` entries each.
+    pub bounds: Vec<Vec<i64>>,
+}
+
+impl WorkerGrid {
+    /// Build a grid of `w` workers over `zsp` with the given partition
+    /// kind. For `Grid`, `w` is factorized so that per-dimension cell
+    /// extents stay as balanced as possible (cells roughly similar in
+    /// units of atoms).
+    pub fn new(zsp: &[usize], ldims: &[usize], w: usize, kind: PartitionKind) -> Self {
+        assert!(w >= 1);
+        assert_eq!(zsp.len(), ldims.len());
+        let wdims = match kind {
+            PartitionKind::Line => {
+                let mut v = vec![1; zsp.len()];
+                v[0] = w;
+                v
+            }
+            PartitionKind::Grid => factorize_balanced(w, zsp),
+        };
+        for (i, (&wi, &ti)) in wdims.iter().zip(zsp).enumerate() {
+            assert!(
+                wi <= ti,
+                "more workers than coordinates along dim {i}: {wi} > {ti}"
+            );
+        }
+        let bounds = wdims
+            .iter()
+            .zip(zsp)
+            .map(|(&wi, &ti)| {
+                (0..=wi)
+                    .map(|j| ((j as f64) * (ti as f64) / (wi as f64)).round() as i64)
+                    .collect()
+            })
+            .collect();
+        WorkerGrid { zsp: zsp.to_vec(), ldims: ldims.to_vec(), wdims, bounds }
+    }
+
+    /// Total number of workers.
+    pub fn n_workers(&self) -> usize {
+        self.wdims.iter().product()
+    }
+
+    /// Grid index of worker `w` (row-major over `wdims`).
+    pub fn grid_index(&self, w: usize) -> Vec<usize> {
+        let mut rem = w;
+        let d = self.wdims.len();
+        let mut idx = vec![0usize; d];
+        for i in (0..d).rev() {
+            idx[i] = rem % self.wdims[i];
+            rem /= self.wdims[i];
+        }
+        idx
+    }
+
+    /// Worker rank from grid index.
+    pub fn rank_of(&self, idx: &[usize]) -> usize {
+        let mut r = 0;
+        for (x, n) in idx.iter().zip(&self.wdims) {
+            r = r * n + x;
+        }
+        r
+    }
+
+    /// The sub-domain `S_w` (global coords).
+    pub fn cell(&self, w: usize) -> Rect {
+        let idx = self.grid_index(w);
+        let lo: Vec<i64> = idx.iter().zip(&self.bounds).map(|(&i, b)| b[i]).collect();
+        let hi: Vec<i64> = idx.iter().zip(&self.bounds).map(|(&i, b)| b[i + 1]).collect();
+        Rect::new(lo, hi)
+    }
+
+    /// `S_w` extended by the halo (`L_i - 1` per side), clipped to the
+    /// domain: the window on which worker `w` maintains beta and Z.
+    pub fn extended_cell(&self, w: usize) -> Rect {
+        let margins: Vec<usize> = self.ldims.iter().map(|&l| l - 1).collect();
+        self.cell(w).dilate(&margins).intersect(&Rect::full(&self.zsp))
+    }
+
+    /// Worker owning a global coordinate.
+    pub fn owner_of(&self, u: &[i64]) -> usize {
+        let idx: Vec<usize> = u
+            .iter()
+            .zip(&self.bounds)
+            .map(|(x, b)| {
+                // last j with b[j] <= x
+                let mut lo = 0usize;
+                let mut hi = b.len() - 1;
+                while lo + 1 < hi {
+                    let mid = (lo + hi) / 2;
+                    if b[mid] <= *x {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo
+            })
+            .collect();
+        self.rank_of(&idx)
+    }
+
+    /// Ranks of all workers whose *extended* window this worker's
+    /// updates can reach: any `w'` with `cell(w')` within `2(L-1)` of
+    /// `cell(w)` (the paper's `B_2L` notification footprint). On a
+    /// regular grid this is the Moore neighbourhood as long as cells
+    /// are at least `L - 1` wide; smaller cells reach further, which
+    /// this computation handles by widening the search radius.
+    pub fn neighbors(&self, w: usize) -> Vec<usize> {
+        let me = self.cell(w);
+        let margins: Vec<usize> = self.ldims.iter().map(|&l| 2 * (l - 1)).collect();
+        let reach = me.dilate(&margins);
+        (0..self.n_workers())
+            .filter(|&w2| w2 != w && reach.overlaps(&self.cell(w2)))
+            .collect()
+    }
+
+    /// The update neighbourhood `V(u0) = prod [u0 - L + 1, u0 + L)`.
+    pub fn v_box(&self, u0: &[i64]) -> Rect {
+        Rect::new(
+            u0.iter().zip(&self.ldims).map(|(x, &l)| x - l as i64 + 1).collect(),
+            u0.iter().zip(&self.ldims).map(|(x, &l)| x + l as i64).collect(),
+        )
+    }
+
+    /// Is `u` in the inner border `B_L(S_w)` (within `L_i - 1` of the
+    /// cell boundary, on the inside — updates here can interfere with a
+    /// neighbour)? Domain edges (where there is no neighbour) do not
+    /// count as borders.
+    pub fn in_soft_border(&self, w: usize, u: &[i64]) -> bool {
+        let cell = self.cell(w);
+        for i in 0..u.len() {
+            let l = self.ldims[i] as i64;
+            if cell.lo[i] > 0 && u[i] < cell.lo[i] + l - 1 {
+                return true;
+            }
+            if cell.hi[i] < self.zsp[i] as i64 && u[i] > cell.hi[i] - l {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Factorize `w` into `dims.len()` factors proportional to `dims`
+/// (largest factors on the largest extents), so worker cells stay
+/// roughly cubic.
+fn factorize_balanced(w: usize, dims: &[usize]) -> Vec<usize> {
+    let d = dims.len();
+    if d == 1 {
+        return vec![w];
+    }
+    // Enumerate factorizations recursively, keep the one minimizing the
+    // max cell aspect ratio (cell extent per unit).
+    fn rec(
+        rem: usize,
+        dim_i: usize,
+        dims: &[usize],
+        cur: &mut Vec<usize>,
+        best: &mut (f64, Vec<usize>),
+    ) {
+        if dim_i == dims.len() - 1 {
+            cur.push(rem);
+            // score: max over dims of cell extent / min cell extent
+            let exts: Vec<f64> = dims
+                .iter()
+                .zip(cur.iter())
+                .map(|(&t, &wi)| t as f64 / wi as f64)
+                .collect();
+            let valid = dims.iter().zip(cur.iter()).all(|(&t, &wi)| wi <= t);
+            if valid {
+                let mx = exts.iter().cloned().fold(f64::MIN, f64::max);
+                let mn = exts.iter().cloned().fold(f64::MAX, f64::min);
+                let score = mx / mn;
+                if score < best.0 {
+                    *best = (score, cur.clone());
+                }
+            }
+            cur.pop();
+            return;
+        }
+        let mut f = 1;
+        while f * f <= rem || f <= rem {
+            if rem % f == 0 {
+                cur.push(f);
+                rec(rem / f, dim_i + 1, dims, cur, best);
+                cur.pop();
+            }
+            f += 1;
+            if f > rem {
+                break;
+            }
+        }
+    }
+    let mut best = (f64::MAX, vec![1; d]);
+    let mut cur = Vec::new();
+    rec(w, 0, dims, &mut cur, &mut best);
+    assert!(
+        best.0 < f64::MAX,
+        "no valid factorization of {w} workers over dims {dims:?}"
+    );
+    best.1
+}
+
+/// Decompose `ext \ core` into disjoint boxes (at most `2 d`).
+/// Used by the soft-lock check: the extension `E_L(S_w)` is exactly
+/// `extended_cell \ cell`.
+pub fn box_difference(ext: &Rect, core: &Rect) -> Vec<Rect> {
+    let mut out = Vec::new();
+    let mut inner = ext.clone();
+    for i in 0..ext.ndim() {
+        // slab below core along dim i
+        if inner.lo[i] < core.lo[i] {
+            let mut slab = inner.clone();
+            slab.hi[i] = core.lo[i].min(inner.hi[i]);
+            if !slab.is_empty() {
+                out.push(slab);
+            }
+        }
+        // slab above core along dim i
+        if inner.hi[i] > core.hi[i] {
+            let mut slab = inner.clone();
+            slab.lo[i] = core.hi[i].max(inner.lo[i]);
+            if !slab.is_empty() {
+                out.push(slab);
+            }
+        }
+        inner.lo[i] = inner.lo[i].max(core.lo[i]);
+        inner.hi[i] = inner.hi[i].min(core.hi[i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_partition_splits_first_dim() {
+        let g = WorkerGrid::new(&[100, 50], &[8, 8], 4, PartitionKind::Line);
+        assert_eq!(g.wdims, vec![4, 1]);
+        assert_eq!(g.cell(0), Rect::new(vec![0, 0], vec![25, 50]));
+        assert_eq!(g.cell(3), Rect::new(vec![75, 0], vec![100, 50]));
+    }
+
+    #[test]
+    fn grid_partition_balanced() {
+        let g = WorkerGrid::new(&[100, 100], &[8, 8], 4, PartitionKind::Grid);
+        assert_eq!(g.wdims, vec![2, 2]);
+        let g9 = WorkerGrid::new(&[90, 90], &[8, 8], 9, PartitionKind::Grid);
+        assert_eq!(g9.wdims, vec![3, 3]);
+    }
+
+    #[test]
+    fn grid_partition_rect_domain() {
+        // 200 x 50: 8 workers should go 4x2 not 2x4.
+        let g = WorkerGrid::new(&[200, 50], &[8, 8], 8, PartitionKind::Grid);
+        assert_eq!(g.wdims, vec![4, 2]);
+    }
+
+    #[test]
+    fn cells_tile_domain() {
+        let g = WorkerGrid::new(&[37, 23], &[4, 4], 6, PartitionKind::Grid);
+        let mut count = 0usize;
+        for w in 0..g.n_workers() {
+            count += g.cell(w).size();
+        }
+        assert_eq!(count, 37 * 23);
+        // disjoint: owner_of is consistent
+        for w in 0..g.n_workers() {
+            for pt in g.cell(w).iter() {
+                assert_eq!(g.owner_of(&pt), w);
+            }
+        }
+    }
+
+    #[test]
+    fn extended_cell_clips_to_domain() {
+        let g = WorkerGrid::new(&[40], &[5], 4, PartitionKind::Line);
+        assert_eq!(g.extended_cell(0), Rect::new(vec![0], vec![14]));
+        assert_eq!(g.extended_cell(1), Rect::new(vec![6], vec![24]));
+    }
+
+    #[test]
+    fn neighbors_moore_2d() {
+        let g = WorkerGrid::new(&[60, 60], &[4, 4], 9, PartitionKind::Grid);
+        // center worker (1,1) = rank 4 has 8 neighbours
+        let mut n = g.neighbors(4);
+        n.sort_unstable();
+        assert_eq!(n, vec![0, 1, 2, 3, 5, 6, 7, 8]);
+        // corner worker 0 has 3
+        assert_eq!(g.neighbors(0).len(), 3);
+    }
+
+    #[test]
+    fn soft_border_detection() {
+        let g = WorkerGrid::new(&[40], &[5], 2, PartitionKind::Line);
+        // worker 0: cell [0,20); interior boundary at 20; border = [16,20)
+        assert!(!g.in_soft_border(0, &[0])); // domain edge, no neighbour
+        assert!(!g.in_soft_border(0, &[15]));
+        assert!(g.in_soft_border(0, &[16]));
+        assert!(g.in_soft_border(0, &[19]));
+        // worker 1: cell [20,40); border = [20,24)
+        assert!(g.in_soft_border(1, &[20]));
+        assert!(g.in_soft_border(1, &[23]));
+        assert!(!g.in_soft_border(1, &[24]));
+        assert!(!g.in_soft_border(1, &[39])); // domain edge
+    }
+
+    #[test]
+    fn box_difference_frame() {
+        let ext = Rect::new(vec![0, 0], vec![10, 10]);
+        let core = Rect::new(vec![3, 3], vec![7, 7]);
+        let parts = box_difference(&ext, &core);
+        let total: usize = parts.iter().map(|r| r.size()).sum();
+        assert_eq!(total, 100 - 16);
+        // disjoint & exclude core
+        let mut seen = std::collections::HashSet::new();
+        for r in &parts {
+            for pt in r.iter() {
+                assert!(!core.contains(&pt));
+                assert!(seen.insert(pt));
+            }
+        }
+    }
+
+    #[test]
+    fn box_difference_core_outside() {
+        let ext = Rect::new(vec![0], vec![5]);
+        let core = Rect::new(vec![10], vec![12]);
+        let parts = box_difference(&ext, &core);
+        assert_eq!(parts.iter().map(|r| r.size()).sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn v_box_shape() {
+        let g = WorkerGrid::new(&[50, 50], &[3, 5], 4, PartitionKind::Grid);
+        let v = g.v_box(&[10, 20]);
+        assert_eq!(v, Rect::new(vec![8, 16], vec![13, 25]));
+    }
+
+    #[test]
+    fn owner_of_boundaries() {
+        let g = WorkerGrid::new(&[30], &[4], 3, PartitionKind::Line);
+        assert_eq!(g.owner_of(&[0]), 0);
+        assert_eq!(g.owner_of(&[9]), 0);
+        assert_eq!(g.owner_of(&[10]), 1);
+        assert_eq!(g.owner_of(&[29]), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_workers_panics() {
+        let _ = WorkerGrid::new(&[4], &[2], 8, PartitionKind::Line);
+    }
+}

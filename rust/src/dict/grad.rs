@@ -1,0 +1,242 @@
+//! Dictionary gradient and objective from the sufficient statistics.
+//!
+//! With `phi = Z~ * Z |_Phi` and `psi = Z~ * X |_Theta` (eq. 16):
+//!
+//! ```text
+//! grad_D F[k, p, l] = sum_k' sum_{tau in Phi} phi[k,k'][tau] D_k'[p, l - tau]  -  psi[k][p, l]
+//! F(Z, D) = 1/2 ||X||^2 - <D, psi> + 1/2 sum_{k,k',tau} phi[k,k'][tau] C[k',k][tau]
+//!           (+ lambda ||Z||_1)
+//! ```
+//!
+//! where `C[k',k][tau] = sum_{p,m} D_k[p, m + tau] D_k'[p, m]` is the
+//! atom cross-correlation tensor. Both are `O(K^2 P |Theta| (2L)^d)` —
+//! independent of the signal size.
+
+use crate::dict::phi_psi::DictStats;
+use crate::tensor::NdTensor;
+
+/// `grad_D F` as a `[K, P, L..]` tensor.
+pub fn grad_from_stats(stats: &DictStats, d: &NdTensor) -> NdTensor {
+    let (k_tot, p_tot, ldims) = crate::conv::split_dict(d.dims());
+    let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let cc_sp: usize = cc_dims.iter().product();
+    let atom_sp: usize = ldims.iter().product();
+    let mut grad = stats.psi.scale(-1.0);
+
+    match ldims.len() {
+        1 => {
+            let l = ldims[0] as i64;
+            for k in 0..k_tot {
+                for k1 in 0..k_tot {
+                    let phi_row = &stats.phi.data()[(k * k_tot + k1) * cc_sp..][..cc_sp];
+                    let dk1 = d.slice0(k1);
+                    for p in 0..p_tot {
+                        let dp = &dk1[p * atom_sp..(p + 1) * atom_sp];
+                        let out = &mut grad.data_mut()[(k * p_tot + p) * atom_sp..][..atom_sp];
+                        for li in 0..l {
+                            let mut acc = 0.0;
+                            // tau in [-L+1, L) with l - tau in [0, L)
+                            let tmin = (li - l + 1).max(1 - l);
+                            let tmax = (li + 1).min(l);
+                            for tau in tmin..tmax {
+                                acc += phi_row[(tau + l - 1) as usize]
+                                    * dp[(li - tau) as usize];
+                            }
+                            out[li as usize] += acc;
+                        }
+                    }
+                }
+            }
+        }
+        2 => {
+            let (l0, l1) = (ldims[0] as i64, ldims[1] as i64);
+            let cc_w = cc_dims[1];
+            let aw = ldims[1];
+            for k in 0..k_tot {
+                for k1 in 0..k_tot {
+                    let phi_row = &stats.phi.data()[(k * k_tot + k1) * cc_sp..][..cc_sp];
+                    let dk1 = d.slice0(k1);
+                    for p in 0..p_tot {
+                        let dp = &dk1[p * atom_sp..(p + 1) * atom_sp];
+                        let out = &mut grad.data_mut()[(k * p_tot + p) * atom_sp..][..atom_sp];
+                        for li in 0..l0 {
+                            for lj in 0..l1 {
+                                let mut acc = 0.0;
+                                let t0min = (li - l0 + 1).max(1 - l0);
+                                let t0max = (li + 1).min(l0);
+                                let t1min = (lj - l1 + 1).max(1 - l1);
+                                let t1max = (lj + 1).min(l1);
+                                for t0 in t0min..t0max {
+                                    let prow = ((t0 + l0 - 1) as usize) * cc_w;
+                                    let drow = ((li - t0) as usize) * aw;
+                                    for t1 in t1min..t1max {
+                                        acc += phi_row[prow + (t1 + l1 - 1) as usize]
+                                            * dp[drow + (lj - t1) as usize];
+                                    }
+                                }
+                                out[(li as usize) * aw + lj as usize] += acc;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        _ => {
+            // Generic d via Rect iteration.
+            use crate::tensor::shape::Rect;
+            let theta = Rect::full(ldims);
+            let phi_box = Rect::new(
+                ldims.iter().map(|&l| 1 - l as i64).collect(),
+                ldims.iter().map(|&l| l as i64).collect(),
+            );
+            let cc_str = crate::tensor::shape::strides_of(&cc_dims);
+            let a_str = crate::tensor::shape::strides_of(ldims);
+            for k in 0..k_tot {
+                for k1 in 0..k_tot {
+                    let phi_row = &stats.phi.data()[(k * k_tot + k1) * cc_sp..][..cc_sp];
+                    let dk1 = d.slice0(k1);
+                    for p in 0..p_tot {
+                        let dp = &dk1[p * atom_sp..(p + 1) * atom_sp];
+                        let out = &mut grad.data_mut()[(k * p_tot + p) * atom_sp..][..atom_sp];
+                        for l in theta.iter() {
+                            let mut acc = 0.0;
+                            for tau in phi_box.iter() {
+                                let idx: Vec<i64> =
+                                    l.iter().zip(&tau).map(|(a, b)| a - b).collect();
+                                if idx.iter().zip(ldims).any(|(x, &n)| *x < 0 || *x >= n as i64) {
+                                    continue;
+                                }
+                                let poff: usize = tau
+                                    .iter()
+                                    .zip(ldims)
+                                    .zip(&cc_str)
+                                    .map(|((t, &n), s)| (t + n as i64 - 1) as usize * s)
+                                    .sum();
+                                let doff: usize =
+                                    idx.iter().zip(&a_str).map(|(x, s)| *x as usize * s).sum();
+                                acc += phi_row[poff] * dp[doff];
+                            }
+                            let ooff: usize =
+                                l.iter().zip(&a_str).map(|(x, s)| *x as usize * s).sum();
+                            out[ooff] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    grad
+}
+
+/// Objective value from the statistics (includes the `lambda ||Z||_1`
+/// term so it matches `CscProblem::cost` exactly).
+pub fn cost_from_stats(stats: &DictStats, d: &NdTensor, lambda: f64) -> f64 {
+    let dtd = crate::conv::compute_dtd(d);
+    let quad = stats.phi.dot(&dtd_transposed(&dtd));
+    0.5 * stats.x_norm_sq - d.dot(&stats.psi) + 0.5 * quad + lambda * stats.z_l1
+}
+
+/// `C[k,k'][tau] -> C[k',k][tau]` (the contraction in `cost_from_stats`
+/// pairs `phi[k,k']` with `dtd[k',k]`).
+fn dtd_transposed(dtd: &NdTensor) -> NdTensor {
+    let k = dtd.dims()[0];
+    let cc_sp: usize = dtd.dims()[2..].iter().product();
+    let mut out = NdTensor::zeros(dtd.dims());
+    for k0 in 0..k {
+        for k1 in 0..k {
+            let src = &dtd.data()[(k1 * k + k0) * cc_sp..][..cc_sp];
+            out.data_mut()[(k0 * k + k1) * cc_sp..][..cc_sp].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csc::problem::CscProblem;
+    use crate::dict::phi_psi::compute_stats;
+    use crate::util::rng::Pcg64;
+
+    fn setup(seed: u64, two_d: bool) -> (NdTensor, NdTensor, NdTensor, Vec<usize>) {
+        let mut rng = Pcg64::seeded(seed);
+        if two_d {
+            let z = NdTensor::from_vec(&[2, 10, 9], rng.bernoulli_gaussian_vec(180, 0.15, 0.0, 2.0));
+            let x = NdTensor::from_vec(&[2, 13, 12], rng.normal_vec(312));
+            let d = NdTensor::from_vec(&[2, 2, 4, 4], rng.normal_vec(64));
+            (z, x, d, vec![4, 4])
+        } else {
+            let z = NdTensor::from_vec(&[3, 40], rng.bernoulli_gaussian_vec(120, 0.15, 0.0, 2.0));
+            let x = NdTensor::from_vec(&[2, 45], rng.normal_vec(90));
+            let d = NdTensor::from_vec(&[3, 2, 6], rng.normal_vec(36));
+            (z, x, d, vec![6])
+        }
+    }
+
+    #[test]
+    fn cost_from_stats_matches_direct() {
+        for two_d in [false, true] {
+            let (z, x, d, l) = setup(1, two_d);
+            let stats = compute_stats(&z, &x, &l);
+            let lambda = 0.3;
+            let direct = {
+                let p = CscProblem::new(x.clone(), d.clone(), lambda);
+                p.cost(&z)
+            };
+            let from_stats = cost_from_stats(&stats, &d, lambda);
+            assert!(
+                (direct - from_stats).abs() < 1e-8 * (1.0 + direct.abs()),
+                "2d={two_d}: {direct} vs {from_stats}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        for two_d in [false, true] {
+            let (z, x, d, l) = setup(2, two_d);
+            let stats = compute_stats(&z, &x, &l);
+            let grad = grad_from_stats(&stats, &d);
+            let f0 = cost_from_stats(&stats, &d, 1.0);
+            let eps = 1e-6;
+            let mut rng = Pcg64::seeded(3);
+            for _ in 0..12 {
+                let i = rng.below(d.len());
+                let mut dp = d.clone();
+                dp.data_mut()[i] += eps;
+                let f1 = cost_from_stats(&stats, &dp, 1.0);
+                let fd = (f1 - f0) / eps;
+                assert!(
+                    (fd - grad.get(i)).abs() < 1e-3 * (1.0 + fd.abs()),
+                    "2d={two_d} coord {i}: fd {fd} vs grad {}",
+                    grad.get(i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_convolutional_form() {
+        // grad = Z~ * (Z*D - X) restricted to Theta == psi-form identity.
+        let (z, x, d, l) = setup(4, false);
+        let stats = compute_stats(&z, &x, &l);
+        let grad = grad_from_stats(&stats, &d);
+        let recon = crate::conv::reconstruct(&z, &d);
+        let direct = crate::conv::compute_psi(&z, &recon.sub(&x), &l);
+        assert!(grad.allclose(&direct, 1e-8));
+    }
+
+    #[test]
+    fn grad_zero_at_least_squares_solution_direction() {
+        // <grad, D> relates to the directional derivative; at D the
+        // derivative along -grad must be non-positive.
+        let (z, x, d, l) = setup(5, false);
+        let stats = compute_stats(&z, &x, &l);
+        let grad = grad_from_stats(&stats, &d);
+        let f0 = cost_from_stats(&stats, &d, 1.0);
+        let step = 1e-4 / (1.0 + grad.norm2());
+        let d1 = d.sub(&grad.scale(step));
+        let f1 = cost_from_stats(&stats, &d1, 1.0);
+        assert!(f1 <= f0);
+    }
+}

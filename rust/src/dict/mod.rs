@@ -1,0 +1,11 @@
+//! Dictionary update: sufficient statistics (map-reduce over the worker
+//! grid), gradients/objective from the statistics, and projected
+//! gradient descent with Armijo line search (§4.2).
+
+pub mod grad;
+pub mod pgd;
+pub mod phi_psi;
+
+pub use grad::{cost_from_stats, grad_from_stats};
+pub use pgd::{update_dict, PgdConfig, PgdResult};
+pub use phi_psi::{compute_stats, compute_stats_parallel, DictStats};

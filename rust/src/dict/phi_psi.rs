@@ -1,0 +1,222 @@
+//! Sufficient statistics for the dictionary update (§4.2, eq. 16–17):
+//!
+//! ```text
+//! phi[k,k'][tau] = sum_u Z_k[u] Z_k'[u + tau]   tau in Phi = [-L+1, L)
+//! psi[k][p, l]   = sum_u Z_k[u] X[p, u + l]     l   in Theta = [0, L)
+//! ```
+//!
+//! Given `(phi, psi)`, both the gradient and the value of the
+//! dictionary objective are computable in `O(K^2 P |Theta|^2)` —
+//! independent of the signal size. The map-reduce version splits the
+//! sums over worker cells exactly as the paper distributes them over
+//! the CSC worker grid.
+
+use crate::conv;
+use crate::dicod::partition::{PartitionKind, WorkerGrid};
+use crate::tensor::shape::Rect;
+use crate::tensor::NdTensor;
+
+/// The pair of sufficient statistics.
+#[derive(Clone, Debug)]
+pub struct DictStats {
+    /// `[K, K, (2L-1)..]`.
+    pub phi: NdTensor,
+    /// `[K, P, L..]`.
+    pub psi: NdTensor,
+    /// `||X||_2^2` (completes the objective).
+    pub x_norm_sq: f64,
+    /// `||Z||_1` (completes the objective).
+    pub z_l1: f64,
+}
+
+/// Sequential computation of `(phi, psi)`.
+pub fn compute_stats(z: &NdTensor, x: &NdTensor, ldims: &[usize]) -> DictStats {
+    DictStats {
+        phi: conv::compute_phi(z, ldims),
+        psi: conv::compute_psi(z, x, ldims),
+        x_norm_sq: x.norm_sq(),
+        z_l1: z.norm1(),
+    }
+}
+
+/// Map-reduce computation over `n_workers` threads: each worker
+/// computes the partial sums restricted to its cell `S_w` (eq. 17) and
+/// the partials are reduced by summation.
+pub fn compute_stats_parallel(
+    z: &NdTensor,
+    x: &NdTensor,
+    ldims: &[usize],
+    n_workers: usize,
+) -> DictStats {
+    let zsp: Vec<usize> = z.dims()[1..].to_vec();
+    let w = n_workers
+        .min(zsp[0]) // at least 1 row per worker
+        .max(1);
+    // Post-CSC activations are very sparse; the sequential sparse
+    // nonzero-pair path (conv::compute_phi/psi) beats the dense
+    // map-reduce by an order of magnitude there, so prefer it. The
+    // dense map-reduce remains the multi-core path for dense Z.
+    let density = z.nnz() as f64 / z.len().max(1) as f64;
+    if w == 1 || density < 0.05 {
+        return compute_stats(z, x, ldims);
+    }
+    let grid = WorkerGrid::new(&zsp, ldims, w, PartitionKind::Grid);
+    let mut partials: Vec<Option<(NdTensor, NdTensor)>> = vec![None; w];
+    std::thread::scope(|scope| {
+        for (rank, slot) in partials.iter_mut().enumerate() {
+            let grid = &grid;
+            scope.spawn(move || {
+                *slot = Some(local_stats(z, x, ldims, grid, rank));
+            });
+        }
+    });
+    let mut it = partials.into_iter().map(|p| p.unwrap());
+    let (mut phi, mut psi) = it.next().unwrap();
+    for (p2, s2) in it {
+        phi.add_assign(&p2);
+        psi.add_assign(&s2);
+    }
+    DictStats { phi, psi, x_norm_sq: x.norm_sq(), z_l1: z.norm1() }
+}
+
+/// Partial `(phi^w, psi^w)` with the outer sum restricted to `S_w`.
+fn local_stats(
+    z: &NdTensor,
+    x: &NdTensor,
+    ldims: &[usize],
+    grid: &WorkerGrid,
+    rank: usize,
+) -> (NdTensor, NdTensor) {
+    let k_tot = z.dims()[0];
+    let p_tot = x.dims()[0];
+    let zsp: Vec<usize> = z.dims()[1..].to_vec();
+    let tdims: Vec<usize> = x.dims()[1..].to_vec();
+    let cell = grid.cell(rank);
+    let ext = grid.extended_cell(rank);
+    let cell_ext = cell.extents();
+    let ext_ext = ext.extents();
+
+    // Copy the cell slice of each Z_k and the extended slice used as
+    // the correlation partner.
+    let copy_window = |src: &[f64], sdims: &[usize], win: &Rect| -> Vec<f64> {
+        let str_ = crate::tensor::shape::strides_of(sdims);
+        let mut out = Vec::with_capacity(win.size());
+        for pt in win.iter() {
+            let off: usize = pt.iter().zip(&str_).map(|(x, s)| *x as usize * s).sum();
+            out.push(src[off]);
+        }
+        out
+    };
+
+    let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let cc_sp: usize = cc_dims.iter().product();
+    let mut phi_dims = vec![k_tot, k_tot];
+    phi_dims.extend_from_slice(&cc_dims);
+    let mut phi = NdTensor::zeros(&phi_dims);
+
+    // delta window for phi: tau in [-L+1, L), shifted by (cell.lo - ext.lo).
+    let shift: Vec<i64> = cell.lo.iter().zip(&ext.lo).map(|(c, e)| c - e).collect();
+    let lo: Vec<i64> = ldims
+        .iter()
+        .zip(&shift)
+        .map(|(&l, s)| 1 - l as i64 + s)
+        .collect();
+    let hi: Vec<i64> = ldims.iter().zip(&shift).map(|(&l, s)| l as i64 + s).collect();
+
+    let cells: Vec<Vec<f64>> = (0..k_tot)
+        .map(|k| copy_window(z.slice0(k), &zsp, &cell))
+        .collect();
+    let exts: Vec<Vec<f64>> = (0..k_tot)
+        .map(|k| copy_window(z.slice0(k), &zsp, &ext))
+        .collect();
+
+    for k0 in 0..k_tot {
+        for k1 in 0..k_tot {
+            let (cc, _) = conv::direct::cross_corr_range(
+                &cells[k0], &cell_ext, &exts[k1], &ext_ext, &lo, &hi,
+            );
+            let base = (k0 * k_tot + k1) * cc_sp;
+            for (o, v) in phi.data_mut()[base..base + cc_sp].iter_mut().zip(&cc) {
+                *o += v;
+            }
+        }
+    }
+
+    // psi: partner window of X is [cell.lo, cell.hi + L - 1) — always
+    // inside the observation domain.
+    let xwin = Rect::new(
+        cell.lo.clone(),
+        cell.hi.iter().zip(ldims).map(|(h, &l)| h + l as i64 - 1).collect(),
+    );
+    let xwin_ext = xwin.extents();
+    let atom_sp: usize = ldims.iter().product();
+    let mut psi_dims = vec![k_tot, p_tot];
+    psi_dims.extend_from_slice(ldims);
+    let mut psi = NdTensor::zeros(&psi_dims);
+    let plo: Vec<i64> = ldims.iter().map(|_| 0).collect();
+    let phi_hi: Vec<i64> = ldims.iter().map(|&l| l as i64).collect();
+    for p in 0..p_tot {
+        let xw = copy_window(x.slice0(p), &tdims, &xwin);
+        for (k, zc) in cells.iter().enumerate() {
+            let (cc, _) = conv::direct::cross_corr_range(
+                zc, &cell_ext, &xw, &xwin_ext, &plo, &phi_hi,
+            );
+            let base = (k * p_tot + p) * atom_sp;
+            for (o, v) in psi.data_mut()[base..base + atom_sp].iter_mut().zip(&cc) {
+                *o += v;
+            }
+        }
+    }
+
+    (phi, psi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn workload_1d(seed: u64) -> (NdTensor, NdTensor, Vec<usize>) {
+        let mut rng = Pcg64::seeded(seed);
+        let z = NdTensor::from_vec(&[3, 50], rng.bernoulli_gaussian_vec(150, 0.1, 0.0, 3.0));
+        let x = NdTensor::from_vec(&[2, 57], rng.normal_vec(114));
+        (z, x, vec![8])
+    }
+
+    fn workload_2d(seed: u64) -> (NdTensor, NdTensor, Vec<usize>) {
+        let mut rng = Pcg64::seeded(seed);
+        let z = NdTensor::from_vec(&[2, 20, 18], rng.bernoulli_gaussian_vec(720, 0.1, 0.0, 3.0));
+        let x = NdTensor::from_vec(&[1, 24, 22], rng.normal_vec(528));
+        (z, x, vec![5, 5])
+    }
+
+    #[test]
+    fn parallel_matches_sequential_1d() {
+        let (z, x, l) = workload_1d(1);
+        let seq = compute_stats(&z, &x, &l);
+        for w in [2usize, 3, 5] {
+            let par = compute_stats_parallel(&z, &x, &l, w);
+            assert!(par.phi.allclose(&seq.phi, 1e-10), "phi mismatch W={w}");
+            assert!(par.psi.allclose(&seq.psi, 1e-10), "psi mismatch W={w}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_2d() {
+        let (z, x, l) = workload_2d(2);
+        let seq = compute_stats(&z, &x, &l);
+        for w in [2usize, 4, 6] {
+            let par = compute_stats_parallel(&z, &x, &l, w);
+            assert!(par.phi.allclose(&seq.phi, 1e-10), "phi mismatch W={w}");
+            assert!(par.psi.allclose(&seq.psi, 1e-10), "psi mismatch W={w}");
+        }
+    }
+
+    #[test]
+    fn stats_scalars() {
+        let (z, x, l) = workload_1d(3);
+        let s = compute_stats(&z, &x, &l);
+        assert!((s.x_norm_sq - x.norm_sq()).abs() < 1e-12);
+        assert!((s.z_l1 - z.norm1()).abs() < 1e-12);
+    }
+}

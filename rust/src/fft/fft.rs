@@ -1,0 +1,289 @@
+//! FFT substrate: iterative radix-2 Cooley–Tukey plus Bluestein's
+//! algorithm for arbitrary lengths, and an n-dimensional transform built
+//! on the 1-D kernels.
+//!
+//! Used by `conv::fftconv` (large-kernel convolutions, the dictionary
+//! update statistics) and by the Consensus-ADMM baseline, which solves
+//! its linear systems in the Fourier domain (Skau & Wohlberg 2018).
+
+use super::complex::C64;
+
+/// In-place forward FFT of a power-of-two-length buffer.
+fn fft_pow2(buf: &mut [C64], inverse: bool) {
+    let n = buf.len();
+    debug_assert!(n.is_power_of_two());
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::cis(ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::ONE;
+            for k in 0..len / 2 {
+                let u = buf[i + k];
+                let v = buf[i + k + len / 2] * w;
+                buf[i + k] = u + v;
+                buf[i + k + len / 2] = u - v;
+                w = w * wlen;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Bluestein's chirp-z transform: FFT of arbitrary length via a
+/// power-of-two convolution.
+fn fft_bluestein(buf: &mut [C64], inverse: bool) {
+    let n = buf.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // chirp[k] = exp(sign * i * pi * k^2 / n)
+    let mut chirp = vec![C64::ZERO; n];
+    for k in 0..n {
+        // k^2 mod 2n avoids precision loss for large k.
+        let k2 = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+        chirp[k] = C64::cis(sign * std::f64::consts::PI * k2 / n as f64);
+    }
+    let m = (2 * n - 1).next_power_of_two();
+    let mut a = vec![C64::ZERO; m];
+    let mut b = vec![C64::ZERO; m];
+    for k in 0..n {
+        a[k] = buf[k] * chirp[k];
+        b[k] = chirp[k].conj();
+    }
+    for k in 1..n {
+        b[m - k] = chirp[k].conj();
+    }
+    fft_pow2(&mut a, false);
+    fft_pow2(&mut b, false);
+    for k in 0..m {
+        a[k] = a[k] * b[k];
+    }
+    fft_pow2(&mut a, true);
+    let scale = 1.0 / m as f64;
+    for k in 0..n {
+        buf[k] = a[k].scale(scale) * chirp[k];
+    }
+}
+
+/// In-place forward DFT (any length). No normalization.
+pub fn fft(buf: &mut [C64]) {
+    if buf.len().is_power_of_two() {
+        fft_pow2(buf, false);
+    } else {
+        fft_bluestein(buf, false);
+    }
+}
+
+/// In-place inverse DFT (any length), normalized by 1/n.
+pub fn ifft(buf: &mut [C64]) {
+    let n = buf.len();
+    if n == 0 {
+        return;
+    }
+    if n.is_power_of_two() {
+        fft_pow2(buf, true);
+    } else {
+        fft_bluestein(buf, true);
+    }
+    let s = 1.0 / n as f64;
+    for x in buf.iter_mut() {
+        *x = x.scale(s);
+    }
+}
+
+/// Forward DFT of a real signal; returns the full complex spectrum.
+pub fn fft_real(signal: &[f64]) -> Vec<C64> {
+    let mut buf: Vec<C64> = signal.iter().map(|&x| C64::from_re(x)).collect();
+    fft(&mut buf);
+    buf
+}
+
+/// Inverse DFT, returning only real parts (caller guarantees the input
+/// spectrum is conjugate-symmetric).
+pub fn ifft_real(spectrum: &[C64]) -> Vec<f64> {
+    let mut buf = spectrum.to_vec();
+    ifft(&mut buf);
+    buf.into_iter().map(|c| c.re).collect()
+}
+
+/// n-dimensional FFT over a row-major buffer with `dims`, in place.
+pub fn fftn(buf: &mut [C64], dims: &[usize]) {
+    transform_nd(buf, dims, fft);
+}
+
+/// n-dimensional inverse FFT over a row-major buffer with `dims`, in place.
+pub fn ifftn(buf: &mut [C64], dims: &[usize]) {
+    transform_nd(buf, dims, ifft);
+}
+
+fn transform_nd(buf: &mut [C64], dims: &[usize], f1d: fn(&mut [C64])) {
+    let n: usize = dims.iter().product();
+    assert_eq!(buf.len(), n);
+    if n == 0 {
+        return;
+    }
+    let d = dims.len();
+    let mut scratch = Vec::new();
+    for axis in 0..d {
+        let len = dims[axis];
+        if len == 1 {
+            continue;
+        }
+        let stride: usize = dims[axis + 1..].iter().product();
+        let outer: usize = dims[..axis].iter().product();
+        scratch.resize(len, C64::ZERO);
+        for o in 0..outer {
+            for s in 0..stride {
+                let base = o * len * stride + s;
+                for k in 0..len {
+                    scratch[k] = buf[base + k * stride];
+                }
+                f1d(&mut scratch);
+                for k in 0..len {
+                    buf[base + k * stride] = scratch[k];
+                }
+            }
+        }
+    }
+}
+
+/// Naive O(n^2) DFT used as a test oracle.
+#[cfg(test)]
+pub fn dft_naive(signal: &[C64]) -> Vec<C64> {
+    let n = signal.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = C64::ZERO;
+            for (t, &x) in signal.iter().enumerate() {
+                acc += x * C64::cis(-2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn close(a: &[C64], b: &[C64], tol: f64) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (*x - *y).abs() < tol)
+    }
+
+    #[test]
+    fn matches_naive_dft_pow2() {
+        for n in [1usize, 2, 4, 8, 16, 64] {
+            let sig = rand_signal(n, n as u64);
+            let mut got = sig.clone();
+            fft(&mut got);
+            assert!(close(&got, &dft_naive(&sig), 1e-9), "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft_arbitrary() {
+        for n in [3usize, 5, 6, 7, 12, 15, 100, 250] {
+            let sig = rand_signal(n, n as u64);
+            let mut got = sig.clone();
+            fft(&mut got);
+            assert!(close(&got, &dft_naive(&sig), 1e-8), "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for n in [1usize, 2, 7, 16, 30, 125] {
+            let sig = rand_signal(n, 7 + n as u64);
+            let mut buf = sig.clone();
+            fft(&mut buf);
+            ifft(&mut buf);
+            assert!(close(&buf, &sig, 1e-9), "n={n}");
+        }
+    }
+
+    #[test]
+    fn real_transform_conjugate_symmetry() {
+        let sig: Vec<f64> = (0..16).map(|x| (x as f64).sin()).collect();
+        let spec = fft_real(&sig);
+        for k in 1..16 {
+            let a = spec[k];
+            let b = spec[16 - k].conj();
+            assert!((a - b).abs() < 1e-9);
+        }
+        let back = ifft_real(&spec);
+        for (x, y) in sig.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fftn_roundtrip_2d() {
+        let dims = [6usize, 10];
+        let sig = rand_signal(60, 99);
+        let mut buf = sig.clone();
+        fftn(&mut buf, &dims);
+        ifftn(&mut buf, &dims);
+        assert!(close(&buf, &sig, 1e-9));
+    }
+
+    #[test]
+    fn fftn_separable_vs_direct_2d_dft() {
+        // 2-D DFT oracle by row/col naive DFTs.
+        let dims = [4usize, 6];
+        let sig = rand_signal(24, 5);
+        let mut got = sig.clone();
+        fftn(&mut got, &dims);
+        // rows then cols with the naive oracle
+        let mut oracle = sig.clone();
+        for r in 0..4 {
+            let row: Vec<C64> = (0..6).map(|c| oracle[r * 6 + c]).collect();
+            let t = dft_naive(&row);
+            for c in 0..6 {
+                oracle[r * 6 + c] = t[c];
+            }
+        }
+        for c in 0..6 {
+            let col: Vec<C64> = (0..4).map(|r| oracle[r * 6 + c]).collect();
+            let t = dft_naive(&col);
+            for r in 0..4 {
+                oracle[r * 6 + c] = t[r];
+            }
+        }
+        assert!(close(&got, &oracle, 1e-9));
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let sig = rand_signal(128, 3);
+        let mut spec = sig.clone();
+        fft(&mut spec);
+        let e_time: f64 = sig.iter().map(|c| c.norm_sq()).sum();
+        let e_freq: f64 = spec.iter().map(|c| c.norm_sq()).sum::<f64>() / 128.0;
+        assert!((e_time - e_freq).abs() / e_time < 1e-10);
+    }
+}

@@ -1,0 +1,7 @@
+//! FFT substrate (complex arithmetic + 1-D/n-D transforms).
+
+pub mod complex;
+#[allow(clippy::module_inception)]
+pub mod fft;
+
+pub use complex::C64;

@@ -1,0 +1,49 @@
+//! # DiCoDiLe — Distributed Convolutional Dictionary Learning
+//!
+//! Rust implementation of Moreau & Gramfort (2019): convolutional
+//! dictionary learning with a distributed, asynchronous, locally-greedy
+//! coordinate-descent sparse coder (DiCoDiLe-Z) and sufficient-statistics
+//! dictionary updates, plus the baselines the paper evaluates against
+//! (DICOD, greedy/randomized CD, FISTA, Consensus-ADMM).
+//!
+//! Architecture (see DESIGN.md): this crate is the Layer-3 coordinator;
+//! batch-heavy algebra can be offloaded to AOT-compiled JAX/Pallas
+//! artifacts executed through the PJRT CPU client (`runtime`), with
+//! native fallbacks for every operation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dicodile::prelude::*;
+//!
+//! // Generate a synthetic 1-D workload and learn a dictionary.
+//! let workload = SyntheticConfig::signal_1d(2000, 5, 32).generate(42);
+//! let cfg = CdlConfig { n_atoms: 5, atom_dims: vec![32], ..Default::default() };
+//! let result = learn_dictionary(&workload.x, &cfg).unwrap();
+//! println!("final cost {}", result.trace.last().unwrap().cost);
+//! ```
+
+pub mod bench;
+pub mod conv;
+pub mod csc;
+pub mod data;
+pub mod dicod;
+pub mod dict;
+pub mod cdl;
+pub mod admm;
+pub mod fft;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for the examples and CLI.
+pub mod prelude {
+    pub use crate::cdl::driver::{learn_dictionary, CdlConfig, CdlResult};
+    pub use crate::csc::encode::{sparse_encode, EncodeConfig};
+    pub use crate::csc::problem::CscProblem;
+    pub use crate::csc::select::Strategy;
+    pub use crate::data::synthetic::SyntheticConfig;
+    pub use crate::dicod::config::{DicodConfig, PartitionKind};
+    pub use crate::tensor::NdTensor;
+    pub use crate::util::rng::Pcg64;
+}

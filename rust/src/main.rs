@@ -1,0 +1,228 @@
+//! `dicodile` — command-line launcher for the DiCoDiLe system.
+//!
+//! Subcommands:
+//!   csc        sparse-code a (generated) workload with a chosen solver
+//!   learn      full CDL on a synthetic / starfield / texture workload
+//!   info       print artifact manifest + build information
+//!   gen        generate a workload image and save it (.ndt / .pgm)
+//!
+//! Run `dicodile <subcommand> --help` for options.
+
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::cdl::init::InitStrategy;
+use dicodile::cdl::report;
+use dicodile::csc::encode::{encode_problem, EncodeConfig, Solver};
+use dicodile::csc::problem::CscProblem;
+use dicodile::csc::select::Strategy;
+use dicodile::data::io;
+use dicodile::data::starfield::StarfieldConfig;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::data::texture::TextureConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::runtime::Manifest;
+use dicodile::tensor::NdTensor;
+use dicodile::util::cli::Parser;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let sub = args.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = args.collect();
+    let code = match sub.as_str() {
+        "csc" => cmd_csc(rest),
+        "learn" => cmd_learn(rest),
+        "info" => cmd_info(rest),
+        "gen" => cmd_gen(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "dicodile — Distributed Convolutional Dictionary Learning\n\n\
+         USAGE: dicodile <csc|learn|info|gen> [options]\n\n\
+         csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod)\n\
+         learn  learn a dictionary (workloads: synthetic, starfield, texture)\n\
+         info   show artifact manifest and build info\n\
+         gen    generate a workload and save it to disk"
+    );
+}
+
+fn workload_tensor(kind: &str, size: usize, seed: u64) -> NdTensor {
+    match kind {
+        "starfield" => StarfieldConfig::with_size(size, size * 3 / 2).generate(seed),
+        "texture" => TextureConfig::with_size(size, size).generate(seed),
+        "synthetic" => SyntheticConfig::signal_1d(size * size, 5, 32).generate(seed).x,
+        other => {
+            eprintln!("unknown workload {other:?} (synthetic|starfield|texture)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_csc(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile csc", "sparse-code a synthetic workload")
+        .opt("solver", Some("lgcd"), "lgcd|gcd|rcd|fista|dicodile|dicod")
+        .opt("t", Some("10000"), "signal length (1-D)")
+        .opt("k", Some("10"), "number of atoms")
+        .opt("l", Some("64"), "atom length")
+        .opt("workers", Some("4"), "workers for distributed solvers")
+        .opt("reg", Some("0.1"), "lambda as a fraction of lambda_max")
+        .opt("tol", Some("1e-4"), "stopping tolerance")
+        .opt("seed", Some("0"), "rng seed");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let (t, k, l) = (a.get_usize("t"), a.get_usize("k"), a.get_usize("l"));
+    let w = SyntheticConfig::paper_1d(t, k, l).generate(a.get_u64("seed"));
+    let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), a.get_f64("reg"));
+    let solver = match a.get_str("solver").as_str() {
+        "lgcd" => Solver::Sequential(Strategy::LocallyGreedy),
+        "gcd" => Solver::Sequential(Strategy::Greedy),
+        "rcd" => Solver::Sequential(Strategy::Randomized),
+        "fista" => Solver::Fista,
+        "dicodile" => Solver::Distributed(DicodConfig::dicodile(a.get_usize("workers"))),
+        "dicod" => Solver::Distributed(DicodConfig::dicod(a.get_usize("workers"))),
+        other => {
+            eprintln!("unknown solver {other:?}");
+            return 2;
+        }
+    };
+    let cfg = EncodeConfig { solver, tol: a.get_f64("tol"), ..Default::default() };
+    let r = encode_problem(&problem, &cfg);
+    println!(
+        "solver={} T={t} K={k} L={l}  cost={:.6e}  nnz={}  converged={}  time={:.3}s",
+        a.get_str("solver"),
+        r.cost,
+        r.z.nnz(),
+        r.converged,
+        r.runtime
+    );
+    if let Some(s) = r.cd_stats {
+        println!(
+            "  iterations={} updates={} scanned={} beta_touched={}",
+            s.iterations, s.updates, s.coords_scanned, s.beta_touched
+        );
+    }
+    0
+}
+
+fn cmd_learn(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile learn", "learn a convolutional dictionary")
+        .opt("workload", Some("starfield"), "synthetic|starfield|texture")
+        .opt("size", Some("200"), "image height (width scales accordingly)")
+        .opt("k", Some("9"), "number of atoms")
+        .opt("l", Some("12"), "atom side")
+        .opt("iters", Some("10"), "outer CDL iterations")
+        .opt("workers", Some("0"), "distributed CSC workers (0 = sequential)")
+        .opt("reg", Some("0.1"), "lambda fraction")
+        .opt("seed", Some("0"), "rng seed")
+        .opt("out", None, "save learned dictionary mosaic to this PGM path")
+        .flag("verbose", "print per-iteration progress");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let x = workload_tensor(&a.get_str("workload"), a.get_usize("size"), a.get_u64("seed"));
+    let l = a.get_usize("l");
+    let atom_dims = if x.ndim() == 3 { vec![l, l] } else { vec![l] };
+    let workers = a.get_usize("workers");
+    let cfg = CdlConfig {
+        n_atoms: a.get_usize("k"),
+        atom_dims,
+        lambda_frac: a.get_f64("reg"),
+        max_iter: a.get_usize("iters"),
+        csc: if workers > 0 {
+            CscBackend::Distributed(DicodConfig::dicodile(workers))
+        } else {
+            CscBackend::Sequential
+        },
+        init: InitStrategy::RandomPatches,
+        seed: a.get_u64("seed"),
+        verbose: a.has_flag("verbose"),
+        ..Default::default()
+    };
+    match learn_dictionary(&x, &cfg) {
+        Ok(r) => {
+            print!("{}", report::trace_table(&r));
+            if let Some(path) = a.get("out") {
+                if r.d.ndim() == 4 {
+                    if let Err(e) = io::save_dict_mosaic(std::path::Path::new(path), &r.d, 5) {
+                        eprintln!("cannot save mosaic: {e}");
+                    } else {
+                        println!("saved atom mosaic to {path}");
+                    }
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("learn failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(_tokens: Vec<String>) -> i32 {
+    println!("dicodile {} (rust {} build)", env!("CARGO_PKG_VERSION"), if cfg!(debug_assertions) { "debug" } else { "release" });
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} entries in {}", m.entries.len(), dir.display());
+            for e in &m.entries {
+                println!(
+                    "  {:12} {:28} in={:?} out={:?}",
+                    e.name,
+                    e.file.display(),
+                    e.input_shapes,
+                    e.output_shapes
+                );
+            }
+        }
+        Err(_) => println!(
+            "artifacts: none found in {} (run `make artifacts`; native fallbacks active)",
+            dir.display()
+        ),
+    }
+    0
+}
+
+fn cmd_gen(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile gen", "generate a workload image")
+        .opt("workload", Some("starfield"), "starfield|texture")
+        .opt("size", Some("300"), "image height")
+        .opt("seed", Some("0"), "rng seed")
+        .opt("out", Some("workload.pgm"), "output path (.pgm or .ndt)");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let x = workload_tensor(&a.get_str("workload"), a.get_usize("size"), a.get_u64("seed"));
+    let out = a.get_str("out");
+    let path = std::path::Path::new(&out);
+    let res = if out.ends_with(".pgm") && x.ndim() == 3 {
+        let (h, w) = (x.dims()[1], x.dims()[2]);
+        io::save_pgm(path, x.slice0(0), h, w)
+    } else {
+        io::save_tensor(path, &x)
+    };
+    match res {
+        Ok(()) => {
+            println!("wrote {} ({:?})", out, x.dims());
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT execution engine: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and executes them from the rust hot path.
+//!
+//! Interchange format is HLO *text* (not serialized protos): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::tensor::NdTensor;
+
+/// A lazily-compiled artifact registry bound to one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create from the default directory if a manifest is present.
+    pub fn try_default() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        Engine::new(&dir).ok()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Does an artifact exist for this op and these input shapes?
+    pub fn supports(&self, name: &str, input_shapes: &[&[usize]]) -> bool {
+        self.manifest.find(name, input_shapes).is_some()
+    }
+
+    /// Execute an artifact on f64 tensors (converted to f32 literals,
+    /// the dtype the artifacts are lowered with). Returns the tuple of
+    /// outputs as f64 tensors.
+    pub fn execute(&self, name: &str, inputs: &[&NdTensor]) -> anyhow::Result<Vec<NdTensor>> {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.dims()).collect();
+        let entry = self
+            .manifest
+            .find(name, &shapes)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for {name} with shapes {shapes:?}"))?
+            .clone();
+        let exe = self.compiled(&entry)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let f32s: Vec<f32> = t.data().iter().map(|&v| v as f32).collect();
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&f32s)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let result = {
+            let cache = self.cache.lock().unwrap();
+            let exe_ref = cache.get(&cache_key(&entry)).unwrap();
+            exe_ref
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?
+        };
+        let _ = exe;
+        let out_literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = out_literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == entry.output_shapes.len(),
+            "artifact {name}: expected {} outputs, got {}",
+            entry.output_shapes.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&entry.output_shapes)
+            .map(|(lit, dims)| {
+                let vals: Vec<f32> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
+                anyhow::ensure!(
+                    vals.len() == dims.iter().product::<usize>(),
+                    "artifact {name}: output size mismatch"
+                );
+                Ok(NdTensor::from_vec(dims, vals.into_iter().map(|v| v as f64).collect()))
+            })
+            .collect()
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    fn compiled(&self, entry: &ArtifactEntry) -> anyhow::Result<()> {
+        let key = cache_key(entry);
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&key) {
+            return Ok(());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        cache.insert(key, exe);
+        Ok(())
+    }
+}
+
+fn cache_key(entry: &ArtifactEntry) -> String {
+    format!("{}:{}", entry.name, entry.file.display())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests only run when `make artifacts` has produced the
+    /// manifest (they are the runtime side of the AOT contract).
+    fn engine() -> Option<Engine> {
+        Engine::try_default()
+    }
+
+    #[test]
+    fn engine_loads_when_artifacts_present() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+            return;
+        };
+        assert!(!e.manifest().entries.is_empty());
+    }
+}

@@ -1,0 +1,132 @@
+//! Artifact-or-native dispatch.
+//!
+//! The batch-heavy operations of the pipeline (beta bootstrap, objective
+//! evaluation, dictionary gradient) can run either through an
+//! AOT-compiled JAX/Pallas artifact (PJRT) or through the native rust
+//! implementation. `HybridOps` picks the artifact when one was lowered
+//! for the exact workload shapes and falls back to native otherwise —
+//! both paths are verified against each other in the parity tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::csc::problem::CscProblem;
+use crate::dict::grad::grad_from_stats;
+use crate::dict::phi_psi::DictStats;
+use crate::runtime::engine::Engine;
+use crate::tensor::NdTensor;
+
+/// Dispatching facade over the PJRT engine.
+pub struct HybridOps {
+    engine: Option<Engine>,
+    artifact_calls: AtomicU64,
+    native_calls: AtomicU64,
+}
+
+impl HybridOps {
+    /// With an explicit engine (tests).
+    pub fn with_engine(engine: Option<Engine>) -> Self {
+        HybridOps { engine, artifact_calls: AtomicU64::new(0), native_calls: AtomicU64::new(0) }
+    }
+
+    /// Load artifacts from the default directory if present.
+    pub fn from_env() -> Self {
+        Self::with_engine(Engine::try_default())
+    }
+
+    /// Native-only (no PJRT).
+    pub fn native_only() -> Self {
+        Self::with_engine(None)
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    /// (artifact, native) dispatch counters.
+    pub fn call_counts(&self) -> (u64, u64) {
+        (
+            self.artifact_calls.load(Ordering::Relaxed),
+            self.native_calls.load(Ordering::Relaxed),
+        )
+    }
+
+    /// beta bootstrap `corr(X, D) : [K, T'..]` (the FLOP-heavy start of
+    /// every CSC solve).
+    pub fn beta_init(&self, problem: &CscProblem) -> NdTensor {
+        if let Some(engine) = &self.engine {
+            let shapes: Vec<&[usize]> = vec![problem.x.dims(), problem.d.dims()];
+            if engine.supports("beta_init", &shapes) {
+                if let Ok(mut out) = engine.execute("beta_init", &[&problem.x, &problem.d]) {
+                    self.artifact_calls.fetch_add(1, Ordering::Relaxed);
+                    return out.remove(0);
+                }
+            }
+        }
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        crate::conv::correlate_dict(&problem.x, &problem.d)
+    }
+
+    /// Objective `1/2||X - Z*D||^2 + lambda ||Z||_1`.
+    pub fn cost(&self, problem: &CscProblem, z: &NdTensor) -> f64 {
+        if let Some(engine) = &self.engine {
+            let shapes: Vec<&[usize]> = vec![problem.x.dims(), problem.d.dims(), z.dims()];
+            if engine.supports("cost_eval", &shapes) {
+                if let Ok(out) = engine.execute("cost_eval", &[&problem.x, &problem.d, z]) {
+                    self.artifact_calls.fetch_add(1, Ordering::Relaxed);
+                    // artifact returns (data_fit,); lambda term added here in
+                    // f64 to avoid f32 cancellation on the l1 sum.
+                    return out[0].get(0) + problem.lambda * z.norm1();
+                }
+            }
+        }
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        problem.cost(z)
+    }
+
+    /// Dictionary gradient from sufficient statistics.
+    pub fn dict_grad(&self, stats: &DictStats, d: &NdTensor) -> NdTensor {
+        if let Some(engine) = &self.engine {
+            let shapes: Vec<&[usize]> = vec![stats.phi.dims(), stats.psi.dims(), d.dims()];
+            if engine.supports("dict_grad", &shapes) {
+                if let Ok(mut out) = engine.execute("dict_grad", &[&stats.phi, &stats.psi, d]) {
+                    self.artifact_calls.fetch_add(1, Ordering::Relaxed);
+                    return out.remove(0);
+                }
+            }
+        }
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        grad_from_stats(stats, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy_problem() -> CscProblem {
+        let mut rng = Pcg64::seeded(1);
+        let x = NdTensor::from_vec(&[1, 40], rng.normal_vec(40));
+        let d = NdTensor::from_vec(&[2, 1, 6], rng.normal_vec(12));
+        CscProblem::new(x, d, 0.3)
+    }
+
+    #[test]
+    fn native_only_falls_back() {
+        let ops = HybridOps::native_only();
+        let p = toy_problem();
+        let beta = ops.beta_init(&p);
+        assert_eq!(beta.dims(), &[2, 35]);
+        let (a, n) = ops.call_counts();
+        assert_eq!(a, 0);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn native_cost_matches_problem_cost() {
+        let ops = HybridOps::native_only();
+        let p = toy_problem();
+        let z = p.zero_activation();
+        assert!((ops.cost(&p, &z) - p.cost(&z)).abs() < 1e-12);
+    }
+}

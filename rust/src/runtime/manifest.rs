@@ -1,0 +1,155 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! pipeline (`python/compile/aot.py`) and the rust runtime.
+//!
+//! Each entry names one HLO-text artifact, its input/output shapes and
+//! the workload parameters it was lowered for. The runtime picks an
+//! artifact by `(name, input shapes)` and falls back to the native rust
+//! implementation when no artifact matches (see `runtime::hybrid`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Logical operation name (`beta_init`, `cost_eval`, `dict_grad`,
+    /// `phi_psi`, `lgcd_step`, ...).
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    /// Input shapes (dims per argument, in call order).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes (the computation returns a tuple).
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let mut entries = Vec::new();
+        for item in root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?
+        {
+            entries.push(ArtifactEntry {
+                name: item
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: PathBuf::from(
+                    item.get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?,
+                ),
+                input_shapes: parse_shapes(item.get("inputs"))?,
+                output_shapes: parse_shapes(item.get("outputs"))?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find an artifact by name and exact input shapes.
+    pub fn find(&self, name: &str, input_shapes: &[&[usize]]) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.name == name
+                && e.input_shapes.len() == input_shapes.len()
+                && e.input_shapes
+                    .iter()
+                    .zip(input_shapes)
+                    .all(|(a, b)| a.as_slice() == *b)
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// The default artifacts directory: `$DICODILE_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DICODILE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+fn parse_shapes(v: Option<&Json>) -> anyhow::Result<Vec<Vec<usize>>> {
+    let arr = v
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("artifact missing shapes"))?;
+    arr.iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dicodile_manifest_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn parse_and_find() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [
+                {"name": "beta_init", "file": "b.hlo.txt",
+                 "inputs": [[1, 64], [3, 1, 8]], "outputs": [[3, 57]]}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let x_shape: &[usize] = &[1, 64];
+        let d_shape: &[usize] = &[3, 1, 8];
+        let e = m.find("beta_init", &[x_shape, d_shape]).unwrap();
+        assert_eq!(e.output_shapes, vec![vec![3, 57]]);
+        assert!(m.find("beta_init", &[&[1, 65][..], d_shape]).is_none());
+        assert!(m.find("nope", &[x_shape, d_shape]).is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = tmpdir("missing");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        let dir = tmpdir("bad");
+        write_manifest(&dir, "{]");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

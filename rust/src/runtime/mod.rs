@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest parsing, artifact compilation/execution and
+//! the artifact-or-native dispatch used by the solvers.
+
+pub mod engine;
+pub mod hybrid;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use hybrid::HybridOps;
+pub use manifest::Manifest;

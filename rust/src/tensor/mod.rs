@@ -1,0 +1,10 @@
+//! Dense tensor substrate: shapes/boxes, owned row-major tensors and
+//! the elementwise operators used by the solvers.
+
+pub mod ops;
+pub mod shape;
+#[allow(clippy::module_inception)]
+pub mod tensor;
+
+pub use shape::Rect;
+pub use tensor::NdTensor;

@@ -1,0 +1,118 @@
+//! Elementwise operators shared by the CSC solvers.
+
+use super::tensor::NdTensor;
+
+/// Soft-thresholding operator `ST(u, t) = sign(u) max(|u| - t, 0)`.
+#[inline(always)]
+pub fn soft_threshold(u: f64, t: f64) -> f64 {
+    if u > t {
+        u - t
+    } else if u < -t {
+        u + t
+    } else {
+        0.0
+    }
+}
+
+/// Apply ST elementwise.
+pub fn soft_threshold_tensor(t: &NdTensor, thresh: f64) -> NdTensor {
+    t.map(|x| soft_threshold(x, thresh))
+}
+
+/// Project a flat vector onto the l2 ball of radius `r` (in place).
+/// Returns the original norm.
+pub fn project_l2_ball(xs: &mut [f64], r: f64) -> f64 {
+    let norm = xs.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > r && norm > 0.0 {
+        let s = r / norm;
+        for x in xs.iter_mut() {
+            *x *= s;
+        }
+    }
+    norm
+}
+
+/// Flip a spatial tensor in every dimension (the paper's `X~` reversal).
+/// `dims` are the spatial dims of the flat slice.
+pub fn reverse_all(data: &[f64], dims: &[usize]) -> Vec<f64> {
+    let n = data.len();
+    let mut out = vec![0.0; n];
+    match dims.len() {
+        1 => {
+            for i in 0..n {
+                out[n - 1 - i] = data[i];
+            }
+        }
+        2 => {
+            let (h, w) = (dims[0], dims[1]);
+            for i in 0..h {
+                for j in 0..w {
+                    out[(h - 1 - i) * w + (w - 1 - j)] = data[i * w + j];
+                }
+            }
+        }
+        _ => {
+            // Generic: mirror each index.
+            let strides = super::shape::strides_of(dims);
+            for off in 0..n {
+                let idx = super::shape::index_of(off, dims);
+                let mut m = 0;
+                for (d, (&x, &s)) in idx.iter().zip(strides.iter()).enumerate() {
+                    m += (dims[d] - 1 - x) * s;
+                }
+                out[m] = data[off];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn st_matches_definition() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn st_tensor() {
+        let t = NdTensor::from_vec(&[3], vec![2.0, -0.5, -4.0]);
+        assert_eq!(soft_threshold_tensor(&t, 1.0).data(), &[1.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn l2_projection_shrinks_only_outside() {
+        let mut v = vec![3.0, 4.0];
+        project_l2_ball(&mut v, 1.0);
+        let norm = (v[0] * v[0] + v[1] * v[1]).sqrt();
+        assert!((norm - 1.0).abs() < 1e-12);
+        let mut u = vec![0.3, 0.4];
+        project_l2_ball(&mut u, 1.0);
+        assert_eq!(u, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn reverse_1d() {
+        assert_eq!(reverse_all(&[1., 2., 3.], &[3]), vec![3., 2., 1.]);
+    }
+
+    #[test]
+    fn reverse_2d() {
+        // [[1,2],[3,4]] -> [[4,3],[2,1]]
+        assert_eq!(reverse_all(&[1., 2., 3., 4.], &[2, 2]), vec![4., 3., 2., 1.]);
+    }
+
+    #[test]
+    fn reverse_generic_3d_is_involution() {
+        let dims = [2, 3, 2];
+        let data: Vec<f64> = (0..12).map(|x| x as f64).collect();
+        let twice = reverse_all(&reverse_all(&data, &dims), &dims);
+        assert_eq!(twice, data);
+    }
+}

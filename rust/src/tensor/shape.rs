@@ -1,0 +1,230 @@
+//! Shapes, strides and rectangular index domains.
+//!
+//! The paper works on a d-dimensional domain `Omega = prod_i [0, T_i)`.
+//! This module provides the index algebra everything else builds on:
+//! row-major strides, offset<->multi-index conversion, and half-open
+//! boxes (`Rect`) with intersection/clipping — used for worker
+//! sub-domains `S_w`, borders `B_L`, extensions `E_L` and update
+//! neighbourhoods `V(omega)`.
+
+/// Row-major strides for `dims`.
+pub fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * dims[i + 1];
+    }
+    strides
+}
+
+/// Product of dims.
+pub fn num_elems(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Flat offset of `idx` in a row-major layout with `dims`.
+#[inline]
+pub fn offset_of(idx: &[usize], dims: &[usize]) -> usize {
+    debug_assert_eq!(idx.len(), dims.len());
+    let mut off = 0;
+    for (i, (&x, &d)) in idx.iter().zip(dims).enumerate() {
+        debug_assert!(x < d, "index {x} out of bounds {d} at dim {i}");
+        let _ = i;
+        off = off * d + x;
+    }
+    off
+}
+
+/// Multi-index of flat `offset` in a row-major layout with `dims`.
+pub fn index_of(mut offset: usize, dims: &[usize]) -> Vec<usize> {
+    let mut idx = vec![0; dims.len()];
+    for i in (0..dims.len()).rev() {
+        idx[i] = offset % dims[i];
+        offset /= dims[i];
+    }
+    idx
+}
+
+/// A d-dimensional half-open box `prod_i [lo_i, hi_i)` over signed
+/// coordinates (signed so halos below 0 can be expressed before clipping).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub lo: Vec<i64>,
+    pub hi: Vec<i64>,
+}
+
+impl Rect {
+    pub fn new(lo: Vec<i64>, hi: Vec<i64>) -> Self {
+        assert_eq!(lo.len(), hi.len());
+        Rect { lo, hi }
+    }
+
+    /// The full domain `[0, dims_i)`.
+    pub fn full(dims: &[usize]) -> Self {
+        Rect {
+            lo: vec![0; dims.len()],
+            hi: dims.iter().map(|&d| d as i64).collect(),
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.lo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo.iter().zip(&self.hi).any(|(l, h)| l >= h)
+    }
+
+    /// Number of points (0 if empty).
+    pub fn size(&self) -> usize {
+        if self.is_empty() {
+            return 0;
+        }
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .map(|(l, h)| (h - l) as usize)
+            .product()
+    }
+
+    pub fn contains(&self, pt: &[i64]) -> bool {
+        pt.iter()
+            .zip(self.lo.iter().zip(&self.hi))
+            .all(|(x, (l, h))| l <= x && x < h)
+    }
+
+    /// Intersection (may be empty).
+    pub fn intersect(&self, other: &Rect) -> Rect {
+        Rect {
+            lo: self.lo.iter().zip(&other.lo).map(|(a, b)| *a.max(b)).collect(),
+            hi: self.hi.iter().zip(&other.hi).map(|(a, b)| *a.min(b)).collect(),
+        }
+    }
+
+    /// Grow by `margin_i` on each side in each dimension.
+    pub fn dilate(&self, margin: &[usize]) -> Rect {
+        Rect {
+            lo: self.lo.iter().zip(margin).map(|(l, m)| l - *m as i64).collect(),
+            hi: self.hi.iter().zip(margin).map(|(h, m)| h + *m as i64).collect(),
+        }
+    }
+
+    /// Does `other` overlap this box?
+    pub fn overlaps(&self, other: &Rect) -> bool {
+        !self.intersect(other).is_empty()
+    }
+
+    /// Iterate all points (row-major).
+    pub fn iter(&self) -> RectIter {
+        RectIter {
+            rect: self.clone(),
+            cur: self.lo.clone(),
+            done: self.is_empty(),
+        }
+    }
+
+    /// Extents per dimension.
+    pub fn extents(&self) -> Vec<usize> {
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .map(|(l, h)| (h - l).max(0) as usize)
+            .collect()
+    }
+}
+
+/// Row-major iterator over a `Rect`'s points.
+pub struct RectIter {
+    rect: Rect,
+    cur: Vec<i64>,
+    done: bool,
+}
+
+impl Iterator for RectIter {
+    type Item = Vec<i64>;
+
+    fn next(&mut self) -> Option<Vec<i64>> {
+        if self.done {
+            return None;
+        }
+        let out = self.cur.clone();
+        // Advance last dim first.
+        for i in (0..self.cur.len()).rev() {
+            self.cur[i] += 1;
+            if self.cur[i] < self.rect.hi[i] {
+                return Some(out);
+            }
+            self.cur[i] = self.rect.lo[i];
+        }
+        self.done = true;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_of(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_of(&[5]), vec![1]);
+        assert_eq!(strides_of(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn offset_index_roundtrip() {
+        let dims = [3, 4, 5];
+        for off in 0..num_elems(&dims) {
+            let idx = index_of(off, &dims);
+            assert_eq!(offset_of(&idx, &dims), off);
+        }
+    }
+
+    #[test]
+    fn rect_size_and_contains() {
+        let r = Rect::new(vec![1, 2], vec![4, 5]);
+        assert_eq!(r.size(), 9);
+        assert!(r.contains(&[1, 2]));
+        assert!(r.contains(&[3, 4]));
+        assert!(!r.contains(&[4, 4]));
+        assert!(!r.contains(&[0, 2]));
+    }
+
+    #[test]
+    fn rect_empty() {
+        let r = Rect::new(vec![3], vec![3]);
+        assert!(r.is_empty());
+        assert_eq!(r.size(), 0);
+        assert_eq!(r.iter().count(), 0);
+    }
+
+    #[test]
+    fn rect_intersect() {
+        let a = Rect::new(vec![0, 0], vec![4, 4]);
+        let b = Rect::new(vec![2, -1], vec![6, 3]);
+        let c = a.intersect(&b);
+        assert_eq!(c, Rect::new(vec![2, 0], vec![4, 3]));
+        assert!(a.overlaps(&b));
+        let d = Rect::new(vec![10, 10], vec![11, 11]);
+        assert!(!a.overlaps(&d));
+    }
+
+    #[test]
+    fn rect_dilate() {
+        let r = Rect::new(vec![2, 2], vec![4, 4]);
+        assert_eq!(r.dilate(&[1, 2]), Rect::new(vec![1, 0], vec![5, 6]));
+    }
+
+    #[test]
+    fn rect_iter_row_major() {
+        let r = Rect::new(vec![0, 1], vec![2, 3]);
+        let pts: Vec<Vec<i64>> = r.iter().collect();
+        assert_eq!(pts, vec![vec![0, 1], vec![0, 2], vec![1, 1], vec![1, 2]]);
+    }
+
+    #[test]
+    fn rect_iter_count_matches_size() {
+        let r = Rect::new(vec![-1, 0, 2], vec![2, 2, 4]);
+        assert_eq!(r.iter().count(), r.size());
+    }
+}

@@ -1,0 +1,307 @@
+//! Dense row-major f64 tensors.
+//!
+//! A deliberately small owned-tensor type (the offline build has no
+//! `ndarray`): flat `Vec<f64>` + dims. The CSC / dictionary code indexes
+//! with small fixed arities ([k, t], [k, p, l], ...) so we favour simple
+//! inlined offset math over iterator abstraction.
+
+use super::shape::{index_of, num_elems, offset_of, strides_of};
+
+/// Dense row-major tensor of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NdTensor {
+    dims: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl NdTensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        NdTensor { dims: dims.to_vec(), data: vec![0.0; num_elems(dims)] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(num_elems(dims), data.len(), "dims {dims:?} vs data len {}", data.len());
+        NdTensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn filled(dims: &[usize], value: f64) -> Self {
+        NdTensor { dims: dims.to_vec(), data: vec![value; num_elems(dims)] }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f64 {
+        self.data[offset_of(idx, &self.dims)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f64 {
+        let off = offset_of(idx, &self.dims);
+        &mut self.data[off]
+    }
+
+    #[inline]
+    pub fn get(&self, off: usize) -> f64 {
+        self.data[off]
+    }
+
+    #[inline]
+    pub fn set(&mut self, off: usize, v: f64) {
+        self.data[off] = v;
+    }
+
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.dims)
+    }
+
+    /// Reinterpret with new dims of the same element count.
+    pub fn reshape(&self, dims: &[usize]) -> NdTensor {
+        assert_eq!(num_elems(dims), self.len());
+        NdTensor { dims: dims.to_vec(), data: self.data.clone() }
+    }
+
+    /// Contiguous sub-tensor along the first axis: `self[i]` for a
+    /// tensor of dims `[n, rest...]`.
+    pub fn slice0(&self, i: usize) -> &[f64] {
+        let inner: usize = self.dims[1..].iter().product();
+        &self.data[i * inner..(i + 1) * inner]
+    }
+
+    pub fn slice0_mut(&mut self, i: usize) -> &mut [f64] {
+        let inner: usize = self.dims[1..].iter().product();
+        &mut self.data[i * inner..(i + 1) * inner]
+    }
+
+    /// Sub-tensor view copy along the first axis.
+    pub fn sub0(&self, i: usize) -> NdTensor {
+        NdTensor { dims: self.dims[1..].to_vec(), data: self.slice0(i).to_vec() }
+    }
+
+    // ---- elementwise ----
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> NdTensor {
+        NdTensor { dims: self.dims.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn add(&self, other: &NdTensor) -> NdTensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &NdTensor) -> NdTensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f64) -> NdTensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add_assign(&mut self, other: &NdTensor) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &NdTensor) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    pub fn axpy(&mut self, alpha: f64, other: &NdTensor) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    fn zip(&self, other: &NdTensor, f: impl Fn(f64, f64) -> f64) -> NdTensor {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        NdTensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    // ---- reductions ----
+
+    pub fn dot(&self, other: &NdTensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn norm1(&self) -> f64 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn norm_inf(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|x| **x != 0.0).count()
+    }
+
+    /// (flat offset, value) of the entry with max |value|.
+    pub fn argmax_abs(&self) -> (usize, f64) {
+        let mut best = (0usize, 0.0f64);
+        for (i, &x) in self.data.iter().enumerate() {
+            if x.abs() > best.1.abs() {
+                best = (i, x);
+            }
+        }
+        best
+    }
+
+    /// Multi-index of flat offset.
+    pub fn unravel(&self, off: usize) -> Vec<usize> {
+        index_of(off, &self.dims)
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &NdTensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Approximate equality within `tol` (inf-norm).
+    pub fn allclose(&self, other: &NdTensor, tol: f64) -> bool {
+        self.dims == other.dims && self.max_abs_diff(other) <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t = NdTensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        *t.at_mut(&[1, 2]) = 5.0;
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.get(5), 5.0);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        let t = NdTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at(&[0, 1]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_panics_on_mismatch() {
+        let _ = NdTensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn slice0_views_rows() {
+        let t = NdTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.slice0(0), &[1., 2., 3.]);
+        assert_eq!(t.slice0(1), &[4., 5., 6.]);
+        assert_eq!(t.sub0(1).dims(), &[3]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = NdTensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = NdTensor::from_vec(&[3], vec![4., 5., 6.]);
+        assert_eq!(a.add(&b).data(), &[5., 7., 9.]);
+        assert_eq!(b.sub(&a).data(), &[3., 3., 3.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6.]);
+        let mut c = a.clone();
+        c.axpy(10.0, &b);
+        assert_eq!(c.data(), &[41., 52., 63.]);
+    }
+
+    #[test]
+    fn norms() {
+        let t = NdTensor::from_vec(&[2, 2], vec![3., -4., 0., 0.]);
+        assert_eq!(t.norm2(), 5.0);
+        assert_eq!(t.norm1(), 7.0);
+        assert_eq!(t.norm_inf(), 4.0);
+        assert_eq!(t.nnz(), 2);
+    }
+
+    #[test]
+    fn argmax_abs_finds_negative_peaks() {
+        let t = NdTensor::from_vec(&[4], vec![1., -9., 3., 8.]);
+        let (i, v) = t.argmax_abs();
+        assert_eq!(i, 1);
+        assert_eq!(v, -9.0);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = NdTensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = NdTensor::from_vec(&[2], vec![1.0 + 1e-9, 2.0]);
+        assert!(a.allclose(&b, 1e-8));
+        assert!(!a.allclose(&b, 1e-10));
+    }
+
+    #[test]
+    fn unravel_matches_at() {
+        let t = NdTensor::from_vec(&[2, 3], (0..6).map(|x| x as f64).collect());
+        for off in 0..6 {
+            let idx = t.unravel(off);
+            assert_eq!(t.at(&idx), off as f64);
+        }
+    }
+}

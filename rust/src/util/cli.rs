@@ -1,0 +1,234 @@
+//! Minimal argv parser (clap substitute for the offline build).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Each binary declares its options up front so `--help` output
+//! and unknown-flag errors are uniform across the CLI, examples and benches.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option (for help text and validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative parser builder.
+#[derive(Clone, Debug)]
+pub struct Parser {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Parser { program, about, opts: Vec::new() }
+    }
+
+    /// Declare a `--key value` option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  --{}{}\t{}{}", o.name, kind, o.help, dflt);
+        }
+        let _ = writeln!(s, "  --help\tshow this message");
+        s
+    }
+
+    /// Parse a token stream (without the program name).
+    pub fn parse_tokens<I: IntoIterator<Item = String>>(&self, tokens: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` — prints usage and exits on `--help`/error.
+    pub fn parse_env(&self) -> Args {
+        match self.parse_tokens(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.parse_or_exit(name)
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.parse_or_exit(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.parse_or_exit(name)
+    }
+
+    fn parse_or_exit<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.get(name).unwrap_or_else(|| {
+            eprintln!("missing required option --{name}");
+            std::process::exit(2);
+        });
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("invalid value for --{name}: {raw:?}");
+            std::process::exit(2);
+        })
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Parse a comma-separated list of usize (e.g. `--workers 1,2,4,8`).
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get_str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("invalid list element for --{name}: {s:?}");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("t", "test")
+            .opt("size", Some("8"), "a size")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse_tokens(toks(&[])).unwrap();
+        assert_eq!(a.get("size"), Some("8"));
+        assert_eq!(a.get("name"), None);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_forms() {
+        let a = parser().parse_tokens(toks(&["--size", "32", "--name=zed"])).unwrap();
+        assert_eq!(a.get_usize("size"), 32);
+        assert_eq!(a.get("name"), Some("zed"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parser().parse_tokens(toks(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parser().parse_tokens(toks(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parser().parse_tokens(toks(&["--size"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parser().parse_tokens(toks(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let p = Parser::new("t", "t").opt("workers", Some("1,2,4"), "list");
+        let a = p.parse_tokens(toks(&[])).unwrap();
+        assert_eq!(a.get_usize_list("workers"), vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline-build substrates: RNG, CLI parsing, JSON, logging and a
+//! property-testing driver (the vendored crate set has no rand / clap /
+//! serde / proptest — see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest_lite;
+pub mod rng;

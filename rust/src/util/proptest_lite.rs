@@ -1,0 +1,171 @@
+//! Tiny property-based testing driver (proptest substitute).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it re-runs a simple shrinking
+//! loop driven by the generator's `shrink` hook, then panics with the
+//! minimal failing input's `Debug` rendering and the seed needed to
+//! replay it (`DICODILE_PT_SEED`).
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random values with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Generator from a closure (no shrinking).
+pub struct FnGen<F>(pub F);
+
+impl<T: std::fmt::Debug + Clone, F: Fn(&mut Pcg64) -> T> Gen for FnGen<F> {
+    type Value = T;
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        (self.0)(rng)
+    }
+}
+
+fn seed() -> u64 {
+    std::env::var("DICODILE_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1C0_D11E)
+}
+
+/// Run a property over `cases` random inputs.
+pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg64::seeded(seed());
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // Shrink: repeatedly take the first failing shrink candidate.
+            let mut minimal = v.clone();
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in gen.shrink(&minimal) {
+                    if !prop(&cand) {
+                        minimal = cand;
+                        steps += 1;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed at case {case} (seed {}):\n  original: {v:?}\n  shrunk:   {minimal:?}",
+                seed()
+            );
+        }
+    }
+}
+
+/// usize in [lo, hi] with halving shrinks toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec<f64> of random length from a normal distribution; shrinks by
+/// halving the vector and zeroing entries.
+pub struct NormalVec {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub std: f64,
+}
+
+impl Gen for NormalVec {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.normal() * self.std).collect()
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|x| *x != 0.0) {
+            let mut zeroed = v.clone();
+            for x in zeroed.iter_mut() {
+                *x = 0.0;
+            }
+            out.push(zeroed);
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-nonneg", 100, &NormalVec { min_len: 0, max_len: 16, std: 1.0 }, |v| {
+            v.iter().map(|x| x * x).sum::<f64>() >= 0.0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_shrunk_input() {
+        check("len-lt-4", 100, &UsizeRange(0, 100), |n| *n < 4);
+    }
+
+    #[test]
+    fn usize_range_respects_bounds() {
+        let g = UsizeRange(3, 9);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..1000 {
+            let v = g.generate(&mut rng);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = PairGen(UsizeRange(0, 10), UsizeRange(0, 10));
+        let shrinks = g.shrink(&(5, 7));
+        assert!(shrinks.iter().any(|(a, _)| *a < 5));
+        assert!(shrinks.iter().any(|(_, b)| *b < 7));
+    }
+}

@@ -1,0 +1,166 @@
+//! Golden parity: every AOT artifact must reproduce the rust-native
+//! implementation on the same inputs (f32 tolerance).
+//!
+//! These tests exercise the full contract of the three-layer stack:
+//! python/JAX/Pallas lowering (L1+L2) -> HLO text -> PJRT compile ->
+//! rust execute (runtime). They are skipped with a notice when
+//! `make artifacts` has not run.
+
+use dicodile::conv;
+use dicodile::csc::beta::dz_value;
+use dicodile::csc::problem::CscProblem;
+use dicodile::dict::grad::grad_from_stats;
+use dicodile::dict::phi_psi::compute_stats;
+use dicodile::runtime::Engine;
+use dicodile::tensor::NdTensor;
+use dicodile::util::rng::Pcg64;
+
+fn engine() -> Option<Engine> {
+    match Engine::try_default() {
+        Some(e) => Some(e),
+        None => {
+            eprintln!("skipping artifact parity test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+/// Workload matching aot.py's `tiny_1d` config.
+fn tiny_1d(seed: u64) -> (CscProblem, NdTensor) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = NdTensor::from_vec(&[1, 64], rng.normal_vec(64));
+    let d = NdTensor::from_vec(&[3, 1, 8], rng.normal_vec(24));
+    let p = CscProblem::new(x, d, 0.3);
+    let mut z = p.zero_activation();
+    for v in z.data_mut().iter_mut() {
+        if rng.bernoulli(0.2) {
+            *v = rng.normal();
+        }
+    }
+    (p, z)
+}
+
+/// Workload matching aot.py's `tiny_2d` config.
+fn tiny_2d(seed: u64) -> (CscProblem, NdTensor) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = NdTensor::from_vec(&[1, 16, 16], rng.normal_vec(256));
+    let d = NdTensor::from_vec(&[2, 1, 4, 4], rng.normal_vec(32));
+    let p = CscProblem::new(x, d, 0.3);
+    let mut z = p.zero_activation();
+    for v in z.data_mut().iter_mut() {
+        if rng.bernoulli(0.2) {
+            *v = rng.normal();
+        }
+    }
+    (p, z)
+}
+
+/// f32-grade comparison: artifacts run in f32, native in f64.
+fn assert_close(a: &NdTensor, b: &NdTensor, tol: f64, what: &str) {
+    assert_eq!(a.dims(), b.dims(), "{what}: dims");
+    let scale = 1.0 + b.norm_inf();
+    let diff = a.max_abs_diff(b);
+    assert!(diff <= tol * scale, "{what}: max diff {diff} (scale {scale})");
+}
+
+#[test]
+fn beta_init_parity_1d() {
+    let Some(e) = engine() else { return };
+    let (p, _) = tiny_1d(1);
+    let got = e.execute("beta_init", &[&p.x, &p.d]).unwrap().remove(0);
+    let want = conv::correlate_dict(&p.x, &p.d);
+    assert_close(&got, &want, 1e-5, "beta_init 1d");
+}
+
+#[test]
+fn beta_init_parity_2d() {
+    let Some(e) = engine() else { return };
+    let (p, _) = tiny_2d(2);
+    let got = e.execute("beta_init", &[&p.x, &p.d]).unwrap().remove(0);
+    let want = conv::correlate_dict(&p.x, &p.d);
+    assert_close(&got, &want, 1e-5, "beta_init 2d");
+}
+
+#[test]
+fn cost_eval_parity() {
+    let Some(e) = engine() else { return };
+    for (p, z) in [tiny_1d(3), tiny_2d(4)] {
+        let got = e.execute("cost_eval", &[&p.x, &p.d, &z]).unwrap().remove(0);
+        let want = p.data_fit(&z);
+        assert!(
+            (got.get(0) - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "cost_eval: {} vs {want}",
+            got.get(0)
+        );
+    }
+}
+
+#[test]
+fn phi_psi_parity() {
+    let Some(e) = engine() else { return };
+    for (p, z) in [tiny_1d(5), tiny_2d(6)] {
+        let mut out = e.execute("phi_psi", &[&z, &p.x]).unwrap();
+        let stats = compute_stats(&z, &p.x, p.atom_dims());
+        let psi = out.remove(1);
+        let phi = out.remove(0);
+        assert_close(&phi, &stats.phi, 1e-5, "phi");
+        assert_close(&psi, &stats.psi, 1e-5, "psi");
+    }
+}
+
+#[test]
+fn dict_grad_parity() {
+    let Some(e) = engine() else { return };
+    for (p, z) in [tiny_1d(7), tiny_2d(8)] {
+        let stats = compute_stats(&z, &p.x, p.atom_dims());
+        let got = e
+            .execute("dict_grad", &[&stats.phi, &stats.psi, &p.d])
+            .unwrap()
+            .remove(0);
+        let want = grad_from_stats(&stats, &p.d);
+        assert_close(&got, &want, 1e-5, "dict_grad");
+    }
+}
+
+#[test]
+fn lgcd_step_parity() {
+    let Some(e) = engine() else { return };
+    for (p, z) in [tiny_1d(9), tiny_2d(10)] {
+        let beta = conv::correlate_dict(&p.x, &p.d); // any beta works
+        let norms = NdTensor::from_vec(&[p.n_atoms()], p.norms_sq.clone());
+        let lam = NdTensor::from_vec(&[1], vec![p.lambda]);
+        let got = e
+            .execute("lgcd_step", &[&beta, &z, &norms, &lam])
+            .unwrap()
+            .remove(0);
+        // native dz map
+        let mut want = NdTensor::zeros(beta.dims());
+        let sp: usize = beta.dims()[1..].iter().product();
+        for i in 0..beta.len() {
+            let k = i / sp;
+            want.set(i, dz_value(beta.get(i), z.get(i), p.lambda, p.norms_sq[k]));
+        }
+        assert_close(&got, &want, 1e-5, "lgcd_step");
+    }
+}
+
+#[test]
+fn hybrid_ops_prefers_artifacts_for_known_shapes() {
+    let Some(e) = engine() else { return };
+    let ops = dicodile::runtime::HybridOps::with_engine(Some(e));
+    let (p, _) = tiny_1d(11);
+    let got = ops.beta_init(&p);
+    let want = conv::correlate_dict(&p.x, &p.d);
+    assert_close(&got, &want, 1e-5, "hybrid beta_init");
+    let (artifact, native) = ops.call_counts();
+    assert_eq!(artifact, 1, "artifact path not taken");
+    assert_eq!(native, 0);
+    // Unknown shape falls back to native.
+    let mut rng = Pcg64::seeded(12);
+    let x2 = NdTensor::from_vec(&[1, 100], rng.normal_vec(100));
+    let d2 = NdTensor::from_vec(&[2, 1, 5], rng.normal_vec(10));
+    let p2 = CscProblem::new(x2, d2, 0.1);
+    let _ = ops.beta_init(&p2);
+    let (_, native2) = ops.call_counts();
+    assert_eq!(native2, 1);
+}

@@ -1,0 +1,172 @@
+//! Randomized property tests on the distributed solver (proptest-lite):
+//! for arbitrary workload shapes and worker counts, DiCoDiLe-Z must
+//! reach the sequential optimum; the partition geometry must tile; the
+//! termination protocol must balance its message counters.
+
+use dicodile::csc::cd::{kkt_violation, solve_cd, CdConfig};
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::coordinator::solve_distributed;
+use dicodile::dicod::partition::{PartitionKind, WorkerGrid};
+use dicodile::tensor::NdTensor;
+use dicodile::util::proptest_lite::{check, FnGen};
+use dicodile::util::rng::Pcg64;
+
+#[test]
+fn distributed_reaches_sequential_cost_random_1d() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let t = 80 + rng.below(200);
+        let k = 1 + rng.below(3);
+        let l = 4 + rng.below(8);
+        let w = 1 + rng.below(4);
+        let seed = rng.next_u64();
+        (t, k, l, w, seed)
+    });
+    check("distributed == sequential (1d)", 8, &gen, |&(t, k, l, w, seed)| {
+        let data = SyntheticConfig::signal_1d(t, k, l).generate(seed);
+        let p = CscProblem::with_lambda_frac(data.x.clone(), data.d_true.clone(), 0.1);
+        let seq = solve_cd(&p, &CdConfig { tol: 1e-7, ..Default::default() });
+        let dist = solve_distributed(
+            &p,
+            &DicodConfig { n_workers: w, tol: 1e-7, ..Default::default() },
+        );
+        let (cs, cd) = (p.cost(&seq.z), p.cost(&dist.z));
+        dist.converged && (cs - cd).abs() < 1e-5 * (1.0 + cs.abs())
+    });
+}
+
+#[test]
+fn distributed_kkt_random_2d_grids() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let s = 16 + rng.below(16);
+        let l = 3 + rng.below(3);
+        let w = [1usize, 2, 4][rng.below(3)];
+        let seed = rng.next_u64();
+        (s, l, w, seed)
+    });
+    check("distributed KKT (2d)", 6, &gen, |&(s, l, w, seed)| {
+        let data = SyntheticConfig::image_2d(s, s, 2, l).generate(seed);
+        let p = CscProblem::with_lambda_frac(data.x.clone(), data.d_true.clone(), 0.1);
+        let dist = solve_distributed(
+            &p,
+            &DicodConfig {
+                n_workers: w,
+                partition: PartitionKind::Grid,
+                tol: 1e-7,
+                ..Default::default()
+            },
+        );
+        dist.converged && kkt_violation(&p, &dist.z) < 1e-5
+    });
+}
+
+#[test]
+fn message_counters_always_balance() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let t = 100 + rng.below(150);
+        let w = 2 + rng.below(4);
+        let seed = rng.next_u64();
+        (t, w, seed)
+    });
+    check("sent == received", 8, &gen, |&(t, w, seed)| {
+        let data = SyntheticConfig::signal_1d(t, 2, 6).generate(seed);
+        let p = CscProblem::with_lambda_frac(data.x.clone(), data.d_true.clone(), 0.1);
+        let r = solve_distributed(&p, &DicodConfig { n_workers: w, tol: 1e-6, ..Default::default() });
+        r.stats.msgs_sent == r.stats.msgs_received
+    });
+}
+
+#[test]
+fn partition_tiles_and_owner_consistent_random() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let d = 1 + rng.below(2);
+        let zsp: Vec<usize> = (0..d).map(|_| 20 + rng.below(80)).collect();
+        let l: Vec<usize> = (0..d).map(|_| 2 + rng.below(6)).collect();
+        let max_w: usize = zsp.iter().product::<usize>().min(9);
+        let w = 1 + rng.below(max_w.min(zsp[0]));
+        let kind = if rng.bernoulli(0.5) { PartitionKind::Line } else { PartitionKind::Grid };
+        (zsp, l, w, kind)
+    });
+    check("grid tiles domain", 40, &gen, |(zsp, l, w, kind)| {
+        let grid = WorkerGrid::new(zsp, l, *w, *kind);
+        let total: usize = (0..grid.n_workers()).map(|r| grid.cell(r).size()).sum();
+        if total != zsp.iter().product::<usize>() {
+            return false;
+        }
+        let mut rng = Pcg64::seeded(42);
+        for _ in 0..50 {
+            let pt: Vec<i64> = zsp.iter().map(|&n| rng.below(n) as i64).collect();
+            let owner = grid.owner_of(&pt);
+            if !grid.cell(owner).contains(&pt) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn soft_locks_tolerate_message_latency() {
+    // With delayed message application (emulated network latency) the
+    // soft-locked solver must still converge to the sequential optimum —
+    // the asynchrony claim of §4.1.
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let t = 120 + rng.below(120);
+        let delay = [4usize, 32, 256][rng.below(3)];
+        let w = 2 + rng.below(3);
+        let seed = rng.next_u64();
+        (t, delay, w, seed)
+    });
+    check("latency-tolerant", 6, &gen, |&(t, delay, w, seed)| {
+        let data = SyntheticConfig::signal_1d(t, 2, 8).generate(seed);
+        let p = CscProblem::with_lambda_frac(data.x.clone(), data.d_true.clone(), 0.1);
+        let seq = solve_cd(&p, &CdConfig { tol: 1e-7, ..Default::default() });
+        let r = solve_distributed(
+            &p,
+            &DicodConfig { n_workers: w, tol: 1e-7, inbox_every: delay, ..Default::default() },
+        );
+        let (cs, cd) = (p.cost(&seq.z), p.cost(&r.z));
+        r.converged && (cs - cd).abs() < 1e-5 * (1.0 + cs.abs())
+    });
+}
+
+#[test]
+fn soft_lock_never_triggers_with_one_worker() {
+    let data = SyntheticConfig::signal_1d(300, 2, 8).generate(9);
+    let p = CscProblem::with_lambda_frac(data.x.clone(), data.d_true.clone(), 0.1);
+    let r = solve_distributed(&p, &DicodConfig { n_workers: 1, tol: 1e-6, ..Default::default() });
+    assert_eq!(r.stats.soft_locked, 0);
+    assert_eq!(r.stats.msgs_sent, 0);
+}
+
+#[test]
+fn divergence_guard_fires_on_pathological_dictionary() {
+    // A dictionary of strongly overlapping (nearly identical) atoms makes
+    // CD amplitudes huge; with a very low guard the run must flag
+    // divergence rather than loop forever.
+    let mut rng = Pcg64::seeded(11);
+    let t = 200;
+    let base = rng.normal_vec(12);
+    let mut dvals = Vec::new();
+    for _ in 0..3 {
+        for b in &base {
+            dvals.push(b + 1e-3 * rng.normal());
+        }
+    }
+    let d = NdTensor::from_vec(&[3, 1, 12], dvals);
+    let x = NdTensor::from_vec(&[1, t], rng.normal_vec(t)).scale(100.0);
+    let p = CscProblem::with_lambda_frac(x, d, 0.001);
+    let r = solve_distributed(
+        &p,
+        &DicodConfig {
+            n_workers: 2,
+            divergence_guard: Some(1e-6), // absurdly low on purpose
+            tol: 1e-9,
+            timeout: 30.0,
+            ..Default::default()
+        },
+    );
+    assert!(r.diverged, "guard should have fired");
+    assert!(!r.converged);
+}

@@ -1,0 +1,104 @@
+//! End-to-end integration tests over the whole stack.
+
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::cdl::init::InitStrategy;
+use dicodile::csc::encode::{sparse_encode, EncodeConfig, Solver};
+use dicodile::csc::select::Strategy;
+use dicodile::data::starfield::StarfieldConfig;
+use dicodile::data::synthetic::{best_atom_correlation, SyntheticConfig};
+use dicodile::data::texture::TextureConfig;
+use dicodile::dicod::config::DicodConfig;
+
+#[test]
+fn encode_then_learn_roundtrip_1d() {
+    let w = SyntheticConfig::signal_1d(600, 3, 10).generate(1);
+    let enc = sparse_encode(&w.x, &w.d_true, &EncodeConfig::default());
+    assert!(enc.converged);
+    let cfg = CdlConfig {
+        n_atoms: 3,
+        atom_dims: vec![10],
+        max_iter: 10,
+        csc_tol: 1e-4,
+        seed: 1,
+        ..Default::default()
+    };
+    let learned = learn_dictionary(&w.x, &cfg).unwrap();
+    assert!(learned.trace.last().unwrap().cost <= learned.trace.first().unwrap().cost);
+}
+
+#[test]
+fn distributed_cdl_on_starfield_runs() {
+    let x = StarfieldConfig::with_size(48, 64).generate(2);
+    let cfg = CdlConfig {
+        n_atoms: 3,
+        atom_dims: vec![6, 6],
+        max_iter: 3,
+        csc_tol: 1e-2,
+        csc: CscBackend::Distributed(DicodConfig::dicodile(4)),
+        init: InitStrategy::RandomPatches,
+        seed: 2,
+        ..Default::default()
+    };
+    let r = learn_dictionary(&x, &cfg).unwrap();
+    assert_eq!(r.d.dims(), &[3, 1, 6, 6]);
+    assert!(r.trace.last().unwrap().cost.is_finite());
+    for k in 0..3 {
+        let n: f64 = r.d.slice0(k).iter().map(|v| v * v).sum();
+        assert!(n <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn all_solvers_agree_on_texture_patch() {
+    let x = TextureConfig::with_size(24, 24).generate(3);
+    let d = dicodile::cdl::init::init_dictionary(&x, 2, &[4, 4], InitStrategy::RandomPatches, 3);
+    let mk = |solver| EncodeConfig { solver, tol: 1e-8, max_iter: 5_000_000, ..Default::default() };
+    let a = sparse_encode(&x, &d, &mk(Solver::Sequential(Strategy::LocallyGreedy)));
+    let b = sparse_encode(&x, &d, &mk(Solver::Sequential(Strategy::Greedy)));
+    let c = sparse_encode(&x, &d, &mk(Solver::Distributed(DicodConfig::dicodile(4))));
+    let f = sparse_encode(
+        &x,
+        &d,
+        &EncodeConfig { solver: Solver::Fista, tol: 1e-9, max_iter: 20_000, ..Default::default() },
+    );
+    let tol = 1e-4 * (1.0 + a.cost.abs());
+    assert!((a.cost - b.cost).abs() < tol, "lgcd {} vs gcd {}", a.cost, b.cost);
+    assert!((a.cost - c.cost).abs() < tol, "lgcd {} vs dist {}", a.cost, c.cost);
+    assert!((a.cost - f.cost).abs() < 10.0 * tol, "lgcd {} vs fista {}", a.cost, f.cost);
+}
+
+#[test]
+fn planted_dictionary_recovered_via_distributed_path() {
+    let mut gen = SyntheticConfig::signal_1d(2000, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.01;
+    let w = gen.generate(5);
+    let cfg = CdlConfig {
+        n_atoms: 2,
+        atom_dims: vec![8],
+        max_iter: 20,
+        csc_tol: 1e-5,
+        lambda_frac: 0.03,
+        csc: CscBackend::Distributed(DicodConfig::dicodile(3)),
+        seed: 5,
+        ..Default::default()
+    };
+    let r = learn_dictionary(&w.x, &cfg).unwrap();
+    let c0 = best_atom_correlation(r.d.slice0(0), &w.d_true, &[8]);
+    let c1 = best_atom_correlation(r.d.slice0(1), &w.d_true, &[8]);
+    assert!(c0.max(c1) > 0.85, "recovery failed: {c0:.3} {c1:.3}");
+}
+
+#[test]
+fn cli_binary_smoke() {
+    let bin = env!("CARGO_BIN_EXE_dicodile");
+    let out = std::process::Command::new(bin).arg("info").output().unwrap();
+    assert!(out.status.success());
+    let out = std::process::Command::new(bin)
+        .args(["csc", "--t", "600", "--k", "3", "--l", "12", "--solver", "lgcd"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("converged=true"), "{stdout}");
+}
