@@ -1,15 +1,22 @@
 //! Hot-path micro-benchmarks — the §Perf instrumentation.
 //!
-//! Times the four kernels the wall-clock figures are built from:
+//! Times the kernels the wall-clock figures are built from:
 //!   1. incremental beta update (eq. 8), d=1 and d=2
 //!   2. LGCD segment scan (candidate selection)
 //!   3. worker->worker message round trip
 //!   4. phi/psi sufficient statistics (seq vs parallel)
 //!   5. beta bootstrap: native vs PJRT artifact (when present)
+//!   6. beta bootstrap backend calibration: direct vs cached-plan FFT
+//!      on the `scaling_grid` texture workload; writes the
+//!      before/after record to BENCH_beta_bootstrap.json and validates
+//!      the `DICODILE_FFT_CROSSOVER` dispatch default
 //!
 //!     cargo bench --bench micro_hotpath
+//!     DICODILE_BENCH_REPS=1 cargo bench --bench micro_hotpath   # quick
 
 use dicodile::bench::{fmt_secs, time, BenchConfig, Table};
+use dicodile::conv::CorrEngine;
+use dicodile::util::json::Json;
 use dicodile::csc::beta::{BetaWindow, ZWindow};
 use dicodile::csc::problem::CscProblem;
 use dicodile::csc::select::Segments;
@@ -170,6 +177,72 @@ fn main() {
                     format!("{:.2}x vs native", t_native.median / t_art.median),
                 ]);
             }
+        }
+    }
+
+    // 6. beta bootstrap backend calibration on the scaling_grid
+    //    workload (texture image, random-patch dictionary): direct vs
+    //    cached-plan FFT, fresh engine per rep so atom-spectra
+    //    computation is charged to the FFT side (as in a real CDL
+    //    outer iteration, where the dictionary changes every update).
+    {
+        let bc6 = BenchConfig::from_env();
+        let mut entries = Vec::new();
+        let mut headline = (0usize, 0.0f64, 0.0f64); // (size, direct, fft)
+        for &(size, k, l) in &[(128usize, 5usize, 8usize), (256, 10, 16), (512, 16, 32)] {
+            let x = dicodile::data::texture::TextureConfig::with_size(size, size).generate(1);
+            let d = dicodile::cdl::init::init_dictionary(
+                &x,
+                k,
+                &[l, l],
+                dicodile::cdl::init::InitStrategy::RandomPatches,
+                1,
+            );
+            let t_direct = time(&bc6, || dicodile::conv::correlate_dict(&x, &d));
+            let t_fft = time(&bc6, || {
+                let eng = CorrEngine::new(d.clone());
+                eng.correlate_dict_fft(&x)
+            });
+            let speedup = t_direct.median / t_fft.median.max(1e-12);
+            table.row(vec![
+                "beta bootstrap calib".into(),
+                format!("direct d=2 {size}x{size} K={k} L={l}x{l}"),
+                fmt_secs(t_direct.median),
+                "-".into(),
+            ]);
+            table.row(vec![
+                "beta bootstrap calib".into(),
+                format!("fft    d=2 {size}x{size} K={k} L={l}x{l}"),
+                fmt_secs(t_fft.median),
+                format!("{speedup:.2}x vs direct"),
+            ]);
+            entries.push(Json::obj(vec![
+                ("workload", Json::str("scaling_grid texture")),
+                ("size", Json::Num(size as f64)),
+                ("n_atoms", Json::Num(k as f64)),
+                ("atom_side", Json::Num(l as f64)),
+                ("direct_median_s", Json::Num(t_direct.median)),
+                ("fft_median_s", Json::Num(t_fft.median)),
+                ("speedup", Json::Num(speedup)),
+                ("reps", Json::Num(t_direct.reps as f64)),
+            ]));
+            headline = (size, t_direct.median, t_fft.median);
+        }
+        let (size, direct_s, fft_s) = headline;
+        let record = Json::obj(vec![
+            ("bench", Json::str("beta_bootstrap")),
+            ("note", Json::str(
+                "before = direct corr(X, D); after = CorrEngine cached-plan FFT \
+                 (fresh engine per rep: atom spectra charged to the FFT side)",
+            )),
+            ("headline_size", Json::Num(size as f64)),
+            ("headline_speedup", Json::Num(direct_s / fft_s.max(1e-12))),
+            ("entries", Json::Arr(entries)),
+        ]);
+        let path = "BENCH_beta_bootstrap.json";
+        match std::fs::write(path, record.dumps()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("cannot write {path}: {e}"),
         }
     }
 

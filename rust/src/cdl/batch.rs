@@ -90,9 +90,12 @@ pub fn learn_dictionary_batch(
     let start = Instant::now();
     // Initialize from the first signal's patches.
     let mut d = init_dictionary(&xs[0], cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
+    // One engine for the whole corpus: the lambda_max bootstraps share
+    // the dictionary spectra instead of rebuilding them per signal.
+    let corr = crate::conv::CorrEngine::new(d.clone());
     let lambda = cfg.lambda_frac
         * xs.iter()
-            .map(|x| crate::csc::problem::lambda_max(x, &d))
+            .map(|x| corr.correlate_dict(x).norm_inf())
             .fold(0.0f64, f64::max);
     anyhow::ensure!(lambda > 0.0, "degenerate corpus: lambda_max = 0");
 

@@ -5,9 +5,16 @@
 //! (`phi = Z~*Z`, `psi = Z~*X`) and reconstructions on full images hit
 //! exactly this regime — the paper quotes the same FFT complexities in
 //! §4.2.
+//!
+//! Transforms run through the process-wide `FftPlanCache` and pad each
+//! axis to the smallest 5-smooth (`2^a 3^b 5^c`) length instead of the
+//! next power of two, bounding padding waste (a 1025-long axis pads to
+//! 1080, not 2048). Both real operands are packed into a single complex
+//! forward transform (split by conjugate symmetry), so a full
+//! convolution costs two cached-plan transforms instead of three.
 
 use crate::fft::complex::C64;
-use crate::fft::fft::{fftn, ifftn};
+use crate::fft::plan::{fftn_cached, good_size, split_packed_spectrum};
 
 /// Full convolution via zero-padded n-d FFT. Same contract as
 /// `direct::conv_full`.
@@ -19,30 +26,29 @@ pub fn conv_full_fft(
 ) -> (Vec<f64>, Vec<usize>) {
     assert_eq!(zdims.len(), ddims.len());
     let odims: Vec<usize> = zdims.iter().zip(ddims).map(|(a, b)| a + b - 1).collect();
-    // Pad each dim to a power of two for the radix-2 fast path.
-    let pdims: Vec<usize> = odims.iter().map(|&n| n.next_power_of_two()).collect();
+    // Pad each axis to the smallest 5-smooth length covering the full
+    // (linear) convolution support — circular wraparound cannot reach
+    // the output when the period covers it.
+    let pdims: Vec<usize> = odims.iter().map(|&n| good_size(n)).collect();
     let pn: usize = pdims.iter().product();
 
-    let mut fa = vec![C64::ZERO; pn];
-    embed(z, zdims, &mut fa, &pdims);
-    let mut fb = vec![C64::ZERO; pn];
-    embed(d, ddims, &mut fb, &pdims);
-
-    fftn(&mut fa, &pdims);
-    fftn(&mut fb, &pdims);
-    for (a, b) in fa.iter_mut().zip(&fb) {
-        *a = *a * *b;
-    }
-    ifftn(&mut fa, &pdims);
+    let mut buf = vec![C64::ZERO; pn];
+    embed_real(z, zdims, &mut buf, &pdims, false);
+    embed_real(d, ddims, &mut buf, &pdims, true);
+    fftn_cached(&mut buf, &pdims, false);
+    let (zh, dh) = split_packed_spectrum(&buf, &pdims);
+    let mut prod: Vec<C64> = zh.iter().zip(&dh).map(|(a, b)| *a * *b).collect();
+    fftn_cached(&mut prod, &pdims, true);
 
     let mut out = vec![0.0; odims.iter().product()];
-    extract(&fa, &pdims, &mut out, &odims);
+    extract_real(&prod, &pdims, &mut out, &odims);
     (out, odims)
 }
 
 /// Windowed cross-correlation via FFT:
 /// `cc[delta] = sum_l a[l] b[l + delta]` = `conv_full(reverse(a), b)`
-/// shifted by `len(a) - 1`. Same contract as `direct::cross_corr_range`.
+/// shifted by `len(a) - 1`. Same contract as `direct::cross_corr_range`
+/// (deltas beyond the overlap support read as 0).
 pub fn cross_corr_range_fft(
     a: &[f64],
     adims: &[usize],
@@ -83,40 +89,61 @@ pub fn cross_corr_range_fft(
     (out, odims)
 }
 
-fn embed(src: &[f64], sdims: &[usize], dst: &mut [C64], ddims: &[usize]) {
-    // Copy src into the low corner of the padded complex buffer.
+/// Copy a real field into the low corner of a zeroed complex buffer,
+/// writing the real (or imaginary, for the packed-pair fast path)
+/// component.
+pub(crate) fn embed_real(
+    src: &[f64],
+    sdims: &[usize],
+    dst: &mut [C64],
+    ddims: &[usize],
+    imag: bool,
+) {
     match sdims.len() {
         1 => {
             for (i, &v) in src.iter().enumerate() {
-                dst[i] = C64::from_re(v);
+                if imag {
+                    dst[i].im = v;
+                } else {
+                    dst[i].re = v;
+                }
             }
         }
         2 => {
             let (sw, dw) = (sdims[1], ddims[1]);
             for i in 0..sdims[0] {
                 for j in 0..sw {
-                    dst[i * dw + j] = C64::from_re(src[i * sw + j]);
+                    let c = &mut dst[i * dw + j];
+                    if imag {
+                        c.im = src[i * sw + j];
+                    } else {
+                        c.re = src[i * sw + j];
+                    }
                 }
             }
         }
         _ => {
-            let sstr = crate::tensor::shape::strides_of(sdims);
             let dstr = crate::tensor::shape::strides_of(ddims);
-            for off in 0..src.len() {
+            for (off, &v) in src.iter().enumerate() {
                 let idx = crate::tensor::shape::index_of(off, sdims);
                 let doff: usize = idx.iter().zip(&dstr).map(|(x, s)| x * s).sum();
-                let _ = &sstr;
-                dst[doff] = C64::from_re(src[off]);
+                if imag {
+                    dst[doff].im = v;
+                } else {
+                    dst[doff].re = v;
+                }
             }
         }
     }
 }
 
-fn extract(src: &[C64], sdims: &[usize], dst: &mut [f64], ddims: &[usize]) {
+/// Copy the low-corner real parts of a complex buffer into a real
+/// output field.
+pub(crate) fn extract_real(src: &[C64], sdims: &[usize], dst: &mut [f64], ddims: &[usize]) {
     match ddims.len() {
         1 => {
-            for i in 0..ddims[0] {
-                dst[i] = src[i].re;
+            for (i, o) in dst.iter_mut().enumerate() {
+                *o = src[i].re;
             }
         }
         2 => {
@@ -129,10 +156,10 @@ fn extract(src: &[C64], sdims: &[usize], dst: &mut [f64], ddims: &[usize]) {
         }
         _ => {
             let sstr = crate::tensor::shape::strides_of(sdims);
-            for off in 0..dst.len() {
+            for (off, o) in dst.iter_mut().enumerate() {
                 let idx = crate::tensor::shape::index_of(off, ddims);
                 let soff: usize = idx.iter().zip(&sstr).map(|(x, s)| x * s).sum();
-                dst[off] = src[soff].re;
+                *o = src[soff].re;
             }
         }
     }
@@ -147,7 +174,7 @@ mod tests {
     #[test]
     fn conv_fft_matches_direct_1d() {
         let mut rng = Pcg64::seeded(1);
-        for (nz, nd) in [(8usize, 3usize), (100, 17), (63, 64)] {
+        for (nz, nd) in [(8usize, 3usize), (100, 17), (63, 64), (31, 7), (97, 13)] {
             let z = rng.normal_vec(nz);
             let d = rng.normal_vec(nd);
             let (a, _) = direct::conv_full(&z, &[nz], &d, &[nd]);
@@ -161,12 +188,26 @@ mod tests {
     #[test]
     fn conv_fft_matches_direct_2d() {
         let mut rng = Pcg64::seeded(2);
-        let z = rng.normal_vec(20 * 17);
-        let d = rng.normal_vec(5 * 4);
-        let (a, _) = direct::conv_full(&z, &[20, 17], &d, &[5, 4]);
-        let (b, _) = conv_full_fft(&z, &[20, 17], &d, &[5, 4]);
+        for (zh, zw, dh, dw) in [(20usize, 17usize, 5usize, 4usize), (13, 19, 3, 7)] {
+            let z = rng.normal_vec(zh * zw);
+            let d = rng.normal_vec(dh * dw);
+            let (a, _) = direct::conv_full(&z, &[zh, zw], &d, &[dh, dw]);
+            let (b, _) = conv_full_fft(&z, &[zh, zw], &d, &[dh, dw]);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-8, "{zh}x{zw} * {dh}x{dw}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_fft_matches_direct_3d() {
+        let mut rng = Pcg64::seeded(7);
+        let z = rng.normal_vec(4 * 5 * 3);
+        let d = rng.normal_vec(2 * 3 * 2);
+        let (a, _) = direct::conv_full(&z, &[4, 5, 3], &d, &[2, 3, 2]);
+        let (b, _) = conv_full_fft(&z, &[4, 5, 3], &d, &[2, 3, 2]);
         for (x, y) in a.iter().zip(&b) {
-            assert!((x - y).abs() < 1e-8);
+            assert!((x - y).abs() < 1e-9);
         }
     }
 

@@ -11,15 +11,71 @@
 //!
 //! `reconstruct` and `correlate_dict` are adjoint maps (tested), which
 //! is what makes the CD updates in `csc::beta` exact.
+//!
+//! # Backend dispatch
+//!
+//! Every batch-heavy operator in this module exists in (at least) two
+//! backends:
+//!
+//! - **direct** nested loops (`direct`, and the reference kernels in
+//!   this file) — `O(|out| * |kernel|)`, zero-skipping, allocation
+//!   light; unbeatable for small operands and sparse activations;
+//! - **FFT** through the process-wide `FftPlanCache`
+//!   (`fftconv`, `engine::CorrEngine`) — `O(n log n)` with 5-smooth
+//!   padding and cached dictionary spectra; wins for dense operands at
+//!   image scale.
+//!
+//! Dispatch compares modeled flop counts for the two backends
+//! (`engine::fft_beats_direct`); the crossover ratio defaults to 1.0
+//! and can be tuned with `DICODILE_FFT_CROSSOVER`. The calibration
+//! bench (`cargo bench --bench micro_hotpath`) times both backends on
+//! the `scaling_grid` texture workload, prints the observed speedups
+//! and records them in `BENCH_beta_bootstrap.json`, which is how the
+//! default ratio was validated. The PJRT artifact path
+//! (`runtime::hybrid::HybridOps`) sits on the same seam: artifacts are
+//! preferred when lowered for the exact shapes, and the native
+//! fallback is `CorrEngine`'s dispatched implementation.
 
 pub mod direct;
+pub mod engine;
 pub mod fftconv;
+
+pub use engine::CorrEngine;
 
 use crate::tensor::tensor::NdTensor;
 
-/// Above this output size the FFT path wins over direct loops for
-/// dense operands (empirical crossover on the CPU backend).
-const FFT_THRESHOLD: usize = 1 << 14;
+/// Windowed cross-correlation with size-based backend dispatch: the
+/// direct kernel below the modeled crossover, the cached-plan FFT
+/// above it. Same contract as `direct::cross_corr_range`.
+pub fn cross_corr_range_auto(
+    a: &[f64],
+    adims: &[usize],
+    b: &[f64],
+    bdims: &[usize],
+    lo: &[i64],
+    hi: &[i64],
+) -> (Vec<f64>, Vec<usize>) {
+    let out_sp: usize = lo
+        .iter()
+        .zip(hi)
+        .map(|(l, h)| (h - l).max(0) as usize)
+        .product();
+    let a_sp: usize = adims.iter().product();
+    let direct_flops = 2.0 * out_sp as f64 * a_sp as f64;
+    let pn: f64 = adims
+        .iter()
+        .zip(bdims)
+        .map(|(x, y)| crate::fft::good_size(x + y - 1))
+        .product::<usize>() as f64;
+    // The packed-pair conv_full_fft costs two cached-plan transforms
+    // plus a pointwise multiply.
+    let fft_flops = 2.0 * engine::transform_flops(pn) + 6.0 * pn;
+    if engine::fft_beats_direct(direct_flops, fft_flops) {
+        fftconv::cross_corr_range_fft(a, adims, b, bdims, lo, hi)
+    } else {
+        direct::cross_corr_range(a, adims, b, bdims, lo, hi)
+    }
+}
 
 /// Split `X: [P, T..]` dims into (P, spatial dims).
 pub fn split_channels(dims: &[usize]) -> (usize, &[usize]) {
@@ -53,13 +109,20 @@ pub fn reconstruct(z: &NdTensor, d: &NdTensor) -> NdTensor {
     xdims.extend_from_slice(&tdims);
     let mut out = NdTensor::zeros(&xdims);
     let atom_sp: usize = ldims.iter().product();
-    let use_fft = tdims.iter().product::<usize>() > FFT_THRESHOLD && zdims.iter().product::<usize>() > 4 * atom_sp;
+    // Per-atom flop models on the same dispatch seam as the engine
+    // (governed by DICODILE_FFT_CROSSOVER like every other crossover).
+    let pn: f64 = tdims
+        .iter()
+        .map(|&t| crate::fft::good_size(t))
+        .product::<usize>() as f64;
+    let fft_flops = 2.0 * engine::transform_flops(pn) + 6.0 * pn;
     for k in 0..k_z {
         let zk = z.slice0(k);
         // Sparse fast-path: direct conv skips zero activations, so for very
         // sparse Z the direct path beats the FFT regardless of size.
         let nnz = zk.iter().filter(|v| **v != 0.0).count();
-        let fft_here = use_fft && nnz * atom_sp > tdims.iter().product::<usize>();
+        let direct_flops = 2.0 * nnz as f64 * atom_sp as f64;
+        let fft_here = engine::fft_beats_direct(direct_flops, fft_flops);
         for pi in 0..p {
             let dk = &d.slice0(k)[pi * atom_sp..(pi + 1) * atom_sp];
             let (contrib, _) = if fft_here {
@@ -186,14 +249,10 @@ pub fn compute_phi(z: &NdTensor, ldims: &[usize]) -> NdTensor {
         return out;
     }
 
-    let use_fft = z.dims()[1..].iter().product::<usize>() > FFT_THRESHOLD;
     for k0 in 0..k {
         for k1 in 0..k {
-            let (c, _) = if use_fft {
-                fftconv::cross_corr_range_fft(z.slice0(k0), zdims, z.slice0(k1), zdims, &lo, &hi)
-            } else {
-                direct::cross_corr_range(z.slice0(k0), zdims, z.slice0(k1), zdims, &lo, &hi)
-            };
+            let (c, _) =
+                cross_corr_range_auto(z.slice0(k0), zdims, z.slice0(k1), zdims, &lo, &hi);
             let base = (k0 * k + k1) * cc_sp;
             out.data_mut()[base..base + cc_sp].copy_from_slice(&c);
         }
@@ -268,14 +327,10 @@ pub fn compute_psi(z: &NdTensor, x: &NdTensor, ldims: &[usize]) -> NdTensor {
         return out;
     }
 
-    let use_fft = tdims.iter().product::<usize>() > FFT_THRESHOLD;
     for ki in 0..k {
         for pi in 0..p {
-            let (c, _) = if use_fft {
-                fftconv::cross_corr_range_fft(z.slice0(ki), zdims, x.slice0(pi), tdims, &lo, &hi)
-            } else {
-                direct::cross_corr_range(z.slice0(ki), zdims, x.slice0(pi), tdims, &lo, &hi)
-            };
+            let (c, _) =
+                cross_corr_range_auto(z.slice0(ki), zdims, x.slice0(pi), tdims, &lo, &hi);
             let base = (ki * p + pi) * atom_sp;
             out.data_mut()[base..base + atom_sp].copy_from_slice(&c);
         }

@@ -63,8 +63,12 @@ pub struct BetaWindow {
 
 impl BetaWindow {
     /// Initialize for `Z = 0` on the full domain: `beta = corr(X, D)`.
+    ///
+    /// Dispatched through the problem's `CorrEngine`: direct kernels
+    /// below the size crossover, cached-spectra FFT (`O(n log n)`,
+    /// §4.2) above it.
     pub fn init_full(problem: &CscProblem) -> Self {
-        let beta0 = conv::correlate_dict(&problem.x, &problem.d);
+        let beta0 = problem.corr.correlate_dict(&problem.x);
         let zsp = problem.z_spatial_dims();
         BetaWindow {
             data: beta0.into_vec(),
@@ -77,7 +81,7 @@ impl BetaWindow {
     /// Initialize for a warm-start `Z` on the full domain.
     pub fn init_full_warm(problem: &CscProblem, z: &NdTensor) -> Self {
         let resid = problem.residual(z);
-        let mut beta = conv::correlate_dict(&resid, &problem.d);
+        let mut beta = problem.corr.correlate_dict(&resid);
         // Add back each coordinate's own contribution.
         for (b, (zv, k)) in beta
             .data_mut()
@@ -97,15 +101,39 @@ impl BetaWindow {
 
     /// Initialize on a sub-window `[origin, origin + local_dims)` for
     /// `Z = 0`: the slice of `corr(X, D)` over the window. Used by the
-    /// distributed workers; `O(K |window| |Theta|)`.
+    /// distributed workers (halo-extended, per-worker bootstrap).
+    ///
+    /// Backend dispatch mirrors `init_full`: below the crossover the
+    /// hand-specialized direct loops run (`O(K |window| |Theta|)`);
+    /// above it the problem's `CorrEngine` correlates the sliced signal
+    /// window through the cached-plan FFT path — workers with
+    /// equally-sized windows share both the FFT plans and the
+    /// per-padded-size dictionary spectra.
     pub fn init_window(problem: &CscProblem, origin: &[i64], local_dims: &[usize]) -> Self {
-        // Correlate only the window: beta_k[u] = sum_{p,l} X[p,u+l] D_k[p,l]
-        // for u in the window (global coords; all in-bounds by construction).
         let k_tot = problem.n_atoms();
         let p_tot = problem.n_channels();
         let ldims = problem.atom_dims().to_vec();
         let tdims = problem.signal_dims().to_vec();
         let sp: usize = local_dims.iter().product();
+        let wdims: Vec<usize> = local_dims
+            .iter()
+            .zip(&ldims)
+            .map(|(n, l)| n + l - 1)
+            .collect();
+        // The generic-rank path and every FFT-preferred window go
+        // through the engine on the sliced window; d <= 2 windows below
+        // the crossover keep the allocation-light direct loops below.
+        if local_dims.len() > 2 || problem.corr.prefers_fft_correlate(&wdims) {
+            let xwin = problem.signal_window(origin, local_dims);
+            let beta = problem.corr.correlate_dict(&xwin);
+            debug_assert_eq!(&beta.dims()[1..], local_dims);
+            return BetaWindow {
+                data: beta.into_vec(),
+                n_atoms: k_tot,
+                local_dims: local_dims.to_vec(),
+                origin: origin.to_vec(),
+            };
+        }
         let mut data = vec![0.0; k_tot * sp];
         let atom_sp: usize = ldims.iter().product();
         match local_dims.len() {
@@ -154,34 +182,7 @@ impl BetaWindow {
                     }
                 }
             }
-            _ => {
-                // Generic path: full correlate then slice the window.
-                let full = conv::correlate_dict(&problem.x, &problem.d);
-                let zsp = problem.z_spatial_dims();
-                let win = Rect::new(
-                    origin.to_vec(),
-                    origin
-                        .iter()
-                        .zip(local_dims)
-                        .map(|(o, n)| o + *n as i64)
-                        .collect(),
-                );
-                let fstr = crate::tensor::shape::strides_of(&zsp);
-                let lstr = crate::tensor::shape::strides_of(local_dims);
-                for k in 0..k_tot {
-                    for u in win.iter() {
-                        let foff: usize =
-                            u.iter().zip(&fstr).map(|(x, s)| *x as usize * s).sum();
-                        let loff: usize = u
-                            .iter()
-                            .zip(origin)
-                            .zip(&lstr)
-                            .map(|((x, o), s)| (*x - *o) as usize * s)
-                            .sum();
-                        data[k * sp + loff] = full.slice0(k)[foff];
-                    }
-                }
-            }
+            _ => unreachable!("rank > 2 windows take the engine path above"),
         }
         BetaWindow {
             data,

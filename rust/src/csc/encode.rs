@@ -4,6 +4,12 @@
 //! (lambda as a fraction of `lambda_max`, per the paper) and dispatches
 //! to the sequential CD engine, FISTA, or the distributed DiCoDiLe-Z
 //! solver depending on the configuration.
+//!
+//! Every solver behind this entry point shares the problem's
+//! `CorrEngine`: the lambda_max bootstrap, the solvers' beta
+//! initializations (full-domain or per-worker halo windows), FISTA's
+//! gradient maps and the final cost evaluations all run through the
+//! same direct/FFT dispatch seam with cached dictionary spectra.
 
 use crate::csc::cd::{solve_cd, CdConfig, CdStats};
 use crate::csc::fista::{solve_fista, FistaConfig};

@@ -43,14 +43,19 @@ pub struct FistaResult {
 }
 
 /// Estimate the Lipschitz constant `||A||_2^2` by power iteration.
+///
+/// Each iteration applies `A` and `A^T` through the problem's
+/// `CorrEngine`, so at image scale both maps run on the cached-spectra
+/// FFT path (the power iterate is dense, where the direct kernels are
+/// slowest).
 pub fn lipschitz_estimate(problem: &CscProblem, iters: usize, seed: u64) -> f64 {
     let mut rng = Pcg64::seeded(seed);
     let zdims = problem.z_dims();
     let mut v = NdTensor::from_vec(&zdims, rng.normal_vec(zdims.iter().product()));
     let mut eig = 1.0;
     for _ in 0..iters {
-        let av = conv::reconstruct(&v, &problem.d);
-        let atav = conv::correlate_dict(&av, &problem.d);
+        let av = problem.corr.reconstruct(&v);
+        let atav = problem.corr.correlate_dict(&av);
         eig = atav.norm2();
         if eig == 0.0 {
             return 1.0;
@@ -77,8 +82,8 @@ pub fn solve_fista(problem: &CscProblem, cfg: &FistaConfig) -> FistaResult {
     for it in 0..cfg.max_iter {
         iterations = it + 1;
         // grad of smooth part at y: -corr(X - y*D, D)
-        let resid = problem.x.sub(&conv::reconstruct(&y, &problem.d));
-        let grad = conv::correlate_dict(&resid, &problem.d); // = -true grad
+        let resid = problem.residual(&y);
+        let grad = problem.corr.correlate_dict(&resid); // = -true grad
         // prox step
         let mut z_next = y.clone();
         for (zn, (yv, g)) in z_next

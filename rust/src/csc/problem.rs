@@ -7,9 +7,13 @@
 //! `CscProblem` owns the observation, the dictionary and the derived
 //! quantities every solver needs: the atom cross-correlation tensor
 //! `DtD` (for the O(K |Theta|) incremental beta updates of eq. 8), the
-//! atom norms (CD update denominators) and `lambda`.
+//! atom norms (CD update denominators), `lambda`, and the
+//! frequency-domain [`CorrEngine`] that serves the batch-heavy
+//! operators (beta bootstrap, residual reconstruction) from cached
+//! dictionary spectra with size-based direct/FFT dispatch.
 
 use crate::conv;
+use crate::conv::CorrEngine;
 use crate::tensor::NdTensor;
 
 /// A fully-specified CSC instance.
@@ -28,11 +32,30 @@ pub struct CscProblem {
     /// `1 / ||D_k||_2^2` per atom (hot-path: avoids a divide per
     /// scanned coordinate in the LGCD selection loop).
     pub inv_norms_sq: Vec<f64>,
+    /// Frequency-domain engine bound to `d` (cached spectra + plan
+    /// cache); shared by the sequential solver, every DiCoDiLe worker
+    /// and the PJRT fallback path. Clones share the spectra cache.
+    pub corr: CorrEngine,
 }
 
 impl CscProblem {
     /// Build a problem; precomputes `DtD` and atom norms.
     pub fn new(x: NdTensor, d: NdTensor, lambda: f64) -> Self {
+        let corr = CorrEngine::new(d.clone());
+        Self::with_engine(x, d, lambda, corr)
+    }
+
+    /// Build with `lambda = frac * lambda_max` (the paper's convention,
+    /// `frac = 0.1` throughout its experiments).
+    pub fn with_lambda_frac(x: NdTensor, d: NdTensor, frac: f64) -> Self {
+        // Build the engine once and reuse it for the lambda_max
+        // bootstrap so the dictionary spectra are not computed twice.
+        let corr = CorrEngine::new(d.clone());
+        let lmax = corr.correlate_dict(&x).norm_inf();
+        Self::with_engine(x, d, frac * lmax, corr)
+    }
+
+    fn with_engine(x: NdTensor, d: NdTensor, lambda: f64, corr: CorrEngine) -> Self {
         assert!(lambda > 0.0, "lambda must be positive");
         assert_eq!(
             x.dims()[0],
@@ -44,14 +67,7 @@ impl CscProblem {
         let dtd = conv::compute_dtd(&d);
         let norms_sq = conv::atom_norms_sq(&d);
         let inv_norms_sq = norms_sq.iter().map(|&n| 1.0 / n.max(1e-300)).collect();
-        CscProblem { x, d, lambda, dtd, norms_sq, inv_norms_sq }
-    }
-
-    /// Build with `lambda = frac * lambda_max` (the paper's convention,
-    /// `frac = 0.1` throughout its experiments).
-    pub fn with_lambda_frac(x: NdTensor, d: NdTensor, frac: f64) -> Self {
-        let lmax = lambda_max(&x, &d);
-        Self::new(x, d, frac * lmax)
+        CscProblem { x, d, lambda, dtd, norms_sq, inv_norms_sq, corr }
     }
 
     /// Number of atoms K.
@@ -91,9 +107,47 @@ impl CscProblem {
         NdTensor::zeros(&self.z_dims())
     }
 
-    /// Residual `X - Z * D`.
+    /// Residual `X - Z * D` (reconstruction dispatched between the
+    /// zero-skipping direct kernel and the cached-spectra FFT path by
+    /// activation density and size).
     pub fn residual(&self, z: &NdTensor) -> NdTensor {
-        self.x.sub(&conv::reconstruct(z, &self.d))
+        self.x.sub(&self.corr.reconstruct(z))
+    }
+
+    /// Copy of the observation restricted to the signal window a beta
+    /// sub-window `[origin, origin + local_dims)` of the activation
+    /// domain needs: `[P, local_dims + L - 1]` starting at `origin`
+    /// (always in-bounds — `origin + local <= T'` and `T' + L - 1 = T`).
+    pub fn signal_window(&self, origin: &[i64], local_dims: &[usize]) -> NdTensor {
+        let tdims = self.signal_dims().to_vec();
+        let p = self.n_channels();
+        let wdims: Vec<usize> = local_dims
+            .iter()
+            .zip(self.atom_dims())
+            .map(|(n, l)| n + l - 1)
+            .collect();
+        let wsp: usize = wdims.iter().product();
+        let tstr = crate::tensor::shape::strides_of(&tdims);
+        let win = crate::tensor::shape::Rect::new(
+            origin.to_vec(),
+            origin
+                .iter()
+                .zip(&wdims)
+                .map(|(o, n)| o + *n as i64)
+                .collect(),
+        );
+        let mut odims = vec![p];
+        odims.extend_from_slice(&wdims);
+        let mut out = NdTensor::zeros(&odims);
+        for pi in 0..p {
+            let src = self.x.slice0(pi);
+            let dst = &mut out.data_mut()[pi * wsp..(pi + 1) * wsp];
+            for (i, u) in win.iter().enumerate() {
+                let off: usize = u.iter().zip(&tstr).map(|(x, s)| *x as usize * s).sum();
+                dst[i] = src[off];
+            }
+        }
+        out
     }
 
     /// Objective `1/2 ||X - Z*D||^2 + lambda ||Z||_1`.
@@ -119,7 +173,7 @@ impl CscProblem {
 /// Smallest lambda for which `Z = 0` is optimal:
 /// `lambda_max = || corr(X, D) ||_inf` (eq. 5).
 pub fn lambda_max(x: &NdTensor, d: &NdTensor) -> f64 {
-    conv::correlate_dict(x, d).norm_inf()
+    CorrEngine::new(d.clone()).correlate_dict(x).norm_inf()
 }
 
 #[cfg(test)]
@@ -184,6 +238,24 @@ mod tests {
         z.set(off, znew);
         let after = p.cost(&z);
         assert!(after <= before + 1e-12, "{after} vs {before}");
+    }
+
+    #[test]
+    fn signal_window_matches_direct_slice() {
+        let mut rng = Pcg64::seeded(7);
+        let x = NdTensor::from_vec(&[2, 9, 11], rng.normal_vec(198));
+        let d = NdTensor::from_vec(&[2, 2, 3, 4], rng.normal_vec(48));
+        let p = CscProblem::new(x, d, 0.5);
+        let win = p.signal_window(&[2, 3], &[4, 5]);
+        // window signal dims = local + L - 1 = [6, 8]
+        assert_eq!(win.dims(), &[2, 6, 8]);
+        for pi in 0..2 {
+            for i in 0..6 {
+                for j in 0..8 {
+                    assert_eq!(win.at(&[pi, i, j]), p.x.at(&[pi, 2 + i, 3 + j]));
+                }
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
     let ext_dims = ext.extents();
     let k_tot = problem.n_atoms();
 
+    // Halo-window beta bootstrap: dispatched through the problem's
+    // CorrEngine, so same-size worker windows share FFT plans and the
+    // per-padded-size dictionary spectra (computed once per dictionary
+    // update, not once per worker).
     let mut beta = BetaWindow::init_window(problem, &ext.lo, &ext_dims);
     let mut z = ZWindow::zeros(k_tot, &ext.lo, &ext_dims);
 

@@ -132,7 +132,7 @@ fn local_stats(
 
     for k0 in 0..k_tot {
         for k1 in 0..k_tot {
-            let (cc, _) = conv::direct::cross_corr_range(
+            let (cc, _) = conv::cross_corr_range_auto(
                 &cells[k0], &cell_ext, &exts[k1], &ext_ext, &lo, &hi,
             );
             let base = (k0 * k_tot + k1) * cc_sp;
@@ -158,7 +158,7 @@ fn local_stats(
     for p in 0..p_tot {
         let xw = copy_window(x.slice0(p), &tdims, &xwin);
         for (k, zc) in cells.iter().enumerate() {
-            let (cc, _) = conv::direct::cross_corr_range(
+            let (cc, _) = conv::cross_corr_range_auto(
                 zc, &cell_ext, &xw, &xwin_ext, &plo, &phi_hi,
             );
             let base = (k * p_tot + p) * atom_sp;

@@ -1,96 +1,23 @@
-//! FFT substrate: iterative radix-2 Cooley–Tukey plus Bluestein's
+//! FFT substrate: mixed-radix (2/3/5) Cooley–Tukey plus Bluestein's
 //! algorithm for arbitrary lengths, and an n-dimensional transform built
 //! on the 1-D kernels.
 //!
-//! Used by `conv::fftconv` (large-kernel convolutions, the dictionary
-//! update statistics) and by the Consensus-ADMM baseline, which solves
-//! its linear systems in the Fourier domain (Skau & Wohlberg 2018).
+//! All entry points delegate to the process-wide [`FftPlanCache`]
+//! (`fft::plan`), so twiddle tables and Bluestein chirp spectra are
+//! derived once per length and reused across calls — the solvers, the
+//! DiCoDiLe worker threads and the Consensus-ADMM baseline (which
+//! solves its linear systems in the Fourier domain, Skau & Wohlberg
+//! 2018) all share the same plans.
 
 use super::complex::C64;
-
-/// In-place forward FFT of a power-of-two-length buffer.
-fn fft_pow2(buf: &mut [C64], inverse: bool) {
-    let n = buf.len();
-    debug_assert!(n.is_power_of_two());
-    if n <= 1 {
-        return;
-    }
-    // Bit-reversal permutation.
-    let mut j = 0usize;
-    for i in 1..n {
-        let mut bit = n >> 1;
-        while j & bit != 0 {
-            j ^= bit;
-            bit >>= 1;
-        }
-        j |= bit;
-        if i < j {
-            buf.swap(i, j);
-        }
-    }
-    // Butterflies.
-    let sign = if inverse { 1.0 } else { -1.0 };
-    let mut len = 2;
-    while len <= n {
-        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
-        let wlen = C64::cis(ang);
-        let mut i = 0;
-        while i < n {
-            let mut w = C64::ONE;
-            for k in 0..len / 2 {
-                let u = buf[i + k];
-                let v = buf[i + k + len / 2] * w;
-                buf[i + k] = u + v;
-                buf[i + k + len / 2] = u - v;
-                w = w * wlen;
-            }
-            i += len;
-        }
-        len <<= 1;
-    }
-}
-
-/// Bluestein's chirp-z transform: FFT of arbitrary length via a
-/// power-of-two convolution.
-fn fft_bluestein(buf: &mut [C64], inverse: bool) {
-    let n = buf.len();
-    let sign = if inverse { 1.0 } else { -1.0 };
-    // chirp[k] = exp(sign * i * pi * k^2 / n)
-    let mut chirp = vec![C64::ZERO; n];
-    for k in 0..n {
-        // k^2 mod 2n avoids precision loss for large k.
-        let k2 = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
-        chirp[k] = C64::cis(sign * std::f64::consts::PI * k2 / n as f64);
-    }
-    let m = (2 * n - 1).next_power_of_two();
-    let mut a = vec![C64::ZERO; m];
-    let mut b = vec![C64::ZERO; m];
-    for k in 0..n {
-        a[k] = buf[k] * chirp[k];
-        b[k] = chirp[k].conj();
-    }
-    for k in 1..n {
-        b[m - k] = chirp[k].conj();
-    }
-    fft_pow2(&mut a, false);
-    fft_pow2(&mut b, false);
-    for k in 0..m {
-        a[k] = a[k] * b[k];
-    }
-    fft_pow2(&mut a, true);
-    let scale = 1.0 / m as f64;
-    for k in 0..n {
-        buf[k] = a[k].scale(scale) * chirp[k];
-    }
-}
+use super::plan::{fftn_cached, FftPlanCache};
 
 /// In-place forward DFT (any length). No normalization.
 pub fn fft(buf: &mut [C64]) {
-    if buf.len().is_power_of_two() {
-        fft_pow2(buf, false);
-    } else {
-        fft_bluestein(buf, false);
+    if buf.len() <= 1 {
+        return;
     }
+    FftPlanCache::global().plan(buf.len()).process(buf, false);
 }
 
 /// In-place inverse DFT (any length), normalized by 1/n.
@@ -99,15 +26,10 @@ pub fn ifft(buf: &mut [C64]) {
     if n == 0 {
         return;
     }
-    if n.is_power_of_two() {
-        fft_pow2(buf, true);
-    } else {
-        fft_bluestein(buf, true);
+    if n == 1 {
+        return;
     }
-    let s = 1.0 / n as f64;
-    for x in buf.iter_mut() {
-        *x = x.scale(s);
-    }
+    FftPlanCache::global().plan(n).process(buf, true);
 }
 
 /// Forward DFT of a real signal; returns the full complex spectrum.
@@ -127,43 +49,12 @@ pub fn ifft_real(spectrum: &[C64]) -> Vec<f64> {
 
 /// n-dimensional FFT over a row-major buffer with `dims`, in place.
 pub fn fftn(buf: &mut [C64], dims: &[usize]) {
-    transform_nd(buf, dims, fft);
+    fftn_cached(buf, dims, false);
 }
 
 /// n-dimensional inverse FFT over a row-major buffer with `dims`, in place.
 pub fn ifftn(buf: &mut [C64], dims: &[usize]) {
-    transform_nd(buf, dims, ifft);
-}
-
-fn transform_nd(buf: &mut [C64], dims: &[usize], f1d: fn(&mut [C64])) {
-    let n: usize = dims.iter().product();
-    assert_eq!(buf.len(), n);
-    if n == 0 {
-        return;
-    }
-    let d = dims.len();
-    let mut scratch = Vec::new();
-    for axis in 0..d {
-        let len = dims[axis];
-        if len == 1 {
-            continue;
-        }
-        let stride: usize = dims[axis + 1..].iter().product();
-        let outer: usize = dims[..axis].iter().product();
-        scratch.resize(len, C64::ZERO);
-        for o in 0..outer {
-            for s in 0..stride {
-                let base = o * len * stride + s;
-                for k in 0..len {
-                    scratch[k] = buf[base + k * stride];
-                }
-                f1d(&mut scratch);
-                for k in 0..len {
-                    buf[base + k * stride] = scratch[k];
-                }
-            }
-        }
-    }
+    fftn_cached(buf, dims, true);
 }
 
 /// Naive O(n^2) DFT used as a test oracle.

@@ -1,7 +1,9 @@
-//! FFT substrate (complex arithmetic + 1-D/n-D transforms).
+//! FFT substrate (complex arithmetic + cached plans + 1-D/n-D transforms).
 
 pub mod complex;
 #[allow(clippy::module_inception)]
 pub mod fft;
+pub mod plan;
 
 pub use complex::C64;
+pub use plan::{good_size, FftPlan, FftPlanCache};

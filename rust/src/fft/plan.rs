@@ -1,0 +1,507 @@
+//! `FftPlanCache` — cached transform plans for the FFT substrate.
+//!
+//! The seed implementation re-derived twiddle factors (and, for
+//! non-power-of-two lengths, the entire Bluestein chirp + spectrum) on
+//! every call, and padded convolutions to the next power of two — up to
+//! ~2x memory/work per axis. This module fixes both:
+//!
+//! - [`FftPlan`] holds everything length-dependent: the forward twiddle
+//!   table for a mixed-radix (2/3/5) Cooley–Tukey transform, or the
+//!   chirp vectors and precomputed chirp-filter spectra for Bluestein's
+//!   algorithm on non-5-smooth lengths (whose internal power-of-two
+//!   sub-plan is itself fetched from the cache).
+//! - [`FftPlanCache`] memoizes plans by length behind a mutex; the
+//!   process-wide instance ([`FftPlanCache::global`]) turns per-call
+//!   planning into amortized cache hits across solver iterations and
+//!   across DiCoDiLe workers.
+//! - [`good_size`] returns the smallest 5-smooth (`2^a 3^b 5^c`) length
+//!   `>= n`, which the convolution layer uses instead of
+//!   `next_power_of_two` — the padded size is always within the
+//!   power-of-two bound and usually much tighter (e.g. 1 025 -> 1 080
+//!   instead of 2 048).
+//! - A real-input fast path: two real fields are packed into one
+//!   complex transform ([`split_packed_spectrum`] separates the spectra
+//!   via conjugate symmetry), halving the forward-transform count for
+//!   the batched correlation/reconstruction paths in `conv::engine`.
+//!
+//! All transforms compute the exact DFT (mixed-radix and Bluestein are
+//! algebraically exact), so results are bit-comparable in tolerance
+//! terms with the naive `O(n^2)` oracle used by the tests.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::complex::C64;
+
+/// Smallest 5-smooth number (`2^a 3^b 5^c`) that is `>= n`.
+///
+/// Never exceeds `n.next_power_of_two()`, since pure powers of two are
+/// themselves candidates.
+pub fn good_size(n: usize) -> usize {
+    if n <= 2 {
+        return n.max(1);
+    }
+    let mut best = usize::MAX;
+    let mut p5 = 1usize;
+    while p5 < best {
+        let mut p35 = p5;
+        while p35 < best {
+            let mut m = p35;
+            while m < n {
+                m *= 2;
+            }
+            if m < best {
+                best = m;
+            }
+            p35 *= 3;
+        }
+        p5 *= 5;
+    }
+    best
+}
+
+/// Is `n` composed only of the factors 2, 3 and 5?
+pub fn is_smooth(n: usize) -> bool {
+    if n == 0 {
+        return false;
+    }
+    let mut m = n;
+    for f in [2usize, 3, 5] {
+        while m % f == 0 {
+            m /= f;
+        }
+    }
+    m == 1
+}
+
+enum PlanKind {
+    /// `n <= 1`: the identity transform.
+    Tiny,
+    /// Mixed-radix (2/3/5) Cooley–Tukey with a shared twiddle table
+    /// `tw[t] = exp(-2 pi i t / n)`; the inverse conjugates on the fly.
+    Smooth { tw: Vec<C64> },
+    /// Bluestein chirp-z for arbitrary lengths: chirps and the
+    /// pre-transformed chirp filter for both directions, plus the
+    /// power-of-two sub-plan (shared through the cache).
+    Bluestein {
+        m: usize,
+        sub: Arc<FftPlan>,
+        chirp_f: Vec<C64>,
+        chirp_i: Vec<C64>,
+        bhat_f: Vec<C64>,
+        bhat_i: Vec<C64>,
+    },
+}
+
+/// A cached DFT plan for one transform length.
+pub struct FftPlan {
+    n: usize,
+    kind: PlanKind,
+}
+
+impl FftPlan {
+    fn build(n: usize, cache: &FftPlanCache) -> FftPlan {
+        if n <= 1 {
+            return FftPlan { n, kind: PlanKind::Tiny };
+        }
+        if is_smooth(n) {
+            let tw: Vec<C64> = (0..n)
+                .map(|t| C64::cis(-2.0 * std::f64::consts::PI * t as f64 / n as f64))
+                .collect();
+            return FftPlan { n, kind: PlanKind::Smooth { tw } };
+        }
+        // Bluestein: chirp[k] = exp(sign * i pi k^2 / n); k^2 taken mod 2n
+        // to keep the angle argument small for large k.
+        let chirp = |sign: f64| -> Vec<C64> {
+            (0..n)
+                .map(|k| {
+                    let k2 = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+                    C64::cis(sign * std::f64::consts::PI * k2 / n as f64)
+                })
+                .collect()
+        };
+        let chirp_f = chirp(-1.0);
+        let chirp_i = chirp(1.0);
+        let m = (2 * n - 1).next_power_of_two();
+        let sub = cache.plan(m);
+        let bhat = |c: &[C64]| -> Vec<C64> {
+            let mut b = vec![C64::ZERO; m];
+            for k in 0..n {
+                b[k] = c[k].conj();
+            }
+            for k in 1..n {
+                b[m - k] = c[k].conj();
+            }
+            sub.process(&mut b, false);
+            b
+        };
+        let bhat_f = bhat(&chirp_f);
+        let bhat_i = bhat(&chirp_i);
+        FftPlan {
+            n,
+            kind: PlanKind::Bluestein { m, sub, chirp_f, chirp_i, bhat_f, bhat_i },
+        }
+    }
+
+    /// Transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place DFT (`inverse = true` applies the 1/n normalization).
+    pub fn process(&self, buf: &mut [C64], inverse: bool) {
+        let mut scratch = Vec::new();
+        self.process_with_scratch(buf, &mut scratch, inverse);
+    }
+
+    /// In-place DFT reusing a caller-owned scratch vector (resized as
+    /// needed) — the allocation-free path for batched row transforms.
+    pub fn process_with_scratch(&self, buf: &mut [C64], scratch: &mut Vec<C64>, inverse: bool) {
+        assert_eq!(buf.len(), self.n, "buffer length != plan length");
+        match &self.kind {
+            PlanKind::Tiny => {}
+            PlanKind::Smooth { tw } => {
+                scratch.clear();
+                scratch.resize(self.n, C64::ZERO);
+                fft_rec(buf, &mut scratch[..], tw, self.n, inverse);
+            }
+            PlanKind::Bluestein { m, sub, chirp_f, chirp_i, bhat_f, bhat_i } => {
+                let (chirp, bhat) = if inverse { (chirp_i, bhat_i) } else { (chirp_f, bhat_f) };
+                scratch.clear();
+                scratch.resize(*m, C64::ZERO);
+                for k in 0..self.n {
+                    scratch[k] = buf[k] * chirp[k];
+                }
+                sub.process(&mut scratch[..], false);
+                for (x, b) in scratch.iter_mut().zip(bhat) {
+                    *x = *x * *b;
+                }
+                sub.process(&mut scratch[..], true); // includes the 1/m scale
+                for k in 0..self.n {
+                    buf[k] = scratch[k] * chirp[k];
+                }
+            }
+        }
+        if inverse && self.n > 1 {
+            let s = 1.0 / self.n as f64;
+            for x in buf.iter_mut() {
+                *x = x.scale(s);
+            }
+        }
+    }
+}
+
+/// Recursive mixed-radix decimation-in-time.
+///
+/// `tw` is the twiddle table of the *root* transform (`root` entries,
+/// forward sign); any level size `n` divides `root`, so
+/// `w_n^t = tw[(t mod n) * (root / n)]`.
+fn fft_rec(data: &mut [C64], scratch: &mut [C64], tw: &[C64], root: usize, inverse: bool) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let r = if n % 2 == 0 {
+        2
+    } else if n % 3 == 0 {
+        3
+    } else {
+        5
+    };
+    let m = n / r;
+    // Decimate: residue class q of the input becomes sub-signal q.
+    for q in 0..r {
+        for j in 0..m {
+            scratch[q * m + j] = data[j * r + q];
+        }
+    }
+    // Sub-transforms (data's prefix doubles as their scratch: its
+    // content was fully copied out above).
+    for q in 0..r {
+        fft_rec(&mut scratch[q * m..(q + 1) * m], &mut data[..m], tw, root, inverse);
+    }
+    // Combine: X[k] = sum_q w_n^{qk} X_q[k mod m].
+    let step = root / n;
+    for k in 0..n {
+        let km = k % m;
+        let mut acc = scratch[km];
+        for q in 1..r {
+            let t = ((q * k) % n) * step;
+            let w = if inverse { tw[t].conj() } else { tw[t] };
+            acc += w * scratch[q * m + km];
+        }
+        data[k] = acc;
+    }
+}
+
+/// Length-keyed plan cache.
+pub struct FftPlanCache {
+    plans: Mutex<HashMap<usize, Arc<FftPlan>>>,
+}
+
+impl Default for FftPlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FftPlanCache {
+    pub fn new() -> FftPlanCache {
+        FftPlanCache { plans: Mutex::new(HashMap::new()) }
+    }
+
+    /// The process-wide cache: shared by the sequential solvers, every
+    /// DiCoDiLe worker thread and the ADMM baselines.
+    pub fn global() -> &'static FftPlanCache {
+        static GLOBAL: OnceLock<FftPlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(FftPlanCache::new)
+    }
+
+    /// Fetch (or build) the plan for length `n`.
+    pub fn plan(&self, n: usize) -> Arc<FftPlan> {
+        if let Some(p) = self.plans.lock().unwrap().get(&n) {
+            return p.clone();
+        }
+        // Build outside the lock: Bluestein plans recursively fetch
+        // their power-of-two sub-plan from this same cache.
+        let built = Arc::new(FftPlan::build(n, self));
+        self.plans
+            .lock()
+            .unwrap()
+            .entry(n)
+            .or_insert(built)
+            .clone()
+    }
+
+    /// Number of distinct lengths currently planned.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// n-dimensional cached-plan FFT over a row-major buffer, in place.
+pub fn fftn_cached(buf: &mut [C64], dims: &[usize], inverse: bool) {
+    let n: usize = dims.iter().product();
+    assert_eq!(buf.len(), n);
+    if n == 0 {
+        return;
+    }
+    let cache = FftPlanCache::global();
+    let d = dims.len();
+    let mut line: Vec<C64> = Vec::new();
+    let mut scratch: Vec<C64> = Vec::new();
+    for axis in 0..d {
+        let len = dims[axis];
+        if len <= 1 {
+            continue;
+        }
+        let plan = cache.plan(len);
+        let stride: usize = dims[axis + 1..].iter().product();
+        let outer: usize = dims[..axis].iter().product();
+        line.clear();
+        line.resize(len, C64::ZERO);
+        for o in 0..outer {
+            for s in 0..stride {
+                let base = o * len * stride + s;
+                for k in 0..len {
+                    line[k] = buf[base + k * stride];
+                }
+                plan.process_with_scratch(&mut line, &mut scratch, inverse);
+                for k in 0..len {
+                    buf[base + k * stride] = line[k];
+                }
+            }
+        }
+    }
+}
+
+/// Separate the spectra of two real fields packed as `a + i b` into one
+/// complex transform, using conjugate symmetry:
+/// `A[k] = (F[k] + conj(F[-k])) / 2`, `B[k] = (F[k] - conj(F[-k])) / (2i)`
+/// with `-k` taken per-axis modulo `dims`.
+pub fn split_packed_spectrum(f: &[C64], dims: &[usize]) -> (Vec<C64>, Vec<C64>) {
+    let n: usize = dims.iter().product();
+    assert_eq!(f.len(), n);
+    let strides = crate::tensor::shape::strides_of(dims);
+    let d = dims.len();
+    let mut ga = vec![C64::ZERO; n];
+    let mut gb = vec![C64::ZERO; n];
+    let mut idx = vec![0usize; d];
+    for off in 0..n {
+        let mut noff = 0usize;
+        for i in 0..d {
+            let x = idx[i];
+            let nx = if x == 0 { 0 } else { dims[i] - x };
+            noff += nx * strides[i];
+        }
+        let fk = f[off];
+        let fnk = f[noff].conj();
+        let sum = fk + fnk;
+        let diff = fk - fnk;
+        ga[off] = sum.scale(0.5);
+        // diff = 2i B  =>  B = (diff.im - i diff.re) / 2
+        gb[off] = C64::new(diff.im * 0.5, -diff.re * 0.5);
+        for i in (0..d).rev() {
+            idx[i] += 1;
+            if idx[i] < dims[i] {
+                break;
+            }
+            idx[i] = 0;
+        }
+    }
+    (ga, gb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fft::dft_naive;
+    use crate::util::rng::Pcg64;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn close(a: &[C64], b: &[C64], tol: f64) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (*x - *y).abs() < tol)
+    }
+
+    #[test]
+    fn good_size_properties() {
+        for n in 1..=2000usize {
+            let g = good_size(n);
+            assert!(g >= n, "good_size({n}) = {g} < n");
+            assert!(is_smooth(g), "good_size({n}) = {g} not 5-smooth");
+            assert!(
+                g <= n.next_power_of_two(),
+                "good_size({n}) = {g} exceeds pow2 bound {}",
+                n.next_power_of_two()
+            );
+        }
+        assert_eq!(good_size(1), 1);
+        assert_eq!(good_size(17), 18);
+        assert_eq!(good_size(97), 100);
+        assert_eq!(good_size(1025), 1080);
+    }
+
+    #[test]
+    fn smooth_plans_match_naive_dft() {
+        let cache = FftPlanCache::new();
+        for n in [1usize, 2, 3, 4, 5, 6, 8, 9, 10, 12, 15, 16, 18, 20, 24, 25, 27, 30, 45, 60, 64, 100, 120] {
+            assert!(is_smooth(n));
+            let sig = rand_signal(n, n as u64);
+            let mut got = sig.clone();
+            cache.plan(n).process(&mut got, false);
+            assert!(close(&got, &dft_naive(&sig), 1e-8 * (n as f64).max(1.0)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn bluestein_plans_match_naive_dft() {
+        let cache = FftPlanCache::new();
+        for n in [7usize, 11, 13, 14, 21, 22, 33, 49, 97, 131] {
+            assert!(!is_smooth(n));
+            let sig = rand_signal(n, 1000 + n as u64);
+            let mut got = sig.clone();
+            cache.plan(n).process(&mut got, false);
+            assert!(close(&got, &dft_naive(&sig), 1e-7 * (n as f64)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips_all_lengths() {
+        let cache = FftPlanCache::new();
+        for n in [1usize, 2, 5, 7, 12, 13, 30, 49, 90, 97, 128] {
+            let sig = rand_signal(n, 7 + n as u64);
+            let mut buf = sig.clone();
+            let plan = cache.plan(n);
+            plan.process(&mut buf, false);
+            plan.process(&mut buf, true);
+            assert!(close(&buf, &sig, 1e-9 * (n as f64).max(1.0)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cache_reuses_plans() {
+        let cache = FftPlanCache::new();
+        let a = cache.plan(60);
+        let b = cache.plan(60);
+        assert!(Arc::ptr_eq(&a, &b));
+        // A Bluestein plan pulls its pow2 sub-plan into the same cache.
+        let before = cache.len();
+        let _ = cache.plan(7); // m = 16
+        assert!(cache.len() >= before + 2);
+        let sub = cache.plan(16);
+        let again = cache.plan(16);
+        assert!(Arc::ptr_eq(&sub, &again));
+    }
+
+    #[test]
+    fn fftn_cached_matches_per_axis_naive() {
+        let dims = [6usize, 10];
+        let sig = rand_signal(60, 99);
+        let mut got = sig.clone();
+        fftn_cached(&mut got, &dims, false);
+        // oracle: rows then columns with the naive DFT
+        let mut oracle = sig;
+        for r in 0..6 {
+            let row: Vec<C64> = (0..10).map(|c| oracle[r * 10 + c]).collect();
+            let t = dft_naive(&row);
+            for c in 0..10 {
+                oracle[r * 10 + c] = t[c];
+            }
+        }
+        for c in 0..10 {
+            let col: Vec<C64> = (0..6).map(|r| oracle[r * 10 + c]).collect();
+            let t = dft_naive(&col);
+            for r in 0..6 {
+                oracle[r * 10 + c] = t[r];
+            }
+        }
+        assert!(close(&got, &oracle, 1e-9 * 60.0));
+    }
+
+    #[test]
+    fn packed_pair_matches_separate_transforms_1d() {
+        let mut rng = Pcg64::seeded(5);
+        let n = 24usize;
+        let a: Vec<f64> = rng.normal_vec(n);
+        let b: Vec<f64> = rng.normal_vec(n);
+        let mut packed: Vec<C64> = a.iter().zip(&b).map(|(&x, &y)| C64::new(x, y)).collect();
+        fftn_cached(&mut packed, &[n], false);
+        let (ga, gb) = split_packed_spectrum(&packed, &[n]);
+        let mut fa: Vec<C64> = a.iter().map(|&x| C64::from_re(x)).collect();
+        let mut fb: Vec<C64> = b.iter().map(|&x| C64::from_re(x)).collect();
+        fftn_cached(&mut fa, &[n], false);
+        fftn_cached(&mut fb, &[n], false);
+        assert!(close(&ga, &fa, 1e-9 * n as f64));
+        assert!(close(&gb, &fb, 1e-9 * n as f64));
+    }
+
+    #[test]
+    fn packed_pair_matches_separate_transforms_2d() {
+        let mut rng = Pcg64::seeded(6);
+        let dims = [9usize, 10];
+        let n = 90usize;
+        let a: Vec<f64> = rng.normal_vec(n);
+        let b: Vec<f64> = rng.normal_vec(n);
+        let mut packed: Vec<C64> = a.iter().zip(&b).map(|(&x, &y)| C64::new(x, y)).collect();
+        fftn_cached(&mut packed, &dims, false);
+        let (ga, gb) = split_packed_spectrum(&packed, &dims);
+        let mut fa: Vec<C64> = a.iter().map(|&x| C64::from_re(x)).collect();
+        let mut fb: Vec<C64> = b.iter().map(|&x| C64::from_re(x)).collect();
+        fftn_cached(&mut fa, &dims, false);
+        fftn_cached(&mut fb, &dims, false);
+        assert!(close(&ga, &fa, 1e-9 * n as f64));
+        assert!(close(&gb, &fb, 1e-9 * n as f64));
+    }
+}

@@ -5,137 +5,192 @@
 //! Interchange format is HLO *text* (not serialized protos): jax >= 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT path needs the `xla` bindings, which the offline container
+//! cannot vendor. The real engine is therefore gated behind the `pjrt`
+//! feature; the default build ships a stub with the same surface whose
+//! `try_default` always yields `None`, so every caller falls through to
+//! the native implementations (see `runtime::hybrid` and
+//! `conv::engine::CorrEngine`, which provide the FFT-backed native
+//! fast path on the same dispatch seam).
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-use crate::runtime::manifest::{ArtifactEntry, Manifest};
-use crate::tensor::NdTensor;
+    use crate::runtime::manifest::{ArtifactEntry, Manifest};
+    use crate::tensor::NdTensor;
 
-/// A lazily-compiled artifact registry bound to one PJRT client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl Engine {
-    /// Create an engine over an artifacts directory.
-    pub fn new(dir: &Path) -> anyhow::Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    /// A lazily-compiled artifact registry bound to one PJRT client.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    /// Create from the default directory if a manifest is present.
-    pub fn try_default() -> Option<Engine> {
-        let dir = Manifest::default_dir();
-        Engine::new(&dir).ok()
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Does an artifact exist for this op and these input shapes?
-    pub fn supports(&self, name: &str, input_shapes: &[&[usize]]) -> bool {
-        self.manifest.find(name, input_shapes).is_some()
-    }
-
-    /// Execute an artifact on f64 tensors (converted to f32 literals,
-    /// the dtype the artifacts are lowered with). Returns the tuple of
-    /// outputs as f64 tensors.
-    pub fn execute(&self, name: &str, inputs: &[&NdTensor]) -> anyhow::Result<Vec<NdTensor>> {
-        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.dims()).collect();
-        let entry = self
-            .manifest
-            .find(name, &shapes)
-            .ok_or_else(|| anyhow::anyhow!("no artifact for {name} with shapes {shapes:?}"))?
-            .clone();
-        let exe = self.compiled(&entry)?;
-
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let f32s: Vec<f32> = t.data().iter().map(|&v| v as f32).collect();
-                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&f32s)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
-            })
-            .collect::<anyhow::Result<_>>()?;
-
-        let result = {
-            let cache = self.cache.lock().unwrap();
-            let exe_ref = cache.get(&cache_key(&entry)).unwrap();
-            exe_ref
-                .execute::<xla::Literal>(&literals)
-                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?
-        };
-        let _ = exe;
-        let out_literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-        // Artifacts are lowered with return_tuple=True.
-        let parts = out_literal
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
-        anyhow::ensure!(
-            parts.len() == entry.output_shapes.len(),
-            "artifact {name}: expected {} outputs, got {}",
-            entry.output_shapes.len(),
-            parts.len()
-        );
-        parts
-            .into_iter()
-            .zip(&entry.output_shapes)
-            .map(|(lit, dims)| {
-                let vals: Vec<f32> = lit
-                    .to_vec()
-                    .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
-                anyhow::ensure!(
-                    vals.len() == dims.iter().product::<usize>(),
-                    "artifact {name}: output size mismatch"
-                );
-                Ok(NdTensor::from_vec(dims, vals.into_iter().map(|v| v as f64).collect()))
-            })
-            .collect()
-    }
-
-    /// Compile (or fetch from cache) an artifact.
-    fn compiled(&self, entry: &ArtifactEntry) -> anyhow::Result<()> {
-        let key = cache_key(entry);
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(&key) {
-            return Ok(());
+    impl Engine {
+        /// Create an engine over an artifacts directory.
+        pub fn new(dir: &Path) -> anyhow::Result<Engine> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
         }
-        let path = self.manifest.path_of(entry);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
-        cache.insert(key, exe);
-        Ok(())
+
+        /// Create from the default directory if a manifest is present.
+        pub fn try_default() -> Option<Engine> {
+            let dir = Manifest::default_dir();
+            Engine::new(&dir).ok()
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Does an artifact exist for this op and these input shapes?
+        pub fn supports(&self, name: &str, input_shapes: &[&[usize]]) -> bool {
+            self.manifest.find(name, input_shapes).is_some()
+        }
+
+        /// Execute an artifact on f64 tensors (converted to f32 literals,
+        /// the dtype the artifacts are lowered with). Returns the tuple of
+        /// outputs as f64 tensors.
+        pub fn execute(&self, name: &str, inputs: &[&NdTensor]) -> anyhow::Result<Vec<NdTensor>> {
+            let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.dims()).collect();
+            let entry = self
+                .manifest
+                .find(name, &shapes)
+                .ok_or_else(|| anyhow::anyhow!("no artifact for {name} with shapes {shapes:?}"))?
+                .clone();
+            let exe = self.compiled(&entry)?;
+
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let f32s: Vec<f32> = t.data().iter().map(|&v| v as f32).collect();
+                    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&f32s)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+
+            let result = {
+                let cache = self.cache.lock().unwrap();
+                let exe_ref = cache.get(&cache_key(&entry)).unwrap();
+                exe_ref
+                    .execute::<xla::Literal>(&literals)
+                    .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?
+            };
+            let _ = exe;
+            let out_literal = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+            // Artifacts are lowered with return_tuple=True.
+            let parts = out_literal
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+            anyhow::ensure!(
+                parts.len() == entry.output_shapes.len(),
+                "artifact {name}: expected {} outputs, got {}",
+                entry.output_shapes.len(),
+                parts.len()
+            );
+            parts
+                .into_iter()
+                .zip(&entry.output_shapes)
+                .map(|(lit, dims)| {
+                    let vals: Vec<f32> = lit
+                        .to_vec()
+                        .map_err(|e| anyhow::anyhow!("literal read: {e:?}"))?;
+                    anyhow::ensure!(
+                        vals.len() == dims.iter().product::<usize>(),
+                        "artifact {name}: output size mismatch"
+                    );
+                    Ok(NdTensor::from_vec(dims, vals.into_iter().map(|v| v as f64).collect()))
+                })
+                .collect()
+        }
+
+        /// Compile (or fetch from cache) an artifact.
+        fn compiled(&self, entry: &ArtifactEntry) -> anyhow::Result<()> {
+            let key = cache_key(entry);
+            let mut cache = self.cache.lock().unwrap();
+            if cache.contains_key(&key) {
+                return Ok(());
+            }
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+            cache.insert(key, exe);
+            Ok(())
+        }
+    }
+
+    fn cache_key(entry: &ArtifactEntry) -> String {
+        format!("{}:{}", entry.name, entry.file.display())
     }
 }
 
-fn cache_key(entry: &ArtifactEntry) -> String {
-    format!("{}:{}", entry.name, entry.file.display())
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use crate::runtime::manifest::Manifest;
+    use crate::tensor::NdTensor;
+
+    /// Stub engine for builds without the `pjrt` feature: never loads,
+    /// never matches an artifact. Callers see the exact same API and
+    /// transparently take the native path.
+    pub struct Engine {
+        manifest: Manifest,
+    }
+
+    impl Engine {
+        pub fn new(_dir: &Path) -> anyhow::Result<Engine> {
+            Err(anyhow::anyhow!(
+                "built without the `pjrt` feature: PJRT artifact execution is unavailable"
+            ))
+        }
+
+        pub fn try_default() -> Option<Engine> {
+            None
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn supports(&self, _name: &str, _input_shapes: &[&[usize]]) -> bool {
+            false
+        }
+
+        pub fn execute(&self, name: &str, _inputs: &[&NdTensor]) -> anyhow::Result<Vec<NdTensor>> {
+            Err(anyhow::anyhow!(
+                "no artifact backend for {name}: built without the `pjrt` feature"
+            ))
+        }
+    }
 }
+
+pub use imp::Engine;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     /// These tests only run when `make artifacts` has produced the
-    /// manifest (they are the runtime side of the AOT contract).
+    /// manifest (they are the runtime side of the AOT contract) and the
+    /// build enables the `pjrt` feature.
     fn engine() -> Option<Engine> {
         Engine::try_default()
     }
@@ -143,9 +198,17 @@ mod tests {
     #[test]
     fn engine_loads_when_artifacts_present() {
         let Some(e) = engine() else {
-            eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+            eprintln!("skipping: no artifacts/manifest.json or no pjrt feature");
             return;
         };
         assert!(!e.manifest().entries.is_empty());
+    }
+
+    #[test]
+    fn stub_or_missing_artifacts_fall_back() {
+        // Regardless of feature flags, `new` on a directory without a
+        // manifest must error rather than panic.
+        let dir = std::env::temp_dir().join("dicodile_engine_none");
+        assert!(Engine::new(&dir).is_err());
     }
 }

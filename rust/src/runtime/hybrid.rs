@@ -51,7 +51,10 @@ impl HybridOps {
     }
 
     /// beta bootstrap `corr(X, D) : [K, T'..]` (the FLOP-heavy start of
-    /// every CSC solve).
+    /// every CSC solve). The native fallback is the problem's
+    /// `CorrEngine`, so the PJRT artifact path and the cached-plan FFT
+    /// path sit on one dispatch seam: artifact if lowered for the exact
+    /// shapes, else direct/FFT by the size crossover.
     pub fn beta_init(&self, problem: &CscProblem) -> NdTensor {
         if let Some(engine) = &self.engine {
             let shapes: Vec<&[usize]> = vec![problem.x.dims(), problem.d.dims()];
@@ -63,7 +66,7 @@ impl HybridOps {
             }
         }
         self.native_calls.fetch_add(1, Ordering::Relaxed);
-        crate::conv::correlate_dict(&problem.x, &problem.d)
+        problem.corr.correlate_dict(&problem.x)
     }
 
     /// Objective `1/2||X - Z*D||^2 + lambda ||Z||_1`.

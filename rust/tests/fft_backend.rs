@@ -1,0 +1,218 @@
+//! Property tests for the frequency-domain backend (proptest-lite):
+//!
+//! - FFT <-> direct parity of the convolution/correlation operators
+//!   within scale-aware tolerances, across 1-D/2-D shapes, odd sizes
+//!   and multi-channel inputs;
+//! - the distributed workers' halo-window beta bootstrap must equal
+//!   the corresponding slice of the full-domain bootstrap for every
+//!   partition geometry (both the dispatched and the forced-FFT path).
+
+use dicodile::conv::{self, CorrEngine};
+use dicodile::csc::beta::BetaWindow;
+use dicodile::csc::problem::CscProblem;
+use dicodile::dicod::partition::{PartitionKind, WorkerGrid};
+use dicodile::tensor::NdTensor;
+use dicodile::util::proptest_lite::{check, FnGen};
+use dicodile::util::rng::Pcg64;
+
+fn rand_tensor(dims: &[usize], rng: &mut Pcg64) -> NdTensor {
+    NdTensor::from_vec(dims, rng.normal_vec(dims.iter().product()))
+}
+
+/// Scale-aware closeness: absolute error relative to the reference's
+/// magnitude (FFT error grows with transform size and data scale).
+fn close(a: &NdTensor, b: &NdTensor, rel: f64) -> bool {
+    a.dims() == b.dims() && a.max_abs_diff(b) <= rel * (1.0 + b.norm_inf())
+}
+
+#[test]
+fn correlate_fft_matches_direct_random_1d() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let l = 2 + rng.below(11); // 2..=12, hits odd atom sizes
+        let t = l + 1 + rng.below(90); // odd and even signal lengths
+        let k = 1 + rng.below(4);
+        let p = 1 + rng.below(3);
+        let seed = rng.next_u64();
+        (t, l, k, p, seed)
+    });
+    check("corr fft == direct (1d)", 25, &gen, |&(t, l, k, p, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let x = rand_tensor(&[p, t], &mut rng);
+        let d = rand_tensor(&[k, p, l], &mut rng);
+        let eng = CorrEngine::new(d.clone());
+        let fft = eng.correlate_dict_fft(&x);
+        let direct = conv::correlate_dict(&x, &d);
+        close(&fft, &direct, 1e-9)
+    });
+}
+
+#[test]
+fn correlate_fft_matches_direct_random_2d() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let l0 = 2 + rng.below(5);
+        let l1 = 2 + rng.below(5);
+        let t0 = l0 + 1 + rng.below(28);
+        let t1 = l1 + 1 + rng.below(28);
+        let k = 1 + rng.below(3);
+        let p = 1 + rng.below(3);
+        let seed = rng.next_u64();
+        (t0, t1, l0, l1, k, p, seed)
+    });
+    check("corr fft == direct (2d)", 15, &gen, |&(t0, t1, l0, l1, k, p, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let x = rand_tensor(&[p, t0, t1], &mut rng);
+        let d = rand_tensor(&[k, p, l0, l1], &mut rng);
+        let eng = CorrEngine::new(d.clone());
+        let fft = eng.correlate_dict_fft(&x);
+        let direct = conv::correlate_dict(&x, &d);
+        close(&fft, &direct, 1e-9)
+    });
+}
+
+#[test]
+fn conv_full_fft_matches_direct_random() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let two_d = rng.bernoulli(0.5);
+        let seed = rng.next_u64();
+        if two_d {
+            (vec![2 + rng.below(24), 2 + rng.below(24)], vec![1 + rng.below(6), 1 + rng.below(6)], seed)
+        } else {
+            (vec![1 + rng.below(80)], vec![1 + rng.below(16)], seed)
+        }
+    });
+    check("conv_full fft == direct", 25, &gen, |(zdims, ddims, seed)| {
+        let mut rng = Pcg64::seeded(*seed);
+        let z = rng.normal_vec(zdims.iter().product());
+        let d = rng.normal_vec(ddims.iter().product());
+        let (a, adims) = conv::direct::conv_full(&z, zdims, &d, ddims);
+        let (b, bdims) = conv::fftconv::conv_full_fft(&z, zdims, &d, ddims);
+        if adims != bdims {
+            return false;
+        }
+        let scale = 1.0 + a.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        a.iter().zip(&b).all(|(x, y)| (x - y).abs() <= 1e-9 * scale)
+    });
+}
+
+#[test]
+fn reconstruct_fft_matches_direct_and_adjoint() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let l = 2 + rng.below(4);
+        let s0 = 6 + rng.below(14);
+        let s1 = 6 + rng.below(14);
+        let k = 1 + rng.below(3);
+        let p = 1 + rng.below(2);
+        let seed = rng.next_u64();
+        (s0, s1, l, k, p, seed)
+    });
+    check("reconstruct fft == direct + adjoint", 12, &gen, |&(s0, s1, l, k, p, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let z = rand_tensor(&[k, s0, s1], &mut rng);
+        let d = rand_tensor(&[k, p, l, l], &mut rng);
+        let eng = CorrEngine::new(d.clone());
+        let fft = eng.reconstruct_fft(&z);
+        let direct = conv::reconstruct(&z, &d);
+        if !close(&fft, &direct, 1e-9) {
+            return false;
+        }
+        // <reconstruct(Z), X> == <Z, correlate(X)> on the FFT paths too.
+        let x = rand_tensor(fft.dims(), &mut rng);
+        let lhs = fft.dot(&x);
+        let rhs = z.dot(&eng.correlate_dict_fft(&x));
+        (lhs - rhs).abs() <= 1e-8 * (1.0 + lhs.abs())
+    });
+}
+
+fn problem_1d(seed: u64) -> CscProblem {
+    let mut rng = Pcg64::seeded(seed);
+    let x = rand_tensor(&[2, 61], &mut rng);
+    let d = rand_tensor(&[3, 2, 5], &mut rng);
+    CscProblem::new(x, d, 0.4)
+}
+
+fn problem_2d(seed: u64) -> CscProblem {
+    let mut rng = Pcg64::seeded(seed);
+    let x = rand_tensor(&[1, 17, 19], &mut rng);
+    let d = rand_tensor(&[2, 1, 3, 4], &mut rng);
+    CscProblem::new(x, d, 0.4)
+}
+
+/// Every worker's halo-window bootstrap must equal the matching slice
+/// of the full-domain bootstrap, for every partition geometry.
+#[test]
+fn windowed_bootstrap_matches_full_for_every_partition() {
+    for (problem, kinds) in [
+        (problem_1d(1), vec![PartitionKind::Line]),
+        (problem_2d(2), vec![PartitionKind::Line, PartitionKind::Grid]),
+    ] {
+        let zsp = problem.z_spatial_dims();
+        let full = BetaWindow::init_full(&problem);
+        for kind in kinds {
+            for w in [1usize, 2, 3, 4] {
+                if w > zsp[0] {
+                    continue;
+                }
+                let grid = WorkerGrid::new(&zsp, problem.atom_dims(), w, kind);
+                for rank in 0..grid.n_workers() {
+                    let ext = grid.extended_cell(rank);
+                    let win = BetaWindow::init_window(&problem, &ext.lo, &ext.extents());
+                    for k in 0..problem.n_atoms() {
+                        for u in ext.iter() {
+                            let a = win.at(k, &u);
+                            let b = full.at(k, &u);
+                            assert!(
+                                (a - b).abs() <= 1e-9 * (1.0 + b.abs()),
+                                "{kind:?} W={w} rank={rank} k={k} u={u:?}: {a} vs {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Same property with the FFT path forced on the worker windows (the
+/// dispatched path may legitimately choose direct at these sizes).
+#[test]
+fn windowed_bootstrap_fft_path_matches_full_for_every_partition() {
+    for problem in [problem_1d(3), problem_2d(4)] {
+        let zsp = problem.z_spatial_dims();
+        let full = BetaWindow::init_full(&problem);
+        let kind = if zsp.len() == 1 { PartitionKind::Line } else { PartitionKind::Grid };
+        for w in [2usize, 4] {
+            if w > zsp[0] {
+                continue;
+            }
+            let grid = WorkerGrid::new(&zsp, problem.atom_dims(), w, kind);
+            for rank in 0..grid.n_workers() {
+                let ext = grid.extended_cell(rank);
+                let xwin = problem.signal_window(&ext.lo, &ext.extents());
+                let beta = problem.corr.correlate_dict_fft(&xwin);
+                let sp: usize = ext.extents().iter().product();
+                for k in 0..problem.n_atoms() {
+                    for (i, u) in ext.iter().enumerate() {
+                        let a = beta.data()[k * sp + i];
+                        let b = full.at(k, &u);
+                        assert!(
+                            (a - b).abs() <= 1e-9 * (1.0 + b.abs()),
+                            "rank={rank} k={k} u={u:?}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// lambda_max and the full bootstrap agree between the engine-routed
+/// path and the raw direct kernel.
+#[test]
+fn lambda_max_consistent_across_backends() {
+    let mut rng = Pcg64::seeded(9);
+    let x = rand_tensor(&[2, 120], &mut rng);
+    let d = rand_tensor(&[4, 2, 9], &mut rng);
+    let via_engine = dicodile::csc::problem::lambda_max(&x, &d);
+    let via_direct = conv::correlate_dict(&x, &d).norm_inf();
+    assert!((via_engine - via_direct).abs() <= 1e-9 * (1.0 + via_direct));
+}

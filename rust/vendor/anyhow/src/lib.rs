@@ -1,0 +1,107 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The container build has no registry access, so this vendored crate
+//! provides the small subset of the real `anyhow` API the workspace
+//! uses: a string-backed [`Error`], the [`Result`] alias and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Any `std::error::Error` can
+//! be converted into [`Error`] via `?`, mirroring the real crate's
+//! blanket `From` impl.
+
+use std::fmt;
+
+/// A string-backed error value.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement `std::error::Error` — that is what allows the blanket
+/// `From<E: std::error::Error>` conversion below to coexist with the
+/// standard library's reflexive `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn display_and_debug() {
+        let e = crate::anyhow!("broke at {}", 7);
+        assert_eq!(format!("{e}"), "broke at 7");
+        assert_eq!(format!("{e:?}"), "broke at 7");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn run() -> crate::Result<()> {
+            std::fs::read("/definitely/not/a/file/anywhere")?;
+            Ok(())
+        }
+        assert!(run().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: i32) -> crate::Result<i32> {
+            crate::ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                crate::bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(check(-1).is_err());
+        assert!(check(101).is_err());
+        assert_eq!(check(5).unwrap(), 5);
+    }
+}

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + full test suite + formatting check.
+#
+#   scripts/tier1.sh
+#
+# Also builds the bench targets (they are plain binaries with
+# `harness = false`, so `cargo bench` would otherwise be the only thing
+# compiling them) to keep the paper-figure reproductions from rotting.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo build --release --benches
+
+if cargo fmt --version >/dev/null 2>&1; then
+  # Advisory for now: the gate is build + tests; formatting drift is
+  # reported but does not fail tier-1 until the tree is rustfmt-clean.
+  cargo fmt --check || echo "warning: cargo fmt --check reports drift" >&2
+else
+  echo "cargo fmt unavailable; skipping format check" >&2
+fi
+
+echo "tier-1 OK"
