@@ -1,0 +1,137 @@
+//! CDL outer-iteration cost: teardown/respawn driver vs the persistent
+//! worker-pool runtime, per-iteration `csc_time` / `dict_time` —
+//! the before/after record for the residency tentpole. Writes
+//! BENCH_cdl_outer.json.
+//!
+//!     cargo bench --bench cdl_outer
+//!     DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer   # CI smoke
+
+use dicodile::bench::{BenchConfig, Table};
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CdlResult, CscBackend};
+use dicodile::data::starfield::StarfieldConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::tensor::NdTensor;
+use dicodile::util::json::Json;
+
+fn run(x: &NdTensor, persistent: bool, iters: usize, workers: usize) -> CdlResult {
+    let cfg = CdlConfig {
+        n_atoms: 5,
+        atom_dims: vec![8, 8],
+        lambda_frac: 0.1,
+        max_iter: iters,
+        nu: 0.0, // time every iteration in both modes
+        csc_tol: 5e-3,
+        csc: CscBackend::Distributed(DicodConfig {
+            persistent,
+            ..DicodConfig::dicodile(workers)
+        }),
+        seed: 1,
+        ..Default::default()
+    };
+    learn_dictionary(x, &cfg).expect("cdl run")
+}
+
+fn trace_entry(label: &str, r: &CdlResult) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(label)),
+        (
+            "csc_time",
+            Json::Arr(r.trace.iter().map(|t| Json::Num(t.csc_time)).collect()),
+        ),
+        (
+            "dict_time",
+            Json::Arr(r.trace.iter().map(|t| Json::Num(t.dict_time)).collect()),
+        ),
+        (
+            "cost",
+            Json::Arr(r.trace.iter().map(|t| Json::Num(t.cost)).collect()),
+        ),
+        (
+            "phipsi",
+            Json::Arr(r.trace.iter().map(|t| Json::str(t.phipsi_path)).collect()),
+        ),
+        ("total_s", Json::Num(r.runtime)),
+    ])
+}
+
+fn main() {
+    let bc = BenchConfig::from_env();
+    let (iters, workers) = (4usize, 4usize);
+    let x = StarfieldConfig::with_size(72, 108).generate(1);
+    println!(
+        "# CDL outer-iteration cost — teardown vs persistent pool \
+         (72x108 px, K=5, 8x8 atoms, W={workers}, {iters} iters, reps={})",
+        bc.reps
+    );
+
+    // Best-of-reps totals; the per-iteration trace shown is the last run's.
+    let mut best = |persistent: bool| -> (CdlResult, f64) {
+        let mut fastest = f64::MAX;
+        let mut last = None;
+        for _ in 0..bc.reps.max(1) {
+            let r = run(&x, persistent, iters, workers);
+            fastest = fastest.min(r.runtime);
+            last = Some(r);
+        }
+        (last.unwrap(), fastest)
+    };
+    let (teardown, teardown_s) = best(false);
+    let (persistent, persistent_s) = best(true);
+
+    let mut table = Table::new(&["iter", "csc td[s]", "csc pp[s]", "dict td[s]", "dict pp[s]"]);
+    for (a, b) in teardown.trace.iter().zip(&persistent.trace) {
+        table.row(vec![
+            a.iter.to_string(),
+            format!("{:.3}", a.csc_time),
+            format!("{:.3}", b.csc_time),
+            format!("{:.3}", a.dict_time),
+            format!("{:.3}", b.dict_time),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "total: teardown {:.2}s  persistent {:.2}s  ({:.2}x)",
+        teardown_s,
+        persistent_s,
+        teardown_s / persistent_s.max(1e-12)
+    );
+    if let Some(report) = &persistent.pool {
+        println!(
+            "residency: {} workers spawned once, {} cold beta inits, {} warm re-inits, {} gathers",
+            report.workers_spawned,
+            report.stats.beta_cold_inits,
+            report.stats.beta_warm_reinits,
+            report.stats.gathers
+        );
+    }
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("cdl_outer")),
+        (
+            "note",
+            Json::str(
+                "per-outer-iteration csc/dict wall-clock, teardown/respawn driver vs \
+                 persistent WorkerPool (workers resident across the CDL alternation)",
+            ),
+        ),
+        ("workload", Json::str("starfield 72x108, K=5, 8x8 atoms")),
+        ("workers", Json::Num(workers as f64)),
+        ("outer_iters", Json::Num(iters as f64)),
+        ("reps", Json::Num(bc.reps.max(1) as f64)),
+        ("teardown_total_s", Json::Num(teardown_s)),
+        ("persistent_total_s", Json::Num(persistent_s)),
+        ("speedup", Json::Num(teardown_s / persistent_s.max(1e-12))),
+        (
+            "entries",
+            Json::Arr(vec![
+                trace_entry("teardown", &teardown),
+                trace_entry("persistent", &persistent),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_cdl_outer.json";
+    match std::fs::write(path, record.dumps()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
+}

@@ -169,7 +169,7 @@ fn main() {
         if let Some(engine) = Engine::try_default() {
             let shapes: Vec<&[usize]> = vec![p.x.dims(), p.d.dims()];
             if engine.supports("beta_init", &shapes) {
-                let t_art = time(&bc, || engine.execute("beta_init", &[&p.x, &p.d]).unwrap());
+                let t_art = time(&bc, || engine.execute("beta_init", &[p.x.as_ref(), &p.d]).unwrap());
                 table.row(vec![
                     "beta bootstrap".into(),
                     "PJRT artifact (same)".into(),

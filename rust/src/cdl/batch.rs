@@ -8,6 +8,7 @@
 //! and the corpus size. The CSC steps are embarrassingly parallel
 //! across signals (each can itself be a DiCoDiLe-Z grid).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cdl::driver::{CscBackend, IterRecord};
@@ -15,9 +16,9 @@ use crate::cdl::init::{init_dictionary, InitStrategy};
 use crate::csc::cd::{solve_cd_warm, CdConfig};
 use crate::csc::problem::CscProblem;
 use crate::csc::select::Strategy;
-use crate::dicod::coordinator::solve_distributed;
+use crate::dicod::coordinator::solve_distributed_warm;
 use crate::dict::pgd::{update_dict, PgdConfig};
-use crate::dict::phi_psi::{compute_stats_parallel, DictStats};
+use crate::dict::phi_psi::{compute_stats_auto, DictStats};
 use crate::tensor::NdTensor;
 
 /// Batch CDL configuration (mirrors `CdlConfig` plus corpus handling).
@@ -99,6 +100,9 @@ pub fn learn_dictionary_batch(
             .fold(0.0f64, f64::max);
     anyhow::ensure!(lambda > 0.0, "degenerate corpus: lambda_max = 0");
 
+    // Share each observation once; per-iteration problems reuse the
+    // Arcs instead of recloning the corpus.
+    let xs_shared: Vec<Arc<NdTensor>> = xs.iter().map(|x| Arc::new(x.clone())).collect();
     let mut zs: Vec<Option<NdTensor>> = vec![None; xs.len()];
     let mut trace: Vec<IterRecord> = Vec::new();
     let mut converged = false;
@@ -108,7 +112,7 @@ pub fn learn_dictionary_batch(
         let t0 = Instant::now();
         let mut cost_after_csc = 0.0;
         let mut nnz = 0usize;
-        for (x, z_slot) in xs.iter().zip(zs.iter_mut()) {
+        for (x, z_slot) in xs_shared.iter().zip(zs.iter_mut()) {
             let problem = CscProblem::new(x.clone(), d.clone(), lambda);
             let z = match &cfg.csc {
                 CscBackend::Sequential => {
@@ -124,10 +128,16 @@ pub fn learn_dictionary_batch(
                     )
                     .z
                 }
-                CscBackend::Distributed(dcfg) => {
+                // The corpus loop does not hold per-signal resident
+                // pools yet (a ROADMAP follow-up): both distributed
+                // variants run one temporary pool per signal, but each
+                // is warm-started from that signal's previous
+                // activations, so converged coordinates still carry
+                // over between outer iterations.
+                CscBackend::Distributed(dcfg) | CscBackend::Persistent(dcfg) => {
                     let mut dcfg = dcfg.clone();
                     dcfg.tol = cfg.csc_tol;
-                    solve_distributed(&problem, &dcfg).z
+                    solve_distributed_warm(&problem, &dcfg, z_slot.as_ref()).z
                 }
             };
             cost_after_csc += problem.cost(&z);
@@ -139,13 +149,19 @@ pub fn learn_dictionary_batch(
         // ---- summed statistics + one dictionary update ----------------------
         let t1 = Instant::now();
         let mut agg: Option<DictStats> = None;
+        let mut phipsi_path: Option<&'static str> = None;
         for (x, z) in xs.iter().zip(&zs) {
-            let s = compute_stats_parallel(
+            let (s, path) = compute_stats_auto(
                 z.as_ref().unwrap(),
                 x,
                 &cfg.atom_dims,
                 cfg.stat_workers,
             );
+            phipsi_path = Some(match phipsi_path {
+                None => path,
+                Some(prev) if prev == path => path,
+                Some(_) => "mixed",
+            });
             agg = Some(match agg {
                 None => s,
                 Some(mut a) => {
@@ -170,6 +186,7 @@ pub fn learn_dictionary_batch(
             csc_time,
             dict_time,
             elapsed: start.elapsed().as_secs_f64(),
+            phipsi_path: phipsi_path.unwrap_or("sparse-seq"),
         };
         let prev = trace.last().map(|r| r.cost);
         trace.push(rec);

@@ -7,7 +7,22 @@
 //!   D <- PGD with Armijo line search
 //! until cost variation < nu
 //! ```
+//!
+//! Two execution modes:
+//!
+//! - **Persistent** (the paper's design, default for
+//!   `DicodConfig::dicodile`): one resident [`WorkerPool`] serves the
+//!   whole run. Workers are spawned once, keep their Z/beta windows
+//!   across alternations (warm restarts), compute the φ/ψ partials
+//!   locally, and full Z is gathered exactly once — for the final
+//!   result. Per-iteration coordinator traffic is O(K² L^d), not
+//!   O(signal).
+//! - **Teardown** (sequential backend, or `Distributed` with
+//!   `persistent: false`): the problem is rebuilt per iteration (X
+//!   shared by `Arc`, never recloned) and the sparse coder warm-starts
+//!   from the previous Z.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cdl::init::{init_dictionary, InitStrategy};
@@ -15,9 +30,11 @@ use crate::csc::cd::{solve_cd_warm, CdConfig};
 use crate::csc::problem::CscProblem;
 use crate::csc::select::Strategy;
 use crate::dicod::config::DicodConfig;
-use crate::dicod::coordinator::solve_distributed;
+use crate::dicod::coordinator::solve_distributed_warm;
+use crate::dicod::pool::{PoolReport, WorkerPool};
+use crate::dict::grad::cost_from_stats;
 use crate::dict::pgd::{update_dict, PgdConfig};
-use crate::dict::phi_psi::compute_stats_parallel;
+use crate::dict::phi_psi::compute_stats_auto;
 use crate::tensor::NdTensor;
 
 /// Which sparse coder the CDL loop uses.
@@ -25,8 +42,18 @@ use crate::tensor::NdTensor;
 pub enum CscBackend {
     /// Sequential LGCD (warm-started between outer iterations).
     Sequential,
-    /// DiCoDiLe-Z with the given worker configuration.
+    /// DiCoDiLe-Z with the given worker configuration. Runs on the
+    /// resident pool when `cfg.persistent` is set (the
+    /// `DicodConfig::dicodile` default), else one pool per iteration,
+    /// warm-started from the previous Z.
     Distributed(DicodConfig),
+    /// DiCoDiLe-Z on the resident pool, regardless of the config flag.
+    ///
+    /// Note: `learn_dictionary_batch` does not keep per-signal pools
+    /// alive yet — the corpus driver treats this variant as one
+    /// warm-started one-shot solve per signal per iteration (see the
+    /// "persistent runtime" follow-ups in ROADMAP.md).
+    Persistent(DicodConfig),
 }
 
 /// CDL driver configuration.
@@ -44,7 +71,8 @@ pub struct CdlConfig {
     pub csc_tol: f64,
     pub dict_cfg: PgdConfig,
     pub init: InitStrategy,
-    /// Threads for the phi/psi map-reduce.
+    /// Threads for the phi/psi map-reduce (teardown mode only; the
+    /// persistent pool reduces worker partials instead).
     pub stat_workers: usize,
     pub seed: u64,
     /// Print per-iteration progress to stderr.
@@ -82,6 +110,9 @@ pub struct IterRecord {
     pub csc_time: f64,
     pub dict_time: f64,
     pub elapsed: f64,
+    /// Which φ/ψ path produced the dictionary statistics:
+    /// `"sparse-seq"`, `"dense-par"` or `"worker-partials"`.
+    pub phipsi_path: &'static str,
 }
 
 /// CDL result.
@@ -96,17 +127,134 @@ pub struct CdlResult {
     pub trace: Vec<IterRecord>,
     pub converged: bool,
     pub runtime: f64,
+    /// Worker-pool provenance when the persistent runtime served the
+    /// run (`None` for the teardown modes).
+    pub pool: Option<PoolReport>,
 }
 
 /// Learn a convolutional dictionary on observation `x`.
 pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResult> {
     let start = Instant::now();
-    let mut d = init_dictionary(x, cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
+    let d = init_dictionary(x, cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
     // lambda is fixed from the initial dictionary (as in the reference
     // implementation) so the objective is comparable across iterations.
     let lambda = cfg.lambda_frac * crate::csc::problem::lambda_max(x, &d);
     anyhow::ensure!(lambda > 0.0, "degenerate workload: lambda_max = 0");
 
+    match &cfg.csc {
+        CscBackend::Persistent(dcfg) => learn_persistent(x, cfg, d, lambda, dcfg, start),
+        CscBackend::Distributed(dcfg) if dcfg.persistent => {
+            learn_persistent(x, cfg, d, lambda, dcfg, start)
+        }
+        _ => learn_teardown(x, cfg, d, lambda, start),
+    }
+}
+
+/// Persistent-pool alternation: spawn once, never gather mid-run.
+fn learn_persistent(
+    x: &NdTensor,
+    cfg: &CdlConfig,
+    mut d: NdTensor,
+    lambda: f64,
+    dcfg: &DicodConfig,
+    start: Instant,
+) -> anyhow::Result<CdlResult> {
+    let mut dcfg = dcfg.clone();
+    dcfg.tol = cfg.csc_tol;
+    let x_shared = Arc::new(x.clone());
+    let mut pool = WorkerPool::spawn(
+        Arc::new(CscProblem::new(x_shared.clone(), d.clone(), lambda)),
+        &dcfg,
+        None,
+    );
+
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut converged = false;
+
+    for it in 0..cfg.max_iter {
+        // ---- CSC step: workers warm-restart from their resident Z -------
+        let t0 = Instant::now();
+        let phase = pool.solve();
+        anyhow::ensure!(
+            !phase.diverged,
+            "distributed CSC diverged at outer iteration {it} \
+             (divergence guard tripped; resident Z is unusable)"
+        );
+        let csc_time = t0.elapsed().as_secs_f64();
+
+        // ---- dictionary step: φ/ψ reduced from worker partials ----------
+        let t1 = Instant::now();
+        let (stats, z_nnz) = pool.compute_stats();
+        let cost_after_csc = cost_from_stats(&stats, &d, lambda);
+        let pgd = update_dict(&stats, &d, lambda, &cfg.dict_cfg);
+        d = pgd.d;
+        // Resample unused atoms from residual patches. Dead atoms are
+        // detected signal-free from the phi diagonal (phi[k,k][tau=0] =
+        // sum_u Z_k[u]^2); only when one actually died does the driver
+        // pay a mid-run gather for the residual patches.
+        let dead = dead_atoms_from_phi(&stats.phi);
+        if !dead.is_empty() {
+            let z = pool.gather();
+            resample_dead_atoms(x, &z, &mut d, cfg.seed.wrapping_add(it as u64));
+        }
+        let dict_time = t1.elapsed().as_secs_f64();
+
+        let rec = IterRecord {
+            iter: it,
+            cost: pgd.cost,
+            cost_after_csc,
+            z_nnz,
+            csc_time,
+            dict_time,
+            elapsed: start.elapsed().as_secs_f64(),
+            phipsi_path: "worker-partials",
+        };
+        if cfg.verbose {
+            log_iter(&rec);
+        }
+        let prev_cost = trace.last().map(|r: &IterRecord| r.cost);
+        trace.push(rec);
+
+        if let Some(prev) = prev_cost {
+            let cur = trace.last().unwrap().cost;
+            if (prev - cur).abs() / prev.abs().max(1e-300) < cfg.nu {
+                converged = true;
+            }
+        }
+        if converged || it + 1 == cfg.max_iter {
+            break;
+        }
+        // ---- broadcast the new dictionary; workers re-bootstrap beta
+        //      warm from the Z they already hold ------------------------
+        pool.set_dict(Arc::new(CscProblem::new(x_shared.clone(), d.clone(), lambda)));
+    }
+
+    // The single full-Z centralization of the run.
+    let z = pool.gather();
+    let report = pool.report();
+    pool.shutdown();
+
+    Ok(CdlResult {
+        d,
+        z,
+        lambda,
+        trace,
+        converged,
+        runtime: start.elapsed().as_secs_f64(),
+        pool: Some(report),
+    })
+}
+
+/// Teardown alternation: rebuild the problem each iteration (X shared
+/// via `Arc`) and warm-start the sparse coder from the previous Z.
+fn learn_teardown(
+    x: &NdTensor,
+    cfg: &CdlConfig,
+    mut d: NdTensor,
+    lambda: f64,
+    start: Instant,
+) -> anyhow::Result<CdlResult> {
+    let x_shared = Arc::new(x.clone());
     let mut z_prev: Option<NdTensor> = None;
     let mut trace: Vec<IterRecord> = Vec::new();
     let mut converged = false;
@@ -114,7 +262,7 @@ pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResu
     for it in 0..cfg.max_iter {
         // ---- CSC step -----------------------------------------------------
         let t0 = Instant::now();
-        let problem = CscProblem::new(x.clone(), d.clone(), lambda);
+        let problem = CscProblem::new(x_shared.clone(), d.clone(), lambda);
         let z = match &cfg.csc {
             CscBackend::Sequential => {
                 let r = solve_cd_warm(
@@ -129,10 +277,10 @@ pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResu
                 );
                 r.z
             }
-            CscBackend::Distributed(dcfg) => {
+            CscBackend::Distributed(dcfg) | CscBackend::Persistent(dcfg) => {
                 let mut dcfg = dcfg.clone();
                 dcfg.tol = cfg.csc_tol;
-                solve_distributed(&problem, &dcfg).z
+                solve_distributed_warm(&problem, &dcfg, z_prev.as_ref()).z
             }
         };
         let csc_time = t0.elapsed().as_secs_f64();
@@ -140,7 +288,8 @@ pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResu
 
         // ---- dictionary step ----------------------------------------------
         let t1 = Instant::now();
-        let stats = compute_stats_parallel(&z, x, &cfg.atom_dims, cfg.stat_workers);
+        let (stats, phipsi_path) =
+            compute_stats_auto(&z, x, &cfg.atom_dims, cfg.stat_workers);
         let pgd = update_dict(&stats, &d, lambda, &cfg.dict_cfg);
         d = pgd.d;
         // Resample unused atoms from residual patches (as the reference
@@ -157,18 +306,10 @@ pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResu
             csc_time,
             dict_time,
             elapsed: start.elapsed().as_secs_f64(),
+            phipsi_path,
         };
         if cfg.verbose {
-            crate::log_info!(
-                "cdl",
-                "iter {:3}  cost {:.6e}  (csc {:.6e})  nnz {}  csc {:.2}s dict {:.2}s",
-                rec.iter,
-                rec.cost,
-                rec.cost_after_csc,
-                rec.z_nnz,
-                rec.csc_time,
-                rec.dict_time
-            );
+            log_iter(&rec);
         }
         let prev_cost = trace.last().map(|r: &IterRecord| r.cost);
         trace.push(rec);
@@ -190,7 +331,41 @@ pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResu
         trace,
         converged,
         runtime: start.elapsed().as_secs_f64(),
+        pool: None,
     })
+}
+
+fn log_iter(rec: &IterRecord) {
+    crate::log_info!(
+        "cdl",
+        "iter {:3}  cost {:.6e}  (csc {:.6e})  nnz {}  csc {:.2}s dict {:.2}s  phi/psi {}",
+        rec.iter,
+        rec.cost,
+        rec.cost_after_csc,
+        rec.z_nnz,
+        rec.csc_time,
+        rec.dict_time,
+        rec.phipsi_path
+    );
+}
+
+/// Atoms with zero activation mass, detected from the phi diagonal:
+/// `phi[k,k][tau = 0] = sum_u Z_k[u]^2` is zero iff `Z_k` is
+/// identically zero (a sum of squares cannot cancel).
+fn dead_atoms_from_phi(phi: &NdTensor) -> Vec<usize> {
+    let k_tot = phi.dims()[0];
+    let cc_dims: Vec<usize> = phi.dims()[2..].to_vec();
+    let cc_sp: usize = cc_dims.iter().product();
+    let cc_str = crate::tensor::shape::strides_of(&cc_dims);
+    // tau = 0 sits at index (L - 1) = (cc_dim - 1) / 2 per axis.
+    let center: usize = cc_dims
+        .iter()
+        .zip(&cc_str)
+        .map(|(n, s)| ((n - 1) / 2) * s)
+        .sum();
+    (0..k_tot)
+        .filter(|&k| phi.data()[(k * k_tot + k) * cc_sp + center] == 0.0)
+        .collect()
 }
 
 /// Replace atoms whose activation mass is zero with normalized random
@@ -315,6 +490,17 @@ mod tests {
     }
 
     #[test]
+    fn dead_atom_detection_from_phi_matches_z() {
+        let mut z = NdTensor::zeros(&[3, 40]);
+        *z.at_mut(&[0, 5]) = 1.0;
+        *z.at_mut(&[2, 20]) = -2.0; // atom 1 stays dead
+        let phi = crate::conv::compute_phi(&z, &[6]);
+        assert_eq!(dead_atoms_from_phi(&phi), vec![1]);
+        let phi2d = crate::conv::compute_phi(&NdTensor::zeros(&[2, 10, 10]), &[3, 3]);
+        assert_eq!(dead_atoms_from_phi(&phi2d), vec![0, 1]);
+    }
+
+    #[test]
     fn cdl_with_distributed_backend() {
         let w = SyntheticConfig::signal_1d(300, 2, 6).generate(7);
         let cfg = CdlConfig {
@@ -328,5 +514,32 @@ mod tests {
         };
         let r = learn_dictionary(&w.x, &cfg).unwrap();
         assert!(r.trace.last().unwrap().cost <= r.trace.first().unwrap().cost * (1.0 + 1e-9));
+        // dicodile() defaults to the resident pool: provenance recorded,
+        // workers spawned exactly once.
+        let report = r.pool.expect("persistent run records pool provenance");
+        assert_eq!(report.workers_spawned, report.n_workers);
+        for rec in &r.trace {
+            assert_eq!(rec.phipsi_path, "worker-partials");
+        }
+    }
+
+    #[test]
+    fn cdl_with_teardown_distributed_backend() {
+        let w = SyntheticConfig::signal_1d(300, 2, 6).generate(7);
+        let cfg = CdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![6],
+            max_iter: 3,
+            csc_tol: 1e-3,
+            csc: CscBackend::Distributed(DicodConfig {
+                persistent: false,
+                ..DicodConfig::dicodile(2)
+            }),
+            seed: 7,
+            ..Default::default()
+        };
+        let r = learn_dictionary(&w.x, &cfg).unwrap();
+        assert!(r.trace.last().unwrap().cost <= r.trace.first().unwrap().cost * (1.0 + 1e-9));
+        assert!(r.pool.is_none());
     }
 }

@@ -6,11 +6,11 @@ use crate::util::json::Json;
 /// Render the iteration trace as an aligned text table.
 pub fn trace_table(result: &CdlResult) -> String {
     let mut s = String::new();
-    s.push_str("iter        cost   cost(csc)      nnz   csc[s]  dict[s]\n");
+    s.push_str("iter        cost   cost(csc)      nnz   csc[s]  dict[s]  phi/psi\n");
     for r in &result.trace {
         s.push_str(&format!(
-            "{:4}  {:10.4e}  {:10.4e}  {:7}  {:7.3}  {:7.3}\n",
-            r.iter, r.cost, r.cost_after_csc, r.z_nnz, r.csc_time, r.dict_time
+            "{:4}  {:10.4e}  {:10.4e}  {:7}  {:7.3}  {:7.3}  {}\n",
+            r.iter, r.cost, r.cost_after_csc, r.z_nnz, r.csc_time, r.dict_time, r.phipsi_path
         ));
     }
     s
@@ -37,6 +37,7 @@ pub fn to_json(result: &CdlResult) -> Json {
                             ("csc_time", Json::Num(r.csc_time)),
                             ("dict_time", Json::Num(r.dict_time)),
                             ("elapsed", Json::Num(r.elapsed)),
+                            ("phipsi", Json::str(r.phipsi_path)),
                         ])
                     })
                     .collect(),
@@ -100,9 +101,11 @@ mod tests {
                 csc_time: 0.1,
                 dict_time: 0.2,
                 elapsed: 0.3,
+                phipsi_path: "sparse-seq",
             }],
             converged: true,
             runtime: 0.3,
+            pool: None,
         }
     }
 

@@ -86,8 +86,12 @@ pub struct CorrEngine {
     /// Dictionary `[K, P, L..]`.
     d: NdTensor,
     /// Dictionary spectra per padded-domain size `pdims` (row-major
-    /// `K * P` planes of `prod(pdims)` frequencies each).
-    cache: Arc<Mutex<HashMap<Vec<usize>, Arc<Vec<Vec<C64>>>>>>,
+    /// `K * P` planes of `prod(pdims)` frequencies each). Each entry is
+    /// a `OnceLock` build slot so concurrent first users — e.g. every
+    /// pool worker warm-bootstrapping right after a `SetDict`
+    /// broadcast — block on one build instead of each paying the full
+    /// `K*P` transform and discarding all but one result.
+    cache: Arc<Mutex<HashMap<Vec<usize>, Arc<OnceLock<Arc<Vec<Vec<C64>>>>>>>>,
 }
 
 impl std::fmt::Debug for CorrEngine {
@@ -122,26 +126,34 @@ impl CorrEngine {
     }
 
     fn has_spectra(&self, pdims: &[usize]) -> bool {
-        self.cache.lock().unwrap().contains_key(pdims)
-    }
-
-    /// Dictionary spectra for a padded domain (cached).
-    fn spectra(&self, pdims: &[usize]) -> Arc<Vec<Vec<C64>>> {
-        if let Some(s) = self.cache.lock().unwrap().get(pdims) {
-            return s.clone();
-        }
-        let (k, p, ldims) = self.dims_kpl();
-        let atom_sp: usize = ldims.iter().product();
-        let fields: Vec<&[f64]> = (0..k * p)
-            .map(|i| &self.d.slice0(i / p)[(i % p) * atom_sp..(i % p + 1) * atom_sp])
-            .collect();
-        let hats = Arc::new(transform_real_fields(&fields, ldims, pdims));
         self.cache
             .lock()
             .unwrap()
+            .get(pdims)
+            .map_or(false, |slot| slot.get().is_some())
+    }
+
+    /// Dictionary spectra for a padded domain (cached; built at most
+    /// once per domain — concurrent first users share one build).
+    fn spectra(&self, pdims: &[usize]) -> Arc<Vec<Vec<C64>>> {
+        // Grab (or create) the build slot under the map lock, then
+        // build outside it so other domains stay unblocked.
+        let slot = self
+            .cache
+            .lock()
+            .unwrap()
             .entry(pdims.to_vec())
-            .or_insert(hats)
-            .clone()
+            .or_insert_with(|| Arc::new(OnceLock::new()))
+            .clone();
+        slot.get_or_init(|| {
+            let (k, p, ldims) = self.dims_kpl();
+            let atom_sp: usize = ldims.iter().product();
+            let fields: Vec<&[f64]> = (0..k * p)
+                .map(|i| &self.d.slice0(i / p)[(i % p) * atom_sp..(i % p + 1) * atom_sp])
+                .collect();
+            Arc::new(transform_real_fields(&fields, ldims, pdims))
+        })
+        .clone()
     }
 
     // ---- dispatch models -------------------------------------------------

@@ -192,6 +192,101 @@ impl BetaWindow {
         }
     }
 
+    /// Warm re-initialization of beta on a sub-window
+    /// `[origin, origin + local_dims)` from a resident activation
+    /// window — the `SetDict` path of the persistent worker pool: after
+    /// a dictionary broadcast, each worker rebuilds beta under the new
+    /// `D` from the Z it already owns, instead of bootstrapping from
+    /// zero and replaying the whole solve.
+    ///
+    /// `z` must cover the window dilated by `L - 1` (clipped to the
+    /// domain): those are exactly the activations whose support reaches
+    /// the window's residual. The persistent workers keep Z on the cell
+    /// dilated by `2(L-1)` for precisely this reason.
+    ///
+    /// The computation is local: only the signal window
+    /// `[origin, origin + local + 2(L-1))` and the covered activations
+    /// are touched, so the cost is proportional to the worker cell, not
+    /// the full domain. Dispatch runs through the problem's
+    /// `CorrEngine`, so same-size worker windows share FFT plans and
+    /// the once-per-swap dictionary spectra.
+    pub fn init_window_warm(
+        problem: &CscProblem,
+        origin: &[i64],
+        local_dims: &[usize],
+        z: &ZWindow,
+    ) -> Self {
+        let k_tot = problem.n_atoms();
+        let zsp = problem.z_spatial_dims();
+        let margins: Vec<usize> = problem.atom_dims().iter().map(|&l| l - 1).collect();
+        let win = Rect::new(
+            origin.to_vec(),
+            origin
+                .iter()
+                .zip(local_dims)
+                .map(|(o, n)| o + *n as i64)
+                .collect(),
+        );
+        // Activation support whose reconstruction reaches the window.
+        let need = win.dilate(&margins).intersect(&Rect::full(&zsp));
+        debug_assert!(
+            z.contains(&need.lo)
+                && z.contains(&need.hi.iter().map(|h| h - 1).collect::<Vec<_>>()),
+            "z window {:?}+{:?} does not cover required support {:?}",
+            z.origin,
+            z.local_dims,
+            need
+        );
+        let next = need.extents();
+        let nsp: usize = next.iter().product();
+        let mut zdims = vec![k_tot];
+        zdims.extend_from_slice(&next);
+        let mut zloc = NdTensor::zeros(&zdims);
+        {
+            let zdat = zloc.data_mut();
+            for k in 0..k_tot {
+                for (i, u) in need.iter().enumerate() {
+                    let v = z.at(k, &u);
+                    if v != 0.0 {
+                        zdat[k * nsp + i] = v;
+                    }
+                }
+            }
+        }
+        // Local residual over the support's signal window; coordinates
+        // of `win` only correlate signal positions at distance >= L - 1
+        // from the support's edge, so activations outside `need` cannot
+        // contaminate the sliced result.
+        let xw = problem.signal_window(&need.lo, &next);
+        let resid = xw.sub(&problem.corr.reconstruct(&zloc));
+        let beta_need = problem.corr.correlate_dict(&resid);
+        debug_assert_eq!(&beta_need.dims()[1..], &next[..]);
+
+        let sp: usize = local_dims.iter().product();
+        let nstr = crate::tensor::shape::strides_of(&next);
+        let mut data = vec![0.0; k_tot * sp];
+        for k in 0..k_tot {
+            let brow = beta_need.slice0(k);
+            let out = &mut data[k * sp..(k + 1) * sp];
+            for (i, u) in win.iter().enumerate() {
+                let noff: usize = u
+                    .iter()
+                    .zip(&need.lo)
+                    .zip(&nstr)
+                    .map(|((x, o), s)| (x - o) as usize * s)
+                    .sum();
+                // Add back each coordinate's own contribution (eq. 7).
+                out[i] = brow[noff] + z.at(k, &u) * problem.norms_sq[k];
+            }
+        }
+        BetaWindow {
+            data,
+            n_atoms: k_tot,
+            local_dims: local_dims.to_vec(),
+            origin: origin.to_vec(),
+        }
+    }
+
     /// Spatial size of the window.
     pub fn spatial_len(&self) -> usize {
         self.local_dims.iter().product()
@@ -350,6 +445,11 @@ impl BetaWindow {
     /// Best candidate `(k, u_global, dz)` by `|dz|` over the
     /// intersection of `rect` (global coords) with this window.
     /// Returns `None` if the intersection is empty.
+    ///
+    /// `z` need not be congruent with the beta window — the persistent
+    /// workers keep Z on a wider window (the `2(L-1)` rim needed for
+    /// warm beta re-initialization under a new dictionary) — but it
+    /// must cover the intersection of `rect` with this window.
     pub fn best_candidate(
         &self,
         problem: &CscProblem,
@@ -369,19 +469,22 @@ impl BetaWindow {
             return None;
         }
         let sp = self.spatial_len();
+        let zsp = z.spatial_len();
         let lambda = problem.lambda;
         let mut best: Option<(usize, Vec<i64>, f64)> = None;
         let mut best_abs = 0.0;
         match self.local_dims.len() {
             1 => {
                 let o = self.origin[0];
+                let zo = z.origin[0];
                 for k in 0..self.n_atoms {
                     let inv = problem.inv_norms_sq[k];
                     let brow = &self.data[k * sp..(k + 1) * sp];
-                    let zrow = &z.data[k * sp..(k + 1) * sp];
+                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
                     for v in inter.lo[0]..inter.hi[0] {
                         let i = (v - o) as usize;
-                        let dz = dz_value_inv(brow[i], zrow[i], lambda, inv);
+                        let zi = (v - zo) as usize;
+                        let dz = dz_value_inv(brow[i], zrow[zi], lambda, inv);
                         if dz.abs() > best_abs {
                             best_abs = dz.abs();
                             best = Some((k, vec![v], dz));
@@ -391,16 +494,20 @@ impl BetaWindow {
             }
             2 => {
                 let (o0, o1) = (self.origin[0], self.origin[1]);
+                let (zo0, zo1) = (z.origin[0], z.origin[1]);
                 let w = self.local_dims[1];
+                let zw = z.local_dims[1];
                 for k in 0..self.n_atoms {
                     let inv = problem.inv_norms_sq[k];
                     let brow = &self.data[k * sp..(k + 1) * sp];
-                    let zrow = &z.data[k * sp..(k + 1) * sp];
+                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
                     for v0 in inter.lo[0]..inter.hi[0] {
                         let row = ((v0 - o0) as usize) * w;
+                        let zrow0 = ((v0 - zo0) as usize) * zw;
                         for v1 in inter.lo[1]..inter.hi[1] {
                             let i = row + (v1 - o1) as usize;
-                            let dz = dz_value_inv(brow[i], zrow[i], lambda, inv);
+                            let zi = zrow0 + (v1 - zo1) as usize;
+                            let dz = dz_value_inv(brow[i], zrow[zi], lambda, inv);
                             if dz.abs() > best_abs {
                                 best_abs = dz.abs();
                                 best = Some((k, vec![v0, v1], dz));
@@ -422,7 +529,7 @@ impl BetaWindow {
                             .sum();
                         let dz = dz_value(
                             self.data[k * sp + loff],
-                            z.data[k * sp + loff],
+                            z.data[k * zsp + z.local_offset(&v)],
                             lambda,
                             nsq,
                         );
@@ -487,6 +594,44 @@ impl ZWindow {
     pub fn add_at(&mut self, k: usize, u: &[i64], dz: f64) {
         let off = k * self.spatial_len() + self.local_offset(u);
         self.data[off] += dz;
+    }
+
+    /// Load this window's values from a full-domain activation tensor
+    /// `[K, T'..]` (warm-starting a distributed solve from a prior Z).
+    pub fn load_from_global(&mut self, z0: &NdTensor) {
+        assert_eq!(z0.dims()[0], self.n_atoms, "Z atom count mismatch");
+        for ((o, n), t) in self
+            .origin
+            .iter()
+            .zip(&self.local_dims)
+            .zip(&z0.dims()[1..])
+        {
+            assert!(
+                *o >= 0 && o + *n as i64 <= *t as i64,
+                "Z window [{o}, {}) exceeds source dims {t}",
+                o + *n as i64
+            );
+        }
+        let gsp: usize = z0.dims()[1..].iter().product();
+        let gstr = crate::tensor::shape::strides_of(&z0.dims()[1..]);
+        let sp = self.spatial_len();
+        let win = Rect::new(
+            self.origin.clone(),
+            self.origin
+                .iter()
+                .zip(&self.local_dims)
+                .map(|(o, n)| o + *n as i64)
+                .collect(),
+        );
+        for k in 0..self.n_atoms {
+            let src = &z0.data()[k * gsp..(k + 1) * gsp];
+            let dst = &mut self.data[k * sp..(k + 1) * sp];
+            for (i, u) in win.iter().enumerate() {
+                let goff: usize =
+                    u.iter().zip(&gstr).map(|(x, s)| *x as usize * s).sum();
+                dst[i] = src[goff];
+            }
+        }
     }
 }
 
@@ -632,6 +777,107 @@ mod tests {
         for (a, b) in bw.data.iter().zip(oracle.data()) {
             assert!((a - b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn warm_window_init_matches_full_warm_slice_1d() {
+        // On every line partition of a warm problem, the window warm
+        // bootstrap must equal the corresponding slice of the
+        // full-domain warm bootstrap.
+        let p = problem_1d(12);
+        let zsp = p.z_spatial_dims();
+        let mut rng = Pcg64::seeded(13);
+        let mut z0 = p.zero_activation();
+        for v in z0.data_mut().iter_mut() {
+            if rng.bernoulli(0.15) {
+                *v = rng.normal();
+            }
+        }
+        let full = BetaWindow::init_full_warm(&p, &z0);
+        // Z window covering the whole domain (what the workers hold,
+        // clipped) is always a valid support provider.
+        let mut zw = ZWindow::zeros(p.n_atoms(), &[0], &zsp);
+        zw.data.copy_from_slice(z0.data());
+        for (origin, len) in [(0i64, 8usize), (5, 9), (zsp[0] as i64 - 6, 6)] {
+            let win = BetaWindow::init_window_warm(&p, &[origin], &[len], &zw);
+            for k in 0..p.n_atoms() {
+                for i in 0..len as i64 {
+                    let g = [origin + i];
+                    assert!(
+                        (win.at(k, &g) - full.at(k, &g)).abs() < 1e-9,
+                        "k={k} u={g:?}: {} vs {}",
+                        win.at(k, &g),
+                        full.at(k, &g)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_window_init_matches_full_warm_slice_2d() {
+        let p = problem_2d(14);
+        let zsp = p.z_spatial_dims();
+        let mut rng = Pcg64::seeded(15);
+        let mut z0 = p.zero_activation();
+        for v in z0.data_mut().iter_mut() {
+            if rng.bernoulli(0.1) {
+                *v = rng.normal();
+            }
+        }
+        let full = BetaWindow::init_full_warm(&p, &z0);
+        let mut zw = ZWindow::zeros(p.n_atoms(), &[0, 0], &zsp);
+        zw.data.copy_from_slice(z0.data());
+        let win = BetaWindow::init_window_warm(&p, &[2, 3], &[5, 6], &zw);
+        for k in 0..p.n_atoms() {
+            for i in 0..5i64 {
+                for j in 0..6i64 {
+                    let g = [2 + i, 3 + j];
+                    assert!((win.at(k, &g) - full.at(k, &g)).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_window_init_at_zero_matches_cold() {
+        let p = problem_1d(16);
+        let zsp = p.z_spatial_dims();
+        let zw = ZWindow::zeros(p.n_atoms(), &[0], &zsp);
+        let warm = BetaWindow::init_window_warm(&p, &[3], &[7], &zw);
+        let cold = BetaWindow::init_window(&p, &[3], &[7]);
+        for (a, b) in warm.data.iter().zip(&cold.data) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zwindow_load_from_global_reads_slice() {
+        let mut z0 = NdTensor::zeros(&[2, 10]);
+        *z0.at_mut(&[0, 4]) = 1.5;
+        *z0.at_mut(&[1, 7]) = -2.0;
+        let mut zw = ZWindow::zeros(2, &[3], &[5]);
+        zw.load_from_global(&z0);
+        assert_eq!(zw.at(0, &[4]), 1.5);
+        assert_eq!(zw.at(1, &[7]), -2.0);
+        assert_eq!(zw.at(0, &[3]), 0.0);
+    }
+
+    #[test]
+    fn best_candidate_with_wider_z_window_matches_congruent() {
+        // The persistent workers hold Z on a wider window than beta;
+        // best_candidate must index each through its own geometry.
+        let p = problem_1d(17);
+        let zsp = p.z_spatial_dims();
+        let beta = BetaWindow::init_window(&p, &[6], &[8]);
+        let mut congruent = ZWindow::zeros(p.n_atoms(), &[6], &[8]);
+        let mut wide = ZWindow::zeros(p.n_atoms(), &[2], &[(zsp[0] - 4).min(18)]);
+        congruent.add_at(0, &[9], 0.7);
+        wide.add_at(0, &[9], 0.7);
+        let rect = Rect::new(vec![6], vec![14]);
+        let a = beta.best_candidate(&p, &congruent, &rect).unwrap();
+        let b = beta.best_candidate(&p, &wide, &rect).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -12,15 +12,23 @@
 //! operators (beta bootstrap, residual reconstruction) from cached
 //! dictionary spectra with size-based direct/FFT dispatch.
 
+use std::sync::Arc;
+
 use crate::conv;
 use crate::conv::CorrEngine;
 use crate::tensor::NdTensor;
 
 /// A fully-specified CSC instance.
+///
+/// The observation is held behind an `Arc` so the CDL alternation can
+/// rebuild the problem with a fresh dictionary every outer iteration
+/// (and the persistent worker pool can broadcast it) without ever
+/// recloning X — only the dictionary-derived quantities (`DtD`, atom
+/// norms, engine spectra) are recomputed on a swap.
 #[derive(Clone, Debug)]
 pub struct CscProblem {
-    /// Observation `[P, T..]`.
-    pub x: NdTensor,
+    /// Observation `[P, T..]` (shared; never copied on dictionary swaps).
+    pub x: Arc<NdTensor>,
     /// Dictionary `[K, P, L..]`.
     pub d: NdTensor,
     /// l1 regularization weight.
@@ -39,23 +47,53 @@ pub struct CscProblem {
 }
 
 impl CscProblem {
-    /// Build a problem; precomputes `DtD` and atom norms.
-    pub fn new(x: NdTensor, d: NdTensor, lambda: f64) -> Self {
+    /// Build a problem; precomputes `DtD` and atom norms. Accepts
+    /// either an owned observation or an `Arc` to one already shared
+    /// (the CDL drivers pass the same `Arc` every outer iteration).
+    pub fn new(x: impl Into<Arc<NdTensor>>, d: NdTensor, lambda: f64) -> Self {
         let corr = CorrEngine::new(d.clone());
-        Self::with_engine(x, d, lambda, corr)
+        Self::with_engine(x.into(), d, lambda, corr)
     }
 
     /// Build with `lambda = frac * lambda_max` (the paper's convention,
     /// `frac = 0.1` throughout its experiments).
-    pub fn with_lambda_frac(x: NdTensor, d: NdTensor, frac: f64) -> Self {
+    pub fn with_lambda_frac(x: impl Into<Arc<NdTensor>>, d: NdTensor, frac: f64) -> Self {
         // Build the engine once and reuse it for the lambda_max
         // bootstrap so the dictionary spectra are not computed twice.
+        let x = x.into();
         let corr = CorrEngine::new(d.clone());
         let lmax = corr.correlate_dict(&x).norm_inf();
         Self::with_engine(x, d, frac * lmax, corr)
     }
 
-    fn with_engine(x: NdTensor, d: NdTensor, lambda: f64, corr: CorrEngine) -> Self {
+    /// Swap the dictionary in place, recomputing only the derived
+    /// quantities (`DtD`, norms, engine spectra cache). The observation
+    /// `Arc` is untouched — no signal copy — and the fresh `CorrEngine`
+    /// starts with an empty spectra cache, so the spectra for the new
+    /// dictionary are regenerated lazily exactly once per swap (shared
+    /// by every clone handed out after the swap).
+    pub fn update_dict(&mut self, d: NdTensor) {
+        assert_eq!(
+            self.x.dims()[0],
+            d.dims()[1],
+            "X channels {:?} vs D channels {:?}",
+            self.x.dims(),
+            d.dims()
+        );
+        self.corr = CorrEngine::new(d.clone());
+        self.dtd = conv::compute_dtd(&d);
+        self.norms_sq = conv::atom_norms_sq(&d);
+        self.inv_norms_sq = self.norms_sq.iter().map(|&n| 1.0 / n.max(1e-300)).collect();
+        self.d = d;
+    }
+
+    /// A shared handle to the observation (cheap; for rebuilding
+    /// problems across outer iterations without recloning X).
+    pub fn x_shared(&self) -> Arc<NdTensor> {
+        self.x.clone()
+    }
+
+    fn with_engine(x: Arc<NdTensor>, d: NdTensor, lambda: f64, corr: CorrEngine) -> Self {
         assert!(lambda > 0.0, "lambda must be positive");
         assert_eq!(
             x.dims()[0],
@@ -256,6 +294,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn update_dict_matches_fresh_problem() {
+        let mut rng = Pcg64::seeded(8);
+        let x = NdTensor::from_vec(&[2, 25], rng.normal_vec(50));
+        let d0 = NdTensor::from_vec(&[3, 2, 4], rng.normal_vec(24));
+        let d1 = NdTensor::from_vec(&[3, 2, 4], rng.normal_vec(24));
+        let mut p = CscProblem::new(x.clone(), d0, 0.5);
+        let x_handle = p.x_shared();
+        p.update_dict(d1.clone());
+        // The observation Arc is preserved (no signal copy) ...
+        assert!(Arc::ptr_eq(&p.x, &x_handle));
+        // ... while every dictionary-derived quantity matches a problem
+        // built from scratch with the new dictionary.
+        let fresh = CscProblem::new(x, d1, 0.5);
+        assert!(p.dtd.allclose(&fresh.dtd, 1e-12));
+        assert_eq!(p.norms_sq, fresh.norms_sq);
+        let z = p.zero_activation();
+        assert!((p.cost(&z) - fresh.cost(&z)).abs() < 1e-12);
     }
 
     #[test]

@@ -34,6 +34,15 @@ pub struct DicodConfig {
     /// values emulate the network latency of the paper's MPI cluster so
     /// the Fig. 5 interference experiment has real asynchrony to bite on.
     pub inbox_every: usize,
+    /// When this config backs a CDL run (`CscBackend::Distributed`),
+    /// keep the worker pool resident across the outer alternation:
+    /// workers are spawned once, Z/beta stay on the workers, φ/ψ are
+    /// reduced from worker partials and full Z is gathered only at the
+    /// end (Algorithm 2 as the paper runs it). `false` reverts to the
+    /// teardown/respawn driver (one pool per outer iteration, warm-
+    /// started). One-shot `solve_distributed` calls ignore this flag —
+    /// they are a single solve phase by definition.
+    pub persistent: bool,
 }
 
 impl Default for DicodConfig {
@@ -49,14 +58,17 @@ impl Default for DicodConfig {
             seed: 0,
             timeout: 600.0,
             inbox_every: 1,
+            persistent: false,
         }
     }
 }
 
 impl DicodConfig {
-    /// The paper's DiCoDiLe-Z configuration.
+    /// The paper's DiCoDiLe-Z configuration. Persistent by default:
+    /// inside a CDL run the worker pool stays resident across outer
+    /// iterations (the paper's decentralized Algorithm 2).
     pub fn dicodile(n_workers: usize) -> Self {
-        DicodConfig { n_workers, ..Default::default() }
+        DicodConfig { n_workers, persistent: true, ..Default::default() }
     }
 
     /// The DICOD baseline (Moreau et al. 2018): line split, greedy local
@@ -81,9 +93,11 @@ mod tests {
         let a = DicodConfig::dicodile(9);
         assert_eq!(a.n_workers, 9);
         assert!(a.soft_lock);
+        assert!(a.persistent, "dicodile defaults to the resident pool");
         assert_eq!(a.partition, PartitionKind::Grid);
         let b = DicodConfig::dicod(4);
         assert!(!b.soft_lock);
+        assert!(!b.persistent);
         assert_eq!(b.partition, PartitionKind::Line);
         assert_eq!(b.strategy, Strategy::Greedy);
     }

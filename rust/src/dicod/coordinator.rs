@@ -1,21 +1,25 @@
-//! The DiCoDiLe-Z leader: spawns the worker grid, runs the
-//! counter-based termination protocol, and gathers the solution.
+//! One-shot entry points over the resident [`WorkerPool`].
 //!
-//! The coordinator never touches beta or Z during the solve — all
+//! `solve_distributed` spawns a temporary pool, runs a single solve
+//! phase, gathers Z and tears the pool down — the ephemeral mode every
+//! single-solve caller (benches, `sparse_encode`) uses. The CDL driver
+//! keeps the pool alive across the whole alternation instead; see
+//! [`crate::dicod::pool`].
+//!
+//! The coordinator side never touches beta or Z during a solve — all
 //! hot-path traffic is worker-to-worker — it only observes status
 //! transitions. Global convergence is declared when every worker
 //! reports idle *and* the total number of update messages sent equals
 //! the total received (Safra-style counting: no messages in flight, so
 //! no worker can be re-activated).
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::csc::problem::CscProblem;
 use crate::dicod::config::DicodConfig;
-use crate::dicod::messages::{CoordMsg, WorkerMsg, WorkerStats};
-use crate::dicod::partition::WorkerGrid;
-use crate::dicod::worker::{run_worker, Peer, WorkerCtx};
+use crate::dicod::messages::WorkerStats;
+use crate::dicod::pool::WorkerPool;
 use crate::tensor::NdTensor;
 
 /// Aggregated result of a distributed solve.
@@ -53,137 +57,36 @@ impl DicodResult {
     }
 }
 
-/// Solve the CSC problem with `cfg.n_workers` asynchronous workers.
+/// Solve the CSC problem with `cfg.n_workers` asynchronous workers,
+/// cold-starting from `Z = 0`.
 pub fn solve_distributed(problem: &CscProblem, cfg: &DicodConfig) -> DicodResult {
+    solve_distributed_warm(problem, cfg, None)
+}
+
+/// Solve with an optional full-domain warm-start activation: each
+/// worker loads its window slice of `z0` and bootstraps beta warm, so
+/// an outer loop that cannot keep a pool alive still avoids replaying
+/// converged coordinates from zero.
+pub fn solve_distributed_warm(
+    problem: &CscProblem,
+    cfg: &DicodConfig,
+    z0: Option<&NdTensor>,
+) -> DicodResult {
     let start = Instant::now();
-    let zsp = problem.z_spatial_dims();
-    let grid = WorkerGrid::new(&zsp, problem.atom_dims(), cfg.n_workers, cfg.partition);
-    let w_tot = grid.n_workers();
-
-    // Build the channel mesh.
-    let mut worker_tx = Vec::with_capacity(w_tot);
-    let mut worker_rx = Vec::with_capacity(w_tot);
-    for _ in 0..w_tot {
-        let (tx, rx) = mpsc::channel::<WorkerMsg>();
-        worker_tx.push(tx);
-        worker_rx.push(rx);
-    }
-    let (coord_tx, coord_rx) = mpsc::channel::<CoordMsg>();
-
-    let mut result: Option<DicodResult> = None;
-    std::thread::scope(|scope| {
-        // Spawn workers.
-        for (rank, rx) in worker_rx.drain(..).enumerate() {
-            let peers: Vec<Peer> = grid
-                .neighbors(rank)
-                .into_iter()
-                .map(|r| Peer {
-                    rank: r,
-                    ext_window: grid.extended_cell(r),
-                    tx: worker_tx[r].clone(),
-                })
-                .collect();
-            let ctx = WorkerCtx {
-                rank,
-                problem,
-                grid: &grid,
-                cfg,
-                inbox: rx,
-                peers,
-                coord: coord_tx.clone(),
-            };
-            scope.spawn(move || run_worker(ctx));
-        }
-        drop(coord_tx);
-
-        // ---- supervision loop -------------------------------------------
-        let mut idle = vec![false; w_tot];
-        let mut converged = vec![false; w_tot];
-        let mut sent = vec![0u64; w_tot];
-        let mut received = vec![0u64; w_tot];
-        let mut any_diverged = false;
-        let mut stop_sent = false;
-        let mut done: Vec<Option<(Vec<f64>, WorkerStats)>> = vec![None; w_tot];
-        let mut n_done = 0usize;
-        let deadline = Instant::now() + Duration::from_secs_f64(cfg.timeout);
-
-        let broadcast_stop = |worker_tx: &[mpsc::Sender<WorkerMsg>]| {
-            for tx in worker_tx {
-                let _ = tx.send(WorkerMsg::Stop);
-            }
-        };
-
-        while n_done < w_tot {
-            let msg = coord_rx.recv_timeout(Duration::from_millis(20));
-            match msg {
-                Ok(CoordMsg::Status(s)) => {
-                    idle[s.from] = s.idle;
-                    converged[s.from] = s.converged;
-                    sent[s.from] = s.sent;
-                    received[s.from] = s.received;
-                    if s.diverged {
-                        any_diverged = true;
-                    }
-                    let all_idle = idle.iter().all(|&b| b);
-                    let balanced =
-                        sent.iter().sum::<u64>() == received.iter().sum::<u64>();
-                    if !stop_sent && (any_diverged || (all_idle && balanced)) {
-                        stop_sent = true;
-                        broadcast_stop(&worker_tx);
-                    }
-                }
-                Ok(CoordMsg::Done(d)) => {
-                    if done[d.from].is_none() {
-                        n_done += 1;
-                    }
-                    done[d.from] = Some((d.z_cell, d.stats));
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-            if !stop_sent && Instant::now() > deadline {
-                stop_sent = true;
-                broadcast_stop(&worker_tx);
-            }
-        }
-
-        // ---- assemble Z ---------------------------------------------------
-        let k_tot = problem.n_atoms();
-        let mut z = NdTensor::zeros(&problem.z_dims());
-        let zstr = crate::tensor::shape::strides_of(&zsp);
-        let sp: usize = zsp.iter().product();
-        let mut per_worker = Vec::with_capacity(w_tot);
-        let mut agg = WorkerStats::default();
-        for (rank, slot) in done.iter().enumerate() {
-            let Some((cell_z, stats)) = slot else {
-                per_worker.push(WorkerStats::default());
-                continue;
-            };
-            let cell = grid.cell(rank);
-            let cell_sp = cell.size();
-            for k in 0..k_tot {
-                for (i, u) in cell.iter().enumerate() {
-                    let goff: usize =
-                        u.iter().zip(&zstr).map(|(x, s)| *x as usize * s).sum();
-                    z.data_mut()[k * sp + goff] = cell_z[k * cell_sp + i];
-                }
-            }
-            agg.merge(stats);
-            per_worker.push(stats.clone());
-        }
-
-        result = Some(DicodResult {
-            z,
-            converged: converged.iter().all(|&b| b) && !any_diverged,
-            diverged: any_diverged,
-            runtime: start.elapsed().as_secs_f64(),
-            n_workers: w_tot,
-            stats: agg,
-            per_worker,
-        });
-    });
-
-    result.expect("coordinator always produces a result")
+    let mut pool = WorkerPool::spawn(Arc::new(problem.clone()), cfg, z0);
+    let phase = pool.solve();
+    let z = pool.gather();
+    let result = DicodResult {
+        z,
+        converged: phase.converged,
+        diverged: phase.diverged,
+        runtime: start.elapsed().as_secs_f64(),
+        n_workers: pool.n_workers(),
+        stats: pool.aggregate_stats(),
+        per_worker: pool.per_worker().to_vec(),
+    };
+    pool.shutdown();
+    result
 }
 
 #[cfg(test)]
@@ -333,5 +236,38 @@ mod tests {
         assert!(r.converged);
         // identical domain order -> identical fixed point
         assert!(r.z.allclose(&seq.z, 1e-7));
+    }
+
+    #[test]
+    fn warm_start_at_optimum_is_a_noop() {
+        let p = gen_problem_1d(8, 130, 2, 6);
+        let cold = solve_distributed(&p, &DicodConfig { n_workers: 3, tol: 1e-8, ..Default::default() });
+        assert!(cold.converged);
+        let warm = solve_distributed_warm(
+            &p,
+            &DicodConfig { n_workers: 3, tol: 1e-7, ..Default::default() },
+            Some(&cold.z),
+        );
+        assert!(warm.converged);
+        assert_eq!(warm.stats.updates, 0, "warm start at the optimum must do nothing");
+        assert_eq!(warm.stats.beta_warm_inits, 3);
+        assert_eq!(warm.stats.beta_cold_inits, 0);
+        assert!(warm.z.allclose(&cold.z, 1e-12));
+    }
+
+    #[test]
+    fn warm_start_from_partial_solution_converges() {
+        // Warm-start from a loosely-converged Z and re-solve tightly.
+        let p = gen_problem_1d(9, 140, 2, 6);
+        let rough = solve_distributed(&p, &DicodConfig { n_workers: 2, tol: 1e-2, ..Default::default() });
+        let tight = solve_distributed_warm(
+            &p,
+            &DicodConfig { n_workers: 2, tol: 1e-8, ..Default::default() },
+            Some(&rough.z),
+        );
+        assert!(tight.converged);
+        let seq = solve_cd(&p, &CdConfig { tol: 1e-8, ..Default::default() });
+        let (cw, cs) = (p.cost(&tight.z), p.cost(&seq.z));
+        assert!((cw - cs).abs() < 1e-6 * (1.0 + cs.abs()), "{cw} vs {cs}");
     }
 }

@@ -1,10 +1,38 @@
-//! Messages exchanged by the distributed solver.
+//! Messages exchanged by the distributed runtime.
 //!
 //! Workers talk to their grid neighbours (coordinate-update
-//! notifications, the only hot-path traffic) and to the coordinator
-//! (status transitions for the termination protocol). There is no
-//! central data server: the coordinator never sees beta or Z until the
-//! final gather, mirroring the paper's decentralized design.
+//! notifications, the only hot-path traffic) and to the coordinator.
+//! There is no central data server: the coordinator never sees beta or
+//! Z until an explicit `Gather`, mirroring the paper's decentralized
+//! design (§4.2) — between CDL alternations only status transitions,
+//! phase commands and the (signal-size-independent) φ/ψ partials flow.
+//!
+//! ## Phase protocol (persistent pool)
+//!
+//! The pool drives resident workers through phases:
+//!
+//! | command        | worker reply           | effect                              |
+//! |----------------|------------------------|-------------------------------------|
+//! | `Solve`        | `Status`… `SolveDone`  | run DiCoDiLe-Z from the resident Z  |
+//! | `Stop`         | (ends the solve phase) | sent by the pool on convergence     |
+//! | `ComputeStats` | `Stats`                | local φ^w/ψ^w partials (eq. 17)     |
+//! | `SetDict`      | `DictSet`              | swap D, warm beta re-init from Z    |
+//! | `Gather`       | `Done`                 | report the cell's activation values |
+//! | `Shutdown`     | (thread exits)         |                                     |
+//!
+//! Counter rules between phases: the Safra counters (`sent` /
+//! `received`) are *cumulative over the pool's lifetime* — a
+//! notification that is still queued when a solve phase ends is applied
+//! (and counted received) while the worker idles between phases, so the
+//! global balance `sum(sent) == sum(received)` always settles before
+//! the next solve begins and the termination detection never sees a
+//! phantom in-flight message. Per-solve state (update cap, divergence
+//! flag, sweep position, deadline) resets at every `Solve`.
+
+use std::sync::Arc;
+
+use crate::csc::problem::CscProblem;
+use crate::tensor::NdTensor;
 
 /// A coordinate update notification `(k0, u0, dZ)` (§4.1, Fig. 2).
 #[derive(Clone, Debug, PartialEq)]
@@ -15,19 +43,40 @@ pub struct UpdateMsg {
     pub dz: f64,
 }
 
-/// Worker -> worker traffic.
+/// Dictionary broadcast: the rebuilt problem (same shared X, new D and
+/// derived quantities). All workers receive clones of one `Arc`, so the
+/// new engine's spectra cache is shared — the spectra are regenerated
+/// once per broadcast, by whichever worker bootstraps first, not once
+/// per worker.
+#[derive(Clone, Debug)]
+pub struct SetDictMsg {
+    pub problem: Arc<CscProblem>,
+}
+
+/// Coordinator/pool -> worker commands, plus worker -> worker traffic.
 #[derive(Clone, Debug)]
 pub enum WorkerMsg {
     /// A neighbour changed a coordinate whose V-box reaches our window.
     Update(UpdateMsg),
-    /// Coordinator: stop now and report results.
+    /// Begin a solve phase (warm-started from the resident Z window).
+    Solve,
+    /// End the current solve phase and report `SolveDone`.
     Stop,
+    /// Compute local φ^w/ψ^w partials from the resident windows.
+    ComputeStats,
+    /// Swap the dictionary; re-bootstrap beta warm from the resident Z.
+    SetDict(SetDictMsg),
+    /// Report the cell's activation values (final assembly only).
+    Gather,
+    /// Exit the worker thread.
+    Shutdown,
 }
 
 /// Worker status transition, carrying message counters for the
 /// Safra-style termination detection: global convergence holds when
 /// every worker is idle and `sum(sent) == sum(received)` (no messages
-/// in flight).
+/// in flight). Counters are cumulative over the pool's lifetime (see
+/// the module docs for the between-phase rules).
 #[derive(Clone, Debug)]
 pub struct StatusMsg {
     pub from: usize,
@@ -40,7 +89,31 @@ pub struct StatusMsg {
     pub diverged: bool,
 }
 
-/// Final per-worker report.
+/// End-of-solve-phase acknowledgement (the worker's last message of a
+/// solve phase; the pool collects one per worker before moving on).
+#[derive(Clone, Debug)]
+pub struct SolveDoneMsg {
+    pub from: usize,
+    /// Snapshot of the cumulative worker counters.
+    pub stats: WorkerStats,
+}
+
+/// Local φ/ψ partials over the worker's own cell `S_w` (eq. 17),
+/// reduced by summation at the pool — full Z never leaves the workers.
+#[derive(Clone, Debug)]
+pub struct StatsMsg {
+    pub from: usize,
+    /// `phi^w : [K, K, (2L-1)..]`.
+    pub phi: NdTensor,
+    /// `psi^w : [K, P, L..]`.
+    pub psi: NdTensor,
+    /// `||Z||_1` restricted to the cell.
+    pub z_l1: f64,
+    /// Nonzeros in the cell.
+    pub z_nnz: usize,
+}
+
+/// Final per-worker report for a `Gather`.
 #[derive(Clone, Debug)]
 pub struct DoneMsg {
     pub from: usize,
@@ -54,10 +127,13 @@ pub struct DoneMsg {
 #[derive(Clone, Debug)]
 pub enum CoordMsg {
     Status(StatusMsg),
+    SolveDone(SolveDoneMsg),
+    Stats(StatsMsg),
+    DictSet { from: usize },
     Done(DoneMsg),
 }
 
-/// Per-worker work counters.
+/// Per-worker work counters (cumulative over the worker's lifetime).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
     /// Selection iterations (segments visited).
@@ -79,6 +155,19 @@ pub struct WorkerStats {
     /// scaling figures (this testbed has a single physical core, so
     /// parallel wall-clock cannot be measured directly — see DESIGN.md).
     pub work: u64,
+    /// Solve phases run on this worker.
+    pub solves: u64,
+    /// Cold beta bootstraps from `Z = 0` (exactly one at spawn on the
+    /// persistent path — never repeated between outer iterations).
+    pub beta_cold_inits: u64,
+    /// Warm beta bootstraps from a provided initial Z at spawn.
+    pub beta_warm_inits: u64,
+    /// Warm beta re-initializations from the resident Z after a
+    /// `SetDict` broadcast.
+    pub beta_warm_reinits: u64,
+    /// `Gather` replies served (exactly one — the final assembly — per
+    /// `learn_dictionary` run on the persistent path).
+    pub gathers: u64,
 }
 
 impl WorkerStats {
@@ -91,6 +180,11 @@ impl WorkerStats {
         self.sweeps += other.sweeps;
         self.pauses += other.pauses;
         self.work += other.work;
+        self.solves += other.solves;
+        self.beta_cold_inits += other.beta_cold_inits;
+        self.beta_warm_inits += other.beta_warm_inits;
+        self.beta_warm_reinits += other.beta_warm_reinits;
+        self.gathers += other.gathers;
     }
 }
 
@@ -106,5 +200,16 @@ mod tests {
         assert_eq!(a.updates, 7);
         assert_eq!(a.soft_locked, 2);
         assert_eq!(a.msgs_sent, 1);
+    }
+
+    #[test]
+    fn stats_merge_phase_counters() {
+        let mut a = WorkerStats { solves: 2, beta_cold_inits: 1, gathers: 1, ..Default::default() };
+        let b = WorkerStats { solves: 3, beta_warm_reinits: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.solves, 5);
+        assert_eq!(a.beta_cold_inits, 1);
+        assert_eq!(a.beta_warm_reinits, 2);
+        assert_eq!(a.gathers, 1);
     }
 }

@@ -1,12 +1,61 @@
 //! DiCoDiLe-Z: the distributed, asynchronous convolutional sparse
-//! coder (§4.1 of the paper) and the DICOD baseline.
+//! coder (§4.1 of the paper), the DICOD baseline, and the **persistent
+//! worker-pool runtime** the CDL alternation runs on.
+//!
+//! ## Architecture
+//!
+//! The activation domain is partitioned over a worker grid
+//! ([`partition`]); each worker owns a cell `S_w`, maintains beta on
+//! the `Theta`-extension `S_w + (L-1)` and Z on `S_w + 2(L-1)` (the
+//! extra rim feeds warm beta re-initialization after a dictionary
+//! swap), and exchanges coordinate-update notifications with its grid
+//! neighbours only — there is no central data server.
+//!
+//! [`pool::WorkerPool`] keeps that grid resident for a whole
+//! `learn_dictionary` run and drives it through phases:
+//!
+//! ```text
+//! spawn ──> Solve ──> ComputeStats ──> SetDict ──┐
+//!             ^                                  │   (outer iterations)
+//!             └──────────────────────────────────┘
+//!                  ...  ──> Gather ──> Shutdown      (final assembly)
+//! ```
+//!
+//! - **Solve**: DiCoDiLe-Z warm-started from each worker's resident Z;
+//!   counter-based (Safra-style) termination supervision; ends with a
+//!   `Stop` broadcast and one `SolveDone` ack per worker.
+//! - **ComputeStats**: each worker computes its φ^w/ψ^w partials
+//!   (eq. 17) on its resident windows; the pool reduces them by
+//!   summation. Full Z never leaves the workers mid-run.
+//! - **SetDict**: broadcast of the rebuilt problem (shared X, new D);
+//!   workers re-bootstrap beta *warm* from their resident Z. The
+//!   broadcast `Arc` shares one spectra cache, so dictionary spectra
+//!   regenerate once per broadcast, not once per worker.
+//! - **Gather**: the only full-Z centralization — final assembly.
+//!
+//! ## Counter-reset rules between phases
+//!
+//! The Safra message counters (`sent`/`received`) are cumulative over
+//! the pool's lifetime: a notification still queued when a solve phase
+//! ends is applied (and counted) while the worker idles between
+//! phases, so the global balance settles before the next solve and the
+//! termination detection never sees a phantom in-flight message.
+//! Per-solve state — the update cap, the divergence flag, the sweep
+//! position and the phase deadline — resets at every `Solve`, which is
+//! what lets a worker that paused as converged wake up cleanly after a
+//! `SetDict` re-activation (no stuck `idle` state).
+//!
+//! [`coordinator::solve_distributed`] remains the one-shot entry point:
+//! a temporary pool, one solve phase, gather, teardown.
 
 pub mod config;
 pub mod coordinator;
 pub mod messages;
 pub mod partition;
+pub mod pool;
 pub mod worker;
 
 pub use config::DicodConfig;
-pub use coordinator::{solve_distributed, DicodResult};
+pub use coordinator::{solve_distributed, solve_distributed_warm, DicodResult};
 pub use partition::{PartitionKind, WorkerGrid};
+pub use pool::{PoolReport, PoolSolve, WorkerPool};

@@ -1,0 +1,550 @@
+//! `WorkerPool` — the resident distributed runtime.
+//!
+//! The pool spawns the worker grid **once** and keeps it alive for the
+//! whole CDL alternation (Algorithm 2). Workers own their activation
+//! and beta windows across outer iterations; the pool drives them
+//! through phases:
+//!
+//! ```text
+//! spawn ─> [ Solve ─> ComputeStats ─> SetDict ]* ─> Gather ─> Shutdown
+//! ```
+//!
+//! - `solve()` runs DiCoDiLe-Z warm-started from each worker's resident
+//!   Z and supervises the counter-based termination protocol (the pool
+//!   never touches beta or Z — all hot-path traffic is
+//!   worker-to-worker).
+//! - `compute_stats()` has every worker compute its φ^w/ψ^w partials
+//!   (eq. 17) on its resident windows; only these O(K²(2L)^d) partials
+//!   travel to the pool, never Z — removing the O(signal) round-trip
+//!   per outer iteration that centralized CDL pays.
+//! - `set_dict()` broadcasts the rebuilt problem (shared X, new D);
+//!   workers re-bootstrap beta *warm* from the Z they already hold. The
+//!   new engine's spectra cache is shared through the broadcast `Arc`,
+//!   so dictionary spectra are regenerated once per broadcast, not once
+//!   per worker.
+//! - `gather()` assembles the full Z — used exactly once, for the final
+//!   result.
+//!
+//! `solve_distributed` remains available as a thin one-shot wrapper
+//! over a temporary pool, so single-solve callers and the paper-figure
+//! benches are unchanged.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::csc::problem::CscProblem;
+use crate::dicod::config::DicodConfig;
+use crate::dicod::messages::{CoordMsg, WorkerMsg, WorkerStats};
+use crate::dicod::partition::WorkerGrid;
+use crate::dicod::worker::{run_pool_worker, Peer, PoolWorkerCtx};
+use crate::dict::phi_psi::DictStats;
+use crate::tensor::NdTensor;
+
+/// Outcome of one solve phase.
+#[derive(Clone, Debug)]
+pub struct PoolSolve {
+    pub converged: bool,
+    pub diverged: bool,
+    /// Wall-clock seconds of the phase.
+    pub runtime: f64,
+}
+
+/// End-of-run summary of a pool (for `CdlResult` provenance and the
+/// residency assertions in the tests).
+#[derive(Clone, Debug)]
+pub struct PoolReport {
+    pub n_workers: usize,
+    /// Worker threads spawned over the pool's lifetime (exactly
+    /// `n_workers` — residency means no respawns).
+    pub workers_spawned: usize,
+    /// Aggregated cumulative worker counters.
+    pub stats: WorkerStats,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+/// Resident worker-pool session over one `CscProblem` domain.
+pub struct WorkerPool {
+    grid: Arc<WorkerGrid>,
+    cfg: Arc<DicodConfig>,
+    problem: Arc<CscProblem>,
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    coord_rx: Receiver<CoordMsg>,
+    handles: Vec<JoinHandle<()>>,
+    per_worker: Vec<WorkerStats>,
+    x_norm_sq: f64,
+    workers_spawned: usize,
+    down: bool,
+}
+
+impl WorkerPool {
+    /// Spawn the worker grid for `problem` (optionally warm-started
+    /// from a full-domain activation). Workers bootstrap their beta
+    /// windows in parallel and then idle on their inboxes.
+    pub fn spawn(problem: Arc<CscProblem>, cfg: &DicodConfig, z0: Option<&NdTensor>) -> WorkerPool {
+        let zsp = problem.z_spatial_dims();
+        let grid = Arc::new(WorkerGrid::new(
+            &zsp,
+            problem.atom_dims(),
+            cfg.n_workers,
+            cfg.partition,
+        ));
+        let w_tot = grid.n_workers();
+        let cfg = Arc::new(cfg.clone());
+
+        let mut worker_tx = Vec::with_capacity(w_tot);
+        let mut worker_rx = Vec::with_capacity(w_tot);
+        for _ in 0..w_tot {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            worker_tx.push(tx);
+            worker_rx.push(rx);
+        }
+        let (coord_tx, coord_rx) = mpsc::channel::<CoordMsg>();
+        if let Some(z0) = z0 {
+            assert_eq!(
+                z0.dims(),
+                &problem.z_dims()[..],
+                "warm-start Z dims must match the problem's activation dims"
+            );
+        }
+        let z0 = z0.map(|z| Arc::new(z.clone()));
+
+        let mut handles = Vec::with_capacity(w_tot);
+        for (rank, rx) in worker_rx.into_iter().enumerate() {
+            let peers: Vec<Peer> = grid
+                .neighbors(rank)
+                .into_iter()
+                .map(|r| Peer {
+                    rank: r,
+                    ext_window: grid.extended_cell(r),
+                    tx: worker_tx[r].clone(),
+                })
+                .collect();
+            let ctx = PoolWorkerCtx {
+                rank,
+                problem: problem.clone(),
+                grid: grid.clone(),
+                cfg: cfg.clone(),
+                inbox: rx,
+                peers,
+                coord: coord_tx.clone(),
+                z0: z0.clone(),
+            };
+            handles.push(std::thread::spawn(move || run_pool_worker(ctx)));
+        }
+        // Drop the pool's own sender so a dead grid disconnects coord_rx.
+        drop(coord_tx);
+
+        let x_norm_sq = problem.x.norm_sq();
+        WorkerPool {
+            grid,
+            cfg,
+            problem,
+            worker_tx,
+            coord_rx,
+            handles,
+            per_worker: vec![WorkerStats::default(); w_tot],
+            x_norm_sq,
+            workers_spawned: w_tot,
+            down: false,
+        }
+    }
+
+    /// Number of workers in the grid (may be below the requested count
+    /// when the domain cannot be split that far).
+    pub fn n_workers(&self) -> usize {
+        self.grid.n_workers()
+    }
+
+    /// Worker threads spawned over the pool's lifetime.
+    pub fn workers_spawned(&self) -> usize {
+        self.workers_spawned
+    }
+
+    /// The problem currently broadcast to the workers.
+    pub fn problem(&self) -> &Arc<CscProblem> {
+        &self.problem
+    }
+
+    /// Latest per-worker counter snapshots.
+    pub fn per_worker(&self) -> &[WorkerStats] {
+        &self.per_worker
+    }
+
+    /// Merge of the latest per-worker counter snapshots.
+    pub fn aggregate_stats(&self) -> WorkerStats {
+        let mut agg = WorkerStats::default();
+        for s in &self.per_worker {
+            agg.merge(s);
+        }
+        agg
+    }
+
+    /// End-of-run summary.
+    pub fn report(&self) -> PoolReport {
+        PoolReport {
+            n_workers: self.n_workers(),
+            workers_spawned: self.workers_spawned,
+            stats: self.aggregate_stats(),
+            per_worker: self.per_worker.clone(),
+        }
+    }
+
+    fn broadcast(&self, msg: WorkerMsg) {
+        for tx in &self.worker_tx {
+            let _ = tx.send(msg.clone());
+        }
+    }
+
+    /// Drain coordinator messages until every worker has produced this
+    /// phase's reply. `visit` returns `Some(rank)` when a message is
+    /// the awaited reply for `rank` (duplicates counted once); other
+    /// messages are ignored.
+    ///
+    /// Shortfall policy: panic. A missing reply means a worker thread
+    /// died or wedged past `timeout`; continuing would silently corrupt
+    /// the resident state (e.g. a gathered Z with a zeroed cell), so
+    /// the run fails loudly instead.
+    fn await_replies(
+        coord_rx: &Receiver<CoordMsg>,
+        w_tot: usize,
+        timeout: f64,
+        phase: &str,
+        mut visit: impl FnMut(CoordMsg) -> Option<usize>,
+    ) {
+        let deadline = Instant::now() + Duration::from_secs_f64(timeout);
+        let mut seen = vec![false; w_tot];
+        let mut got = 0usize;
+        while got < w_tot {
+            let msg = coord_rx.recv_timeout(Duration::from_millis(20));
+            match msg {
+                Ok(m) => {
+                    if let Some(rank) = visit(m) {
+                        if !seen[rank] {
+                            seen[rank] = true;
+                            got += 1;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => panic!(
+                    "worker pool: grid disconnected during {phase} ({got}/{w_tot} replies)"
+                ),
+            }
+            if got < w_tot && Instant::now() > deadline {
+                panic!("worker pool: {phase} timed out with {got}/{w_tot} replies");
+            }
+        }
+    }
+
+    /// Run one solve phase: DiCoDiLe-Z from the workers' resident Z
+    /// windows, Safra-style termination supervision, `Stop` broadcast
+    /// on global convergence/divergence/timeout, then one `SolveDone`
+    /// ack per worker.
+    pub fn solve(&mut self) -> PoolSolve {
+        let start = Instant::now();
+        let w_tot = self.n_workers();
+        self.broadcast(WorkerMsg::Solve);
+
+        let mut idle = vec![false; w_tot];
+        let mut converged = vec![false; w_tot];
+        let mut sent = vec![0u64; w_tot];
+        let mut received = vec![0u64; w_tot];
+        let mut any_diverged = false;
+        let mut stop_sent = false;
+        let mut acks = 0usize;
+        let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.timeout);
+        // Workers ack Stop promptly; the hard deadline only guards
+        // against a wedged thread so a bad run fails loudly instead of
+        // hanging (same shortfall policy as `await_replies`).
+        let hard_deadline = deadline + Duration::from_secs_f64(self.cfg.timeout);
+
+        while acks < w_tot {
+            let msg = self.coord_rx.recv_timeout(Duration::from_millis(20));
+            match msg {
+                Ok(CoordMsg::Status(s)) => {
+                    idle[s.from] = s.idle;
+                    converged[s.from] = s.converged;
+                    sent[s.from] = s.sent;
+                    received[s.from] = s.received;
+                    if s.diverged {
+                        any_diverged = true;
+                    }
+                    let all_idle = idle.iter().all(|&b| b);
+                    let balanced =
+                        sent.iter().sum::<u64>() == received.iter().sum::<u64>();
+                    if !stop_sent && (any_diverged || (all_idle && balanced)) {
+                        stop_sent = true;
+                        self.broadcast(WorkerMsg::Stop);
+                    }
+                }
+                Ok(CoordMsg::SolveDone(d)) => {
+                    self.per_worker[d.from] = d.stats;
+                    acks += 1;
+                }
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => panic!(
+                    "worker pool: grid disconnected during solve ({acks}/{w_tot} acks)"
+                ),
+            }
+            if !stop_sent && Instant::now() > deadline {
+                stop_sent = true;
+                self.broadcast(WorkerMsg::Stop);
+            }
+            if acks < w_tot && Instant::now() > hard_deadline {
+                panic!("worker pool: solve timed out with {acks}/{w_tot} acks after Stop");
+            }
+        }
+
+        PoolSolve {
+            converged: converged.iter().all(|&b| b) && !any_diverged,
+            diverged: any_diverged,
+            runtime: start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Map-reduce the dictionary-update sufficient statistics from the
+    /// workers' resident windows (eq. 17). Returns the reduced stats
+    /// and the total activation nonzero count. Full Z never travels.
+    pub fn compute_stats(&mut self) -> (DictStats, usize) {
+        let w_tot = self.n_workers();
+        self.broadcast(WorkerMsg::ComputeStats);
+        let mut parts: Vec<Option<(NdTensor, NdTensor, f64, usize)>> = vec![None; w_tot];
+        Self::await_replies(&self.coord_rx, w_tot, self.cfg.timeout, "compute_stats", |m| {
+            match m {
+                CoordMsg::Stats(s) => {
+                    let from = s.from;
+                    parts[from] = Some((s.phi, s.psi, s.z_l1, s.z_nnz));
+                    Some(from)
+                }
+                _ => None,
+            }
+        });
+        // Reduce in rank order so the summation is deterministic.
+        // (await_replies guarantees every slot is filled.)
+        let mut it = parts
+            .into_iter()
+            .map(|p| p.expect("every worker reports a stats partial"));
+        let (mut phi, mut psi, mut z_l1, mut z_nnz) = it.next().unwrap();
+        for (p2, s2, l1, nnz) in it {
+            phi.add_assign(&p2);
+            psi.add_assign(&s2);
+            z_l1 += l1;
+            z_nnz += nnz;
+        }
+        (DictStats { phi, psi, x_norm_sq: self.x_norm_sq, z_l1 }, z_nnz)
+    }
+
+    /// Broadcast a rebuilt problem (same shared X, new dictionary).
+    /// Workers re-bootstrap beta warm from their resident Z; the call
+    /// returns once every worker has acknowledged the swap.
+    pub fn set_dict(&mut self, problem: Arc<CscProblem>) {
+        // The swap must preserve the whole problem geometry: the
+        // workers' resident windows were sized from it.
+        assert_eq!(
+            problem.z_spatial_dims(),
+            self.problem.z_spatial_dims(),
+            "dictionary swap must preserve the activation domain"
+        );
+        assert_eq!(
+            problem.n_atoms(),
+            self.problem.n_atoms(),
+            "dictionary swap must preserve the atom count"
+        );
+        assert_eq!(
+            problem.atom_dims(),
+            self.problem.atom_dims(),
+            "dictionary swap must preserve the atom dims"
+        );
+        // The observation must be the *same shared* X: compute_stats
+        // completes the objective with the x_norm_sq cached at spawn,
+        // and the workers' windows slice X by identity.
+        assert!(
+            Arc::ptr_eq(&problem.x, &self.problem.x),
+            "dictionary swap must reuse the pool's shared observation Arc"
+        );
+        let w_tot = self.n_workers();
+        self.problem = problem.clone();
+        self.broadcast(WorkerMsg::SetDict(crate::dicod::messages::SetDictMsg { problem }));
+        Self::await_replies(&self.coord_rx, w_tot, self.cfg.timeout, "set_dict", |m| match m {
+            CoordMsg::DictSet { from } => Some(from),
+            _ => None,
+        });
+    }
+
+    /// Assemble the full activation tensor from the workers' cells.
+    /// This is the only point where Z is centralized — call it once,
+    /// for the final result.
+    pub fn gather(&mut self) -> NdTensor {
+        let w_tot = self.n_workers();
+        self.broadcast(WorkerMsg::Gather);
+        let mut done: Vec<Option<Vec<f64>>> = vec![None; w_tot];
+        let per_worker = &mut self.per_worker;
+        Self::await_replies(&self.coord_rx, w_tot, self.cfg.timeout, "gather", |m| match m {
+            CoordMsg::Done(d) => {
+                let from = d.from;
+                per_worker[from] = d.stats;
+                done[from] = Some(d.z_cell);
+                Some(from)
+            }
+            _ => None,
+        });
+
+        let problem = &self.problem;
+        let zsp = problem.z_spatial_dims();
+        let k_tot = problem.n_atoms();
+        let zstr = crate::tensor::shape::strides_of(&zsp);
+        let sp: usize = zsp.iter().product();
+        let mut z = NdTensor::zeros(&problem.z_dims());
+        for (rank, slot) in done.iter().enumerate() {
+            let cell_z = slot.as_ref().expect("await_replies fills every cell");
+            let cell = self.grid.cell(rank);
+            let cell_sp = cell.size();
+            for k in 0..k_tot {
+                for (i, u) in cell.iter().enumerate() {
+                    let goff: usize =
+                        u.iter().zip(&zstr).map(|(x, s)| *x as usize * s).sum();
+                    z.data_mut()[k * sp + goff] = cell_z[k * cell_sp + i];
+                }
+            }
+        }
+        z
+    }
+
+    /// Stop the workers and join their threads. Idempotent; also runs
+    /// on `Drop`.
+    pub fn shutdown(&mut self) {
+        if self.down {
+            return;
+        }
+        self.down = true;
+        self.broadcast(WorkerMsg::Shutdown);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            // Unwinding from a shortfall panic: the wedged worker that
+            // caused it would never read its inbox, so joining here
+            // would hang the process and defeat the fail-loudly policy.
+            // Tell the grid to exit and detach the handles instead.
+            self.down = true;
+            self.broadcast(WorkerMsg::Shutdown);
+            self.handles.clear();
+            return;
+        }
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csc::cd::{solve_cd, CdConfig};
+    use crate::util::rng::Pcg64;
+
+    fn gen_problem_1d(seed: u64, t: usize, k: usize, l: usize) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        let d = NdTensor::from_vec(&[k, 1, l], {
+            let mut v = rng.normal_vec(k * l);
+            for atom in v.chunks_mut(l) {
+                let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in atom.iter_mut() {
+                    *x /= n;
+                }
+            }
+            v
+        });
+        let mut z = NdTensor::zeros(&[k, t - l + 1]);
+        for v in z.data_mut().iter_mut() {
+            if rng.bernoulli(0.03) {
+                *v = rng.normal_ms(0.0, 5.0);
+            }
+        }
+        let clean = crate::conv::reconstruct(&z, &d);
+        let noise =
+            NdTensor::from_vec(clean.dims(), rng.normal_vec(clean.len())).scale(0.1);
+        CscProblem::with_lambda_frac(clean.add(&noise), d, 0.1)
+    }
+
+    #[test]
+    fn pool_solves_and_gathers() {
+        let p = gen_problem_1d(21, 140, 2, 6);
+        let seq = solve_cd(&p, &CdConfig { tol: 1e-8, ..Default::default() });
+        let cfg = DicodConfig { n_workers: 3, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        let s = pool.solve();
+        assert!(s.converged);
+        let z = pool.gather();
+        let (cd, cs) = (p.cost(&z), p.cost(&seq.z));
+        assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "{cd} vs {cs}");
+    }
+
+    #[test]
+    fn repeated_solves_are_idempotent_at_optimum() {
+        // A second solve phase from the resident (optimal) Z must do no
+        // updates and still report convergence.
+        let p = gen_problem_1d(22, 120, 2, 5);
+        let cfg = DicodConfig { n_workers: 2, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        assert!(pool.solve().converged);
+        let updates_before = pool.aggregate_stats().updates;
+        assert!(pool.solve().converged);
+        let agg = pool.aggregate_stats();
+        assert_eq!(agg.updates, updates_before, "warm resident restart must be a no-op");
+        assert_eq!(agg.solves, 2 * pool.n_workers() as u64);
+        assert_eq!(agg.beta_cold_inits, pool.n_workers() as u64);
+    }
+
+    #[test]
+    fn pool_stats_partials_match_sequential_stats() {
+        let p = gen_problem_1d(23, 130, 3, 6);
+        let cfg = DicodConfig { n_workers: 4, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        pool.solve();
+        let (stats, nnz) = pool.compute_stats();
+        let z = pool.gather();
+        let want = crate::dict::phi_psi::compute_stats(&z, &p.x, p.atom_dims());
+        assert!(stats.phi.allclose(&want.phi, 1e-9), "phi partial reduction mismatch");
+        assert!(stats.psi.allclose(&want.psi, 1e-9), "psi partial reduction mismatch");
+        assert!((stats.z_l1 - want.z_l1).abs() < 1e-9 * (1.0 + want.z_l1));
+        assert_eq!(nnz, z.nnz());
+    }
+
+    #[test]
+    fn set_dict_resolves_under_new_dictionary() {
+        let p0 = gen_problem_1d(24, 120, 2, 5);
+        let mut rng = Pcg64::seeded(25);
+        let d1 = NdTensor::from_vec(&[2, 1, 5], {
+            let mut v = rng.normal_vec(10);
+            for atom in v.chunks_mut(5) {
+                let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in atom.iter_mut() {
+                    *x /= n;
+                }
+            }
+            v
+        });
+        let mut p1 = p0.clone();
+        p1.update_dict(d1);
+
+        let cfg = DicodConfig { n_workers: 3, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p0.clone()), &cfg, None);
+        assert!(pool.solve().converged);
+        pool.set_dict(Arc::new(p1.clone()));
+        assert!(pool.solve().converged, "stale-Z restart under a new D must converge");
+        let z = pool.gather();
+        let seq = solve_cd(&p1, &CdConfig { tol: 1e-8, ..Default::default() });
+        let (cd, cs) = (p1.cost(&z), p1.cost(&seq.z));
+        assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "{cd} vs {cs}");
+        let agg = pool.aggregate_stats();
+        assert_eq!(agg.beta_warm_reinits, pool.n_workers() as u64);
+        assert_eq!(agg.beta_cold_inits, pool.n_workers() as u64);
+    }
+}

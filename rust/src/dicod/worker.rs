@@ -1,25 +1,44 @@
-//! The asynchronous DiCoDiLe-Z worker (Algorithm 3 of the paper).
+//! The resident DiCoDiLe-Z worker (Algorithm 3 of the paper, made
+//! persistent across the full CDL alternation).
 //!
 //! Each worker owns a contiguous sub-domain `S_w` of the activation
-//! domain and maintains `beta` and `Z` on the extended window
-//! `S_w + halo` (the `Theta`-extension). It runs locally-greedy
-//! coordinate descent on its own cell, rejects candidates that lose the
+//! domain and maintains, for its whole lifetime:
+//!
+//! - `beta` on the extended window `S_w + (L-1)` (the `Theta`-extension
+//!   the soft-lock rule inspects),
+//! - `Z` on the wider window `S_w + 2(L-1)` — the extra `L-1` rim holds
+//!   every neighbour activation whose support reaches the beta window,
+//!   which is exactly what the warm beta re-initialization under a new
+//!   dictionary (`SetDict`) needs. The rim costs nothing extra in
+//!   traffic: an update's V-box overlaps our extended window iff the
+//!   update lies inside this rim, so the existing notification rule
+//!   already delivers every value the rim stores.
+//!
+//! During a `Solve` phase the worker runs locally-greedy coordinate
+//! descent on its own cell, rejects candidates that lose the
 //! decentralized *soft-lock* comparison (eq. 14) against the extension,
 //! notifies neighbours whose windows its accepted updates reach, and
-//! participates in a counter-based termination protocol with the
-//! coordinator (workers pause when locally converged and resume on
-//! incoming messages — §4.1 "workers that reach this state are paused").
+//! participates in the counter-based termination protocol (workers
+//! pause when locally converged and resume on incoming messages — §4.1
+//! "workers that reach this state are paused"). Between phases it sits
+//! on its inbox, applying any late neighbour notifications so its
+//! windows stay consistent, and serves `ComputeStats` / `SetDict` /
+//! `Gather` commands from its resident state.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::csc::beta::{BetaWindow, ZWindow};
 use crate::csc::problem::CscProblem;
 use crate::csc::select::{Segments, Strategy};
 use crate::dicod::config::DicodConfig;
-use crate::dicod::messages::{CoordMsg, DoneMsg, StatusMsg, UpdateMsg, WorkerMsg, WorkerStats};
+use crate::dicod::messages::{
+    CoordMsg, DoneMsg, SolveDoneMsg, StatsMsg, StatusMsg, UpdateMsg, WorkerMsg, WorkerStats,
+};
 use crate::dicod::partition::{box_difference, WorkerGrid};
 use crate::tensor::shape::Rect;
+use crate::tensor::NdTensor;
 
 /// Outbound link to a neighbour: rank, its extended window (to decide
 /// whether an update reaches it) and its inbox.
@@ -29,55 +48,169 @@ pub struct Peer {
     pub tx: Sender<WorkerMsg>,
 }
 
-/// Everything a worker thread needs.
-pub struct WorkerCtx<'a> {
+/// Everything a resident worker thread is born with.
+pub struct PoolWorkerCtx {
     pub rank: usize,
-    pub problem: &'a CscProblem,
-    pub grid: &'a WorkerGrid,
-    pub cfg: &'a DicodConfig,
+    pub problem: Arc<CscProblem>,
+    pub grid: Arc<WorkerGrid>,
+    pub cfg: Arc<DicodConfig>,
     pub inbox: Receiver<WorkerMsg>,
     pub peers: Vec<Peer>,
     pub coord: Sender<CoordMsg>,
+    /// Optional full-domain warm-start activation.
+    pub z0: Option<Arc<NdTensor>>,
 }
 
 /// Poll period while paused (waiting for neighbour traffic or Stop).
 const IDLE_POLL: Duration = Duration::from_millis(2);
 
-/// Run the worker loop to completion (until Stop or timeout).
-pub fn run_worker(ctx: WorkerCtx<'_>) {
-    let WorkerCtx { rank, problem, grid, cfg, inbox, peers, coord } = ctx;
+/// Run the resident worker until `Shutdown` (or channel teardown).
+pub fn run_pool_worker(ctx: PoolWorkerCtx) {
+    let PoolWorkerCtx { rank, mut problem, grid, cfg, inbox, peers, coord, z0 } = ctx;
     let cell = grid.cell(rank);
     let ext = grid.extended_cell(rank);
     let ext_dims = ext.extents();
     let k_tot = problem.n_atoms();
+    let zsp = problem.z_spatial_dims();
 
-    // Halo-window beta bootstrap: dispatched through the problem's
-    // CorrEngine, so same-size worker windows share FFT plans and the
-    // per-padded-size dictionary spectra (computed once per dictionary
-    // update, not once per worker).
-    let mut beta = BetaWindow::init_window(problem, &ext.lo, &ext_dims);
-    let mut z = ZWindow::zeros(k_tot, &ext.lo, &ext_dims);
+    // Z lives on the cell dilated by 2(L-1): extension + warm-reinit rim.
+    let rim: Vec<usize> = problem.atom_dims().iter().map(|&l| 2 * (l - 1)).collect();
+    let zwin = cell.dilate(&rim).intersect(&Rect::full(&zsp));
+    let mut z = ZWindow::zeros(k_tot, &zwin.lo, &zwin.extents());
+
+    let mut stats = WorkerStats::default();
+
+    // Beta bootstrap on the extended window, dispatched through the
+    // problem's CorrEngine so same-size worker windows share FFT plans
+    // and the per-padded-size dictionary spectra.
+    let mut beta = match &z0 {
+        Some(z0) => {
+            z.load_from_global(z0);
+            stats.beta_warm_inits += 1;
+            BetaWindow::init_window_warm(&problem, &ext.lo, &ext_dims, &z)
+        }
+        None => {
+            stats.beta_cold_inits += 1;
+            BetaWindow::init_window(&problem, &ext.lo, &ext_dims)
+        }
+    };
 
     // Local segments C_m^(w) over the worker's own cell.
     let segs = match cfg.strategy {
         Strategy::Greedy => Segments::new(cell.clone(), &cell.extents()),
         _ => Segments::for_atoms(cell.clone(), problem.atom_dims()),
     };
-    let m_tot = segs.len();
     // The extension E(S_w) = ext \ cell, decomposed into boxes for the
     // soft-lock max computation.
     let ext_parts = box_difference(&ext, &cell);
 
-    let mut stats = WorkerStats::default();
+    // ---- phase dispatcher ------------------------------------------------
+    loop {
+        match inbox.recv() {
+            Err(_) => break,
+            // Late neighbour notification from the previous solve phase:
+            // apply it so beta/Z stay consistent (and the Safra balance
+            // settles) before the next phase command, which the FIFO
+            // inbox guarantees is behind it.
+            Ok(WorkerMsg::Update(u)) => {
+                apply_remote_update(&problem, &mut beta, &mut z, &u, &mut stats)
+            }
+            // Stray Stop (e.g. a timeout race after the phase already
+            // ended): nothing to do outside a solve phase.
+            Ok(WorkerMsg::Stop) => {}
+            Ok(WorkerMsg::Solve) => {
+                stats.solves += 1;
+                let alive = solve_phase(SolveCtx {
+                    rank,
+                    problem: problem.as_ref(),
+                    grid: grid.as_ref(),
+                    cfg: cfg.as_ref(),
+                    inbox: &inbox,
+                    peers: &peers,
+                    coord: &coord,
+                    beta: &mut beta,
+                    z: &mut z,
+                    segs: &segs,
+                    ext_parts: &ext_parts,
+                    stats: &mut stats,
+                });
+                let _ = coord
+                    .send(CoordMsg::SolveDone(SolveDoneMsg { from: rank, stats: stats.clone() }));
+                if !alive {
+                    break;
+                }
+            }
+            Ok(WorkerMsg::ComputeStats) => {
+                let (phi, psi, z_l1, z_nnz) =
+                    crate::dict::phi_psi::worker_stats_partials(&problem, &z, &cell, &ext);
+                let _ = coord.send(CoordMsg::Stats(StatsMsg { from: rank, phi, psi, z_l1, z_nnz }));
+            }
+            Ok(WorkerMsg::SetDict(msg)) => {
+                problem = msg.problem;
+                beta = BetaWindow::init_window_warm(&problem, &ext.lo, &ext_dims, &z);
+                stats.beta_warm_reinits += 1;
+                let _ = coord.send(CoordMsg::DictSet { from: rank });
+            }
+            Ok(WorkerMsg::Gather) => {
+                stats.gathers += 1;
+                let z_cell = extract_cell(&z, &cell, k_tot);
+                let _ = coord
+                    .send(CoordMsg::Done(DoneMsg { from: rank, z_cell, stats: stats.clone() }));
+            }
+            Ok(WorkerMsg::Shutdown) => break,
+        }
+    }
+}
+
+/// Borrowed state for one solve phase.
+struct SolveCtx<'a> {
+    rank: usize,
+    problem: &'a CscProblem,
+    grid: &'a WorkerGrid,
+    cfg: &'a DicodConfig,
+    inbox: &'a Receiver<WorkerMsg>,
+    peers: &'a [Peer],
+    coord: &'a Sender<CoordMsg>,
+    beta: &'a mut BetaWindow,
+    z: &'a mut ZWindow,
+    segs: &'a Segments,
+    ext_parts: &'a [Rect],
+    stats: &'a mut WorkerStats,
+}
+
+/// One solve phase: DiCoDiLe-Z from the resident windows, until the
+/// coordinator's `Stop`. Returns `false` if the worker should exit
+/// entirely (Shutdown or channel teardown mid-phase).
+fn solve_phase(ctx: SolveCtx<'_>) -> bool {
+    let SolveCtx {
+        rank,
+        problem,
+        grid,
+        cfg,
+        inbox,
+        peers,
+        coord,
+        beta,
+        z,
+        segs,
+        ext_parts,
+        stats,
+    } = ctx;
+    let m_tot = segs.len();
     let max_updates = (cfg.max_updates / grid.n_workers().max(1)).max(1) as u64;
     let deadline = Instant::now() + Duration::from_secs_f64(cfg.timeout);
 
+    // Per-phase state — the counter-reset rule: the update cap, the
+    // divergence flag, the sweep position and the deadline are local to
+    // the phase; the Safra message counters (in `stats`) are cumulative.
     let mut m = 0usize;
     let mut sweep_max = 0.0f64;
     let mut idle = false;
     let mut capped = false;
     let mut diverged = false;
+    let mut phase_updates = 0u64;
     let mut stop = false;
+    let mut alive = true;
 
     let send_status = |idle: bool, converged: bool, diverged: bool, stats: &WorkerStats| {
         let _ = coord.send(CoordMsg::Status(StatusMsg {
@@ -101,17 +234,33 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
         while drain_now {
             match inbox.try_recv() {
                 Ok(WorkerMsg::Update(u)) => {
-                    apply_remote_update(problem, &mut beta, &mut z, &u, &mut stats);
-                    if idle && !capped && !diverged {
-                        idle = false;
-                        sweep_max = 0.0;
-                        send_status(false, false, false, &stats);
+                    apply_remote_update(problem, beta, z, &u, stats);
+                    if idle {
+                        if !capped && !diverged {
+                            idle = false;
+                            sweep_max = 0.0;
+                            send_status(false, false, false, stats);
+                        } else {
+                            // Still paused (capped/diverged), but the
+                            // received counter moved: refresh it so the
+                            // coordinator's Safra balance can settle
+                            // instead of stalling until the timeout.
+                            send_status(true, false, diverged, stats);
+                        }
                     }
                 }
                 Ok(WorkerMsg::Stop) => {
                     stop = true;
                     break;
                 }
+                Ok(WorkerMsg::Shutdown) => {
+                    stop = true;
+                    alive = false;
+                    break;
+                }
+                // Phase commands never overlap a solve (the pool waits
+                // for SolveDone); ignore defensively.
+                Ok(_) => {}
                 Err(_) => break,
             }
         }
@@ -125,7 +274,7 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
             // Report and wait for the coordinator's Stop.
             if !idle {
                 idle = true;
-                send_status(true, false, diverged, &stats);
+                send_status(true, false, diverged, stats);
             }
         }
 
@@ -133,16 +282,28 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
         if idle {
             match inbox.recv_timeout(IDLE_POLL) {
                 Ok(WorkerMsg::Update(u)) => {
-                    apply_remote_update(problem, &mut beta, &mut z, &u, &mut stats);
+                    apply_remote_update(problem, beta, z, &u, stats);
                     if !capped && !diverged {
                         idle = false;
                         sweep_max = 0.0;
-                        send_status(false, false, false, &stats);
+                        send_status(false, false, false, stats);
+                    } else {
+                        // See the drain branch: keep the coordinator's
+                        // received counter fresh while pause persists.
+                        send_status(true, false, diverged, stats);
                     }
                 }
                 Ok(WorkerMsg::Stop) => break 'main,
+                Ok(WorkerMsg::Shutdown) => {
+                    alive = false;
+                    break 'main;
+                }
+                Ok(_) => {}
                 Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break 'main,
+                Err(RecvTimeoutError::Disconnected) => {
+                    alive = false;
+                    break 'main;
+                }
             }
             continue 'main;
         }
@@ -151,12 +312,12 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
         stats.iterations += 1;
         let rect = segs.rect(m);
         stats.work += (problem.n_atoms() * rect.size()) as u64;
-        let candidate = beta.best_candidate(problem, &z, &rect);
+        let candidate = beta.best_candidate(problem, z, &rect);
         if let Some((k0, u0, dz0)) = candidate {
             if dz0.abs() >= cfg.tol {
                 let accepted = if cfg.soft_lock && grid.in_soft_border(rank, &u0) {
                     let (ok, scanned) =
-                        soft_lock_accepts(problem, grid, &beta, &z, &ext_parts, rank, &u0, dz0);
+                        soft_lock_accepts(problem, grid, beta, z, ext_parts, rank, &u0, dz0);
                     stats.work += scanned;
                     ok
                 } else {
@@ -173,20 +334,21 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
                     stats.work += beta.apply_update(problem, k0, &u0, dz0) as u64;
                     z.add_at(k0, &u0, dz0);
                     stats.updates += 1;
+                    phase_updates += 1;
 
                     // Divergence guard (paper §5.1, Fig. 5 protocol).
                     if let Some(guard) = cfg.divergence_guard {
                         if z.at(k0, &u0).abs() > guard {
                             diverged = true;
                             idle = true;
-                            send_status(true, false, true, &stats);
+                            send_status(true, false, true, stats);
                             continue 'main;
                         }
                     }
 
                     // Notify neighbours whose windows the V-box reaches.
                     let v = grid.v_box(&u0);
-                    for peer in &peers {
+                    for peer in peers {
                         if v.overlaps(&peer.ext_window) {
                             stats.msgs_sent += 1;
                             let _ = peer.tx.send(WorkerMsg::Update(UpdateMsg {
@@ -198,10 +360,10 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
                         }
                     }
 
-                    if stats.updates >= max_updates {
+                    if phase_updates >= max_updates {
                         capped = true;
                         idle = true;
-                        send_status(true, false, false, &stats);
+                        send_status(true, false, false, stats);
                         continue 'main;
                     }
                 } else {
@@ -218,15 +380,12 @@ pub fn run_worker(ctx: WorkerCtx<'_>) {
             if sweep_max < cfg.tol {
                 idle = true;
                 stats.pauses += 1;
-                send_status(true, true, false, &stats);
+                send_status(true, true, false, stats);
             }
             sweep_max = 0.0;
         }
     }
-
-    // -- final gather ------------------------------------------------------
-    let z_cell = extract_cell(&z, &cell, k_tot);
-    let _ = coord.send(CoordMsg::Done(DoneMsg { from: rank, z_cell, stats }));
+    alive
 }
 
 /// Apply a neighbour's update notification to the local windows.
@@ -287,7 +446,7 @@ fn soft_lock_accepts(
     (accepted, scanned)
 }
 
-/// Copy the worker's own cell out of its (extended) Z window,
+/// Copy the worker's own cell out of its (wider) Z window,
 /// row-major over `[K, cell extents..]`.
 fn extract_cell(z: &ZWindow, cell: &Rect, k_tot: usize) -> Vec<f64> {
     let cell_sp = cell.size();

@@ -8,4 +8,7 @@ pub mod phi_psi;
 
 pub use grad::{cost_from_stats, grad_from_stats};
 pub use pgd::{update_dict, PgdConfig, PgdResult};
-pub use phi_psi::{compute_stats, compute_stats_parallel, DictStats};
+pub use phi_psi::{
+    compute_stats, compute_stats_auto, compute_stats_parallel, local_stats_windows,
+    worker_stats_partials, DictStats,
+};

@@ -9,9 +9,21 @@
 //! dictionary objective are computable in `O(K^2 P |Theta|^2)` —
 //! independent of the signal size. The map-reduce version splits the
 //! sums over worker cells exactly as the paper distributes them over
-//! the CSC worker grid.
+//! the CSC worker grid, and the same windowed core
+//! ([`local_stats_windows`]) is what each resident pool worker runs on
+//! its own Z windows (`ComputeStats` phase) — so the reduced partials
+//! are bit-for-bit the same sums whichever side computes them.
+//!
+//! The dense-map-reduce vs sparse-sequential dispatch threshold is
+//! tunable via `DICODILE_PHIPSI_DENSITY` (mirroring the
+//! `DICODILE_FFT_CROSSOVER` seam); the path taken is reported through
+//! [`compute_stats_auto`] and recorded in the CDL trace.
+
+use std::sync::OnceLock;
 
 use crate::conv;
+use crate::csc::beta::ZWindow;
+use crate::csc::problem::CscProblem;
 use crate::dicod::partition::{PartitionKind, WorkerGrid};
 use crate::tensor::shape::Rect;
 use crate::tensor::NdTensor;
@@ -27,6 +39,23 @@ pub struct DictStats {
     pub x_norm_sq: f64,
     /// `||Z||_1` (completes the objective).
     pub z_l1: f64,
+}
+
+/// Activation density below which the sequential sparse nonzero-pair
+/// path beats the dense map-reduce (`DICODILE_PHIPSI_DENSITY`,
+/// default 0.05). Post-CSC activations are usually far below it.
+pub fn phipsi_density_threshold() -> f64 {
+    static T: OnceLock<f64> = OnceLock::new();
+    *T.get_or_init(|| parse_phipsi_density(std::env::var("DICODILE_PHIPSI_DENSITY").ok()))
+}
+
+/// Parse helper for the `DICODILE_PHIPSI_DENSITY` override (exposed
+/// separately so the policy is testable without touching the process
+/// environment; the cached reader above freezes on first use).
+pub fn parse_phipsi_density(raw: Option<String>) -> f64 {
+    raw.and_then(|s| s.parse().ok())
+        .filter(|t: &f64| t.is_finite() && *t >= 0.0)
+        .unwrap_or(0.05)
 }
 
 /// Sequential computation of `(phi, psi)`.
@@ -48,6 +77,17 @@ pub fn compute_stats_parallel(
     ldims: &[usize],
     n_workers: usize,
 ) -> DictStats {
+    compute_stats_auto(z, x, ldims, n_workers).0
+}
+
+/// As [`compute_stats_parallel`], additionally reporting which path ran
+/// (`"sparse-seq"` or `"dense-par"`) for the CDL trace.
+pub fn compute_stats_auto(
+    z: &NdTensor,
+    x: &NdTensor,
+    ldims: &[usize],
+    n_workers: usize,
+) -> (DictStats, &'static str) {
     let zsp: Vec<usize> = z.dims()[1..].to_vec();
     let w = n_workers
         .min(zsp[0]) // at least 1 row per worker
@@ -57,8 +97,8 @@ pub fn compute_stats_parallel(
     // map-reduce by an order of magnitude there, so prefer it. The
     // dense map-reduce remains the multi-core path for dense Z.
     let density = z.nnz() as f64 / z.len().max(1) as f64;
-    if w == 1 || density < 0.05 {
-        return compute_stats(z, x, ldims);
+    if w == 1 || density < phipsi_density_threshold() {
+        return (compute_stats(z, x, ldims), "sparse-seq");
     }
     let grid = WorkerGrid::new(&zsp, ldims, w, PartitionKind::Grid);
     let mut partials: Vec<Option<(NdTensor, NdTensor)>> = vec![None; w];
@@ -76,10 +116,15 @@ pub fn compute_stats_parallel(
         phi.add_assign(&p2);
         psi.add_assign(&s2);
     }
-    DictStats { phi, psi, x_norm_sq: x.norm_sq(), z_l1: z.norm1() }
+    (
+        DictStats { phi, psi, x_norm_sq: x.norm_sq(), z_l1: z.norm1() },
+        "dense-par",
+    )
 }
 
-/// Partial `(phi^w, psi^w)` with the outer sum restricted to `S_w`.
+/// Partial `(phi^w, psi^w)` with the outer sum restricted to `S_w`,
+/// computed from *global* tensors (the thread map-reduce path): copies
+/// the cell/extended windows and defers to [`local_stats_windows`].
 fn local_stats(
     z: &NdTensor,
     x: &NdTensor,
@@ -93,11 +138,7 @@ fn local_stats(
     let tdims: Vec<usize> = x.dims()[1..].to_vec();
     let cell = grid.cell(rank);
     let ext = grid.extended_cell(rank);
-    let cell_ext = cell.extents();
-    let ext_ext = ext.extents();
 
-    // Copy the cell slice of each Z_k and the extended slice used as
-    // the correlation partner.
     let copy_window = |src: &[f64], sdims: &[usize], win: &Rect| -> Vec<f64> {
         let str_ = crate::tensor::shape::strides_of(sdims);
         let mut out = Vec::with_capacity(win.size());
@@ -107,6 +148,49 @@ fn local_stats(
         }
         out
     };
+
+    let cells: Vec<Vec<f64>> = (0..k_tot)
+        .map(|k| copy_window(z.slice0(k), &zsp, &cell))
+        .collect();
+    let exts: Vec<Vec<f64>> = (0..k_tot)
+        .map(|k| copy_window(z.slice0(k), &zsp, &ext))
+        .collect();
+
+    // psi partner: X over [cell.lo, cell.hi + L - 1) — always inside
+    // the observation domain.
+    let xwin = Rect::new(
+        cell.lo.clone(),
+        cell.hi.iter().zip(ldims).map(|(h, &l)| h + l as i64 - 1).collect(),
+    );
+    let mut xdims = vec![p_tot];
+    xdims.extend_from_slice(&xwin.extents());
+    let mut xw = NdTensor::zeros(&xdims);
+    let xwsp: usize = xwin.extents().iter().product();
+    for p in 0..p_tot {
+        let win = copy_window(x.slice0(p), &tdims, &xwin);
+        xw.data_mut()[p * xwsp..(p + 1) * xwsp].copy_from_slice(&win);
+    }
+
+    local_stats_windows(&cells, &cell, &exts, &ext, &xw, ldims)
+}
+
+/// The windowed φ/ψ partial core shared by the thread map-reduce and
+/// the resident pool workers: `cells[k]` holds `Z_k` over the worker's
+/// own cell, `exts[k]` over the extended cell (the correlation partner
+/// of eq. 17), and `xw` the signal window `[P, cell + L - 1]` anchored
+/// at `cell.lo`.
+pub fn local_stats_windows(
+    cells: &[Vec<f64>],
+    cell: &Rect,
+    exts: &[Vec<f64>],
+    ext: &Rect,
+    xw: &NdTensor,
+    ldims: &[usize],
+) -> (NdTensor, NdTensor) {
+    let k_tot = cells.len();
+    let p_tot = xw.dims()[0];
+    let cell_ext = cell.extents();
+    let ext_ext = ext.extents();
 
     let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
     let cc_sp: usize = cc_dims.iter().product();
@@ -123,13 +207,6 @@ fn local_stats(
         .collect();
     let hi: Vec<i64> = ldims.iter().zip(&shift).map(|(&l, s)| l as i64 + s).collect();
 
-    let cells: Vec<Vec<f64>> = (0..k_tot)
-        .map(|k| copy_window(z.slice0(k), &zsp, &cell))
-        .collect();
-    let exts: Vec<Vec<f64>> = (0..k_tot)
-        .map(|k| copy_window(z.slice0(k), &zsp, &ext))
-        .collect();
-
     for k0 in 0..k_tot {
         for k1 in 0..k_tot {
             let (cc, _) = conv::cross_corr_range_auto(
@@ -142,13 +219,7 @@ fn local_stats(
         }
     }
 
-    // psi: partner window of X is [cell.lo, cell.hi + L - 1) — always
-    // inside the observation domain.
-    let xwin = Rect::new(
-        cell.lo.clone(),
-        cell.hi.iter().zip(ldims).map(|(h, &l)| h + l as i64 - 1).collect(),
-    );
-    let xwin_ext = xwin.extents();
+    let xwin_ext: Vec<usize> = xw.dims()[1..].to_vec();
     let atom_sp: usize = ldims.iter().product();
     let mut psi_dims = vec![k_tot, p_tot];
     psi_dims.extend_from_slice(ldims);
@@ -156,10 +227,10 @@ fn local_stats(
     let plo: Vec<i64> = ldims.iter().map(|_| 0).collect();
     let phi_hi: Vec<i64> = ldims.iter().map(|&l| l as i64).collect();
     for p in 0..p_tot {
-        let xw = copy_window(x.slice0(p), &tdims, &xwin);
+        let xp = xw.slice0(p);
         for (k, zc) in cells.iter().enumerate() {
             let (cc, _) = conv::cross_corr_range_auto(
-                zc, &cell_ext, &xw, &xwin_ext, &plo, &phi_hi,
+                zc, &cell_ext, xp, &xwin_ext, &plo, &phi_hi,
             );
             let base = (k * p_tot + p) * atom_sp;
             for (o, v) in psi.data_mut()[base..base + atom_sp].iter_mut().zip(&cc) {
@@ -169,6 +240,41 @@ fn local_stats(
     }
 
     (phi, psi)
+}
+
+/// φ/ψ partials for a resident pool worker, read from its own
+/// activation window (`ComputeStats` phase): copies the cell and
+/// extended-cell slices out of `z`, slices the signal window through
+/// the problem, and runs the shared windowed core. Also returns the
+/// cell-restricted `||Z||_1` and nonzero count (reduced pool-side to
+/// complete the objective and the trace).
+pub fn worker_stats_partials(
+    problem: &CscProblem,
+    z: &ZWindow,
+    cell: &Rect,
+    ext: &Rect,
+) -> (NdTensor, NdTensor, f64, usize) {
+    let k_tot = problem.n_atoms();
+    let copy = |win: &Rect| -> Vec<Vec<f64>> {
+        (0..k_tot)
+            .map(|k| win.iter().map(|u| z.at(k, &u)).collect())
+            .collect()
+    };
+    let cells = copy(cell);
+    let exts = copy(ext);
+    let mut z_l1 = 0.0;
+    let mut z_nnz = 0usize;
+    for row in &cells {
+        for v in row {
+            if *v != 0.0 {
+                z_l1 += v.abs();
+                z_nnz += 1;
+            }
+        }
+    }
+    let xw = problem.signal_window(&cell.lo, &cell.extents());
+    let (phi, psi) = local_stats_windows(&cells, cell, &exts, ext, &xw, problem.atom_dims());
+    (phi, psi, z_l1, z_nnz)
 }
 
 #[cfg(test)]
@@ -218,5 +324,76 @@ mod tests {
         let s = compute_stats(&z, &x, &l);
         assert!((s.x_norm_sq - x.norm_sq()).abs() < 1e-12);
         assert!((s.z_l1 - z.norm1()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_reports_the_path_taken() {
+        let (z, x, l) = workload_1d(4);
+        // density ~0.1 with the default 0.05 threshold -> dense path.
+        if parse_phipsi_density(std::env::var("DICODILE_PHIPSI_DENSITY").ok()) == 0.05 {
+            let (_, path) = compute_stats_auto(&z, &x, &l, 3);
+            assert_eq!(path, "dense-par");
+        }
+        // one worker is always the sequential path
+        let (_, path1) = compute_stats_auto(&z, &x, &l, 1);
+        assert_eq!(path1, "sparse-seq");
+        // near-empty z -> sparse path regardless of workers
+        let zs = NdTensor::zeros(z.dims());
+        let (_, path2) = compute_stats_auto(&zs, &x, &l, 4);
+        assert_eq!(path2, "sparse-seq");
+    }
+
+    #[test]
+    fn density_threshold_parsing() {
+        assert_eq!(parse_phipsi_density(None), 0.05);
+        assert_eq!(parse_phipsi_density(Some("0.2".into())), 0.2);
+        assert_eq!(parse_phipsi_density(Some("0".into())), 0.0);
+        // garbage / invalid values fall back to the default
+        assert_eq!(parse_phipsi_density(Some("dense".into())), 0.05);
+        assert_eq!(parse_phipsi_density(Some("-1".into())), 0.05);
+        assert_eq!(parse_phipsi_density(Some("NaN".into())), 0.05);
+    }
+
+    #[test]
+    fn worker_partials_from_zwindow_match_local_stats() {
+        // The resident-worker partial (computed from a ZWindow wider
+        // than the extended cell, as the pool holds it) must equal the
+        // global-tensor map-reduce partial for every rank.
+        let (z, x, l) = workload_2d(5);
+        let zsp: Vec<usize> = z.dims()[1..].to_vec();
+        let problem = CscProblem::new(x.clone(), {
+            let mut rng = Pcg64::seeded(6);
+            NdTensor::from_vec(&[2, 1, 5, 5], rng.normal_vec(50))
+        }, 0.5);
+        let grid = WorkerGrid::new(&zsp, &l, 4, PartitionKind::Grid);
+        let rim: Vec<usize> = l.iter().map(|&li| 2 * (li - 1)).collect();
+        for rank in 0..grid.n_workers() {
+            let cell = grid.cell(rank);
+            let ext = grid.extended_cell(rank);
+            let zwin = cell.dilate(&rim).intersect(&Rect::full(&zsp));
+            let mut zw = ZWindow::zeros(z.dims()[0], &zwin.lo, &zwin.extents());
+            zw.load_from_global(&z);
+            let (phi, psi, z_l1, nnz) = worker_stats_partials(&problem, &zw, &cell, &ext);
+            let (phi_ref, psi_ref) = local_stats(&z, &x, &l, &grid, rank);
+            assert!(phi.allclose(&phi_ref, 1e-10), "phi rank {rank}");
+            assert!(psi.allclose(&psi_ref, 1e-10), "psi rank {rank}");
+            // l1/nnz restricted to the cell
+            let mut want_l1 = 0.0;
+            let mut want_nnz = 0usize;
+            for k in 0..z.dims()[0] {
+                for u in cell.iter() {
+                    let idx: Vec<usize> = std::iter::once(k)
+                        .chain(u.iter().map(|v| *v as usize))
+                        .collect();
+                    let v = z.at(&idx);
+                    if v != 0.0 {
+                        want_l1 += v.abs();
+                        want_nnz += 1;
+                    }
+                }
+            }
+            assert!((z_l1 - want_l1).abs() < 1e-12);
+            assert_eq!(nnz, want_nnz);
+        }
     }
 }

@@ -59,7 +59,7 @@ impl HybridOps {
         if let Some(engine) = &self.engine {
             let shapes: Vec<&[usize]> = vec![problem.x.dims(), problem.d.dims()];
             if engine.supports("beta_init", &shapes) {
-                if let Ok(mut out) = engine.execute("beta_init", &[&problem.x, &problem.d]) {
+                if let Ok(mut out) = engine.execute("beta_init", &[problem.x.as_ref(), &problem.d]) {
                     self.artifact_calls.fetch_add(1, Ordering::Relaxed);
                     return out.remove(0);
                 }
@@ -74,7 +74,7 @@ impl HybridOps {
         if let Some(engine) = &self.engine {
             let shapes: Vec<&[usize]> = vec![problem.x.dims(), problem.d.dims(), z.dims()];
             if engine.supports("cost_eval", &shapes) {
-                if let Ok(out) = engine.execute("cost_eval", &[&problem.x, &problem.d, z]) {
+                if let Ok(out) = engine.execute("cost_eval", &[problem.x.as_ref(), &problem.d, z]) {
                     self.artifact_calls.fetch_add(1, Ordering::Relaxed);
                     // artifact returns (data_fit,); lambda term added here in
                     // f64 to avoid f32 cancellation on the l1 sum.

@@ -67,7 +67,7 @@ fn assert_close(a: &NdTensor, b: &NdTensor, tol: f64, what: &str) {
 fn beta_init_parity_1d() {
     let Some(e) = engine() else { return };
     let (p, _) = tiny_1d(1);
-    let got = e.execute("beta_init", &[&p.x, &p.d]).unwrap().remove(0);
+    let got = e.execute("beta_init", &[p.x.as_ref(), &p.d]).unwrap().remove(0);
     let want = conv::correlate_dict(&p.x, &p.d);
     assert_close(&got, &want, 1e-5, "beta_init 1d");
 }
@@ -76,7 +76,7 @@ fn beta_init_parity_1d() {
 fn beta_init_parity_2d() {
     let Some(e) = engine() else { return };
     let (p, _) = tiny_2d(2);
-    let got = e.execute("beta_init", &[&p.x, &p.d]).unwrap().remove(0);
+    let got = e.execute("beta_init", &[p.x.as_ref(), &p.d]).unwrap().remove(0);
     let want = conv::correlate_dict(&p.x, &p.d);
     assert_close(&got, &want, 1e-5, "beta_init 2d");
 }
@@ -85,7 +85,7 @@ fn beta_init_parity_2d() {
 fn cost_eval_parity() {
     let Some(e) = engine() else { return };
     for (p, z) in [tiny_1d(3), tiny_2d(4)] {
-        let got = e.execute("cost_eval", &[&p.x, &p.d, &z]).unwrap().remove(0);
+        let got = e.execute("cost_eval", &[p.x.as_ref(), &p.d, &z]).unwrap().remove(0);
         let want = p.data_fit(&z);
         assert!(
             (got.get(0) - want).abs() <= 1e-4 * (1.0 + want.abs()),
@@ -99,7 +99,7 @@ fn cost_eval_parity() {
 fn phi_psi_parity() {
     let Some(e) = engine() else { return };
     for (p, z) in [tiny_1d(5), tiny_2d(6)] {
-        let mut out = e.execute("phi_psi", &[&z, &p.x]).unwrap();
+        let mut out = e.execute("phi_psi", &[&z, p.x.as_ref()]).unwrap();
         let stats = compute_stats(&z, &p.x, p.atom_dims());
         let psi = out.remove(1);
         let phi = out.remove(0);

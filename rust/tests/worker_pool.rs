@@ -1,0 +1,286 @@
+//! Integration tests for the persistent worker-pool runtime:
+//!
+//! (a) the persistent-pool CDL trace matches the teardown/respawn
+//!     driver cost-for-cost on seeded 1-D and 2-D problems,
+//! (b) worker-computed φ^w/ψ^w partials reduce to `compute_stats`
+//!     exactly for every partition geometry,
+//! (c) `SetDict` + warm restart converges from a stale Z (no stuck
+//!     `idle` state after re-activation),
+//! plus the residency counters: workers spawned exactly once per
+//! `learn_dictionary`, no full-Z gather and no beta bootstrap-from-zero
+//! between outer iterations.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! worker counts — `scripts/tier1.sh` runs this suite once per count.
+
+use std::sync::Arc;
+
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::csc::cd::{solve_cd, CdConfig};
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::partition::PartitionKind;
+use dicodile::dicod::pool::WorkerPool;
+use dicodile::dict::phi_psi::compute_stats;
+use dicodile::tensor::NdTensor;
+use dicodile::util::rng::Pcg64;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn problem_1d(seed: u64, t: usize, k: usize, l: usize) -> CscProblem {
+    let data = SyntheticConfig::signal_1d(t, k, l).generate(seed);
+    CscProblem::with_lambda_frac(data.x, data.d_true, 0.1)
+}
+
+fn problem_2d(seed: u64, s: usize, k: usize, l: usize) -> CscProblem {
+    let data = SyntheticConfig::image_2d(s, s, k, l).generate(seed);
+    CscProblem::with_lambda_frac(data.x, data.d_true, 0.1)
+}
+
+// ---------------------------------------------------------------------------
+// (b) worker partials reduce to compute_stats on every geometry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_partials_reduce_exactly_1d() {
+    let p = problem_1d(31, 220, 3, 7);
+    for w in worker_counts() {
+        for kind in [PartitionKind::Line, PartitionKind::Grid] {
+            let cfg = DicodConfig { n_workers: w, partition: kind, tol: 1e-7, ..Default::default() };
+            let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+            assert!(pool.solve().converged, "W={w} {kind:?}");
+            let (stats, nnz) = pool.compute_stats();
+            let z = pool.gather();
+            let want = compute_stats(&z, &p.x, p.atom_dims());
+            assert!(
+                stats.phi.allclose(&want.phi, 1e-9),
+                "phi mismatch W={w} {kind:?}"
+            );
+            assert!(
+                stats.psi.allclose(&want.psi, 1e-9),
+                "psi mismatch W={w} {kind:?}"
+            );
+            assert!((stats.z_l1 - want.z_l1).abs() < 1e-9 * (1.0 + want.z_l1));
+            assert_eq!(nnz, z.nnz());
+        }
+    }
+}
+
+#[test]
+fn worker_partials_reduce_exactly_2d() {
+    let p = problem_2d(32, 26, 2, 4);
+    for w in worker_counts() {
+        let cfg = DicodConfig { n_workers: w, tol: 1e-7, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        assert!(pool.solve().converged, "W={w}");
+        let (stats, _) = pool.compute_stats();
+        let z = pool.gather();
+        let want = compute_stats(&z, &p.x, p.atom_dims());
+        assert!(stats.phi.allclose(&want.phi, 1e-9), "phi mismatch W={w}");
+        assert!(stats.psi.allclose(&want.psi, 1e-9), "psi mismatch W={w}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) SetDict + warm restart from a stale Z
+// ---------------------------------------------------------------------------
+
+#[test]
+fn set_dict_warm_restart_converges_from_stale_z() {
+    let p0 = problem_1d(33, 200, 2, 6);
+    // A genuinely different dictionary: same shapes, fresh atoms.
+    let mut rng = Pcg64::seeded(34);
+    let d1 = NdTensor::from_vec(&[2, 1, 6], {
+        let mut v = rng.normal_vec(12);
+        for atom in v.chunks_mut(6) {
+            let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in atom.iter_mut() {
+                *x /= n;
+            }
+        }
+        v
+    });
+    let mut p1 = p0.clone();
+    p1.update_dict(d1);
+
+    for w in worker_counts() {
+        let cfg = DicodConfig { n_workers: w, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p0.clone()), &cfg, None);
+        assert!(pool.solve().converged, "W={w} initial solve");
+        // Swap the dictionary and re-solve from the (now stale) Z.
+        pool.set_dict(Arc::new(p1.clone()));
+        let second = pool.solve();
+        assert!(second.converged, "W={w}: stuck after SetDict re-activation");
+        let z = pool.gather();
+        let seq = solve_cd(&p1, &CdConfig { tol: 1e-8, ..Default::default() });
+        let (cd, cs) = (p1.cost(&z), p1.cost(&seq.z));
+        assert!(
+            (cd - cs).abs() < 1e-5 * (1.0 + cs.abs()),
+            "W={w}: stale-Z restart cost {cd} vs sequential {cs}"
+        );
+        // And a third phase from the fresh optimum must be a no-op.
+        let updates_before = pool.aggregate_stats().updates;
+        assert!(pool.solve().converged);
+        assert_eq!(pool.aggregate_stats().updates, updates_before, "W={w}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (a) persistent vs teardown CDL trace parity
+// ---------------------------------------------------------------------------
+
+fn parity_cfg(w: usize, atom_dims: Vec<usize>, persistent: bool) -> CdlConfig {
+    CdlConfig {
+        n_atoms: 2,
+        atom_dims,
+        max_iter: 5,
+        nu: 0.0, // run all iterations in both modes
+        csc_tol: 1e-6,
+        lambda_frac: 0.05,
+        csc: CscBackend::Distributed(DicodConfig {
+            persistent,
+            tol: 1e-6,
+            ..DicodConfig::dicodile(w)
+        }),
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn persistent_trace_matches_teardown_1d() {
+    let mut gen = SyntheticConfig::signal_1d(700, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    let w = gen.generate(35);
+    for workers in worker_counts() {
+        let a = learn_dictionary(&w.x, &parity_cfg(workers, vec![8], true)).unwrap();
+        let b = learn_dictionary(&w.x, &parity_cfg(workers, vec![8], false)).unwrap();
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (ra, rb) in a.trace.iter().zip(&b.trace) {
+            let tol = 1e-4 * (1.0 + rb.cost.abs());
+            assert!(
+                (ra.cost - rb.cost).abs() < tol,
+                "W={workers} iter {}: persistent {} vs teardown {}",
+                ra.iter,
+                ra.cost,
+                rb.cost
+            );
+            assert!(
+                (ra.cost_after_csc - rb.cost_after_csc).abs()
+                    < 1e-4 * (1.0 + rb.cost_after_csc.abs()),
+                "W={workers} iter {}: csc cost {} vs {}",
+                ra.iter,
+                ra.cost_after_csc,
+                rb.cost_after_csc
+            );
+        }
+    }
+}
+
+#[test]
+fn persistent_trace_matches_teardown_2d() {
+    let gen = SyntheticConfig::image_2d(24, 24, 2, 4);
+    let w = gen.generate(36);
+    let mk = |persistent| CdlConfig {
+        max_iter: 3,
+        atom_dims: vec![4, 4],
+        ..parity_cfg(4, vec![4, 4], persistent)
+    };
+    let a = learn_dictionary(&w.x, &mk(true)).unwrap();
+    let b = learn_dictionary(&w.x, &mk(false)).unwrap();
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (ra, rb) in a.trace.iter().zip(&b.trace) {
+        assert!(
+            (ra.cost - rb.cost).abs() < 1e-4 * (1.0 + rb.cost.abs()),
+            "iter {}: {} vs {}",
+            ra.iter,
+            ra.cost,
+            rb.cost
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// residency: spawn once, no mid-run gather, no cold re-bootstrap
+// ---------------------------------------------------------------------------
+
+#[test]
+fn persistent_pool_counters_prove_residency() {
+    let mut gen = SyntheticConfig::signal_1d(600, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    let w = gen.generate(37);
+    let iters = 4usize;
+    for workers in worker_counts() {
+        let cfg = CdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![8],
+            max_iter: iters,
+            nu: 0.0,
+            csc_tol: 1e-5,
+            lambda_frac: 0.05,
+            csc: CscBackend::Persistent(DicodConfig::dicodile(workers)),
+            seed: 37,
+            ..Default::default()
+        };
+        let r = learn_dictionary(&w.x, &cfg).unwrap();
+        assert_eq!(r.trace.len(), iters);
+        let report = r.pool.expect("persistent run must record pool provenance");
+        let wt = report.n_workers as u64;
+
+        // Workers spawned exactly once for the whole run.
+        assert_eq!(report.workers_spawned, report.n_workers, "W={workers}");
+        // One cold beta bootstrap per worker — at spawn, never again.
+        assert_eq!(report.stats.beta_cold_inits, wt, "W={workers}");
+        // One warm re-init per worker per SetDict (all but the last iter).
+        assert_eq!(
+            report.stats.beta_warm_reinits,
+            wt * (iters as u64 - 1),
+            "W={workers}"
+        );
+        // Every outer iteration ran a solve phase on every worker.
+        assert_eq!(report.stats.solves, wt * iters as u64, "W={workers}");
+        // Full Z was gathered exactly once — the final assembly.
+        assert_eq!(report.stats.gathers, wt, "W={workers}: mid-run gather detected");
+        // The trace shows φ/ψ came from worker partials each iteration.
+        for rec in &r.trace {
+            assert_eq!(rec.phipsi_path, "worker-partials");
+        }
+        // Final Z is consistent with the trace's last nnz.
+        assert_eq!(r.z.nnz(), r.trace.last().unwrap().z_nnz);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one-shot wrapper still warm-starts (satellite: z_prev hole)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_shot_wrapper_accepts_initial_z() {
+    let p = problem_1d(38, 260, 2, 7);
+    for w in worker_counts() {
+        let cfg = DicodConfig { n_workers: w, tol: 1e-8, ..Default::default() };
+        let cold = dicodile::dicod::solve_distributed(&p, &cfg);
+        assert!(cold.converged, "W={w}");
+        let warm = dicodile::dicod::solve_distributed_warm(
+            &p,
+            &DicodConfig { tol: 1e-7, ..cfg },
+            Some(&cold.z),
+        );
+        assert!(warm.converged, "W={w}");
+        assert_eq!(warm.stats.updates, 0, "W={w}: warm start at optimum must be a no-op");
+        assert!(warm.z.allclose(&cold.z, 1e-12));
+    }
+}

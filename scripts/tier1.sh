@@ -13,6 +13,18 @@ cargo build --release
 cargo test -q
 cargo build --release --benches
 
+# Persistent-runtime suite at explicit worker counts: the pool protocol
+# (Solve -> ComputeStats -> SetDict -> Gather) must hold for the
+# degenerate single-worker grid and for multi-worker line/grid splits.
+for w in 1 2 4; do
+  DICODILE_TEST_WORKERS=$w cargo test -q --test worker_pool
+done
+
+# Outer-iteration smoke bench: records per-iteration csc_time/dict_time
+# for the teardown/respawn driver vs the persistent pool to
+# BENCH_cdl_outer.json (single rep for CI; drop the env for real runs).
+DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer
+
 if cargo fmt --version >/dev/null 2>&1; then
   # Advisory for now: the gate is build + tests; formatting drift is
   # reported but does not fail tier-1 until the tree is rustfmt-clean.
