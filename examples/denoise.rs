@@ -4,12 +4,10 @@
 //!
 //!     cargo run --release --example denoise -- [--size 128] [--noise 0.15]
 
-use dicodile::cdl::driver::{learn_dictionary, CdlConfig};
 use dicodile::cdl::init::InitStrategy;
 use dicodile::data::starfield::StarfieldConfig;
-use dicodile::tensor::NdTensor;
+use dicodile::prelude::*;
 use dicodile::util::cli::Parser;
-use dicodile::util::rng::Pcg64;
 
 fn psnr(reference: &NdTensor, estimate: &NdTensor) -> f64 {
     let peak = reference.norm_inf();
@@ -42,26 +40,29 @@ fn main() -> anyhow::Result<()> {
     };
     println!("noisy PSNR: {:.2} dB", psnr(&clean, &noisy));
 
-    // Learn on the noisy image; the l1 penalty is the denoiser.
-    let cfg = CdlConfig {
-        n_atoms: args.get_usize("k"),
-        atom_dims: vec![args.get_usize("l"), args.get_usize("l")],
-        lambda_frac: 0.15,
-        max_iter: 8,
-        csc_tol: 1e-3,
-        init: InitStrategy::RandomPatches,
-        seed: args.get_u64("seed"),
-        ..Default::default()
-    };
-    let r = learn_dictionary(&noisy, &cfg)?;
-    let recon = dicodile::conv::reconstruct(&r.z, &r.d);
+    // Learn on the noisy image; the l1 penalty is the denoiser. The
+    // model handle then applies the learned dictionary in one call.
+    let l = args.get_usize("l");
+    let mut session = Dicodile::builder()
+        .n_atoms(args.get_usize("k"))
+        .atom_dims(&[l, l])
+        .lambda_frac(0.15)
+        .max_iter(8)
+        .tol(1e-3)
+        .init(InitStrategy::RandomPatches)
+        .seed(args.get_u64("seed"))
+        .sequential()
+        .build();
+    let model = session.fit(&noisy)?;
+    let code = model.encode(&noisy);
+    let recon = model.reconstruct(&code.z);
     let out_psnr = psnr(&clean, &recon);
     println!(
         "denoised PSNR: {:.2} dB  (gain {:+.2} dB, nnz {} / {})",
         out_psnr,
         out_psnr - psnr(&clean, &noisy),
-        r.z.nnz(),
-        r.z.len()
+        code.z.nnz(),
+        code.z.len()
     );
     anyhow::ensure!(
         out_psnr > psnr(&clean, &noisy),

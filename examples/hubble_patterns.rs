@@ -10,13 +10,11 @@
 //!
 //!     cargo run --release --example hubble_patterns -- [--size 200] [--workers 4]
 
-use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
 use dicodile::cdl::init::InitStrategy;
 use dicodile::cdl::report;
-use dicodile::csc::problem::CscProblem;
 use dicodile::data::io;
 use dicodile::data::starfield::StarfieldConfig;
-use dicodile::dicod::config::DicodConfig;
+use dicodile::prelude::*;
 use dicodile::runtime::HybridOps;
 use dicodile::util::cli::Parser;
 
@@ -38,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     println!("== hubble_patterns: end-to-end DiCoDiLe run ==");
     let x = StarfieldConfig::with_size(size, size * 3 / 2).generate(args.get_u64("seed"));
     println!(
-        "star-field image {:?} (substitute for GOODS-South; see DESIGN.md §3)",
+        "star-field image {:?} (procedural substitute for the paper's GOODS-South frame)",
         x.dims()
     );
 
@@ -49,28 +47,35 @@ fn main() -> anyhow::Result<()> {
         if ops.has_engine() { "loaded" } else { "absent (native fallbacks)" }
     );
 
-    let cfg = CdlConfig {
-        n_atoms: k,
-        atom_dims: vec![l, l],
-        lambda_frac: 0.1,
-        max_iter: args.get_usize("iters"),
-        csc_tol: 5e-3,
-        csc: CscBackend::Distributed(DicodConfig::dicodile(workers)),
-        init: InitStrategy::RandomPatches,
-        stat_workers: workers,
-        seed: args.get_u64("seed"),
-        verbose: true,
-        ..Default::default()
-    };
+    let mut session = Dicodile::builder()
+        .n_atoms(k)
+        .atom_dims(&[l, l])
+        .lambda_frac(0.1)
+        .max_iter(args.get_usize("iters"))
+        .tol(5e-3)
+        .dicodile(workers) // DiCoDiLe-Z grid, pool resident for the run
+        .init(InitStrategy::RandomPatches)
+        .stat_workers(workers)
+        .seed(args.get_u64("seed"))
+        .verbose(true)
+        .build();
 
     let t0 = std::time::Instant::now();
-    let result = learn_dictionary(&x, &cfg)?;
+    let result = session.fit_result(&x)?;
     println!("\n{}", report::trace_table(&result));
     println!(
         "learned {k} atoms of {l}x{l} with W={workers} in {:.1}s (lambda {:.4e})",
         t0.elapsed().as_secs_f64(),
         result.lambda
     );
+    if let Some(p) = &result.pool {
+        println!(
+            "pool residency: {} workers spawned once, {} warm beta re-inits, {} gather(s)",
+            p.workers_spawned,
+            p.stats.beta_warm_reinits,
+            p.stats.gathers / p.n_workers.max(1) as u64
+        );
+    }
 
     // Sort atoms by activation mass ||Z_k||_1 like the paper's Fig. 7.
     let sp: usize = result.z.dims()[1..].iter().product();

@@ -1,5 +1,6 @@
-//! Quickstart: sparse-code a synthetic 1-D signal and learn its
-//! dictionary.
+//! Quickstart: the session API end to end — sparse-code a synthetic
+//! 1-D signal with the ground-truth dictionary, learn a fresh one, and
+//! round-trip the trained model through JSON.
 //!
 //! The workload matches the `quickstart_1d` AOT configuration
 //! (T=2000, K=5, L=32, P=1), so when `make artifacts` has run, the
@@ -9,11 +10,9 @@
 //!
 //!     cargo run --release --example quickstart
 
-use dicodile::cdl::driver::{learn_dictionary, CdlConfig};
-use dicodile::csc::cd::{solve_cd, CdConfig};
 use dicodile::csc::problem::CscProblem;
-use dicodile::csc::select::Strategy;
 use dicodile::data::synthetic::{best_atom_correlation, SyntheticConfig};
+use dicodile::prelude::*;
 use dicodile::runtime::HybridOps;
 
 fn main() -> anyhow::Result<()> {
@@ -36,9 +35,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 2. sparse-code with the true dictionary -------------------------
-    let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), 0.1);
+    // A model handle wraps any [K, P, L..] dictionary; the session picks
+    // the solver backend.
+    let true_model = TrainedModel::from_dictionary(w.d_true.clone(), 0.1);
+    let mut session = Dicodile::builder().tol(1e-6).sequential().build();
 
     // beta bootstrap through the AOT artifact when available.
+    let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), 0.1);
     let ops = HybridOps::from_env();
     let beta0 = ops.beta_init(&problem);
     let (artifact, native) = ops.call_counts();
@@ -50,22 +53,18 @@ fn main() -> anyhow::Result<()> {
         native
     );
 
-    let r = solve_cd(
-        &problem,
-        &CdConfig { strategy: Strategy::LocallyGreedy, tol: 1e-6, ..Default::default() },
-    );
+    let r = session.encode(&true_model, &w.x)?;
     println!(
         "LGCD: cost {:.4e}, nnz {}, {} updates in {:.3}s (converged: {})",
-        problem.cost(&r.z),
+        r.cost,
         r.z.nnz(),
-        r.stats.updates,
-        r.stats.runtime,
-        r.stats.converged
+        r.cd_stats.as_ref().map(|s| s.updates).unwrap_or(0),
+        r.runtime,
+        r.converged
     );
 
     // decomposition check against ground truth (Fig. 1 of the paper)
-    let recon = dicodile::conv::reconstruct(&r.z, &problem.d);
-    let resid = w.x.sub(&recon);
+    let resid = w.x.sub(&true_model.reconstruct(&r.z));
     println!(
         "reconstruction: ||X - Z*D|| / ||X|| = {:.3}",
         resid.norm2() / w.x.norm2()
@@ -73,20 +72,34 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. learn the dictionary from scratch ----------------------------
     println!("\nlearning a fresh dictionary (K=5, L=32)...");
-    let cfg = CdlConfig {
-        n_atoms: 5,
-        atom_dims: vec![32],
-        lambda_frac: 0.05,
-        max_iter: 12,
-        csc_tol: 1e-5,
-        seed: 7,
-        ..Default::default()
-    };
-    let learned = learn_dictionary(&w.x, &cfg)?;
+    let mut session = Dicodile::builder()
+        .n_atoms(5)
+        .atom_dims(&[32])
+        .lambda_frac(0.05)
+        .max_iter(12)
+        .tol(1e-5)
+        .seed(7)
+        .sequential()
+        .build();
+    let learned = session.fit_result(&w.x)?;
     println!("{}", dicodile::cdl::report::trace_table(&learned));
     for k in 0..5 {
         let c = best_atom_correlation(learned.d.slice0(k), &w.d_true, &[32]);
         println!("atom {k}: best correlation with ground truth = {c:.3}");
     }
+
+    // ---- 4. the trained model is a serializable handle -------------------
+    let model = TrainedModel::from_cdl(&learned, 0.05);
+    let path = std::env::temp_dir().join("dicodile_quickstart_model.json");
+    model.save(&path)?;
+    let served = TrainedModel::load(&path)?;
+    let re = served.encode(&w.x);
+    println!(
+        "\nmodel round-trip {} -> encode cost {:.4e} (training final {:.4e})",
+        path.display(),
+        re.cost,
+        model.final_cost().unwrap_or(f64::NAN)
+    );
+    let _ = std::fs::remove_file(&path);
     Ok(())
 }

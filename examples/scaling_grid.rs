@@ -1,16 +1,22 @@
-//! Worker-scaling demo: run DiCoDiLe-Z on a 2-D image with an
-//! increasing worker grid and print the speed-up table (the live
-//! version of the paper's Fig. 6 / C.2 experiments).
+//! Worker-scaling demo: encode a 2-D image through the session facade
+//! with an increasing worker grid and print the speed-up table (the
+//! live version of the paper's Fig. 6 / C.2 experiments).
 //!
 //!     cargo run --release --example scaling_grid -- [--size 128] [--workers 1,2,4,8]
 
 use dicodile::bench::{fmt_secs, Table};
-use dicodile::csc::problem::CscProblem;
-use dicodile::data::texture::TextureConfig;
-use dicodile::dicod::config::DicodConfig;
-use dicodile::dicod::coordinator::solve_distributed;
-use dicodile::dicod::partition::PartitionKind;
+use dicodile::dicod::messages::WorkerStats;
+use dicodile::dicod::partition::{PartitionKind, WorkerGrid};
+use dicodile::prelude::*;
 use dicodile::util::cli::Parser;
+
+/// The busiest worker's clock in abstract work units — the simulated
+/// parallel makespan on a machine with one core per worker (this
+/// testbed has a single physical core, so the scaling figures are
+/// reported in the simulated per-worker-clock model).
+fn critical_path_work(per_worker: &[WorkerStats]) -> u64 {
+    per_worker.iter().map(|s| s.work).max().unwrap_or(0)
+}
 
 fn main() {
     let args = Parser::new("scaling_grid", "DiCoDiLe-Z worker scaling on an image")
@@ -24,7 +30,8 @@ fn main() {
         .parse_env();
 
     let size = args.get_usize("size");
-    let x = TextureConfig::with_size(size, size).generate(args.get_u64("seed"));
+    let x = dicodile::data::texture::TextureConfig::with_size(size, size)
+        .generate(args.get_u64("seed"));
     let d = dicodile::cdl::init::init_dictionary(
         &x,
         args.get_usize("k"),
@@ -32,12 +39,18 @@ fn main() {
         dicodile::cdl::init::InitStrategy::RandomPatches,
         args.get_u64("seed"),
     );
-    let problem = CscProblem::with_lambda_frac(x, d, args.get_f64("reg"));
+    // One model handle, encoded by sessions of increasing grid size.
+    let model = TrainedModel::from_dictionary(d, args.get_f64("reg"));
+    let zdims: Vec<usize> = x.dims()[1..]
+        .iter()
+        .zip(model.atom_dims())
+        .map(|(t, l)| t - l + 1)
+        .collect();
     println!(
-        "texture image, Z domain {:?}, K={}, lambda={:.3e}",
-        problem.z_spatial_dims(),
-        problem.n_atoms(),
-        problem.lambda
+        "texture image, Z domain {:?}, K={}, lambda fraction {}",
+        zdims,
+        model.n_atoms(),
+        args.get_f64("reg")
     );
 
     let mut table = Table::new(&[
@@ -46,36 +59,30 @@ fn main() {
     let mut base_work = None;
     let mut unit = 0.0;
     for w in args.get_usize_list("workers") {
-        let cfg = DicodConfig {
-            n_workers: w,
-            partition: PartitionKind::Grid,
-            tol: args.get_f64("tol"),
-            ..Default::default()
-        };
-        let r = solve_distributed(&problem, &cfg);
-        let grid = dicodile::dicod::partition::WorkerGrid::new(
-            &problem.z_spatial_dims(),
-            problem.atom_dims(),
-            w,
-            PartitionKind::Grid,
-        );
-        // Calibrate seconds/work-unit from the single-worker run; the
-        // testbed has one physical core, so parallel runtimes are
-        // reported in the simulated per-worker-clock model (DESIGN.md §3).
-        let base = *base_work.get_or_insert(r.critical_path_work());
+        let mut session = Dicodile::builder()
+            .lambda_frac(args.get_f64("reg"))
+            .tol(args.get_f64("tol"))
+            .dicodile(w)
+            .build();
+        let r = session.encode(&model, &x).expect("encode");
+        let report = r.pool.expect("distributed encode records pool provenance");
+        let grid = WorkerGrid::new(&zdims, model.atom_dims(), w, PartitionKind::Grid);
+        // Calibrate seconds/work-unit from the single-worker run.
+        let work = critical_path_work(&report.per_worker);
+        let base = *base_work.get_or_insert(work);
         if unit == 0.0 {
-            unit = r.runtime / base.max(1) as f64;
+            unit = r.runtime / work.max(1) as f64;
         }
         table.row(vec![
             w.to_string(),
             format!("{:?}", grid.wdims),
             fmt_secs(r.runtime),
-            fmt_secs(r.simulated_time(unit)),
-            format!("{:.2}x", base as f64 / r.critical_path_work().max(1) as f64),
-            r.stats.updates.to_string(),
-            r.stats.soft_locked.to_string(),
-            r.stats.msgs_sent.to_string(),
-            format!("{:.5e}", problem.cost(&r.z)),
+            fmt_secs(work as f64 * unit),
+            format!("{:.2}x", base as f64 / work.max(1) as f64),
+            report.stats.updates.to_string(),
+            report.stats.soft_locked.to_string(),
+            report.stats.msgs_sent.to_string(),
+            format!("{:.5e}", r.cost),
         ]);
     }
     println!("\n{}", table.render());

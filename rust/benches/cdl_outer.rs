@@ -1,11 +1,14 @@
 //! CDL outer-iteration cost: teardown/respawn driver vs the persistent
 //! worker-pool runtime, per-iteration `csc_time` / `dict_time` —
-//! the before/after record for the residency tentpole. Writes
-//! BENCH_cdl_outer.json.
+//! the before/after record for the residency tentpole — plus the
+//! session-facade serving numbers: encode latency on a warm resident
+//! pool vs a cold fresh-session encode (spawn + cold beta bootstrap
+//! every call). Writes BENCH_cdl_outer.json.
 //!
 //!     cargo bench --bench cdl_outer
 //!     DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer   # CI smoke
 
+use dicodile::api::Dicodile;
 use dicodile::bench::{BenchConfig, Table};
 use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CdlResult, CscBackend};
 use dicodile::data::starfield::StarfieldConfig;
@@ -105,6 +108,48 @@ fn main() {
         );
     }
 
+    // ---- session-reuse vs cold-session encode latency ------------------
+    // Serving scenario: one dictionary, many encode requests for the
+    // same observation geometry. The warm path reuses the pool the fit
+    // left resident (SetDict + warm beta re-init); the cold path pays a
+    // fresh session per request (spawn + cold bootstrap).
+    let mk_session = || {
+        Dicodile::builder()
+            .n_atoms(5)
+            .atom_dims(&[8, 8])
+            .lambda_frac(0.1)
+            .max_iter(iters)
+            .nu(0.0)
+            .tol(5e-3)
+            .seed(1)
+            .dicodile(workers)
+            .build()
+    };
+    let mut warm_session = mk_session();
+    let model = warm_session.fit(&x).expect("session fit");
+    let mut warm_s = f64::MAX;
+    for _ in 0..bc.reps.max(1) {
+        let r = warm_session.encode(&model, &x).expect("warm encode");
+        warm_s = warm_s.min(r.runtime);
+    }
+    assert_eq!(
+        warm_session.pools_spawned(),
+        1,
+        "fit + warm encodes must share one pool"
+    );
+    let mut cold_s = f64::MAX;
+    for _ in 0..bc.reps.max(1) {
+        let mut cold = mk_session();
+        let r = cold.encode(&model, &x).expect("cold encode");
+        cold_s = cold_s.min(r.runtime);
+    }
+    println!(
+        "encode: warm resident-pool {:.3}s  cold fresh-session {:.3}s  ({:.2}x)",
+        warm_s,
+        cold_s,
+        cold_s / warm_s.max(1e-12)
+    );
+
     let record = Json::obj(vec![
         ("bench", Json::str("cdl_outer")),
         (
@@ -121,6 +166,9 @@ fn main() {
         ("teardown_total_s", Json::Num(teardown_s)),
         ("persistent_total_s", Json::Num(persistent_s)),
         ("speedup", Json::Num(teardown_s / persistent_s.max(1e-12))),
+        ("encode_warm_s", Json::Num(warm_s)),
+        ("encode_cold_s", Json::Num(cold_s)),
+        ("encode_speedup", Json::Num(cold_s / warm_s.max(1e-12))),
         (
             "entries",
             Json::Arr(vec![

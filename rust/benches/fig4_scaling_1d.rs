@@ -36,7 +36,7 @@ fn main() {
 
     // Simulated per-worker-clock model: the testbed has one physical
     // core, so parallel runtime = critical-path work x calibrated unit
-    // cost (see DESIGN.md §3). Wall-clock of the threaded run is shown
+    // cost. Wall-clock of the threaded run is shown
     // for reference.
     let mut table = Table::new(&[
         "W", "algo", "sim-time", "sim-speedup", "wall", "updates", "msgs", "cost",

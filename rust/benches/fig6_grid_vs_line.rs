@@ -31,7 +31,7 @@ fn main() {
     let t1 = problem.z_spatial_dims()[0];
     println!("line-split limits: plateau near T1/4L = {}, hard stop at T1/L = {}\n", t1 / (4 * l), t1 / l);
 
-    // Simulated per-worker-clock model (single-core testbed; DESIGN.md §3).
+    // Simulated per-worker-clock model (single-core testbed).
     let mut table =
         Table::new(&["W", "partition", "sim-time", "sim-speedup", "wall", "softlocked", "cost"]);
     for kind in [PartitionKind::Line, PartitionKind::Grid] {

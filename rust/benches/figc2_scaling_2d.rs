@@ -29,7 +29,7 @@ fn main() {
         21,
     );
 
-    // Simulated per-worker-clock model (single-core testbed; DESIGN.md §3).
+    // Simulated per-worker-clock model (single-core testbed).
     let mut table =
         Table::new(&["lambda", "strategy", "W", "sim-time", "sim-speedup", "wall", "updates"]);
     for lam_frac in [0.1f64, 0.3] {

@@ -1,0 +1,435 @@
+//! The consolidated configuration builder.
+//!
+//! Before this facade existed the public API exposed three
+//! near-duplicate config structs — [`CdlConfig`], `BatchCdlConfig` and
+//! [`EncodeConfig`] — each repeating the atoms / lambda / tolerance /
+//! backend knobs with slightly different defaults. The builder is the
+//! single place those knobs live now: `Dicodile::builder()` starts from
+//! the library defaults, the preset methods ([`dicodile`], [`dicod`],
+//! [`sequential`], [`fista`]) pick a solver backend, and [`build`]
+//! yields a [`Session`] that owns resident worker pools across calls.
+//!
+//! The legacy structs still exist and their entry points still work:
+//! they lower onto this builder (see `Dicodile::from_cdl_config` /
+//! `from_encode_config`), so there is exactly one configuration core
+//! that cannot drift.
+//!
+//! [`dicodile`]: DicodileBuilder::dicodile
+//! [`dicod`]: DicodileBuilder::dicod
+//! [`sequential`]: DicodileBuilder::sequential
+//! [`fista`]: DicodileBuilder::fista
+//! [`build`]: DicodileBuilder::build
+//! [`Session`]: crate::api::session::Session
+//! [`CdlConfig`]: crate::cdl::driver::CdlConfig
+//! [`EncodeConfig`]: crate::csc::encode::EncodeConfig
+
+use crate::api::session::Session;
+use crate::cdl::driver::{CdlConfig, CscBackend};
+use crate::cdl::init::InitStrategy;
+use crate::csc::encode::{EncodeConfig, Solver};
+use crate::csc::select::Strategy;
+use crate::dicod::config::DicodConfig;
+use crate::dict::pgd::PgdConfig;
+
+/// Facade entry point: `Dicodile::builder()…build()` yields a
+/// [`Session`].
+pub struct Dicodile;
+
+impl Dicodile {
+    /// Start from the library defaults (sequential LGCD backend).
+    pub fn builder() -> DicodileBuilder {
+        DicodileBuilder::default()
+    }
+
+    /// Lower a legacy [`CdlConfig`] (also the batch alias) onto the
+    /// builder — the delegation path `learn_dictionary` /
+    /// `learn_dictionary_batch` use.
+    pub fn from_cdl_config(cfg: &CdlConfig) -> DicodileBuilder {
+        let backend = match &cfg.csc {
+            CscBackend::Sequential => Backend::Sequential(Strategy::LocallyGreedy),
+            CscBackend::Distributed(d) => Backend::Distributed(d.clone()),
+            // The legacy `Persistent` variant forces residency
+            // regardless of the flag; encode that in the one flag the
+            // facade keys on.
+            CscBackend::Persistent(d) => {
+                Backend::Distributed(DicodConfig { persistent: true, ..d.clone() })
+            }
+        };
+        DicodileBuilder {
+            n_atoms: cfg.n_atoms,
+            atom_dims: cfg.atom_dims.clone(),
+            lambda_frac: cfg.lambda_frac,
+            max_iter: cfg.max_iter,
+            nu: cfg.nu,
+            tol: cfg.csc_tol,
+            encode_max_iter: DicodileBuilder::default().encode_max_iter,
+            backend,
+            dict_cfg: cfg.dict_cfg.clone(),
+            init: cfg.init,
+            stat_workers: cfg.stat_workers,
+            seed: cfg.seed,
+            verbose: cfg.verbose,
+        }
+    }
+
+    /// Lower a legacy [`EncodeConfig`] onto the builder — the
+    /// delegation path `sparse_encode` uses.
+    pub fn from_encode_config(cfg: &EncodeConfig) -> DicodileBuilder {
+        let backend = match &cfg.solver {
+            Solver::Sequential(s) => Backend::Sequential(*s),
+            Solver::Fista => Backend::Fista,
+            Solver::Distributed(d) => Backend::Distributed(d.clone()),
+        };
+        DicodileBuilder {
+            lambda_frac: cfg.lambda_frac,
+            tol: cfg.tol,
+            encode_max_iter: cfg.max_iter,
+            seed: cfg.seed,
+            backend,
+            ..DicodileBuilder::default()
+        }
+    }
+}
+
+/// Which solver serves the session's CSC steps.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Sequential coordinate descent (`fit` always runs locally-greedy
+    /// selection — the paper's LGCD; `encode` honors the strategy).
+    Sequential(Strategy),
+    /// FISTA proximal-gradient baseline — encode only; `fit` rejects it.
+    Fista,
+    /// DiCoDiLe-Z / DICOD worker grid. When `persistent` is set (the
+    /// [`DicodConfig::dicodile`] default) the session keeps the pool
+    /// resident across calls.
+    Distributed(DicodConfig),
+}
+
+/// One typed builder for every entry point (fit / fit_corpus / encode).
+#[derive(Clone, Debug)]
+pub struct DicodileBuilder {
+    pub(crate) n_atoms: usize,
+    pub(crate) atom_dims: Vec<usize>,
+    pub(crate) lambda_frac: f64,
+    /// Outer CDL alternations.
+    pub(crate) max_iter: usize,
+    /// Relative cost-variation stop for the alternation.
+    pub(crate) nu: f64,
+    /// Solver tolerance, shared by the CSC steps of `fit` and by
+    /// `encode`. A pool is spawned with this tolerance and keeps it for
+    /// every phase it serves.
+    pub(crate) tol: f64,
+    /// Iteration / update cap for `encode` solvers.
+    pub(crate) encode_max_iter: usize,
+    pub(crate) backend: Backend,
+    pub(crate) dict_cfg: PgdConfig,
+    pub(crate) init: InitStrategy,
+    /// Threads for the teardown-mode φ/ψ map-reduce.
+    pub(crate) stat_workers: usize,
+    pub(crate) seed: u64,
+    pub(crate) verbose: bool,
+}
+
+impl Default for DicodileBuilder {
+    fn default() -> Self {
+        let base = CdlConfig::default();
+        DicodileBuilder {
+            n_atoms: base.n_atoms,
+            atom_dims: base.atom_dims,
+            lambda_frac: base.lambda_frac,
+            max_iter: base.max_iter,
+            nu: base.nu,
+            tol: base.csc_tol,
+            encode_max_iter: 1_000_000,
+            backend: Backend::Sequential(Strategy::LocallyGreedy),
+            dict_cfg: base.dict_cfg,
+            init: base.init,
+            stat_workers: base.stat_workers,
+            seed: base.seed,
+            verbose: base.verbose,
+        }
+    }
+}
+
+impl DicodileBuilder {
+    /// Number of atoms K.
+    pub fn n_atoms(mut self, k: usize) -> Self {
+        self.n_atoms = k;
+        self
+    }
+
+    /// Atom spatial dims `L..` (one entry per signal dimension).
+    pub fn atom_dims(mut self, dims: &[usize]) -> Self {
+        self.atom_dims = dims.to_vec();
+        self
+    }
+
+    /// `lambda = lambda_frac * lambda_max` (per observation).
+    pub fn lambda_frac(mut self, frac: f64) -> Self {
+        self.lambda_frac = frac;
+        self
+    }
+
+    /// Outer CDL alternations for `fit` / `fit_corpus`.
+    pub fn max_iter(mut self, n: usize) -> Self {
+        self.max_iter = n;
+        self
+    }
+
+    /// Stop the alternation when the relative cost variation drops
+    /// below `nu`.
+    pub fn nu(mut self, nu: f64) -> Self {
+        self.nu = nu;
+        self
+    }
+
+    /// Solver stopping tolerance (CSC steps and encodes alike).
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Iteration / update cap for `encode` solvers.
+    pub fn encode_max_iter(mut self, n: usize) -> Self {
+        self.encode_max_iter = n;
+        self
+    }
+
+    /// Pick an explicit backend.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Preset: the paper's DiCoDiLe-Z configuration with `w` workers —
+    /// grid split, locally-greedy selection, soft-locks, resident pool.
+    pub fn dicodile(self, w: usize) -> Self {
+        self.backend(Backend::Distributed(DicodConfig::dicodile(w)))
+    }
+
+    /// Preset: the DICOD baseline with `w` workers — line split, greedy
+    /// selection, no soft-locks, ephemeral (one pool per call).
+    pub fn dicod(self, w: usize) -> Self {
+        self.backend(Backend::Distributed(DicodConfig::dicod(w)))
+    }
+
+    /// Preset: sequential locally-greedy coordinate descent.
+    pub fn sequential(self) -> Self {
+        self.backend(Backend::Sequential(Strategy::LocallyGreedy))
+    }
+
+    /// Preset: FISTA (encode only).
+    pub fn fista(self) -> Self {
+        self.backend(Backend::Fista)
+    }
+
+    /// Selection strategy for a sequential backend (no-op otherwise).
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        if let Backend::Sequential(cur) = &mut self.backend {
+            *cur = s;
+        }
+        self
+    }
+
+    /// Worker count of the distributed backend; selects the DiCoDiLe-Z
+    /// preset first when the current backend is not distributed.
+    pub fn workers(mut self, w: usize) -> Self {
+        match &mut self.backend {
+            Backend::Distributed(d) => {
+                d.n_workers = w;
+                self
+            }
+            _ => self.dicodile(w),
+        }
+    }
+
+    /// Toggle pool residency on a distributed backend (no-op otherwise).
+    pub fn persistent(mut self, on: bool) -> Self {
+        if let Backend::Distributed(d) = &mut self.backend {
+            d.persistent = on;
+        }
+        self
+    }
+
+    /// Dictionary-update (PGD) configuration.
+    pub fn dict_cfg(mut self, cfg: PgdConfig) -> Self {
+        self.dict_cfg = cfg;
+        self
+    }
+
+    /// Dictionary initialization strategy.
+    pub fn init(mut self, init: InitStrategy) -> Self {
+        self.init = init;
+        self
+    }
+
+    /// Threads for the teardown-mode φ/ψ map-reduce.
+    pub fn stat_workers(mut self, n: usize) -> Self {
+        self.stat_workers = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Print per-iteration progress to stderr.
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
+    }
+
+    /// Finalize into a [`Session`] that owns resident pools.
+    pub fn build(self) -> Session {
+        Session::new(self)
+    }
+
+    // ---- lowering ------------------------------------------------------
+
+    /// Lower to the CDL driver config. Fails for the FISTA backend,
+    /// which has no CSC-alternation counterpart.
+    pub(crate) fn to_cdl_config(&self) -> anyhow::Result<CdlConfig> {
+        let csc = match &self.backend {
+            Backend::Sequential(_) => CscBackend::Sequential,
+            Backend::Fista => {
+                anyhow::bail!("the FISTA backend serves encode only; pick .sequential(), .dicodile(w) or .dicod(w) for fit")
+            }
+            Backend::Distributed(d) => CscBackend::Distributed(d.clone()),
+        };
+        Ok(CdlConfig {
+            n_atoms: self.n_atoms,
+            atom_dims: self.atom_dims.clone(),
+            lambda_frac: self.lambda_frac,
+            max_iter: self.max_iter,
+            nu: self.nu,
+            csc,
+            csc_tol: self.tol,
+            dict_cfg: self.dict_cfg.clone(),
+            init: self.init,
+            stat_workers: self.stat_workers,
+            seed: self.seed,
+            verbose: self.verbose,
+        })
+    }
+
+    /// The distributed config when the backend keeps pools resident,
+    /// with the session tolerance applied.
+    pub(crate) fn resident_dicod_config(&self) -> Option<DicodConfig> {
+        match &self.backend {
+            Backend::Distributed(d) if d.persistent => {
+                Some(DicodConfig { tol: self.tol, ..d.clone() })
+            }
+            _ => None,
+        }
+    }
+
+    /// Lower to the legacy encode config (the ephemeral paths reuse
+    /// `encode_problem` verbatim).
+    pub(crate) fn to_encode_config(&self) -> EncodeConfig {
+        let solver = match &self.backend {
+            Backend::Sequential(s) => Solver::Sequential(*s),
+            Backend::Fista => Solver::Fista,
+            Backend::Distributed(d) => Solver::Distributed(d.clone()),
+        };
+        EncodeConfig {
+            lambda_frac: self.lambda_frac,
+            solver,
+            tol: self.tol,
+            max_iter: self.encode_max_iter,
+            seed: self.seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_pick_backends() {
+        let b = Dicodile::builder().dicodile(6);
+        match &b.backend {
+            Backend::Distributed(d) => {
+                assert_eq!(d.n_workers, 6);
+                assert!(d.persistent);
+                assert!(d.soft_lock);
+            }
+            other => panic!("expected distributed, got {other:?}"),
+        }
+        let b = b.dicod(3);
+        match &b.backend {
+            Backend::Distributed(d) => {
+                assert_eq!(d.n_workers, 3);
+                assert!(!d.persistent);
+                assert!(!d.soft_lock);
+            }
+            other => panic!("expected distributed, got {other:?}"),
+        }
+        assert!(matches!(b.sequential().backend, Backend::Sequential(Strategy::LocallyGreedy)));
+    }
+
+    #[test]
+    fn cdl_config_roundtrips_through_builder() {
+        let cfg = CdlConfig {
+            n_atoms: 3,
+            atom_dims: vec![5, 5],
+            lambda_frac: 0.07,
+            max_iter: 11,
+            nu: 1e-4,
+            csc_tol: 1e-3,
+            seed: 9,
+            verbose: true,
+            ..Default::default()
+        };
+        let back = Dicodile::from_cdl_config(&cfg).to_cdl_config().unwrap();
+        assert_eq!(back.n_atoms, cfg.n_atoms);
+        assert_eq!(back.atom_dims, cfg.atom_dims);
+        assert_eq!(back.lambda_frac, cfg.lambda_frac);
+        assert_eq!(back.max_iter, cfg.max_iter);
+        assert_eq!(back.nu, cfg.nu);
+        assert_eq!(back.csc_tol, cfg.csc_tol);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.verbose, cfg.verbose);
+        assert!(matches!(back.csc, CscBackend::Sequential));
+    }
+
+    #[test]
+    fn legacy_persistent_variant_forces_residency() {
+        let dcfg = DicodConfig { persistent: false, ..DicodConfig::dicodile(2) };
+        let cfg = CdlConfig { csc: CscBackend::Persistent(dcfg), ..Default::default() };
+        let b = Dicodile::from_cdl_config(&cfg);
+        assert!(b.resident_dicod_config().is_some());
+    }
+
+    #[test]
+    fn fista_rejected_for_fit() {
+        assert!(Dicodile::builder().fista().to_cdl_config().is_err());
+    }
+
+    #[test]
+    fn encode_config_roundtrips_through_builder() {
+        let cfg = EncodeConfig {
+            lambda_frac: 0.2,
+            tol: 1e-8,
+            max_iter: 123,
+            seed: 4,
+            solver: Solver::Fista,
+        };
+        let back = Dicodile::from_encode_config(&cfg).to_encode_config();
+        assert_eq!(back.lambda_frac, cfg.lambda_frac);
+        assert_eq!(back.tol, cfg.tol);
+        assert_eq!(back.max_iter, cfg.max_iter);
+        assert_eq!(back.seed, cfg.seed);
+        assert!(matches!(back.solver, Solver::Fista));
+    }
+
+    #[test]
+    fn resident_config_carries_session_tol() {
+        let b = Dicodile::builder().dicodile(2).tol(1e-7);
+        let d = b.resident_dicod_config().unwrap();
+        assert_eq!(d.tol, 1e-7);
+        assert!(Dicodile::builder().dicod(2).resident_dicod_config().is_none());
+        assert!(Dicodile::builder().sequential().resident_dicod_config().is_none());
+    }
+}

@@ -1,0 +1,53 @@
+//! Session-centric public facade — the primary entry point.
+//!
+//! ```no_run
+//! use dicodile::prelude::*;
+//!
+//! let workload = SyntheticConfig::signal_1d(2000, 5, 32).generate(42);
+//! let mut session = Dicodile::builder()
+//!     .n_atoms(5)
+//!     .atom_dims(&[32])
+//!     .dicodile(4) // DiCoDiLe-Z worker grid, resident pool
+//!     .build();
+//!
+//! // Fit once...
+//! let model = session.fit(&workload.x).unwrap();
+//! // ...apply many times: same observation geometry -> same warm pool,
+//! // only the dictionary is re-broadcast (no worker respawn).
+//! let code = session.encode(&model, &workload.x).unwrap();
+//! println!("cost {} nnz {}", code.cost, code.z.nnz());
+//!
+//! // The model handle outlives the session: save, reload, serve.
+//! model.save("model.json").unwrap();
+//! let served = TrainedModel::load("model.json").unwrap();
+//! let denoised = served.denoise(&workload.x);
+//! # let _ = denoised;
+//! ```
+//!
+//! Three pieces:
+//!
+//! - [`Dicodile::builder`] ([`builder`]) — one typed builder for the
+//!   knobs the legacy `CdlConfig` / `BatchCdlConfig` / `EncodeConfig`
+//!   triplicated, with `.dicodile(w)` / `.dicod(w)` / `.sequential()`
+//!   presets.
+//! - [`Session`] ([`session`]) — owns resident [`WorkerPool`]s keyed by
+//!   problem geometry and reuses them across `fit` / `fit_corpus` /
+//!   `encode` calls (`SetDict` instead of respawn when only the
+//!   dictionary changed).
+//! - [`TrainedModel`] ([`model`]) — the fit-once / apply-many handle:
+//!   `encode`, `reconstruct`, `denoise`, JSON `save` / `load`.
+//!
+//! The legacy free functions (`learn_dictionary`,
+//! `learn_dictionary_batch`, `sparse_encode`) remain available as thin
+//! wrappers that build a one-shot session, so existing callers behave
+//! exactly as before.
+//!
+//! [`WorkerPool`]: crate::dicod::pool::WorkerPool
+
+pub mod builder;
+pub mod model;
+pub mod session;
+
+pub use builder::{Backend, Dicodile, DicodileBuilder};
+pub use model::TrainedModel;
+pub use session::Session;

@@ -1,0 +1,332 @@
+//! `TrainedModel` — the reusable product of a fit.
+//!
+//! The paper's workflow is "learn once, apply many times": the worker
+//! grid learns D, and the learned dictionary is then *applied* —
+//! denoising, inpainting, pattern matching on new data (§1). The model
+//! handle is that second half: it carries the dictionary, the training
+//! lambda, the iteration trace and the pool provenance, and offers
+//! [`encode`](TrainedModel::encode), [`reconstruct`](TrainedModel::reconstruct)
+//! and [`denoise`](TrainedModel::denoise) directly (sequential, no
+//! session needed), plus JSON [`save`](TrainedModel::save) /
+//! [`load`](TrainedModel::load) so a model trained in one process can
+//! serve encode requests in another. For distributed application on a
+//! warm pool, pass the model to [`Session::encode`].
+//!
+//! [`Session::encode`]: crate::api::session::Session::encode
+
+use std::path::Path;
+
+use crate::cdl::batch::BatchCdlResult;
+use crate::cdl::driver::{CdlResult, IterRecord};
+use crate::csc::encode::{encode_problem, EncodeConfig, EncodeResult};
+use crate::csc::problem::CscProblem;
+use crate::dicod::pool::PoolReport;
+use crate::tensor::NdTensor;
+use crate::util::json::Json;
+
+/// Serialization format tag (bump on layout changes).
+const MODEL_FORMAT: &str = "dicodile-model";
+const MODEL_VERSION: f64 = 1.0;
+
+/// A learned convolutional dictionary plus everything needed to apply
+/// it to new data.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    /// Dictionary `[K, P, L..]`.
+    pub d: NdTensor,
+    /// Regularization the model was trained with (0 for a bare
+    /// dictionary wrapped via [`TrainedModel::from_dictionary`]).
+    pub lambda: f64,
+    /// Fraction of `lambda_max` used to derive per-signal lambdas when
+    /// the model is applied to *new* observations.
+    pub lambda_frac: f64,
+    /// Outer-iteration trace of the training run (times are zero and
+    /// `phipsi_path` is `"loaded"` on a deserialized model).
+    pub trace: Vec<IterRecord>,
+    pub converged: bool,
+    /// Training wall-clock seconds.
+    pub runtime: f64,
+    /// Worker-pool provenance when the persistent runtime trained the
+    /// model (`None` for teardown/sequential fits and loaded models).
+    pub pool: Option<PoolReport>,
+}
+
+impl TrainedModel {
+    /// Wrap a CDL result (the facade's `fit` path).
+    pub fn from_cdl(result: &CdlResult, lambda_frac: f64) -> Self {
+        TrainedModel {
+            d: result.d.clone(),
+            lambda: result.lambda,
+            lambda_frac,
+            trace: result.trace.clone(),
+            converged: result.converged,
+            runtime: result.runtime,
+            pool: result.pool.clone(),
+        }
+    }
+
+    /// Wrap a corpus CDL result. Per-signal pool provenance stays on
+    /// the [`BatchCdlResult`]; the model keeps the shared trace.
+    pub fn from_batch(result: &BatchCdlResult, lambda_frac: f64) -> Self {
+        TrainedModel {
+            d: result.d.clone(),
+            lambda: result.lambda,
+            lambda_frac,
+            trace: result.trace.clone(),
+            converged: result.converged,
+            runtime: result.runtime,
+            pool: None,
+        }
+    }
+
+    /// Wrap a bare dictionary `[K, P, L..]` (no training provenance) —
+    /// what the legacy `sparse_encode(x, d, cfg)` lowers to.
+    pub fn from_dictionary(d: NdTensor, lambda_frac: f64) -> Self {
+        assert!(d.ndim() >= 3, "dictionary must be [K, P, L..], got {:?}", d.dims());
+        TrainedModel {
+            d,
+            lambda: 0.0,
+            lambda_frac,
+            trace: Vec::new(),
+            converged: false,
+            runtime: 0.0,
+            pool: None,
+        }
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.d.dims()[0]
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.d.dims()[1]
+    }
+
+    pub fn atom_dims(&self) -> &[usize] {
+        &self.d.dims()[2..]
+    }
+
+    /// Final training objective, if a trace is present.
+    pub fn final_cost(&self) -> Option<f64> {
+        self.trace.last().map(|r| r.cost)
+    }
+
+    /// Sparse-code `x` against the model dictionary with the default
+    /// sequential solver and `lambda = lambda_frac * lambda_max(x, D)`.
+    pub fn encode(&self, x: &NdTensor) -> EncodeResult {
+        self.encode_with(
+            x,
+            &EncodeConfig { lambda_frac: self.lambda_frac, ..Default::default() },
+        )
+    }
+
+    /// Sparse-code `x` with an explicit solver configuration.
+    pub fn encode_with(&self, x: &NdTensor, cfg: &EncodeConfig) -> EncodeResult {
+        let problem = CscProblem::with_lambda_frac(x.clone(), self.d.clone(), cfg.lambda_frac);
+        encode_problem(&problem, cfg)
+    }
+
+    /// Reconstruction `Z * D` of an activation map.
+    pub fn reconstruct(&self, z: &NdTensor) -> NdTensor {
+        crate::conv::reconstruct(z, &self.d)
+    }
+
+    /// Denoise by sparse-coding and reconstructing: the l1 penalty
+    /// rejects unstructured noise (the classic CDL application).
+    pub fn denoise(&self, x: &NdTensor) -> NdTensor {
+        self.reconstruct(&self.encode(x).z)
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    /// Serialize: dictionary tensor, lambdas, convergence flag and a
+    /// per-iteration trace summary (costs and sparsity; wall-clock
+    /// detail is run-specific and not persisted).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(MODEL_FORMAT)),
+            ("version", Json::Num(MODEL_VERSION)),
+            ("dims", Json::arr_usize(self.d.dims())),
+            ("data", Json::arr_num(self.d.data())),
+            ("lambda", Json::Num(self.lambda)),
+            ("lambda_frac", Json::Num(self.lambda_frac)),
+            ("converged", Json::Bool(self.converged)),
+            ("runtime", Json::Num(self.runtime)),
+            (
+                "trace",
+                Json::Arr(
+                    self.trace
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("iter", Json::Num(r.iter as f64)),
+                                ("cost", Json::Num(r.cost)),
+                                ("cost_after_csc", Json::Num(r.cost_after_csc)),
+                                ("z_nnz", Json::Num(r.z_nnz as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize a model saved with [`TrainedModel::to_json`].
+    pub fn from_json(v: &Json) -> anyhow::Result<TrainedModel> {
+        let format = v.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        anyhow::ensure!(
+            format == MODEL_FORMAT,
+            "not a dicodile model file (format {format:?})"
+        );
+        let dims: Vec<usize> = v
+            .get("dims")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("model file: missing dims"))?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect();
+        anyhow::ensure!(dims.len() >= 3, "model dictionary must be [K, P, L..], got {dims:?}");
+        let data: Vec<f64> = v
+            .get("data")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("model file: missing data"))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .collect();
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "model file: {} values for dims {dims:?}",
+            data.len()
+        );
+        let trace = v
+            .get("trace")
+            .and_then(|t| t.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|r| IterRecord {
+                iter: r.get("iter").and_then(|x| x.as_usize()).unwrap_or(0),
+                cost: r.get("cost").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+                cost_after_csc: r
+                    .get("cost_after_csc")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(f64::NAN),
+                z_nnz: r.get("z_nnz").and_then(|x| x.as_usize()).unwrap_or(0),
+                csc_time: 0.0,
+                dict_time: 0.0,
+                elapsed: 0.0,
+                phipsi_path: "loaded",
+            })
+            .collect();
+        Ok(TrainedModel {
+            d: NdTensor::from_vec(&dims, data),
+            lambda: v.get("lambda").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            lambda_frac: v.get("lambda_frac").and_then(|x| x.as_f64()).unwrap_or(0.1),
+            trace,
+            converged: v.get("converged") == Some(&Json::Bool(true)),
+            runtime: v.get("runtime").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            pool: None,
+        })
+    }
+
+    /// Write the model as JSON. `f64` values round-trip exactly (the
+    /// writer emits shortest-roundtrip decimal), so a loaded model
+    /// encodes bit-identically to the saved one.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().dumps())
+            .map_err(|e| anyhow::anyhow!("cannot write model to {}: {e}", path.display()))
+    }
+
+    /// Load a model written by [`TrainedModel::save`].
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<TrainedModel> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read model from {}: {e}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("model file {} is not valid JSON: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy_model() -> TrainedModel {
+        let mut rng = Pcg64::seeded(5);
+        let mut m = TrainedModel::from_dictionary(
+            NdTensor::from_vec(&[2, 1, 6], rng.normal_vec(12)),
+            0.1,
+        );
+        m.lambda = 0.37;
+        m.converged = true;
+        m.runtime = 1.25;
+        m.trace = vec![IterRecord {
+            iter: 0,
+            cost: 10.5,
+            cost_after_csc: 11.0,
+            z_nnz: 4,
+            csc_time: 0.2,
+            dict_time: 0.1,
+            elapsed: 0.3,
+            phipsi_path: "sparse-seq",
+        }];
+        m
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let m = toy_model();
+        let back = TrainedModel::from_json(&Json::parse(&m.to_json().dumps()).unwrap()).unwrap();
+        assert_eq!(back.d.dims(), m.d.dims());
+        assert_eq!(back.d.data(), m.d.data(), "dictionary must round-trip bit-exactly");
+        assert_eq!(back.lambda, m.lambda);
+        assert_eq!(back.lambda_frac, m.lambda_frac);
+        assert!(back.converged);
+        assert_eq!(back.trace.len(), 1);
+        assert_eq!(back.trace[0].cost, 10.5);
+        assert_eq!(back.trace[0].z_nnz, 4);
+        assert_eq!(back.trace[0].phipsi_path, "loaded");
+    }
+
+    #[test]
+    fn rejects_foreign_json() {
+        assert!(TrainedModel::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong = Json::obj(vec![("format", Json::str("something-else"))]);
+        assert!(TrainedModel::from_json(&wrong).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_data() {
+        let mut m = toy_model().to_json();
+        if let Json::Obj(map) = &mut m {
+            map.insert("data".into(), Json::arr_num(&[1.0, 2.0]));
+        }
+        assert!(TrainedModel::from_json(&m).is_err());
+    }
+
+    #[test]
+    fn denoise_reduces_residual_on_clean_signal() {
+        // A signal generated exactly from the dictionary reconstructs
+        // well; encode + reconstruct must not blow up the residual.
+        let mut rng = Pcg64::seeded(7);
+        let d = NdTensor::from_vec(&[2, 1, 6], {
+            let mut v = rng.normal_vec(12);
+            for atom in v.chunks_mut(6) {
+                let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in atom.iter_mut() {
+                    *x /= n;
+                }
+            }
+            v
+        });
+        let mut z = NdTensor::zeros(&[2, 45]);
+        *z.at_mut(&[0, 10]) = 4.0;
+        *z.at_mut(&[1, 30]) = -3.0;
+        let x = crate::conv::reconstruct(&z, &d);
+        let m = TrainedModel::from_dictionary(d, 0.05);
+        let den = m.denoise(&x);
+        assert!(x.sub(&den).norm2() < 0.5 * x.norm2());
+    }
+}

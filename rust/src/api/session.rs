@@ -1,0 +1,424 @@
+//! `Session` — resident worker pools that outlive a single call.
+//!
+//! PR 2 made the worker grid resident *within* one `learn_dictionary`
+//! call; the session extends that residency *across* calls. It owns a
+//! small registry of [`WorkerPool`]s keyed by problem geometry and
+//! observation identity:
+//!
+//! - [`fit`](Session::fit) learns a dictionary on one observation. With
+//!   a persistent distributed backend the pool that served the run
+//!   stays alive in the session afterwards.
+//! - [`encode`](Session::encode) sparse-codes an observation against a
+//!   [`TrainedModel`] (at the model's `lambda_frac`). If a resident
+//!   pool already holds that observation, only the dictionary is
+//!   broadcast (`SetDict`, warm beta re-init from the resident Z) —
+//!   the workers are *not* respawned — and repeat encodes of an
+//!   unchanged model skip even the broadcast. A fit followed by
+//!   encodes of the same signal runs on one pool, spawned exactly
+//!   once.
+//! - [`fit_corpus`](Session::fit_corpus) learns one dictionary over a
+//!   collection of observations with one resident pool per signal kept
+//!   alive across the whole corpus alternation (φ/ψ partials summed
+//!   across pools; full Z gathered once per signal, at the end).
+//!
+//! Pool reuse rules: a call reuses a resident pool iff the observation
+//! matches (dims and values) and the dictionary geometry (K, L..) is
+//! unchanged — then `SetDict` replaces a respawn. A matching
+//! observation with a *different* atom geometry replaces the pool (the
+//! workers' windows were sized from the old geometry). Residency is
+//! observable through [`pools_spawned`](Session::pools_spawned) /
+//! [`warm_starts`](Session::warm_starts) and per-pool
+//! [`PoolReport`]s.
+//!
+//! Sequential and FISTA backends hold no pools; their calls delegate to
+//! the teardown driver and `encode_problem` unchanged. Ephemeral
+//! distributed backends (`persistent: false`, e.g. the DICOD preset)
+//! run one temporary pool per call, exactly like the legacy entry
+//! points.
+//!
+//! A pool is spawned with the session's tolerance and solver settings
+//! and keeps them for every phase it serves; per-call `encode` caps
+//! apply only to pools spawned by that call.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::builder::{Dicodile, DicodileBuilder};
+use crate::api::model::TrainedModel;
+use crate::cdl::batch::{self, BatchCdlResult};
+use crate::cdl::driver::{self, CdlConfig, CdlResult};
+use crate::csc::encode::{encode_problem, EncodeResult};
+use crate::csc::problem::CscProblem;
+use crate::dicod::config::DicodConfig;
+use crate::dicod::pool::{PoolReport, WorkerPool};
+use crate::tensor::NdTensor;
+
+/// One resident pool and the observation it was spawned on.
+struct PoolEntry {
+    x: Arc<NdTensor>,
+    pool: WorkerPool,
+}
+
+impl PoolEntry {
+    fn matches_signal(&self, x: &NdTensor) -> bool {
+        self.x.dims() == x.dims() && self.x.data() == x.data()
+    }
+
+    fn matches_geometry(&self, d: &NdTensor) -> bool {
+        let p = self.pool.problem();
+        p.n_atoms() == d.dims()[0]
+            && p.n_channels() == d.dims()[1]
+            && p.atom_dims() == &d.dims()[2..]
+    }
+}
+
+/// A configured entry point with resident pools (see the module docs).
+pub struct Session {
+    cfg: DicodileBuilder,
+    pools: Vec<PoolEntry>,
+    pools_spawned: usize,
+    warm_starts: usize,
+}
+
+impl Session {
+    pub(crate) fn new(cfg: DicodileBuilder) -> Session {
+        Session { cfg, pools: Vec::new(), pools_spawned: 0, warm_starts: 0 }
+    }
+
+    /// One-shot session for the legacy delegations (`learn_dictionary`
+    /// and friends): built, used for a single call, dropped.
+    pub(crate) fn from_cdl_config(cfg: &CdlConfig) -> Session {
+        Dicodile::from_cdl_config(cfg).build()
+    }
+
+    /// The builder this session was built from.
+    pub fn config(&self) -> &DicodileBuilder {
+        &self.cfg
+    }
+
+    // ---- fit -----------------------------------------------------------
+
+    /// Learn a dictionary on `x`; returns the reusable model handle.
+    pub fn fit(&mut self, x: &NdTensor) -> anyhow::Result<TrainedModel> {
+        let lambda_frac = self.cfg.lambda_frac;
+        Ok(TrainedModel::from_cdl(&self.fit_result(x)?, lambda_frac))
+    }
+
+    /// Learn a dictionary on `x`; returns the full legacy-shaped result
+    /// (including the final activation tensor). `learn_dictionary`
+    /// delegates here.
+    pub fn fit_result(&mut self, x: &NdTensor) -> anyhow::Result<CdlResult> {
+        let cfg = self.cfg.to_cdl_config()?;
+        let start = Instant::now();
+        let (d0, lambda, corr) = driver::prepare(x, &cfg)?;
+        match self.cfg.resident_dicod_config() {
+            Some(dcfg) => {
+                // The pool problem shares the bootstrap engine: the
+                // spectra computed for lambda_max are not redone.
+                let d_for_pool = d0.clone();
+                let mut entry = self.acquire(x, &d0, lambda, &dcfg, move |xa| {
+                    CscProblem::with_engine(xa, d_for_pool, lambda, corr)
+                });
+                let out = driver::learn_on_pool(&mut entry.pool, x, &cfg, d0, lambda, start);
+                if out.is_ok() {
+                    // Keep the pool resident for follow-up calls; on
+                    // error it drops here and the workers shut down.
+                    self.pools.push(entry);
+                }
+                out
+            }
+            None => driver::learn_teardown(x, &cfg, d0, lambda, start),
+        }
+    }
+
+    // ---- fit_corpus ----------------------------------------------------
+
+    /// Learn one dictionary over a corpus; returns the model handle.
+    pub fn fit_corpus(&mut self, xs: &[NdTensor]) -> anyhow::Result<TrainedModel> {
+        let lambda_frac = self.cfg.lambda_frac;
+        Ok(TrainedModel::from_batch(&self.fit_corpus_result(xs)?, lambda_frac))
+    }
+
+    /// Corpus fit with the full legacy-shaped result (per-signal final
+    /// activations, per-pool provenance). `learn_dictionary_batch`
+    /// delegates here.
+    ///
+    /// With a persistent distributed backend every signal gets its own
+    /// resident pool for the whole alternation — the dictionary step
+    /// reduces φ/ψ partials across pools and `SetDict` re-broadcasts
+    /// the accepted dictionary to each, so no signal's Z is centralized
+    /// before the final per-signal gather.
+    pub fn fit_corpus_result(&mut self, xs: &[NdTensor]) -> anyhow::Result<BatchCdlResult> {
+        let cfg = self.cfg.to_cdl_config()?;
+        let start = Instant::now();
+        let (d0, lambda, corr) = batch::prepare_corpus(xs, &cfg)?;
+        match self.cfg.resident_dicod_config() {
+            Some(dcfg) => {
+                let mut entries: Vec<PoolEntry> = Vec::with_capacity(xs.len());
+                for x in xs {
+                    // Engine clones share one spectra cache across the
+                    // corpus pools and with the lambda_max bootstrap.
+                    let d_for_pool = d0.clone();
+                    let corr_n = corr.clone();
+                    let entry = self.acquire(x, &d0, lambda, &dcfg, move |xa| {
+                        CscProblem::with_engine(xa, d_for_pool, lambda, corr_n)
+                    });
+                    entries.push(entry);
+                }
+                let out = {
+                    let mut pools: Vec<&mut WorkerPool> =
+                        entries.iter_mut().map(|e| &mut e.pool).collect();
+                    batch::learn_batch_on_pools(&mut pools, &cfg, d0, lambda, start)
+                };
+                if out.is_ok() {
+                    self.pools.extend(entries);
+                }
+                out
+            }
+            None => batch::learn_batch_teardown(xs, &cfg, d0, lambda, start),
+        }
+    }
+
+    // ---- encode --------------------------------------------------------
+
+    /// Sparse-code `x` against a trained model, with
+    /// `lambda = lambda_frac * lambda_max(x, D)` using the *model's*
+    /// fraction — `Session::encode` and [`TrainedModel::encode`] agree
+    /// on the regularization for the same model. On a persistent
+    /// distributed backend this runs on a resident pool: if the session
+    /// already holds a pool for this observation, only the dictionary
+    /// is broadcast — no respawn — and an unchanged dictionary skips
+    /// even the broadcast.
+    pub fn encode(&mut self, model: &TrainedModel, x: &NdTensor) -> anyhow::Result<EncodeResult> {
+        anyhow::ensure!(
+            x.dims().len() == model.d.dims().len() - 1,
+            "observation rank {:?} does not match model atoms {:?}",
+            x.dims(),
+            model.d.dims()
+        );
+        anyhow::ensure!(
+            x.dims()[0] == model.n_channels(),
+            "observation has {} channels, model expects {}",
+            x.dims()[0],
+            model.n_channels()
+        );
+        // One engine for the whole call, whichever backend runs: the
+        // lambda_max bootstrap and the solver share the dictionary
+        // spectra instead of regenerating them — and a degenerate
+        // observation is a consistent `Err` on every backend.
+        let corr = crate::conv::CorrEngine::new(model.d.clone());
+        let lmax = corr.correlate_dict(x).norm_inf();
+        anyhow::ensure!(lmax > 0.0, "degenerate observation: lambda_max = 0");
+        let lambda = model.lambda_frac * lmax;
+        match self.cfg.resident_dicod_config() {
+            Some(mut dcfg) => {
+                dcfg.max_updates = self.cfg.encode_max_iter;
+                // Clock from pool acquisition, like the one-shot
+                // distributed path clocks from pool spawn.
+                let start = Instant::now();
+                let d = model.d.clone();
+                let mut entry = self.acquire(x, &model.d, lambda, &dcfg, move |xa| {
+                    CscProblem::with_engine(xa, d, lambda, corr)
+                });
+                let phase = entry.pool.solve();
+                let z = entry.pool.gather();
+                let runtime = start.elapsed().as_secs_f64();
+                let problem = entry.pool.problem().clone();
+                let report = entry.pool.report();
+                if phase.diverged {
+                    // The resident Z is unusable as a warm start; shut
+                    // the pool down instead of keeping it.
+                    drop(entry);
+                } else {
+                    self.pools.push(entry);
+                }
+                Ok(EncodeResult {
+                    cost: problem.cost(&z),
+                    z,
+                    lambda,
+                    converged: phase.converged,
+                    runtime,
+                    cd_stats: None,
+                    pool: Some(report),
+                })
+            }
+            None => {
+                // Ephemeral paths: the legacy `sparse_encode` dispatch
+                // (sequential CD / FISTA / one temporary pool), at the
+                // model's regularization fraction.
+                let ecfg = crate::csc::encode::EncodeConfig {
+                    lambda_frac: model.lambda_frac,
+                    ..self.cfg.to_encode_config()
+                };
+                let problem =
+                    CscProblem::with_engine(Arc::new(x.clone()), model.d.clone(), lambda, corr);
+                Ok(encode_problem(&problem, &ecfg))
+            }
+        }
+    }
+
+    // ---- residency introspection --------------------------------------
+
+    /// Worker pools spawned over the session's lifetime (reused pools
+    /// do not count twice — this is the respawn counter).
+    pub fn pools_spawned(&self) -> usize {
+        self.pools_spawned
+    }
+
+    /// Calls served by an already-resident pool instead of a respawn
+    /// (via a `SetDict` broadcast, or with no broadcast at all when the
+    /// requested problem matched the resident one).
+    pub fn warm_starts(&self) -> usize {
+        self.warm_starts
+    }
+
+    /// Pools currently resident.
+    pub fn n_resident_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Residency reports of every resident pool (cumulative worker
+    /// counters since each pool's spawn).
+    pub fn pool_reports(&self) -> Vec<PoolReport> {
+        self.pools.iter().map(|e| e.pool.report()).collect()
+    }
+
+    /// Shut down every resident pool (also runs on drop).
+    pub fn close(&mut self) {
+        for entry in &mut self.pools {
+            entry.pool.shutdown();
+        }
+        self.pools.clear();
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    /// Take a resident pool for `(x, d, lambda)` out of the registry,
+    /// or spawn one via `build` (which receives the shared observation
+    /// `Arc` — reused from a matching entry when one exists). The
+    /// caller runs its phases on the entry and pushes it back if it is
+    /// still healthy.
+    fn acquire(
+        &mut self,
+        x: &NdTensor,
+        d: &NdTensor,
+        lambda: f64,
+        dcfg: &DicodConfig,
+        build: impl FnOnce(Arc<NdTensor>) -> CscProblem,
+    ) -> PoolEntry {
+        if let Some(i) = self.pools.iter().position(|e| e.matches_signal(x)) {
+            let mut entry = self.pools.swap_remove(i);
+            if entry.matches_geometry(d) {
+                self.warm_starts += 1;
+                // Broadcast only when the problem actually changed;
+                // repeat encodes of one model skip even the SetDict
+                // (the resident beta/Z already sit at its fixed point).
+                let unchanged = {
+                    let p = entry.pool.problem();
+                    p.lambda == lambda && p.d.data() == d.data()
+                };
+                if !unchanged {
+                    // Workers re-bootstrap beta warm from the Z they
+                    // already hold.
+                    entry.pool.set_dict(Arc::new(build(entry.x.clone())));
+                }
+                return entry;
+            }
+            // Atom geometry changed: the resident windows are sized for
+            // the old problem — replace the pool, reusing the shared
+            // observation.
+            let x_shared = entry.x.clone();
+            drop(entry);
+            return self.spawn(x_shared, dcfg, build);
+        }
+        self.spawn(Arc::new(x.clone()), dcfg, build)
+    }
+
+    fn spawn(
+        &mut self,
+        x: Arc<NdTensor>,
+        dcfg: &DicodConfig,
+        build: impl FnOnce(Arc<NdTensor>) -> CscProblem,
+    ) -> PoolEntry {
+        let problem = Arc::new(build(x.clone()));
+        let pool = WorkerPool::spawn(problem, dcfg, None);
+        self.pools_spawned += 1;
+        PoolEntry { x, pool }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    #[test]
+    fn sequential_session_holds_no_pools() {
+        let w = SyntheticConfig::signal_1d(300, 2, 6).generate(1);
+        let mut s = Dicodile::builder()
+            .n_atoms(2)
+            .atom_dims(&[6])
+            .max_iter(3)
+            .seed(1)
+            .sequential()
+            .build();
+        let model = s.fit(&w.x).unwrap();
+        assert_eq!(s.pools_spawned(), 0);
+        assert_eq!(s.n_resident_pools(), 0);
+        let r = s.encode(&model, &w.x).unwrap();
+        assert!(r.cost.is_finite());
+        assert_eq!(s.pools_spawned(), 0);
+    }
+
+    #[test]
+    fn fista_backend_fits_nothing_but_encodes() {
+        let w = SyntheticConfig::signal_1d(200, 2, 6).generate(2);
+        let mut s = Dicodile::builder().fista().tol(1e-6).build();
+        assert!(s.fit(&w.x).is_err(), "FISTA cannot back the CDL alternation");
+        let model = TrainedModel::from_dictionary(w.d_true.clone(), 0.1);
+        let r = s.encode(&model, &w.x).unwrap();
+        assert!(r.converged);
+        assert!(r.cost.is_finite());
+    }
+
+    #[test]
+    fn encode_rejects_mismatched_observation() {
+        let w = SyntheticConfig::signal_1d(200, 2, 6).generate(3);
+        let mut s = Dicodile::builder().sequential().build();
+        let model = TrainedModel::from_dictionary(w.d_true.clone(), 0.1);
+        // Wrong rank: a 2-channel "image" against 1-D atoms.
+        let bad = NdTensor::zeros(&[1, 10, 10]);
+        assert!(s.encode(&model, &bad).is_err());
+        let bad_channels = NdTensor::zeros(&[3, 50]);
+        assert!(s.encode(&model, &bad_channels).is_err());
+    }
+
+    #[test]
+    fn fit_then_encode_share_one_pool() {
+        let w = SyntheticConfig::signal_1d(400, 2, 8).generate(4);
+        let mut s = Dicodile::builder()
+            .n_atoms(2)
+            .atom_dims(&[8])
+            .max_iter(3)
+            .nu(0.0)
+            .tol(1e-5)
+            .seed(4)
+            .dicodile(2)
+            .build();
+        let model = s.fit(&w.x).unwrap();
+        assert_eq!(s.pools_spawned(), 1);
+        assert_eq!(s.n_resident_pools(), 1);
+        let r = s.encode(&model, &w.x).unwrap();
+        assert!(r.converged);
+        assert_eq!(s.pools_spawned(), 1, "encode on the fit pool must not respawn");
+        assert_eq!(s.warm_starts(), 1);
+        let report = &s.pool_reports()[0];
+        assert_eq!(report.workers_spawned, report.n_workers);
+    }
+}

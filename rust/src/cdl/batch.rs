@@ -5,56 +5,52 @@
 //! `sum_n 1/2 ||X_n - Z_n * D||^2 + lambda ||Z_n||_1` has
 //! `phi = sum_n phi_n` and `psi = sum_n psi_n` as sufficient statistics,
 //! so the dictionary step stays independent of both the signal sizes
-//! and the corpus size. The CSC steps are embarrassingly parallel
-//! across signals (each can itself be a DiCoDiLe-Z grid).
+//! and the corpus size.
+//!
+//! Two corpus drivers, selected by the backend:
+//!
+//! - **Per-signal resident pools** (persistent distributed backend):
+//!   every signal gets its own [`WorkerPool`] kept alive across the
+//!   whole alternation. Each outer iteration solves pool by pool
+//!   (warm from each pool's resident Z), reduces the φ/ψ partials
+//!   *across pools* into one dictionary update, and `SetDict`
+//!   re-broadcasts the accepted dictionary to every pool. No signal's
+//!   Z is centralized until the final per-signal gather — this closes
+//!   the "batch CDL on resident pools" follow-up from the persistent
+//!   runtime work.
+//! - **Teardown** (sequential, or distributed with `persistent:
+//!   false`): one warm-started one-shot solve per signal per
+//!   iteration, statistics recomputed from the gathered activations.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cdl::driver::{CscBackend, IterRecord};
-use crate::cdl::init::{init_dictionary, InitStrategy};
+use crate::cdl::driver::{log_iter, CdlConfig, CscBackend, IterRecord};
+use crate::cdl::init::init_dictionary;
 use crate::csc::cd::{solve_cd_warm, CdConfig};
 use crate::csc::problem::CscProblem;
 use crate::csc::select::Strategy;
 use crate::dicod::coordinator::solve_distributed_warm;
-use crate::dict::pgd::{update_dict, PgdConfig};
+use crate::dicod::pool::{PoolReport, WorkerPool};
+use crate::dict::grad::cost_from_stats;
+use crate::dict::pgd::update_dict;
 use crate::dict::phi_psi::{compute_stats_auto, DictStats};
 use crate::tensor::NdTensor;
 
-/// Batch CDL configuration (mirrors `CdlConfig` plus corpus handling).
-#[derive(Clone, Debug)]
-pub struct BatchCdlConfig {
-    pub n_atoms: usize,
-    pub atom_dims: Vec<usize>,
-    /// `lambda = lambda_frac * max_n lambda_max(X_n, D_0)`.
-    pub lambda_frac: f64,
-    pub max_iter: usize,
-    pub nu: f64,
-    pub csc: CscBackend,
-    pub csc_tol: f64,
-    pub dict_cfg: PgdConfig,
-    pub init: InitStrategy,
-    pub stat_workers: usize,
-    pub seed: u64,
-}
-
-impl Default for BatchCdlConfig {
-    fn default() -> Self {
-        BatchCdlConfig {
-            n_atoms: 5,
-            atom_dims: vec![16],
-            lambda_frac: 0.1,
-            max_iter: 20,
-            nu: 1e-5,
-            csc: CscBackend::Sequential,
-            csc_tol: 1e-4,
-            dict_cfg: PgdConfig::default(),
-            init: InitStrategy::RandomPatches,
-            stat_workers: 4,
-            seed: 0,
-        }
-    }
-}
+/// Batch CDL configuration.
+///
+/// This used to be a field-for-field near-copy of [`CdlConfig`] (minus
+/// `verbose`, and silently ignoring `persistent`). It is now an alias
+/// of the one shared core the `api` builder lowers to, so batch and
+/// single-signal CDL cannot drift: batch honors `verbose`, and a
+/// persistent distributed backend runs the per-signal resident-pool
+/// driver.
+///
+/// Unifying the core also unified the defaults: `Default::default()`
+/// now gives `max_iter = 30` (the `CdlConfig` default; the old
+/// standalone batch struct said 20). Set `max_iter` explicitly if the
+/// previous cap mattered.
+pub type BatchCdlConfig = CdlConfig;
 
 /// Batch CDL result.
 #[derive(Clone, Debug)]
@@ -67,14 +63,32 @@ pub struct BatchCdlResult {
     pub trace: Vec<IterRecord>,
     pub converged: bool,
     pub runtime: f64,
+    /// Per-signal pool provenance when the resident-pool driver served
+    /// the run (empty for the teardown modes).
+    pub pools: Vec<PoolReport>,
 }
 
 /// Learn a dictionary over a corpus of observations (all with the same
 /// channel count; spatial sizes may differ).
+///
+/// Thin wrapper over a one-shot [`crate::api::Session`]; use
+/// `Session::fit_corpus` directly to keep the per-signal pools warm
+/// after the call.
 pub fn learn_dictionary_batch(
     xs: &[NdTensor],
     cfg: &BatchCdlConfig,
 ) -> anyhow::Result<BatchCdlResult> {
+    crate::api::Session::from_cdl_config(cfg).fit_corpus_result(xs)
+}
+
+/// Validate the corpus and produce the initial dictionary, the fixed
+/// regularization `lambda = lambda_frac * max_n lambda_max(X_n, D_0)`,
+/// and the bootstrap engine (shared onward so the pools do not
+/// recompute the spectra the lambda_max pass already built).
+pub(crate) fn prepare_corpus(
+    xs: &[NdTensor],
+    cfg: &CdlConfig,
+) -> anyhow::Result<(NdTensor, f64, crate::conv::CorrEngine)> {
     anyhow::ensure!(!xs.is_empty(), "empty corpus");
     let p = xs[0].dims()[0];
     for (i, x) in xs.iter().enumerate() {
@@ -88,9 +102,8 @@ pub fn learn_dictionary_batch(
             "signal {i} rank mismatch"
         );
     }
-    let start = Instant::now();
     // Initialize from the first signal's patches.
-    let mut d = init_dictionary(&xs[0], cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
+    let d = init_dictionary(&xs[0], cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
     // One engine for the whole corpus: the lambda_max bootstraps share
     // the dictionary spectra instead of rebuilding them per signal.
     let corr = crate::conv::CorrEngine::new(d.clone());
@@ -99,7 +112,127 @@ pub fn learn_dictionary_batch(
             .map(|x| corr.correlate_dict(x).norm_inf())
             .fold(0.0f64, f64::max);
     anyhow::ensure!(lambda > 0.0, "degenerate corpus: lambda_max = 0");
+    Ok((d, lambda, corr))
+}
 
+/// Resident-pool corpus alternation: one already-running pool per
+/// signal, all holding `(X_n, d0, lambda)`. Pools are left alive for
+/// the caller (the session keeps them resident).
+pub(crate) fn learn_batch_on_pools(
+    pools: &mut [&mut WorkerPool],
+    cfg: &CdlConfig,
+    mut d: NdTensor,
+    lambda: f64,
+    start: Instant,
+) -> anyhow::Result<BatchCdlResult> {
+    let x_arcs: Vec<Arc<NdTensor>> = pools.iter().map(|p| p.problem().x_shared()).collect();
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut converged = false;
+
+    for it in 0..cfg.max_iter {
+        // ---- CSC per signal: each pool warm-restarts from its resident Z.
+        // Pools are driven one at a time — the paper's W-worker grid
+        // parallelism lives *inside* each pool.
+        let t0 = Instant::now();
+        for (n, pool) in pools.iter_mut().enumerate() {
+            let phase = pool.solve();
+            anyhow::ensure!(
+                !phase.diverged,
+                "distributed CSC diverged on corpus signal {n} at outer iteration {it}"
+            );
+        }
+        let csc_time = t0.elapsed().as_secs_f64();
+
+        // ---- one dictionary update from partials reduced across pools.
+        // The objective is linear in (phi, psi, ||X||^2, ||Z||_1), so
+        // summing per-signal statistics yields the corpus objective.
+        let t1 = Instant::now();
+        let mut agg: Option<DictStats> = None;
+        let mut nnz = 0usize;
+        for pool in pools.iter_mut() {
+            let (s, n) = pool.compute_stats();
+            nnz += n;
+            agg = Some(match agg {
+                None => s,
+                Some(mut a) => {
+                    a.phi.add_assign(&s.phi);
+                    a.psi.add_assign(&s.psi);
+                    a.x_norm_sq += s.x_norm_sq;
+                    a.z_l1 += s.z_l1;
+                    a
+                }
+            });
+        }
+        let stats = agg.expect("corpus is non-empty");
+        let cost_after_csc = cost_from_stats(&stats, &d, lambda);
+        let pgd = update_dict(&stats, &d, lambda, &cfg.dict_cfg);
+        d = pgd.d;
+        let dict_time = t1.elapsed().as_secs_f64();
+
+        let rec = IterRecord {
+            iter: it,
+            cost: pgd.cost,
+            cost_after_csc,
+            z_nnz: nnz,
+            csc_time,
+            dict_time,
+            elapsed: start.elapsed().as_secs_f64(),
+            phipsi_path: "worker-partials",
+        };
+        if cfg.verbose {
+            log_iter(&rec);
+        }
+        let prev = trace.last().map(|r: &IterRecord| r.cost);
+        trace.push(rec);
+        if let Some(prev) = prev {
+            let cur = trace.last().unwrap().cost;
+            if (prev - cur).abs() / prev.abs().max(1e-300) < cfg.nu {
+                converged = true;
+            }
+        }
+        if converged || it + 1 == cfg.max_iter {
+            break;
+        }
+        // ---- broadcast the accepted dictionary to every pool;
+        //      workers re-bootstrap beta warm from their resident Z.
+        //      One engine per broadcast round: its clones share the
+        //      spectra cache, so the new dictionary's spectra are
+        //      computed once, not once per signal.
+        let corr = crate::conv::CorrEngine::new(d.clone());
+        for (pool, x) in pools.iter_mut().zip(&x_arcs) {
+            pool.set_dict(Arc::new(CscProblem::with_engine(
+                x.clone(),
+                d.clone(),
+                lambda,
+                corr.clone(),
+            )));
+        }
+    }
+
+    // The single per-signal centralization of the run.
+    let zs: Vec<NdTensor> = pools.iter_mut().map(|p| p.gather()).collect();
+    let reports: Vec<PoolReport> = pools.iter().map(|p| p.report()).collect();
+
+    Ok(BatchCdlResult {
+        d,
+        zs,
+        lambda,
+        trace,
+        converged,
+        runtime: start.elapsed().as_secs_f64(),
+        pools: reports,
+    })
+}
+
+/// Teardown corpus alternation: per-signal one-shot solves, each
+/// warm-started from that signal's previous activations.
+pub(crate) fn learn_batch_teardown(
+    xs: &[NdTensor],
+    cfg: &CdlConfig,
+    mut d: NdTensor,
+    lambda: f64,
+    start: Instant,
+) -> anyhow::Result<BatchCdlResult> {
     // Share each observation once; per-iteration problems reuse the
     // Arcs instead of recloning the corpus.
     let xs_shared: Vec<Arc<NdTensor>> = xs.iter().map(|x| Arc::new(x.clone())).collect();
@@ -128,12 +261,9 @@ pub fn learn_dictionary_batch(
                     )
                     .z
                 }
-                // The corpus loop does not hold per-signal resident
-                // pools yet (a ROADMAP follow-up): both distributed
-                // variants run one temporary pool per signal, but each
-                // is warm-started from that signal's previous
-                // activations, so converged coordinates still carry
-                // over between outer iterations.
+                // The facade routes persistent backends to
+                // `learn_batch_on_pools`; this arm keeps the match
+                // total for the remaining (ephemeral) distributed case.
                 CscBackend::Distributed(dcfg) | CscBackend::Persistent(dcfg) => {
                     let mut dcfg = dcfg.clone();
                     dcfg.tol = cfg.csc_tol;
@@ -188,6 +318,9 @@ pub fn learn_dictionary_batch(
             elapsed: start.elapsed().as_secs_f64(),
             phipsi_path: phipsi_path.unwrap_or("sparse-seq"),
         };
+        if cfg.verbose {
+            log_iter(&rec);
+        }
         let prev = trace.last().map(|r| r.cost);
         trace.push(rec);
         if let Some(prev) = prev {
@@ -206,6 +339,7 @@ pub fn learn_dictionary_batch(
         trace,
         converged,
         runtime: start.elapsed().as_secs_f64(),
+        pools: Vec::new(),
     })
 }
 
@@ -213,6 +347,7 @@ pub fn learn_dictionary_batch(
 mod tests {
     use super::*;
     use crate::data::synthetic::{best_atom_correlation, SyntheticConfig};
+    use crate::dicod::config::DicodConfig;
 
     fn corpus(n: usize, seed: u64) -> (Vec<NdTensor>, NdTensor) {
         // Signals sharing one ground-truth dictionary.
@@ -253,6 +388,7 @@ mod tests {
             assert!(w[1].cost <= w[0].cost * (1.0 + 1e-6) + 1e-9);
         }
         assert_eq!(r.zs.len(), 3);
+        assert!(r.pools.is_empty(), "sequential corpus holds no pools");
     }
 
     #[test]
@@ -295,5 +431,45 @@ mod tests {
         let r = learn_dictionary_batch(&xs, &cfg).unwrap();
         assert_eq!(r.d.dims(), &[2, 1, 8]);
         assert!(r.trace.last().unwrap().cost.is_finite());
+    }
+
+    #[test]
+    fn batch_persistent_matches_teardown_trace() {
+        let (xs, _) = corpus(2, 11);
+        let mk = |persistent| BatchCdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![8],
+            max_iter: 4,
+            nu: 0.0,
+            csc_tol: 1e-6,
+            lambda_frac: 0.05,
+            csc: CscBackend::Distributed(DicodConfig {
+                persistent,
+                tol: 1e-6,
+                ..DicodConfig::dicodile(2)
+            }),
+            seed: 11,
+            ..Default::default()
+        };
+        let a = learn_dictionary_batch(&xs, &mk(true)).unwrap();
+        let b = learn_dictionary_batch(&xs, &mk(false)).unwrap();
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (ra, rb) in a.trace.iter().zip(&b.trace) {
+            assert!(
+                (ra.cost - rb.cost).abs() < 1e-4 * (1.0 + rb.cost.abs()),
+                "iter {}: persistent {} vs teardown {}",
+                ra.iter,
+                ra.cost,
+                rb.cost
+            );
+        }
+        // Per-signal pool provenance: one resident pool per signal,
+        // workers spawned exactly once, Z gathered exactly once.
+        assert_eq!(a.pools.len(), xs.len());
+        for report in &a.pools {
+            assert_eq!(report.workers_spawned, report.n_workers);
+            assert_eq!(report.stats.gathers, report.n_workers as u64);
+        }
+        assert!(b.pools.is_empty());
     }
 }

@@ -37,6 +37,9 @@ use crate::dict::pgd::{update_dict, PgdConfig};
 use crate::dict::phi_psi::compute_stats_auto;
 use crate::tensor::NdTensor;
 
+// The alternation loops live here; the public entry point delegates to
+// the `api` facade, which owns pool residency (see `crate::api`).
+
 /// Which sparse coder the CDL loop uses.
 #[derive(Clone, Debug)]
 pub enum CscBackend {
@@ -48,11 +51,9 @@ pub enum CscBackend {
     /// warm-started from the previous Z.
     Distributed(DicodConfig),
     /// DiCoDiLe-Z on the resident pool, regardless of the config flag.
-    ///
-    /// Note: `learn_dictionary_batch` does not keep per-signal pools
-    /// alive yet — the corpus driver treats this variant as one
-    /// warm-started one-shot solve per signal per iteration (see the
-    /// "persistent runtime" follow-ups in ROADMAP.md).
+    /// The corpus driver keeps one resident pool per signal alive
+    /// across the whole alternation for this variant (and for
+    /// `Distributed` with `persistent: true`).
     Persistent(DicodConfig),
 }
 
@@ -133,40 +134,48 @@ pub struct CdlResult {
 }
 
 /// Learn a convolutional dictionary on observation `x`.
+///
+/// Thin wrapper: builds a one-shot [`crate::api::Session`] from the
+/// config and fits. A persistent distributed backend spawns its pool,
+/// serves the whole run, and shuts down when the one-shot session
+/// drops — exactly the pre-facade behavior. Use a long-lived session
+/// directly to keep the pool warm across calls.
 pub fn learn_dictionary(x: &NdTensor, cfg: &CdlConfig) -> anyhow::Result<CdlResult> {
-    let start = Instant::now();
-    let d = init_dictionary(x, cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
-    // lambda is fixed from the initial dictionary (as in the reference
-    // implementation) so the objective is comparable across iterations.
-    let lambda = cfg.lambda_frac * crate::csc::problem::lambda_max(x, &d);
-    anyhow::ensure!(lambda > 0.0, "degenerate workload: lambda_max = 0");
-
-    match &cfg.csc {
-        CscBackend::Persistent(dcfg) => learn_persistent(x, cfg, d, lambda, dcfg, start),
-        CscBackend::Distributed(dcfg) if dcfg.persistent => {
-            learn_persistent(x, cfg, d, lambda, dcfg, start)
-        }
-        _ => learn_teardown(x, cfg, d, lambda, start),
-    }
+    crate::api::Session::from_cdl_config(cfg).fit_result(x)
 }
 
-/// Persistent-pool alternation: spawn once, never gather mid-run.
-fn learn_persistent(
+/// Initial dictionary, the run's fixed regularization, and the engine
+/// the lambda_max bootstrap built for `d0` (so the pool the caller
+/// spawns can share the already-computed dictionary spectra). lambda is
+/// fixed from the initial dictionary (as in the reference
+/// implementation) so the objective is comparable across iterations.
+pub(crate) fn prepare(
+    x: &NdTensor,
+    cfg: &CdlConfig,
+) -> anyhow::Result<(NdTensor, f64, crate::conv::CorrEngine)> {
+    let d = init_dictionary(x, cfg.n_atoms, &cfg.atom_dims, cfg.init, cfg.seed);
+    let corr = crate::conv::CorrEngine::new(d.clone());
+    let lambda = cfg.lambda_frac * corr.correlate_dict(x).norm_inf();
+    anyhow::ensure!(lambda > 0.0, "degenerate workload: lambda_max = 0");
+    Ok((d, lambda, corr))
+}
+
+/// Persistent-pool alternation on an already-running pool: never
+/// gathers mid-run, leaves the pool alive for the caller (the session
+/// keeps it resident; a one-shot caller drops it right after).
+///
+/// The pool must already hold the problem `(X, d, lambda)`; its
+/// resident Z (zero on a fresh spawn, the previous activations on a
+/// reused pool) is the alternation's warm start.
+pub(crate) fn learn_on_pool(
+    pool: &mut WorkerPool,
     x: &NdTensor,
     cfg: &CdlConfig,
     mut d: NdTensor,
     lambda: f64,
-    dcfg: &DicodConfig,
     start: Instant,
 ) -> anyhow::Result<CdlResult> {
-    let mut dcfg = dcfg.clone();
-    dcfg.tol = cfg.csc_tol;
-    let x_shared = Arc::new(x.clone());
-    let mut pool = WorkerPool::spawn(
-        Arc::new(CscProblem::new(x_shared.clone(), d.clone(), lambda)),
-        &dcfg,
-        None,
-    );
+    let x_shared = pool.problem().x_shared();
 
     let mut trace: Vec<IterRecord> = Vec::new();
     let mut converged = false;
@@ -229,10 +238,10 @@ fn learn_persistent(
         pool.set_dict(Arc::new(CscProblem::new(x_shared.clone(), d.clone(), lambda)));
     }
 
-    // The single full-Z centralization of the run.
+    // The single full-Z centralization of the run. The pool itself
+    // stays up — the owning session decides when it dies.
     let z = pool.gather();
     let report = pool.report();
-    pool.shutdown();
 
     Ok(CdlResult {
         d,
@@ -247,7 +256,7 @@ fn learn_persistent(
 
 /// Teardown alternation: rebuild the problem each iteration (X shared
 /// via `Arc`) and warm-start the sparse coder from the previous Z.
-fn learn_teardown(
+pub(crate) fn learn_teardown(
     x: &NdTensor,
     cfg: &CdlConfig,
     mut d: NdTensor,
@@ -277,6 +286,9 @@ fn learn_teardown(
                 );
                 r.z
             }
+            // The facade routes `Persistent` (and persistent
+            // `Distributed`) to the resident-pool driver before ever
+            // reaching here; the arm keeps the match total.
             CscBackend::Distributed(dcfg) | CscBackend::Persistent(dcfg) => {
                 let mut dcfg = dcfg.clone();
                 dcfg.tol = cfg.csc_tol;
@@ -335,7 +347,7 @@ fn learn_teardown(
     })
 }
 
-fn log_iter(rec: &IterRecord) {
+pub(crate) fn log_iter(rec: &IterRecord) {
     crate::log_info!(
         "cdl",
         "iter {:3}  cost {:.6e}  (csc {:.6e})  nnz {}  csc {:.2}s dict {:.2}s  phi/psi {}",

@@ -1,9 +1,13 @@
 //! Top-level sparse-coding entry point.
 //!
-//! `sparse_encode` is the one-call API: it builds the `CscProblem`
-//! (lambda as a fraction of `lambda_max`, per the paper) and dispatches
-//! to the sequential CD engine, FISTA, or the distributed DiCoDiLe-Z
-//! solver depending on the configuration.
+//! `sparse_encode` is the legacy one-call API: it wraps the dictionary
+//! in a [`crate::api::TrainedModel`] and delegates to a one-shot
+//! [`crate::api::Session`] (lambda as a fraction of `lambda_max`, per
+//! the paper). `encode_problem` is the shared solver dispatch both the
+//! facade's ephemeral paths and the legacy wrapper run on: sequential
+//! CD, FISTA, or a temporary DiCoDiLe-Z grid. To serve many encodes
+//! against one dictionary on a *warm* worker pool, hold a `Session`
+//! and call `Session::encode` instead.
 //!
 //! Every solver behind this entry point shares the problem's
 //! `CorrEngine`: the lambda_max bootstrap, the solvers' beta
@@ -17,6 +21,7 @@ use crate::csc::problem::CscProblem;
 use crate::csc::select::Strategy;
 use crate::dicod::config::DicodConfig;
 use crate::dicod::coordinator::solve_distributed;
+use crate::dicod::pool::PoolReport;
 use crate::tensor::NdTensor;
 
 /// Which solver backs `sparse_encode`.
@@ -63,12 +68,22 @@ pub struct EncodeResult {
     pub runtime: f64,
     /// CD work counters when a CD-family solver ran.
     pub cd_stats: Option<CdStats>,
+    /// Worker-grid provenance when a distributed solver ran (resident
+    /// or temporary pool); `None` for sequential/FISTA encodes.
+    pub pool: Option<PoolReport>,
 }
 
 /// Sparse-code `x` against dictionary `d`.
+///
+/// Thin wrapper over a one-shot [`crate::api::Session`]; panics on a
+/// rank/channel mismatch between `x` and `d` or a degenerate
+/// observation, exactly like the pre-facade implementation did.
 pub fn sparse_encode(x: &NdTensor, d: &NdTensor, cfg: &EncodeConfig) -> EncodeResult {
-    let problem = CscProblem::with_lambda_frac(x.clone(), d.clone(), cfg.lambda_frac);
-    encode_problem(&problem, cfg)
+    let model = crate::api::TrainedModel::from_dictionary(d.clone(), cfg.lambda_frac);
+    crate::api::Dicodile::from_encode_config(cfg)
+        .build()
+        .encode(&model, x)
+        .expect("sparse_encode: observation incompatible with the dictionary")
 }
 
 /// Sparse-code a pre-built problem (lambda already fixed).
@@ -92,6 +107,7 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
                 converged: r.stats.converged,
                 runtime: r.stats.runtime,
                 cd_stats: Some(r.stats),
+                pool: None,
             }
         }
         Solver::Fista => {
@@ -106,6 +122,7 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
                 converged: r.converged,
                 runtime: r.runtime,
                 cd_stats: None,
+                pool: None,
             }
         }
         Solver::Distributed(dcfg) => {
@@ -113,6 +130,12 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
             dcfg.tol = cfg.tol;
             dcfg.max_updates = cfg.max_iter;
             let r = solve_distributed(problem, &dcfg);
+            let report = PoolReport {
+                n_workers: r.n_workers,
+                workers_spawned: r.n_workers,
+                stats: r.stats,
+                per_worker: r.per_worker,
+            };
             EncodeResult {
                 cost: problem.cost(&r.z),
                 z: r.z,
@@ -120,6 +143,7 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
                 converged: r.converged,
                 runtime: r.runtime,
                 cd_stats: None,
+                pool: Some(report),
             }
         }
     }

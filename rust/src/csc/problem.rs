@@ -93,7 +93,10 @@ impl CscProblem {
         self.x.clone()
     }
 
-    fn with_engine(x: Arc<NdTensor>, d: NdTensor, lambda: f64, corr: CorrEngine) -> Self {
+    /// Build with a pre-constructed engine (the caller already paid for
+    /// the spectra cache — e.g. a lambda_max bootstrap on the same
+    /// dictionary — and wants the problem to share it).
+    pub(crate) fn with_engine(x: Arc<NdTensor>, d: NdTensor, lambda: f64, corr: CorrEngine) -> Self {
         assert!(lambda > 0.0, "lambda must be positive");
         assert_eq!(
             x.dims()[0],

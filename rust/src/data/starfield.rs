@@ -5,7 +5,8 @@
 //! here, so this module synthesizes an image with the statistics that
 //! matter for CDL pattern discovery: a dark background, a power-law
 //! population of point sources convolved with a small PSF, a few
-//! extended elliptical "galaxies", and sensor noise. See DESIGN.md §3.
+//! extended elliptical "galaxies", and sensor noise — a procedural
+//! stand-in for the paper's GOODS-South frame in the offline build.
 
 use crate::tensor::NdTensor;
 use crate::util::rng::Pcg64;

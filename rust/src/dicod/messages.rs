@@ -153,7 +153,7 @@ pub struct WorkerStats {
     /// Abstract work units (coordinates scanned + beta entries touched):
     /// the per-worker clock of the simulated-time model used for the
     /// scaling figures (this testbed has a single physical core, so
-    /// parallel wall-clock cannot be measured directly — see DESIGN.md).
+    /// parallel wall-clock cannot be measured directly).
     pub work: u64,
     /// Solve phases run on this worker.
     pub solves: u64,

@@ -6,23 +6,59 @@
 //! dictionary updates, plus the baselines the paper evaluates against
 //! (DICOD, greedy/randomized CD, FISTA, Consensus-ADMM).
 //!
-//! Architecture (see DESIGN.md): this crate is the Layer-3 coordinator;
-//! batch-heavy algebra can be offloaded to AOT-compiled JAX/Pallas
-//! artifacts executed through the PJRT CPU client (`runtime`), with
-//! native fallbacks for every operation.
+//! ## Architecture
+//!
+//! The crate is layered bottom-up: [`tensor`] / [`fft`] / [`conv`]
+//! provide dense n-d arrays, cached-plan FFTs and the direct-vs-FFT
+//! correlation engine; [`csc`] defines the sparse-coding problem and
+//! the sequential solvers (LGCD/greedy/randomized CD, FISTA); [`dicod`]
+//! is the distributed runtime — a worker grid partitioned over the
+//! activation domain whose resident [`dicod::pool::WorkerPool`] is
+//! driven through `Solve -> ComputeStats -> SetDict -> Gather` phases;
+//! [`cdl`] runs the alternating minimization (distributed CSC +
+//! sufficient-statistics PGD dictionary updates) on top of it; and
+//! [`api`] is the public facade that owns pool residency across calls.
+//! Batch-heavy algebra can optionally be offloaded to AOT-compiled
+//! JAX/Pallas artifacts executed through the PJRT CPU client
+//! ([`runtime`], behind the `pjrt` feature), with native fallbacks for
+//! every operation.
 //!
 //! ## Quickstart
+//!
+//! The primary entry point is the session facade: one builder, a
+//! [`api::Session`] whose worker pools stay warm across calls, and a
+//! [`api::TrainedModel`] you fit once and apply many times.
 //!
 //! ```no_run
 //! use dicodile::prelude::*;
 //!
-//! // Generate a synthetic 1-D workload and learn a dictionary.
+//! // Generate a synthetic 1-D workload.
 //! let workload = SyntheticConfig::signal_1d(2000, 5, 32).generate(42);
-//! let cfg = CdlConfig { n_atoms: 5, atom_dims: vec![32], ..Default::default() };
-//! let result = learn_dictionary(&workload.x, &cfg).unwrap();
-//! println!("final cost {}", result.trace.last().unwrap().cost);
+//!
+//! // One builder for every knob; presets pick the backend.
+//! let mut session = Dicodile::builder()
+//!     .n_atoms(5)
+//!     .atom_dims(&[32])
+//!     .dicodile(4) // DiCoDiLe-Z grid, pool resident across calls
+//!     .build();
+//!
+//! // Fit once; encode on the same warm pool (no worker respawn).
+//! let model = session.fit(&workload.x).unwrap();
+//! let code = session.encode(&model, &workload.x).unwrap();
+//! println!("final cost {} nnz {}", code.cost, code.z.nnz());
+//!
+//! // The model handle is serializable: save, reload, apply.
+//! model.save("model.json").unwrap();
+//! let served = TrainedModel::load("model.json").unwrap();
+//! let denoised = served.denoise(&workload.x);
+//! # let _ = denoised;
 //! ```
+//!
+//! The pre-facade free functions ([`cdl::learn_dictionary`],
+//! `cdl::batch::learn_dictionary_batch`, [`csc::encode::sparse_encode`])
+//! remain available as thin wrappers over one-shot sessions.
 
+pub mod api;
 pub mod bench;
 pub mod conv;
 pub mod csc;
@@ -38,6 +74,7 @@ pub mod util;
 
 /// Convenience re-exports for the examples and CLI.
 pub mod prelude {
+    pub use crate::api::{Backend, Dicodile, DicodileBuilder, Session, TrainedModel};
     pub use crate::cdl::driver::{learn_dictionary, CdlConfig, CdlResult};
     pub use crate::csc::encode::{sparse_encode, EncodeConfig};
     pub use crate::csc::problem::CscProblem;

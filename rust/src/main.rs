@@ -1,24 +1,23 @@
 //! `dicodile` — command-line launcher for the DiCoDiLe system.
 //!
-//! Subcommands:
-//!   csc        sparse-code a (generated) workload with a chosen solver
-//!   learn      full CDL on a synthetic / starfield / texture workload
+//! Subcommands (all routed through the `api` session facade):
+//!   csc        sparse-code a (generated) workload with a chosen solver;
+//!              `--model path.json` encodes against a saved trained model
+//!   learn      full CDL on a synthetic / starfield / texture workload;
+//!              `--save-model path.json` persists the trained model
 //!   info       print artifact manifest + build information
 //!   gen        generate a workload image and save it (.ndt / .pgm)
 //!
 //! Run `dicodile <subcommand> --help` for options.
 
-use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::api::{Dicodile, DicodileBuilder, TrainedModel};
 use dicodile::cdl::init::InitStrategy;
 use dicodile::cdl::report;
-use dicodile::csc::encode::{encode_problem, EncodeConfig, Solver};
-use dicodile::csc::problem::CscProblem;
 use dicodile::csc::select::Strategy;
 use dicodile::data::io;
 use dicodile::data::starfield::StarfieldConfig;
 use dicodile::data::synthetic::SyntheticConfig;
 use dicodile::data::texture::TextureConfig;
-use dicodile::dicod::config::DicodConfig;
 use dicodile::runtime::Manifest;
 use dicodile::tensor::NdTensor;
 use dicodile::util::cli::Parser;
@@ -49,8 +48,10 @@ fn print_help() {
     println!(
         "dicodile — Distributed Convolutional Dictionary Learning\n\n\
          USAGE: dicodile <csc|learn|info|gen> [options]\n\n\
-         csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod)\n\
-         learn  learn a dictionary (workloads: synthetic, starfield, texture)\n\
+         csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod;\n\
+                --model loads a saved trained model)\n\
+         learn  learn a dictionary (workloads: synthetic, starfield, texture;\n\
+                --save-model persists the trained model)\n\
          info   show artifact manifest and build info\n\
          gen    generate a workload and save it to disk"
     );
@@ -68,6 +69,19 @@ fn workload_tensor(kind: &str, size: usize, seed: u64) -> NdTensor {
     }
 }
 
+/// Map a `--solver` token to a builder backend preset.
+fn solver_backend(builder: DicodileBuilder, solver: &str, workers: usize) -> Option<DicodileBuilder> {
+    Some(match solver {
+        "lgcd" => builder.sequential(),
+        "gcd" => builder.sequential().strategy(Strategy::Greedy),
+        "rcd" => builder.sequential().strategy(Strategy::Randomized),
+        "fista" => builder.fista(),
+        "dicodile" => builder.dicodile(workers),
+        "dicod" => builder.dicod(workers),
+        _ => return None,
+    })
+}
+
 fn cmd_csc(tokens: Vec<String>) -> i32 {
     let parser = Parser::new("dicodile csc", "sparse-code a synthetic workload")
         .opt("solver", Some("lgcd"), "lgcd|gcd|rcd|fista|dicodile|dicod")
@@ -77,28 +91,59 @@ fn cmd_csc(tokens: Vec<String>) -> i32 {
         .opt("workers", Some("4"), "workers for distributed solvers")
         .opt("reg", Some("0.1"), "lambda as a fraction of lambda_max")
         .opt("tol", Some("1e-4"), "stopping tolerance")
-        .opt("seed", Some("0"), "rng seed");
+        .opt("seed", Some("0"), "rng seed")
+        .opt("model", None, "encode against a trained model (JSON from `learn --save-model`) instead of the generating dictionary; the model's saved lambda fraction is used (--reg applies only without --model)");
     let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
         eprintln!("{m}");
         std::process::exit(2)
     });
     let (t, k, l) = (a.get_usize("t"), a.get_usize("k"), a.get_usize("l"));
     let w = SyntheticConfig::paper_1d(t, k, l).generate(a.get_u64("seed"));
-    let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), a.get_f64("reg"));
-    let solver = match a.get_str("solver").as_str() {
-        "lgcd" => Solver::Sequential(Strategy::LocallyGreedy),
-        "gcd" => Solver::Sequential(Strategy::Greedy),
-        "rcd" => Solver::Sequential(Strategy::Randomized),
-        "fista" => Solver::Fista,
-        "dicodile" => Solver::Distributed(DicodConfig::dicodile(a.get_usize("workers"))),
-        "dicod" => Solver::Distributed(DicodConfig::dicod(a.get_usize("workers"))),
-        other => {
-            eprintln!("unknown solver {other:?}");
+    let model = match a.get("model") {
+        Some(path) => match TrainedModel::load(path) {
+            Ok(m) => {
+                println!(
+                    "loaded model {path}: K={} atoms {:?}, lambda {:.4e} (frac {})",
+                    m.n_atoms(),
+                    m.atom_dims(),
+                    m.lambda,
+                    m.lambda_frac
+                );
+                m
+            }
+            Err(e) => {
+                eprintln!("cannot load model: {e}");
+                return 1;
+            }
+        },
+        None => TrainedModel::from_dictionary(w.d_true.clone(), a.get_f64("reg")),
+    };
+    if model.n_channels() != 1 || model.atom_dims().len() != 1 {
+        eprintln!(
+            "model dictionary {:?} is not 1-D single-channel; `csc` generates a 1-D workload",
+            model.d.dims()
+        );
+        return 2;
+    }
+    let builder = Dicodile::builder()
+        .lambda_frac(a.get_f64("reg"))
+        .tol(a.get_f64("tol"))
+        .seed(a.get_u64("seed"));
+    let builder = match solver_backend(builder, &a.get_str("solver"), a.get_usize("workers")) {
+        Some(b) => b,
+        None => {
+            eprintln!("unknown solver {:?}", a.get_str("solver"));
             return 2;
         }
     };
-    let cfg = EncodeConfig { solver, tol: a.get_f64("tol"), ..Default::default() };
-    let r = encode_problem(&problem, &cfg);
+    let mut session = builder.build();
+    let r = match session.encode(&model, &w.x) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("encode failed: {e}");
+            return 1;
+        }
+    };
     println!(
         "solver={} T={t} K={k} L={l}  cost={:.6e}  nnz={}  converged={}  time={:.3}s",
         a.get_str("solver"),
@@ -111,6 +156,12 @@ fn cmd_csc(tokens: Vec<String>) -> i32 {
         println!(
             "  iterations={} updates={} scanned={} beta_touched={}",
             s.iterations, s.updates, s.coords_scanned, s.beta_touched
+        );
+    }
+    if let Some(p) = r.pool {
+        println!(
+            "  workers={} updates={} msgs={} soft_locked={}",
+            p.n_workers, p.stats.updates, p.stats.msgs_sent, p.stats.soft_locked
         );
     }
     0
@@ -127,6 +178,7 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
         .opt("reg", Some("0.1"), "lambda fraction")
         .opt("seed", Some("0"), "rng seed")
         .opt("out", None, "save learned dictionary mosaic to this PGM path")
+        .opt("save-model", None, "save the trained model (JSON) for `csc --model`")
         .flag("verbose", "print per-iteration progress");
     let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
         eprintln!("{m}");
@@ -136,30 +188,43 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
     let l = a.get_usize("l");
     let atom_dims = if x.ndim() == 3 { vec![l, l] } else { vec![l] };
     let workers = a.get_usize("workers");
-    let cfg = CdlConfig {
-        n_atoms: a.get_usize("k"),
-        atom_dims,
-        lambda_frac: a.get_f64("reg"),
-        max_iter: a.get_usize("iters"),
-        csc: if workers > 0 {
-            CscBackend::Distributed(DicodConfig::dicodile(workers))
-        } else {
-            CscBackend::Sequential
-        },
-        init: InitStrategy::RandomPatches,
-        seed: a.get_u64("seed"),
-        verbose: a.has_flag("verbose"),
-        ..Default::default()
-    };
-    match learn_dictionary(&x, &cfg) {
+    let reg = a.get_f64("reg");
+    let mut builder = Dicodile::builder()
+        .n_atoms(a.get_usize("k"))
+        .atom_dims(&atom_dims)
+        .lambda_frac(reg)
+        .max_iter(a.get_usize("iters"))
+        .init(InitStrategy::RandomPatches)
+        .seed(a.get_u64("seed"))
+        .verbose(a.has_flag("verbose"));
+    builder = if workers > 0 { builder.dicodile(workers) } else { builder.sequential() };
+    let mut session = builder.build();
+    match session.fit_result(&x) {
         Ok(r) => {
             print!("{}", report::trace_table(&r));
+            if let Some(report) = &r.pool {
+                println!(
+                    "pool: {} workers resident for the whole run ({} gathers)",
+                    report.n_workers,
+                    report.stats.gathers / report.n_workers.max(1) as u64
+                );
+            }
             if let Some(path) = a.get("out") {
                 if r.d.ndim() == 4 {
                     if let Err(e) = io::save_dict_mosaic(std::path::Path::new(path), &r.d, 5) {
                         eprintln!("cannot save mosaic: {e}");
                     } else {
                         println!("saved atom mosaic to {path}");
+                    }
+                }
+            }
+            if let Some(path) = a.get("save-model") {
+                let model = TrainedModel::from_cdl(&r, reg);
+                match model.save(path) {
+                    Ok(()) => println!("saved model to {path}"),
+                    Err(e) => {
+                        eprintln!("cannot save model: {e}");
+                        return 1;
                     }
                 }
             }

@@ -1,6 +1,6 @@
 //! Offline-build substrates: RNG, CLI parsing, JSON, logging and a
-//! property-testing driver (the vendored crate set has no rand / clap /
-//! serde / proptest — see DESIGN.md §3).
+//! property-testing driver (the offline build vendors no rand / clap /
+//! serde / proptest, so these minimal substitutes stand in).
 
 pub mod cli;
 pub mod json;

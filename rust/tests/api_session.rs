@@ -1,0 +1,376 @@
+//! Integration tests for the session-centric API facade:
+//!
+//! (a) builder-vs-legacy-config parity — `Session::fit` produces the
+//!     same trace as `learn_dictionary` with the equivalent `CdlConfig`
+//!     (exact for the deterministic sequential backend, tolerance-level
+//!     for the asynchronous distributed one),
+//! (b) cross-call pool residency — a fit followed by encodes of the
+//!     same observation runs on ONE pool (workers spawned exactly once,
+//!     proven by `PoolReport` / `WorkerStats` counters),
+//! (c) `fit_corpus` keeps one resident pool per signal alive across the
+//!     whole corpus alternation,
+//! (d) `TrainedModel` save -> load -> encode equivalence,
+//! plus legacy-delegation checks for `sparse_encode`.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! worker counts — `scripts/tier1.sh` runs this suite once per count.
+
+use dicodile::api::{Dicodile, TrainedModel};
+use dicodile::cdl::batch::{learn_dictionary_batch, BatchCdlConfig};
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::csc::encode::{sparse_encode, EncodeConfig, Solver};
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::tensor::NdTensor;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn workload_1d(seed: u64, t: usize) -> NdTensor {
+    let mut gen = SyntheticConfig::signal_1d(t, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    gen.generate(seed).x
+}
+
+// ---------------------------------------------------------------------------
+// (a) builder-vs-legacy parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_fit_matches_legacy_sequential_exactly() {
+    let x = workload_1d(51, 500);
+    let cfg = CdlConfig {
+        n_atoms: 2,
+        atom_dims: vec![8],
+        max_iter: 4,
+        nu: 0.0,
+        csc_tol: 1e-5,
+        lambda_frac: 0.05,
+        seed: 51,
+        ..Default::default()
+    };
+    let legacy = learn_dictionary(&x, &cfg).unwrap();
+    let mut session = Dicodile::builder()
+        .n_atoms(2)
+        .atom_dims(&[8])
+        .max_iter(4)
+        .nu(0.0)
+        .tol(1e-5)
+        .lambda_frac(0.05)
+        .seed(51)
+        .sequential()
+        .build();
+    let facade = session.fit_result(&x).unwrap();
+    assert_eq!(facade.lambda, legacy.lambda);
+    assert_eq!(facade.trace.len(), legacy.trace.len());
+    for (a, b) in facade.trace.iter().zip(&legacy.trace) {
+        // The sequential path is deterministic: bit-identical costs.
+        assert_eq!(a.cost, b.cost, "iter {}", a.iter);
+        assert_eq!(a.cost_after_csc, b.cost_after_csc, "iter {}", a.iter);
+        assert_eq!(a.z_nnz, b.z_nnz, "iter {}", a.iter);
+    }
+    assert!(facade.z.allclose(&legacy.z, 1e-12));
+}
+
+#[test]
+fn builder_fit_matches_legacy_distributed() {
+    let x = workload_1d(52, 600);
+    for w in worker_counts() {
+        let cfg = CdlConfig {
+            n_atoms: 2,
+            atom_dims: vec![8],
+            max_iter: 4,
+            nu: 0.0,
+            csc_tol: 1e-6,
+            lambda_frac: 0.05,
+            csc: CscBackend::Distributed(DicodConfig { tol: 1e-6, ..DicodConfig::dicodile(w) }),
+            seed: 52,
+            ..Default::default()
+        };
+        let legacy = learn_dictionary(&x, &cfg).unwrap();
+        let mut session = Dicodile::builder()
+            .n_atoms(2)
+            .atom_dims(&[8])
+            .max_iter(4)
+            .nu(0.0)
+            .tol(1e-6)
+            .lambda_frac(0.05)
+            .seed(52)
+            .dicodile(w)
+            .build();
+        let facade = session.fit_result(&x).unwrap();
+        assert_eq!(facade.trace.len(), legacy.trace.len());
+        for (a, b) in facade.trace.iter().zip(&legacy.trace) {
+            assert!(
+                (a.cost - b.cost).abs() < 1e-4 * (1.0 + b.cost.abs()),
+                "W={w} iter {}: facade {} vs legacy {}",
+                a.iter,
+                a.cost,
+                b.cost
+            );
+        }
+        // Both record the same residency provenance shape.
+        let (fa, le) = (facade.pool.unwrap(), legacy.pool.unwrap());
+        assert_eq!(fa.n_workers, le.n_workers, "W={w}");
+        assert_eq!(fa.workers_spawned, fa.n_workers, "W={w}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) cross-call residency: fit + encode on one pool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fit_then_encodes_run_on_one_resident_pool() {
+    let x = workload_1d(53, 500);
+    let iters = 3u64;
+    for w in worker_counts() {
+        let mut session = Dicodile::builder()
+            .n_atoms(2)
+            .atom_dims(&[8])
+            .max_iter(iters as usize)
+            .nu(0.0)
+            .tol(1e-5)
+            .lambda_frac(0.05)
+            .seed(53)
+            .dicodile(w)
+            .build();
+        let model = session.fit(&x).unwrap();
+        assert_eq!(session.pools_spawned(), 1, "W={w}");
+        let wt = session.pool_reports()[0].n_workers as u64;
+
+        // First encode: same observation, learned dictionary — the
+        // session must broadcast SetDict on the fit pool, not respawn.
+        let first = session.encode(&model, &x).unwrap();
+        assert!(first.converged, "W={w}");
+        assert_eq!(session.pools_spawned(), 1, "W={w}: encode respawned the pool");
+        assert_eq!(session.warm_starts(), 1, "W={w}");
+        assert_eq!(session.n_resident_pools(), 1, "W={w}");
+
+        let report = &session.pool_reports()[0];
+        assert_eq!(report.workers_spawned, report.n_workers, "W={w}");
+        // Exactly one cold bootstrap per worker — at spawn, never again.
+        assert_eq!(report.stats.beta_cold_inits, wt, "W={w}");
+        // fit gathers once; the encode gathers once more.
+        assert_eq!(report.stats.gathers, 2 * wt, "W={w}");
+        // fit ran `iters` solve phases, the encode one more.
+        assert_eq!(report.stats.solves, wt * (iters + 1), "W={w}");
+        // SetDict warm re-inits: iters-1 during fit + 1 for the encode.
+        assert_eq!(report.stats.beta_warm_reinits, wt * iters, "W={w}");
+
+        // Second encode: still the same pool.
+        let second = session.encode(&model, &x).unwrap();
+        assert_eq!(session.pools_spawned(), 1, "W={w}");
+        assert_eq!(session.warm_starts(), 2, "W={w}");
+        let report = &session.pool_reports()[0];
+        assert_eq!(report.stats.gathers, 3 * wt, "W={w}");
+        assert_eq!(report.stats.solves, wt * (iters + 2), "W={w}");
+        // Encoding the same signal against the same dictionary twice is
+        // deterministic at the fixed point.
+        assert!(second.z.allclose(&first.z, 1e-9), "W={w}");
+
+        // The distributed encode agrees with a sequential encode of the
+        // same model (the solver is exact).
+        let seq = model.encode_with(&x, &EncodeConfig { tol: 1e-8, ..Default::default() });
+        assert!(
+            (first.cost - seq.cost).abs() < 1e-4 * (1.0 + seq.cost.abs()),
+            "W={w}: pool encode {} vs sequential {}",
+            first.cost,
+            seq.cost
+        );
+    }
+}
+
+#[test]
+fn different_observation_spawns_a_second_pool() {
+    let xa = workload_1d(54, 400);
+    let xb = workload_1d(55, 400); // same geometry, different values
+    let mut session = Dicodile::builder()
+        .n_atoms(2)
+        .atom_dims(&[8])
+        .max_iter(2)
+        .nu(0.0)
+        .tol(1e-4)
+        .lambda_frac(0.05)
+        .seed(54)
+        .dicodile(2)
+        .build();
+    let model = session.fit(&xa).unwrap();
+    assert_eq!(session.pools_spawned(), 1);
+    session.encode(&model, &xb).unwrap();
+    assert_eq!(session.pools_spawned(), 2, "a new observation needs its own pool");
+    assert_eq!(session.n_resident_pools(), 2);
+    // Back to the first observation: its pool is still warm.
+    session.encode(&model, &xa).unwrap();
+    assert_eq!(session.pools_spawned(), 2);
+    assert_eq!(session.warm_starts(), 1);
+    session.close();
+    assert_eq!(session.n_resident_pools(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// (c) fit_corpus: one resident pool per signal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fit_corpus_keeps_one_pool_per_signal() {
+    let xs = vec![workload_1d(56, 400), workload_1d(57, 400), workload_1d(58, 300)];
+    let iters = 3u64;
+    for w in worker_counts() {
+        let mut session = Dicodile::builder()
+            .n_atoms(2)
+            .atom_dims(&[8])
+            .max_iter(iters as usize)
+            .nu(0.0)
+            .tol(1e-5)
+            .lambda_frac(0.05)
+            .seed(56)
+            .dicodile(w)
+            .build();
+        let r = session.fit_corpus_result(&xs).unwrap();
+        assert_eq!(r.trace.len(), iters as usize);
+        assert_eq!(r.zs.len(), xs.len());
+        assert_eq!(r.pools.len(), xs.len(), "W={w}");
+        assert_eq!(session.pools_spawned(), xs.len(), "W={w}");
+        assert_eq!(session.n_resident_pools(), xs.len(), "W={w}");
+        for (n, report) in r.pools.iter().enumerate() {
+            let wt = report.n_workers as u64;
+            // Spawned once, solved every outer iteration, warm re-init
+            // per SetDict broadcast, gathered exactly once at the end.
+            assert_eq!(report.workers_spawned, report.n_workers, "W={w} signal {n}");
+            assert_eq!(report.stats.beta_cold_inits, wt, "W={w} signal {n}");
+            assert_eq!(report.stats.solves, wt * iters, "W={w} signal {n}");
+            assert_eq!(report.stats.beta_warm_reinits, wt * (iters - 1), "W={w} signal {n}");
+            assert_eq!(report.stats.gathers, wt, "W={w} signal {n}");
+        }
+        // φ/ψ flowed as worker partials every iteration; the corpus
+        // objective decreased.
+        for rec in &r.trace {
+            assert_eq!(rec.phipsi_path, "worker-partials", "W={w}");
+        }
+        assert!(
+            r.trace.last().unwrap().cost <= r.trace.first().unwrap().cost * (1.0 + 1e-9),
+            "W={w}"
+        );
+    }
+}
+
+#[test]
+fn legacy_batch_entry_point_honors_persistent_backends() {
+    // `learn_dictionary_batch` (one-shot facade delegation) must use
+    // per-signal resident pools when the config asks for persistence —
+    // previously the corpus driver silently ignored the flag.
+    let xs = vec![workload_1d(59, 400), workload_1d(60, 400)];
+    let cfg = BatchCdlConfig {
+        n_atoms: 2,
+        atom_dims: vec![8],
+        max_iter: 3,
+        nu: 0.0,
+        csc_tol: 1e-4,
+        lambda_frac: 0.05,
+        csc: CscBackend::Persistent(DicodConfig { persistent: false, ..DicodConfig::dicodile(2) }),
+        seed: 59,
+        ..Default::default()
+    };
+    let r = learn_dictionary_batch(&xs, &cfg).unwrap();
+    assert_eq!(r.pools.len(), 2, "Persistent variant must force resident pools");
+    for report in &r.pools {
+        assert_eq!(report.workers_spawned, report.n_workers);
+        assert_eq!(report.stats.gathers, report.n_workers as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) model persistence round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_save_load_encode_equivalence() {
+    let x = workload_1d(61, 500);
+    let mut session = Dicodile::builder()
+        .n_atoms(2)
+        .atom_dims(&[8])
+        .max_iter(4)
+        .tol(1e-5)
+        .lambda_frac(0.05)
+        .seed(61)
+        .sequential()
+        .build();
+    let model = session.fit(&x).unwrap();
+    let path = std::env::temp_dir().join(format!("dicodile_api_model_{}.json", std::process::id()));
+    model.save(&path).unwrap();
+    let loaded = TrainedModel::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // The dictionary round-trips bit-exactly...
+    assert_eq!(loaded.d.dims(), model.d.dims());
+    assert_eq!(loaded.d.data(), model.d.data());
+    assert_eq!(loaded.lambda, model.lambda);
+    assert_eq!(loaded.lambda_frac, model.lambda_frac);
+    assert_eq!(loaded.converged, model.converged);
+    assert_eq!(loaded.trace.len(), model.trace.len());
+    assert_eq!(loaded.final_cost(), model.final_cost());
+
+    // ...so encoding through the loaded model is bit-equivalent.
+    let a = model.encode(&x);
+    let b = loaded.encode(&x);
+    assert_eq!(a.lambda, b.lambda);
+    assert_eq!(a.cost, b.cost);
+    assert!(a.z.allclose(&b.z, 0.0), "save -> load -> encode must be exact");
+}
+
+// ---------------------------------------------------------------------------
+// legacy delegation keeps test-visible behavior
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sparse_encode_matches_session_encode() {
+    let gen = SyntheticConfig::signal_1d(400, 3, 8).generate(62);
+    let cfg = EncodeConfig { lambda_frac: 0.1, tol: 1e-8, ..Default::default() };
+    let legacy = sparse_encode(&gen.x, &gen.d_true, &cfg);
+    assert!(legacy.converged);
+    assert!(legacy.cd_stats.is_some(), "sequential encode keeps its CD counters");
+    assert!(legacy.pool.is_none());
+
+    let model = TrainedModel::from_dictionary(gen.d_true.clone(), 0.1);
+    let mut session = Dicodile::builder().tol(1e-8).sequential().build();
+    let facade = session.encode(&model, &gen.x).unwrap();
+    assert_eq!(legacy.lambda, facade.lambda);
+    assert_eq!(legacy.cost, facade.cost);
+    assert!(legacy.z.allclose(&facade.z, 0.0));
+}
+
+#[test]
+fn sparse_encode_distributed_records_pool_provenance() {
+    let gen = SyntheticConfig::signal_1d(300, 2, 6).generate(63);
+    for w in worker_counts() {
+        let cfg = EncodeConfig {
+            solver: Solver::Distributed(DicodConfig::dicodile(w)),
+            tol: 1e-7,
+            ..Default::default()
+        };
+        let r = sparse_encode(&gen.x, &gen.d_true, &cfg);
+        assert!(r.converged, "W={w}");
+        let report = r.pool.expect("distributed encode records pool provenance");
+        assert_eq!(report.workers_spawned, report.n_workers, "W={w}");
+        assert_eq!(report.stats.gathers, report.n_workers as u64, "W={w}");
+        // Exact solver: the distributed cost matches sequential.
+        let seq = sparse_encode(&gen.x, &gen.d_true, &EncodeConfig { tol: 1e-8, ..Default::default() });
+        assert!(
+            (r.cost - seq.cost).abs() < 1e-5 * (1.0 + seq.cost.abs()),
+            "W={w}: {} vs {}",
+            r.cost,
+            seq.cost
+        );
+    }
+}

@@ -16,12 +16,20 @@ cargo build --release --benches
 # Persistent-runtime suite at explicit worker counts: the pool protocol
 # (Solve -> ComputeStats -> SetDict -> Gather) must hold for the
 # degenerate single-worker grid and for multi-worker line/grid splits.
+# The api suite then proves the session facade keeps those pools
+# resident ACROSS calls (fit + encode on one spawn, corpus pools).
 for w in 1 2 4; do
   DICODILE_TEST_WORKERS=$w cargo test -q --test worker_pool
+  DICODILE_TEST_WORKERS=$w cargo test -q --test api_session
 done
 
+# Examples smoke: the quickstart exercises the builder/session/model
+# round-trip end to end (facade regression canary).
+cargo run --release --example quickstart
+
 # Outer-iteration smoke bench: records per-iteration csc_time/dict_time
-# for the teardown/respawn driver vs the persistent pool to
+# for the teardown/respawn driver vs the persistent pool, plus warm
+# (session-reuse) vs cold (fresh-session) encode latency, to
 # BENCH_cdl_outer.json (single rep for CI; drop the env for real runs).
 DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer
 
