@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     // Learn on the noisy image; the l1 penalty is the denoiser. The
     // model handle then applies the learned dictionary in one call.
     let l = args.get_usize("l");
-    let mut session = Dicodile::builder()
+    let session = Dicodile::builder()
         .n_atoms(args.get_usize("k"))
         .atom_dims(&[l, l])
         .lambda_frac(0.15)

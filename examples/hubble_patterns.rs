@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         if ops.has_engine() { "loaded" } else { "absent (native fallbacks)" }
     );
 
-    let mut session = Dicodile::builder()
+    let session = Dicodile::builder()
         .n_atoms(k)
         .atom_dims(&[l, l])
         .lambda_frac(0.1)

@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     // A model handle wraps any [K, P, L..] dictionary; the session picks
     // the solver backend.
     let true_model = TrainedModel::from_dictionary(w.d_true.clone(), 0.1);
-    let mut session = Dicodile::builder().tol(1e-6).sequential().build();
+    let session = Dicodile::builder().tol(1e-6).sequential().build();
 
     // beta bootstrap through the AOT artifact when available.
     let problem = CscProblem::with_lambda_frac(w.x.clone(), w.d_true.clone(), 0.1);
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. learn the dictionary from scratch ----------------------------
     println!("\nlearning a fresh dictionary (K=5, L=32)...");
-    let mut session = Dicodile::builder()
+    let session = Dicodile::builder()
         .n_atoms(5)
         .atom_dims(&[32])
         .lambda_frac(0.05)

@@ -59,7 +59,7 @@ fn main() {
     let mut base_work = None;
     let mut unit = 0.0;
     for w in args.get_usize_list("workers") {
-        let mut session = Dicodile::builder()
+        let session = Dicodile::builder()
             .lambda_frac(args.get_f64("reg"))
             .tol(args.get_f64("tol"))
             .dicodile(w)

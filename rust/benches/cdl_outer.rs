@@ -3,7 +3,10 @@
 //! the before/after record for the residency tentpole — plus the
 //! session-facade serving numbers: encode latency on a warm resident
 //! pool vs a cold fresh-session encode (spawn + cold beta bootstrap
-//! every call). Writes BENCH_cdl_outer.json.
+//! every call), plus concurrent serving — wall-clock for C=1/2/4
+//! parallel clients encoding C distinct observations through clones of
+//! ONE shared session (`encode_concurrent_s`). Writes
+//! BENCH_cdl_outer.json.
 //!
 //!     cargo bench --bench cdl_outer
 //!     DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer   # CI smoke
@@ -125,7 +128,7 @@ fn main() {
             .dicodile(workers)
             .build()
     };
-    let mut warm_session = mk_session();
+    let warm_session = mk_session();
     let model = warm_session.fit(&x).expect("session fit");
     let mut warm_s = f64::MAX;
     for _ in 0..bc.reps.max(1) {
@@ -139,7 +142,7 @@ fn main() {
     );
     let mut cold_s = f64::MAX;
     for _ in 0..bc.reps.max(1) {
-        let mut cold = mk_session();
+        let cold = mk_session();
         let r = cold.encode(&model, &x).expect("cold encode");
         cold_s = cold_s.min(r.runtime);
     }
@@ -149,6 +152,41 @@ fn main() {
         cold_s,
         cold_s / warm_s.max(1e-12)
     );
+    // Free the warm pool's worker threads before the concurrent section.
+    warm_session.close();
+
+    // ---- concurrent serving: C clients, C distinct observations ------
+    // One shared session (`Session: Clone + Send + Sync`), one thread
+    // per client; each observation has its own resident pool, so the C
+    // requests are independent. Pools are pre-warmed so the measurement
+    // isolates the concurrent warm-serving path (cold spawn cost is
+    // `encode_cold_s` above).
+    let obs: Vec<NdTensor> = (0..4usize)
+        .map(|i| StarfieldConfig::with_size(72, 108).generate(10 + i as u64))
+        .collect();
+    let mut concurrent: Vec<(usize, f64)> = Vec::new();
+    for &c in &[1usize, 2, 4] {
+        let session = mk_session();
+        for xo in &obs[..c] {
+            session.encode(&model, xo).expect("pre-warm encode");
+        }
+        assert_eq!(session.pools_spawned(), c, "one pool per distinct observation");
+        let mut best = f64::MAX;
+        for _ in 0..bc.reps.max(1) {
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|scope| {
+                for xo in &obs[..c] {
+                    let s = session.clone();
+                    let m = &model;
+                    scope.spawn(move || s.encode(m, xo).expect("concurrent encode"));
+                }
+            });
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        assert_eq!(session.pools_spawned(), c, "concurrent encodes must stay warm");
+        println!("encode concurrent: C={c} clients {best:.3}s wall-clock");
+        concurrent.push((c, best));
+    }
 
     let record = Json::obj(vec![
         ("bench", Json::str("cdl_outer")),
@@ -169,6 +207,24 @@ fn main() {
         ("encode_warm_s", Json::Num(warm_s)),
         ("encode_cold_s", Json::Num(cold_s)),
         ("encode_speedup", Json::Num(cold_s / warm_s.max(1e-12))),
+        (
+            // Wall-clock for C parallel clients encoding C distinct
+            // (pre-warmed) observations through one shared session.
+            "encode_concurrent_s",
+            Json::obj(
+                concurrent
+                    .iter()
+                    .map(|(c, s)| {
+                        let key: &'static str = match c {
+                            1 => "c1",
+                            2 => "c2",
+                            _ => "c4",
+                        };
+                        (key, Json::Num(*s))
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "entries",
             Json::Arr(vec![

@@ -64,6 +64,7 @@ impl Dicodile {
             tol: cfg.csc_tol,
             encode_max_iter: DicodileBuilder::default().encode_max_iter,
             backend,
+            max_resident_pools: None,
             dict_cfg: cfg.dict_cfg.clone(),
             init: cfg.init,
             stat_workers: cfg.stat_workers,
@@ -122,6 +123,11 @@ pub struct DicodileBuilder {
     /// Iteration / update cap for `encode` solvers.
     pub(crate) encode_max_iter: usize,
     pub(crate) backend: Backend,
+    /// Residency cap for the session's pool registry: `None` keeps
+    /// every distinct observation resident until `close()` (the PR 3
+    /// behavior); `Some(n)` evicts the least-recently-used pool when a
+    /// call would leave more than `n` resident.
+    pub(crate) max_resident_pools: Option<usize>,
     pub(crate) dict_cfg: PgdConfig,
     pub(crate) init: InitStrategy,
     /// Threads for the teardown-mode φ/ψ map-reduce.
@@ -142,6 +148,7 @@ impl Default for DicodileBuilder {
             tol: base.csc_tol,
             encode_max_iter: 1_000_000,
             backend: Backend::Sequential(Strategy::LocallyGreedy),
+            max_resident_pools: None,
             dict_cfg: base.dict_cfg,
             init: base.init,
             stat_workers: base.stat_workers,
@@ -241,6 +248,21 @@ impl DicodileBuilder {
             }
             _ => self.dicodile(w),
         }
+    }
+
+    /// Bound the session's pool registry: once more than `n` pools
+    /// would be resident after a call completes, the least-recently-used
+    /// ones are shut down (observable via
+    /// [`Session::pools_evicted`](crate::api::Session::pools_evicted)
+    /// and the `evicted` flag on their final
+    /// [`PoolReport`](crate::dicod::pool::PoolReport)). Unbounded by
+    /// default — every distinct observation stays resident until
+    /// `close()`, exactly the pre-eviction behavior. Eviction never
+    /// interrupts a call that is actively driving a pool; an evicted
+    /// observation simply respawns (cold) on its next request.
+    pub fn max_resident_pools(mut self, n: usize) -> Self {
+        self.max_resident_pools = Some(n);
+        self
     }
 
     /// Toggle pool residency on a distributed backend (no-op otherwise).
@@ -422,6 +444,14 @@ mod tests {
         assert_eq!(back.max_iter, cfg.max_iter);
         assert_eq!(back.seed, cfg.seed);
         assert!(matches!(back.solver, Solver::Fista));
+    }
+
+    #[test]
+    fn residency_cap_defaults_to_unbounded() {
+        assert_eq!(Dicodile::builder().max_resident_pools, None);
+        assert_eq!(Dicodile::builder().max_resident_pools(3).max_resident_pools, Some(3));
+        let cfg = CdlConfig::default();
+        assert_eq!(Dicodile::from_cdl_config(&cfg).max_resident_pools, None);
     }
 
     #[test]

@@ -4,18 +4,31 @@
 //! use dicodile::prelude::*;
 //!
 //! let workload = SyntheticConfig::signal_1d(2000, 5, 32).generate(42);
-//! let mut session = Dicodile::builder()
+//! let session = Dicodile::builder()
 //!     .n_atoms(5)
 //!     .atom_dims(&[32])
-//!     .dicodile(4) // DiCoDiLe-Z worker grid, resident pool
+//!     .dicodile(4)            // DiCoDiLe-Z worker grid, resident pools
+//!     .max_resident_pools(64) // optional: LRU-evict beyond 64 tenants
 //!     .build();
 //!
 //! // Fit once...
 //! let model = session.fit(&workload.x).unwrap();
-//! // ...apply many times: same observation geometry -> same warm pool,
-//! // only the dictionary is re-broadcast (no worker respawn).
-//! let code = session.encode(&model, &workload.x).unwrap();
-//! println!("cost {} nnz {}", code.cost, code.z.nnz());
+//! // ...serve many times: every method takes `&self`, and the session
+//! // is `Clone + Send + Sync` — clones share one pool registry, so N
+//! // threads encode N different observations truly in parallel while
+//! // requests for the same observation queue on its pool's lock.
+//! let handles: Vec<_> = (0..4)
+//!     .map(|_| {
+//!         let s = session.clone();
+//!         let m = model.clone();
+//!         let x = workload.x.clone();
+//!         std::thread::spawn(move || s.encode(&m, &x).unwrap())
+//!     })
+//!     .collect();
+//! for h in handles {
+//!     let code = h.join().unwrap();
+//!     println!("cost {} nnz {}", code.cost, code.z.nnz());
+//! }
 //!
 //! // The model handle outlives the session: save, reload, serve.
 //! model.save("model.json").unwrap();
@@ -29,11 +42,15 @@
 //! - [`Dicodile::builder`] ([`builder`]) — one typed builder for the
 //!   knobs the legacy `CdlConfig` / `BatchCdlConfig` / `EncodeConfig`
 //!   triplicated, with `.dicodile(w)` / `.dicod(w)` / `.sequential()`
-//!   presets.
-//! - [`Session`] ([`session`]) — owns resident [`WorkerPool`]s keyed by
-//!   problem geometry and reuses them across `fit` / `fit_corpus` /
-//!   `encode` calls (`SetDict` instead of respawn when only the
-//!   dictionary changed).
+//!   presets and the [`max_resident_pools`] residency policy.
+//! - [`Session`] ([`session`]) — a **shared** registry of resident
+//!   [`WorkerPool`]s keyed by observation identity + dictionary
+//!   geometry. Every method takes `&self`; the handle is
+//!   `Clone + Send + Sync` (cheap `Arc` clone, clones share registry
+//!   and counters). Warm reuse across `fit` / `fit_corpus` / `encode`
+//!   (`SetDict` instead of respawn when only the dictionary changed),
+//!   per-pool locking for concurrent serving, optional LRU eviction,
+//!   and interleaved per-signal solves in `fit_corpus`.
 //! - [`TrainedModel`] ([`model`]) — the fit-once / apply-many handle:
 //!   `encode`, `reconstruct`, `denoise`, JSON `save` / `load`.
 //!
@@ -42,6 +59,20 @@
 //! wrappers that build a one-shot session, so existing callers behave
 //! exactly as before.
 //!
+//! ## Behavior notes
+//!
+//! - The residency cap default is **unbounded** — without
+//!   [`max_resident_pools`] every distinct observation stays resident
+//!   until [`Session::close`], exactly the pre-eviction behavior.
+//!   Eviction is observable via [`Session::pools_evicted`] /
+//!   [`Session::evicted_pool_reports`] (reports flagged
+//!   `evicted: true`).
+//! - Since the config unification, `BatchCdlConfig` is an alias of
+//!   `CdlConfig`, so `BatchCdlConfig::default().max_iter` is **30**
+//!   (the old standalone batch struct said 20). Set `max_iter`
+//!   explicitly if the previous cap mattered.
+//!
+//! [`max_resident_pools`]: DicodileBuilder::max_resident_pools
 //! [`WorkerPool`]: crate::dicod::pool::WorkerPool
 
 pub mod builder;

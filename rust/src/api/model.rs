@@ -10,7 +10,10 @@
 //! session needed), plus JSON [`save`](TrainedModel::save) /
 //! [`load`](TrainedModel::load) so a model trained in one process can
 //! serve encode requests in another. For distributed application on a
-//! warm pool, pass the model to [`Session::encode`].
+//! warm pool, pass the model to [`Session::encode`] — it takes `&self`
+//! and the session is `Clone + Send + Sync`, so one loaded model plus
+//! one session can serve concurrent encode requests from many threads
+//! (the Hubble-denoising serving workload).
 //!
 //! [`Session::encode`]: crate::api::session::Session::encode
 

@@ -11,13 +11,20 @@
 //!
 //! - **Per-signal resident pools** (persistent distributed backend):
 //!   every signal gets its own [`WorkerPool`] kept alive across the
-//!   whole alternation. Each outer iteration solves pool by pool
-//!   (warm from each pool's resident Z), reduces the φ/ψ partials
-//!   *across pools* into one dictionary update, and `SetDict`
-//!   re-broadcasts the accepted dictionary to every pool. No signal's
-//!   Z is centralized until the final per-signal gather — this closes
-//!   the "batch CDL on resident pools" follow-up from the persistent
-//!   runtime work.
+//!   whole alternation. Each outer iteration drives the per-pool
+//!   `Solve` supervision loops **interleaved** — one supervisor thread
+//!   per pool, so corpus signals overlap instead of queuing — and each
+//!   pool's φ/ψ partials are computed the moment its own solve
+//!   finishes (no cross-pool barrier between the two phases). The
+//!   partials are then reduced in signal order (deterministic
+//!   summation regardless of completion order) into one dictionary
+//!   update, and `SetDict` re-broadcasts the accepted dictionary to
+//!   every pool. No signal's Z is centralized until the final
+//!   per-signal gather — this closes the "batch CDL on resident
+//!   pools" and "interleave the per-pool Solve supervision loops"
+//!   follow-ups from the persistent runtime work.
+//!   (`IterRecord.csc_time` covers the whole interleaved solve+stats
+//!   phase; `dict_time` is the reduce + PGD step.)
 //! - **Teardown** (sequential, or distributed with `persistent:
 //!   false`): one warm-started one-shot solve per signal per
 //!   iteration, statistics recomputed from the gathered activations.
@@ -118,6 +125,13 @@ pub(crate) fn prepare_corpus(
 /// Resident-pool corpus alternation: one already-running pool per
 /// signal, all holding `(X_n, d0, lambda)`. Pools are left alive for
 /// the caller (the session keeps them resident).
+///
+/// The per-signal `Solve` supervision loops run interleaved on scoped
+/// threads — the paper's W-worker grid parallelism lives *inside* each
+/// pool, and the supervision loops (cheap message pumps) overlap across
+/// pools — with each pool's φ/ψ partials computed as soon as its solve
+/// completes. Reduction happens in signal order after the join so the
+/// summation, and hence the trace, is deterministic.
 pub(crate) fn learn_batch_on_pools(
     pools: &mut [&mut WorkerPool],
     cfg: &CdlConfig,
@@ -130,38 +144,72 @@ pub(crate) fn learn_batch_on_pools(
     let mut converged = false;
 
     for it in 0..cfg.max_iter {
-        // ---- CSC per signal: each pool warm-restarts from its resident Z.
-        // Pools are driven one at a time — the paper's W-worker grid
-        // parallelism lives *inside* each pool.
+        // ---- interleaved per-signal phase: Solve then ComputeStats,
+        // one supervisor thread per pool, no barrier between the two.
+        // Panics (a wedged grid past its fail-loudly deadline) are
+        // consumed at the manual join — the wedged pool is *abandoned*
+        // (joining it would hang) and the iteration returns `Err`, so
+        // one bad signal cannot poison the caller's other slot locks.
         let t0 = Instant::now();
-        for (n, pool) in pools.iter_mut().enumerate() {
-            let phase = pool.solve();
-            anyhow::ensure!(
-                !phase.diverged,
-                "distributed CSC diverged on corpus signal {n} at outer iteration {it}"
-            );
-        }
+        let joined: Vec<std::thread::Result<anyhow::Result<(DictStats, usize)>>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = pools
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(n, pool)| {
+                        scope.spawn(move || {
+                            let phase = pool.solve();
+                            anyhow::ensure!(
+                                !phase.diverged,
+                                "distributed CSC diverged on corpus signal {n} at outer iteration {it}"
+                            );
+                            Ok(pool.compute_stats())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join()).collect()
+            });
         let csc_time = t0.elapsed().as_secs_f64();
 
-        // ---- one dictionary update from partials reduced across pools.
-        // The objective is linear in (phi, psi, ||X||^2, ||Z||_1), so
-        // summing per-signal statistics yields the corpus objective.
+        // ---- one dictionary update from partials reduced across pools,
+        // in signal order. The objective is linear in (phi, psi,
+        // ||X||^2, ||Z||_1), so summing per-signal statistics yields
+        // the corpus objective.
         let t1 = Instant::now();
         let mut agg: Option<DictStats> = None;
         let mut nnz = 0usize;
-        for pool in pools.iter_mut() {
-            let (s, n) = pool.compute_stats();
-            nnz += n;
-            agg = Some(match agg {
-                None => s,
-                Some(mut a) => {
-                    a.phi.add_assign(&s.phi);
-                    a.psi.add_assign(&s.psi);
-                    a.x_norm_sq += s.x_norm_sq;
-                    a.z_l1 += s.z_l1;
-                    a
+        let mut first_err: Option<anyhow::Error> = None;
+        for (n, r) in joined.into_iter().enumerate() {
+            match r {
+                Ok(Ok((s, z_nnz))) => {
+                    nnz += z_nnz;
+                    agg = Some(match agg {
+                        None => s,
+                        Some(mut a) => {
+                            a.phi.add_assign(&s.phi);
+                            a.psi.add_assign(&s.psi);
+                            a.x_norm_sq += s.x_norm_sq;
+                            a.z_l1 += s.z_l1;
+                            a
+                        }
+                    });
                 }
-            });
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    pools[n].abandon();
+                    first_err.get_or_insert_with(|| {
+                        anyhow::anyhow!(
+                            "corpus supervisor for signal {n} panicked at outer iteration {it} \
+                             (worker grid wedged); pool abandoned"
+                        )
+                    });
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         let stats = agg.expect("corpus is non-empty");
         let cost_after_csc = cost_from_stats(&stats, &d, lambda);
@@ -197,20 +245,55 @@ pub(crate) fn learn_batch_on_pools(
         //      workers re-bootstrap beta warm from their resident Z.
         //      One engine per broadcast round: its clones share the
         //      spectra cache, so the new dictionary's spectra are
-        //      computed once, not once per signal.
+        //      computed once, not once per signal. Broadcasts overlap
+        //      across pools (each blocks on its own per-worker acks).
         let corr = crate::conv::CorrEngine::new(d.clone());
-        for (pool, x) in pools.iter_mut().zip(&x_arcs) {
-            pool.set_dict(Arc::new(CscProblem::with_engine(
-                x.clone(),
-                d.clone(),
-                lambda,
-                corr.clone(),
-            )));
+        let acks: Vec<std::thread::Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pools
+                .iter_mut()
+                .zip(&x_arcs)
+                .map(|(pool, x)| {
+                    let problem = Arc::new(CscProblem::with_engine(
+                        x.clone(),
+                        d.clone(),
+                        lambda,
+                        corr.clone(),
+                    ));
+                    scope.spawn(move || pool.set_dict(problem))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        for (n, a) in acks.iter().enumerate() {
+            if a.is_err() {
+                pools[n].abandon();
+            }
         }
+        anyhow::ensure!(
+            acks.iter().all(|a| a.is_ok()),
+            "corpus SetDict broadcast panicked at outer iteration {it} (wedged pool abandoned)"
+        );
     }
 
-    // The single per-signal centralization of the run.
-    let zs: Vec<NdTensor> = pools.iter_mut().map(|p| p.gather()).collect();
+    // The single per-signal centralization of the run (gathers overlap
+    // across pools; results land in signal order).
+    let gathered: Vec<std::thread::Result<NdTensor>> = std::thread::scope(|scope| {
+        let handles: Vec<_> =
+            pools.iter_mut().map(|pool| scope.spawn(move || pool.gather())).collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let mut zs: Vec<NdTensor> = Vec::with_capacity(gathered.len());
+    let mut gather_panic = false;
+    for (n, g) in gathered.into_iter().enumerate() {
+        match g {
+            Ok(z) => zs.push(z),
+            Err(_) => {
+                pools[n].abandon();
+                gather_panic = true;
+            }
+        }
+    }
+    anyhow::ensure!(!gather_panic, "corpus gather panicked (wedged pool abandoned)");
     let reports: Vec<PoolReport> = pools.iter().map(|p| p.report()).collect();
 
     Ok(BatchCdlResult {

@@ -135,6 +135,7 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
                 workers_spawned: r.n_workers,
                 stats: r.stats,
                 per_worker: r.per_worker,
+                evicted: false,
             };
             EncodeResult {
                 cost: problem.cost(&r.z),

@@ -62,6 +62,10 @@ pub struct PoolReport {
     /// Aggregated cumulative worker counters.
     pub stats: WorkerStats,
     pub per_worker: Vec<WorkerStats>,
+    /// Set by the owning session when this pool was shut down by the
+    /// LRU residency policy (`max_resident_pools`); always `false` on a
+    /// report taken from a live pool.
+    pub evicted: bool,
 }
 
 /// Resident worker-pool session over one `CscProblem` domain.
@@ -188,6 +192,7 @@ impl WorkerPool {
             workers_spawned: self.workers_spawned,
             stats: self.aggregate_stats(),
             per_worker: self.per_worker.clone(),
+            evicted: false,
         }
     }
 
@@ -411,6 +416,21 @@ impl WorkerPool {
             }
         }
         z
+    }
+
+    /// Tell the workers to exit and detach their threads without
+    /// joining. For pools whose phase state is unknown (e.g. a
+    /// supervision panic poisoned the owning session lock): a wedged
+    /// worker never reads its inbox, so joining could hang — the exit
+    /// message is best-effort and the handles are dropped. Idempotent
+    /// with [`shutdown`](WorkerPool::shutdown).
+    pub(crate) fn abandon(&mut self) {
+        if self.down {
+            return;
+        }
+        self.down = true;
+        self.broadcast(WorkerMsg::Shutdown);
+        self.handles.clear();
     }
 
     /// Stop the workers and join their threads. Idempotent; also runs

@@ -17,7 +17,13 @@
 //! driven through `Solve -> ComputeStats -> SetDict -> Gather` phases;
 //! [`cdl`] runs the alternating minimization (distributed CSC +
 //! sufficient-statistics PGD dictionary updates) on top of it; and
-//! [`api`] is the public facade that owns pool residency across calls.
+//! [`api`] is the **shared serving facade**: a `Clone + Send + Sync`
+//! [`api::Session`] holding a registry of resident pools behind
+//! interior synchronization (an `RwLock` registry of per-observation
+//! `Mutex` slots), so every method takes `&self`, clones of one
+//! session serve concurrent encode requests on independent pools, a
+//! configurable LRU policy bounds residency for many-tenant servers,
+//! and corpus fits drive their per-signal solve loops interleaved.
 //! Batch-heavy algebra can optionally be offloaded to AOT-compiled
 //! JAX/Pallas artifacts executed through the PJRT CPU client
 //! ([`runtime`], behind the `pjrt` feature), with native fallbacks for
@@ -26,8 +32,9 @@
 //! ## Quickstart
 //!
 //! The primary entry point is the session facade: one builder, a
-//! [`api::Session`] whose worker pools stay warm across calls, and a
-//! [`api::TrainedModel`] you fit once and apply many times.
+//! shareable [`api::Session`] whose worker pools stay warm across
+//! calls (and across threads), and a [`api::TrainedModel`] you fit
+//! once and apply many times.
 //!
 //! ```no_run
 //! use dicodile::prelude::*;
@@ -36,13 +43,15 @@
 //! let workload = SyntheticConfig::signal_1d(2000, 5, 32).generate(42);
 //!
 //! // One builder for every knob; presets pick the backend.
-//! let mut session = Dicodile::builder()
+//! let session = Dicodile::builder()
 //!     .n_atoms(5)
 //!     .atom_dims(&[32])
-//!     .dicodile(4) // DiCoDiLe-Z grid, pool resident across calls
+//!     .dicodile(4) // DiCoDiLe-Z grid, pools resident across calls
 //!     .build();
 //!
 //! // Fit once; encode on the same warm pool (no worker respawn).
+//! // `Session` is Clone + Send + Sync: hand clones to server threads
+//! // and encode different observations truly in parallel.
 //! let model = session.fit(&workload.x).unwrap();
 //! let code = session.encode(&model, &workload.x).unwrap();
 //! println!("final cost {} nnz {}", code.cost, code.z.nnz());

@@ -1,12 +1,14 @@
 //! `dicodile` — command-line launcher for the DiCoDiLe system.
 //!
 //! Subcommands (all routed through the `api` session facade):
-//!   csc        sparse-code a (generated) workload with a chosen solver;
-//!              `--model path.json` encodes against a saved trained model
-//!   learn      full CDL on a synthetic / starfield / texture workload;
-//!              `--save-model path.json` persists the trained model
-//!   info       print artifact manifest + build information
-//!   gen        generate a workload image and save it (.ndt / .pgm)
+//!   csc         sparse-code a (generated) workload with a chosen solver;
+//!               `--model path.json` encodes against a saved trained model
+//!   learn       full CDL on a synthetic / starfield / texture workload;
+//!               `--save-model path.json` persists the trained model
+//!   serve-bench concurrent-serving benchmark: N clients encode N distinct
+//!               observations through clones of ONE shared session
+//!   info        print artifact manifest + build information
+//!   gen         generate a workload image and save it (.ndt / .pgm)
 //!
 //! Run `dicodile <subcommand> --help` for options.
 
@@ -29,6 +31,7 @@ fn main() {
     let code = match sub.as_str() {
         "csc" => cmd_csc(rest),
         "learn" => cmd_learn(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "info" => cmd_info(rest),
         "gen" => cmd_gen(rest),
         "help" | "--help" | "-h" => {
@@ -47,11 +50,13 @@ fn main() {
 fn print_help() {
     println!(
         "dicodile — Distributed Convolutional Dictionary Learning\n\n\
-         USAGE: dicodile <csc|learn|info|gen> [options]\n\n\
+         USAGE: dicodile <csc|learn|serve-bench|info|gen> [options]\n\n\
          csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod;\n\
                 --model loads a saved trained model)\n\
          learn  learn a dictionary (workloads: synthetic, starfield, texture;\n\
                 --save-model persists the trained model)\n\
+         serve-bench  concurrent encode serving: --clients N threads share one session\n\
+                (--model serves a saved model; --max-resident caps pool residency)\n\
          info   show artifact manifest and build info\n\
          gen    generate a workload and save it to disk"
     );
@@ -136,7 +141,7 @@ fn cmd_csc(tokens: Vec<String>) -> i32 {
             return 2;
         }
     };
-    let mut session = builder.build();
+    let session = builder.build();
     let r = match session.encode(&model, &w.x) {
         Ok(r) => r,
         Err(e) => {
@@ -198,7 +203,7 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
         .seed(a.get_u64("seed"))
         .verbose(a.has_flag("verbose"));
     builder = if workers > 0 { builder.dicodile(workers) } else { builder.sequential() };
-    let mut session = builder.build();
+    let session = builder.build();
     match session.fit_result(&x) {
         Ok(r) => {
             print!("{}", report::trace_table(&r));
@@ -235,6 +240,146 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+/// Concurrent-serving benchmark: one shared `Session` (the registry of
+/// resident pools lives behind interior synchronization), cloned into
+/// `--clients` threads that each encode their own distinct observation
+/// `--requests` times. The sequential baseline issues the exact same
+/// requests one at a time through an identically-configured session, so
+/// the reported speedup isolates the concurrency of the serving layer.
+fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile serve-bench", "concurrent encode serving benchmark")
+        .opt("model", None, "trained model JSON (from `learn --save-model`); must be 1-D single-channel. Without it a small model is trained in-process")
+        .opt("clients", Some("4"), "concurrent clients, one distinct observation each")
+        .opt("requests", Some("3"), "encode requests per client")
+        .opt("workers", Some("2"), "grid workers per resident pool")
+        .opt("t", Some("4000"), "1-D observation length")
+        .opt("max-resident", Some("0"), "max resident pools, LRU-evicted beyond (0 = unbounded)")
+        .opt("reg", Some("0.1"), "lambda fraction for the in-process model")
+        .opt("seed", Some("0"), "rng seed");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let clients = a.get_usize("clients").max(1);
+    let requests = a.get_usize("requests").max(1);
+    let workers = a.get_usize("workers").max(1);
+    let t = a.get_usize("t");
+    let seed = a.get_u64("seed");
+    let (k, l) = (5usize, 32usize);
+
+    let model = match a.get("model") {
+        Some(path) => match TrainedModel::load(path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("cannot load model: {e}");
+                return 1;
+            }
+        },
+        None => {
+            // Train a small model in-process so the bench is self-contained.
+            let w = SyntheticConfig::paper_1d(t, k, l).generate(seed);
+            let trainer = Dicodile::builder()
+                .n_atoms(k)
+                .atom_dims(&[l])
+                .lambda_frac(a.get_f64("reg"))
+                .max_iter(5)
+                .seed(seed)
+                .dicodile(workers)
+                .build();
+            match trainer.fit(&w.x) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("in-process fit failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    };
+    if model.n_channels() != 1 || model.atom_dims().len() != 1 {
+        eprintln!(
+            "model dictionary {:?} is not 1-D single-channel; serve-bench generates 1-D workloads",
+            model.d.dims()
+        );
+        return 2;
+    }
+
+    // One distinct observation per client (distinct pools -> the
+    // requests are independent and may run truly in parallel).
+    let xs: Vec<NdTensor> = (0..clients)
+        .map(|c| SyntheticConfig::paper_1d(t, k, model.atom_dims()[0]).generate(seed + 100 + c as u64).x)
+        .collect();
+
+    let mk_session = || {
+        let b = Dicodile::builder().tol(1e-4).seed(seed).dicodile(workers);
+        match a.get_usize("max-resident") {
+            0 => b,
+            n => b.max_resident_pools(n),
+        }
+        .build()
+    };
+
+    // Sequential baseline: same requests, one at a time.
+    let seq_session = mk_session();
+    let t0 = std::time::Instant::now();
+    for x in &xs {
+        for _ in 0..requests {
+            if let Err(e) = seq_session.encode(&model, x) {
+                eprintln!("encode failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let seq_s = t0.elapsed().as_secs_f64();
+    // Free the baseline's resident worker threads before timing the
+    // concurrent run, so the measurement isolates the serving layer.
+    seq_session.close();
+
+    // Concurrent: clones of one shared session, one thread per client.
+    let session = mk_session();
+    let t1 = std::time::Instant::now();
+    let failed = std::thread::scope(|scope| {
+        let handles: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let s = session.clone();
+                let m = &model;
+                scope.spawn(move || {
+                    for _ in 0..requests {
+                        if let Err(e) = s.encode(m, x) {
+                            eprintln!("concurrent encode failed: {e}");
+                            return true;
+                        }
+                    }
+                    false
+                })
+            })
+            .collect();
+        handles.into_iter().any(|h| h.join().unwrap_or(true))
+    });
+    if failed {
+        return 1;
+    }
+    let par_s = t1.elapsed().as_secs_f64();
+
+    println!(
+        "serve-bench: clients={clients} requests={requests} workers/pool={workers} T={t} \
+         max_resident={}",
+        a.get_usize("max-resident")
+    );
+    println!(
+        "  sequential {seq_s:.3}s  concurrent {par_s:.3}s  speedup {:.2}x",
+        seq_s / par_s.max(1e-12)
+    );
+    println!(
+        "  session: pools_spawned={} warm_starts={} pools_evicted={} resident={}",
+        session.pools_spawned(),
+        session.warm_starts(),
+        session.pools_evicted(),
+        session.n_resident_pools()
+    );
+    0
 }
 
 fn cmd_info(_tokens: Vec<String>) -> i32 {

@@ -1,0 +1,289 @@
+//! Concurrency tests for the shared-session serving model:
+//!
+//! (a) `Session: Clone + Send + Sync` — N threads encoding N *distinct*
+//!     observations through clones of one session run on independent
+//!     resident pools, and the results are bit-identical to the
+//!     sequential encode path (the sequential pass re-reads each pool's
+//!     resident fixed point: zero further updates, identical gather),
+//! (b) concurrent requests for the *same* observation serialize on that
+//!     pool's entry lock without deadlock — one cold spawn, the rest
+//!     warm no-ops returning the identical fixed point,
+//! (c) `max_resident_pools(n)` evicts the least-recently-used pool
+//!     (observable via `pools_evicted` / `evicted_pool_reports`) and an
+//!     evicted observation respawns correctly on its next request,
+//! (d) `close()` is idempotent, safe with outstanding clones, and never
+//!     double-joins a pool already torn down by eviction.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! per-pool worker counts — `scripts/tier1.sh` runs this suite once per
+//! count.
+
+use dicodile::api::{Dicodile, Session, TrainedModel};
+use dicodile::csc::encode::EncodeConfig;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::tensor::NdTensor;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn workload_1d(seed: u64, t: usize) -> NdTensor {
+    let mut gen = SyntheticConfig::signal_1d(t, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    gen.generate(seed).x
+}
+
+fn toy_model(seed: u64) -> TrainedModel {
+    let gen = SyntheticConfig::signal_1d(400, 2, 8).generate(seed);
+    TrainedModel::from_dictionary(gen.d_true, 0.1)
+}
+
+#[test]
+fn session_is_clone_send_sync() {
+    fn assert_traits<T: Clone + Send + Sync + 'static>() {}
+    assert_traits::<Session>();
+}
+
+// ---------------------------------------------------------------------------
+// (a) distinct observations in parallel == sequential, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_distinct_encodes_match_sequential_bitwise() {
+    let model = toy_model(90);
+    let xs: Vec<NdTensor> = (0..4).map(|i| workload_1d(91 + i, 400)).collect();
+    for w in worker_counts() {
+        let session = Dicodile::builder().tol(1e-6).seed(90).dicodile(w).build();
+        // Concurrent pass: one thread per observation, all through
+        // clones of the one session.
+        let zs_par: Vec<NdTensor> = std::thread::scope(|scope| {
+            let handles: Vec<_> = xs
+                .iter()
+                .map(|x| {
+                    let s = session.clone();
+                    let m = &model;
+                    scope.spawn(move || s.encode(m, x).unwrap().z)
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(session.pools_spawned(), xs.len(), "W={w}: one pool per observation");
+        assert_eq!(session.warm_starts(), 0, "W={w}");
+        assert_eq!(session.n_resident_pools(), xs.len(), "W={w}");
+
+        // Sequential pass over the SAME session: each pool sits at its
+        // fixed point, so the sequential path re-solves with zero
+        // updates and gathers the identical resident Z — concurrent and
+        // sequential serving must agree bit for bit.
+        for (x, z_par) in xs.iter().zip(&zs_par) {
+            let r = session.encode(&model, x).unwrap();
+            assert!(
+                r.z.allclose(z_par, 0.0),
+                "W={w}: concurrent vs sequential encode must be bit-identical"
+            );
+        }
+        assert_eq!(session.pools_spawned(), xs.len(), "W={w}: sequential pass stayed warm");
+        assert_eq!(session.warm_starts(), xs.len(), "W={w}");
+
+        // Cross-check against an independent sequential solver: both
+        // solve the same lasso, so the objectives agree within solver
+        // tolerance.
+        for (x, z_par) in xs.iter().zip(&zs_par) {
+            let r = session.encode(&model, x).unwrap();
+            assert!(r.z.allclose(z_par, 0.0), "W={w}");
+            let seq = model.encode_with(x, &EncodeConfig { tol: 1e-8, ..Default::default() });
+            assert!(
+                (r.cost - seq.cost).abs() < 1e-4 * (1.0 + seq.cost.abs()),
+                "W={w}: pool encode {} vs sequential {}",
+                r.cost,
+                seq.cost
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) same-observation contention serializes without deadlock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_observation_contention_serializes_without_deadlock() {
+    let model = toy_model(95);
+    let x = workload_1d(96, 400);
+    for w in worker_counts() {
+        let session = Dicodile::builder().tol(1e-6).seed(95).dicodile(w).build();
+        let zs: Vec<NdTensor> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let s = session.clone();
+                    let (m, xr) = (&model, &x);
+                    scope.spawn(move || s.encode(m, xr).unwrap().z)
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Exactly one cold spawn; the other three queued on the entry
+        // lock and were served warm (unchanged model -> no-op solves).
+        assert_eq!(session.pools_spawned(), 1, "W={w}");
+        assert_eq!(session.warm_starts(), 3, "W={w}");
+        assert_eq!(session.n_resident_pools(), 1, "W={w}");
+        for z in &zs[1..] {
+            assert!(
+                z.allclose(&zs[0], 0.0),
+                "W={w}: serialized same-observation encodes must agree bitwise"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) LRU eviction + respawn
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lru_eviction_respawns_evicted_pools() {
+    let model = toy_model(97);
+    let xs: Vec<NdTensor> = (0..3).map(|i| workload_1d(98 + i, 400)).collect();
+    for w in worker_counts() {
+        let session = Dicodile::builder()
+            .tol(1e-6)
+            .seed(97)
+            .max_resident_pools(2)
+            .dicodile(w)
+            .build();
+        let r0 = session.encode(&model, &xs[0]).unwrap();
+        session.encode(&model, &xs[1]).unwrap();
+        assert_eq!(session.pools_evicted(), 0, "W={w}: under the cap, nothing evicts");
+        assert_eq!(session.n_resident_pools(), 2, "W={w}");
+
+        // Third observation: xs[0]'s pool is least-recently-used.
+        session.encode(&model, &xs[2]).unwrap();
+        assert_eq!(session.pools_evicted(), 1, "W={w}");
+        assert_eq!(session.n_resident_pools(), 2, "W={w}");
+        assert_eq!(session.pools_spawned(), 3, "W={w}");
+        let ev = session.evicted_pool_reports();
+        assert_eq!(ev.len(), 1, "W={w}");
+        assert!(ev[0].evicted, "W={w}: eviction reports carry the evicted flag");
+        assert_eq!(ev[0].workers_spawned, ev[0].n_workers, "W={w}");
+
+        // Re-encoding the evicted observation respawns it cold (now
+        // evicting xs[1], the current LRU) and reproduces the solve.
+        let r0b = session.encode(&model, &xs[0]).unwrap();
+        assert_eq!(session.pools_spawned(), 4, "W={w}: evicted pool respawns");
+        assert_eq!(session.pools_evicted(), 2, "W={w}");
+        assert_eq!(session.warm_starts(), 0, "W={w}");
+        assert!(
+            (r0b.cost - r0.cost).abs() < 1e-5 * (1.0 + r0.cost.abs()),
+            "W={w}: respawned encode {} vs original {}",
+            r0b.cost,
+            r0.cost
+        );
+        if w == 1 {
+            // A single-worker grid is deterministic: the respawned cold
+            // solve is bit-identical to the first one.
+            assert!(r0b.z.allclose(&r0.z, 0.0), "W={w}");
+        }
+
+        // The most recent pool is still warm.
+        session.encode(&model, &xs[0]).unwrap();
+        assert_eq!(session.warm_starts(), 1, "W={w}");
+        assert_eq!(session.pools_spawned(), 4, "W={w}");
+    }
+}
+
+#[test]
+fn unbounded_registry_never_evicts() {
+    let model = toy_model(105);
+    let xs: Vec<NdTensor> = (0..3).map(|i| workload_1d(106 + i, 300)).collect();
+    let session = Dicodile::builder().tol(1e-5).seed(105).dicodile(2).build();
+    for x in &xs {
+        session.encode(&model, x).unwrap();
+    }
+    assert_eq!(session.pools_evicted(), 0);
+    assert_eq!(session.n_resident_pools(), 3);
+    assert!(session.evicted_pool_reports().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// (d) close / drop with clones and eviction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn close_after_eviction_never_double_joins() {
+    let model = toy_model(110);
+    let xs: Vec<NdTensor> = (0..3).map(|i| workload_1d(111 + i, 300)).collect();
+    let session = Dicodile::builder()
+        .tol(1e-5)
+        .seed(110)
+        .max_resident_pools(1)
+        .dicodile(2)
+        .build();
+    let clone = session.clone();
+    for x in &xs {
+        session.encode(&model, x).unwrap();
+    }
+    assert_eq!(session.pools_evicted(), 2);
+    assert_eq!(session.n_resident_pools(), 1);
+    // close() must join only the surviving pool — the evicted ones were
+    // taken out of their slots at eviction time.
+    clone.close();
+    assert_eq!(session.n_resident_pools(), 0);
+    clone.close(); // idempotent
+    session.close(); // and safe from the other clone
+    // Still serviceable afterwards.
+    let r = session.encode(&model, &xs[2]).unwrap();
+    assert!(r.cost.is_finite());
+    assert_eq!(session.n_resident_pools(), 1);
+    drop(session);
+    // Dropping the last clone tears the remaining pool down (the test
+    // passing without a hang or panic is the assertion).
+    drop(clone);
+}
+
+#[test]
+fn concurrent_encodes_under_a_tight_cap_stay_correct() {
+    // Cap below the client count: pools are evicted between requests,
+    // so some requests respawn cold — results must stay correct and
+    // nothing may deadlock.
+    let model = toy_model(115);
+    let xs: Vec<NdTensor> = (0..4).map(|i| workload_1d(116 + i, 300)).collect();
+    let session = Dicodile::builder()
+        .tol(1e-6)
+        .seed(115)
+        .max_resident_pools(2)
+        .dicodile(2)
+        .build();
+    let costs: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let s = session.clone();
+                let m = &model;
+                scope.spawn(move || s.encode(m, x).unwrap().cost)
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (x, &cost) in xs.iter().zip(&costs) {
+        let seq = model.encode_with(x, &EncodeConfig { tol: 1e-8, ..Default::default() });
+        assert!(
+            (cost - seq.cost).abs() < 1e-4 * (1.0 + seq.cost.abs()),
+            "capped concurrent encode {} vs sequential {}",
+            cost,
+            seq.cost
+        );
+    }
+    // The steady state respects the cap (in-flight calls may transiently
+    // exceed it, but by return time at most `cap` pools are resident).
+    assert!(session.n_resident_pools() <= 2);
+    assert_eq!(session.pools_spawned(), 4);
+}

@@ -60,7 +60,7 @@ fn builder_fit_matches_legacy_sequential_exactly() {
         ..Default::default()
     };
     let legacy = learn_dictionary(&x, &cfg).unwrap();
-    let mut session = Dicodile::builder()
+    let session = Dicodile::builder()
         .n_atoms(2)
         .atom_dims(&[8])
         .max_iter(4)
@@ -98,7 +98,7 @@ fn builder_fit_matches_legacy_distributed() {
             ..Default::default()
         };
         let legacy = learn_dictionary(&x, &cfg).unwrap();
-        let mut session = Dicodile::builder()
+        let session = Dicodile::builder()
             .n_atoms(2)
             .atom_dims(&[8])
             .max_iter(4)
@@ -135,7 +135,7 @@ fn fit_then_encodes_run_on_one_resident_pool() {
     let x = workload_1d(53, 500);
     let iters = 3u64;
     for w in worker_counts() {
-        let mut session = Dicodile::builder()
+        let session = Dicodile::builder()
             .n_atoms(2)
             .atom_dims(&[8])
             .max_iter(iters as usize)
@@ -195,7 +195,7 @@ fn fit_then_encodes_run_on_one_resident_pool() {
 fn different_observation_spawns_a_second_pool() {
     let xa = workload_1d(54, 400);
     let xb = workload_1d(55, 400); // same geometry, different values
-    let mut session = Dicodile::builder()
+    let session = Dicodile::builder()
         .n_atoms(2)
         .atom_dims(&[8])
         .max_iter(2)
@@ -227,7 +227,7 @@ fn fit_corpus_keeps_one_pool_per_signal() {
     let xs = vec![workload_1d(56, 400), workload_1d(57, 400), workload_1d(58, 300)];
     let iters = 3u64;
     for w in worker_counts() {
-        let mut session = Dicodile::builder()
+        let session = Dicodile::builder()
             .n_atoms(2)
             .atom_dims(&[8])
             .max_iter(iters as usize)
@@ -266,6 +266,58 @@ fn fit_corpus_keeps_one_pool_per_signal() {
 }
 
 #[test]
+fn post_corpus_encode_hits_warm_pool() {
+    // The corpus pools stay resident after `fit_corpus`; encoding one
+    // of the training signals must reuse its warm pool (SetDict, no
+    // respawn) — warm_starts increments, pools_spawned does not.
+    let xs = vec![workload_1d(64, 400), workload_1d(65, 400)];
+    let iters = 3u64;
+    for w in worker_counts() {
+        let session = Dicodile::builder()
+            .n_atoms(2)
+            .atom_dims(&[8])
+            .max_iter(iters as usize)
+            .nu(0.0)
+            .tol(1e-5)
+            .lambda_frac(0.05)
+            .seed(64)
+            .dicodile(w)
+            .build();
+        let model = session.fit_corpus(&xs).unwrap();
+        assert_eq!(session.pools_spawned(), xs.len(), "W={w}");
+        assert_eq!(session.warm_starts(), 0, "W={w}");
+
+        let r = session.encode(&model, &xs[1]).unwrap();
+        assert!(r.converged, "W={w}");
+        assert_eq!(
+            session.pools_spawned(),
+            xs.len(),
+            "W={w}: post-corpus encode must reuse the corpus pool"
+        );
+        assert_eq!(session.warm_starts(), 1, "W={w}");
+        assert_eq!(session.n_resident_pools(), xs.len(), "W={w}");
+        // The reused pool served `iters` corpus solves plus the encode,
+        // gathered once for the corpus and once for the encode, and its
+        // workers were never respawned.
+        let report = r.pool.expect("resident encode records pool provenance");
+        let wt = report.n_workers as u64;
+        assert_eq!(report.workers_spawned, report.n_workers, "W={w}");
+        assert_eq!(report.stats.solves, wt * (iters + 1), "W={w}");
+        assert_eq!(report.stats.gathers, 2 * wt, "W={w}");
+        assert_eq!(report.stats.beta_cold_inits, wt, "W={w}");
+
+        // The encode agrees with the model's sequential encode.
+        let seq = model.encode_with(&xs[1], &EncodeConfig { tol: 1e-8, ..Default::default() });
+        assert!(
+            (r.cost - seq.cost).abs() < 1e-4 * (1.0 + seq.cost.abs()),
+            "W={w}: corpus-pool encode {} vs sequential {}",
+            r.cost,
+            seq.cost
+        );
+    }
+}
+
+#[test]
 fn legacy_batch_entry_point_honors_persistent_backends() {
     // `learn_dictionary_batch` (one-shot facade delegation) must use
     // per-signal resident pools when the config asks for persistence —
@@ -297,7 +349,7 @@ fn legacy_batch_entry_point_honors_persistent_backends() {
 #[test]
 fn model_save_load_encode_equivalence() {
     let x = workload_1d(61, 500);
-    let mut session = Dicodile::builder()
+    let session = Dicodile::builder()
         .n_atoms(2)
         .atom_dims(&[8])
         .max_iter(4)
@@ -343,7 +395,7 @@ fn sparse_encode_matches_session_encode() {
     assert!(legacy.pool.is_none());
 
     let model = TrainedModel::from_dictionary(gen.d_true.clone(), 0.1);
-    let mut session = Dicodile::builder().tol(1e-8).sequential().build();
+    let session = Dicodile::builder().tol(1e-8).sequential().build();
     let facade = session.encode(&model, &gen.x).unwrap();
     assert_eq!(legacy.lambda, facade.lambda);
     assert_eq!(legacy.cost, facade.cost);

@@ -17,10 +17,14 @@ cargo build --release --benches
 # (Solve -> ComputeStats -> SetDict -> Gather) must hold for the
 # degenerate single-worker grid and for multi-worker line/grid splits.
 # The api suite then proves the session facade keeps those pools
-# resident ACROSS calls (fit + encode on one spawn, corpus pools).
+# resident ACROSS calls (fit + encode on one spawn, corpus pools), and
+# the concurrency suite proves the shared session serves parallel
+# clients (clones) correctly: distinct observations in parallel,
+# same-observation serialization, LRU eviction + respawn.
 for w in 1 2 4; do
   DICODILE_TEST_WORKERS=$w cargo test -q --test worker_pool
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_session
+  DICODILE_TEST_WORKERS=$w cargo test -q --test api_concurrency
 done
 
 # Examples smoke: the quickstart exercises the builder/session/model
@@ -28,9 +32,11 @@ done
 cargo run --release --example quickstart
 
 # Outer-iteration smoke bench: records per-iteration csc_time/dict_time
-# for the teardown/respawn driver vs the persistent pool, plus warm
-# (session-reuse) vs cold (fresh-session) encode latency, to
-# BENCH_cdl_outer.json (single rep for CI; drop the env for real runs).
+# for the teardown/respawn driver vs the persistent pool, warm
+# (session-reuse) vs cold (fresh-session) encode latency, and the
+# concurrent-serving wall-clock for C=1/2/4 parallel clients
+# (encode_concurrent_s), to BENCH_cdl_outer.json (single rep for CI;
+# drop the env for real runs).
 DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer
 
 if cargo fmt --version >/dev/null 2>&1; then
