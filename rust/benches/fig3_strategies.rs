@@ -7,17 +7,38 @@
 //! the *shape* to reproduce is: LGCD fastest everywhere, GCD blowing up
 //! with T (its per-iteration scan is O(K|Omega|)), RCD in between.
 //!
+//! The `selection` section A/Bs the incremental dz_opt selection
+//! against the full-rescan path on the 2-D texture workload at loose
+//! and tight tolerances (the late-stage regime the incremental cache
+//! targets), verifies the trajectories are bit-identical, and writes
+//! the record to BENCH_lgcd_selection.json — the perf-trajectory entry
+//! for this optimization.
+//!
 //!     cargo bench --bench fig3_strategies
 //!     DICODILE_BENCH_REPS=5 cargo bench --bench fig3_strategies
 
 use dicodile::bench::{fmt_secs, time, BenchConfig, Table};
 use dicodile::csc::cd::{solve_cd, CdConfig};
 use dicodile::csc::problem::CscProblem;
-use dicodile::csc::select::Strategy;
+use dicodile::csc::select::{SelectMode, Strategy};
 use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::util::json::Json;
 
 fn main() {
     let bc = BenchConfig::from_env();
+    // DICODILE_FIG3_SECTION=selection skips the (slow, Greedy-heavy)
+    // strategy sweep and runs only the selection A/B — what the tier1
+    // smoke needs to produce BENCH_lgcd_selection.json.
+    let only_selection = std::env::var("DICODILE_FIG3_SECTION")
+        .map(|s| s == "selection")
+        .unwrap_or(false);
+    if !only_selection {
+        strategy_sweep(&bc);
+    }
+    selection_section(&bc);
+}
+
+fn strategy_sweep(bc: &BenchConfig) {
     let l = 16;
     let k = 5;
     println!("# Fig. 3 — CD strategy runtimes (1 worker, P=7, K={k}, L={l})");
@@ -31,7 +52,7 @@ fn main() {
         for strategy in [Strategy::LocallyGreedy, Strategy::Randomized, Strategy::Greedy] {
             let cfg = CdConfig { strategy, tol: 1e-2, max_iter: 40_000_000, ..Default::default() };
             let mut last = None;
-            let timing = time(&bc, || {
+            let timing = time(bc, || {
                 let r = solve_cd(&problem, &cfg);
                 let cost = problem.cost(&r.z);
                 last = Some((r.stats.iterations, r.stats.coords_scanned, cost));
@@ -50,4 +71,118 @@ fn main() {
     }
     println!("{}", table.render());
     println!("expected shape: lgcd < randomized < greedy; greedy degrades most as T grows.");
+}
+
+// ---- selection: incremental dz_opt vs full rescan -----------------------
+// 2-D texture workload (scaling_grid family, random-patch dictionary).
+// The tighter the tolerance, the more of the run is near-converged
+// sweeping — exactly where clean-segment O(1) visits dominate and the
+// rescan path pays O(K|Omega|) per sweep for nothing.
+fn selection_section(bc: &BenchConfig) {
+    let size = 64;
+    let (k, l) = (4usize, 8usize);
+    let x = dicodile::data::texture::TextureConfig::with_size(size, size).generate(1);
+    let d = dicodile::cdl::init::init_dictionary(
+        &x,
+        k,
+        &[l, l],
+        dicodile::cdl::init::InitStrategy::RandomPatches,
+        1,
+    );
+    let problem = CscProblem::with_lambda_frac(x, d, 0.1);
+    println!("\n# selection — incremental dz_opt vs rescan (2-D texture {size}x{size}, K={k}, L={l}x{l})");
+    let mut sel_table =
+        Table::new(&["tol", "mode", "median", "iters", "scanned", "skipped", "rescanned"]);
+    let mut entries = Vec::new();
+    let mut headline: Option<(f64, f64, u64, u64)> = None; // tol 1e-8: (t_res, t_inc, scan_res, scan_inc)
+    for tol in [1e-4, 1e-8] {
+        let mut per_mode: Vec<(SelectMode, f64, dicodile::csc::cd::CdStats, Vec<f64>)> =
+            Vec::new();
+        for mode in [SelectMode::Rescan, SelectMode::Incremental] {
+            let cfg = CdConfig {
+                strategy: Strategy::LocallyGreedy,
+                tol,
+                max_iter: 500_000_000,
+                select: mode,
+                ..Default::default()
+            };
+            let mut last = None;
+            let timing = time(bc, || {
+                let r = solve_cd(&problem, &cfg);
+                last = Some((r.stats, r.z.data().to_vec()));
+            });
+            let (stats, z) = last.unwrap();
+            sel_table.row(vec![
+                format!("{tol:.0e}"),
+                mode.name().to_string(),
+                fmt_secs(timing.median),
+                stats.iterations.to_string(),
+                stats.coords_scanned.to_string(),
+                stats.segments_skipped.to_string(),
+                stats.segments_rescanned.to_string(),
+            ]);
+            per_mode.push((mode, timing.median, stats, z));
+        }
+        let (_, t_res, s_res, z_res) = &per_mode[0];
+        let (_, t_inc, s_inc, z_inc) = &per_mode[1];
+        let bit_identical = z_res.len() == z_inc.len()
+            && z_res
+                .iter()
+                .zip(z_inc.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !bit_identical {
+            eprintln!("WARNING: tol {tol:.0e}: incremental trajectory diverged from rescan!");
+        }
+        entries.push(Json::obj(vec![
+            ("workload", Json::str("2d texture, random-patch dictionary")),
+            ("size", Json::Num(size as f64)),
+            ("n_atoms", Json::Num(k as f64)),
+            ("atom_side", Json::Num(l as f64)),
+            ("tol", Json::Num(tol)),
+            ("rescan_median_s", Json::Num(*t_res)),
+            ("incremental_median_s", Json::Num(*t_inc)),
+            ("speedup", Json::Num(t_res / t_inc.max(1e-12))),
+            ("rescan_coords_scanned", Json::Num(s_res.coords_scanned as f64)),
+            ("incremental_coords_scanned", Json::Num(s_inc.coords_scanned as f64)),
+            (
+                "scan_ratio",
+                Json::Num(s_res.coords_scanned as f64 / (s_inc.coords_scanned as f64).max(1.0)),
+            ),
+            ("incremental_cache_filled", Json::Num(s_inc.dz_cache_filled as f64)),
+            ("segments_skipped", Json::Num(s_inc.segments_skipped as f64)),
+            ("segments_rescanned", Json::Num(s_inc.segments_rescanned as f64)),
+            ("iterations", Json::Num(s_inc.iterations as f64)),
+            ("bit_identical", Json::Bool(bit_identical)),
+        ]));
+        if tol == 1e-8 {
+            headline =
+                Some((*t_res, *t_inc, s_res.coords_scanned, s_inc.coords_scanned));
+        }
+    }
+    println!("{}", sel_table.render());
+    if let Some((t_res, t_inc, scan_res, scan_inc)) = headline {
+        println!(
+            "tol 1e-8: incremental scans {scan_inc} coords vs {scan_res} rescan \
+             ({:.1}x fewer), {:.2}x wall-clock",
+            scan_res as f64 / (scan_inc as f64).max(1.0),
+            t_res / t_inc.max(1e-12),
+        );
+    }
+    let record = Json::obj(vec![
+        ("bench", Json::str("lgcd_selection")),
+        (
+            "note",
+            Json::str(
+                "before = DICODILE_SELECT=rescan (full K|C_m| scan per segment visit); \
+                 after = incremental dz_opt + cached segment champions (clean visits O(1)). \
+                 Trajectories verified bit-identical per entry.",
+            ),
+        ),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = "BENCH_lgcd_selection.json";
+    match std::fs::write(path, record.dumps()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
 }

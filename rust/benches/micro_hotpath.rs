@@ -95,7 +95,7 @@ fn main() {
         let timing = time(&bc, || {
             let mut acc = 0.0;
             for i in 0..m.min(64) {
-                if let Some((_, _, dz)) = bw.best_candidate(&p, &z, &segs.rect(i)) {
+                if let Some((_, _, dz)) = bw.best_candidate(&p, &z, segs.rect(i)) {
                     acc += dz;
                 }
             }

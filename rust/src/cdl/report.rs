@@ -22,6 +22,28 @@ pub fn to_json(result: &CdlResult) -> Json {
         ("lambda", Json::Num(result.lambda)),
         ("converged", Json::Bool(result.converged)),
         ("runtime", Json::Num(result.runtime)),
+        // Residency + selection provenance of the persistent runtime:
+        // `segments_skipped` / `segments_rescanned` record how much of
+        // the workers' selection work the incremental dz_opt cache
+        // answered in O(1) (skipped is 0 under DICODILE_SELECT=rescan).
+        (
+            "pool",
+            match &result.pool {
+                Some(p) => Json::obj(vec![
+                    ("n_workers", Json::Num(p.n_workers as f64)),
+                    ("workers_spawned", Json::Num(p.workers_spawned as f64)),
+                    ("iterations", Json::Num(p.stats.iterations as f64)),
+                    ("updates", Json::Num(p.stats.updates as f64)),
+                    ("msgs_sent", Json::Num(p.stats.msgs_sent as f64)),
+                    ("soft_locked", Json::Num(p.stats.soft_locked as f64)),
+                    ("work", Json::Num(p.stats.work as f64)),
+                    ("segments_skipped", Json::Num(p.stats.segments_skipped as f64)),
+                    ("segments_rescanned", Json::Num(p.stats.segments_rescanned as f64)),
+                    ("dz_cache_filled", Json::Num(p.stats.dz_cache_filled as f64)),
+                ]),
+                None => Json::Null,
+            },
+        ),
         (
             "trace",
             Json::Arr(
@@ -122,6 +144,33 @@ mod tests {
         let parsed = Json::parse(&j.dumps()).unwrap();
         assert_eq!(parsed.get("lambda").unwrap().as_f64(), Some(0.5));
         assert_eq!(parsed.get("trace").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("pool"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn json_records_pool_selection_counters() {
+        use crate::dicod::messages::WorkerStats;
+        use crate::dicod::pool::PoolReport;
+        let mut r = dummy_result();
+        let stats = WorkerStats {
+            iterations: 100,
+            updates: 40,
+            segments_skipped: 60,
+            segments_rescanned: 40,
+            ..Default::default()
+        };
+        r.pool = Some(PoolReport {
+            n_workers: 2,
+            workers_spawned: 2,
+            stats: stats.clone(),
+            per_worker: vec![stats.clone(), WorkerStats::default()],
+            evicted: false,
+        });
+        let parsed = Json::parse(&to_json(&r).dumps()).unwrap();
+        let pool = parsed.get("pool").unwrap();
+        assert_eq!(pool.get("segments_skipped").unwrap().as_f64(), Some(60.0));
+        assert_eq!(pool.get("segments_rescanned").unwrap().as_f64(), Some(40.0));
+        assert_eq!(pool.get("n_workers").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

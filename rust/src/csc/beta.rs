@@ -18,6 +18,14 @@
 //! (window = S_w extended by its halo). This is the hottest loop of the
 //! whole system: the d=1 / d=2 cases are hand-specialized, allocation
 //! free, and O(2^d K |Theta|) per call.
+//!
+//! [`BetaWindow::apply_update_fused`] is the incremental-selection
+//! variant of the same kernels: one pass over V(u0) updates beta *and*
+//! the per-coordinate soft-thresholded optimum `dz_opt` the
+//! [`SelectionState`](crate::csc::select::SelectionState) caches — no
+//! second traversal, and the skipped self-entry `(k0, u0)` (whose beta
+//! is invariant but whose Z moves) gets its `dz_opt` refreshed from the
+//! post-update activation value.
 
 use crate::conv;
 use crate::csc::problem::CscProblem;
@@ -292,6 +300,18 @@ impl BetaWindow {
         self.local_dims.iter().product()
     }
 
+    /// The window as a global-coordinate box `[origin, origin + local)`.
+    pub fn window_rect(&self) -> Rect {
+        Rect::new(
+            self.origin.clone(),
+            self.origin
+                .iter()
+                .zip(&self.local_dims)
+                .map(|(o, n)| o + *n as i64)
+                .collect(),
+        )
+    }
+
     /// Flat local offset of a global coordinate (must be inside).
     #[inline]
     pub fn local_offset(&self, u: &[i64]) -> usize {
@@ -399,14 +419,7 @@ impl BetaWindow {
                     u0.iter().zip(ldims).map(|(x, &l)| x - l as i64 + 1).collect(),
                     u0.iter().zip(ldims).map(|(x, &l)| x + l as i64).collect(),
                 );
-                let win = Rect::new(
-                    self.origin.clone(),
-                    self.origin
-                        .iter()
-                        .zip(&self.local_dims)
-                        .map(|(o, n)| o + *n as i64)
-                        .collect(),
-                );
+                let win = self.window_rect();
                 let inter = vbox.intersect(&win);
                 if inter.is_empty() {
                     return 0;
@@ -442,6 +455,165 @@ impl BetaWindow {
         touched
     }
 
+    /// The fused incremental-selection variant of
+    /// [`apply_update`](BetaWindow::apply_update): the same
+    /// hand-specialized V(u0) kernels, but each touched beta entry also
+    /// refreshes its cached optimal step in `dz_opt` (laid out
+    /// congruently with this window, `[K, local..]` row-major) in the
+    /// same pass. `z` must still hold the *pre-update* value at
+    /// `(k0, u0)`; the self-entry — skipped by the beta update because
+    /// its beta is invariant — recomputes its `dz_opt` from
+    /// `z + dz`, the exact value `z.add_at` will store, so the cache
+    /// stays bit-identical to a from-scratch rescan.
+    ///
+    /// The per-rank `dz` formulas mirror `best_candidate` exactly
+    /// (`dz_value_inv` for d <= 2, `dz_value` for the generic rank), so
+    /// cached and rescanned selections cannot drift by even one ulp.
+    ///
+    /// Returns the number of beta entries touched (same count as
+    /// `apply_update`; the self-entry refresh is not a beta touch).
+    pub fn apply_update_fused(
+        &mut self,
+        problem: &CscProblem,
+        k0: usize,
+        u0: &[i64],
+        dz: f64,
+        dz_opt: &mut [f64],
+        z: &ZWindow,
+    ) -> usize {
+        if dz == 0.0 {
+            return 0;
+        }
+        let ldims = problem.atom_dims();
+        let k_tot = self.n_atoms;
+        let sp = self.spatial_len();
+        let zsp = z.spatial_len();
+        debug_assert_eq!(dz_opt.len(), k_tot * sp);
+        let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+        let cc_sp: usize = cc_dims.iter().product();
+        let dtd = problem.dtd.data();
+        let lambda = problem.lambda;
+        let mut touched = 0;
+        match ldims.len() {
+            1 => {
+                let l = ldims[0] as i64;
+                let o = self.origin[0];
+                let n = self.local_dims[0] as i64;
+                let lo = (u0[0] - l + 1).max(o);
+                let hi = (u0[0] + l).min(o + n);
+                if lo >= hi {
+                    return 0;
+                }
+                let skip = u0[0];
+                let zo = z.origin[0];
+                for k in 0..k_tot {
+                    let dtd_base = (k0 * k_tot + k) * cc_sp;
+                    let beta_base = k * sp;
+                    let inv = problem.inv_norms_sq[k];
+                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
+                    for v in lo..hi {
+                        let bi = beta_base + (v - o) as usize;
+                        let zv = zrow[(v - zo) as usize];
+                        if k == k0 && v == skip {
+                            // beta invariant under its own update; Z
+                            // moves by dz — refresh the cached optimum.
+                            dz_opt[bi] = dz_value_inv(self.data[bi], zv + dz, lambda, inv);
+                            continue;
+                        }
+                        let cc = (u0[0] - v + l - 1) as usize;
+                        self.data[bi] -= dtd[dtd_base + cc] * dz;
+                        dz_opt[bi] = dz_value_inv(self.data[bi], zv, lambda, inv);
+                        touched += 1;
+                    }
+                }
+            }
+            2 => {
+                let (l0, l1) = (ldims[0] as i64, ldims[1] as i64);
+                let (o0, o1) = (self.origin[0], self.origin[1]);
+                let (n0, n1) = (self.local_dims[0] as i64, self.local_dims[1] as i64);
+                let lo0 = (u0[0] - l0 + 1).max(o0);
+                let hi0 = (u0[0] + l0).min(o0 + n0);
+                let lo1 = (u0[1] - l1 + 1).max(o1);
+                let hi1 = (u0[1] + l1).min(o1 + n1);
+                if lo0 >= hi0 || lo1 >= hi1 {
+                    return 0;
+                }
+                let cc_w = cc_dims[1];
+                let w = self.local_dims[1];
+                let (zo0, zo1) = (z.origin[0], z.origin[1]);
+                let zw = z.local_dims[1];
+                for k in 0..k_tot {
+                    let dtd_base = (k0 * k_tot + k) * cc_sp;
+                    let beta_base = k * sp;
+                    let inv = problem.inv_norms_sq[k];
+                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
+                    for v0 in lo0..hi0 {
+                        let cc_row = dtd_base + ((u0[0] - v0 + l0 - 1) as usize) * cc_w;
+                        let beta_row = beta_base + ((v0 - o0) as usize) * w;
+                        let z_row = ((v0 - zo0) as usize) * zw;
+                        let skip_here = k == k0 && v0 == u0[0];
+                        for v1 in lo1..hi1 {
+                            let bi = beta_row + (v1 - o1) as usize;
+                            let zv = zrow[z_row + (v1 - zo1) as usize];
+                            if skip_here && v1 == u0[1] {
+                                dz_opt[bi] = dz_value_inv(self.data[bi], zv + dz, lambda, inv);
+                                continue;
+                            }
+                            let cc = cc_row + (u0[1] - v1 + l1 - 1) as usize;
+                            self.data[bi] -= dtd[cc] * dz;
+                            dz_opt[bi] = dz_value_inv(self.data[bi], zv, lambda, inv);
+                            touched += 1;
+                        }
+                    }
+                }
+            }
+            _ => {
+                // Generic d (matches best_candidate's dz_value path).
+                let vbox = Rect::new(
+                    u0.iter().zip(ldims).map(|(x, &l)| x - l as i64 + 1).collect(),
+                    u0.iter().zip(ldims).map(|(x, &l)| x + l as i64).collect(),
+                );
+                let win = self.window_rect();
+                let inter = vbox.intersect(&win);
+                if inter.is_empty() {
+                    return 0;
+                }
+                let cc_str = crate::tensor::shape::strides_of(&cc_dims);
+                let lstr = crate::tensor::shape::strides_of(&self.local_dims);
+                for k in 0..k_tot {
+                    let dtd_base = (k0 * k_tot + k) * cc_sp;
+                    let beta_base = k * sp;
+                    let nsq = problem.norms_sq[k];
+                    for v in inter.iter() {
+                        let loff: usize = v
+                            .iter()
+                            .zip(&self.origin)
+                            .zip(&lstr)
+                            .map(|((x, o), s)| (x - o) as usize * s)
+                            .sum();
+                        let bi = beta_base + loff;
+                        let zv = z.data[k * zsp + z.local_offset(&v)];
+                        if k == k0 && v == u0 {
+                            dz_opt[bi] = dz_value(self.data[bi], zv + dz, lambda, nsq);
+                            continue;
+                        }
+                        let cc: usize = v
+                            .iter()
+                            .zip(u0)
+                            .zip(ldims)
+                            .zip(&cc_str)
+                            .map(|(((vi, ui), &l), s)| (ui - vi + l as i64 - 1) as usize * s)
+                            .sum();
+                        self.data[bi] -= dtd[dtd_base + cc] * dz;
+                        dz_opt[bi] = dz_value(self.data[bi], zv, lambda, nsq);
+                        touched += 1;
+                    }
+                }
+            }
+        }
+        touched
+    }
+
     /// Best candidate `(k, u_global, dz)` by `|dz|` over the
     /// intersection of `rect` (global coords) with this window.
     /// Returns `None` if the intersection is empty.
@@ -456,14 +628,7 @@ impl BetaWindow {
         z: &ZWindow,
         rect: &Rect,
     ) -> Option<(usize, Vec<i64>, f64)> {
-        let win = Rect::new(
-            self.origin.clone(),
-            self.origin
-                .iter()
-                .zip(&self.local_dims)
-                .map(|(o, n)| o + *n as i64)
-                .collect(),
-        );
+        let win = self.window_rect();
         let inter = rect.intersect(&win);
         if inter.is_empty() {
             return None;
@@ -576,6 +741,18 @@ impl ZWindow {
             .all(|((x, o), n)| *x >= *o && *x < o + *n as i64)
     }
 
+    /// The window as a global-coordinate box `[origin, origin + local)`.
+    pub fn window_rect(&self) -> Rect {
+        Rect::new(
+            self.origin.clone(),
+            self.origin
+                .iter()
+                .zip(&self.local_dims)
+                .map(|(o, n)| o + *n as i64)
+                .collect(),
+        )
+    }
+
     #[inline]
     pub fn local_offset(&self, u: &[i64]) -> usize {
         let mut off = 0;
@@ -615,14 +792,7 @@ impl ZWindow {
         let gsp: usize = z0.dims()[1..].iter().product();
         let gstr = crate::tensor::shape::strides_of(&z0.dims()[1..]);
         let sp = self.spatial_len();
-        let win = Rect::new(
-            self.origin.clone(),
-            self.origin
-                .iter()
-                .zip(&self.local_dims)
-                .map(|(o, n)| o + *n as i64)
-                .collect(),
-        );
+        let win = self.window_rect();
         for k in 0..self.n_atoms {
             let src = &z0.data()[k * gsp..(k + 1) * gsp];
             let dst = &mut self.data[k * sp..(k + 1) * sp];
@@ -900,6 +1070,101 @@ mod tests {
         }
         assert!((dz.abs() - best).abs() < 1e-12);
         let _ = (k, u);
+    }
+
+    /// dz_opt oracle: recompute the optimal step for every window
+    /// coordinate with the d <= 2 kernel formula.
+    fn dz_opt_oracle(p: &CscProblem, bw: &BetaWindow, z: &ZWindow) -> Vec<f64> {
+        let sp = bw.spatial_len();
+        let win = bw.window_rect();
+        let mut out = vec![0.0; p.n_atoms() * sp];
+        for k in 0..p.n_atoms() {
+            for (i, u) in win.iter().enumerate() {
+                out[k * sp + i] =
+                    dz_value_inv(bw.at(k, &u), z.at(k, &u), p.lambda, p.inv_norms_sq[k]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fused_update_matches_separate_paths() {
+        for (p, d) in [(problem_1d(20), 1usize), (problem_2d(21), 2)] {
+            let zsp = p.z_spatial_dims();
+            let mut bw_a = BetaWindow::init_full(&p);
+            let mut bw_b = bw_a.clone();
+            let mut z = ZWindow::zeros(p.n_atoms(), &vec![0; d], &zsp);
+            let mut dz_opt = dz_opt_oracle(&p, &bw_a, &z);
+            let mut rng = Pcg64::seeded(22);
+            for _ in 0..15 {
+                let k0 = rng.below(p.n_atoms());
+                let u0: Vec<i64> = zsp.iter().map(|&n| rng.below(n) as i64).collect();
+                let dz = rng.normal();
+                let ta = bw_a.apply_update_fused(&p, k0, &u0, dz, &mut dz_opt, &z);
+                let tb = bw_b.apply_update(&p, k0, &u0, dz);
+                assert_eq!(ta, tb, "touched counts diverge");
+                z.add_at(k0, &u0, dz);
+                // beta bit-identical to the unfused kernel ...
+                for (a, b) in bw_a.data.iter().zip(&bw_b.data) {
+                    assert!(a.to_bits() == b.to_bits(), "beta diverged: {a} vs {b}");
+                }
+                // ... and dz_opt bit-identical to a full recomputation.
+                let want = dz_opt_oracle(&p, &bw_a, &z);
+                for (i, (a, b)) in dz_opt.iter().zip(&want).enumerate() {
+                    assert!(a.to_bits() == b.to_bits(), "dz_opt[{i}]: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_update_with_wider_z_window() {
+        // Worker geometry: beta on a sub-window, Z on a wider rim.
+        let p = problem_1d(23);
+        let zsp = p.z_spatial_dims();
+        let mut beta = BetaWindow::init_window(&p, &[6], &[8]);
+        let mut beta_ref = beta.clone();
+        let mut z = ZWindow::zeros(p.n_atoms(), &[2], &[(zsp[0] - 4).min(18)]);
+        let mut dz_opt = {
+            // oracle over the beta window, indexing z through its own geometry
+            let sp = beta.spatial_len();
+            let mut out = vec![0.0; p.n_atoms() * sp];
+            for k in 0..p.n_atoms() {
+                for i in 0..8i64 {
+                    out[k * sp + i as usize] = dz_value_inv(
+                        beta.at(k, &[6 + i]),
+                        z.at(k, &[6 + i]),
+                        p.lambda,
+                        p.inv_norms_sq[k],
+                    );
+                }
+            }
+            out
+        };
+        // An inside update and a remote one whose V-box only overlaps.
+        for (k0, u0, dz) in [(0usize, 9i64, 0.8), (1, 15, -0.4), (2, 3, 0.25)] {
+            let ta = beta.apply_update_fused(&p, k0, &[u0], dz, &mut dz_opt, &z);
+            let tb = beta_ref.apply_update(&p, k0, &[u0], dz);
+            assert_eq!(ta, tb);
+            if z.contains(&[u0]) {
+                z.add_at(k0, &[u0], dz);
+            }
+            for (a, b) in beta.data.iter().zip(&beta_ref.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let sp = beta.spatial_len();
+            for k in 0..p.n_atoms() {
+                for i in 0..8i64 {
+                    let want = dz_value_inv(
+                        beta.at(k, &[6 + i]),
+                        z.at(k, &[6 + i]),
+                        p.lambda,
+                        p.inv_norms_sq[k],
+                    );
+                    assert_eq!(dz_opt[k * sp + i as usize].to_bits(), want.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

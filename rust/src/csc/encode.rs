@@ -96,8 +96,8 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
                     strategy: *strategy,
                     tol: cfg.tol,
                     max_iter: cfg.max_iter,
-                    cost_every: 0,
                     seed: cfg.seed,
+                    ..Default::default()
                 },
             );
             EncodeResult {

@@ -1,6 +1,20 @@
-//! Convolutional sparse coding: problem definition, beta maintenance,
-//! sequential CD engines (greedy / randomized / locally-greedy), FISTA
-//! baseline and the top-level `sparse_encode` API.
+//! Convolutional sparse coding: problem definition, fused beta +
+//! dz_opt maintenance, sequential CD engines (greedy / randomized /
+//! locally-greedy), FISTA baseline and the top-level `sparse_encode`
+//! API.
+//!
+//! The hot path is the pairing of [`beta::BetaWindow`] with
+//! [`select::SelectionState`]: an accepted update at `(k0, u0)` runs
+//! one fused pass over V(u0) that maintains beta (eq. 8) *and* the
+//! soft-thresholded optimal step `dz_opt` of every touched coordinate,
+//! and marks the (at most `2^d`) segments overlapping V(u0) dirty.
+//! Segment visits then obey the clean/dirty invariant — a segment is
+//! clean iff nothing inside it changed since its champion was cached —
+//! so clean visits cost O(1) and only dirty ones pay a K·|C_m| rescan.
+//! Selection stays bit-identical to a full rescan (same scan order,
+//! same strict-`>` tie-breaking: lowest linear index wins);
+//! `DICODILE_SELECT=rescan` re-enables the old always-rescan path for
+//! A/B runs and the parity suite.
 
 pub mod beta;
 pub mod cd;

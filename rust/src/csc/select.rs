@@ -1,4 +1,5 @@
-//! Coordinate-selection strategies (§3 of the paper).
+//! Coordinate-selection strategies (§3 of the paper) and the
+//! incremental selection state that makes late-stage sweeps cheap.
 //!
 //! - `Greedy` — Gauss–Southwell over the whole domain, O(K|Omega|)/iter.
 //! - `Randomized` — uniform coordinate, O(1)/iter.
@@ -6,7 +7,42 @@
 //!   into segments of size `2^d |Theta|` (extent `2 L_i` per dim), the
 //!   paper's sweet spot where selection cost matches the O(2^d K |Theta|)
 //!   beta-update cost.
+//!
+//! ## Incremental selection (`SelectionState`)
+//!
+//! The complexity argument above prices *one* segment scan. A naive
+//! implementation pays that scan on **every** visit, even when nothing
+//! in the segment changed since the last one — so a near-converged
+//! sweep over the whole domain costs O(K|Omega|) when it should cost
+//! O(M). [`SelectionState`] restores the cheap sweep by maintaining,
+//! next to `beta`:
+//!
+//! - `dz_opt` — the soft-thresholded optimal step per coordinate,
+//!   updated *fused* with beta inside the V(u0) loop of
+//!   [`BetaWindow::apply_update_fused`] (one pass, no second
+//!   traversal);
+//! - per segment, the cached champion `(k*, u*, dz*)` plus a dirty
+//!   flag.
+//!
+//! The invariant: a segment is **clean** iff no coordinate inside it
+//! changed `beta` or `Z` since its champion was cached — an update at
+//! `u0` (local or a neighbour's) can only touch segments overlapping
+//! `V(u0)`, which [`SelectionState::apply_update`] marks dirty (at most
+//! `2^d` segments for the standard `2L` segment extent). A visit then
+//! costs O(1) on a clean segment (return the cached champion) and one
+//! K·|C_m| rescan of the *cached* `dz_opt` values on a dirty one.
+//!
+//! Selection is bit-identical to the rescan path: `dz_opt` is computed
+//! by the same per-rank kernels `best_candidate` uses, and both scans
+//! visit coordinates in the same order (atoms outer, row-major inside
+//! the segment) with the same strict-`>` comparison, so ties break to
+//! the lowest linear index either way. The `DICODILE_SELECT`
+//! environment variable (`rescan` | `incremental`, default
+//! incremental) keeps the old path alive for A/B runs and the parity
+//! suite; `CdConfig::select` / `DicodConfig::select` pin it per run.
 
+use crate::csc::beta::{dz_value, dz_value_inv, BetaWindow, ZWindow};
+use crate::csc::problem::CscProblem;
 use crate::tensor::shape::Rect;
 
 /// Coordinate-selection strategy.
@@ -39,9 +75,60 @@ impl std::str::FromStr for Strategy {
     }
 }
 
+/// How the solvers pick the next coordinate: rescan the segment's beta
+/// on every visit, or serve clean segments from the cached champion.
+/// Both paths select bit-identical coordinates; incremental is the
+/// default and strictly cheaper in scanned coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectMode {
+    /// Recompute `dz` over the whole segment on every visit (the
+    /// pre-incremental behavior; kept for A/B and the parity suite).
+    Rescan,
+    /// Cached `dz_opt` + per-segment champions with dirty tracking.
+    Incremental,
+}
+
+impl SelectMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectMode::Rescan => "rescan",
+            SelectMode::Incremental => "incremental",
+        }
+    }
+
+    /// Honour the `DICODILE_SELECT` env toggle (default: incremental).
+    /// Unknown values fall back to the default with a (once-only)
+    /// warning rather than aborting — a silent fallback would turn a
+    /// typo'd `rescan` A/B baseline into a bogus ~1.0x comparison.
+    pub fn from_env() -> SelectMode {
+        match std::env::var("DICODILE_SELECT").ok().as_deref() {
+            Some(s) => s.parse().unwrap_or_else(|e: String| {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!("warning: DICODILE_SELECT: {e}; defaulting to incremental")
+                });
+                SelectMode::Incremental
+            }),
+            None => SelectMode::Incremental,
+        }
+    }
+}
+
+impl std::str::FromStr for SelectMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "rescan" => Ok(SelectMode::Rescan),
+            "incremental" => Ok(SelectMode::Incremental),
+            other => Err(format!("unknown select mode {other:?} (rescan|incremental)")),
+        }
+    }
+}
+
 /// A partition of a spatial box into a grid of segments `C_m`
 /// (the LGCD sub-domains). Segments tile the box; edge segments may be
-/// smaller.
+/// smaller. Segment rects are precomputed at construction so the hot
+/// loops never re-derive (and re-allocate) them per visit.
 #[derive(Clone, Debug)]
 pub struct Segments {
     /// The partitioned box (global coordinates).
@@ -50,6 +137,8 @@ pub struct Segments {
     pub seg_ext: Vec<usize>,
     /// Number of segments per dimension.
     pub counts: Vec<usize>,
+    /// Precomputed segment boxes, row-major over `counts`.
+    rects: Vec<Rect>,
 }
 
 impl Segments {
@@ -62,7 +151,19 @@ impl Segments {
             .zip(seg_ext)
             .map(|(n, s)| n.div_ceil(*s).max(1))
             .collect();
-        Segments { domain, seg_ext: seg_ext.to_vec(), counts }
+        let m_tot: usize = counts.iter().product();
+        let mut segs = Segments {
+            domain,
+            seg_ext: seg_ext.to_vec(),
+            counts,
+            rects: Vec::new(),
+        };
+        let mut rects = Vec::with_capacity(m_tot);
+        for m in 0..m_tot {
+            rects.push(segs.compute_rect(m));
+        }
+        segs.rects = rects;
+        segs
     }
 
     /// The paper's default: segments of extent `2 L_i`, giving
@@ -74,15 +175,25 @@ impl Segments {
 
     /// Total number of segments M.
     pub fn len(&self) -> usize {
-        self.counts.iter().product()
+        self.rects.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// The m-th segment as a global-coordinate box.
-    pub fn rect(&self, m: usize) -> Rect {
+    /// The m-th segment as a global-coordinate box (precomputed).
+    #[inline]
+    pub fn rect(&self, m: usize) -> &Rect {
+        &self.rects[m]
+    }
+
+    /// All segment boxes, row-major over `counts`.
+    pub fn rects(&self) -> &[Rect] {
+        &self.rects
+    }
+
+    fn compute_rect(&self, m: usize) -> Rect {
         let mut rem = m;
         let d = self.counts.len();
         let mut idx = vec![0usize; d];
@@ -106,9 +217,390 @@ impl Segments {
     }
 }
 
+/// Incremental selection state for one beta window (the tentpole of
+/// the O(1)-clean-sweep optimization — see the module docs).
+///
+/// Owns the segment partition, the per-coordinate `dz_opt` cache
+/// (congruent with the beta window, `[K, local..]` row-major) and the
+/// per-segment champion + dirty flag. In [`SelectMode::Rescan`] it is
+/// a thin pass-through to [`BetaWindow::best_candidate`] /
+/// [`BetaWindow::apply_update`] that only keeps the work counters, so
+/// the solvers are mode-agnostic.
+#[derive(Clone, Debug)]
+pub struct SelectionState {
+    mode: SelectMode,
+    segs: Segments,
+    /// Cached optimal step per coordinate (empty in rescan mode).
+    dz_opt: Vec<f64>,
+    /// Cached per-segment champion `(k*, u*, dz*)`; `None` means every
+    /// coordinate of the segment is at its conditional optimum.
+    champs: Vec<Option<(usize, Vec<i64>, f64)>>,
+    dirty: Vec<bool>,
+    /// Per-dim segment-index ranges scratch (dirty marking).
+    scratch_ranges: Vec<(usize, usize)>,
+    scratch_idx: Vec<usize>,
+    /// Coordinates actually examined by selection (clean visits add 0).
+    pub coords_scanned: u64,
+    /// Coordinates whose `dz_opt` was (re)computed by a full cache fill
+    /// — construction and every `rebuild` (the `SetDict` path) pay
+    /// K·|window| here. Kept separate from `coords_scanned` so the
+    /// incremental path's build cost is visible instead of hidden.
+    pub coords_cache_filled: u64,
+    /// Clean-segment visits answered from the cached champion in O(1).
+    pub segments_skipped: u64,
+    /// Dirty-segment rescans (each costs K·|C_m| cached-value reads).
+    pub segments_rescanned: u64,
+}
+
+impl SelectionState {
+    /// Build selection state over `segs` for the current `(beta, z)`.
+    /// In incremental mode this fills the `dz_opt` cache (one full
+    /// window scan, same cost as the first sweep would pay anyway) and
+    /// marks every segment dirty.
+    pub fn new(
+        mode: SelectMode,
+        segs: Segments,
+        problem: &CscProblem,
+        beta: &BetaWindow,
+        z: &ZWindow,
+    ) -> Self {
+        let m_tot = segs.len();
+        let mut s = SelectionState {
+            mode,
+            segs,
+            dz_opt: Vec::new(),
+            champs: vec![None; m_tot],
+            dirty: vec![true; m_tot],
+            scratch_ranges: Vec::new(),
+            scratch_idx: Vec::new(),
+            coords_scanned: 0,
+            coords_cache_filled: 0,
+            segments_skipped: 0,
+            segments_rescanned: 0,
+        };
+        if mode == SelectMode::Incremental {
+            s.rebuild(problem, beta, z);
+        }
+        s
+    }
+
+    pub fn mode(&self) -> SelectMode {
+        self.mode
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    pub fn segments(&self) -> &Segments {
+        &self.segs
+    }
+
+    /// Recompute the whole `dz_opt` cache from `(beta, z)` and mark
+    /// every segment dirty — the `SetDict` warm-reinit path, where beta
+    /// was rebuilt wholesale under a new dictionary. No-op in rescan
+    /// mode.
+    pub fn rebuild(&mut self, problem: &CscProblem, beta: &BetaWindow, z: &ZWindow) {
+        for d in self.dirty.iter_mut() {
+            *d = true;
+        }
+        for c in self.champs.iter_mut() {
+            *c = None;
+        }
+        if self.mode == SelectMode::Rescan {
+            return;
+        }
+        let k_tot = beta.n_atoms;
+        let sp = beta.spatial_len();
+        let zsp = z.spatial_len();
+        let lambda = problem.lambda;
+        self.coords_cache_filled += (k_tot * sp) as u64;
+        self.dz_opt.clear();
+        self.dz_opt.resize(k_tot * sp, 0.0);
+        match beta.local_dims.len() {
+            1 => {
+                let o = beta.origin[0];
+                let zo = z.origin[0];
+                for k in 0..k_tot {
+                    let inv = problem.inv_norms_sq[k];
+                    let brow = &beta.data[k * sp..(k + 1) * sp];
+                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
+                    let out = &mut self.dz_opt[k * sp..(k + 1) * sp];
+                    for (i, out) in out.iter_mut().enumerate() {
+                        let zi = (o + i as i64 - zo) as usize;
+                        *out = dz_value_inv(brow[i], zrow[zi], lambda, inv);
+                    }
+                }
+            }
+            2 => {
+                let (o0, o1) = (beta.origin[0], beta.origin[1]);
+                let (zo0, zo1) = (z.origin[0], z.origin[1]);
+                let (h, w) = (beta.local_dims[0], beta.local_dims[1]);
+                let zw = z.local_dims[1];
+                for k in 0..k_tot {
+                    let inv = problem.inv_norms_sq[k];
+                    let brow = &beta.data[k * sp..(k + 1) * sp];
+                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
+                    let out = &mut self.dz_opt[k * sp..(k + 1) * sp];
+                    for i in 0..h {
+                        let zrow0 = ((o0 + i as i64 - zo0) as usize) * zw;
+                        for j in 0..w {
+                            let zi = zrow0 + (o1 + j as i64 - zo1) as usize;
+                            out[i * w + j] = dz_value_inv(brow[i * w + j], zrow[zi], lambda, inv);
+                        }
+                    }
+                }
+            }
+            _ => {
+                let win = beta.window_rect();
+                for k in 0..k_tot {
+                    let nsq = problem.norms_sq[k];
+                    for (i, u) in win.iter().enumerate() {
+                        self.dz_opt[k * sp + i] = dz_value(
+                            beta.data[k * sp + i],
+                            z.data[k * zsp + z.local_offset(&u)],
+                            lambda,
+                            nsq,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply an additive update `dz` at `(k0, u0)` — local or a
+    /// neighbour's — keeping beta, `dz_opt` and the dirty flags
+    /// consistent. `z` must still hold the *pre-update* value at
+    /// `(k0, u0)` (call this before `z.add_at`, like
+    /// `BetaWindow::apply_update`). Returns the number of beta entries
+    /// touched.
+    pub fn apply_update(
+        &mut self,
+        problem: &CscProblem,
+        beta: &mut BetaWindow,
+        z: &ZWindow,
+        k0: usize,
+        u0: &[i64],
+        dz: f64,
+    ) -> usize {
+        match self.mode {
+            SelectMode::Rescan => beta.apply_update(problem, k0, u0, dz),
+            SelectMode::Incremental => {
+                if dz == 0.0 {
+                    return 0;
+                }
+                let touched = beta.apply_update_fused(problem, k0, u0, dz, &mut self.dz_opt, z);
+                self.mark_dirty_around(problem, u0);
+                touched
+            }
+        }
+    }
+
+    /// Best candidate of segment `m`: O(1) on a clean segment, a
+    /// K·|C_m| rescan of the cached `dz_opt` on a dirty one (rescan
+    /// mode always pays the full beta scan). Bit-identical to
+    /// `beta.best_candidate(problem, z, segs.rect(m))` in both modes.
+    pub fn best_in_segment(
+        &mut self,
+        problem: &CscProblem,
+        beta: &BetaWindow,
+        z: &ZWindow,
+        m: usize,
+    ) -> Option<(usize, Vec<i64>, f64)> {
+        match self.mode {
+            SelectMode::Rescan => {
+                self.coords_scanned += (problem.n_atoms() * self.segs.rect(m).size()) as u64;
+                beta.best_candidate(problem, z, self.segs.rect(m))
+            }
+            SelectMode::Incremental => {
+                self.refresh_segment(problem, beta, m);
+                self.champs[m].clone()
+            }
+        }
+    }
+
+    /// Bring segment `m`'s cached champion up to date, counting the
+    /// work: a no-op skip when clean, a K·|C_m| rescan of the cached
+    /// `dz_opt` when dirty.
+    fn refresh_segment(&mut self, problem: &CscProblem, beta: &BetaWindow, m: usize) {
+        if !self.dirty[m] {
+            self.segments_skipped += 1;
+            return;
+        }
+        self.coords_scanned += (problem.n_atoms() * self.segs.rect(m).size()) as u64;
+        self.segments_rescanned += 1;
+        self.champs[m] = self.rescan_segment(beta, m);
+        self.dirty[m] = false;
+    }
+
+    /// Global Gauss–Southwell selection as a tournament over segment
+    /// champions. Bit-identical to a full-domain
+    /// `beta.best_candidate`: each champion is the first maximizer in
+    /// its segment's (atom-outer, row-major) scan order, and champions
+    /// tying in `|dz|` are resolved to the lowest `(k, u)` — exactly
+    /// the coordinate the full linear scan would have kept.
+    /// Incremental mode only (the rescan path keeps the full scan).
+    pub fn best_overall(
+        &mut self,
+        problem: &CscProblem,
+        beta: &BetaWindow,
+    ) -> Option<(usize, Vec<i64>, f64)> {
+        debug_assert_eq!(self.mode, SelectMode::Incremental);
+        for m in 0..self.segs.len() {
+            self.refresh_segment(problem, beta, m);
+        }
+        // Tournament by reference over the cached champions (in segment
+        // order, same as a sequence of best_in_segment calls); only the
+        // winner is cloned, so a clean-cache iteration allocates once.
+        let mut best: Option<&(usize, Vec<i64>, f64)> = None;
+        for c in self.champs.iter().flatten() {
+            let better = match best {
+                None => true,
+                Some((bk, bu, bdz)) => {
+                    c.2.abs() > bdz.abs()
+                        || (c.2.abs() == bdz.abs() && (c.0, &c.1) < (*bk, bu))
+                }
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+        best.cloned()
+    }
+
+    /// `max_m |dz*_m|` over all segments, for full-domain convergence
+    /// checks (Randomized). Returns `None` when no segment holds a
+    /// nonzero candidate — mirroring `best_candidate`'s `None` on an
+    /// all-optimal domain.
+    pub fn convergence_max(
+        &mut self,
+        problem: &CscProblem,
+        beta: &BetaWindow,
+        z: &ZWindow,
+    ) -> Option<f64> {
+        let mut max: Option<f64> = None;
+        for m in 0..self.segs.len() {
+            if let Some((_, _, dz)) = self.best_in_segment(problem, beta, z, m) {
+                max = Some(max.map_or(dz.abs(), |a| a.max(dz.abs())));
+            }
+        }
+        max
+    }
+
+    /// Scan the cached `dz_opt` over segment `m` (dirty path). Same
+    /// visit order and strict-`>` comparison as `best_candidate`.
+    fn rescan_segment(&self, beta: &BetaWindow, m: usize) -> Option<(usize, Vec<i64>, f64)> {
+        let win = beta.window_rect();
+        let inter = self.segs.rect(m).intersect(&win);
+        if inter.is_empty() {
+            return None;
+        }
+        let sp = beta.spatial_len();
+        let k_tot = beta.n_atoms;
+        let mut best: Option<(usize, Vec<i64>, f64)> = None;
+        let mut best_abs = 0.0;
+        match beta.local_dims.len() {
+            1 => {
+                let o = beta.origin[0];
+                for k in 0..k_tot {
+                    let row = &self.dz_opt[k * sp..(k + 1) * sp];
+                    for v in inter.lo[0]..inter.hi[0] {
+                        let dz = row[(v - o) as usize];
+                        if dz.abs() > best_abs {
+                            best_abs = dz.abs();
+                            best = Some((k, vec![v], dz));
+                        }
+                    }
+                }
+            }
+            2 => {
+                let (o0, o1) = (beta.origin[0], beta.origin[1]);
+                let w = beta.local_dims[1];
+                for k in 0..k_tot {
+                    let row = &self.dz_opt[k * sp..(k + 1) * sp];
+                    for v0 in inter.lo[0]..inter.hi[0] {
+                        let base = ((v0 - o0) as usize) * w;
+                        for v1 in inter.lo[1]..inter.hi[1] {
+                            let dz = row[base + (v1 - o1) as usize];
+                            if dz.abs() > best_abs {
+                                best_abs = dz.abs();
+                                best = Some((k, vec![v0, v1], dz));
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {
+                let lstr = crate::tensor::shape::strides_of(&beta.local_dims);
+                for k in 0..k_tot {
+                    for v in inter.iter() {
+                        let loff: usize = v
+                            .iter()
+                            .zip(&beta.origin)
+                            .zip(&lstr)
+                            .map(|((x, o), s)| (x - o) as usize * s)
+                            .sum();
+                        let dz = self.dz_opt[k * sp + loff];
+                        if dz.abs() > best_abs {
+                            best_abs = dz.abs();
+                            best = Some((k, v.clone(), dz));
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Mark every segment overlapping `V(u0)` dirty (at most `2^d`
+    /// with the standard `2L` segment extent). Allocation-free: the
+    /// per-dim index ranges and the odometer reuse owned scratch.
+    fn mark_dirty_around(&mut self, problem: &CscProblem, u0: &[i64]) {
+        let ldims = problem.atom_dims();
+        let d = u0.len();
+        let mut ranges = std::mem::take(&mut self.scratch_ranges);
+        ranges.clear();
+        for i in 0..d {
+            let l = ldims[i] as i64;
+            let a = (u0[i] - l + 1).max(self.segs.domain.lo[i]);
+            let b = (u0[i] + l).min(self.segs.domain.hi[i]);
+            if a >= b {
+                self.scratch_ranges = ranges;
+                return; // V(u0) misses the partitioned domain entirely
+            }
+            let ext = self.segs.seg_ext[i] as i64;
+            let jlo = ((a - self.segs.domain.lo[i]) / ext) as usize;
+            let jhi = (((b - self.segs.domain.lo[i]) + ext - 1) / ext) as usize;
+            ranges.push((jlo, jhi.min(self.segs.counts[i])));
+        }
+        let mut idx = std::mem::take(&mut self.scratch_idx);
+        idx.clear();
+        idx.extend(ranges.iter().map(|r| r.0));
+        'odometer: loop {
+            let mut m = 0usize;
+            for (i, &ji) in idx.iter().enumerate() {
+                m = m * self.segs.counts[i] + ji;
+            }
+            self.dirty[m] = true;
+            for i in (0..d).rev() {
+                idx[i] += 1;
+                if idx[i] < ranges[i].1 {
+                    continue 'odometer;
+                }
+                idx[i] = ranges[i].0;
+            }
+            break;
+        }
+        self.scratch_ranges = ranges;
+        self.scratch_idx = idx;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::NdTensor;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn strategy_parse() {
@@ -116,6 +608,16 @@ mod tests {
         assert_eq!("greedy".parse::<Strategy>().unwrap(), Strategy::Greedy);
         assert_eq!("rcd".parse::<Strategy>().unwrap(), Strategy::Randomized);
         assert!("nope".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn select_mode_parse() {
+        assert_eq!("rescan".parse::<SelectMode>().unwrap(), SelectMode::Rescan);
+        assert_eq!(
+            "incremental".parse::<SelectMode>().unwrap(),
+            SelectMode::Incremental
+        );
+        assert!("nope".parse::<SelectMode>().is_err());
     }
 
     #[test]
@@ -148,14 +650,205 @@ mod tests {
         let dom = Rect::new(vec![0], vec![10]);
         let segs = Segments::for_atoms(dom.clone(), &[8]);
         assert_eq!(segs.len(), 1);
-        assert_eq!(segs.rect(0), dom);
+        assert_eq!(*segs.rect(0), dom);
     }
 
     #[test]
     fn offset_domain_segments() {
         let dom = Rect::new(vec![5], vec![20]);
         let segs = Segments::new(dom, &[6]);
-        assert_eq!(segs.rect(0), Rect::new(vec![5], vec![11]));
-        assert_eq!(segs.rect(2), Rect::new(vec![17], vec![20]));
+        assert_eq!(*segs.rect(0), Rect::new(vec![5], vec![11]));
+        assert_eq!(*segs.rect(2), Rect::new(vec![17], vec![20]));
+    }
+
+    #[test]
+    fn precomputed_rects_match_recomputation() {
+        let dom = Rect::new(vec![3, -2], vec![31, 17]);
+        let segs = Segments::new(dom, &[5, 7]);
+        assert_eq!(segs.rects().len(), segs.len());
+        for m in 0..segs.len() {
+            assert_eq!(*segs.rect(m), segs.compute_rect(m));
+        }
+    }
+
+    // --- SelectionState ---------------------------------------------------
+
+    fn problem_1d(seed: u64) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        let x = NdTensor::from_vec(&[2, 40], rng.normal_vec(80));
+        let d = NdTensor::from_vec(&[3, 2, 5], rng.normal_vec(30));
+        CscProblem::new(x, d, 0.4)
+    }
+
+    fn problem_2d(seed: u64) -> CscProblem {
+        let mut rng = Pcg64::seeded(seed);
+        let x = NdTensor::from_vec(&[1, 14, 16], rng.normal_vec(224));
+        let d = NdTensor::from_vec(&[2, 1, 3, 4], rng.normal_vec(24));
+        CscProblem::new(x, d, 0.4)
+    }
+
+    fn full_state(
+        p: &CscProblem,
+        mode: SelectMode,
+    ) -> (BetaWindow, ZWindow, SelectionState) {
+        let zsp = p.z_spatial_dims();
+        let beta = BetaWindow::init_full(p);
+        let z = ZWindow::zeros(p.n_atoms(), &vec![0; zsp.len()], &zsp);
+        let segs = Segments::for_atoms(Rect::full(&zsp), p.atom_dims());
+        let sel = SelectionState::new(mode, segs, p, &beta, &z);
+        (beta, z, sel)
+    }
+
+    #[test]
+    fn incremental_matches_rescan_per_segment() {
+        for p in [problem_1d(1), problem_1d(9)] {
+            let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+            // Drive a few greedy updates through the fused path and
+            // compare every segment champion against a fresh rescan.
+            for _ in 0..12 {
+                let m_tot = sel.n_segments();
+                for m in 0..m_tot {
+                    let want = beta.best_candidate(&p, &z, sel.segments().rect(m));
+                    let got = sel.best_in_segment(&p, &beta, &z, m);
+                    assert_eq!(got, want, "segment {m} champion diverged");
+                }
+                let Some((k, u, dz)) = sel.best_overall(&p, &beta) else {
+                    break;
+                };
+                sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+                z.add_at(k, &u, dz);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_matches_rescan_per_segment_2d() {
+        let p = problem_2d(2);
+        let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+        for _ in 0..10 {
+            let Some((k, u, dz)) = sel.best_overall(&p, &beta) else {
+                break;
+            };
+            sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+            z.add_at(k, &u, dz);
+            for m in 0..sel.n_segments() {
+                let want = beta.best_candidate(&p, &z, sel.segments().rect(m));
+                assert_eq!(sel.best_in_segment(&p, &beta, &z, m), want);
+            }
+        }
+    }
+
+    #[test]
+    fn best_overall_matches_full_domain_scan() {
+        let p = problem_2d(3);
+        let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+        let full = Rect::full(&p.z_spatial_dims());
+        for _ in 0..10 {
+            let want = beta.best_candidate(&p, &z, &full);
+            let got = sel.best_overall(&p, &beta);
+            assert_eq!(got, want, "tournament diverged from the full scan");
+            let Some((k, u, dz)) = got else { break };
+            sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+            z.add_at(k, &u, dz);
+        }
+    }
+
+    #[test]
+    fn clean_segments_are_skipped_and_bounded_dirtying() {
+        let p = problem_1d(4);
+        let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+        let m_tot = sel.n_segments();
+        // First sweep: everything dirty.
+        for m in 0..m_tot {
+            sel.best_in_segment(&p, &beta, &z, m);
+        }
+        assert_eq!(sel.segments_rescanned, m_tot as u64);
+        // An unapplied (rejected) candidate leaves everything clean.
+        let before = sel.coords_scanned;
+        for m in 0..m_tot {
+            sel.best_in_segment(&p, &beta, &z, m);
+        }
+        assert_eq!(sel.segments_skipped, m_tot as u64);
+        assert_eq!(sel.coords_scanned, before, "clean visits must scan 0 coords");
+        // One update dirties at most 2^d segments.
+        let (k, u, dz) = sel.best_overall(&p, &beta).unwrap();
+        sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+        z.add_at(k, &u, dz);
+        let rescans_before = sel.segments_rescanned;
+        for m in 0..m_tot {
+            sel.best_in_segment(&p, &beta, &z, m);
+        }
+        assert!(
+            sel.segments_rescanned - rescans_before <= 2,
+            "1-D update must dirty at most 2 segments"
+        );
+    }
+
+    #[test]
+    fn remote_update_outside_domain_dirties_overlapped_segments() {
+        // A worker-style sub-domain: segments over the cell [0, 12) of a
+        // wider beta window. An update outside the cell whose V-box
+        // reaches it must invalidate exactly the overlapped champions.
+        let p = problem_1d(5);
+        let zsp = p.z_spatial_dims();
+        let beta_full = BetaWindow::init_full(&p);
+        let mut beta = beta_full.clone();
+        let z = ZWindow::zeros(p.n_atoms(), &[0], &zsp);
+        let cell = Rect::new(vec![0], vec![12]);
+        let segs = Segments::for_atoms(cell, p.atom_dims());
+        let mut sel = SelectionState::new(SelectMode::Incremental, segs, &p, &beta, &z);
+        for m in 0..sel.n_segments() {
+            sel.best_in_segment(&p, &beta, &z, m);
+        }
+        // Remote update at u0 = 14 (V = [10, 19) overlaps the cell tail).
+        sel.apply_update(&p, &mut beta, &z, 1, &[14], 0.7);
+        // z unchanged: 14 is outside this cell-owner's z responsibility
+        // in this synthetic setup — beta/dz_opt in [10, 12) moved.
+        for m in 0..sel.n_segments() {
+            let want = beta.best_candidate(&p, &z, sel.segments().rect(m));
+            assert_eq!(sel.best_in_segment(&p, &beta, &z, m), want, "segment {m}");
+        }
+        assert!(sel.segments_rescanned > sel.n_segments() as u64, "tail segment must rescan");
+    }
+
+    #[test]
+    fn rebuild_resets_after_dictionary_swap() {
+        let p = problem_1d(6);
+        let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+        for _ in 0..4 {
+            let Some((k, u, dz)) = sel.best_overall(&p, &beta) else { break };
+            sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+            z.add_at(k, &u, dz);
+        }
+        // Swap the dictionary, rebuild beta warm, rebuild selection.
+        let mut rng = Pcg64::seeded(7);
+        let mut p2 = p.clone();
+        p2.update_dict(NdTensor::from_vec(&[3, 2, 5], rng.normal_vec(30)));
+        let beta2 = BetaWindow::init_full_warm(
+            &p2,
+            &{
+                let mut zt = NdTensor::zeros(&p2.z_dims());
+                zt.data_mut().copy_from_slice(&z.data);
+                zt
+            },
+        );
+        sel.rebuild(&p2, &beta2, &z);
+        for m in 0..sel.n_segments() {
+            let want = beta2.best_candidate(&p2, &z, sel.segments().rect(m));
+            assert_eq!(sel.best_in_segment(&p2, &beta2, &z, m), want);
+        }
+    }
+
+    #[test]
+    fn rescan_mode_is_passthrough() {
+        let p = problem_1d(8);
+        let (beta, z, mut sel) = full_state(&p, SelectMode::Rescan);
+        for m in 0..sel.n_segments() {
+            let want = beta.best_candidate(&p, &z, sel.segments().rect(m));
+            assert_eq!(sel.best_in_segment(&p, &beta, &z, m), want);
+        }
+        assert_eq!(sel.segments_skipped, 0);
+        assert_eq!(sel.segments_rescanned, 0);
+        assert!(sel.coords_scanned > 0);
     }
 }

@@ -1,7 +1,7 @@
 //! Configuration for the distributed solver.
 
 pub use crate::dicod::partition::PartitionKind;
-use crate::csc::select::Strategy;
+use crate::csc::select::{SelectMode, Strategy};
 
 /// Configuration of a DiCoDiLe-Z / DICOD run.
 #[derive(Clone, Debug)]
@@ -13,6 +13,11 @@ pub struct DicodConfig {
     /// Local selection strategy: `LocallyGreedy` (DiCoDiLe-Z) or
     /// `Greedy` (DICOD). `Randomized` is also supported for ablations.
     pub strategy: Strategy,
+    /// Incremental (cached dz_opt + segment champions, the default) vs
+    /// full-rescan segment selection in the workers' hot loop; both
+    /// select bit-identical coordinates. Defaults from the
+    /// `DICODILE_SELECT` env toggle.
+    pub select: SelectMode,
     /// Enable the asynchronous soft-lock mechanism (eq. 14). Disabling
     /// it reproduces the paper's Fig. 5 divergence demonstration.
     pub soft_lock: bool,
@@ -51,6 +56,7 @@ impl Default for DicodConfig {
             n_workers: 4,
             partition: PartitionKind::Grid,
             strategy: Strategy::LocallyGreedy,
+            select: SelectMode::from_env(),
             soft_lock: true,
             tol: 1e-6,
             max_updates: 10_000_000,

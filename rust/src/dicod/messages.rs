@@ -148,6 +148,17 @@ pub struct WorkerStats {
     pub msgs_received: u64,
     /// Full sweeps over the local segments.
     pub sweeps: u64,
+    /// Clean-segment selection visits answered from the cached champion
+    /// in O(1) (incremental selection; always 0 under
+    /// `DICODILE_SELECT=rescan`).
+    pub segments_skipped: u64,
+    /// Dirty-segment rescans of the cached dz_opt (each costs K·|C_m|
+    /// coordinate reads).
+    pub segments_rescanned: u64,
+    /// Coordinates whose cached dz_opt was computed by a full fill
+    /// (one K·|window| fill at spawn and per `SetDict`; 0 under
+    /// `DICODILE_SELECT=rescan`). Charged to `work` when it happens.
+    pub dz_cache_filled: u64,
     /// Times the worker paused (went idle).
     pub pauses: u64,
     /// Abstract work units (coordinates scanned + beta entries touched):
@@ -178,6 +189,9 @@ impl WorkerStats {
         self.msgs_sent += other.msgs_sent;
         self.msgs_received += other.msgs_received;
         self.sweeps += other.sweeps;
+        self.segments_skipped += other.segments_skipped;
+        self.segments_rescanned += other.segments_rescanned;
+        self.dz_cache_filled += other.dz_cache_filled;
         self.pauses += other.pauses;
         self.work += other.work;
         self.solves += other.solves;
@@ -194,12 +208,25 @@ mod tests {
 
     #[test]
     fn stats_merge() {
-        let mut a = WorkerStats { updates: 3, msgs_sent: 1, ..Default::default() };
-        let b = WorkerStats { updates: 4, soft_locked: 2, ..Default::default() };
+        let mut a = WorkerStats {
+            updates: 3,
+            msgs_sent: 1,
+            segments_skipped: 10,
+            ..Default::default()
+        };
+        let b = WorkerStats {
+            updates: 4,
+            soft_locked: 2,
+            segments_skipped: 5,
+            segments_rescanned: 7,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.updates, 7);
         assert_eq!(a.soft_locked, 2);
         assert_eq!(a.msgs_sent, 1);
+        assert_eq!(a.segments_skipped, 15);
+        assert_eq!(a.segments_rescanned, 7);
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //! on its inbox, applying any late neighbour notifications so its
 //! windows stay consistent, and serves `ComputeStats` / `SetDict` /
 //! `Gather` commands from its resident state.
+//!
+//! Segment selection runs through the worker's resident
+//! [`SelectionState`] (see `csc::select`): clean segments answer their
+//! visit from a cached champion in O(1) and only segments dirtied by a
+//! local update, a neighbour's notification, or a `SetDict` beta
+//! rebuild pay a rescan — observable via the `segments_skipped` /
+//! `segments_rescanned` worker counters, and toggleable back to the
+//! always-rescan path with `DICODILE_SELECT=rescan`.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -31,7 +39,7 @@ use std::time::{Duration, Instant};
 
 use crate::csc::beta::{BetaWindow, ZWindow};
 use crate::csc::problem::CscProblem;
-use crate::csc::select::{Segments, Strategy};
+use crate::csc::select::{Segments, SelectionState, Strategy};
 use crate::dicod::config::DicodConfig;
 use crate::dicod::messages::{
     CoordMsg, DoneMsg, SolveDoneMsg, StatsMsg, StatusMsg, UpdateMsg, WorkerMsg, WorkerStats,
@@ -95,11 +103,18 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
         }
     };
 
-    // Local segments C_m^(w) over the worker's own cell.
+    // Local segments C_m^(w) over the worker's own cell, owned by the
+    // selection state: clean segments answer their visit from a cached
+    // champion in O(1); remote updates and `SetDict` re-inits mark the
+    // overlapped segments dirty (see `csc::select`).
     let segs = match cfg.strategy {
         Strategy::Greedy => Segments::new(cell.clone(), &cell.extents()),
         _ => Segments::for_atoms(cell.clone(), problem.atom_dims()),
     };
+    let mut sel = SelectionState::new(cfg.select, segs, &problem, &beta, &z);
+    // The incremental cache build is real work: charge it to the
+    // simulated clock so the scaling figures stay honest.
+    stats.work += sel.coords_cache_filled;
     // The extension E(S_w) = ext \ cell, decomposed into boxes for the
     // soft-lock max computation.
     let ext_parts = box_difference(&ext, &cell);
@@ -113,7 +128,7 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
             // settles) before the next phase command, which the FIFO
             // inbox guarantees is behind it.
             Ok(WorkerMsg::Update(u)) => {
-                apply_remote_update(&problem, &mut beta, &mut z, &u, &mut stats)
+                apply_remote_update(&problem, &mut beta, &mut z, &mut sel, &u, &mut stats)
             }
             // Stray Stop (e.g. a timeout race after the phase already
             // ended): nothing to do outside a solve phase.
@@ -130,7 +145,7 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
                     coord: &coord,
                     beta: &mut beta,
                     z: &mut z,
-                    segs: &segs,
+                    sel: &mut sel,
                     ext_parts: &ext_parts,
                     stats: &mut stats,
                 });
@@ -148,11 +163,18 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
             Ok(WorkerMsg::SetDict(msg)) => {
                 problem = msg.problem;
                 beta = BetaWindow::init_window_warm(&problem, &ext.lo, &ext_dims, &z);
+                // beta was rebuilt wholesale under the new dictionary:
+                // refresh the dz_opt cache (charged to the simulated
+                // clock) and dirty every segment.
+                let filled_before = sel.coords_cache_filled;
+                sel.rebuild(&problem, &beta, &z);
+                stats.work += sel.coords_cache_filled - filled_before;
                 stats.beta_warm_reinits += 1;
                 let _ = coord.send(CoordMsg::DictSet { from: rank });
             }
             Ok(WorkerMsg::Gather) => {
                 stats.gathers += 1;
+                sync_selection_counters(&mut stats, &sel);
                 let z_cell = extract_cell(&z, &cell, k_tot);
                 let _ = coord
                     .send(CoordMsg::Done(DoneMsg { from: rank, z_cell, stats: stats.clone() }));
@@ -173,7 +195,7 @@ struct SolveCtx<'a> {
     coord: &'a Sender<CoordMsg>,
     beta: &'a mut BetaWindow,
     z: &'a mut ZWindow,
-    segs: &'a Segments,
+    sel: &'a mut SelectionState,
     ext_parts: &'a [Rect],
     stats: &'a mut WorkerStats,
 }
@@ -192,11 +214,11 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
         coord,
         beta,
         z,
-        segs,
+        sel,
         ext_parts,
         stats,
     } = ctx;
-    let m_tot = segs.len();
+    let m_tot = sel.n_segments();
     let max_updates = (cfg.max_updates / grid.n_workers().max(1)).max(1) as u64;
     let deadline = Instant::now() + Duration::from_secs_f64(cfg.timeout);
 
@@ -234,7 +256,7 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
         while drain_now {
             match inbox.try_recv() {
                 Ok(WorkerMsg::Update(u)) => {
-                    apply_remote_update(problem, beta, z, &u, stats);
+                    apply_remote_update(problem, beta, z, sel, &u, stats);
                     if idle {
                         if !capped && !diverged {
                             idle = false;
@@ -282,7 +304,7 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
         if idle {
             match inbox.recv_timeout(IDLE_POLL) {
                 Ok(WorkerMsg::Update(u)) => {
-                    apply_remote_update(problem, beta, z, &u, stats);
+                    apply_remote_update(problem, beta, z, sel, &u, stats);
                     if !capped && !diverged {
                         idle = false;
                         sweep_max = 0.0;
@@ -309,10 +331,14 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
         }
 
         // -- 3. one locally-greedy iteration on segment m -----------------
+        // Clean segment -> cached champion in O(1); dirty -> rescan of
+        // the cached dz_opt. `work` charges only the coordinates the
+        // visit actually examined (in rescan mode the delta is the full
+        // K·|C_m| scan, the pre-incremental accounting).
         stats.iterations += 1;
-        let rect = segs.rect(m);
-        stats.work += (problem.n_atoms() * rect.size()) as u64;
-        let candidate = beta.best_candidate(problem, z, &rect);
+        let scanned_before = sel.coords_scanned;
+        let candidate = sel.best_in_segment(problem, beta, z, m);
+        stats.work += sel.coords_scanned - scanned_before;
         if let Some((k0, u0, dz0)) = candidate {
             if dz0.abs() >= cfg.tol {
                 let accepted = if cfg.soft_lock && grid.in_soft_border(rank, &u0) {
@@ -331,7 +357,7 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
                     // of spinning on blocked borders (crucial on dense
                     // images, where border candidates are plentiful).
                     sweep_max = sweep_max.max(dz0.abs());
-                    stats.work += beta.apply_update(problem, k0, &u0, dz0) as u64;
+                    stats.work += sel.apply_update(problem, beta, z, k0, &u0, dz0) as u64;
                     z.add_at(k0, &u0, dz0);
                     stats.updates += 1;
                     phase_updates += 1;
@@ -385,19 +411,32 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
             sweep_max = 0.0;
         }
     }
+    sync_selection_counters(stats, sel);
     alive
 }
 
-/// Apply a neighbour's update notification to the local windows.
+/// Snapshot the selection state's cumulative counters into the worker
+/// counters (assignment, not accumulation: both live for the worker's
+/// whole lifetime).
+fn sync_selection_counters(stats: &mut WorkerStats, sel: &SelectionState) {
+    stats.segments_skipped = sel.segments_skipped;
+    stats.segments_rescanned = sel.segments_rescanned;
+    stats.dz_cache_filled = sel.coords_cache_filled;
+}
+
+/// Apply a neighbour's update notification to the local windows,
+/// marking the segments its V-box overlaps dirty so their cached
+/// champions are recomputed on the next visit.
 fn apply_remote_update(
     problem: &CscProblem,
     beta: &mut BetaWindow,
     z: &mut ZWindow,
+    sel: &mut SelectionState,
     msg: &UpdateMsg,
     stats: &mut WorkerStats,
 ) {
     stats.msgs_received += 1;
-    stats.work += beta.apply_update(problem, msg.k, &msg.u, msg.dz) as u64;
+    stats.work += sel.apply_update(problem, beta, z, msg.k, &msg.u, msg.dz) as u64;
     if z.contains(&msg.u) {
         z.add_at(msg.k, &msg.u, msg.dz);
     }

@@ -11,7 +11,15 @@
 //! The crate is layered bottom-up: [`tensor`] / [`fft`] / [`conv`]
 //! provide dense n-d arrays, cached-plan FFTs and the direct-vs-FFT
 //! correlation engine; [`csc`] defines the sparse-coding problem and
-//! the sequential solvers (LGCD/greedy/randomized CD, FISTA); [`dicod`]
+//! the sequential solvers (LGCD/greedy/randomized CD, FISTA) — its CD
+//! hot loop pairs the incremental beta maintenance with an
+//! **incremental selection state** ([`csc::select::SelectionState`]):
+//! one fused V(u0) pass updates beta and the per-coordinate optimal
+//! step `dz_opt` together, and per-segment cached champions with dirty
+//! tracking make clean-segment visits O(1) (bit-identical to a full
+//! rescan; toggle with `DICODILE_SELECT=rescan|incremental`, observable
+//! via the `segments_skipped` / `segments_rescanned` counters in
+//! `CdStats` and `WorkerStats`); [`dicod`]
 //! is the distributed runtime — a worker grid partitioned over the
 //! activation domain whose resident [`dicod::pool::WorkerPool`] is
 //! driven through `Solve -> ComputeStats -> SetDict -> Gather` phases;

@@ -159,14 +159,24 @@ fn cmd_csc(tokens: Vec<String>) -> i32 {
     );
     if let Some(s) = r.cd_stats {
         println!(
-            "  iterations={} updates={} scanned={} beta_touched={}",
-            s.iterations, s.updates, s.coords_scanned, s.beta_touched
+            "  iterations={} updates={} scanned={} beta_touched={} seg_skipped={} seg_rescanned={}",
+            s.iterations,
+            s.updates,
+            s.coords_scanned,
+            s.beta_touched,
+            s.segments_skipped,
+            s.segments_rescanned
         );
     }
     if let Some(p) = r.pool {
         println!(
-            "  workers={} updates={} msgs={} soft_locked={}",
-            p.n_workers, p.stats.updates, p.stats.msgs_sent, p.stats.soft_locked
+            "  workers={} updates={} msgs={} soft_locked={} seg_skipped={} seg_rescanned={}",
+            p.n_workers,
+            p.stats.updates,
+            p.stats.msgs_sent,
+            p.stats.soft_locked,
+            p.stats.segments_skipped,
+            p.stats.segments_rescanned
         );
     }
     0

@@ -1,0 +1,307 @@
+//! Parity suite for the incremental selection path
+//! (`DICODILE_SELECT=incremental`, the default) against the
+//! always-rescan path: the two must pick **bit-identical** coordinates
+//! on every geometry, strategy and warm start, while the incremental
+//! path scans strictly no more coordinates. Distributed coverage runs
+//! the resident worker pool in both modes — single-worker grids (which
+//! are deterministic) must match bitwise; multi-worker grids must
+//! converge to the same optimum (cost + KKT) with the selection-counter
+//! invariants holding, including across the `SetDict` warm-reinit and
+//! remote-update dirtying paths.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! worker counts — `scripts/tier1.sh` runs this suite once per count.
+
+use std::sync::Arc;
+
+use dicodile::csc::cd::{kkt_violation, solve_cd, solve_cd_warm, CdConfig, CdResult};
+use dicodile::csc::problem::CscProblem;
+use dicodile::csc::select::{SelectMode, Strategy};
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::pool::WorkerPool;
+use dicodile::tensor::NdTensor;
+use dicodile::util::proptest_lite::{check, FnGen};
+use dicodile::util::rng::Pcg64;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn problem_1d(seed: u64, t: usize, k: usize, l: usize) -> CscProblem {
+    let data = SyntheticConfig::signal_1d(t, k, l).generate(seed);
+    CscProblem::with_lambda_frac(data.x, data.d_true, 0.1)
+}
+
+fn problem_2d(seed: u64, s: usize, k: usize, l: usize) -> CscProblem {
+    let data = SyntheticConfig::image_2d(s, s, k, l).generate(seed);
+    CscProblem::with_lambda_frac(data.x, data.d_true, 0.1)
+}
+
+/// Incremental result `inc` must replay rescan `res` bit for bit.
+fn assert_bit_identical(inc: &CdResult, res: &CdResult, label: &str) {
+    assert_eq!(inc.z.dims(), res.z.dims(), "{label}: Z dims");
+    for (i, (a, b)) in inc.z.data().iter().zip(res.z.data()).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{label}: Z[{i}] diverged: {a} vs {b}"
+        );
+    }
+    assert_eq!(inc.stats.iterations, res.stats.iterations, "{label}: iterations");
+    assert_eq!(inc.stats.updates, res.stats.updates, "{label}: updates");
+    assert_eq!(inc.stats.beta_touched, res.stats.beta_touched, "{label}: beta_touched");
+    assert_eq!(inc.stats.converged, res.stats.converged, "{label}: converged");
+    assert_eq!(inc.cost_trace, res.cost_trace, "{label}: cost trace");
+    assert!(
+        inc.stats.coords_scanned <= res.stats.coords_scanned,
+        "{label}: incremental scanned {} > rescan {}",
+        inc.stats.coords_scanned,
+        res.stats.coords_scanned
+    );
+}
+
+fn run_both(p: &CscProblem, base: &CdConfig, z0: Option<&NdTensor>) -> (CdResult, CdResult) {
+    let inc = solve_cd_warm(p, &CdConfig { select: SelectMode::Incremental, ..base.clone() }, z0);
+    let res = solve_cd_warm(p, &CdConfig { select: SelectMode::Rescan, ..base.clone() }, z0);
+    (inc, res)
+}
+
+// ---------------------------------------------------------------------------
+// Sequential: bit-identical across strategies, geometries, warm starts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sequential_parity_all_strategies_1d() {
+    let p = problem_1d(41, 260, 3, 7);
+    for strategy in [Strategy::Greedy, Strategy::Randomized, Strategy::LocallyGreedy] {
+        let base = CdConfig { strategy, tol: 1e-8, cost_every: 50, ..Default::default() };
+        let (inc, res) = run_both(&p, &base, None);
+        assert!(res.stats.converged, "{strategy:?} rescan did not converge");
+        assert_bit_identical(&inc, &res, &format!("1d {strategy:?}"));
+    }
+}
+
+#[test]
+fn sequential_parity_all_strategies_2d() {
+    let p = problem_2d(42, 24, 2, 4);
+    for strategy in [Strategy::Greedy, Strategy::Randomized, Strategy::LocallyGreedy] {
+        let base = CdConfig { strategy, tol: 1e-8, ..Default::default() };
+        let (inc, res) = run_both(&p, &base, None);
+        assert!(res.stats.converged, "{strategy:?} rescan did not converge");
+        assert_bit_identical(&inc, &res, &format!("2d {strategy:?}"));
+    }
+}
+
+#[test]
+fn sequential_parity_warm_start() {
+    // Warm starts exercise `init_full_warm` + a nonzero initial dz_opt
+    // cache, then the tight-tol tail where clean skips dominate.
+    for (p, label) in [
+        (problem_1d(43, 220, 2, 6), "1d"),
+        (problem_2d(44, 22, 2, 4), "2d"),
+    ] {
+        let loose = solve_cd(&p, &CdConfig { tol: 1e-3, ..Default::default() });
+        for strategy in [Strategy::Greedy, Strategy::LocallyGreedy] {
+            let base = CdConfig { strategy, tol: 1e-10, ..Default::default() };
+            let (inc, res) = run_both(&p, &base, Some(&loose.z));
+            assert_bit_identical(&inc, &res, &format!("warm {label} {strategy:?}"));
+            assert!(
+                inc.stats.segments_skipped > 0,
+                "warm {label} {strategy:?}: the near-converged tail must skip clean segments"
+            );
+        }
+    }
+}
+
+#[test]
+fn sequential_parity_randomized_geometries() {
+    // Randomized consumes the RNG identically in both modes, so even
+    // the mid-run trajectory (not just the fixpoint) must agree.
+    let p = problem_2d(45, 20, 3, 3);
+    let base = CdConfig {
+        strategy: Strategy::Randomized,
+        tol: 1e-7,
+        seed: 9,
+        cost_every: 100,
+        ..Default::default()
+    };
+    let (inc, res) = run_both(&p, &base, None);
+    assert_bit_identical(&inc, &res, "randomized 2d");
+}
+
+#[test]
+fn sequential_parity_proptest() {
+    // proptest-lite sweep over random 1-D geometries (t, k, l, seed).
+    let gen = FnGen(|rng: &mut Pcg64| {
+        (
+            60 + rng.below(200),
+            1 + rng.below(4),
+            3 + rng.below(6),
+            rng.below(1_000_000) as u64,
+        )
+    });
+    check("incremental == rescan (lgcd, random geometry)", 8, &gen, |&(t, k, l, seed)| {
+        let p = problem_1d(seed, t, k, l);
+        let base = CdConfig { tol: 1e-7, ..Default::default() };
+        let (inc, res) = run_both(&p, &base, None);
+        inc.stats.iterations == res.stats.iterations
+            && inc.stats.updates == res.stats.updates
+            && inc.stats.coords_scanned <= res.stats.coords_scanned
+            && inc
+                .z
+                .data()
+                .iter()
+                .zip(res.z.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Distributed: resident pool in both modes
+// ---------------------------------------------------------------------------
+
+fn pool_cfg(w: usize, mode: SelectMode) -> DicodConfig {
+    DicodConfig { n_workers: w, tol: 1e-7, select: mode, ..Default::default() }
+}
+
+#[test]
+fn distributed_single_worker_is_bit_identical() {
+    // A single-worker grid has no message races: the whole trajectory
+    // is deterministic, so the two modes must gather the same bits.
+    for p in [problem_1d(46, 240, 3, 6), problem_2d(47, 24, 2, 4)] {
+        let mut pools: Vec<(NdTensor, u64, u64, u64)> = Vec::new();
+        for mode in [SelectMode::Incremental, SelectMode::Rescan] {
+            let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &pool_cfg(1, mode), None);
+            assert!(pool.solve().converged, "{mode:?}");
+            let z = pool.gather();
+            let agg = pool.aggregate_stats();
+            pools.push((z, agg.iterations, agg.segments_skipped, agg.segments_rescanned));
+        }
+        let (z_inc, it_inc, skipped, rescanned) = &pools[0];
+        let (z_res, it_res, res_skipped, res_rescanned) = &pools[1];
+        assert_eq!(it_inc, it_res, "iteration counts diverge");
+        for (a, b) in z_inc.data().iter().zip(z_res.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gathered Z diverged");
+        }
+        // Counter invariants: every incremental visit is a skip or a
+        // rescan; the rescan mode records neither.
+        assert_eq!(skipped + rescanned, *it_inc);
+        assert!(*skipped > 0, "resident solve must serve clean visits in O(1)");
+        assert_eq!(*res_skipped, 0);
+        assert_eq!(*res_rescanned, 0);
+    }
+}
+
+#[test]
+fn distributed_parity_multi_worker() {
+    // Multi-worker runs are asynchronous (message timing varies), so
+    // bitwise equality across modes is not defined — but both must
+    // reach the lasso optimum (same cost as sequential, tiny KKT
+    // residual: a stale champion that survived a missed dirty mark
+    // would fail this by stopping early) with the visit invariant held.
+    let p1 = problem_1d(48, 260, 3, 6);
+    let p2 = problem_2d(49, 26, 2, 4);
+    for p in [p1, p2] {
+        let seq = solve_cd(&p, &CdConfig { tol: 1e-8, ..Default::default() });
+        let cs = p.cost(&seq.z);
+        for w in worker_counts() {
+            for mode in [SelectMode::Incremental, SelectMode::Rescan] {
+                let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &pool_cfg(w, mode), None);
+                assert!(pool.solve().converged, "W={w} {mode:?}");
+                let z = pool.gather();
+                let cd = p.cost(&z);
+                assert!(
+                    (cd - cs).abs() < 1e-6 * (1.0 + cs.abs()),
+                    "W={w} {mode:?}: {cd} vs {cs}"
+                );
+                assert!(
+                    kkt_violation(&p, &z) < 1e-5,
+                    "W={w} {mode:?}: stale-champion residual"
+                );
+                let agg = pool.aggregate_stats();
+                if mode == SelectMode::Incremental {
+                    assert_eq!(agg.segments_skipped + agg.segments_rescanned, agg.iterations);
+                } else {
+                    assert_eq!(agg.segments_skipped + agg.segments_rescanned, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn distributed_set_dict_reinit_rescans_then_converges() {
+    // The SetDict warm-reinit path must invalidate every cached
+    // champion (beta was rebuilt wholesale): the follow-up solve has to
+    // rescan before it may skip, and still land on the new optimum.
+    let p0 = problem_1d(50, 240, 2, 6);
+    let mut rng = Pcg64::seeded(51);
+    let d1 = NdTensor::from_vec(&[2, 1, 6], {
+        let mut v = rng.normal_vec(12);
+        for atom in v.chunks_mut(6) {
+            let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in atom.iter_mut() {
+                *x /= n;
+            }
+        }
+        v
+    });
+    let mut p1 = p0.clone();
+    p1.update_dict(d1);
+    let seq = solve_cd(&p1, &CdConfig { tol: 1e-7, ..Default::default() });
+    let cs = p1.cost(&seq.z);
+    for w in worker_counts() {
+        let mut pool =
+            WorkerPool::spawn(Arc::new(p0.clone()), &pool_cfg(w, SelectMode::Incremental), None);
+        assert!(pool.solve().converged, "W={w} initial solve");
+        let rescans_before = pool.aggregate_stats().segments_rescanned;
+        pool.set_dict(Arc::new(p1.clone()));
+        assert!(pool.solve().converged, "W={w} post-SetDict solve");
+        let z = pool.gather();
+        let cd = p1.cost(&z);
+        assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "W={w}: {cd} vs {cs}");
+        let agg = pool.aggregate_stats();
+        assert!(
+            agg.segments_rescanned > rescans_before,
+            "W={w}: SetDict must dirty the cached champions"
+        );
+    }
+}
+
+#[test]
+fn distributed_remote_updates_and_soft_locks_stay_consistent() {
+    // A workload sized so neighbour traffic (remote-update dirtying)
+    // and soft-lock rejections actually occur; delayed inbox drains
+    // widen the async window. Correctness gate: the fixpoint is the
+    // sequential optimum, i.e. no remote update ever left a stale
+    // clean champion behind.
+    let p = problem_1d(52, 300, 3, 8);
+    let seq = solve_cd(&p, &CdConfig { tol: 1e-7, ..Default::default() });
+    let cs = p.cost(&seq.z);
+    for w in worker_counts() {
+        if w < 2 {
+            continue; // needs real neighbour traffic
+        }
+        let cfg = DicodConfig {
+            inbox_every: 16,
+            ..pool_cfg(w, SelectMode::Incremental)
+        };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        assert!(pool.solve().converged, "W={w}");
+        let z = pool.gather();
+        let cd = p.cost(&z);
+        assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "W={w}: {cd} vs {cs}");
+        assert!(kkt_violation(&p, &z) < 1e-5, "W={w}");
+        let agg = pool.aggregate_stats();
+        assert!(agg.msgs_received > 0, "W={w}: no neighbour traffic exercised");
+        assert_eq!(agg.segments_skipped + agg.segments_rescanned, agg.iterations);
+    }
+}

@@ -25,6 +25,11 @@ for w in 1 2 4; do
   DICODILE_TEST_WORKERS=$w cargo test -q --test worker_pool
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_session
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_concurrency
+  # Incremental-vs-rescan selection parity: sequential runs must be
+  # bit-identical; distributed runs must hold the clean/dirty counter
+  # invariants and land on the sequential optimum (incl. SetDict
+  # re-init and remote-update dirtying).
+  DICODILE_TEST_WORKERS=$w cargo test -q --test select_parity
 done
 
 # Examples smoke: the quickstart exercises the builder/session/model
@@ -38,6 +43,13 @@ cargo run --release --example quickstart
 # (encode_concurrent_s), to BENCH_cdl_outer.json (single rep for CI;
 # drop the env for real runs).
 DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer
+
+# Selection smoke bench: A/Bs incremental dz_opt selection against the
+# full-rescan path at tol 1e-4 / 1e-8 on the 2-D texture workload,
+# verifies bit-identical trajectories, and writes the scanned-coords +
+# wall-clock record to BENCH_lgcd_selection.json (single rep for CI;
+# the section filter skips fig3's slow Greedy strategy sweep).
+DICODILE_FIG3_SECTION=selection DICODILE_BENCH_REPS=1 cargo bench --bench fig3_strategies
 
 if cargo fmt --version >/dev/null 2>&1; then
   # Advisory for now: the gate is build + tests; formatting drift is
