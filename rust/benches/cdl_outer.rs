@@ -5,8 +5,10 @@
 //! pool vs a cold fresh-session encode (spawn + cold beta bootstrap
 //! every call), plus concurrent serving — wall-clock for C=1/2/4
 //! parallel clients encoding C distinct observations through clones of
-//! ONE shared session (`encode_concurrent_s`). Writes
-//! BENCH_cdl_outer.json.
+//! ONE shared session (`encode_concurrent_s`), and the transport seam's
+//! price: the same persistent run over the socket wire vs in-process
+//! channels, with the SetDict frame codec isolated (`transport`).
+//! Writes BENCH_cdl_outer.json.
 //!
 //!     cargo bench --bench cdl_outer
 //!     DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer   # CI smoke
@@ -16,10 +18,18 @@ use dicodile::bench::{BenchConfig, Table};
 use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CdlResult, CscBackend};
 use dicodile::data::starfield::StarfieldConfig;
 use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::messages::{decode_frame, encode_worker_frame, DictUpdate, SetDictMsg, WorkerMsg};
+use dicodile::dicod::transport::TransportKind;
 use dicodile::tensor::NdTensor;
 use dicodile::util::json::Json;
 
-fn run(x: &NdTensor, persistent: bool, iters: usize, workers: usize) -> CdlResult {
+fn run(
+    x: &NdTensor,
+    persistent: bool,
+    transport: TransportKind,
+    iters: usize,
+    workers: usize,
+) -> CdlResult {
     let cfg = CdlConfig {
         n_atoms: 5,
         atom_dims: vec![8, 8],
@@ -29,6 +39,7 @@ fn run(x: &NdTensor, persistent: bool, iters: usize, workers: usize) -> CdlResul
         csc_tol: 5e-3,
         csc: CscBackend::Distributed(DicodConfig {
             persistent,
+            transport,
             ..DicodConfig::dicodile(workers)
         }),
         seed: 1,
@@ -71,18 +82,18 @@ fn main() {
     );
 
     // Best-of-reps totals; the per-iteration trace shown is the last run's.
-    let mut best = |persistent: bool| -> (CdlResult, f64) {
+    let mut best = |persistent: bool, transport: TransportKind| -> (CdlResult, f64) {
         let mut fastest = f64::MAX;
         let mut last = None;
         for _ in 0..bc.reps.max(1) {
-            let r = run(&x, persistent, iters, workers);
+            let r = run(&x, persistent, transport, iters, workers);
             fastest = fastest.min(r.runtime);
             last = Some(r);
         }
         (last.unwrap(), fastest)
     };
-    let (teardown, teardown_s) = best(false);
-    let (persistent, persistent_s) = best(true);
+    let (teardown, teardown_s) = best(false, TransportKind::Channel);
+    let (persistent, persistent_s) = best(true, TransportKind::Channel);
 
     let mut table = Table::new(&["iter", "csc td[s]", "csc pp[s]", "dict td[s]", "dict pp[s]"]);
     for (a, b) in teardown.trace.iter().zip(&persistent.trace) {
@@ -188,6 +199,37 @@ fn main() {
         concurrent.push((c, best));
     }
 
+    // ---- transport overhead: channel vs socket wire --------------------
+    // Same persistent CDL run over the socket transport: every message
+    // (incl. each SetDict broadcast, serialized once per worker) crosses
+    // the length-prefixed frame codec and a loopback socket. The ratio
+    // against `persistent_total_s` is the end-to-end price of the wire;
+    // the codec micro-number isolates the per-SetDict encode+decode cost.
+    let (_, socket_s) = best(true, TransportKind::Socket);
+    println!(
+        "transport: channel {persistent_s:.2}s  socket {socket_s:.2}s  \
+         (overhead {:.2}x)",
+        socket_s / persistent_s.max(1e-12)
+    );
+    let du = DictUpdate {
+        d: model.d.clone(),
+        lambda: model.lambda,
+        fingerprint: DictUpdate::geometry_fingerprint(x.dims(), model.d.dims()),
+    };
+    let frame = encode_worker_frame(&WorkerMsg::SetDict(SetDictMsg::Wire(du.clone())));
+    let setdict_bytes = frame.len();
+    let codec_reps = 200usize.max(bc.reps);
+    let t0 = std::time::Instant::now();
+    for _ in 0..codec_reps {
+        let f = encode_worker_frame(&WorkerMsg::SetDict(SetDictMsg::Wire(du.clone())));
+        decode_frame(&f).expect("setdict frame");
+    }
+    let setdict_codec_s = t0.elapsed().as_secs_f64() / codec_reps as f64;
+    println!(
+        "transport: SetDict frame {setdict_bytes} B, encode+decode {:.1}us",
+        setdict_codec_s * 1e6
+    );
+
     let record = Json::obj(vec![
         ("bench", Json::str("cdl_outer")),
         (
@@ -207,6 +249,18 @@ fn main() {
         ("encode_warm_s", Json::Num(warm_s)),
         ("encode_cold_s", Json::Num(cold_s)),
         ("encode_speedup", Json::Num(cold_s / warm_s.max(1e-12))),
+        (
+            // Channel-vs-socket wire cost for the same persistent run,
+            // plus the isolated SetDict frame codec price.
+            "transport",
+            Json::obj(vec![
+                ("channel_total_s", Json::Num(persistent_s)),
+                ("socket_total_s", Json::Num(socket_s)),
+                ("socket_overhead", Json::Num(socket_s / persistent_s.max(1e-12))),
+                ("setdict_frame_bytes", Json::Num(setdict_bytes as f64)),
+                ("setdict_codec_s", Json::Num(setdict_codec_s)),
+            ]),
+        ),
         (
             // Wall-clock for C parallel clients encoding C distinct
             // (pre-warmed) observations through one shared session.

@@ -29,6 +29,7 @@ use crate::cdl::init::InitStrategy;
 use crate::csc::encode::{EncodeConfig, Solver};
 use crate::csc::select::Strategy;
 use crate::dicod::config::DicodConfig;
+use crate::dicod::transport::TransportKind;
 use crate::dict::pgd::PgdConfig;
 
 /// Facade entry point: `Dicodile::builder()…build()` yields a
@@ -273,6 +274,18 @@ impl DicodileBuilder {
         self
     }
 
+    /// Select the worker-grid transport on a distributed backend
+    /// (no-op otherwise): in-process channels (default) or
+    /// length-prefixed frames over loopback sockets. Both deliver the
+    /// identical phase protocol; see
+    /// [`crate::dicod::transport`]. Overrides `DICODILE_TRANSPORT`.
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        if let Backend::Distributed(d) = &mut self.backend {
+            d.transport = t;
+        }
+        self
+    }
+
     /// Dictionary-update (PGD) configuration.
     pub fn dict_cfg(mut self, cfg: PgdConfig) -> Self {
         self.dict_cfg = cfg;
@@ -414,6 +427,18 @@ mod tests {
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.verbose, cfg.verbose);
         assert!(matches!(back.csc, CscBackend::Sequential));
+    }
+
+    #[test]
+    fn transport_setter_targets_distributed_backends() {
+        let b = Dicodile::builder().dicodile(2).transport(TransportKind::Socket);
+        match &b.backend {
+            Backend::Distributed(d) => assert_eq!(d.transport, TransportKind::Socket),
+            other => panic!("expected distributed, got {other:?}"),
+        }
+        // No-op on a sequential backend.
+        let b = Dicodile::builder().sequential().transport(TransportKind::Socket);
+        assert!(matches!(b.backend, Backend::Sequential(_)));
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub fn to_json(result: &CdlResult) -> Json {
                 Some(p) => Json::obj(vec![
                     ("n_workers", Json::Num(p.n_workers as f64)),
                     ("workers_spawned", Json::Num(p.workers_spawned as f64)),
+                    ("transport", Json::str(p.transport.name())),
                     ("iterations", Json::Num(p.stats.iterations as f64)),
                     ("updates", Json::Num(p.stats.updates as f64)),
                     ("msgs_sent", Json::Num(p.stats.msgs_sent as f64)),
@@ -162,6 +163,7 @@ mod tests {
         r.pool = Some(PoolReport {
             n_workers: 2,
             workers_spawned: 2,
+            transport: crate::dicod::transport::TransportKind::Channel,
             stats: stats.clone(),
             per_worker: vec![stats.clone(), WorkerStats::default()],
             evicted: false,
@@ -171,6 +173,7 @@ mod tests {
         assert_eq!(pool.get("segments_skipped").unwrap().as_f64(), Some(60.0));
         assert_eq!(pool.get("segments_rescanned").unwrap().as_f64(), Some(40.0));
         assert_eq!(pool.get("n_workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(pool.get("transport").unwrap().as_str(), Some("channel"));
     }
 
     #[test]

@@ -133,6 +133,7 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
             let report = PoolReport {
                 n_workers: r.n_workers,
                 workers_spawned: r.n_workers,
+                transport: dcfg.transport,
                 stats: r.stats,
                 per_worker: r.per_worker,
                 evicted: false,

@@ -236,6 +236,19 @@ pub struct SelectionState {
     /// coordinate of the segment is at its conditional optimum.
     champs: Vec<Option<(usize, Vec<i64>, f64)>>,
     dirty: Vec<bool>,
+    /// Tournament tree over segment champions (iterative segment-tree
+    /// layout: leaves at `[M, 2M)` hold their own segment index, node
+    /// `j` in `[1, M)` holds the winner of its children, root at `1`).
+    /// Kept consistent with `champs` by an O(log M) leaf→root fix in
+    /// `refresh_segment`, so `best_overall` reads the global winner at
+    /// the root instead of re-running an O(M) linear pass. Empty in
+    /// rescan mode.
+    tourney: Vec<usize>,
+    /// Segments dirtied since `best_overall` last drained the queue
+    /// (duplicates and stale — already refreshed — entries allowed;
+    /// popped lazily). Lets `best_overall` touch only the O(2^d)
+    /// segments an update dirtied instead of sweeping all M flags.
+    pending: Vec<usize>,
     /// Per-dim segment-index ranges scratch (dirty marking).
     scratch_ranges: Vec<(usize, usize)>,
     scratch_idx: Vec<usize>,
@@ -271,6 +284,8 @@ impl SelectionState {
             dz_opt: Vec::new(),
             champs: vec![None; m_tot],
             dirty: vec![true; m_tot],
+            tourney: Vec::new(),
+            pending: Vec::new(),
             scratch_ranges: Vec::new(),
             scratch_idx: Vec::new(),
             coords_scanned: 0,
@@ -310,6 +325,7 @@ impl SelectionState {
         if self.mode == SelectMode::Rescan {
             return;
         }
+        self.build_tree();
         let k_tot = beta.n_atoms;
         let sp = beta.spatial_len();
         let zsp = z.spatial_len();
@@ -421,7 +437,10 @@ impl SelectionState {
 
     /// Bring segment `m`'s cached champion up to date, counting the
     /// work: a no-op skip when clean, a K·|C_m| rescan of the cached
-    /// `dz_opt` when dirty.
+    /// `dz_opt` when dirty. A rescan repairs the tournament tree on the
+    /// leaf→root path (O(log M)), so the tree tracks `champs` no matter
+    /// which caller (LGCD's per-segment visits or the global
+    /// tournament) triggered the refresh.
     fn refresh_segment(&mut self, problem: &CscProblem, beta: &BetaWindow, m: usize) {
         if !self.dirty[m] {
             self.segments_skipped += 1;
@@ -431,13 +450,18 @@ impl SelectionState {
         self.segments_rescanned += 1;
         self.champs[m] = self.rescan_segment(beta, m);
         self.dirty[m] = false;
+        self.fix_tree_path(m);
     }
 
-    /// Global Gauss–Southwell selection as a tournament over segment
-    /// champions. Bit-identical to a full-domain
-    /// `beta.best_candidate`: each champion is the first maximizer in
-    /// its segment's (atom-outer, row-major) scan order, and champions
-    /// tying in `|dz|` are resolved to the lowest `(k, u)` — exactly
+    /// Global Gauss–Southwell selection as a tournament tree over
+    /// segment champions: drain the dirty queue (each refresh repairs
+    /// its O(log M) root path) and read the winner at the root — O(1)
+    /// once clean, instead of the former O(M) linear champion pass.
+    /// Bit-identical to a full-domain `beta.best_candidate`: each
+    /// champion is the first maximizer in its segment's (atom-outer,
+    /// row-major) scan order, and champions tying in `|dz|` resolve to
+    /// the lowest `(k, u)` — a total order (segments are disjoint, so
+    /// `(k, u)` never repeats), which makes the tree's winner exactly
     /// the coordinate the full linear scan would have kept.
     /// Incremental mode only (the rescan path keeps the full scan).
     pub fn best_overall(
@@ -446,26 +470,79 @@ impl SelectionState {
         beta: &BetaWindow,
     ) -> Option<(usize, Vec<i64>, f64)> {
         debug_assert_eq!(self.mode, SelectMode::Incremental);
-        for m in 0..self.segs.len() {
+        let m_tot = self.segs.len();
+        let mut rescans = 0u64;
+        while let Some(m) = self.pending.pop() {
+            // Stale queue entry: the segment was already refreshed (and
+            // the tree repaired) by a per-segment visit since it was
+            // dirtied. Duplicates collapse the same way.
+            if !self.dirty[m] {
+                continue;
+            }
             self.refresh_segment(problem, beta, m);
+            rescans += 1;
         }
-        // Tournament by reference over the cached champions (in segment
-        // order, same as a sequence of best_in_segment calls); only the
-        // winner is cloned, so a clean-cache iteration allocates once.
-        let mut best: Option<&(usize, Vec<i64>, f64)> = None;
-        for c in self.champs.iter().flatten() {
-            let better = match best {
-                None => true,
-                Some((bk, bu, bdz)) => {
-                    c.2.abs() > bdz.abs()
-                        || (c.2.abs() == bdz.abs() && (c.0, &c.1) < (*bk, bu))
+        // Counter parity with the pre-tournament linear pass, which
+        // visited all M segments and counted each clean one as skipped.
+        // (`refresh_segment` above counted only the rescans: stale pops
+        // skip its clean branch entirely.)
+        self.segments_skipped += m_tot as u64 - rescans;
+        self.champs[self.tourney[1]].clone()
+    }
+
+    /// Winner of two segment indices under the tournament order:
+    /// `None` champions lose to everything; otherwise larger `|dz|`
+    /// wins and exact ties resolve to the lowest `(k, u)`. On a double
+    /// loss (`None` vs `None`) the first argument is returned —
+    /// irrelevant to the root read, which sees a `None` champion either
+    /// way.
+    fn winner(&self, a: usize, b: usize) -> usize {
+        match (&self.champs[a], &self.champs[b]) {
+            (_, None) => a,
+            (None, Some(_)) => b,
+            (Some(ca), Some(cb)) => {
+                if cb.2.abs() > ca.2.abs()
+                    || (cb.2.abs() == ca.2.abs() && (cb.0, &cb.1) < (ca.0, &ca.1))
+                {
+                    b
+                } else {
+                    a
                 }
-            };
-            if better {
-                best = Some(c);
             }
         }
-        best.cloned()
+    }
+
+    /// Recompute the tournament winners on the path from leaf `m` to
+    /// the root after `champs[m]` changed. O(log M).
+    fn fix_tree_path(&mut self, m: usize) {
+        if self.tourney.is_empty() {
+            return;
+        }
+        let mut j = self.segs.len() + m;
+        while j > 1 {
+            j /= 2;
+            let (a, b) = (self.tourney[2 * j], self.tourney[2 * j + 1]);
+            self.tourney[j] = self.winner(a, b);
+        }
+    }
+
+    /// (Re)build the tournament tree and the dirty queue from scratch
+    /// — construction and the `SetDict` rebuild path, where every
+    /// segment is dirty. The layout works for any `M >= 1` (for
+    /// `M == 1` the single leaf *is* the root).
+    fn build_tree(&mut self) {
+        let m_tot = self.segs.len();
+        self.tourney.clear();
+        self.tourney.resize(2 * m_tot, 0);
+        for m in 0..m_tot {
+            self.tourney[m_tot + m] = m;
+        }
+        for j in (1..m_tot).rev() {
+            let (a, b) = (self.tourney[2 * j], self.tourney[2 * j + 1]);
+            self.tourney[j] = self.winner(a, b);
+        }
+        self.pending.clear();
+        self.pending.extend(0..m_tot);
     }
 
     /// `max_m |dz*_m|` over all segments, for full-domain convergence
@@ -490,8 +567,26 @@ impl SelectionState {
     /// Scan the cached `dz_opt` over segment `m` (dirty path). Same
     /// visit order and strict-`>` comparison as `best_candidate`.
     fn rescan_segment(&self, beta: &BetaWindow, m: usize) -> Option<(usize, Vec<i64>, f64)> {
+        self.cached_best_in_rect(beta, self.segs.rect(m))
+    }
+
+    /// Best candidate over an arbitrary rect, read from the cached
+    /// `dz_opt`. Safe on *any* sub-rect of the beta window — not just
+    /// this state's own segments — because the fused updates keep
+    /// `dz_opt` exactly fresh over the whole window (the dirty flags
+    /// only gate the per-segment champion caches): bit-identical to
+    /// `beta.best_candidate(problem, z, rect)` with the same visit
+    /// order and strict-`>` comparison. The worker's soft-lock test
+    /// uses this to price its `V(u0) ∩ E(S_w)` max as cached reads.
+    /// Incremental mode only (the cache is empty in rescan mode).
+    pub fn cached_best_in_rect(
+        &self,
+        beta: &BetaWindow,
+        rect: &Rect,
+    ) -> Option<(usize, Vec<i64>, f64)> {
+        debug_assert_eq!(self.mode, SelectMode::Incremental);
         let win = beta.window_rect();
-        let inter = self.segs.rect(m).intersect(&win);
+        let inter = rect.intersect(&win);
         if inter.is_empty() {
             return None;
         }
@@ -581,7 +676,12 @@ impl SelectionState {
             for (i, &ji) in idx.iter().enumerate() {
                 m = m * self.segs.counts[i] + ji;
             }
-            self.dirty[m] = true;
+            // Queue for the tournament drain on the false→true edge
+            // only; an already-dirty segment is already queued.
+            if !self.dirty[m] {
+                self.dirty[m] = true;
+                self.pending.push(m);
+            }
             for i in (0..d).rev() {
                 idx[i] += 1;
                 if idx[i] < ranges[i].1 {
@@ -593,6 +693,16 @@ impl SelectionState {
         }
         self.scratch_ranges = ranges;
         self.scratch_idx = idx;
+        // LGCD never drains the queue through `best_overall` (its
+        // per-segment visits clear the dirty flags but leave stale
+        // queue entries behind): compact back to the dirty set before
+        // the queue can grow without bound.
+        if self.pending.len() > (4 * self.dirty.len()).max(64) {
+            let dirty = &self.dirty;
+            self.pending.retain(|&m| dirty[m]);
+            self.pending.sort_unstable();
+            self.pending.dedup();
+        }
     }
 }
 
@@ -750,6 +860,81 @@ mod tests {
             let Some((k, u, dz)) = got else { break };
             sel.apply_update(&p, &mut beta, &z, k, &u, dz);
             z.add_at(k, &u, dz);
+        }
+    }
+
+    /// Per-segment visits repair the tree out-of-band and leave stale
+    /// queue entries behind; the tournament must stay exact through
+    /// any interleaving of the two access patterns.
+    #[test]
+    fn tournament_survives_mixed_visit_orders() {
+        let p = problem_1d(11);
+        let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+        let full = Rect::full(&p.z_spatial_dims());
+        for round in 0..12 {
+            // Refresh a rotating subset through the LGCD entry point
+            // before consulting the tournament.
+            let m_tot = sel.n_segments();
+            for m in 0..m_tot {
+                if (m + round) % 2 == 0 {
+                    sel.best_in_segment(&p, &beta, &z, m);
+                }
+            }
+            let want = beta.best_candidate(&p, &z, &full);
+            assert_eq!(sel.best_overall(&p, &beta), want, "round {round}");
+            let Some((k, u, dz)) = want else { break };
+            sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+            z.add_at(k, &u, dz);
+        }
+    }
+
+    /// A clean tournament answers from the root without rescans, and
+    /// the skip counter advances exactly as the old linear pass did
+    /// (every clean segment counted once per call).
+    #[test]
+    fn clean_tournament_is_read_only() {
+        let p = problem_1d(12);
+        let (beta, _z, mut sel) = full_state(&p, SelectMode::Incremental);
+        let m_tot = sel.n_segments() as u64;
+        let first = sel.best_overall(&p, &beta);
+        let (scanned, rescans, skips) =
+            (sel.coords_scanned, sel.segments_rescanned, sel.segments_skipped);
+        let second = sel.best_overall(&p, &beta);
+        assert_eq!(first, second);
+        assert_eq!(sel.coords_scanned, scanned, "clean call must scan 0 coords");
+        assert_eq!(sel.segments_rescanned, rescans);
+        assert_eq!(sel.segments_skipped, skips + m_tot);
+    }
+
+    /// `cached_best_in_rect` must agree with a fresh beta scan on
+    /// arbitrary rects (not just this state's own segments) — the
+    /// worker's soft-lock extension boxes are exactly such rects.
+    #[test]
+    fn cached_best_in_rect_matches_beta_scan() {
+        for p in [problem_1d(13), problem_2d(13)] {
+            let (mut beta, mut z, mut sel) = full_state(&p, SelectMode::Incremental);
+            let zsp = p.z_spatial_dims();
+            for step in 0..8 {
+                let d = zsp.len();
+                let mut lo = Vec::with_capacity(d);
+                let mut hi = Vec::with_capacity(d);
+                for (i, &n) in zsp.iter().enumerate() {
+                    let a = ((step * 3 + i * 5) % n) as i64;
+                    let b = (a + 1 + ((step * 7 + i) % n) as i64).min(n as i64);
+                    lo.push(a);
+                    hi.push(b);
+                }
+                let r = Rect::new(lo, hi);
+                assert_eq!(
+                    sel.cached_best_in_rect(&beta, &r),
+                    beta.best_candidate(&p, &z, &r),
+                    "rect {r:?} at step {step}"
+                );
+                if let Some((k, u, dz)) = sel.best_overall(&p, &beta) {
+                    sel.apply_update(&p, &mut beta, &z, k, &u, dz);
+                    z.add_at(k, &u, dz);
+                }
+            }
         }
     }
 

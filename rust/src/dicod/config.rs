@@ -1,6 +1,7 @@
 //! Configuration for the distributed solver.
 
 pub use crate::dicod::partition::PartitionKind;
+pub use crate::dicod::transport::TransportKind;
 use crate::csc::select::{SelectMode, Strategy};
 
 /// Configuration of a DiCoDiLe-Z / DICOD run.
@@ -48,6 +49,13 @@ pub struct DicodConfig {
     /// started). One-shot `solve_distributed` calls ignore this flag —
     /// they are a single solve phase by definition.
     pub persistent: bool,
+    /// Message delivery for the worker grid: in-process channels (the
+    /// default — zero-copy, shared spectra on `SetDict`) or
+    /// length-prefixed binary frames over loopback sockets (the wire
+    /// path a multi-process grid would use; every message crosses the
+    /// serialization seam). Defaults from the `DICODILE_TRANSPORT` env
+    /// toggle (`channel` | `socket`).
+    pub transport: TransportKind,
 }
 
 impl Default for DicodConfig {
@@ -65,6 +73,7 @@ impl Default for DicodConfig {
             timeout: 600.0,
             inbox_every: 1,
             persistent: false,
+            transport: TransportKind::from_env(),
         }
     }
 }
@@ -106,5 +115,13 @@ mod tests {
         assert!(!b.persistent);
         assert_eq!(b.partition, PartitionKind::Line);
         assert_eq!(b.strategy, Strategy::Greedy);
+    }
+
+    #[test]
+    fn transport_defaults_to_channel() {
+        // (Holds unless the suite itself runs under DICODILE_TRANSPORT.)
+        if std::env::var("DICODILE_TRANSPORT").is_err() {
+            assert_eq!(DicodConfig::default().transport, TransportKind::Channel);
+        }
     }
 }

@@ -11,7 +11,10 @@
 //! transitions. Global convergence is declared when every worker
 //! reports idle *and* the total number of update messages sent equals
 //! the total received (Safra-style counting: no messages in flight, so
-//! no worker can be re-activated).
+//! no worker can be re-activated). Which wire carries those messages is
+//! the pool's transport's business (`DicodConfig::transport`): the
+//! supervision logic here is transport-agnostic and byte-for-byte
+//! identical over channels and sockets.
 
 use std::sync::Arc;
 use std::time::Instant;

@@ -1,4 +1,5 @@
-//! Messages exchanged by the distributed runtime.
+//! Messages exchanged by the distributed runtime, plus their wire
+//! forms.
 //!
 //! Workers talk to their grid neighbours (coordinate-update
 //! notifications, the only hot-path traffic) and to the coordinator.
@@ -9,16 +10,34 @@
 //!
 //! ## Phase protocol (persistent pool)
 //!
-//! The pool drives resident workers through phases:
+//! The pool drives resident workers through phases. Delivery goes
+//! through the transport seam ([`crate::dicod::transport`]): in-process
+//! channels move the in-memory types below directly, while the socket
+//! transport moves the length-prefixed wire frames in the last column.
 //!
-//! | command        | worker reply           | effect                              |
-//! |----------------|------------------------|-------------------------------------|
-//! | `Solve`        | `Status`… `SolveDone`  | run DiCoDiLe-Z from the resident Z  |
-//! | `Stop`         | (ends the solve phase) | sent by the pool on convergence     |
-//! | `ComputeStats` | `Stats`                | local φ^w/ψ^w partials (eq. 17)     |
-//! | `SetDict`      | `DictSet`              | swap D, warm beta re-init from Z    |
-//! | `Gather`       | `Done`                 | report the cell's activation values |
-//! | `Shutdown`     | (thread exits)         |                                     |
+//! | command        | worker reply           | effect                              | wire frame                          |
+//! |----------------|------------------------|-------------------------------------|-------------------------------------|
+//! | `Solve`        | `Status`… `SolveDone`  | run DiCoDiLe-Z from the resident Z  | tag only / status + 16 counters     |
+//! | `Stop`         | (ends the solve phase) | sent by the pool on convergence     | tag only                            |
+//! | `ComputeStats` | `Stats`                | local φ^w/ψ^w partials (eq. 17)     | tag / two tensors + `z_l1`, `z_nnz` |
+//! | `SetDict`      | `DictSet`              | swap D, warm beta re-init from Z    | [`DictUpdate`] (D + λ + fingerprint)|
+//! | `Gather`       | `Done`                 | report the cell's activation values | tag / flat cell values + counters   |
+//! | `Shutdown`     | (thread exits)         |                                     | tag only                            |
+//!
+//! Neighbour `Update` notifications ride the same seam: in channel mode
+//! a direct send into the destination inbox, in socket mode a `Fwd`
+//! frame routed through the coordinator-side hub.
+//!
+//! ## SetDict across the seam
+//!
+//! The in-process broadcast ships `Arc<CscProblem>` clones, so all
+//! workers share one correlation engine and its spectra cache — the
+//! spectra are regenerated once per broadcast. An `Arc` cannot cross a
+//! process boundary, so the wire form is a [`DictUpdate`] (dictionary
+//! tensor + λ + geometry fingerprint) and each receiving endpoint
+//! rebuilds a local `CscProblem` from its resident X: the derived
+//! quantities are bit-identical (deterministic construction), but the
+//! spectra are regenerated once per *host*, not once per broadcast.
 //!
 //! Counter rules between phases: the Safra counters (`sent` /
 //! `received`) are *cumulative over the pool's lifetime* — a
@@ -28,6 +47,17 @@
 //! the next solve begins and the termination detection never sees a
 //! phantom in-flight message. Per-solve state (update cap, divergence
 //! flag, sweep position, deadline) resets at every `Solve`.
+//!
+//! ## Wire format
+//!
+//! Frames on a socket are `u32` little-endian length + payload; the
+//! payload is a tag byte followed by fixed-order fields. Integers are
+//! 64-bit little-endian, `f64`s travel as their IEEE-754 bit patterns
+//! (`to_bits`, so round-trips are exact and NaN-safe), vectors as a
+//! `u64` count + elements, tensors as rank + dims + data. Decoding is
+//! strict: unknown tags, truncated payloads, non-canonical booleans and
+//! trailing bytes are all rejected with a [`WireError`] rather than
+//! silently tolerated.
 
 use std::sync::Arc;
 
@@ -43,14 +73,61 @@ pub struct UpdateMsg {
     pub dz: f64,
 }
 
-/// Dictionary broadcast: the rebuilt problem (same shared X, new D and
-/// derived quantities). All workers receive clones of one `Arc`, so the
-/// new engine's spectra cache is shared — the spectra are regenerated
-/// once per broadcast, by whichever worker bootstraps first, not once
-/// per worker.
+/// Serializable dictionary broadcast: what actually crosses a process
+/// boundary on `SetDict`. Carries the new dictionary tensor and λ plus
+/// a fingerprint of the problem geometry, so a remote worker can refuse
+/// a dictionary that was meant for a different problem instead of
+/// rebuilding garbage.
 #[derive(Clone, Debug)]
-pub struct SetDictMsg {
-    pub problem: Arc<CscProblem>,
+pub struct DictUpdate {
+    /// The new dictionary `[K, P, L..]`.
+    pub d: NdTensor,
+    /// The (absolute) regularization weight.
+    pub lambda: f64,
+    /// FNV-1a over the X and D dims — must match
+    /// [`DictUpdate::geometry_fingerprint`] of the receiving worker's
+    /// resident problem.
+    pub fingerprint: u64,
+}
+
+impl DictUpdate {
+    /// Wire form of a problem's dictionary state.
+    pub fn from_problem(p: &CscProblem) -> Self {
+        DictUpdate {
+            d: p.d.clone(),
+            lambda: p.lambda,
+            fingerprint: Self::geometry_fingerprint(p.x.dims(), p.d.dims()),
+        }
+    }
+
+    /// Cheap identity of the problem geometry (FNV-1a over the X and D
+    /// dims). This is deliberately shape-only: the X *values* live with
+    /// the worker and never travel on `SetDict`.
+    pub fn geometry_fingerprint(x_dims: &[usize], d_dims: &[usize]) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        for &d in x_dims.iter().chain(d_dims) {
+            h = (h ^ (d as u64)).wrapping_mul(PRIME);
+        }
+        h
+    }
+}
+
+/// Dictionary broadcast. The in-process transport ships `Shared` —
+/// clones of one `Arc`, so all workers share one correlation engine and
+/// its spectra cache (regenerated once per broadcast, by whichever
+/// worker bootstraps first). The socket transport encodes `Shared` down
+/// to its [`DictUpdate`] and delivers `Wire`; the receiving worker
+/// rebuilds a local `CscProblem` against its resident X (bit-identical
+/// derived quantities, spectra regenerated once per host).
+#[derive(Clone, Debug)]
+pub enum SetDictMsg {
+    /// Same-process broadcast: the rebuilt problem (same shared X, new
+    /// D and derived quantities).
+    Shared(Arc<CscProblem>),
+    /// Cross-process broadcast: rebuild locally from the resident X.
+    Wire(DictUpdate),
 }
 
 /// Coordinator/pool -> worker commands, plus worker -> worker traffic.
@@ -77,7 +154,7 @@ pub enum WorkerMsg {
 /// every worker is idle and `sum(sent) == sum(received)` (no messages
 /// in flight). Counters are cumulative over the pool's lifetime (see
 /// the module docs for the between-phase rules).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StatusMsg {
     pub from: usize,
     pub idle: bool,
@@ -91,7 +168,7 @@ pub struct StatusMsg {
 
 /// End-of-solve-phase acknowledgement (the worker's last message of a
 /// solve phase; the pool collects one per worker before moving on).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SolveDoneMsg {
     pub from: usize,
     /// Snapshot of the cumulative worker counters.
@@ -114,7 +191,7 @@ pub struct StatsMsg {
 }
 
 /// Final per-worker report for a `Gather`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DoneMsg {
     pub from: usize,
     /// Flat activation values over the worker's own cell `S_w`
@@ -134,7 +211,7 @@ pub enum CoordMsg {
 }
 
 /// Per-worker work counters (cumulative over the worker's lifetime).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WorkerStats {
     /// Selection iterations (segments visited).
     pub iterations: u64,
@@ -202,6 +279,495 @@ impl WorkerStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wire codec
+// ---------------------------------------------------------------------------
+
+/// Strict-decode failure for a wire frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload ended in the middle of a field.
+    Truncated,
+    /// Unknown frame tag.
+    BadTag(u8),
+    /// A field held a non-canonical value (named for diagnostics).
+    BadValue(&'static str),
+    /// The payload had this many bytes left over after the last field.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadTag(t) => write!(f, "unknown frame tag {t}"),
+            WireError::BadValue(what) => write!(f, "bad wire value: {what}"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after frame"),
+        }
+    }
+}
+
+/// A decoded wire frame: everything that can arrive on a socket edge.
+#[derive(Clone, Debug)]
+pub enum WireFrame {
+    /// Coordinator -> worker command (or a routed neighbour `Update`).
+    Worker(WorkerMsg),
+    /// Worker -> coordinator reply.
+    Coord(CoordMsg),
+    /// Worker -> worker notification, routed through the hub: "deliver
+    /// this `Update` to worker `to`".
+    Fwd { to: usize, msg: UpdateMsg },
+    /// Problem + config handshake for a served worker
+    /// (`dicodile worker --listen`).
+    Bootstrap(Box<BootstrapMsg>),
+}
+
+/// Everything a freshly launched `dicodile worker --listen` process
+/// needs to join a grid: its rank, the grid/solver configuration, and
+/// the problem data (X, D, λ, optional warm-start Z). Sent once, as the
+/// first frame on the connection.
+#[derive(Clone, Debug)]
+pub struct BootstrapMsg {
+    pub rank: usize,
+    pub n_workers: usize,
+    /// `PartitionKind` code: 0 = Line, 1 = Grid.
+    pub partition: u8,
+    /// `Strategy` code: 0 = Greedy, 1 = Randomized, 2 = LocallyGreedy.
+    pub strategy: u8,
+    /// `SelectMode` code: 0 = Rescan, 1 = Incremental.
+    pub select: u8,
+    pub soft_lock: bool,
+    pub tol: f64,
+    pub max_updates: u64,
+    pub divergence_guard: Option<f64>,
+    pub seed: u64,
+    pub timeout: f64,
+    pub inbox_every: u64,
+    pub x: NdTensor,
+    pub d: NdTensor,
+    pub lambda: f64,
+    pub z0: Option<NdTensor>,
+}
+
+const TAG_UPDATE: u8 = 1;
+const TAG_SOLVE: u8 = 2;
+const TAG_STOP: u8 = 3;
+const TAG_COMPUTE_STATS: u8 = 4;
+const TAG_SET_DICT: u8 = 5;
+const TAG_GATHER: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+const TAG_FWD: u8 = 8;
+const TAG_STATUS: u8 = 9;
+const TAG_SOLVE_DONE: u8 = 10;
+const TAG_STATS: u8 = 11;
+const TAG_DICT_SET: u8 = 12;
+const TAG_DONE: u8 = 13;
+const TAG_BOOTSTRAP: u8 = 14;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+fn put_vec_i64(out: &mut Vec<u8>, v: &[i64]) {
+    put_usize(out, v.len());
+    for &x in v {
+        put_i64(out, x);
+    }
+}
+
+fn put_vec_f64(out: &mut Vec<u8>, v: &[f64]) {
+    put_usize(out, v.len());
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &NdTensor) {
+    put_usize(out, t.dims().len());
+    for &d in t.dims() {
+        put_usize(out, d);
+    }
+    put_vec_f64(out, t.data());
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &WorkerStats) {
+    for v in [
+        s.iterations,
+        s.updates,
+        s.soft_locked,
+        s.msgs_sent,
+        s.msgs_received,
+        s.sweeps,
+        s.segments_skipped,
+        s.segments_rescanned,
+        s.dz_cache_filled,
+        s.pauses,
+        s.work,
+        s.solves,
+        s.beta_cold_inits,
+        s.beta_warm_inits,
+        s.beta_warm_reinits,
+        s.gathers,
+    ] {
+        put_u64(out, v);
+    }
+}
+
+fn put_update(out: &mut Vec<u8>, m: &UpdateMsg) {
+    put_usize(out, m.from);
+    put_usize(out, m.k);
+    put_vec_i64(out, &m.u);
+    put_f64(out, m.dz);
+}
+
+fn put_dict_update(out: &mut Vec<u8>, du: &DictUpdate) {
+    put_tensor(out, &du.d);
+    put_f64(out, du.lambda);
+    put_u64(out, du.fingerprint);
+}
+
+/// Strict little-endian payload reader. Every getter fails with
+/// `Truncated` past the end; `finish` rejects trailing bytes.
+struct Wire<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Wire<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Wire { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8_(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u64_(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn usize_(&mut self) -> Result<usize, WireError> {
+        usize::try_from(self.u64_()?).map_err(|_| WireError::BadValue("usize overflow"))
+    }
+
+    fn i64_(&mut self) -> Result<i64, WireError> {
+        Ok(i64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64_(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64_()?))
+    }
+
+    fn bool_(&mut self) -> Result<bool, WireError> {
+        match self.u8_()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::BadValue("bool")),
+        }
+    }
+
+    /// Guard a count field against absurd allocations: the elements
+    /// that follow need at least `elem_size` bytes each, so a count
+    /// larger than the remaining payload is always malformed.
+    fn count(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.usize_()?;
+        if n.saturating_mul(elem_size) > self.buf.len() - self.pos {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn vec_i64(&mut self) -> Result<Vec<i64>, WireError> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.i64_()).collect()
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64_()).collect()
+    }
+
+    fn tensor(&mut self) -> Result<NdTensor, WireError> {
+        let ndim = self.count(8)?;
+        let dims: Vec<usize> = (0..ndim).map(|_| self.usize_()).collect::<Result<_, _>>()?;
+        let data = self.vec_f64()?;
+        if data.len() != dims.iter().product::<usize>() {
+            return Err(WireError::BadValue("tensor data length"));
+        }
+        Ok(NdTensor::from_vec(&dims, data))
+    }
+
+    fn stats(&mut self) -> Result<WorkerStats, WireError> {
+        Ok(WorkerStats {
+            iterations: self.u64_()?,
+            updates: self.u64_()?,
+            soft_locked: self.u64_()?,
+            msgs_sent: self.u64_()?,
+            msgs_received: self.u64_()?,
+            sweeps: self.u64_()?,
+            segments_skipped: self.u64_()?,
+            segments_rescanned: self.u64_()?,
+            dz_cache_filled: self.u64_()?,
+            pauses: self.u64_()?,
+            work: self.u64_()?,
+            solves: self.u64_()?,
+            beta_cold_inits: self.u64_()?,
+            beta_warm_inits: self.u64_()?,
+            beta_warm_reinits: self.u64_()?,
+            gathers: self.u64_()?,
+        })
+    }
+
+    fn update(&mut self) -> Result<UpdateMsg, WireError> {
+        Ok(UpdateMsg {
+            from: self.usize_()?,
+            k: self.usize_()?,
+            u: self.vec_i64()?,
+            dz: self.f64_()?,
+        })
+    }
+
+    fn dict_update(&mut self) -> Result<DictUpdate, WireError> {
+        Ok(DictUpdate {
+            d: self.tensor()?,
+            lambda: self.f64_()?,
+            fingerprint: self.u64_()?,
+        })
+    }
+
+    fn finish<T>(self, v: T) -> Result<T, WireError> {
+        let left = self.buf.len() - self.pos;
+        if left != 0 {
+            return Err(WireError::TrailingBytes(left));
+        }
+        Ok(v)
+    }
+}
+
+/// Encode a coordinator -> worker command as a frame payload. `SetDict`
+/// is flattened to its [`DictUpdate`] wire form — the `Arc` never
+/// crosses the seam.
+pub fn encode_worker_frame(msg: &WorkerMsg) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        WorkerMsg::Update(u) => {
+            out.push(TAG_UPDATE);
+            put_update(&mut out, u);
+        }
+        WorkerMsg::Solve => out.push(TAG_SOLVE),
+        WorkerMsg::Stop => out.push(TAG_STOP),
+        WorkerMsg::ComputeStats => out.push(TAG_COMPUTE_STATS),
+        WorkerMsg::SetDict(sd) => {
+            out.push(TAG_SET_DICT);
+            match sd {
+                SetDictMsg::Shared(p) => put_dict_update(&mut out, &DictUpdate::from_problem(p)),
+                SetDictMsg::Wire(du) => put_dict_update(&mut out, du),
+            }
+        }
+        WorkerMsg::Gather => out.push(TAG_GATHER),
+        WorkerMsg::Shutdown => out.push(TAG_SHUTDOWN),
+    }
+    out
+}
+
+/// Encode a worker -> coordinator reply as a frame payload.
+pub fn encode_coord_frame(msg: &CoordMsg) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        CoordMsg::Status(s) => {
+            out.push(TAG_STATUS);
+            put_usize(&mut out, s.from);
+            put_bool(&mut out, s.idle);
+            put_u64(&mut out, s.sent);
+            put_u64(&mut out, s.received);
+            put_bool(&mut out, s.converged);
+            put_bool(&mut out, s.diverged);
+        }
+        CoordMsg::SolveDone(d) => {
+            out.push(TAG_SOLVE_DONE);
+            put_usize(&mut out, d.from);
+            put_stats(&mut out, &d.stats);
+        }
+        CoordMsg::Stats(s) => {
+            out.push(TAG_STATS);
+            put_usize(&mut out, s.from);
+            put_tensor(&mut out, &s.phi);
+            put_tensor(&mut out, &s.psi);
+            put_f64(&mut out, s.z_l1);
+            put_usize(&mut out, s.z_nnz);
+        }
+        CoordMsg::DictSet { from } => {
+            out.push(TAG_DICT_SET);
+            put_usize(&mut out, *from);
+        }
+        CoordMsg::Done(d) => {
+            out.push(TAG_DONE);
+            put_usize(&mut out, d.from);
+            put_vec_f64(&mut out, &d.z_cell);
+            put_stats(&mut out, &d.stats);
+        }
+    }
+    out
+}
+
+/// Encode a routed neighbour notification ("hub: deliver to `to`").
+pub fn encode_fwd_frame(to: usize, msg: &UpdateMsg) -> Vec<u8> {
+    let mut out = vec![TAG_FWD];
+    put_usize(&mut out, to);
+    put_update(&mut out, msg);
+    out
+}
+
+/// Encode the served-worker handshake.
+pub fn encode_bootstrap_frame(b: &BootstrapMsg) -> Vec<u8> {
+    let mut out = vec![TAG_BOOTSTRAP];
+    put_usize(&mut out, b.rank);
+    put_usize(&mut out, b.n_workers);
+    out.push(b.partition);
+    out.push(b.strategy);
+    out.push(b.select);
+    put_bool(&mut out, b.soft_lock);
+    put_f64(&mut out, b.tol);
+    put_u64(&mut out, b.max_updates);
+    put_bool(&mut out, b.divergence_guard.is_some());
+    if let Some(g) = b.divergence_guard {
+        put_f64(&mut out, g);
+    }
+    put_u64(&mut out, b.seed);
+    put_f64(&mut out, b.timeout);
+    put_u64(&mut out, b.inbox_every);
+    put_tensor(&mut out, &b.x);
+    put_tensor(&mut out, &b.d);
+    put_f64(&mut out, b.lambda);
+    put_bool(&mut out, b.z0.is_some());
+    if let Some(z0) = &b.z0 {
+        put_tensor(&mut out, z0);
+    }
+    out
+}
+
+/// Strictly decode one frame payload. Rejects unknown tags, truncated
+/// fields, non-canonical values and trailing bytes.
+pub fn decode_frame(payload: &[u8]) -> Result<WireFrame, WireError> {
+    let mut w = Wire::new(payload);
+    let tag = w.u8_()?;
+    match tag {
+        TAG_UPDATE => {
+            let u = w.update()?;
+            w.finish(WireFrame::Worker(WorkerMsg::Update(u)))
+        }
+        TAG_SOLVE => w.finish(WireFrame::Worker(WorkerMsg::Solve)),
+        TAG_STOP => w.finish(WireFrame::Worker(WorkerMsg::Stop)),
+        TAG_COMPUTE_STATS => w.finish(WireFrame::Worker(WorkerMsg::ComputeStats)),
+        TAG_SET_DICT => {
+            let du = w.dict_update()?;
+            w.finish(WireFrame::Worker(WorkerMsg::SetDict(SetDictMsg::Wire(du))))
+        }
+        TAG_GATHER => w.finish(WireFrame::Worker(WorkerMsg::Gather)),
+        TAG_SHUTDOWN => w.finish(WireFrame::Worker(WorkerMsg::Shutdown)),
+        TAG_FWD => {
+            let to = w.usize_()?;
+            let msg = w.update()?;
+            w.finish(WireFrame::Fwd { to, msg })
+        }
+        TAG_STATUS => {
+            let s = StatusMsg {
+                from: w.usize_()?,
+                idle: w.bool_()?,
+                sent: w.u64_()?,
+                received: w.u64_()?,
+                converged: w.bool_()?,
+                diverged: w.bool_()?,
+            };
+            w.finish(WireFrame::Coord(CoordMsg::Status(s)))
+        }
+        TAG_SOLVE_DONE => {
+            let d = SolveDoneMsg { from: w.usize_()?, stats: w.stats()? };
+            w.finish(WireFrame::Coord(CoordMsg::SolveDone(d)))
+        }
+        TAG_STATS => {
+            let s = StatsMsg {
+                from: w.usize_()?,
+                phi: w.tensor()?,
+                psi: w.tensor()?,
+                z_l1: w.f64_()?,
+                z_nnz: w.usize_()?,
+            };
+            w.finish(WireFrame::Coord(CoordMsg::Stats(s)))
+        }
+        TAG_DICT_SET => {
+            let from = w.usize_()?;
+            w.finish(WireFrame::Coord(CoordMsg::DictSet { from }))
+        }
+        TAG_DONE => {
+            let d = DoneMsg { from: w.usize_()?, z_cell: w.vec_f64()?, stats: w.stats()? };
+            w.finish(WireFrame::Coord(CoordMsg::Done(d)))
+        }
+        TAG_BOOTSTRAP => {
+            let rank = w.usize_()?;
+            let n_workers = w.usize_()?;
+            let partition = w.u8_()?;
+            let strategy = w.u8_()?;
+            let select = w.u8_()?;
+            let soft_lock = w.bool_()?;
+            let tol = w.f64_()?;
+            let max_updates = w.u64_()?;
+            let divergence_guard = if w.bool_()? { Some(w.f64_()?) } else { None };
+            let seed = w.u64_()?;
+            let timeout = w.f64_()?;
+            let inbox_every = w.u64_()?;
+            let x = w.tensor()?;
+            let d = w.tensor()?;
+            let lambda = w.f64_()?;
+            let z0 = if w.bool_()? { Some(w.tensor()?) } else { None };
+            w.finish(WireFrame::Bootstrap(Box::new(BootstrapMsg {
+                rank,
+                n_workers,
+                partition,
+                strategy,
+                select,
+                soft_lock,
+                tol,
+                max_updates,
+                divergence_guard,
+                seed,
+                timeout,
+                inbox_every,
+                x,
+                d,
+                lambda,
+                z0,
+            })))
+        }
+        other => Err(WireError::BadTag(other)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +804,69 @@ mod tests {
         assert_eq!(a.beta_cold_inits, 1);
         assert_eq!(a.beta_warm_reinits, 2);
         assert_eq!(a.gathers, 1);
+    }
+
+    #[test]
+    fn geometry_fingerprint_separates_shapes() {
+        let a = DictUpdate::geometry_fingerprint(&[1, 100], &[3, 1, 8]);
+        let b = DictUpdate::geometry_fingerprint(&[1, 100], &[4, 1, 8]);
+        let c = DictUpdate::geometry_fingerprint(&[1, 101], &[3, 1, 8]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn update_frame_round_trips_exactly() {
+        let m = UpdateMsg { from: 3, k: 7, u: vec![-2, 41], dz: -0.125 };
+        let frame = encode_worker_frame(&WorkerMsg::Update(m.clone()));
+        match decode_frame(&frame).unwrap() {
+            WireFrame::Worker(WorkerMsg::Update(got)) => assert_eq!(got, m),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nan_and_negative_zero_survive_the_wire() {
+        let m = UpdateMsg { from: 0, k: 0, u: vec![0], dz: f64::NAN };
+        let frame = encode_worker_frame(&WorkerMsg::Update(m));
+        match decode_frame(&frame).unwrap() {
+            WireFrame::Worker(WorkerMsg::Update(got)) => {
+                assert_eq!(got.dz.to_bits(), f64::NAN.to_bits())
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let z = UpdateMsg { from: 0, k: 0, u: vec![0], dz: -0.0 };
+        let frame = encode_worker_frame(&WorkerMsg::Update(z));
+        match decode_frame(&frame).unwrap() {
+            WireFrame::Worker(WorkerMsg::Update(got)) => {
+                assert_eq!(got.dz.to_bits(), (-0.0f64).to_bits())
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        // Unknown tag.
+        assert!(matches!(decode_frame(&[200]), Err(WireError::BadTag(200))));
+        // Empty payload.
+        assert!(matches!(decode_frame(&[]), Err(WireError::Truncated)));
+        // Truncated field.
+        let full = encode_worker_frame(&WorkerMsg::Update(UpdateMsg {
+            from: 1,
+            k: 2,
+            u: vec![3],
+            dz: 4.0,
+        }));
+        assert!(matches!(decode_frame(&full[..full.len() - 1]), Err(WireError::Truncated)));
+        // Trailing bytes.
+        let mut padded = full.clone();
+        padded.push(0);
+        assert!(matches!(decode_frame(&padded), Err(WireError::TrailingBytes(1))));
+        // Absurd element count (count field larger than the payload).
+        let mut bad = vec![TAG_DONE];
+        put_usize(&mut bad, 0); // from
+        put_u64(&mut bad, u64::MAX); // z_cell count
+        assert!(matches!(decode_frame(&bad), Err(WireError::Truncated)));
     }
 }

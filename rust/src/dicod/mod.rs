@@ -11,6 +11,28 @@
 //! swap), and exchanges coordinate-update notifications with its grid
 //! neighbours only — there is no central data server.
 //!
+//! ## The transport seam
+//!
+//! All message delivery — coordinator→worker phase commands,
+//! worker→coordinator replies, and the hot worker→worker update
+//! traffic — goes through the pluggable [`transport`] layer. The pool
+//! holds a [`transport::CoordEndpoint`], each worker a
+//! [`transport::WorkerEndpoint`], and neighbour topology is plain
+//! transport-addressable ranks ([`partition::NeighborLink`]), so the
+//! solver logic never touches a channel or a socket directly. Two
+//! implementations ship:
+//!
+//! | transport | delivery | wire form |
+//! |-----------|----------|-----------|
+//! | `channel` (default) | in-process `mpsc`, zero-copy | none — values move by ownership, `SetDict` shares one `Arc` (spectra regenerate once per broadcast) |
+//! | `socket` | length-prefixed binary frames over loopback UDS/TCP, a star hub at the coordinator | every message encoded per [`messages`]' wire format; `SetDict` crosses as a [`messages::DictUpdate`] and spectra regenerate once per receiving *host* |
+//!
+//! Both carry the identical phase protocol — the Safra counter
+//! settlement included — and produce bitwise-identical results (the
+//! `transport_parity` suite pins this). `DicodConfig::transport` /
+//! `DICODILE_TRANSPORT` select the wiring; `dicodile worker --listen`
+//! serves a single worker over a real socket for multi-process grids.
+//!
 //! [`pool::WorkerPool`] keeps that grid resident for a whole
 //! `learn_dictionary` run and drives it through phases:
 //!
@@ -28,9 +50,11 @@
 //!   (eq. 17) on its resident windows; the pool reduces them by
 //!   summation. Full Z never leaves the workers mid-run.
 //! - **SetDict**: broadcast of the rebuilt problem (shared X, new D);
-//!   workers re-bootstrap beta *warm* from their resident Z. The
-//!   broadcast `Arc` shares one spectra cache, so dictionary spectra
-//!   regenerate once per broadcast, not once per worker.
+//!   workers re-bootstrap beta *warm* from their resident Z. Over the
+//!   channel transport the broadcast `Arc` shares one spectra cache
+//!   (regenerated once per broadcast); over the wire each receiving
+//!   host rebuilds its problem from the `DictUpdate` and regenerates
+//!   spectra once locally.
 //! - **Gather**: the only full-Z centralization — final assembly.
 //!
 //! ## Counter-reset rules between phases
@@ -53,9 +77,11 @@ pub mod coordinator;
 pub mod messages;
 pub mod partition;
 pub mod pool;
+pub mod transport;
 pub mod worker;
 
 pub use config::DicodConfig;
 pub use coordinator::{solve_distributed, solve_distributed_warm, DicodResult};
 pub use partition::{PartitionKind, WorkerGrid};
 pub use pool::{PoolReport, PoolSolve, WorkerPool};
+pub use transport::TransportKind;

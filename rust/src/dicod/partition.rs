@@ -7,8 +7,24 @@
 //! around its cell — the `Theta`-extension `E_L(S_w)` on which beta and
 //! Z are kept up to date via neighbour notifications, and which the
 //! soft-lock rule (eq. 14) inspects.
+//!
+//! Neighbour topology is expressed as *transport-addressable worker
+//! ids* ([`NeighborLink`]): the grid says *which rank* an update must
+//! reach, and the transport seam ([`crate::dicod::transport`]) decides
+//! how the message gets there — an in-process channel today, a routed
+//! socket frame tomorrow. No channel handles live in the topology.
 
 use crate::tensor::shape::Rect;
+
+/// One entry of a worker's neighbour list: the destination worker id
+/// (the address a `WorkerEndpoint::send_update` routes on) and that
+/// worker's extended window `E_L(S_{w'})`, against which the sender
+/// tests `V(u0)` overlap to decide whether a notification is due.
+#[derive(Clone, Debug)]
+pub struct NeighborLink {
+    pub rank: usize,
+    pub ext_window: Rect,
+}
 
 /// How the domain is split across workers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -153,6 +169,19 @@ impl WorkerGrid {
         let reach = me.dilate(&margins);
         (0..self.n_workers())
             .filter(|&w2| w2 != w && reach.overlaps(&self.cell(w2)))
+            .collect()
+    }
+
+    /// The neighbour topology as transport-addressable links: for each
+    /// rank in [`WorkerGrid::neighbors`], the destination worker id
+    /// (what a [`crate::dicod::transport::WorkerEndpoint`] routes on —
+    /// never a raw channel handle) paired with that worker's extended
+    /// window, which is the overlap test deciding whether a given
+    /// update must be notified to it.
+    pub fn neighbor_links(&self, w: usize) -> Vec<NeighborLink> {
+        self.neighbors(w)
+            .into_iter()
+            .map(|rank| NeighborLink { rank, ext_window: self.extended_cell(rank) })
             .collect()
     }
 
@@ -331,6 +360,17 @@ mod tests {
         assert_eq!(n, vec![0, 1, 2, 3, 5, 6, 7, 8]);
         // corner worker 0 has 3
         assert_eq!(g.neighbors(0).len(), 3);
+    }
+
+    #[test]
+    fn neighbor_links_carry_ext_windows() {
+        let g = WorkerGrid::new(&[40], &[5], 4, PartitionKind::Line);
+        let links = g.neighbor_links(1);
+        let ranks: Vec<usize> = links.iter().map(|l| l.rank).collect();
+        assert_eq!(ranks, g.neighbors(1));
+        for l in &links {
+            assert_eq!(l.ext_window, g.extended_cell(l.rank));
+        }
     }
 
     #[test]

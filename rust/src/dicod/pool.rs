@@ -18,27 +18,38 @@
 //!   travel to the pool, never Z — removing the O(signal) round-trip
 //!   per outer iteration that centralized CDL pays.
 //! - `set_dict()` broadcasts the rebuilt problem (shared X, new D);
-//!   workers re-bootstrap beta *warm* from the Z they already hold. The
-//!   new engine's spectra cache is shared through the broadcast `Arc`,
-//!   so dictionary spectra are regenerated once per broadcast, not once
-//!   per worker.
+//!   workers re-bootstrap beta *warm* from the Z they already hold. On
+//!   the channel transport the new engine's spectra cache is shared
+//!   through the broadcast `Arc`, so dictionary spectra are regenerated
+//!   once per broadcast; on the socket transport the broadcast crosses
+//!   the wire as a [`DictUpdate`](crate::dicod::messages::DictUpdate)
+//!   and each receiving *host* regenerates them once locally.
 //! - `gather()` assembles the full Z — used exactly once, for the final
 //!   result.
+//!
+//! All delivery goes through the pluggable
+//! [`Transport`](crate::dicod::transport::Transport) seam
+//! (`DicodConfig::transport`): the pool holds only a [`CoordEndpoint`],
+//! the workers only their
+//! [`WorkerEndpoint`](crate::dicod::transport::WorkerEndpoint)s, and
+//! the phase protocol — including the Safra counter settlement — is
+//! byte-for-byte the same over in-process channels and loopback
+//! sockets.
 //!
 //! `solve_distributed` remains available as a thin one-shot wrapper
 //! over a temporary pool, so single-solve callers and the paper-figure
 //! benches are unchanged.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::csc::problem::CscProblem;
 use crate::dicod::config::DicodConfig;
-use crate::dicod::messages::{CoordMsg, WorkerMsg, WorkerStats};
+use crate::dicod::messages::{CoordMsg, SetDictMsg, WorkerMsg, WorkerStats};
 use crate::dicod::partition::WorkerGrid;
-use crate::dicod::worker::{run_pool_worker, Peer, PoolWorkerCtx};
+use crate::dicod::transport::{make_transport, CoordEndpoint, RecvError, TransportKind};
+use crate::dicod::worker::{run_pool_worker, PoolWorkerCtx};
 use crate::dict::phi_psi::DictStats;
 use crate::tensor::NdTensor;
 
@@ -59,6 +70,8 @@ pub struct PoolReport {
     /// Worker threads spawned over the pool's lifetime (exactly
     /// `n_workers` — residency means no respawns).
     pub workers_spawned: usize,
+    /// Which transport carried the grid's messages for this run.
+    pub transport: TransportKind,
     /// Aggregated cumulative worker counters.
     pub stats: WorkerStats,
     pub per_worker: Vec<WorkerStats>,
@@ -73,8 +86,8 @@ pub struct WorkerPool {
     grid: Arc<WorkerGrid>,
     cfg: Arc<DicodConfig>,
     problem: Arc<CscProblem>,
-    worker_tx: Vec<Sender<WorkerMsg>>,
-    coord_rx: Receiver<CoordMsg>,
+    coord: Box<dyn CoordEndpoint>,
+    transport_kind: TransportKind,
     handles: Vec<JoinHandle<()>>,
     per_worker: Vec<WorkerStats>,
     x_norm_sq: f64,
@@ -97,14 +110,6 @@ impl WorkerPool {
         let w_tot = grid.n_workers();
         let cfg = Arc::new(cfg.clone());
 
-        let mut worker_tx = Vec::with_capacity(w_tot);
-        let mut worker_rx = Vec::with_capacity(w_tot);
-        for _ in 0..w_tot {
-            let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            worker_tx.push(tx);
-            worker_rx.push(rx);
-        }
-        let (coord_tx, coord_rx) = mpsc::channel::<CoordMsg>();
         if let Some(z0) = z0 {
             assert_eq!(
                 z0.dims(),
@@ -114,39 +119,36 @@ impl WorkerPool {
         }
         let z0 = z0.map(|z| Arc::new(z.clone()));
 
+        // Build the selected transport and hand each side its endpoint.
+        // The transport object is dropped once the grid is up; for the
+        // channel transport that drop severs the master reply sender,
+        // so a dead grid disconnects the coordinator endpoint.
+        let mut transport = make_transport(cfg.transport, w_tot);
+        let transport_kind = transport.kind();
+        let coord = transport.take_coord_endpoint();
+
         let mut handles = Vec::with_capacity(w_tot);
-        for (rank, rx) in worker_rx.into_iter().enumerate() {
-            let peers: Vec<Peer> = grid
-                .neighbors(rank)
-                .into_iter()
-                .map(|r| Peer {
-                    rank: r,
-                    ext_window: grid.extended_cell(r),
-                    tx: worker_tx[r].clone(),
-                })
-                .collect();
+        for rank in 0..w_tot {
             let ctx = PoolWorkerCtx {
                 rank,
                 problem: problem.clone(),
                 grid: grid.clone(),
                 cfg: cfg.clone(),
-                inbox: rx,
-                peers,
-                coord: coord_tx.clone(),
+                endpoint: transport.take_worker_endpoint(rank),
+                peers: grid.neighbor_links(rank),
                 z0: z0.clone(),
             };
             handles.push(std::thread::spawn(move || run_pool_worker(ctx)));
         }
-        // Drop the pool's own sender so a dead grid disconnects coord_rx.
-        drop(coord_tx);
+        drop(transport);
 
         let x_norm_sq = problem.x.norm_sq();
         WorkerPool {
             grid,
             cfg,
             problem,
-            worker_tx,
-            coord_rx,
+            coord,
+            transport_kind,
             handles,
             per_worker: vec![WorkerStats::default(); w_tot],
             x_norm_sq,
@@ -185,20 +187,26 @@ impl WorkerPool {
         agg
     }
 
+    /// Which transport carries this pool's messages.
+    pub fn transport(&self) -> TransportKind {
+        self.transport_kind
+    }
+
     /// End-of-run summary.
     pub fn report(&self) -> PoolReport {
         PoolReport {
             n_workers: self.n_workers(),
             workers_spawned: self.workers_spawned,
+            transport: self.transport_kind,
             stats: self.aggregate_stats(),
             per_worker: self.per_worker.clone(),
             evicted: false,
         }
     }
 
-    fn broadcast(&self, msg: WorkerMsg) {
-        for tx in &self.worker_tx {
-            let _ = tx.send(msg.clone());
+    fn broadcast(&mut self, msg: WorkerMsg) {
+        for rank in 0..self.grid.n_workers() {
+            self.coord.send(rank, msg.clone());
         }
     }
 
@@ -212,7 +220,7 @@ impl WorkerPool {
     /// the resident state (e.g. a gathered Z with a zeroed cell), so
     /// the run fails loudly instead.
     fn await_replies(
-        coord_rx: &Receiver<CoordMsg>,
+        coord: &mut dyn CoordEndpoint,
         w_tot: usize,
         timeout: f64,
         phase: &str,
@@ -222,7 +230,7 @@ impl WorkerPool {
         let mut seen = vec![false; w_tot];
         let mut got = 0usize;
         while got < w_tot {
-            let msg = coord_rx.recv_timeout(Duration::from_millis(20));
+            let msg = coord.recv_timeout(Duration::from_millis(20));
             match msg {
                 Ok(m) => {
                     if let Some(rank) = visit(m) {
@@ -232,8 +240,8 @@ impl WorkerPool {
                         }
                     }
                 }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => panic!(
+                Err(RecvError::Timeout) => {}
+                Err(_) => panic!(
                     "worker pool: grid disconnected during {phase} ({got}/{w_tot} replies)"
                 ),
             }
@@ -266,7 +274,7 @@ impl WorkerPool {
         let hard_deadline = deadline + Duration::from_secs_f64(self.cfg.timeout);
 
         while acks < w_tot {
-            let msg = self.coord_rx.recv_timeout(Duration::from_millis(20));
+            let msg = self.coord.recv_timeout(Duration::from_millis(20));
             match msg {
                 Ok(CoordMsg::Status(s)) => {
                     idle[s.from] = s.idle;
@@ -289,8 +297,8 @@ impl WorkerPool {
                     acks += 1;
                 }
                 Ok(_) => {}
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => panic!(
+                Err(RecvError::Timeout) => {}
+                Err(_) => panic!(
                     "worker pool: grid disconnected during solve ({acks}/{w_tot} acks)"
                 ),
             }
@@ -317,7 +325,8 @@ impl WorkerPool {
         let w_tot = self.n_workers();
         self.broadcast(WorkerMsg::ComputeStats);
         let mut parts: Vec<Option<(NdTensor, NdTensor, f64, usize)>> = vec![None; w_tot];
-        Self::await_replies(&self.coord_rx, w_tot, self.cfg.timeout, "compute_stats", |m| {
+        let timeout = self.cfg.timeout;
+        Self::await_replies(self.coord.as_mut(), w_tot, timeout, "compute_stats", |m| {
             match m {
                 CoordMsg::Stats(s) => {
                     let from = s.from;
@@ -372,8 +381,13 @@ impl WorkerPool {
         );
         let w_tot = self.n_workers();
         self.problem = problem.clone();
-        self.broadcast(WorkerMsg::SetDict(crate::dicod::messages::SetDictMsg { problem }));
-        Self::await_replies(&self.coord_rx, w_tot, self.cfg.timeout, "set_dict", |m| match m {
+        // The coordinator always broadcasts the `Shared` form; the
+        // socket transport flattens it to a wire `DictUpdate` at the
+        // serialization seam (spectra then regenerate once per
+        // receiving host — see the messages module docs).
+        self.broadcast(WorkerMsg::SetDict(SetDictMsg::Shared(problem)));
+        let timeout = self.cfg.timeout;
+        Self::await_replies(self.coord.as_mut(), w_tot, timeout, "set_dict", |m| match m {
             CoordMsg::DictSet { from } => Some(from),
             _ => None,
         });
@@ -386,8 +400,9 @@ impl WorkerPool {
         let w_tot = self.n_workers();
         self.broadcast(WorkerMsg::Gather);
         let mut done: Vec<Option<Vec<f64>>> = vec![None; w_tot];
+        let timeout = self.cfg.timeout;
         let per_worker = &mut self.per_worker;
-        Self::await_replies(&self.coord_rx, w_tot, self.cfg.timeout, "gather", |m| match m {
+        Self::await_replies(self.coord.as_mut(), w_tot, timeout, "gather", |m| match m {
             CoordMsg::Done(d) => {
                 let from = d.from;
                 per_worker[from] = d.stats;
@@ -504,6 +519,31 @@ mod tests {
         let z = pool.gather();
         let (cd, cs) = (p.cost(&z), p.cost(&seq.z));
         assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "{cd} vs {cs}");
+    }
+
+    #[test]
+    fn report_records_transport_and_socket_pool_solves() {
+        let p = gen_problem_1d(26, 100, 2, 5);
+        let mut gathered = Vec::new();
+        for kind in [TransportKind::Channel, TransportKind::Socket] {
+            let cfg = DicodConfig {
+                n_workers: 2,
+                tol: 1e-8,
+                transport: kind,
+                ..Default::default()
+            };
+            let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+            assert!(pool.solve().converged, "{} pool must converge", kind.name());
+            gathered.push(pool.gather());
+            assert_eq!(pool.report().transport, kind);
+        }
+        // Same protocol, same math: the wire may only change timing,
+        // and this tiny problem converges to the same optimum.
+        let (a, b) = (&gathered[0], &gathered[1]);
+        assert!(
+            (p.cost(a) - p.cost(b)).abs() < 1e-9 * (1.0 + p.cost(a).abs()),
+            "channel and socket pools must reach the same optimum"
+        );
     }
 
     #[test]

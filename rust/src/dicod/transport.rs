@@ -1,0 +1,922 @@
+//! The transport seam: message delivery for the worker grid.
+//!
+//! The distributed runtime has exactly three protocol edges —
+//! coordinator→worker phase commands, worker→coordinator replies
+//! (status / stats / gather), and the hot worker→worker `UpdateMsg`
+//! neighbour traffic. This module owns all three behind a pair of
+//! endpoint traits so the rest of the runtime never touches a concrete
+//! channel or socket:
+//!
+//! * [`WorkerEndpoint`] — what a worker holds: a blocking/polling inbox
+//!   plus sends to a neighbour (`send_update`) and to the coordinator
+//!   (`send_coord`).
+//! * [`CoordEndpoint`] — what the pool holds: per-rank command sends
+//!   plus a polling receive of worker replies.
+//! * [`Transport`] — hands out each endpoint exactly once at spawn.
+//!
+//! Two implementations ship today:
+//!
+//! * [`ChannelTransport`] (default): today's in-process
+//!   `std::sync::mpsc` wiring, moved behind the seam verbatim — message
+//!   values (including the `Arc<CscProblem>` of a `SetDict` broadcast)
+//!   are moved, never serialized, and the disconnect semantics the pool
+//!   relies on are preserved: the coordinator endpoint deliberately
+//!   holds *no* sender for the reply channel, so the pool's receive
+//!   fails loudly the moment the last worker thread dies.
+//! * [`SocketTransport`]: length-prefixed binary frames
+//!   ([`crate::dicod::messages`] wire format) over a loopback socket
+//!   pair per worker (Unix-domain where available, TCP elsewhere).
+//!   Workers send `Coord` frames upstream and `Fwd` frames for
+//!   neighbour updates; a coordinator-side hub demultiplexes — replies
+//!   into the pool's receive queue, forwards into the destination
+//!   worker's outbox. One writer thread per destination stream keeps
+//!   frames atomic and per-edge FIFO causal: a worker's `Fwd` written
+//!   before its `SolveDone` is routed before the coordinator can even
+//!   see the `SolveDone`, so the between-phase Safra settlement holds
+//!   exactly as in channel mode. Every message crosses the real
+//!   serialization boundary (`SetDict` travels as a
+//!   [`crate::dicod::messages::DictUpdate`] and the receiving worker
+//!   rebuilds its `CscProblem`, regenerating spectra once per host), so
+//!   loopback CI runs exercise the same code path a multi-machine grid
+//!   would.
+//!
+//! [`serve_worker_listen`] is the other half of the multi-process
+//! story: `dicodile worker --listen <addr>` accepts one connection,
+//! reads a `Bootstrap` frame (rank + config + problem data) and runs
+//! the standard worker loop over that socket. This PR exercises it over
+//! same-host sockets (see `tests/transport_parity.rs`); pool-side
+//! remote attach (assembling a grid from served workers) is the next
+//! step on ROADMAP direction 4 and intentionally out of scope here.
+
+use std::io::{Read, Write};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::csc::problem::CscProblem;
+use crate::csc::select::{SelectMode, Strategy};
+use crate::dicod::config::DicodConfig;
+use crate::dicod::messages::{
+    decode_frame, encode_bootstrap_frame, encode_coord_frame, encode_fwd_frame,
+    encode_worker_frame, BootstrapMsg, CoordMsg, UpdateMsg, WireFrame, WorkerMsg,
+};
+use crate::dicod::partition::{PartitionKind, WorkerGrid};
+use crate::dicod::worker::{run_pool_worker, PoolWorkerCtx};
+use crate::tensor::NdTensor;
+
+/// Which transport a pool's grid runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process `mpsc` channels (zero-copy message moves).
+    Channel,
+    /// Length-prefixed binary frames over loopback sockets.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Socket => "socket",
+        }
+    }
+
+    /// Honour the `DICODILE_TRANSPORT` env toggle (default: channel).
+    /// Unknown values fall back to the default with a (once-only)
+    /// warning rather than aborting — a silent fallback would turn a
+    /// typo'd `socket` parity run into a bogus channel-vs-channel one.
+    pub fn from_env() -> TransportKind {
+        match std::env::var("DICODILE_TRANSPORT").ok().as_deref() {
+            Some(s) => s.parse().unwrap_or_else(|e: String| {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!("warning: DICODILE_TRANSPORT: {e}; defaulting to channel")
+                });
+                TransportKind::Channel
+            }),
+            None => TransportKind::Channel,
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "channel" => Ok(TransportKind::Channel),
+            "socket" => Ok(TransportKind::Socket),
+            other => Err(format!("unknown transport {other:?} (channel|socket)")),
+        }
+    }
+}
+
+/// Receive failure, unified across transports. `Empty` only from
+/// `try_recv`, `Timeout` only from `recv_timeout`; `Closed` means the
+/// other side of the edge is gone for good.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvError {
+    Empty,
+    Timeout,
+    Closed,
+}
+
+/// A worker's view of the grid: its command/notification inbox plus
+/// sends to neighbours and to the coordinator.
+pub trait WorkerEndpoint: Send {
+    /// Block until the next message (or `Closed`).
+    fn recv(&mut self) -> Result<WorkerMsg, RecvError>;
+    /// Non-blocking poll (`Empty` when the inbox is drained).
+    fn try_recv(&mut self) -> Result<WorkerMsg, RecvError>;
+    /// Block up to `timeout` (the worker's idle poll).
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<WorkerMsg, RecvError>;
+    /// Notify neighbour `to` of a coordinate update. Best-effort: a
+    /// dead neighbour is the pool's problem to detect, not the hot
+    /// loop's.
+    fn send_update(&mut self, to: usize, msg: UpdateMsg);
+    /// Reply to the coordinator (status / stats / gather edges).
+    fn send_coord(&mut self, msg: CoordMsg);
+}
+
+/// The pool's view of the grid: per-rank command sends plus the merged
+/// reply stream.
+pub trait CoordEndpoint: Send {
+    /// Send a phase command (or routed update) to worker `rank`.
+    fn send(&mut self, rank: usize, msg: WorkerMsg);
+    /// Wait up to `timeout` for the next worker reply. `Closed` means
+    /// every worker endpoint is gone — the pool treats that as a dead
+    /// grid and panics loudly.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<CoordMsg, RecvError>;
+}
+
+/// Builds the endpoints for one pool spawn. Each endpoint is taken
+/// exactly once; the transport object itself is dropped once the grid
+/// is up (for `ChannelTransport` that drop is what severs the master
+/// reply-sender so worker death disconnects the pool).
+pub trait Transport {
+    fn kind(&self) -> TransportKind;
+    fn take_worker_endpoint(&mut self, rank: usize) -> Box<dyn WorkerEndpoint>;
+    fn take_coord_endpoint(&mut self) -> Box<dyn CoordEndpoint>;
+}
+
+/// Construct the transport selected by `kind` for an `n_workers` grid.
+pub fn make_transport(kind: TransportKind, n_workers: usize) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Channel => Box::new(ChannelTransport::new(n_workers)),
+        TransportKind::Socket => Box::new(SocketTransport::new(n_workers)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ChannelTransport: in-process mpsc, the default
+// ---------------------------------------------------------------------------
+
+/// Today's in-process wiring behind the seam: one `mpsc` inbox per
+/// worker (commands and neighbour updates share it, preserving FIFO
+/// causality) and one shared reply channel to the pool.
+pub struct ChannelTransport {
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    inboxes: Vec<Option<Receiver<WorkerMsg>>>,
+    coord_tx: Sender<CoordMsg>,
+    coord_rx: Option<Receiver<CoordMsg>>,
+}
+
+impl ChannelTransport {
+    pub fn new(n_workers: usize) -> Self {
+        let mut worker_tx = Vec::with_capacity(n_workers);
+        let mut inboxes = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (tx, rx) = mpsc::channel();
+            worker_tx.push(tx);
+            inboxes.push(Some(rx));
+        }
+        let (coord_tx, coord_rx) = mpsc::channel();
+        ChannelTransport { worker_tx, inboxes, coord_tx, coord_rx: Some(coord_rx) }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Channel
+    }
+
+    fn take_worker_endpoint(&mut self, rank: usize) -> Box<dyn WorkerEndpoint> {
+        Box::new(ChannelWorkerEndpoint {
+            inbox: self.inboxes[rank].take().expect("worker endpoint taken twice"),
+            worker_tx: self.worker_tx.clone(),
+            coord_tx: self.coord_tx.clone(),
+        })
+    }
+
+    fn take_coord_endpoint(&mut self) -> Box<dyn CoordEndpoint> {
+        // No `coord_tx` clone in here: only worker endpoints may hold
+        // reply senders, so `recv_timeout` disconnects — and the pool
+        // fails loudly — as soon as the last worker thread exits.
+        Box::new(ChannelCoordEndpoint {
+            worker_tx: self.worker_tx.clone(),
+            coord_rx: self.coord_rx.take().expect("coord endpoint taken twice"),
+        })
+    }
+}
+
+struct ChannelWorkerEndpoint {
+    inbox: Receiver<WorkerMsg>,
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    coord_tx: Sender<CoordMsg>,
+}
+
+impl WorkerEndpoint for ChannelWorkerEndpoint {
+    fn recv(&mut self) -> Result<WorkerMsg, RecvError> {
+        self.inbox.recv().map_err(|_| RecvError::Closed)
+    }
+
+    fn try_recv(&mut self) -> Result<WorkerMsg, RecvError> {
+        self.inbox.try_recv().map_err(|e| match e {
+            TryRecvError::Empty => RecvError::Empty,
+            TryRecvError::Disconnected => RecvError::Closed,
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<WorkerMsg, RecvError> {
+        self.inbox.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvError::Timeout,
+            RecvTimeoutError::Disconnected => RecvError::Closed,
+        })
+    }
+
+    fn send_update(&mut self, to: usize, msg: UpdateMsg) {
+        let _ = self.worker_tx[to].send(WorkerMsg::Update(msg));
+    }
+
+    fn send_coord(&mut self, msg: CoordMsg) {
+        let _ = self.coord_tx.send(msg);
+    }
+}
+
+struct ChannelCoordEndpoint {
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    coord_rx: Receiver<CoordMsg>,
+}
+
+impl CoordEndpoint for ChannelCoordEndpoint {
+    fn send(&mut self, rank: usize, msg: WorkerMsg) {
+        let _ = self.worker_tx[rank].send(msg);
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<CoordMsg, RecvError> {
+        self.coord_rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvError::Timeout,
+            RecvTimeoutError::Disconnected => RecvError::Closed,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------------
+
+/// Upper bound on a single frame payload (sanity guard against a
+/// corrupt length prefix; 1 GiB comfortably fits any Bootstrap).
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Write one `u32`-length-prefixed frame as a single `write_all` (the
+/// one-writer-per-stream invariant makes that atomic on the wire).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame payload too large",
+        ));
+    }
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)
+}
+
+/// Read one frame payload. `Ok(None)` on clean EOF at a frame
+/// boundary; EOF inside a frame, oversized lengths and I/O failures
+/// are errors.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside frame header",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame length exceeds cap",
+        ));
+    }
+    let mut payload = vec![0u8; n];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------------
+// Duplex: one stream type over UDS and TCP
+// ---------------------------------------------------------------------------
+
+/// A connected byte stream — Unix-domain where the platform has it,
+/// TCP otherwise (and for `worker --listen host:port`).
+enum Duplex {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(std::net::TcpStream),
+}
+
+impl Duplex {
+    /// A connected loopback pair (the per-worker link of
+    /// `SocketTransport`).
+    fn pair() -> std::io::Result<(Duplex, Duplex)> {
+        #[cfg(unix)]
+        {
+            let (a, b) = std::os::unix::net::UnixStream::pair()?;
+            Ok((Duplex::Unix(a), Duplex::Unix(b)))
+        }
+        #[cfg(not(unix))]
+        {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?;
+            let a = std::net::TcpStream::connect(addr)?;
+            let (b, _) = listener.accept()?;
+            let _ = a.set_nodelay(true);
+            let _ = b.set_nodelay(true);
+            Ok((Duplex::Tcp(a), Duplex::Tcp(b)))
+        }
+    }
+
+    fn try_clone(&self) -> std::io::Result<Duplex> {
+        match self {
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.try_clone().map(Duplex::Unix),
+            Duplex::Tcp(s) => s.try_clone().map(Duplex::Tcp),
+        }
+    }
+
+    /// Tear down the underlying socket (affects every clone): unblocks
+    /// any thread parked in a read on either side. This is what breaks
+    /// the reader-thread cycles at endpoint drop.
+    fn shutdown_both(&self) {
+        match self {
+            #[cfg(unix)]
+            Duplex::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Duplex::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Duplex {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.read(buf),
+            Duplex::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Duplex {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.write(buf),
+            Duplex::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.flush(),
+            Duplex::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SocketTransport: framed loopback sockets with a coordinator-side hub
+// ---------------------------------------------------------------------------
+
+/// Socket-backed transport: one loopback stream pair per worker, a
+/// star topology with the coordinator-side hub routing worker→worker
+/// `Fwd` frames. Every message is encoded to the wire format — this is
+/// the exact data path a multi-process grid runs, minus the physical
+/// network.
+pub struct SocketTransport {
+    worker_streams: Vec<Option<Duplex>>,
+    hub_streams: Vec<Option<Duplex>>,
+}
+
+impl SocketTransport {
+    pub fn new(n_workers: usize) -> Self {
+        let mut worker_streams = Vec::with_capacity(n_workers);
+        let mut hub_streams = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (hub, worker) = Duplex::pair().expect("socket transport: loopback pair");
+            hub_streams.push(Some(hub));
+            worker_streams.push(Some(worker));
+        }
+        SocketTransport { worker_streams, hub_streams }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Socket
+    }
+
+    fn take_worker_endpoint(&mut self, rank: usize) -> Box<dyn WorkerEndpoint> {
+        let stream = self.worker_streams[rank].take().expect("worker endpoint taken twice");
+        Box::new(SocketWorkerEndpoint::over(stream))
+    }
+
+    fn take_coord_endpoint(&mut self) -> Box<dyn CoordEndpoint> {
+        let n = self.hub_streams.len();
+        let (coord_tx, coord_rx) = mpsc::channel::<CoordMsg>();
+        let mut streams = Vec::with_capacity(n);
+        let mut outbox = Vec::with_capacity(n);
+        let mut writers = Vec::with_capacity(n);
+        for rank in 0..n {
+            let stream = self.hub_streams[rank].take().expect("coord endpoint taken twice");
+            let mut wh = stream.try_clone().expect("socket transport: clone write half");
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            // One writer thread per destination stream: frames from the
+            // pool and routed neighbour updates interleave FIFO here.
+            writers.push(std::thread::spawn(move || {
+                while let Ok(payload) = rx.recv() {
+                    if write_frame(&mut wh, &payload).is_err() {
+                        break;
+                    }
+                }
+            }));
+            outbox.push(tx);
+            streams.push(stream);
+        }
+        let mut readers = Vec::with_capacity(n);
+        for stream in &streams {
+            let mut rh = stream.try_clone().expect("socket transport: clone read half");
+            let coord_tx = coord_tx.clone();
+            let outboxes = outbox.clone();
+            // One reader (demux) thread per worker stream: replies go
+            // to the pool's queue, `Fwd` frames to the destination
+            // outbox. Exits on EOF — when every reader is gone the
+            // pool's queue disconnects, mirroring the channel
+            // transport's dead-grid detection.
+            readers.push(std::thread::spawn(move || loop {
+                match read_frame(&mut rh) {
+                    Ok(Some(payload)) => match decode_frame(&payload) {
+                        Ok(WireFrame::Coord(m)) => {
+                            if coord_tx.send(m).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(WireFrame::Fwd { to, msg }) => {
+                            if to < outboxes.len() {
+                                let _ = outboxes[to]
+                                    .send(encode_worker_frame(&WorkerMsg::Update(msg)));
+                            }
+                        }
+                        // A worker has no business sending anything
+                        // else upstream: treat it as a dead link.
+                        Ok(_) | Err(_) => break,
+                    },
+                    Ok(None) | Err(_) => break,
+                }
+            }));
+        }
+        // `coord_tx` master clone drops here: only reader threads hold
+        // reply senders, so worker death cascades to `Closed` exactly
+        // like the channel transport.
+        Box::new(SocketCoordEndpoint { outbox, coord_rx, streams, readers, writers })
+    }
+}
+
+struct SocketWorkerEndpoint {
+    /// Write half; the worker thread is the sole writer on it.
+    stream: Duplex,
+    inbox: Receiver<WorkerMsg>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl SocketWorkerEndpoint {
+    /// Wrap a connected stream: spawn the reader thread that decodes
+    /// incoming frames into an in-memory inbox (so blocking / polling
+    /// receives cost the same as in channel mode). Also serves
+    /// `dicodile worker --listen` connections.
+    fn over(stream: Duplex) -> Self {
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        let mut rh = stream.try_clone().expect("socket transport: clone read half");
+        let reader = std::thread::spawn(move || loop {
+            match read_frame(&mut rh) {
+                Ok(Some(payload)) => match decode_frame(&payload) {
+                    Ok(WireFrame::Worker(m)) => {
+                        if tx.send(m).is_err() {
+                            break;
+                        }
+                    }
+                    // Only coordinator→worker frames may arrive here.
+                    Ok(_) | Err(_) => break,
+                },
+                Ok(None) | Err(_) => break,
+            }
+        });
+        SocketWorkerEndpoint { stream, inbox: rx, reader: Some(reader) }
+    }
+}
+
+impl WorkerEndpoint for SocketWorkerEndpoint {
+    fn recv(&mut self) -> Result<WorkerMsg, RecvError> {
+        self.inbox.recv().map_err(|_| RecvError::Closed)
+    }
+
+    fn try_recv(&mut self) -> Result<WorkerMsg, RecvError> {
+        self.inbox.try_recv().map_err(|e| match e {
+            TryRecvError::Empty => RecvError::Empty,
+            TryRecvError::Disconnected => RecvError::Closed,
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<WorkerMsg, RecvError> {
+        self.inbox.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvError::Timeout,
+            RecvTimeoutError::Disconnected => RecvError::Closed,
+        })
+    }
+
+    fn send_update(&mut self, to: usize, msg: UpdateMsg) {
+        let _ = write_frame(&mut self.stream, &encode_fwd_frame(to, &msg));
+    }
+
+    fn send_coord(&mut self, msg: CoordMsg) {
+        let _ = write_frame(&mut self.stream, &encode_coord_frame(&msg));
+    }
+}
+
+impl Drop for SocketWorkerEndpoint {
+    fn drop(&mut self) {
+        // Tear the socket down so (a) our reader thread unblocks and
+        // (b) the hub sees EOF and retires this link.
+        self.stream.shutdown_both();
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct SocketCoordEndpoint {
+    outbox: Vec<Sender<Vec<u8>>>,
+    coord_rx: Receiver<CoordMsg>,
+    streams: Vec<Duplex>,
+    readers: Vec<JoinHandle<()>>,
+    writers: Vec<JoinHandle<()>>,
+}
+
+impl CoordEndpoint for SocketCoordEndpoint {
+    fn send(&mut self, rank: usize, msg: WorkerMsg) {
+        // Encode per destination: a `SetDict` broadcast serializes once
+        // per worker — the price of the wire (measured by the
+        // `cdl_outer` bench's transport section).
+        let _ = self.outbox[rank].send(encode_worker_frame(&msg));
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<CoordMsg, RecvError> {
+        self.coord_rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvError::Timeout,
+            RecvTimeoutError::Disconnected => RecvError::Closed,
+        })
+    }
+}
+
+impl Drop for SocketCoordEndpoint {
+    fn drop(&mut self) {
+        // In the orderly path workers have already been joined, so the
+        // queued frames are long delivered; in failure paths this cuts
+        // every link so no helper thread can outlive the pool. Order
+        // matters: drop our outbox senders, sever the sockets (unblocks
+        // the readers), join readers (their exit drops the last outbox
+        // clones), then the writers can be joined.
+        self.outbox.clear();
+        for s in &self.streams {
+            s.shutdown_both();
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.writers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Served workers: `dicodile worker --listen <addr>`
+// ---------------------------------------------------------------------------
+
+/// `PartitionKind` wire code (see [`BootstrapMsg::partition`]).
+pub fn partition_code(k: PartitionKind) -> u8 {
+    match k {
+        PartitionKind::Line => 0,
+        PartitionKind::Grid => 1,
+    }
+}
+
+/// `Strategy` wire code (see [`BootstrapMsg::strategy`]).
+pub fn strategy_code(s: Strategy) -> u8 {
+    match s {
+        Strategy::Greedy => 0,
+        Strategy::Randomized => 1,
+        Strategy::LocallyGreedy => 2,
+    }
+}
+
+/// `SelectMode` wire code (see [`BootstrapMsg::select`]).
+pub fn select_code(m: SelectMode) -> u8 {
+    match m {
+        SelectMode::Rescan => 0,
+        SelectMode::Incremental => 1,
+    }
+}
+
+fn partition_from_code(c: u8) -> Result<PartitionKind, String> {
+    match c {
+        0 => Ok(PartitionKind::Line),
+        1 => Ok(PartitionKind::Grid),
+        other => Err(format!("bad partition code {other}")),
+    }
+}
+
+fn strategy_from_code(c: u8) -> Result<Strategy, String> {
+    match c {
+        0 => Ok(Strategy::Greedy),
+        1 => Ok(Strategy::Randomized),
+        2 => Ok(Strategy::LocallyGreedy),
+        other => Err(format!("bad strategy code {other}")),
+    }
+}
+
+fn select_from_code(c: u8) -> Result<SelectMode, String> {
+    match c {
+        0 => Ok(SelectMode::Rescan),
+        1 => Ok(SelectMode::Incremental),
+        other => Err(format!("bad select code {other}")),
+    }
+}
+
+/// Build the handshake a coordinator sends to a served worker.
+pub fn bootstrap_for(
+    rank: usize,
+    problem: &CscProblem,
+    cfg: &DicodConfig,
+    z0: Option<&NdTensor>,
+) -> BootstrapMsg {
+    BootstrapMsg {
+        rank,
+        n_workers: cfg.n_workers,
+        partition: partition_code(cfg.partition),
+        strategy: strategy_code(cfg.strategy),
+        select: select_code(cfg.select),
+        soft_lock: cfg.soft_lock,
+        tol: cfg.tol,
+        max_updates: cfg.max_updates as u64,
+        divergence_guard: cfg.divergence_guard,
+        seed: cfg.seed,
+        timeout: cfg.timeout,
+        inbox_every: cfg.inbox_every as u64,
+        x: (*problem.x).clone(),
+        d: problem.d.clone(),
+        lambda: problem.lambda,
+        z0: z0.cloned(),
+    }
+}
+
+fn config_from_bootstrap(b: &BootstrapMsg) -> Result<DicodConfig, String> {
+    Ok(DicodConfig {
+        n_workers: b.n_workers,
+        partition: partition_from_code(b.partition)?,
+        strategy: strategy_from_code(b.strategy)?,
+        select: select_from_code(b.select)?,
+        soft_lock: b.soft_lock,
+        tol: b.tol,
+        max_updates: b.max_updates as usize,
+        divergence_guard: b.divergence_guard,
+        seed: b.seed,
+        timeout: b.timeout,
+        inbox_every: b.inbox_every as usize,
+        persistent: true,
+        transport: TransportKind::Socket,
+    })
+}
+
+/// Run one worker over an established connection: read the `Bootstrap`
+/// frame, rebuild the problem and grid locally, and enter the standard
+/// worker loop until `Shutdown` (or disconnect). The spectra of the
+/// rebuilt correlation engine are computed on this host — that is the
+/// documented per-host cost of the wire `SetDict`/`Bootstrap` path.
+fn serve(mut stream: Duplex) -> Result<(), String> {
+    let payload = read_frame(&mut stream)
+        .map_err(|e| format!("reading bootstrap: {e}"))?
+        .ok_or("peer closed before bootstrap")?;
+    let b = match decode_frame(&payload) {
+        Ok(WireFrame::Bootstrap(b)) => b,
+        Ok(_) => return Err("first frame must be a bootstrap".into()),
+        Err(e) => return Err(format!("bad bootstrap frame: {e}")),
+    };
+    if b.rank >= b.n_workers {
+        return Err(format!("rank {} out of range for {} workers", b.rank, b.n_workers));
+    }
+    let cfg = Arc::new(config_from_bootstrap(&b)?);
+    let problem = Arc::new(CscProblem::new(b.x.clone(), b.d.clone(), b.lambda));
+    let grid = Arc::new(WorkerGrid::new(
+        &problem.z_spatial_dims(),
+        problem.atom_dims(),
+        cfg.n_workers,
+        cfg.partition,
+    ));
+    if let Some(z0) = &b.z0 {
+        if z0.dims() != problem.z_dims() {
+            return Err("bootstrap z0 dims mismatch".into());
+        }
+    }
+    let peers = grid.neighbor_links(b.rank);
+    let ctx = PoolWorkerCtx {
+        rank: b.rank,
+        problem,
+        grid,
+        cfg,
+        endpoint: Box::new(SocketWorkerEndpoint::over(stream)),
+        peers,
+        z0: b.z0.as_ref().map(|z| Arc::new(z.clone())),
+    };
+    run_pool_worker(ctx);
+    Ok(())
+}
+
+/// Serve one worker over an accepted Unix-domain connection (test
+/// harness entry; `serve_worker_listen` is the CLI path).
+#[cfg(unix)]
+pub fn serve_worker_unix(stream: std::os::unix::net::UnixStream) -> Result<(), String> {
+    serve(Duplex::Unix(stream))
+}
+
+/// Serve one worker over an accepted TCP connection.
+pub fn serve_worker_tcp(stream: std::net::TcpStream) -> Result<(), String> {
+    let _ = stream.set_nodelay(true);
+    serve(Duplex::Tcp(stream))
+}
+
+/// Bind `addr`, accept exactly one coordinator connection, and serve a
+/// worker on it until shutdown. An `addr` containing `:` is a TCP
+/// `host:port`; anything else is a Unix-domain socket path.
+pub fn serve_worker_listen(addr: &str) -> Result<(), String> {
+    if addr.contains(':') {
+        let listener =
+            std::net::TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let (stream, _) = listener.accept().map_err(|e| format!("accept on {addr}: {e}"))?;
+        serve_worker_tcp(stream)
+    } else {
+        #[cfg(unix)]
+        {
+            // A stale socket file from a previous run would make bind
+            // fail; replacing it is the conventional UDS server move.
+            let _ = std::fs::remove_file(addr);
+            let listener = std::os::unix::net::UnixListener::bind(addr)
+                .map_err(|e| format!("bind {addr}: {e}"))?;
+            let (stream, _) = listener.accept().map_err(|e| format!("accept on {addr}: {e}"))?;
+            let r = serve(Duplex::Unix(stream));
+            let _ = std::fs::remove_file(addr);
+            r
+        }
+        #[cfg(not(unix))]
+        {
+            Err(format!("unix-domain path {addr:?} unsupported on this platform; use host:port"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!("channel".parse::<TransportKind>().unwrap(), TransportKind::Channel);
+        assert_eq!("socket".parse::<TransportKind>().unwrap(), TransportKind::Socket);
+        assert!("smoke".parse::<TransportKind>().is_err());
+        assert_eq!(TransportKind::Socket.name(), "socket");
+    }
+
+    #[test]
+    fn frame_io_round_trips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF at frame boundary");
+    }
+
+    #[test]
+    fn frame_io_rejects_partials_and_giants() {
+        // EOF inside the header.
+        let mut cur = std::io::Cursor::new(vec![5u8, 0]);
+        assert!(read_frame(&mut cur).is_err());
+        // EOF inside the payload.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+        // Corrupt length prefix beyond the cap.
+        let mut cur = std::io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn channel_endpoints_deliver_all_three_edges() {
+        let mut t = ChannelTransport::new(2);
+        let mut coord = t.take_coord_endpoint();
+        let mut w0 = t.take_worker_endpoint(0);
+        let mut w1 = t.take_worker_endpoint(1);
+        drop(t);
+
+        coord.send(0, WorkerMsg::Solve);
+        assert!(matches!(w0.recv(), Ok(WorkerMsg::Solve)));
+
+        let upd = UpdateMsg { from: 0, k: 1, u: vec![3], dz: 0.5 };
+        w0.send_update(1, upd.clone());
+        match w1.recv() {
+            Ok(WorkerMsg::Update(got)) => assert_eq!(got, upd),
+            other => panic!("expected update, got {other:?}"),
+        }
+
+        w1.send_coord(CoordMsg::DictSet { from: 1 });
+        match coord.recv_timeout(Duration::from_secs(1)) {
+            Ok(CoordMsg::DictSet { from }) => assert_eq!(from, 1),
+            other => panic!("expected dictset, got {other:?}"),
+        }
+
+        // Reply edge disconnects when the last worker endpoint dies.
+        drop(w0);
+        drop(w1);
+        assert!(matches!(
+            coord.recv_timeout(Duration::from_millis(50)),
+            Err(RecvError::Closed)
+        ));
+    }
+
+    #[test]
+    fn socket_endpoints_deliver_all_three_edges() {
+        let mut t = SocketTransport::new(2);
+        let mut coord = t.take_coord_endpoint();
+        let mut w0 = t.take_worker_endpoint(0);
+        let mut w1 = t.take_worker_endpoint(1);
+        drop(t);
+
+        coord.send(0, WorkerMsg::Solve);
+        assert!(matches!(w0.recv(), Ok(WorkerMsg::Solve)));
+
+        let upd = UpdateMsg { from: 0, k: 1, u: vec![-2, 7], dz: -0.25 };
+        w0.send_update(1, upd.clone());
+        match w1.recv() {
+            Ok(WorkerMsg::Update(got)) => assert_eq!(got, upd),
+            other => panic!("expected routed update, got {other:?}"),
+        }
+
+        w1.send_coord(CoordMsg::DictSet { from: 1 });
+        match coord.recv_timeout(Duration::from_secs(5)) {
+            Ok(CoordMsg::DictSet { from }) => assert_eq!(from, 1),
+            other => panic!("expected dictset, got {other:?}"),
+        }
+
+        drop(w0);
+        drop(w1);
+        // Hub readers see EOF, reply senders drop, edge closes.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match coord.recv_timeout(Duration::from_millis(20)) {
+                Err(RecvError::Closed) => break,
+                Err(RecvError::Timeout) if std::time::Instant::now() < deadline => continue,
+                other => panic!("expected closed edge, got {other:?}"),
+            }
+        }
+    }
+}

@@ -31,30 +31,34 @@
 //! local update, a neighbour's notification, or a `SetDict` beta
 //! rebuild pay a rescan — observable via the `segments_skipped` /
 //! `segments_rescanned` worker counters, and toggleable back to the
-//! always-rescan path with `DICODILE_SELECT=rescan`.
+//! always-rescan path with `DICODILE_SELECT=rescan`. The soft-lock
+//! comparison reads the same cached `dz_opt` (the cache covers the full
+//! extended window, kept exactly fresh by the fused updates), so a
+//! border candidate's `V(u0) ∩ E(S_w)` max costs cached reads instead
+//! of beta recomputation.
+//!
+//! All messaging goes through a [`WorkerEndpoint`]
+//! (see [`crate::dicod::transport`]): the worker never holds a channel
+//! or a socket, only its endpoint and the transport-addressable
+//! neighbour ids ([`NeighborLink`]), so the same loop runs unchanged
+//! over in-process channels, loopback sockets, or a served
+//! `dicodile worker --listen` connection.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::csc::beta::{BetaWindow, ZWindow};
 use crate::csc::problem::CscProblem;
-use crate::csc::select::{Segments, SelectionState, Strategy};
+use crate::csc::select::{Segments, SelectMode, SelectionState, Strategy};
 use crate::dicod::config::DicodConfig;
 use crate::dicod::messages::{
-    CoordMsg, DoneMsg, SolveDoneMsg, StatsMsg, StatusMsg, UpdateMsg, WorkerMsg, WorkerStats,
+    CoordMsg, DictUpdate, DoneMsg, SetDictMsg, SolveDoneMsg, StatsMsg, StatusMsg, UpdateMsg,
+    WorkerMsg, WorkerStats,
 };
-use crate::dicod::partition::{box_difference, WorkerGrid};
+use crate::dicod::partition::{box_difference, NeighborLink, WorkerGrid};
+use crate::dicod::transport::{RecvError, WorkerEndpoint};
 use crate::tensor::shape::Rect;
 use crate::tensor::NdTensor;
-
-/// Outbound link to a neighbour: rank, its extended window (to decide
-/// whether an update reaches it) and its inbox.
-pub struct Peer {
-    pub rank: usize,
-    pub ext_window: Rect,
-    pub tx: Sender<WorkerMsg>,
-}
 
 /// Everything a resident worker thread is born with.
 pub struct PoolWorkerCtx {
@@ -62,9 +66,10 @@ pub struct PoolWorkerCtx {
     pub problem: Arc<CscProblem>,
     pub grid: Arc<WorkerGrid>,
     pub cfg: Arc<DicodConfig>,
-    pub inbox: Receiver<WorkerMsg>,
-    pub peers: Vec<Peer>,
-    pub coord: Sender<CoordMsg>,
+    /// The worker's side of the transport seam: inbox + all sends.
+    pub endpoint: Box<dyn WorkerEndpoint>,
+    /// Transport-addressable neighbour topology.
+    pub peers: Vec<NeighborLink>,
     /// Optional full-domain warm-start activation.
     pub z0: Option<Arc<NdTensor>>,
 }
@@ -72,9 +77,9 @@ pub struct PoolWorkerCtx {
 /// Poll period while paused (waiting for neighbour traffic or Stop).
 const IDLE_POLL: Duration = Duration::from_millis(2);
 
-/// Run the resident worker until `Shutdown` (or channel teardown).
+/// Run the resident worker until `Shutdown` (or transport teardown).
 pub fn run_pool_worker(ctx: PoolWorkerCtx) {
-    let PoolWorkerCtx { rank, mut problem, grid, cfg, inbox, peers, coord, z0 } = ctx;
+    let PoolWorkerCtx { rank, mut problem, grid, cfg, mut endpoint, peers, z0 } = ctx;
     let cell = grid.cell(rank);
     let ext = grid.extended_cell(rank);
     let ext_dims = ext.extents();
@@ -121,7 +126,7 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
 
     // ---- phase dispatcher ------------------------------------------------
     loop {
-        match inbox.recv() {
+        match endpoint.recv() {
             Err(_) => break,
             // Late neighbour notification from the previous solve phase:
             // apply it so beta/Z stay consistent (and the Safra balance
@@ -140,17 +145,16 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
                     problem: problem.as_ref(),
                     grid: grid.as_ref(),
                     cfg: cfg.as_ref(),
-                    inbox: &inbox,
+                    endpoint: endpoint.as_mut(),
                     peers: &peers,
-                    coord: &coord,
                     beta: &mut beta,
                     z: &mut z,
                     sel: &mut sel,
                     ext_parts: &ext_parts,
                     stats: &mut stats,
                 });
-                let _ = coord
-                    .send(CoordMsg::SolveDone(SolveDoneMsg { from: rank, stats: stats.clone() }));
+                endpoint
+                    .send_coord(CoordMsg::SolveDone(SolveDoneMsg { from: rank, stats: stats.clone() }));
                 if !alive {
                     break;
                 }
@@ -158,10 +162,28 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
             Ok(WorkerMsg::ComputeStats) => {
                 let (phi, psi, z_l1, z_nnz) =
                     crate::dict::phi_psi::worker_stats_partials(&problem, &z, &cell, &ext);
-                let _ = coord.send(CoordMsg::Stats(StatsMsg { from: rank, phi, psi, z_l1, z_nnz }));
+                endpoint.send_coord(CoordMsg::Stats(StatsMsg { from: rank, phi, psi, z_l1, z_nnz }));
             }
             Ok(WorkerMsg::SetDict(msg)) => {
-                problem = msg.problem;
+                problem = match msg {
+                    // In-process delivery: share the coordinator's
+                    // problem (FFT spectra included) by Arc.
+                    SetDictMsg::Shared(p) => p,
+                    // Wire delivery: rebuild a local CscProblem against
+                    // the resident X. Derived quantities (DtD, norms,
+                    // beta) are bit-identical to the shared path; the
+                    // FFT spectra are regenerated on this host — a
+                    // once-per-host cost the channel transport never
+                    // pays (see the messages module docs).
+                    SetDictMsg::Wire(du) => {
+                        assert_eq!(
+                            du.fingerprint,
+                            DictUpdate::geometry_fingerprint(problem.x.dims(), du.d.dims()),
+                            "worker {rank}: SetDict geometry fingerprint mismatch"
+                        );
+                        Arc::new(CscProblem::new(problem.x_shared(), du.d, du.lambda))
+                    }
+                };
                 beta = BetaWindow::init_window_warm(&problem, &ext.lo, &ext_dims, &z);
                 // beta was rebuilt wholesale under the new dictionary:
                 // refresh the dz_opt cache (charged to the simulated
@@ -170,14 +192,14 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
                 sel.rebuild(&problem, &beta, &z);
                 stats.work += sel.coords_cache_filled - filled_before;
                 stats.beta_warm_reinits += 1;
-                let _ = coord.send(CoordMsg::DictSet { from: rank });
+                endpoint.send_coord(CoordMsg::DictSet { from: rank });
             }
             Ok(WorkerMsg::Gather) => {
                 stats.gathers += 1;
                 sync_selection_counters(&mut stats, &sel);
                 let z_cell = extract_cell(&z, &cell, k_tot);
-                let _ = coord
-                    .send(CoordMsg::Done(DoneMsg { from: rank, z_cell, stats: stats.clone() }));
+                endpoint
+                    .send_coord(CoordMsg::Done(DoneMsg { from: rank, z_cell, stats: stats.clone() }));
             }
             Ok(WorkerMsg::Shutdown) => break,
         }
@@ -190,9 +212,8 @@ struct SolveCtx<'a> {
     problem: &'a CscProblem,
     grid: &'a WorkerGrid,
     cfg: &'a DicodConfig,
-    inbox: &'a Receiver<WorkerMsg>,
-    peers: &'a [Peer],
-    coord: &'a Sender<CoordMsg>,
+    endpoint: &'a mut dyn WorkerEndpoint,
+    peers: &'a [NeighborLink],
     beta: &'a mut BetaWindow,
     z: &'a mut ZWindow,
     sel: &'a mut SelectionState,
@@ -200,18 +221,37 @@ struct SolveCtx<'a> {
     stats: &'a mut WorkerStats,
 }
 
+/// Send a status report on the worker→coordinator edge (free function
+/// so it can borrow the endpoint mutably between inbox polls).
+fn send_status(
+    endpoint: &mut dyn WorkerEndpoint,
+    rank: usize,
+    idle: bool,
+    converged: bool,
+    diverged: bool,
+    stats: &WorkerStats,
+) {
+    endpoint.send_coord(CoordMsg::Status(StatusMsg {
+        from: rank,
+        idle,
+        sent: stats.msgs_sent,
+        received: stats.msgs_received,
+        converged,
+        diverged,
+    }));
+}
+
 /// One solve phase: DiCoDiLe-Z from the resident windows, until the
 /// coordinator's `Stop`. Returns `false` if the worker should exit
-/// entirely (Shutdown or channel teardown mid-phase).
+/// entirely (Shutdown or transport teardown mid-phase).
 fn solve_phase(ctx: SolveCtx<'_>) -> bool {
     let SolveCtx {
         rank,
         problem,
         grid,
         cfg,
-        inbox,
+        endpoint,
         peers,
-        coord,
         beta,
         z,
         sel,
@@ -234,17 +274,6 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
     let mut stop = false;
     let mut alive = true;
 
-    let send_status = |idle: bool, converged: bool, diverged: bool, stats: &WorkerStats| {
-        let _ = coord.send(CoordMsg::Status(StatusMsg {
-            from: rank,
-            idle,
-            sent: stats.msgs_sent,
-            received: stats.msgs_received,
-            converged,
-            diverged,
-        }));
-    };
-
     let inbox_every = cfg.inbox_every.max(1);
     let mut since_drain = 0usize;
 
@@ -254,20 +283,20 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
         since_drain += 1;
         let drain_now = idle || since_drain >= inbox_every;
         while drain_now {
-            match inbox.try_recv() {
+            match endpoint.try_recv() {
                 Ok(WorkerMsg::Update(u)) => {
                     apply_remote_update(problem, beta, z, sel, &u, stats);
                     if idle {
                         if !capped && !diverged {
                             idle = false;
                             sweep_max = 0.0;
-                            send_status(false, false, false, stats);
+                            send_status(endpoint, rank, false, false, false, stats);
                         } else {
                             // Still paused (capped/diverged), but the
                             // received counter moved: refresh it so the
                             // coordinator's Safra balance can settle
                             // instead of stalling until the timeout.
-                            send_status(true, false, diverged, stats);
+                            send_status(endpoint, rank, true, false, diverged, stats);
                         }
                     }
                 }
@@ -296,23 +325,23 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
             // Report and wait for the coordinator's Stop.
             if !idle {
                 idle = true;
-                send_status(true, false, diverged, stats);
+                send_status(endpoint, rank, true, false, diverged, stats);
             }
         }
 
         // -- 2. paused: block briefly on the inbox ------------------------
         if idle {
-            match inbox.recv_timeout(IDLE_POLL) {
+            match endpoint.recv_timeout(IDLE_POLL) {
                 Ok(WorkerMsg::Update(u)) => {
                     apply_remote_update(problem, beta, z, sel, &u, stats);
                     if !capped && !diverged {
                         idle = false;
                         sweep_max = 0.0;
-                        send_status(false, false, false, stats);
+                        send_status(endpoint, rank, false, false, false, stats);
                     } else {
                         // See the drain branch: keep the coordinator's
                         // received counter fresh while pause persists.
-                        send_status(true, false, diverged, stats);
+                        send_status(endpoint, rank, true, false, diverged, stats);
                     }
                 }
                 Ok(WorkerMsg::Stop) => break 'main,
@@ -321,8 +350,10 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
                     break 'main;
                 }
                 Ok(_) => {}
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
+                Err(RecvError::Timeout) => {}
+                // `Empty` cannot come out of a blocking receive;
+                // anything else means the grid is gone.
+                Err(_) => {
                     alive = false;
                     break 'main;
                 }
@@ -343,7 +374,7 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
             if dz0.abs() >= cfg.tol {
                 let accepted = if cfg.soft_lock && grid.in_soft_border(rank, &u0) {
                     let (ok, scanned) =
-                        soft_lock_accepts(problem, grid, beta, z, ext_parts, rank, &u0, dz0);
+                        soft_lock_accepts(problem, grid, sel, beta, z, ext_parts, rank, &u0, dz0);
                     stats.work += scanned;
                     ok
                 } else {
@@ -367,7 +398,7 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
                         if z.at(k0, &u0).abs() > guard {
                             diverged = true;
                             idle = true;
-                            send_status(true, false, true, stats);
+                            send_status(endpoint, rank, true, false, true, stats);
                             continue 'main;
                         }
                     }
@@ -377,19 +408,17 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
                     for peer in peers {
                         if v.overlaps(&peer.ext_window) {
                             stats.msgs_sent += 1;
-                            let _ = peer.tx.send(WorkerMsg::Update(UpdateMsg {
-                                from: rank,
-                                k: k0,
-                                u: u0.clone(),
-                                dz: dz0,
-                            }));
+                            endpoint.send_update(
+                                peer.rank,
+                                UpdateMsg { from: rank, k: k0, u: u0.clone(), dz: dz0 },
+                            );
                         }
                     }
 
                     if phase_updates >= max_updates {
                         capped = true;
                         idle = true;
-                        send_status(true, false, false, stats);
+                        send_status(endpoint, rank, true, false, false, stats);
                         continue 'main;
                     }
                 } else {
@@ -406,7 +435,7 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
             if sweep_max < cfg.tol {
                 idle = true;
                 stats.pauses += 1;
-                send_status(true, true, false, stats);
+                send_status(endpoint, rank, true, true, false, stats);
             }
             sweep_max = 0.0;
         }
@@ -446,10 +475,22 @@ fn apply_remote_update(
 /// amplitude `dz0` is accepted iff no strictly better update exists in
 /// `V(u0) ∩ E(S_w)`; on exact ties the lower worker rank wins.
 /// Returns `(accepted, coordinates scanned)`.
+///
+/// In incremental selection mode the extension max is read from the
+/// resident `dz_opt` cache — the fused updates keep the cache exactly
+/// fresh over the *whole* extended window (the dirty flags only gate
+/// the per-segment champion caches), so the cached read is bit-identical
+/// to the fresh beta rescan while skipping the soft-threshold
+/// recomputation. `DICODILE_SELECT=rescan` keeps the original scan.
+/// Either way the scanned coordinates are charged to the simulated
+/// clock by the caller: the candidates still have to be *compared*, and
+/// keeping the accounting mode-independent keeps the scaling figures'
+/// `work` comparable across selection modes.
 #[allow(clippy::too_many_arguments)]
 fn soft_lock_accepts(
     problem: &CscProblem,
     grid: &WorkerGrid,
+    sel: &SelectionState,
     beta: &BetaWindow,
     z: &ZWindow,
     ext_parts: &[Rect],
@@ -461,13 +502,19 @@ fn soft_lock_accepts(
     let mut best_abs = 0.0f64;
     let mut best_owner = usize::MAX;
     let mut scanned = 0u64;
+    let cached = sel.mode() == SelectMode::Incremental;
     for part in ext_parts {
         let r = part.intersect(&v);
         if r.is_empty() {
             continue;
         }
         scanned += (problem.n_atoms() * r.size()) as u64;
-        if let Some((_, u, dz)) = beta.best_candidate(problem, z, &r) {
+        let cand = if cached {
+            sel.cached_best_in_rect(beta, &r)
+        } else {
+            beta.best_candidate(problem, z, &r)
+        };
+        if let Some((_, u, dz)) = cand {
             if dz.abs() > best_abs {
                 best_abs = dz.abs();
                 best_owner = grid.owner_of(&u);
@@ -524,6 +571,14 @@ mod tests {
         assert_eq!(out[8 + 7], -1.0); // k=1, u=12
     }
 
+    /// Selection states in both modes, built *after* any planted beta
+    /// values so the incremental dz_opt cache reflects them.
+    fn both_modes(p: &CscProblem, cell: &Rect, beta: &BetaWindow, z: &ZWindow) -> [SelectionState; 2] {
+        [SelectMode::Rescan, SelectMode::Incremental].map(|mode| {
+            SelectionState::new(mode, Segments::for_atoms(cell.clone(), p.atom_dims()), p, beta, z)
+        })
+    }
+
     #[test]
     fn soft_lock_prefers_larger_candidate() {
         let p = toy_problem();
@@ -541,11 +596,14 @@ mod tests {
         let u0 = vec![cell.hi[0] - 1]; // border coordinate
         assert!(grid.in_soft_border(0, &u0));
         let dz0 = 0.5;
-        let (ok, scanned) = soft_lock_accepts(&p, &grid, &beta, &z, &ext_parts, 0, &u0, dz0);
-        assert!(!ok);
-        assert!(scanned > 0);
-        // and accepted when the candidate dominates
-        assert!(soft_lock_accepts(&p, &grid, &beta, &z, &ext_parts, 0, &u0, 1e7).0);
+        for sel in &both_modes(&p, &cell, &beta, &z) {
+            let (ok, scanned) =
+                soft_lock_accepts(&p, &grid, sel, &beta, &z, &ext_parts, 0, &u0, dz0);
+            assert!(!ok);
+            assert!(scanned > 0);
+            // and accepted when the candidate dominates
+            assert!(soft_lock_accepts(&p, &grid, sel, &beta, &z, &ext_parts, 0, &u0, 1e7).0);
+        }
     }
 
     #[test]
@@ -553,12 +611,13 @@ mod tests {
         let p = toy_problem();
         let grid = WorkerGrid::new(&p.z_spatial_dims(), p.atom_dims(), 2, PartitionKind::Line);
         let ext0 = grid.extended_cell(0);
-        let parts0 = box_difference(&ext0, &grid.cell(0));
+        let cell0 = grid.cell(0);
+        let parts0 = box_difference(&ext0, &cell0);
         let beta0 = BetaWindow::init_window(&p, &ext0.lo, &ext0.extents());
         let z0 = ZWindow::zeros(p.n_atoms(), &ext0.lo, &ext0.extents());
         // Find an actual tie: candidate amplitude == extension max.
         // Use the extension's own best as the tie value.
-        let u0 = vec![grid.cell(0).hi[0] - 1];
+        let u0 = vec![cell0.hi[0] - 1];
         let v = grid.v_box(&u0);
         let mut ext_best = 0.0;
         for part in &parts0 {
@@ -571,8 +630,37 @@ mod tests {
             }
         }
         if ext_best > 0.0 {
-            // worker 0 (lower rank) wins ties
-            assert!(soft_lock_accepts(&p, &grid, &beta0, &z0, &parts0, 0, &u0, ext_best).0);
+            for sel in &both_modes(&p, &cell0, &beta0, &z0) {
+                // worker 0 (lower rank) wins ties
+                assert!(soft_lock_accepts(&p, &grid, sel, &beta0, &z0, &parts0, 0, &u0, ext_best).0);
+            }
+        }
+    }
+
+    /// The cached (incremental) soft-lock scan and the fresh beta
+    /// rescan must agree — accept/reject decision AND scanned count —
+    /// on real correlated data at every border coordinate.
+    #[test]
+    fn soft_lock_cached_matches_rescan() {
+        let p = toy_problem();
+        let grid = WorkerGrid::new(&p.z_spatial_dims(), p.atom_dims(), 2, PartitionKind::Line);
+        for rank in 0..2 {
+            let ext = grid.extended_cell(rank);
+            let cell = grid.cell(rank);
+            let ext_parts = box_difference(&ext, &cell);
+            let beta = BetaWindow::init_window(&p, &ext.lo, &ext.extents());
+            let z = ZWindow::zeros(p.n_atoms(), &ext.lo, &ext.extents());
+            let [res, inc] = both_modes(&p, &cell, &beta, &z);
+            for u0 in cell.iter() {
+                if !grid.in_soft_border(rank, &u0) {
+                    continue;
+                }
+                for dz0 in [1e-9, 0.05, 0.8, 1e4] {
+                    let a = soft_lock_accepts(&p, &grid, &res, &beta, &z, &ext_parts, rank, &u0, dz0);
+                    let b = soft_lock_accepts(&p, &grid, &inc, &beta, &z, &ext_parts, rank, &u0, dz0);
+                    assert_eq!(a, b, "rank {rank} u0 {u0:?} dz0 {dz0}");
+                }
+            }
         }
     }
 }

@@ -22,7 +22,14 @@
 //! `CdStats` and `WorkerStats`); [`dicod`]
 //! is the distributed runtime — a worker grid partitioned over the
 //! activation domain whose resident [`dicod::pool::WorkerPool`] is
-//! driven through `Solve -> ComputeStats -> SetDict -> Gather` phases;
+//! driven through `Solve -> ComputeStats -> SetDict -> Gather` phases,
+//! with every message crossing a pluggable **transport seam**
+//! ([`dicod::transport`]): in-process channels by default, or
+//! length-prefixed binary frames over loopback sockets
+//! (`DicodConfig::transport` / `DICODILE_TRANSPORT=channel|socket`,
+//! bitwise-identical results either way), plus a
+//! `dicodile worker --listen` mode that serves one worker over a real
+//! socket for multi-process grids;
 //! [`cdl`] runs the alternating minimization (distributed CSC +
 //! sufficient-statistics PGD dictionary updates) on top of it; and
 //! [`api`] is the **shared serving facade**: a `Clone + Send + Sync`
@@ -97,7 +104,7 @@ pub mod prelude {
     pub use crate::csc::problem::CscProblem;
     pub use crate::csc::select::Strategy;
     pub use crate::data::synthetic::SyntheticConfig;
-    pub use crate::dicod::config::{DicodConfig, PartitionKind};
+    pub use crate::dicod::config::{DicodConfig, PartitionKind, TransportKind};
     pub use crate::tensor::NdTensor;
     pub use crate::util::rng::Pcg64;
 }

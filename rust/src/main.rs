@@ -7,12 +7,15 @@
 //!               `--save-model path.json` persists the trained model
 //!   serve-bench concurrent-serving benchmark: N clients encode N distinct
 //!               observations through clones of ONE shared session
+//!   worker      serve one pool worker over a Unix-domain or TCP socket
+//!               (the multi-process end of the transport seam)
 //!   info        print artifact manifest + build information
 //!   gen         generate a workload image and save it (.ndt / .pgm)
 //!
 //! Run `dicodile <subcommand> --help` for options.
 
 use dicodile::api::{Dicodile, DicodileBuilder, TrainedModel};
+use dicodile::dicod::transport::{serve_worker_listen, TransportKind};
 use dicodile::cdl::init::InitStrategy;
 use dicodile::cdl::report;
 use dicodile::csc::select::Strategy;
@@ -32,6 +35,7 @@ fn main() {
         "csc" => cmd_csc(rest),
         "learn" => cmd_learn(rest),
         "serve-bench" => cmd_serve_bench(rest),
+        "worker" => cmd_worker(rest),
         "info" => cmd_info(rest),
         "gen" => cmd_gen(rest),
         "help" | "--help" | "-h" => {
@@ -50,13 +54,16 @@ fn main() {
 fn print_help() {
     println!(
         "dicodile — Distributed Convolutional Dictionary Learning\n\n\
-         USAGE: dicodile <csc|learn|serve-bench|info|gen> [options]\n\n\
+         USAGE: dicodile <csc|learn|serve-bench|worker|info|gen> [options]\n\n\
          csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod;\n\
                 --model loads a saved trained model)\n\
          learn  learn a dictionary (workloads: synthetic, starfield, texture;\n\
                 --save-model persists the trained model)\n\
          serve-bench  concurrent encode serving: --clients N threads share one session\n\
-                (--model serves a saved model; --max-resident caps pool residency)\n\
+                (--model serves a saved model; --max-resident caps pool residency;\n\
+                --transport channel|socket picks the worker-grid wire)\n\
+         worker hold one pool worker on --listen <path|host:port> and serve a\n\
+                remote coordinator over length-prefixed socket frames\n\
          info   show artifact manifest and build info\n\
          gen    generate a workload and save it to disk"
     );
@@ -267,11 +274,19 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
         .opt("t", Some("4000"), "1-D observation length")
         .opt("max-resident", Some("0"), "max resident pools, LRU-evicted beyond (0 = unbounded)")
         .opt("reg", Some("0.1"), "lambda fraction for the in-process model")
-        .opt("seed", Some("0"), "rng seed");
+        .opt("seed", Some("0"), "rng seed")
+        .opt("transport", Some("channel"), "worker-grid transport: channel|socket");
     let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
         eprintln!("{m}");
         std::process::exit(2)
     });
+    let transport: TransportKind = match a.get_str("transport").parse() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let clients = a.get_usize("clients").max(1);
     let requests = a.get_usize("requests").max(1);
     let workers = a.get_usize("workers").max(1);
@@ -297,6 +312,7 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
                 .max_iter(5)
                 .seed(seed)
                 .dicodile(workers)
+                .transport(transport)
                 .build();
             match trainer.fit(&w.x) {
                 Ok(m) => m,
@@ -322,7 +338,7 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
         .collect();
 
     let mk_session = || {
-        let b = Dicodile::builder().tol(1e-4).seed(seed).dicodile(workers);
+        let b = Dicodile::builder().tol(1e-4).seed(seed).dicodile(workers).transport(transport);
         match a.get_usize("max-resident") {
             0 => b,
             n => b.max_resident_pools(n),
@@ -375,7 +391,8 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
 
     println!(
         "serve-bench: clients={clients} requests={requests} workers/pool={workers} T={t} \
-         max_resident={}",
+         transport={} max_resident={}",
+        transport.name(),
         a.get_usize("max-resident")
     );
     println!(
@@ -390,6 +407,41 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
         session.n_resident_pools()
     );
     0
+}
+
+/// Serve ONE pool worker over a real socket: bind `--listen`, accept a
+/// single coordinator connection, and run the standard worker event
+/// loop over length-prefixed frames until Shutdown. An address
+/// containing ':' binds a TCP listener; anything else is a Unix-domain
+/// socket path. The coordinator's first frame must be a Bootstrap
+/// carrying the observation, dictionary and grid geometry — the worker
+/// rebuilds its `CscProblem` locally (dictionary spectra are
+/// regenerated once per host, not shipped).
+fn cmd_worker(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile worker", "serve one pool worker over a socket")
+        .opt("listen", None, "bind address: a Unix socket path, or host:port for TCP");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let addr = match a.get("listen") {
+        Some(addr) => addr.clone(),
+        None => {
+            eprintln!("dicodile worker: --listen <path|host:port> is required");
+            return 2;
+        }
+    };
+    eprintln!("dicodile worker: listening on {addr}");
+    match serve_worker_listen(&addr) {
+        Ok(()) => {
+            eprintln!("dicodile worker: coordinator shut the grid down; exiting");
+            0
+        }
+        Err(e) => {
+            eprintln!("dicodile worker: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_info(_tokens: Vec<String>) -> i32 {

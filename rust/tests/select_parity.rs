@@ -165,6 +165,109 @@ fn sequential_parity_proptest() {
 }
 
 // ---------------------------------------------------------------------------
+// Greedy tournament: O(log M) champion selection over segment champions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn greedy_tournament_deep_trajectory_parity() {
+    // A longer Greedy run with a traced cost curve: the tournament's
+    // root must replay the full scan's argmax (lowest-(k,u) tie-break
+    // included) bit for bit at every iteration, not just the fixpoint.
+    let p = problem_1d(53, 420, 3, 9);
+    let base = CdConfig {
+        strategy: Strategy::Greedy,
+        tol: 1e-9,
+        cost_every: 25,
+        ..Default::default()
+    };
+    let (inc, res) = run_both(&p, &base, None);
+    assert!(res.stats.converged, "rescan greedy did not converge");
+    assert_bit_identical(&inc, &res, "greedy deep 1d");
+    // The point of the tree: strictly less scanning than the full
+    // O(K|Omega|)-per-iteration rescan on any nontrivial run.
+    assert!(
+        inc.stats.coords_scanned < res.stats.coords_scanned,
+        "tournament saved no work: {} vs {}",
+        inc.stats.coords_scanned,
+        res.stats.coords_scanned
+    );
+    // Every Greedy iteration drains the dirty queue once: each of the
+    // M segments is either lazily skipped (clean, O(1) at the tree) or
+    // rescanned (dirty), so the two counters sum to iterations * M.
+    let visits = inc.stats.segments_skipped + inc.stats.segments_rescanned;
+    assert_eq!(
+        visits % inc.stats.iterations as u64,
+        0,
+        "skip+rescan must be an exact multiple of the iterations"
+    );
+    assert!(visits >= inc.stats.iterations as u64);
+    assert!(inc.stats.segments_skipped > 0, "clean segments must skip through the tree");
+}
+
+#[test]
+fn greedy_tournament_proptest() {
+    // Random 1-D geometries: the tournament order (None loses, larger
+    // |dz| wins, ties to the lowest (k, u)) must equal the linear
+    // first-maximizer scan on every shape, including M=1 and odd M.
+    let gen = FnGen(|rng: &mut Pcg64| {
+        (
+            60 + rng.below(160),
+            1 + rng.below(3),
+            3 + rng.below(5),
+            rng.below(1_000_000) as u64,
+        )
+    });
+    check("greedy tournament == full scan (random geometry)", 6, &gen, |&(t, k, l, seed)| {
+        let p = problem_1d(seed, t, k, l);
+        let base =
+            CdConfig { strategy: Strategy::Greedy, tol: 1e-7, ..Default::default() };
+        let (inc, res) = run_both(&p, &base, None);
+        inc.stats.iterations == res.stats.iterations
+            && inc.stats.updates == res.stats.updates
+            && inc.stats.coords_scanned <= res.stats.coords_scanned
+            && inc
+                .z
+                .data()
+                .iter()
+                .zip(res.z.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    });
+}
+
+#[test]
+fn distributed_greedy_tournament_reaches_optimum() {
+    // DICOD-style grids run Greedy over a single whole-cell segment
+    // (M=1: the tournament's leaf IS its root); both modes must still
+    // land on the lasso optimum at every worker count.
+    let p = problem_1d(54, 280, 2, 7);
+    let seq =
+        solve_cd(&p, &CdConfig { strategy: Strategy::Greedy, tol: 1e-8, ..Default::default() });
+    let cs = p.cost(&seq.z);
+    for w in worker_counts() {
+        for mode in [SelectMode::Incremental, SelectMode::Rescan] {
+            // Greedy workers on the soft-locked grid preset: border
+            // interference is rejected instead of racing, so the test
+            // cannot flake on unlucky async schedules.
+            let cfg = DicodConfig {
+                select: mode,
+                tol: 1e-7,
+                strategy: Strategy::Greedy,
+                ..DicodConfig::dicodile(w)
+            };
+            let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+            assert!(pool.solve().converged, "W={w} {mode:?}");
+            let z = pool.gather();
+            let cd = p.cost(&z);
+            assert!(
+                (cd - cs).abs() < 1e-6 * (1.0 + cs.abs()),
+                "W={w} {mode:?}: {cd} vs {cs}"
+            );
+            assert!(kkt_violation(&p, &z) < 1e-5, "W={w} {mode:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Distributed: resident pool in both modes
 // ---------------------------------------------------------------------------
 

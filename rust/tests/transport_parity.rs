@@ -1,0 +1,473 @@
+//! Channel-vs-socket transport parity for the worker grid.
+//!
+//! The transport seam promises that which wire carries the grid's
+//! messages is unobservable in the results:
+//!
+//! (a) on "quiet" problems — all activation mass kept far from every
+//!     partition boundary, so `msgs_sent == 0` and each worker's
+//!     trajectory is deterministic — channel and socket pools produce
+//!     **bitwise identical** Z and cost at every worker count,
+//! (b) a full persistent-pool CDL run at W=1 is bitwise identical
+//!     across transports, exercising the wire `SetDict` path (the
+//!     socket worker rebuilds its `CscProblem` from a `DictUpdate`
+//!     against the resident X — same constructor, same inputs, same
+//!     bits),
+//! (c) on traffic-bearing problems the async message order is not
+//!     reproducible, but both transports must converge to the same
+//!     cost and settle the Safra counters (`sent == received`),
+//! (d) every message type round-trips the wire codec exactly and
+//!     malformed frames are rejected, and
+//! (e) a worker served over a real Unix socket (`dicodile worker
+//!     --listen`'s code path) joins a hand-driven mini-coordinator and
+//!     gathers the same Z as an in-process channel pool.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! worker counts, as in `worker_pool.rs`.
+
+use std::sync::Arc;
+
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CscBackend};
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::messages::{
+    decode_frame, encode_bootstrap_frame, encode_coord_frame, encode_fwd_frame,
+    encode_worker_frame, CoordMsg, DictUpdate, DoneMsg, SetDictMsg, SolveDoneMsg, StatsMsg,
+    StatusMsg, UpdateMsg, WireError, WireFrame, WorkerMsg, WorkerStats,
+};
+use dicodile::dicod::solve_distributed;
+use dicodile::dicod::transport::TransportKind;
+use dicodile::tensor::NdTensor;
+use dicodile::util::rng::Pcg64;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn cfg_with(w: usize, t: TransportKind) -> DicodConfig {
+    DicodConfig { transport: t, tol: 1e-8, ..DicodConfig::dicodile(w) }
+}
+
+fn assert_bits_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit mismatch at flat index {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// K unit-norm random atoms of length `l` (flat, chunked by atom).
+fn atoms(k: usize, l: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut dv = rng.normal_vec(k * l);
+    for atom in dv.chunks_mut(l) {
+        let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in atom.iter_mut() {
+            *x /= n;
+        }
+    }
+    dv
+}
+
+/// A 1-D problem whose activation mass sits >= 4L away from every
+/// Line-partition boundary at W in {1,2,4}: T=600, L=8 puts the
+/// boundaries near 148/296/444 and the spikes at 40/80/200/350/520.
+/// No update's V-box can reach a neighbour, so `msgs_sent == 0` and
+/// each worker's trajectory is deterministic.
+fn quiet_problem_1d() -> CscProblem {
+    let (t, k, l) = (600usize, 2usize, 8usize);
+    let dv = atoms(k, l, 91);
+    let mut x = vec![0.0; t];
+    let spikes: [(usize, usize, f64); 5] =
+        [(0, 40, 1.5), (1, 80, -1.2), (0, 200, 2.0), (1, 350, -1.7), (0, 520, 1.3)];
+    for (ki, pos, amp) in spikes {
+        for j in 0..l {
+            x[pos + j] += amp * dv[ki * l + j];
+        }
+    }
+    CscProblem::with_lambda_frac(
+        NdTensor::from_vec(&[1, t], x),
+        NdTensor::from_vec(&[k, 1, l], dv),
+        0.25,
+    )
+}
+
+/// The 2-D analogue: a 56x56 image with 4x4 atoms; Grid partitions at
+/// W in {1,2,4} split near row/col 26, and every bump keeps all its
+/// coordinates >= 4L away from that line.
+fn quiet_problem_2d() -> CscProblem {
+    let (s, k, l) = (56usize, 2usize, 4usize);
+    let dv = atoms(k, l * l, 92);
+    let mut x = vec![0.0; s * s];
+    let bumps: [(usize, usize, usize, f64); 4] =
+        [(0, 6, 6, 1.8), (1, 8, 44, -1.4), (1, 44, 8, 1.1), (0, 46, 46, -2.0)];
+    for (ki, r0, c0, amp) in bumps {
+        for i in 0..l {
+            for j in 0..l {
+                x[(r0 + i) * s + (c0 + j)] += amp * dv[ki * l * l + i * l + j];
+            }
+        }
+    }
+    CscProblem::with_lambda_frac(
+        NdTensor::from_vec(&[1, s, s], x),
+        NdTensor::from_vec(&[k, 1, l, l], dv),
+        0.25,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// (a) quiet problems: bitwise-identical Z across transports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quiet_pools_bitwise_identical_1d() {
+    let p = quiet_problem_1d();
+    for w in worker_counts() {
+        let ch = solve_distributed(&p, &cfg_with(w, TransportKind::Channel));
+        let so = solve_distributed(&p, &cfg_with(w, TransportKind::Socket));
+        assert!(ch.converged && so.converged, "W={w}");
+        // The premise that makes bitwise parity provable: no traffic.
+        assert_eq!(ch.stats.msgs_sent, 0, "W={w}: quiet problem sent messages (channel)");
+        assert_eq!(so.stats.msgs_sent, 0, "W={w}: quiet problem sent messages (socket)");
+        assert!(ch.z.nnz() > 0, "W={w}: degenerate quiet problem");
+        assert_bits_equal(ch.z.data(), so.z.data(), &format!("W={w} 1-D Z"));
+        assert_eq!(
+            p.cost(&ch.z).to_bits(),
+            p.cost(&so.z).to_bits(),
+            "W={w}: cost bits diverge"
+        );
+    }
+}
+
+#[test]
+fn quiet_pools_bitwise_identical_2d() {
+    let p = quiet_problem_2d();
+    for w in worker_counts() {
+        let ch = solve_distributed(&p, &cfg_with(w, TransportKind::Channel));
+        let so = solve_distributed(&p, &cfg_with(w, TransportKind::Socket));
+        assert!(ch.converged && so.converged, "W={w}");
+        assert_eq!(ch.stats.msgs_sent, 0, "W={w}: quiet problem sent messages (channel)");
+        assert_eq!(so.stats.msgs_sent, 0, "W={w}: quiet problem sent messages (socket)");
+        assert!(ch.z.nnz() > 0, "W={w}: degenerate quiet problem");
+        assert_bits_equal(ch.z.data(), so.z.data(), &format!("W={w} 2-D Z"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) persistent CDL at W=1: bitwise across the wire SetDict rebuild
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cdl_trace_bitwise_identical_across_transports_at_one_worker() {
+    let mut gen = SyntheticConfig::signal_1d(500, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    let w = gen.generate(93);
+    let mk = |t: TransportKind| CdlConfig {
+        n_atoms: 2,
+        atom_dims: vec![8],
+        max_iter: 4,
+        nu: 0.0,
+        csc_tol: 1e-6,
+        lambda_frac: 0.05,
+        csc: CscBackend::Persistent(DicodConfig {
+            transport: t,
+            tol: 1e-6,
+            ..DicodConfig::dicodile(1)
+        }),
+        seed: 93,
+        ..Default::default()
+    };
+    let a = learn_dictionary(&w.x, &mk(TransportKind::Channel)).unwrap();
+    let b = learn_dictionary(&w.x, &mk(TransportKind::Socket)).unwrap();
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (ra, rb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(
+            ra.cost.to_bits(),
+            rb.cost.to_bits(),
+            "iter {}: channel {} vs socket {}",
+            ra.iter,
+            ra.cost,
+            rb.cost
+        );
+        assert_eq!(ra.cost_after_csc.to_bits(), rb.cost_after_csc.to_bits(), "iter {}", ra.iter);
+        assert_eq!(ra.z_nnz, rb.z_nnz, "iter {}", ra.iter);
+    }
+    assert_bits_equal(a.d.data(), b.d.data(), "final D");
+    assert_bits_equal(a.z.data(), b.z.data(), "final Z");
+    // The provenance records which wire actually ran.
+    assert_eq!(a.pool.as_ref().unwrap().transport, TransportKind::Channel);
+    assert_eq!(b.pool.as_ref().unwrap().transport, TransportKind::Socket);
+    // The socket run's SetDict broadcasts really crossed the wire: one
+    // warm beta re-init per outer iteration except the last.
+    assert_eq!(b.pool.as_ref().unwrap().stats.beta_warm_reinits, 3);
+}
+
+// ---------------------------------------------------------------------------
+// (c) traffic-bearing problems: same cost, settled Safra counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traffic_pools_agree_and_settle_safra_counters() {
+    let data = SyntheticConfig::signal_1d(900, 3, 9).generate(94);
+    let p = CscProblem::with_lambda_frac(data.x, data.d_true, 0.05);
+    for w in worker_counts() {
+        let ch = solve_distributed(&p, &cfg_with(w, TransportKind::Channel));
+        let so = solve_distributed(&p, &cfg_with(w, TransportKind::Socket));
+        assert!(ch.converged && so.converged, "W={w}");
+        // Safra settlement: nothing in flight when the pools stopped.
+        assert_eq!(ch.stats.msgs_sent, ch.stats.msgs_received, "W={w} channel");
+        assert_eq!(so.stats.msgs_sent, so.stats.msgs_received, "W={w} socket");
+        let (cc, cs) = (p.cost(&ch.z), p.cost(&so.z));
+        assert!(
+            (cc - cs).abs() < 1e-6 * (1.0 + cc.abs()),
+            "W={w}: channel cost {cc} vs socket cost {cs}"
+        );
+        if w > 1 {
+            assert!(so.stats.msgs_sent > 0, "W={w}: expected real neighbour traffic");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) wire codec: every message type round-trips; malformed rejected
+// ---------------------------------------------------------------------------
+
+fn roundtrip(payload: Vec<u8>) -> WireFrame {
+    decode_frame(&payload).expect("frame must decode")
+}
+
+#[test]
+fn every_message_type_round_trips() {
+    // Coordinator -> worker commands.
+    for msg in [WorkerMsg::Solve, WorkerMsg::Stop, WorkerMsg::ComputeStats, WorkerMsg::Gather, WorkerMsg::Shutdown] {
+        match roundtrip(encode_worker_frame(&msg)) {
+            WireFrame::Worker(got) => {
+                assert_eq!(std::mem::discriminant(&got), std::mem::discriminant(&msg))
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    let upd = UpdateMsg { from: 2, k: 5, u: vec![-7, 0, 12], dz: 0.625 };
+    match roundtrip(encode_worker_frame(&WorkerMsg::Update(upd.clone()))) {
+        WireFrame::Worker(WorkerMsg::Update(got)) => assert_eq!(got, upd),
+        other => panic!("wrong frame: {other:?}"),
+    }
+    match roundtrip(encode_fwd_frame(3, &upd)) {
+        WireFrame::Fwd { to, msg } => {
+            assert_eq!(to, 3);
+            assert_eq!(msg, upd);
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+
+    // SetDict flattens to a DictUpdate on the wire (either variant).
+    let p = quiet_problem_1d();
+    let du = DictUpdate::from_problem(&p);
+    let arc = Arc::new(p.clone());
+    for sd in [SetDictMsg::Shared(arc), SetDictMsg::Wire(du.clone())] {
+        match roundtrip(encode_worker_frame(&WorkerMsg::SetDict(sd))) {
+            WireFrame::Worker(WorkerMsg::SetDict(SetDictMsg::Wire(got))) => {
+                assert_bits_equal(got.d.data(), du.d.data(), "DictUpdate.d");
+                assert_eq!(got.lambda.to_bits(), du.lambda.to_bits());
+                assert_eq!(got.fingerprint, du.fingerprint);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    // Worker -> coordinator replies.
+    let status = StatusMsg { from: 1, idle: true, sent: 9, received: 9, converged: true, diverged: false };
+    match roundtrip(encode_coord_frame(&CoordMsg::Status(status.clone()))) {
+        WireFrame::Coord(CoordMsg::Status(got)) => assert_eq!(got, status),
+        other => panic!("wrong frame: {other:?}"),
+    }
+
+    let stats = WorkerStats {
+        iterations: 1,
+        updates: 2,
+        soft_locked: 3,
+        msgs_sent: 4,
+        msgs_received: 5,
+        sweeps: 6,
+        segments_skipped: 7,
+        segments_rescanned: 8,
+        dz_cache_filled: 9,
+        pauses: 10,
+        work: 11,
+        solves: 12,
+        beta_cold_inits: 13,
+        beta_warm_inits: 14,
+        beta_warm_reinits: 15,
+        gathers: 16,
+    };
+    let sd = SolveDoneMsg { from: 2, stats: stats.clone() };
+    match roundtrip(encode_coord_frame(&CoordMsg::SolveDone(sd.clone()))) {
+        WireFrame::Coord(CoordMsg::SolveDone(got)) => assert_eq!(got, sd),
+        other => panic!("wrong frame: {other:?}"),
+    }
+
+    let sm = StatsMsg {
+        from: 0,
+        phi: NdTensor::from_vec(&[1, 1, 3], vec![0.5, -0.25, f64::MIN_POSITIVE]),
+        psi: NdTensor::from_vec(&[1, 1, 2], vec![1.0, -0.0]),
+        z_l1: 2.5,
+        z_nnz: 4,
+    };
+    match roundtrip(encode_coord_frame(&CoordMsg::Stats(sm.clone()))) {
+        WireFrame::Coord(CoordMsg::Stats(got)) => {
+            assert_eq!(got.from, sm.from);
+            assert_eq!(got.phi.dims(), sm.phi.dims());
+            assert_bits_equal(got.phi.data(), sm.phi.data(), "phi");
+            assert_bits_equal(got.psi.data(), sm.psi.data(), "psi");
+            assert_eq!(got.z_l1.to_bits(), sm.z_l1.to_bits());
+            assert_eq!(got.z_nnz, sm.z_nnz);
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+
+    match roundtrip(encode_coord_frame(&CoordMsg::DictSet { from: 7 })) {
+        WireFrame::Coord(CoordMsg::DictSet { from }) => assert_eq!(from, 7),
+        other => panic!("wrong frame: {other:?}"),
+    }
+
+    let done = DoneMsg { from: 1, z_cell: vec![0.0, -1.5, 3.25], stats };
+    match roundtrip(encode_coord_frame(&CoordMsg::Done(done.clone()))) {
+        WireFrame::Coord(CoordMsg::Done(got)) => assert_eq!(got, done),
+        other => panic!("wrong frame: {other:?}"),
+    }
+
+    // The served-worker handshake.
+    let cfg = cfg_with(2, TransportKind::Socket);
+    let boot = dicodile::dicod::transport::bootstrap_for(1, &p, &cfg, Some(&NdTensor::zeros(&p.z_dims())));
+    match roundtrip(encode_bootstrap_frame(&boot)) {
+        WireFrame::Bootstrap(got) => {
+            assert_eq!(got.rank, 1);
+            assert_eq!(got.n_workers, 2);
+            assert_bits_equal(got.x.data(), p.x.data(), "bootstrap X");
+            assert_bits_equal(got.d.data(), p.d.data(), "bootstrap D");
+            assert_eq!(got.lambda.to_bits(), p.lambda.to_bits());
+            assert!(got.z0.is_some());
+        }
+        other => panic!("wrong frame: {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_are_rejected_for_replies_too() {
+    // Unknown tag and empty payload.
+    assert!(matches!(decode_frame(&[99]), Err(WireError::BadTag(99))));
+    assert!(matches!(decode_frame(&[]), Err(WireError::Truncated)));
+
+    let status = StatusMsg { from: 0, idle: false, sent: 1, received: 1, converged: false, diverged: false };
+    let full = encode_coord_frame(&CoordMsg::Status(status));
+    // Truncation anywhere inside the payload is rejected.
+    for cut in 1..full.len() {
+        assert!(
+            decode_frame(&full[..cut]).is_err(),
+            "truncated status at {cut} bytes decoded"
+        );
+    }
+    // Non-canonical bool (idle byte is right after the from field).
+    let mut bent = full.clone();
+    bent[9] = 2;
+    assert!(matches!(decode_frame(&bent), Err(WireError::BadValue(_))));
+    // Trailing garbage.
+    let mut padded = full;
+    padded.extend_from_slice(&[0, 0]);
+    assert!(matches!(decode_frame(&padded), Err(WireError::TrailingBytes(2))));
+
+    // A tensor whose declared dims disagree with its data length.
+    let sm = StatsMsg {
+        from: 0,
+        phi: NdTensor::from_vec(&[1, 1, 2], vec![1.0, 2.0]),
+        psi: NdTensor::from_vec(&[1, 1, 1], vec![3.0]),
+        z_l1: 0.0,
+        z_nnz: 0,
+    };
+    let mut frame = encode_coord_frame(&CoordMsg::Stats(sm));
+    // phi dims start after tag(1) + from(8): ndim, then 3 dims; bump
+    // the last phi dim from 2 to 3 so dims no longer match the data.
+    let dim_pos = 1 + 8 + 8 + 2 * 8;
+    frame[dim_pos] = 3;
+    assert!(decode_frame(&frame).is_err(), "dims/data mismatch decoded");
+}
+
+// ---------------------------------------------------------------------------
+// (e) a worker served over a real Unix socket joins a hand-driven grid
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn served_worker_over_unix_socket_matches_channel_pool() {
+    use dicodile::dicod::transport::{bootstrap_for, read_frame, serve_worker_unix, write_frame};
+    use std::os::unix::net::UnixStream;
+    use std::time::Duration;
+
+    let data = SyntheticConfig::signal_1d(300, 2, 6).generate(95);
+    let p = CscProblem::with_lambda_frac(data.x, data.d_true, 0.1);
+    let cfg = cfg_with(1, TransportKind::Socket);
+
+    let (mut coord, worker_side) = UnixStream::pair().unwrap();
+    coord.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let server = std::thread::spawn(move || serve_worker_unix(worker_side));
+
+    // Handshake, then drive the pool phase protocol by hand.
+    let boot = bootstrap_for(0, &p, &cfg, None);
+    write_frame(&mut coord, &encode_bootstrap_frame(&boot)).unwrap();
+    write_frame(&mut coord, &encode_worker_frame(&WorkerMsg::Solve)).unwrap();
+
+    fn next(coord: &mut UnixStream) -> CoordMsg {
+        let payload = read_frame(coord).unwrap().expect("worker hung up early");
+        match decode_frame(&payload).unwrap() {
+            WireFrame::Coord(m) => m,
+            other => panic!("unexpected upstream frame: {other:?}"),
+        }
+    }
+
+    // Wait for the Safra condition (trivial at W=1: idle, 0 == 0).
+    loop {
+        if let CoordMsg::Status(s) = next(&mut coord) {
+            assert_eq!(s.from, 0);
+            if s.idle && s.sent == s.received {
+                assert!(s.converged, "served worker stopped without converging");
+                break;
+            }
+        }
+    }
+    write_frame(&mut coord, &encode_worker_frame(&WorkerMsg::Stop)).unwrap();
+    loop {
+        if let CoordMsg::SolveDone(d) = next(&mut coord) {
+            assert_eq!(d.from, 0);
+            assert!(d.stats.updates > 0);
+            break;
+        }
+    }
+
+    write_frame(&mut coord, &encode_worker_frame(&WorkerMsg::Gather)).unwrap();
+    let z_cell = loop {
+        if let CoordMsg::Done(d) = next(&mut coord) {
+            break d.z_cell;
+        }
+    };
+    write_frame(&mut coord, &encode_worker_frame(&WorkerMsg::Shutdown)).unwrap();
+    server.join().unwrap().expect("served worker failed");
+
+    // At W=1 the cell is the whole domain: the gathered values must be
+    // bitwise what an in-process channel pool computes.
+    let reference = solve_distributed(&p, &cfg_with(1, TransportKind::Channel));
+    assert!(reference.converged);
+    assert_bits_equal(&z_cell, reference.z.data(), "served-worker Z");
+}

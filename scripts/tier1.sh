@@ -22,11 +22,22 @@ cargo build --release --benches
 # clients (clones) correctly: distinct observations in parallel,
 # same-observation serialization, LRU eviction + respawn.
 for w in 1 2 4; do
-  DICODILE_TEST_WORKERS=$w cargo test -q --test worker_pool
+  # The pool + transport suites run once per wire: DICODILE_TRANSPORT
+  # flips every WorkerPool in the run between in-process channels and
+  # length-prefixed loopback socket frames, so the whole phase protocol
+  # (and the CDL driver on top of it) is exercised across the seam.
+  for t in channel socket; do
+    DICODILE_TEST_WORKERS=$w DICODILE_TRANSPORT=$t cargo test -q --test worker_pool
+    # Channel-vs-socket parity proper: bitwise-identical Z on quiet
+    # grids, wire round-trips for every message type, a served worker
+    # over a real Unix socket.
+    DICODILE_TEST_WORKERS=$w DICODILE_TRANSPORT=$t cargo test -q --test transport_parity
+  done
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_session
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_concurrency
   # Incremental-vs-rescan selection parity: sequential runs must be
-  # bit-identical; distributed runs must hold the clean/dirty counter
+  # bit-identical (Greedy now via the tournament tree over segment
+  # champions); distributed runs must hold the clean/dirty counter
   # invariants and land on the sequential optimum (incl. SetDict
   # re-init and remote-update dirtying).
   DICODILE_TEST_WORKERS=$w cargo test -q --test select_parity
