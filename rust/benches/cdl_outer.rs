@@ -250,6 +250,15 @@ fn main() {
         ("encode_cold_s", Json::Num(cold_s)),
         ("encode_speedup", Json::Num(cold_s / warm_s.max(1e-12))),
         (
+            // CorrEngine spectrum-cache footprint of the persistent
+            // run's pool (halved under the default rfft layout).
+            "pool_spectra_bytes",
+            match &persistent.pool {
+                Some(p) => Json::Num(p.spectra_bytes as f64),
+                None => Json::Null,
+            },
+        ),
+        (
             // Channel-vs-socket wire cost for the same persistent run,
             // plus the isolated SetDict frame codec price.
             "transport",

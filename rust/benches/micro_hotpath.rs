@@ -185,7 +185,7 @@ fn main() {
     //    cached-plan FFT, fresh engine per rep so atom-spectra
     //    computation is charged to the FFT side (as in a real CDL
     //    outer iteration, where the dictionary changes every update).
-    {
+    let (calib_entries, calib_headline) = {
         let bc6 = BenchConfig::from_env();
         let mut entries = Vec::new();
         let mut headline = (0usize, 0.0f64, 0.0f64); // (size, direct, fft)
@@ -228,22 +228,97 @@ fn main() {
             ]));
             headline = (size, t_direct.median, t_fft.median);
         }
-        let (size, direct_s, fft_s) = headline;
-        let record = Json::obj(vec![
-            ("bench", Json::str("beta_bootstrap")),
-            ("note", Json::str(
-                "before = direct corr(X, D); after = CorrEngine cached-plan FFT \
-                 (fresh engine per rep: atom spectra charged to the FFT side)",
-            )),
-            ("headline_size", Json::Num(size as f64)),
-            ("headline_speedup", Json::Num(direct_s / fft_s.max(1e-12))),
-            ("entries", Json::Arr(entries)),
-        ]);
-        let path = "BENCH_beta_bootstrap.json";
-        match std::fs::write(path, record.dumps()) {
-            Ok(()) => println!("wrote {path}"),
-            Err(e) => eprintln!("cannot write {path}: {e}"),
+        (entries, headline)
+    };
+
+    // 7. rfft half-spectrum vs packed-complex A/B on the same texture
+    //    workload: warm-spectra correlate (bootstrap) and reconstruct
+    //    at 128/256/512 squared, K=16, L=32x32. Wall-clock plus the
+    //    process-global transform counters (complex-equivalent points:
+    //    a real transform of an n-point domain counts n/2), so the
+    //    "forward transforms halved" claim is measured, not inferred.
+    let rfft_entries = {
+        let bc7 = BenchConfig::from_env();
+        let mut entries = Vec::new();
+        for &size in &[128usize, 256, 512] {
+            let (k, l) = (16usize, 32usize);
+            let x = dicodile::data::texture::TextureConfig::with_size(size, size).generate(1);
+            let d = dicodile::cdl::init::init_dictionary(
+                &x,
+                k,
+                &[l, l],
+                dicodile::cdl::init::InitStrategy::RandomPatches,
+                1,
+            );
+            let v = size - l + 1;
+            let mut rng = Pcg64::seeded(7);
+            let z = NdTensor::from_vec(&[k, v, v], rng.normal_vec(k * v * v));
+            let mut per_mode = Vec::new();
+            for rfft_on in [false, true] {
+                let eng = CorrEngine::new(d.clone()).with_rfft(rfft_on);
+                // Warm the spectra cache: steady-state cost is what the
+                // resident pools and FISTA maps pay per iteration.
+                let _ = eng.correlate_dict_fft(&x);
+                let _ = eng.reconstruct_fft(&z);
+                let t_corr = time(&bc7, || eng.correlate_dict_fft(&x));
+                let t_rec = time(&bc7, || eng.reconstruct_fft(&z));
+                dicodile::fft::reset_transform_counts();
+                let _ = eng.correlate_dict_fft(&x);
+                let _ = eng.reconstruct_fft(&z);
+                let counts = dicodile::fft::transform_counts();
+                let mode = if rfft_on { "rfft" } else { "packed" };
+                table.row(vec![
+                    "rfft A/B correlate".into(),
+                    format!("{mode} {size}x{size} K={k}"),
+                    fmt_secs(t_corr.median),
+                    format!("{} fwd pts", counts.forward_points),
+                ]);
+                table.row(vec![
+                    "rfft A/B reconstruct".into(),
+                    format!("{mode} {size}x{size} K={k}"),
+                    fmt_secs(t_rec.median),
+                    format!("{} inv pts", counts.inverse_points),
+                ]);
+                per_mode.push(Json::obj(vec![
+                    ("mode", Json::str(mode)),
+                    ("correlate_median_s", Json::Num(t_corr.median)),
+                    ("reconstruct_median_s", Json::Num(t_rec.median)),
+                    ("forward_transforms", Json::Num(counts.forward as f64)),
+                    ("inverse_transforms", Json::Num(counts.inverse as f64)),
+                    ("forward_points", Json::Num(counts.forward_points as f64)),
+                    ("inverse_points", Json::Num(counts.inverse_points as f64)),
+                    ("spectra_bytes", Json::Num(eng.spectra_bytes() as f64)),
+                    ("reps", Json::Num(t_corr.reps as f64)),
+                ]));
+            }
+            entries.push(Json::obj(vec![
+                ("size", Json::Num(size as f64)),
+                ("n_atoms", Json::Num(k as f64)),
+                ("atom_side", Json::Num(l as f64)),
+                ("modes", Json::Arr(per_mode)),
+            ]));
         }
+        entries
+    };
+
+    let (size, direct_s, fft_s) = calib_headline;
+    let record = Json::obj(vec![
+        ("bench", Json::str("beta_bootstrap")),
+        ("note", Json::str(
+            "before = direct corr(X, D); after = CorrEngine cached-plan FFT \
+             (fresh engine per rep: atom spectra charged to the FFT side). \
+             rfft_ab: warm-spectra correlate/reconstruct, packed complex vs \
+             half-spectrum rfft; transform counts in complex-equivalent points",
+        )),
+        ("headline_size", Json::Num(size as f64)),
+        ("headline_speedup", Json::Num(direct_s / fft_s.max(1e-12))),
+        ("entries", Json::Arr(calib_entries)),
+        ("rfft_ab", Json::Arr(rfft_entries)),
+    ]);
+    let path = "BENCH_beta_bootstrap.json";
+    match std::fs::write(path, record.dumps()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
     }
 
     println!("# micro hot-path timings\n{}", table.render());

@@ -16,10 +16,11 @@
 use std::time::Instant;
 
 use crate::admm::csc_admm::{
-    circular_cost, dict_spectra, solve_admm_csc, AdmmCscConfig,
+    circular_cost, dict_spectra, embed_padded_real, real_spectrum, solve_admm_csc,
+    spectrum_to_real, AdmmCscConfig,
 };
 use crate::fft::complex::C64;
-use crate::fft::fft::{fftn, ifftn};
+use crate::fft::plan::rfft_enabled;
 use crate::tensor::ops::project_l2_ball;
 use crate::tensor::NdTensor;
 
@@ -89,9 +90,12 @@ pub fn learn_admm(
     let mut z = NdTensor::zeros(&zdims);
     let mut trace = Vec::new();
 
-    // x spectrum (fixed)
-    let mut xh: Vec<C64> = x.slice0(0).iter().map(|&v| C64::from_re(v)).collect();
-    fftn(&mut xh, &tdims);
+    // x spectrum (fixed); spectra follow the process-wide rfft layout.
+    // Sherman-Morrison with real sigma / ||z^||^2 preserves conjugate
+    // symmetry, so the dictionary step is exact on half bins too.
+    let half = rfft_enabled();
+    let xh = real_spectrum(x.slice0(0), &tdims, half);
+    let bins = xh.len();
 
     // Dictionary ADMM state persists across alternations.
     let mut g = d.clone(); // feasible copy
@@ -112,14 +116,9 @@ pub fn learn_admm(
         // ---- dictionary step (ADMM with indicator split) --------------------
         // Z spectra (fixed within this step).
         let zh: Vec<Vec<C64>> = (0..k)
-            .map(|ki| {
-                let mut buf: Vec<C64> =
-                    z.slice0(ki).iter().map(|&v| C64::from_re(v)).collect();
-                fftn(&mut buf, &tdims);
-                buf
-            })
+            .map(|ki| real_spectrum(z.slice0(ki), &tdims, half))
             .collect();
-        let znorm2: Vec<f64> = (0..n)
+        let znorm2: Vec<f64> = (0..bins)
             .map(|f| zh.iter().map(|h| h[f].norm_sq()).sum())
             .collect();
         let zhx: Vec<Vec<C64>> = (0..k)
@@ -131,16 +130,16 @@ pub fn learn_admm(
             // D-step: per-frequency Sherman-Morrison over the K-vector.
             let mut rh: Vec<Vec<C64>> = Vec::with_capacity(k);
             for ki in 0..k {
-                // (g - u) zero-padded to T then FFT
-                let mut pad = vec![C64::ZERO; n];
-                embed(&sub_atoms(&g, &u_d, ki), &ldims, &mut pad, &tdims);
-                fftn(&mut pad, &tdims);
-                for (b, zx) in pad.iter_mut().zip(&zhx[ki]) {
+                // (g - u) zero-padded to T then transformed
+                let mut pad = vec![0.0f64; n];
+                embed_padded_real(&sub_atoms(&g, &u_d, ki), &ldims, &mut pad, &tdims);
+                let mut buf = real_spectrum(&pad, &tdims, half);
+                for (b, zx) in buf.iter_mut().zip(&zhx[ki]) {
                     *b = *zx + b.scale(sigma);
                 }
-                rh.push(pad);
+                rh.push(buf);
             }
-            for f in 0..n {
+            for f in 0..bins {
                 let mut ahr = C64::ZERO;
                 for ki in 0..k {
                     ahr += zh[ki][f] * rh[ki][f];
@@ -163,9 +162,8 @@ pub fn learn_admm(
                     scope.spawn(move || {
                         for (j, slot) in slots.iter_mut().enumerate() {
                             let ki = ci * chunk + j;
-                            let mut buf = rh[ki].clone();
-                            ifftn(&mut buf, tdims);
-                            *slot = Some(crop(&buf, tdims, ldims));
+                            let plane = spectrum_to_real(rh[ki].clone(), tdims, half);
+                            *slot = Some(crop(&plane, tdims, ldims));
                         }
                     });
                 }
@@ -245,35 +243,14 @@ fn sub_atoms(g: &NdTensor, u: &NdTensor, ki: usize) -> Vec<f64> {
         .collect()
 }
 
-fn embed(src: &[f64], sdims: &[usize], dst: &mut [C64], tdims: &[usize]) {
-    match sdims.len() {
-        1 => {
-            for (i, &v) in src.iter().enumerate() {
-                dst[i] = C64::from_re(v);
-            }
-        }
-        2 => {
-            let (sw, dw) = (sdims[1], tdims[1]);
-            for i in 0..sdims[0] {
-                for j in 0..sw {
-                    dst[i * dw + j] = C64::from_re(src[i * sw + j]);
-                }
-            }
-        }
-        _ => unimplemented!("ADMM baseline supports d <= 2"),
-    }
-}
-
-fn crop(src: &[C64], sdims: &[usize], ldims: &[usize]) -> Vec<f64> {
+fn crop(src: &[f64], sdims: &[usize], ldims: &[usize]) -> Vec<f64> {
     match ldims.len() {
-        1 => (0..ldims[0]).map(|i| src[i].re).collect(),
+        1 => src[..ldims[0]].to_vec(),
         2 => {
             let sw = sdims[1];
             let mut out = Vec::with_capacity(ldims[0] * ldims[1]);
             for i in 0..ldims[0] {
-                for j in 0..ldims[1] {
-                    out.push(src[i * sw + j].re);
-                }
+                out.extend_from_slice(&src[i * sw..i * sw + ldims[1]]);
             }
             out
         }

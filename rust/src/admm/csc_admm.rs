@@ -6,9 +6,18 @@
 //! atoms are zero-padded to it. The per-frequency linear systems
 //! `(d^ d^H + rho I) z^ = r^` are rank-one and solved by
 //! Sherman–Morrison in O(K) each.
+//!
+//! All inputs are real, so by default spectra live in the half-spectrum
+//! rfft layout (`w/2 + 1` on the last axis): the Sherman–Morrison
+//! solve is bin-local and maps conjugate-symmetric right-hand sides to
+//! conjugate-symmetric solutions (rho and `||d^||^2` are real), so
+//! running it on the half bins only is exact and halves both the solve
+//! work and the transforms. `DICODILE_RFFT=off` falls back to full
+//! complex spectra ([`DictSpectra::half`] records the layout).
 
 use crate::fft::complex::C64;
 use crate::fft::fft::{fftn, ifftn};
+use crate::fft::plan::{irfftn_cached, rfft_enabled, rfftn_cached};
 use crate::tensor::ops::soft_threshold;
 use crate::tensor::NdTensor;
 
@@ -27,11 +36,40 @@ impl Default for AdmmCscConfig {
     }
 }
 
-/// Spectra of a dictionary zero-padded to the signal domain:
-/// `[K]` planes of `prod(T)` frequencies.
+/// Spectra of a dictionary zero-padded to the signal domain: `[K]`
+/// planes of `prod(half_spectrum_dims(T))` frequencies each in the
+/// default rfft layout, `prod(T)` under `DICODILE_RFFT=off`.
 pub struct DictSpectra {
     pub hats: Vec<Vec<C64>>,
     pub tdims: Vec<usize>,
+    /// Spectrum layout the planes (and every consumer's transforms)
+    /// use: half-spectrum rfft or full packed complex.
+    pub half: bool,
+}
+
+/// Forward-transform a full-domain real field in the given layout.
+pub(crate) fn real_spectrum(field: &[f64], tdims: &[usize], half: bool) -> Vec<C64> {
+    if half {
+        rfftn_cached(field, tdims)
+    } else {
+        let mut buf: Vec<C64> = field.iter().map(|&v| C64::from_re(v)).collect();
+        fftn(&mut buf, tdims);
+        buf
+    }
+}
+
+/// Inverse of [`real_spectrum`]: spectrum (consumed) back to the real
+/// domain.
+pub(crate) fn spectrum_to_real(mut spec: Vec<C64>, tdims: &[usize], half: bool) -> Vec<f64> {
+    let n: usize = tdims.iter().product();
+    if half {
+        let mut out = vec![0.0f64; n];
+        irfftn_cached(&mut spec, tdims, &mut out);
+        out
+    } else {
+        ifftn(&mut spec, tdims);
+        spec.into_iter().map(|c| c.re).collect()
+    }
 }
 
 /// Precompute atom spectra on domain `tdims`. Dictionary is `[K, 1, L..]`
@@ -40,38 +78,36 @@ pub struct DictSpectra {
 pub fn dict_spectra(d: &NdTensor, tdims: &[usize]) -> DictSpectra {
     let (k, p, ldims) = crate::conv::split_dict(d.dims());
     assert_eq!(p, 1, "ADMM baseline supports single-channel data");
+    let half = rfft_enabled();
     let n: usize = tdims.iter().product();
     let mut hats = Vec::with_capacity(k);
+    let mut pad = vec![0.0f64; n];
     for ki in 0..k {
-        let mut buf = vec![C64::ZERO; n];
-        embed_padded(d.slice0(ki), ldims, &mut buf, tdims);
-        fftn(&mut buf, tdims);
-        hats.push(buf);
+        pad.fill(0.0);
+        embed_padded_real(d.slice0(ki), ldims, &mut pad, tdims);
+        hats.push(real_spectrum(&pad, tdims, half));
     }
-    DictSpectra { hats, tdims: tdims.to_vec() }
+    DictSpectra { hats, tdims: tdims.to_vec(), half }
 }
 
-fn embed_padded(src: &[f64], sdims: &[usize], dst: &mut [C64], tdims: &[usize]) {
+/// Zero-pad a real field into the low corner of the full domain.
+pub(crate) fn embed_padded_real(src: &[f64], sdims: &[usize], dst: &mut [f64], tdims: &[usize]) {
     match sdims.len() {
         1 => {
-            for (i, &v) in src.iter().enumerate() {
-                dst[i] = C64::from_re(v);
-            }
+            dst[..src.len()].copy_from_slice(src);
         }
         2 => {
             let (sw, dw) = (sdims[1], tdims[1]);
             for i in 0..sdims[0] {
-                for j in 0..sw {
-                    dst[i * dw + j] = C64::from_re(src[i * sw + j]);
-                }
+                dst[i * dw..i * dw + sw].copy_from_slice(&src[i * sw..(i + 1) * sw]);
             }
         }
         _ => {
             let dstr = crate::tensor::shape::strides_of(tdims);
-            for off in 0..src.len() {
+            for (off, &v) in src.iter().enumerate() {
                 let idx = crate::tensor::shape::index_of(off, sdims);
                 let doff: usize = idx.iter().zip(&dstr).map(|(x, s)| x * s).sum();
-                dst[doff] = C64::from_re(src[off]);
+                dst[doff] = v;
             }
         }
     }
@@ -88,22 +124,20 @@ pub struct AdmmCscResult {
 /// Circular-model objective `1/2 ||X - sum_k z_k (*) d_k||^2 + lambda ||Z||_1`.
 pub fn circular_cost(x: &NdTensor, spectra: &DictSpectra, z: &NdTensor, lambda: f64) -> f64 {
     let tdims = &spectra.tdims;
-    let n: usize = tdims.iter().product();
-    let k = spectra.hats.len();
-    let mut acc = vec![C64::ZERO; n];
-    for ki in 0..k {
-        let mut zh: Vec<C64> = z.slice0(ki).iter().map(|&v| C64::from_re(v)).collect();
-        fftn(&mut zh, tdims);
-        for (a, (zf, df)) in acc.iter_mut().zip(zh.iter().zip(&spectra.hats[ki])) {
+    let bins = spectra.hats.first().map_or(0, |h| h.len());
+    let mut acc = vec![C64::ZERO; bins];
+    for (ki, dh) in spectra.hats.iter().enumerate() {
+        let zh = real_spectrum(z.slice0(ki), tdims, spectra.half);
+        for (a, (zf, df)) in acc.iter_mut().zip(zh.iter().zip(dh)) {
             *a += *zf * *df;
         }
     }
-    ifftn(&mut acc, tdims);
+    let rec = spectrum_to_real(acc, tdims, spectra.half);
     let fit: f64 = x
         .slice0(0)
         .iter()
-        .zip(&acc)
-        .map(|(xv, rv)| (xv - rv.re).powi(2))
+        .zip(&rec)
+        .map(|(xv, rv)| (xv - rv).powi(2))
         .sum();
     0.5 * fit + lambda * z.norm1()
 }
@@ -117,14 +151,13 @@ pub fn solve_admm_csc(
     z0: Option<&NdTensor>,
 ) -> AdmmCscResult {
     let tdims = spectra.tdims.clone();
-    let n: usize = tdims.iter().product();
     let k = spectra.hats.len();
+    let bins = spectra.hats.first().map_or(0, |h| h.len());
     let rho = cfg.rho;
 
     // x spectrum
-    let mut xh: Vec<C64> = x.slice0(0).iter().map(|&v| C64::from_re(v)).collect();
-    fftn(&mut xh, &tdims);
-    // precompute D^H X and ||d^||^2 per frequency
+    let xh = real_spectrum(x.slice0(0), &tdims, spectra.half);
+    // precompute D^H X and ||d^||^2 per frequency (bin-local either way)
     let dhx: Vec<Vec<C64>> = (0..k)
         .map(|ki| {
             spectra.hats[ki]
@@ -134,7 +167,7 @@ pub fn solve_admm_csc(
                 .collect()
         })
         .collect();
-    let dnorm2: Vec<f64> = (0..n)
+    let dnorm2: Vec<f64> = (0..bins)
         .map(|f| spectra.hats.iter().map(|h| h[f].norm_sq()).sum())
         .collect();
 
@@ -155,13 +188,13 @@ pub fn solve_admm_csc(
         // r^_k = D_k^H X + rho (y - u)^
         let mut rh: Vec<Vec<C64>> = Vec::with_capacity(k);
         for ki in 0..k {
-            let mut buf: Vec<C64> = y
+            let yu: Vec<f64> = y
                 .slice0(ki)
                 .iter()
                 .zip(u.slice0(ki))
-                .map(|(yv, uv)| C64::from_re(yv - uv))
+                .map(|(yv, uv)| yv - uv)
                 .collect();
-            fftn(&mut buf, &tdims);
+            let mut buf = real_spectrum(&yu, &tdims, spectra.half);
             for (b, dx) in buf.iter_mut().zip(&dhx[ki]) {
                 *b = *dx + b.scale(rho);
             }
@@ -170,7 +203,9 @@ pub fn solve_admm_csc(
         // The per-frequency system is (conj(d^) d^T + rho I) z^ = r^
         // (normal equations of |x^ - d^T z^|^2), i.e. rank-one with
         // a = conj(d^): z^ = r^/rho - conj(d^) (d^T r^) / (rho (rho + ||d^||^2)).
-        for f in 0..n {
+        // Real rho and real ||d^||^2 keep the map conjugate-symmetric,
+        // so the half layout solves each redundant mirror bin for free.
+        for f in 0..bins {
             let mut dtr = C64::ZERO;
             for ki in 0..k {
                 dtr += spectra.hats[ki][f] * rh[ki][f];
@@ -180,11 +215,9 @@ pub fn solve_admm_csc(
                 rh[ki][f] = rh[ki][f].scale(1.0 / rho) - spectra.hats[ki][f].conj() * s;
             }
         }
-        for ki in 0..k {
-            ifftn(&mut rh[ki], &tdims);
-            for (zv, c) in z.slice0_mut(ki).iter_mut().zip(&rh[ki]) {
-                *zv = c.re;
-            }
+        for (ki, buf) in rh.into_iter().enumerate() {
+            let plane = spectrum_to_real(buf, &tdims, spectra.half);
+            z.slice0_mut(ki).copy_from_slice(&plane);
         }
         // ---- Y-step: soft threshold ------------------------------------
         let mut primal = 0.0f64;
@@ -208,6 +241,7 @@ pub fn solve_admm_csc(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::plan::half_spectrum_dims;
     use crate::util::rng::Pcg64;
 
     fn toy() -> (NdTensor, NdTensor) {
@@ -231,17 +265,15 @@ mod tests {
         }
         let spectra = dict_spectra(&d, &[32]);
         // build x = sum_k z_k (*) d_k by the same spectral path
-        let n = 32;
-        let mut acc = vec![C64::ZERO; n];
+        let bins = spectra.hats[0].len();
+        let mut acc = vec![C64::ZERO; bins];
         for ki in 0..2 {
-            let mut zh: Vec<C64> = z.slice0(ki).iter().map(|&v| C64::from_re(v)).collect();
-            fftn(&mut zh, &[32]);
+            let zh = real_spectrum(z.slice0(ki), &[32], spectra.half);
             for (a, (zf, df)) in acc.iter_mut().zip(zh.iter().zip(&spectra.hats[ki])) {
                 *a += *zf * *df;
             }
         }
-        ifftn(&mut acc, &[32]);
-        let x = NdTensor::from_vec(&[1, 32], acc.iter().map(|c| c.re).collect());
+        let x = NdTensor::from_vec(&[1, 32], spectrum_to_real(acc, &[32], spectra.half));
         (x, d)
     }
 
@@ -266,6 +298,34 @@ mod tests {
     }
 
     #[test]
+    fn spectra_layout_follows_env_default() {
+        let d = NdTensor::from_vec(&[1, 1, 4], vec![1.0, -1.0, 0.5, 0.25]);
+        let spectra = dict_spectra(&d, &[30]);
+        let want = if spectra.half {
+            half_spectrum_dims(&[30]).iter().product::<usize>()
+        } else {
+            30
+        };
+        assert_eq!(spectra.hats[0].len(), want);
+        // Either layout must reconstruct the same circular cost.
+        let z = NdTensor::from_vec(&[1, 30], (0..30).map(|i| (i as f64 * 0.7).sin()).collect());
+        let x = NdTensor::from_vec(&[1, 30], vec![0.0; 30]);
+        let c = circular_cost(&x, &spectra, &z, 0.0);
+        // oracle: full complex path regardless of layout
+        let full = DictSpectra {
+            hats: {
+                let mut pad = vec![0.0f64; 30];
+                embed_padded_real(d.slice0(0), &[4], &mut pad, &[30]);
+                vec![real_spectrum(&pad, &[30], false)]
+            },
+            tdims: vec![30],
+            half: false,
+        };
+        let c_full = circular_cost(&x, &full, &z, 0.0);
+        assert!((c - c_full).abs() < 1e-9 * (1.0 + c_full.abs()), "{c} vs {c_full}");
+    }
+
+    #[test]
     fn admm_near_lasso_kkt_on_circular_model() {
         // At the optimum of the circular lasso: |grad| <= lambda on the
         // zero set, = -sign(z) lambda on the support.
@@ -281,38 +341,35 @@ mod tests {
         );
         // grad = -D^H (x - D z) via spectra
         let tdims = [32usize];
-        let n = 32;
-        let mut acc = vec![C64::ZERO; n];
+        let bins = spectra.hats[0].len();
+        let mut acc = vec![C64::ZERO; bins];
         for ki in 0..2 {
-            let mut zh: Vec<C64> =
-                r.z.slice0(ki).iter().map(|&v| C64::from_re(v)).collect();
-            fftn(&mut zh, &tdims);
+            let zh = real_spectrum(r.z.slice0(ki), &tdims, spectra.half);
             for (a, (zf, df)) in acc.iter_mut().zip(zh.iter().zip(&spectra.hats[ki])) {
                 *a += *zf * *df;
             }
         }
         // residual spectrum
-        let mut xh: Vec<C64> = x.slice0(0).iter().map(|&v| C64::from_re(v)).collect();
-        fftn(&mut xh, &tdims);
+        let xh = real_spectrum(x.slice0(0), &tdims, spectra.half);
         for (a, xf) in acc.iter_mut().zip(&xh) {
             *a = *xf - *a;
         }
         for ki in 0..2 {
-            let mut g: Vec<C64> = acc
+            let gh: Vec<C64> = acc
                 .iter()
                 .zip(&spectra.hats[ki])
                 .map(|(rf, df)| df.conj() * *rf)
                 .collect();
-            ifftn(&mut g, &tdims);
+            let g = spectrum_to_real(gh, &tdims, spectra.half);
             for (i, gv) in g.iter().enumerate() {
                 let zv = r.z.slice0(ki)[i];
                 if zv == 0.0 {
-                    assert!(gv.re.abs() <= lambda + 1e-4, "KKT zero-set: {}", gv.re);
+                    assert!(gv.abs() <= lambda + 1e-4, "KKT zero-set: {}", gv);
                 } else {
                     assert!(
-                        (gv.re - lambda * zv.signum()).abs() < 1e-3,
+                        (gv - lambda * zv.signum()).abs() < 1e-3,
                         "KKT support: {} vs {}",
-                        gv.re,
+                        gv,
                         lambda * zv.signum()
                     );
                 }

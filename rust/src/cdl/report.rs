@@ -41,6 +41,7 @@ pub fn to_json(result: &CdlResult) -> Json {
                     ("segments_skipped", Json::Num(p.stats.segments_skipped as f64)),
                     ("segments_rescanned", Json::Num(p.stats.segments_rescanned as f64)),
                     ("dz_cache_filled", Json::Num(p.stats.dz_cache_filled as f64)),
+                    ("spectra_bytes", Json::Num(p.spectra_bytes as f64)),
                 ]),
                 None => Json::Null,
             },
@@ -166,6 +167,7 @@ mod tests {
             transport: crate::dicod::transport::TransportKind::Channel,
             stats: stats.clone(),
             per_worker: vec![stats.clone(), WorkerStats::default()],
+            spectra_bytes: 1024,
             evicted: false,
         });
         let parsed = Json::parse(&to_json(&r).dumps()).unwrap();
@@ -174,6 +176,7 @@ mod tests {
         assert_eq!(pool.get("segments_rescanned").unwrap().as_f64(), Some(40.0));
         assert_eq!(pool.get("n_workers").unwrap().as_f64(), Some(2.0));
         assert_eq!(pool.get("transport").unwrap().as_str(), Some("channel"));
+        assert_eq!(pool.get("spectra_bytes").unwrap().as_f64(), Some(1024.0));
     }
 
     #[test]

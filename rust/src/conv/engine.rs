@@ -16,32 +16,48 @@
 //!   `IFFT(X^ . conj(D^))[u] = sum_l X[(u+l) mod N] D[l]`, which is
 //!   wrap-free on the valid domain whenever `N >= T` — so the padded
 //!   size is `good_size(T)` per axis, not `good_size(T + L - 1)`.
-//! - Real fields are transformed two-at-a-time (packed as `a + i b`,
-//!   split by conjugate symmetry), halving forward-transform counts for
-//!   channels, atoms and activation planes.
-//! - Per-atom accumulation happens in the frequency domain:
-//!   `beta^_k = sum_p X^_p . conj(D^_kp)` needs `P` forward + `K`
-//!   inverse transforms total, instead of `K x P` spatial correlations.
+//! - Every field is real, so by default spectra live in the
+//!   half-spectrum layout (`w/2 + 1` on the last axis, conjugate
+//!   symmetry makes the remaining bins redundant): the cache stores
+//!   half-size `D^` planes (≈2x memory cut per padded domain — see
+//!   [`CorrEngine::spectra_bytes`]) and each transform costs about
+//!   half a complex one. The per-atom frequency accumulation
+//!   `beta^_k = sum_p X^_p . conj(D^_kp)` runs directly on half
+//!   spectra: the product of conjugate-symmetric spectra is itself
+//!   conjugate-symmetric, so the half-bin accumulation + real inverse
+//!   is exact. `P` real forwards + `K` real inverses total, instead of
+//!   `K x P` spatial correlations.
+//! - With `DICODILE_RFFT=off` (run-time A/B escape hatch) the engine
+//!   falls back to the legacy packed-complex layout: full spectra,
+//!   real fields transformed two-at-a-time (packed as `a + i b`, split
+//!   by conjugate symmetry). [`CorrEngine::with_rfft`] forces either
+//!   layout per engine, which is how benches A/B both in one process.
 //!
 //! ## Backend dispatch
 //!
 //! `correlate_dict` / `reconstruct` pick direct vs FFT by comparing
-//! modeled flop counts (see [`fft_beats_direct`]); the ratio between
-//! the two models is tunable with `DICODILE_FFT_CROSSOVER` (default
-//! 1.0) and calibrated empirically by `cargo bench --bench
-//! micro_hotpath`, which times both paths on the `scaling_grid`
-//! texture workload and records the result in
-//! `BENCH_beta_bootstrap.json`. Sparse activations keep the direct
-//! path: its cost model is `nnz`-aware, so a post-solve `Z` (< 2%
-//! dense) reconstructs via the zero-skipping loops.
+//! modeled flop counts (see [`fft_beats_direct`]); the FFT model
+//! charges real transforms at half the complex cost
+//! ([`real_transform_flops`]), matching the layout the engine will
+//! actually run. The ratio between the two models is tunable with
+//! `DICODILE_FFT_CROSSOVER` (default 1.0) and calibrated empirically
+//! by `cargo bench --bench micro_hotpath`, which times both paths on
+//! the `scaling_grid` texture workload and records the result in
+//! `BENCH_beta_bootstrap.json` — calibrate it with the same
+//! `DICODILE_RFFT` setting the run will use. Sparse activations keep
+//! the direct path: its cost model is `nnz`-aware, so a post-solve `Z`
+//! (< 2% dense) reconstructs via the zero-skipping loops.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::conv::fftconv::{embed_real, extract_real};
+use crate::conv::fftconv::{embed_real, embed_real_field, extract_real, extract_real_field};
 use crate::conv::{split_channels, split_dict, valid_dims};
 use crate::fft::complex::C64;
-use crate::fft::plan::{fftn_cached, good_size, split_packed_spectrum};
+use crate::fft::plan::{
+    fftn_cached, good_size, half_spectrum_dims, irfftn_cached, rfft_enabled, rfftn_cached,
+    split_packed_spectrum,
+};
 use crate::tensor::NdTensor;
 
 /// Crossover ratio between the direct and FFT flop models
@@ -66,9 +82,29 @@ pub fn fft_beats_direct(direct_flops: f64, fft_flops: f64) -> bool {
 }
 
 /// Modeled cost of one cached-plan complex transform of `pn` points
-/// (`~8 n log2 n` flops; halved when the real-pair packing applies).
+/// (`~8 n log2 n` flops).
 pub(crate) fn transform_flops(pn: f64) -> f64 {
     8.0 * pn * pn.log2().max(1.0)
+}
+
+/// Modeled cost of one real (half-spectrum) transform of a `pn`-point
+/// domain: the even/odd split runs one `pn/2` complex transform plus
+/// `O(pn)` unscrambling, about half the full complex cost.
+pub(crate) fn real_transform_flops(pn: f64) -> f64 {
+    0.5 * transform_flops(pn)
+}
+
+/// Modeled cost of one `conv_full_fft` on a `pn`-point padded domain,
+/// matching the layout `fftconv` will actually run: two real forwards
+/// + one real inverse + a half-length pointwise product under rfft,
+/// two complex transforms + a full pointwise product when
+/// `DICODILE_RFFT=off`.
+pub(crate) fn conv_full_fft_flops(pn: f64) -> f64 {
+    if rfft_enabled() {
+        3.0 * real_transform_flops(pn) + 3.0 * pn
+    } else {
+        2.0 * transform_flops(pn) + 6.0 * pn
+    }
 }
 
 /// Calls over which the one-time dictionary-spectra build is assumed to
@@ -79,26 +115,40 @@ pub(crate) fn transform_flops(pn: f64) -> f64 {
 /// path forever and forfeit the amortization the cache exists for.
 const SPECTRA_AMORTIZE_CALLS: f64 = 8.0;
 
+/// Dictionary-spectra cache: per padded-domain size, a `OnceLock`
+/// build slot holding `K * P` spectrum planes.
+type SpectraMap = Arc<Mutex<HashMap<Vec<usize>, Arc<OnceLock<Arc<Vec<Vec<C64>>>>>>>>;
+
 /// Frequency-domain convolution/correlation engine bound to one
-/// dictionary. Cheap to clone: clones share the spectra cache.
+/// dictionary. Cheap to clone: clones share the spectra caches.
 #[derive(Clone)]
 pub struct CorrEngine {
     /// Dictionary `[K, P, L..]`.
     d: NdTensor,
-    /// Dictionary spectra per padded-domain size `pdims` (row-major
-    /// `K * P` planes of `prod(pdims)` frequencies each). Each entry is
-    /// a `OnceLock` build slot so concurrent first users — e.g. every
-    /// pool worker warm-bootstrapping right after a `SetDict`
-    /// broadcast — block on one build instead of each paying the full
-    /// `K*P` transform and discarding all but one result.
-    cache: Arc<Mutex<HashMap<Vec<usize>, Arc<OnceLock<Arc<Vec<Vec<C64>>>>>>>>,
+    /// Spectrum layout: half-spectrum rfft (default) or the legacy
+    /// packed-complex full spectra (`DICODILE_RFFT=off`, or forced per
+    /// engine with [`CorrEngine::with_rfft`] for in-process A/Bs).
+    rfft: bool,
+    /// Half-spectrum dictionary planes per padded-domain size `pdims`
+    /// (row-major `K * P` planes of `prod(half_spectrum_dims(pdims))`
+    /// frequencies each). Each entry is a `OnceLock` build slot so
+    /// concurrent first users — e.g. every pool worker
+    /// warm-bootstrapping right after a `SetDict` broadcast — block on
+    /// one build instead of each paying the full `K*P` transform and
+    /// discarding all but one result.
+    half: SpectraMap,
+    /// Full-spectrum planes (`prod(pdims)` frequencies each) for the
+    /// packed-complex fallback layout. Kept separate from `half` so an
+    /// engine forced into either mode never reads the other layout.
+    cache: SpectraMap,
 }
 
 impl std::fmt::Debug for CorrEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("CorrEngine")
             .field("d_dims", &self.d.dims())
-            .field("cached_domains", &self.cache.lock().unwrap().len())
+            .field("rfft", &self.rfft)
+            .field("cached_domains", &self.active_cache().lock().unwrap().len())
             .finish()
     }
 }
@@ -108,7 +158,51 @@ impl CorrEngine {
     /// computed lazily, per padded-domain size, on first use.
     pub fn new(d: NdTensor) -> CorrEngine {
         assert!(d.ndim() >= 3, "dictionary must be [K, P, L..], got {:?}", d.dims());
-        CorrEngine { d, cache: Arc::new(Mutex::new(HashMap::new())) }
+        CorrEngine {
+            d,
+            rfft: rfft_enabled(),
+            half: Arc::new(Mutex::new(HashMap::new())),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Force the spectrum layout for this engine (and clones made from
+    /// it afterwards), overriding the `DICODILE_RFFT` default. Benches
+    /// and parity tests use this to A/B both layouts in one process.
+    pub fn with_rfft(mut self, on: bool) -> CorrEngine {
+        self.rfft = on;
+        self
+    }
+
+    /// Is this engine on the half-spectrum layout?
+    pub fn rfft(&self) -> bool {
+        self.rfft
+    }
+
+    fn active_cache(&self) -> &SpectraMap {
+        if self.rfft {
+            &self.half
+        } else {
+            &self.cache
+        }
+    }
+
+    /// Bytes held by cached dictionary spectra across all padded
+    /// domains (both layouts, counting only completed builds). The
+    /// half-spectrum layout shows up here as ≈half the packed-complex
+    /// footprint for the same domains.
+    pub fn spectra_bytes(&self) -> usize {
+        let count = |map: &SpectraMap| -> usize {
+            map.lock()
+                .unwrap()
+                .values()
+                .filter_map(|slot| slot.get())
+                .map(|planes| {
+                    planes.iter().map(|p| p.len()).sum::<usize>() * std::mem::size_of::<C64>()
+                })
+                .sum()
+        };
+        count(&self.half) + count(&self.cache)
     }
 
     /// The engine's dictionary.
@@ -126,20 +220,21 @@ impl CorrEngine {
     }
 
     fn has_spectra(&self, pdims: &[usize]) -> bool {
-        self.cache
+        self.active_cache()
             .lock()
             .unwrap()
             .get(pdims)
             .map_or(false, |slot| slot.get().is_some())
     }
 
-    /// Dictionary spectra for a padded domain (cached; built at most
-    /// once per domain — concurrent first users share one build).
+    /// Dictionary spectra for a padded domain, in the engine's active
+    /// layout (cached; built at most once per domain — concurrent
+    /// first users share one build).
     fn spectra(&self, pdims: &[usize]) -> Arc<Vec<Vec<C64>>> {
         // Grab (or create) the build slot under the map lock, then
         // build outside it so other domains stay unblocked.
         let slot = self
-            .cache
+            .active_cache()
             .lock()
             .unwrap()
             .entry(pdims.to_vec())
@@ -151,7 +246,11 @@ impl CorrEngine {
             let fields: Vec<&[f64]> = (0..k * p)
                 .map(|i| &self.d.slice0(i / p)[(i % p) * atom_sp..(i % p + 1) * atom_sp])
                 .collect();
-            Arc::new(transform_real_fields(&fields, ldims, pdims))
+            if self.rfft {
+                Arc::new(transform_real_fields_half(&fields, ldims, pdims))
+            } else {
+                Arc::new(transform_real_fields(&fields, ldims, pdims))
+            }
         })
         .clone()
     }
@@ -171,15 +270,27 @@ impl CorrEngine {
         let pn: f64 = pdims.iter().product::<usize>() as f64;
         let (kf, pf) = (k as f64, p as f64);
         let direct = 2.0 * kf * pf * out_sp as f64 * atom_sp as f64;
+        let build_unit = if self.rfft {
+            real_transform_flops(pn) // one real transform per plane
+        } else {
+            0.5 * transform_flops(pn) // full complex, pair-packed
+        };
         let atoms = if self.has_spectra(&pdims) {
             0.0
         } else {
-            0.5 * kf * pf * transform_flops(pn) / SPECTRA_AMORTIZE_CALLS
+            kf * pf * build_unit / SPECTRA_AMORTIZE_CALLS
         };
-        let fft = 0.5 * pf * transform_flops(pn)   // X channels, pair-packed
-            + atoms                                 // spectra build, amortized
-            + kf * transform_flops(pn)              // per-atom inverse transforms
-            + 6.0 * kf * pf * pn; //                   pointwise multiply-accumulate
+        let fft = if self.rfft {
+            pf * real_transform_flops(pn)      // X channel forwards
+                + atoms                         // spectra build, amortized
+                + kf * real_transform_flops(pn) // per-atom real inverses
+                + 3.0 * kf * pf * pn //            accumulate over half bins
+        } else {
+            0.5 * pf * transform_flops(pn)     // X channels, pair-packed
+                + atoms
+                + kf * transform_flops(pn)      // per-atom inverse transforms
+                + 6.0 * kf * pf * pn //            accumulate over all bins
+        };
         fft_beats_direct(direct, fft)
     }
 
@@ -195,15 +306,27 @@ impl CorrEngine {
         // The direct kernel skips zero activations, so its cost scales
         // with nnz — post-solve sparse codes stay on the direct path.
         let direct = 2.0 * z.nnz() as f64 * pf * atom_sp as f64;
+        let build_unit = if self.rfft {
+            real_transform_flops(pn)
+        } else {
+            0.5 * transform_flops(pn)
+        };
         let atoms = if self.has_spectra(&pdims) {
             0.0
         } else {
-            0.5 * kf * pf * transform_flops(pn) / SPECTRA_AMORTIZE_CALLS
+            kf * pf * build_unit / SPECTRA_AMORTIZE_CALLS
         };
-        let fft = 0.5 * kf * transform_flops(pn)   // Z planes, pair-packed
-            + atoms
-            + pf * transform_flops(pn)             // per-channel inverse transforms
-            + 6.0 * kf * pf * pn;
+        let fft = if self.rfft {
+            kf * real_transform_flops(pn)      // Z plane forwards
+                + atoms
+                + pf * real_transform_flops(pn) // per-channel real inverses
+                + 3.0 * kf * pf * pn
+        } else {
+            0.5 * kf * transform_flops(pn)     // Z planes, pair-packed
+                + atoms
+                + pf * transform_flops(pn)      // per-channel inverse transforms
+                + 6.0 * kf * pf * pn
+        };
         fft_beats_direct(direct, fft)
     }
 
@@ -231,11 +354,35 @@ impl CorrEngine {
         let pn: usize = pdims.iter().product();
         let spectra = self.spectra(&pdims);
         let xfields: Vec<&[f64]> = (0..p).map(|pi| x.slice0(pi)).collect();
-        let xhats = transform_real_fields(&xfields, tdims, &pdims);
 
         let mut odims = vec![k];
         odims.extend_from_slice(&vdims);
         let mut out = NdTensor::zeros(&odims);
+
+        if self.rfft {
+            // Half-spectrum accumulation: X^_p . conj(D^_kp) is
+            // conjugate-symmetric (both factors come from real
+            // fields), so summing on half bins + one real inverse per
+            // atom is exact.
+            let hn: usize = half_spectrum_dims(&pdims).iter().product();
+            let xhats = transform_real_fields_half(&xfields, tdims, &pdims);
+            let mut acc = vec![C64::ZERO; hn];
+            let mut padded = vec![0.0f64; pn];
+            for ki in 0..k {
+                acc.fill(C64::ZERO);
+                for (pi, xh) in xhats.iter().enumerate() {
+                    let dh = &spectra[ki * p + pi];
+                    for ((a, xv), dv) in acc.iter_mut().zip(xh).zip(dh) {
+                        *a += *xv * dv.conj();
+                    }
+                }
+                irfftn_cached(&mut acc, &pdims, &mut padded);
+                extract_real_field(&padded, &pdims, out.slice0_mut(ki), &vdims);
+            }
+            return out;
+        }
+
+        let xhats = transform_real_fields(&xfields, tdims, &pdims);
         let mut acc = vec![C64::ZERO; pn];
         for ki in 0..k {
             acc.iter_mut().for_each(|a| *a = C64::ZERO);
@@ -272,11 +419,31 @@ impl CorrEngine {
         let pn: usize = pdims.iter().product();
         let spectra = self.spectra(&pdims);
         let zfields: Vec<&[f64]> = (0..k).map(|ki| z.slice0(ki)).collect();
-        let zhats = transform_real_fields(&zfields, &zsp, &pdims);
 
         let mut xdims = vec![p];
         xdims.extend_from_slice(&tdims);
         let mut out = NdTensor::zeros(&xdims);
+
+        if self.rfft {
+            let hn: usize = half_spectrum_dims(&pdims).iter().product();
+            let zhats = transform_real_fields_half(&zfields, &zsp, &pdims);
+            let mut acc = vec![C64::ZERO; hn];
+            let mut padded = vec![0.0f64; pn];
+            for pi in 0..p {
+                acc.fill(C64::ZERO);
+                for (ki, zh) in zhats.iter().enumerate() {
+                    let dh = &spectra[ki * p + pi];
+                    for ((a, zv), dv) in acc.iter_mut().zip(zh).zip(dh) {
+                        *a += *zv * *dv;
+                    }
+                }
+                irfftn_cached(&mut acc, &pdims, &mut padded);
+                extract_real_field(&padded, &pdims, out.slice0_mut(pi), &tdims);
+            }
+            return out;
+        }
+
+        let zhats = transform_real_fields(&zfields, &zsp, &pdims);
         let mut acc = vec![C64::ZERO; pn];
         for pi in 0..p {
             acc.iter_mut().for_each(|a| *a = C64::ZERO);
@@ -293,10 +460,30 @@ impl CorrEngine {
     }
 }
 
+/// Forward-transform a batch of equally-shaped real fields to
+/// half-spectra (the rfft layout). Each field of dims `sdims` is
+/// zero-embedded at the low corner of the padded domain `pdims`.
+fn transform_real_fields_half(
+    fields: &[&[f64]],
+    sdims: &[usize],
+    pdims: &[usize],
+) -> Vec<Vec<C64>> {
+    let pn: usize = pdims.iter().product();
+    let mut buf = vec![0.0f64; pn];
+    fields
+        .iter()
+        .map(|field| {
+            buf.fill(0.0);
+            embed_real_field(field, sdims, &mut buf, pdims);
+            rfftn_cached(&buf, pdims)
+        })
+        .collect()
+}
+
 /// Forward-transform a batch of equally-shaped real fields, packing
-/// pairs into single complex transforms (the real-input fast path).
-/// Each field of dims `sdims` is zero-embedded at the low corner of the
-/// padded domain `pdims`.
+/// pairs into single complex transforms (the `DICODILE_RFFT=off`
+/// packed-complex layout). Each field of dims `sdims` is zero-embedded
+/// at the low corner of the padded domain `pdims`.
 fn transform_real_fields(fields: &[&[f64]], sdims: &[usize], pdims: &[usize]) -> Vec<Vec<C64>> {
     let pn: usize = pdims.iter().product();
     let mut out = Vec::with_capacity(fields.len());
@@ -374,16 +561,57 @@ mod tests {
         let eng = CorrEngine::new(d);
         let x = rand_tensor(&[1, 40], 8);
         let _ = eng.correlate_dict_fft(&x);
-        let cached = eng.cache.lock().unwrap().len();
+        let cached = eng.active_cache().lock().unwrap().len();
         assert_eq!(cached, 1);
         let eng2 = eng.clone();
         let _ = eng2.correlate_dict_fft(&x);
-        assert_eq!(eng.cache.lock().unwrap().len(), 1, "clone must share the cache");
+        assert_eq!(eng.active_cache().lock().unwrap().len(), 1, "clone must share the cache");
         // Reconstruction on the matching activation domain reuses the
         // same padded-domain spectra (T = T' + L - 1 = signal dims).
         let z = rand_tensor(&[2, 37], 9);
         let _ = eng.reconstruct_fft(&z);
-        assert_eq!(eng.cache.lock().unwrap().len(), 1);
+        assert_eq!(eng.active_cache().lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn packed_layout_matches_direct_and_rfft() {
+        // Force both layouts in one process and check them against the
+        // direct kernels and each other.
+        let x = rand_tensor(&[2, 19, 21], 20);
+        let d = rand_tensor(&[3, 2, 4, 4], 21);
+        let packed = CorrEngine::new(d.clone()).with_rfft(false);
+        let rfft = CorrEngine::new(d.clone()).with_rfft(true);
+        let want = conv::correlate_dict(&x, &d);
+        let a = packed.correlate_dict_fft(&x);
+        let b = rfft.correlate_dict_fft(&x);
+        let tol = 1e-8 * (1.0 + want.norm_inf());
+        assert!(a.allclose(&want, tol), "packed vs direct: {}", a.max_abs_diff(&want));
+        assert!(b.allclose(&want, tol), "rfft vs direct: {}", b.max_abs_diff(&want));
+        assert!(a.allclose(&b, tol));
+        let z = rand_tensor(&[3, 9, 11], 22);
+        let ra = packed.reconstruct_fft(&z);
+        let rb = rfft.reconstruct_fft(&z);
+        let rwant = conv::reconstruct(&z, &d);
+        let rtol = 1e-8 * (1.0 + rwant.norm_inf());
+        assert!(ra.allclose(&rwant, rtol));
+        assert!(rb.allclose(&rwant, rtol));
+    }
+
+    #[test]
+    fn spectra_bytes_halved_under_rfft() {
+        let d = rand_tensor(&[4, 1, 8], 23);
+        let x = rand_tensor(&[1, 60], 24); // padded domain: 60 (5-smooth)
+        let packed = CorrEngine::new(d.clone()).with_rfft(false);
+        let rfft = CorrEngine::new(d).with_rfft(true);
+        assert_eq!(packed.spectra_bytes(), 0);
+        let _ = packed.correlate_dict_fft(&x);
+        let _ = rfft.correlate_dict_fft(&x);
+        // 60 full bins vs 31 half bins per plane.
+        let full = packed.spectra_bytes();
+        let half = rfft.spectra_bytes();
+        assert_eq!(full, 4 * 60 * std::mem::size_of::<C64>());
+        assert_eq!(half, 4 * 31 * std::mem::size_of::<C64>());
+        assert!(half * 2 <= full + 4 * 2 * std::mem::size_of::<C64>());
     }
 
     #[test]

@@ -9,12 +9,17 @@
 //! Transforms run through the process-wide `FftPlanCache` and pad each
 //! axis to the smallest 5-smooth (`2^a 3^b 5^c`) length instead of the
 //! next power of two, bounding padding waste (a 1025-long axis pads to
-//! 1080, not 2048). Both real operands are packed into a single complex
-//! forward transform (split by conjugate symmetry), so a full
-//! convolution costs two cached-plan transforms instead of three.
+//! 1080, not 2048). Both operands are real, so by default each goes
+//! through the half-spectrum rfft path (`w/2 + 1` layout): two real
+//! forwards + one real inverse cost about 1.5 complex transforms
+//! total. With `DICODILE_RFFT=off` the legacy packed-complex path runs
+//! instead (both operands in one complex forward, split by conjugate
+//! symmetry — two complex transforms total).
 
 use crate::fft::complex::C64;
-use crate::fft::plan::{fftn_cached, good_size, split_packed_spectrum};
+use crate::fft::plan::{
+    fftn_cached, good_size, irfftn_cached, rfft_enabled, rfftn_cached, split_packed_spectrum,
+};
 
 /// Full convolution via zero-padded n-d FFT. Same contract as
 /// `direct::conv_full`.
@@ -31,6 +36,22 @@ pub fn conv_full_fft(
     // the output when the period covers it.
     let pdims: Vec<usize> = odims.iter().map(|&n| good_size(n)).collect();
     let pn: usize = pdims.iter().product();
+    let mut out = vec![0.0; odims.iter().product()];
+
+    if rfft_enabled() {
+        let mut zbuf = vec![0.0; pn];
+        embed_real_field(z, zdims, &mut zbuf, &pdims);
+        let zh = rfftn_cached(&zbuf, &pdims);
+        zbuf.fill(0.0);
+        embed_real_field(d, ddims, &mut zbuf, &pdims);
+        let mut prod = rfftn_cached(&zbuf, &pdims);
+        for (p, a) in prod.iter_mut().zip(&zh) {
+            *p = *p * *a;
+        }
+        irfftn_cached(&mut prod, &pdims, &mut zbuf);
+        extract_real_field(&zbuf, &pdims, &mut out, &odims);
+        return (out, odims);
+    }
 
     let mut buf = vec![C64::ZERO; pn];
     embed_real(z, zdims, &mut buf, &pdims, false);
@@ -39,8 +60,6 @@ pub fn conv_full_fft(
     let (zh, dh) = split_packed_spectrum(&buf, &pdims);
     let mut prod: Vec<C64> = zh.iter().zip(&dh).map(|(a, b)| *a * *b).collect();
     fftn_cached(&mut prod, &pdims, true);
-
-    let mut out = vec![0.0; odims.iter().product()];
     extract_real(&prod, &pdims, &mut out, &odims);
     (out, odims)
 }
@@ -132,6 +151,55 @@ pub(crate) fn embed_real(
                 } else {
                     dst[doff].re = v;
                 }
+            }
+        }
+    }
+}
+
+/// Copy a real field into the low corner of a zeroed real buffer — the
+/// rfft-path sibling of [`embed_real`] (the transform input stays real
+/// all the way to `rfftn_cached`).
+pub(crate) fn embed_real_field(src: &[f64], sdims: &[usize], dst: &mut [f64], ddims: &[usize]) {
+    match sdims.len() {
+        1 => {
+            dst[..src.len()].copy_from_slice(src);
+        }
+        2 => {
+            let (sw, dw) = (sdims[1], ddims[1]);
+            for i in 0..sdims[0] {
+                dst[i * dw..i * dw + sw].copy_from_slice(&src[i * sw..(i + 1) * sw]);
+            }
+        }
+        _ => {
+            let dstr = crate::tensor::shape::strides_of(ddims);
+            for (off, &v) in src.iter().enumerate() {
+                let idx = crate::tensor::shape::index_of(off, sdims);
+                let doff: usize = idx.iter().zip(&dstr).map(|(x, s)| x * s).sum();
+                dst[doff] = v;
+            }
+        }
+    }
+}
+
+/// Copy the low corner of a real (post-irfft) buffer into a real
+/// output field — the rfft-path sibling of [`extract_real`].
+pub(crate) fn extract_real_field(src: &[f64], sdims: &[usize], dst: &mut [f64], ddims: &[usize]) {
+    match ddims.len() {
+        1 => {
+            dst.copy_from_slice(&src[..dst.len()]);
+        }
+        2 => {
+            let (sw, dw) = (sdims[1], ddims[1]);
+            for i in 0..ddims[0] {
+                dst[i * dw..(i + 1) * dw].copy_from_slice(&src[i * sw..i * sw + dw]);
+            }
+        }
+        _ => {
+            let sstr = crate::tensor::shape::strides_of(sdims);
+            for (off, o) in dst.iter_mut().enumerate() {
+                let idx = crate::tensor::shape::index_of(off, ddims);
+                let soff: usize = idx.iter().zip(&sstr).map(|(x, s)| x * s).sum();
+                *o = src[soff];
             }
         }
     }

@@ -26,12 +26,18 @@
 //!   image scale.
 //!
 //! Dispatch compares modeled flop counts for the two backends
-//! (`engine::fft_beats_direct`); the crossover ratio defaults to 1.0
-//! and can be tuned with `DICODILE_FFT_CROSSOVER`. The calibration
-//! bench (`cargo bench --bench micro_hotpath`) times both backends on
-//! the `scaling_grid` texture workload, prints the observed speedups
-//! and records them in `BENCH_beta_bootstrap.json`, which is how the
-//! default ratio was validated. The PJRT artifact path
+//! (`engine::fft_beats_direct`); the FFT side of the model follows the
+//! active spectrum layout — real half-spectrum transforms at half the
+//! complex cost by default, the packed-complex cost under
+//! `DICODILE_RFFT=off` — so the crossover is honest in either mode.
+//! The crossover ratio defaults to 1.0 and can be tuned with
+//! `DICODILE_FFT_CROSSOVER`; calibrate it under the same
+//! `DICODILE_RFFT` setting the run will use. The calibration bench
+//! (`cargo bench --bench micro_hotpath`) times both backends on the
+//! `scaling_grid` texture workload, prints the observed speedups,
+//! A/Bs the rfft vs packed layouts, and records them in
+//! `BENCH_beta_bootstrap.json`, which is how the default ratio was
+//! validated. The PJRT artifact path
 //! (`runtime::hybrid::HybridOps`) sits on the same seam: artifacts are
 //! preferred when lowered for the exact shapes, and the native
 //! fallback is `CorrEngine`'s dispatched implementation.
@@ -67,9 +73,10 @@ pub fn cross_corr_range_auto(
         .zip(bdims)
         .map(|(x, y)| crate::fft::good_size(x + y - 1))
         .product::<usize>() as f64;
-    // The packed-pair conv_full_fft costs two cached-plan transforms
-    // plus a pointwise multiply.
-    let fft_flops = 2.0 * engine::transform_flops(pn) + 6.0 * pn;
+    // conv_full_fft's cost in its active layout: three real
+    // (half-spectrum) transforms by default, two packed-complex ones
+    // under DICODILE_RFFT=off.
+    let fft_flops = engine::conv_full_fft_flops(pn);
     if engine::fft_beats_direct(direct_flops, fft_flops) {
         fftconv::cross_corr_range_fft(a, adims, b, bdims, lo, hi)
     } else {
@@ -115,7 +122,7 @@ pub fn reconstruct(z: &NdTensor, d: &NdTensor) -> NdTensor {
         .iter()
         .map(|&t| crate::fft::good_size(t))
         .product::<usize>() as f64;
-    let fft_flops = 2.0 * engine::transform_flops(pn) + 6.0 * pn;
+    let fft_flops = engine::conv_full_fft_flops(pn);
     for k in 0..k_z {
         let zk = z.slice0(k);
         // Sparse fast-path: direct conv skips zero activations, so for very

@@ -19,6 +19,18 @@
 //! whole system: the d=1 / d=2 cases are hand-specialized, allocation
 //! free, and O(2^d K |Theta|) per call.
 //!
+//! The specialized kernels are laid out for autovectorization: the
+//! V(u0) ∩ window overlap is resolved to contiguous slice runs up
+//! front (beta/dz_opt/Z rows forward, the DtD row reversed, since
+//! `cc = u0 - v + L - 1` decreases as `v` grows), and the self-entry
+//! skip at `(k0, u0)` is hoisted out of the inner loops into a
+//! two-segment split, so the common remote-update row is a single
+//! branch-free zip over slices. The restructuring is arithmetic-
+//! preserving — per-entry operations, scan order, and strict-`>`
+//! first-wins selection are unchanged, keeping trajectories
+//! bit-identical to the scalar loops (gated by `select_parity` /
+//! the reference-kernel tests in `tests/fft_backend.rs`).
+//!
 //! [`BetaWindow::apply_update_fused`] is the incremental-selection
 //! variant of the same kernels: one pass over V(u0) updates beta *and*
 //! the per-coordinate soft-thresholded optimum `dz_opt` the
@@ -368,17 +380,35 @@ impl BetaWindow {
                 if lo >= hi {
                     return 0;
                 }
-                let skip = u0[0]; // coordinate to skip for k == k0
+                // The overlap maps to contiguous runs in both buffers:
+                // beta indices [b0, b0 + len) and the dtd row walked in
+                // reverse from c_lo (cc = u0 - v + l - 1 decreases as v
+                // grows). The self-entry skip is hoisted out of the loop
+                // so the common remote-update case is one branch-free
+                // zip the compiler can vectorize.
+                let len = (hi - lo) as usize;
+                let b0 = (lo - o) as usize;
+                let c_lo = (u0[0] - (hi - 1) + l - 1) as usize;
+                let in_win = u0[0] >= lo && u0[0] < hi;
                 for k in 0..k_tot {
-                    let dtd_base = (k0 * k_tot + k) * cc_sp;
-                    let beta_base = k * sp;
-                    for v in lo..hi {
-                        if k == k0 && v == skip {
-                            continue;
+                    let drow = &dtd[(k0 * k_tot + k) * cc_sp + c_lo..][..len];
+                    let brow = &mut self.data[k * sp + b0..][..len];
+                    if k == k0 && in_win {
+                        let s = (u0[0] - lo) as usize;
+                        for (b, &c) in brow[..s].iter_mut().zip(drow[len - s..].iter().rev()) {
+                            *b -= c * dz;
                         }
-                        let cc = (u0[0] - v + l - 1) as usize;
-                        self.data[beta_base + (v - o) as usize] -= dtd[dtd_base + cc] * dz;
-                        touched += 1;
+                        for (b, &c) in
+                            brow[s + 1..].iter_mut().zip(drow[..len - s - 1].iter().rev())
+                        {
+                            *b -= c * dz;
+                        }
+                        touched += len - 1;
+                    } else {
+                        for (b, &c) in brow.iter_mut().zip(drow.iter().rev()) {
+                            *b -= c * dz;
+                        }
+                        touched += len;
                     }
                 }
             }
@@ -395,20 +425,38 @@ impl BetaWindow {
                 }
                 let cc_w = cc_dims[1];
                 let w = self.local_dims[1];
+                // Row-contiguous inner runs, as in the 1-D arm; at most
+                // one row per atom contains the self-entry split.
+                let len1 = (hi1 - lo1) as usize;
+                let b1 = (lo1 - o1) as usize;
+                let c1_lo = (u0[1] - (hi1 - 1) + l1 - 1) as usize;
+                let skip_col = u0[1] >= lo1 && u0[1] < hi1;
                 for k in 0..k_tot {
-                    let dtd_base = (k0 * k_tot + k) * cc_sp;
-                    let beta_base = k * sp;
+                    let dtd_base = (k0 * k_tot + k) * cc_sp + c1_lo;
+                    let beta_base = k * sp + b1;
                     for v0 in lo0..hi0 {
-                        let cc_row = dtd_base + ((u0[0] - v0 + l0 - 1) as usize) * cc_w;
-                        let beta_row = beta_base + ((v0 - o0) as usize) * w;
-                        let skip_here = k == k0 && v0 == u0[0];
-                        for v1 in lo1..hi1 {
-                            if skip_here && v1 == u0[1] {
-                                continue;
+                        let drow =
+                            &dtd[dtd_base + ((u0[0] - v0 + l0 - 1) as usize) * cc_w..][..len1];
+                        let brow =
+                            &mut self.data[beta_base + ((v0 - o0) as usize) * w..][..len1];
+                        if k == k0 && v0 == u0[0] && skip_col {
+                            let s = (u0[1] - lo1) as usize;
+                            for (b, &c) in
+                                brow[..s].iter_mut().zip(drow[len1 - s..].iter().rev())
+                            {
+                                *b -= c * dz;
                             }
-                            let cc = cc_row + (u0[1] - v1 + l1 - 1) as usize;
-                            self.data[beta_row + (v1 - o1) as usize] -= dtd[cc] * dz;
-                            touched += 1;
+                            for (b, &c) in
+                                brow[s + 1..].iter_mut().zip(drow[..len1 - s - 1].iter().rev())
+                            {
+                                *b -= c * dz;
+                            }
+                            touched += len1 - 1;
+                        } else {
+                            for (b, &c) in brow.iter_mut().zip(drow.iter().rev()) {
+                                *b -= c * dz;
+                            }
+                            touched += len1;
                         }
                     }
                 }
@@ -504,26 +552,56 @@ impl BetaWindow {
                 if lo >= hi {
                     return 0;
                 }
-                let skip = u0[0];
-                let zo = z.origin[0];
+                // Same contiguous-run structure as `apply_update`, with
+                // the z window and dz_opt rows sliced alongside; the
+                // self-entry (beta invariant, Z moves by dz) is handled
+                // between the two split segments.
+                let len = (hi - lo) as usize;
+                let b0 = (lo - o) as usize;
+                let c_lo = (u0[0] - (hi - 1) + l - 1) as usize;
+                let z0 = (lo - z.origin[0]) as usize;
+                let in_win = u0[0] >= lo && u0[0] < hi;
                 for k in 0..k_tot {
-                    let dtd_base = (k0 * k_tot + k) * cc_sp;
-                    let beta_base = k * sp;
                     let inv = problem.inv_norms_sq[k];
-                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
-                    for v in lo..hi {
-                        let bi = beta_base + (v - o) as usize;
-                        let zv = zrow[(v - zo) as usize];
-                        if k == k0 && v == skip {
-                            // beta invariant under its own update; Z
-                            // moves by dz — refresh the cached optimum.
-                            dz_opt[bi] = dz_value_inv(self.data[bi], zv + dz, lambda, inv);
-                            continue;
+                    let drow = &dtd[(k0 * k_tot + k) * cc_sp + c_lo..][..len];
+                    let zrow = &z.data[k * zsp + z0..][..len];
+                    let brow = &mut self.data[k * sp + b0..][..len];
+                    let orow = &mut dz_opt[k * sp + b0..][..len];
+                    if k == k0 && in_win {
+                        let s = (u0[0] - lo) as usize;
+                        for (((b, op), &c), &zv) in brow[..s]
+                            .iter_mut()
+                            .zip(orow[..s].iter_mut())
+                            .zip(drow[len - s..].iter().rev())
+                            .zip(&zrow[..s])
+                        {
+                            *b -= c * dz;
+                            *op = dz_value_inv(*b, zv, lambda, inv);
                         }
-                        let cc = (u0[0] - v + l - 1) as usize;
-                        self.data[bi] -= dtd[dtd_base + cc] * dz;
-                        dz_opt[bi] = dz_value_inv(self.data[bi], zv, lambda, inv);
-                        touched += 1;
+                        // beta invariant under its own update; Z moves
+                        // by dz — refresh the cached optimum only.
+                        orow[s] = dz_value_inv(brow[s], zrow[s] + dz, lambda, inv);
+                        for (((b, op), &c), &zv) in brow[s + 1..]
+                            .iter_mut()
+                            .zip(orow[s + 1..].iter_mut())
+                            .zip(drow[..len - s - 1].iter().rev())
+                            .zip(&zrow[s + 1..])
+                        {
+                            *b -= c * dz;
+                            *op = dz_value_inv(*b, zv, lambda, inv);
+                        }
+                        touched += len - 1;
+                    } else {
+                        for (((b, op), &c), &zv) in brow
+                            .iter_mut()
+                            .zip(orow.iter_mut())
+                            .zip(drow.iter().rev())
+                            .zip(zrow)
+                        {
+                            *b -= c * dz;
+                            *op = dz_value_inv(*b, zv, lambda, inv);
+                        }
+                        touched += len;
                     }
                 }
             }
@@ -542,27 +620,57 @@ impl BetaWindow {
                 let w = self.local_dims[1];
                 let (zo0, zo1) = (z.origin[0], z.origin[1]);
                 let zw = z.local_dims[1];
+                let len1 = (hi1 - lo1) as usize;
+                let b1 = (lo1 - o1) as usize;
+                let c1_lo = (u0[1] - (hi1 - 1) + l1 - 1) as usize;
+                let z1 = (lo1 - zo1) as usize;
+                let skip_col = u0[1] >= lo1 && u0[1] < hi1;
                 for k in 0..k_tot {
-                    let dtd_base = (k0 * k_tot + k) * cc_sp;
-                    let beta_base = k * sp;
+                    let dtd_base = (k0 * k_tot + k) * cc_sp + c1_lo;
+                    let beta_base = k * sp + b1;
+                    let z_base = k * zsp + z1;
                     let inv = problem.inv_norms_sq[k];
-                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
                     for v0 in lo0..hi0 {
-                        let cc_row = dtd_base + ((u0[0] - v0 + l0 - 1) as usize) * cc_w;
-                        let beta_row = beta_base + ((v0 - o0) as usize) * w;
-                        let z_row = ((v0 - zo0) as usize) * zw;
-                        let skip_here = k == k0 && v0 == u0[0];
-                        for v1 in lo1..hi1 {
-                            let bi = beta_row + (v1 - o1) as usize;
-                            let zv = zrow[z_row + (v1 - zo1) as usize];
-                            if skip_here && v1 == u0[1] {
-                                dz_opt[bi] = dz_value_inv(self.data[bi], zv + dz, lambda, inv);
-                                continue;
+                        let drow =
+                            &dtd[dtd_base + ((u0[0] - v0 + l0 - 1) as usize) * cc_w..][..len1];
+                        let zrow = &z.data[z_base + ((v0 - zo0) as usize) * zw..][..len1];
+                        let brow =
+                            &mut self.data[beta_base + ((v0 - o0) as usize) * w..][..len1];
+                        let orow =
+                            &mut dz_opt[beta_base + ((v0 - o0) as usize) * w..][..len1];
+                        if k == k0 && v0 == u0[0] && skip_col {
+                            let s = (u0[1] - lo1) as usize;
+                            for (((b, op), &c), &zv) in brow[..s]
+                                .iter_mut()
+                                .zip(orow[..s].iter_mut())
+                                .zip(drow[len1 - s..].iter().rev())
+                                .zip(&zrow[..s])
+                            {
+                                *b -= c * dz;
+                                *op = dz_value_inv(*b, zv, lambda, inv);
                             }
-                            let cc = cc_row + (u0[1] - v1 + l1 - 1) as usize;
-                            self.data[bi] -= dtd[cc] * dz;
-                            dz_opt[bi] = dz_value_inv(self.data[bi], zv, lambda, inv);
-                            touched += 1;
+                            orow[s] = dz_value_inv(brow[s], zrow[s] + dz, lambda, inv);
+                            for (((b, op), &c), &zv) in brow[s + 1..]
+                                .iter_mut()
+                                .zip(orow[s + 1..].iter_mut())
+                                .zip(drow[..len1 - s - 1].iter().rev())
+                                .zip(&zrow[s + 1..])
+                            {
+                                *b -= c * dz;
+                                *op = dz_value_inv(*b, zv, lambda, inv);
+                            }
+                            touched += len1 - 1;
+                        } else {
+                            for (((b, op), &c), &zv) in brow
+                                .iter_mut()
+                                .zip(orow.iter_mut())
+                                .zip(drow.iter().rev())
+                                .zip(zrow)
+                            {
+                                *b -= c * dz;
+                                *op = dz_value_inv(*b, zv, lambda, inv);
+                            }
+                            touched += len1;
                         }
                     }
                 }
@@ -640,21 +748,33 @@ impl BetaWindow {
         let mut best_abs = 0.0;
         match self.local_dims.len() {
             1 => {
+                // Contiguous row scan with scalar best-tracking; the
+                // candidate tuple (and its Vec) is built once at the
+                // end, not per improvement. First-wins tie order (k
+                // outer, v ascending, strict `>`) is preserved exactly.
                 let o = self.origin[0];
                 let zo = z.origin[0];
+                let len = (inter.hi[0] - inter.lo[0]) as usize;
+                let b0 = (inter.lo[0] - o) as usize;
+                let z0 = (inter.lo[0] - zo) as usize;
+                let (mut found, mut best_k, mut best_v, mut best_dz) = (false, 0usize, 0i64, 0.0);
                 for k in 0..self.n_atoms {
                     let inv = problem.inv_norms_sq[k];
-                    let brow = &self.data[k * sp..(k + 1) * sp];
-                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
-                    for v in inter.lo[0]..inter.hi[0] {
-                        let i = (v - o) as usize;
-                        let zi = (v - zo) as usize;
-                        let dz = dz_value_inv(brow[i], zrow[zi], lambda, inv);
+                    let brow = &self.data[k * sp + b0..][..len];
+                    let zrow = &z.data[k * zsp + z0..][..len];
+                    for (j, (&bv, &zv)) in brow.iter().zip(zrow).enumerate() {
+                        let dz = dz_value_inv(bv, zv, lambda, inv);
                         if dz.abs() > best_abs {
                             best_abs = dz.abs();
-                            best = Some((k, vec![v], dz));
+                            found = true;
+                            best_k = k;
+                            best_v = inter.lo[0] + j as i64;
+                            best_dz = dz;
                         }
                     }
+                }
+                if found {
+                    best = Some((best_k, vec![best_v], best_dz));
                 }
             }
             2 => {
@@ -662,23 +782,31 @@ impl BetaWindow {
                 let (zo0, zo1) = (z.origin[0], z.origin[1]);
                 let w = self.local_dims[1];
                 let zw = z.local_dims[1];
+                let len1 = (inter.hi[1] - inter.lo[1]) as usize;
+                let b1 = (inter.lo[1] - o1) as usize;
+                let z1 = (inter.lo[1] - zo1) as usize;
+                let (mut found, mut best_k, mut best_v0, mut best_v1, mut best_dz) =
+                    (false, 0usize, 0i64, 0i64, 0.0);
                 for k in 0..self.n_atoms {
                     let inv = problem.inv_norms_sq[k];
-                    let brow = &self.data[k * sp..(k + 1) * sp];
-                    let zrow = &z.data[k * zsp..(k + 1) * zsp];
                     for v0 in inter.lo[0]..inter.hi[0] {
-                        let row = ((v0 - o0) as usize) * w;
-                        let zrow0 = ((v0 - zo0) as usize) * zw;
-                        for v1 in inter.lo[1]..inter.hi[1] {
-                            let i = row + (v1 - o1) as usize;
-                            let zi = zrow0 + (v1 - zo1) as usize;
-                            let dz = dz_value_inv(brow[i], zrow[zi], lambda, inv);
+                        let brow = &self.data[k * sp + ((v0 - o0) as usize) * w + b1..][..len1];
+                        let zrow = &z.data[k * zsp + ((v0 - zo0) as usize) * zw + z1..][..len1];
+                        for (j, (&bv, &zv)) in brow.iter().zip(zrow).enumerate() {
+                            let dz = dz_value_inv(bv, zv, lambda, inv);
                             if dz.abs() > best_abs {
                                 best_abs = dz.abs();
-                                best = Some((k, vec![v0, v1], dz));
+                                found = true;
+                                best_k = k;
+                                best_v0 = v0;
+                                best_v1 = inter.lo[1] + j as i64;
+                                best_dz = dz;
                             }
                         }
                     }
+                }
+                if found {
+                    best = Some((best_k, vec![best_v0, best_v1], best_dz));
                 }
             }
             _ => {

@@ -136,6 +136,7 @@ pub fn encode_problem(problem: &CscProblem, cfg: &EncodeConfig) -> EncodeResult 
                 transport: dcfg.transport,
                 stats: r.stats,
                 per_worker: r.per_worker,
+                spectra_bytes: problem.corr.spectra_bytes(),
                 evicted: false,
             };
             EncodeResult {

@@ -75,6 +75,10 @@ pub struct PoolReport {
     /// Aggregated cumulative worker counters.
     pub stats: WorkerStats,
     pub per_worker: Vec<WorkerStats>,
+    /// Bytes held by the problem's `CorrEngine` spectrum cache at
+    /// report time (halved under the default rfft layout relative to
+    /// packed complex spectra).
+    pub spectra_bytes: usize,
     /// Set by the owning session when this pool was shut down by the
     /// LRU residency policy (`max_resident_pools`); always `false` on a
     /// report taken from a live pool.
@@ -200,6 +204,7 @@ impl WorkerPool {
             transport: self.transport_kind,
             stats: self.aggregate_stats(),
             per_worker: self.per_worker.clone(),
+            spectra_bytes: self.problem.corr.spectra_bytes(),
             evicted: false,
         }
     }

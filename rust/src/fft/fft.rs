@@ -33,18 +33,41 @@ pub fn ifft(buf: &mut [C64]) {
 }
 
 /// Forward DFT of a real signal; returns the full complex spectrum.
+///
+/// Runs the cached [`crate::fft::RealPlan`] (one `n/2` complex
+/// transform for even lengths) and mirror-expands the `n/2 + 1`
+/// half-spectrum via conjugate symmetry, so the legacy full-spectrum
+/// signature costs the same as the half-spectrum path.
 pub fn fft_real(signal: &[f64]) -> Vec<C64> {
-    let mut buf: Vec<C64> = signal.iter().map(|&x| C64::from_re(x)).collect();
-    fft(&mut buf);
-    buf
+    let n = signal.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let rplan = FftPlanCache::global().real_plan(n);
+    let hn = n / 2 + 1;
+    let mut half = vec![C64::ZERO; hn];
+    rplan.forward(signal, &mut half);
+    let mut out = vec![C64::ZERO; n];
+    out[..hn].copy_from_slice(&half);
+    for k in hn..n {
+        out[k] = half[n - k].conj();
+    }
+    out
 }
 
 /// Inverse DFT, returning only real parts (caller guarantees the input
-/// spectrum is conjugate-symmetric).
+/// spectrum is conjugate-symmetric). Only the `n/2 + 1` leading bins
+/// are read — the rest are redundant under that guarantee — so this is
+/// the half-spectrum inverse of [`fft_real`].
 pub fn ifft_real(spectrum: &[C64]) -> Vec<f64> {
-    let mut buf = spectrum.to_vec();
-    ifft(&mut buf);
-    buf.into_iter().map(|c| c.re).collect()
+    let n = spectrum.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let rplan = FftPlanCache::global().real_plan(n);
+    let mut out = vec![0.0f64; n];
+    rplan.inverse(&spectrum[..n / 2 + 1], &mut out);
+    out
 }
 
 /// n-dimensional FFT over a row-major buffer with `dims`, in place.
@@ -129,6 +152,23 @@ mod tests {
         let back = ifft_real(&spec);
         for (x, y) in sig.iter().zip(&back) {
             assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_real_matches_complex_path_all_lengths() {
+        // Even/odd, smooth/non-smooth: the RealPlan route must equal
+        // the full complex transform of the same real signal.
+        for n in [1usize, 2, 5, 7, 12, 16, 25, 27, 30, 97, 128] {
+            let mut rng = Pcg64::seeded(40 + n as u64);
+            let sig: Vec<f64> = rng.normal_vec(n);
+            let got = fft_real(&sig);
+            let mut want: Vec<C64> = sig.iter().map(|&x| C64::from_re(x)).collect();
+            fft(&mut want);
+            assert!(close(&got, &want, 1e-8 * (n as f64).max(1.0)), "n={n}");
+            let back = ifft_real(&got);
+            let ok = sig.iter().zip(&back).all(|(a, b)| (a - b).abs() < 1e-9 * (n as f64).max(1.0));
+            assert!(ok, "roundtrip n={n}");
         }
     }
 

@@ -1,4 +1,5 @@
-//! FFT substrate (complex arithmetic + cached plans + 1-D/n-D transforms).
+//! FFT substrate (complex arithmetic + cached plans + 1-D/n-D
+//! transforms, complex and real-half-spectrum).
 
 pub mod complex;
 #[allow(clippy::module_inception)]
@@ -6,4 +7,7 @@ pub mod fft;
 pub mod plan;
 
 pub use complex::C64;
-pub use plan::{good_size, FftPlan, FftPlanCache};
+pub use plan::{
+    good_size, reset_transform_counts, rfft_enabled, transform_counts, FftPlan, FftPlanCache,
+    RealPlan, TransformCounts,
+};

@@ -19,19 +19,99 @@
 //!   `next_power_of_two` — the padded size is always within the
 //!   power-of-two bound and usually much tighter (e.g. 1 025 -> 1 080
 //!   instead of 2 048).
-//! - A real-input fast path: two real fields are packed into one
-//!   complex transform ([`split_packed_spectrum`] separates the spectra
-//!   via conjugate symmetry), halving the forward-transform count for
-//!   the batched correlation/reconstruction paths in `conv::engine`.
+//! - A true real-input path: [`RealPlan`] maps a real signal to its
+//!   `n/2 + 1` half-spectrum (and back) via the even/odd split over an
+//!   `n/2` complex sub-plan, so smooth lengths stay smooth and a real
+//!   transform costs roughly half a complex one. [`rfftn_cached`] /
+//!   [`irfftn_cached`] lift this to n-D with the `w/2 + 1` layout:
+//!   last axis real-to-half, remaining axes complex over the half-dims
+//!   buffer. This is the default spectrum layout for every real field
+//!   in the system (`DICODILE_RFFT=off` falls back to packed complex).
+//! - The legacy real-pair packing trick ([`split_packed_spectrum`]:
+//!   two real fields in one complex transform, separated via conjugate
+//!   symmetry) is retained as the `DICODILE_RFFT=off` A/B path for the
+//!   batched correlation/reconstruction in `conv::engine`.
+//! - Transform counters ([`transform_counts`]) tally forward/inverse
+//!   invocations and transformed points in full-complex equivalents (a
+//!   real transform of an `n`-point domain counts `n/2`), so benches
+//!   can show the rfft path literally halving the transform work.
 //!
 //! All transforms compute the exact DFT (mixed-radix and Bluestein are
 //! algebraically exact), so results are bit-comparable in tolerance
 //! terms with the naive `O(n^2)` oracle used by the tests.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::complex::C64;
+
+/// Is the real-FFT half-spectrum path enabled? (`DICODILE_RFFT`,
+/// default on). `off`/`0`/`false`/`no` fall back to the packed-complex
+/// path everywhere a real field is transformed — the run-time A/B
+/// escape hatch for the rfft landing.
+pub fn rfft_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| match std::env::var("DICODILE_RFFT").ok().as_deref() {
+        None => true,
+        Some(s) => match s.to_ascii_lowercase().as_str() {
+            "off" | "0" | "false" | "no" => false,
+            "" | "on" | "1" | "true" | "yes" => true,
+            other => {
+                eprintln!("warning: DICODILE_RFFT: unrecognized value {other:?}; defaulting to on");
+                true
+            }
+        },
+    })
+}
+
+static FWD_CALLS: AtomicU64 = AtomicU64::new(0);
+static INV_CALLS: AtomicU64 = AtomicU64::new(0);
+static FWD_POINTS: AtomicU64 = AtomicU64::new(0);
+static INV_POINTS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide transform counters.
+///
+/// `*_points` are in full-complex equivalents: an n-D complex transform
+/// of `n` points adds `n`; a real (half-spectrum) transform of the same
+/// domain adds `n/2`, which is what makes the rfft A/B in
+/// `micro_hotpath` show the forward count literally halving.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransformCounts {
+    pub forward: u64,
+    pub inverse: u64,
+    pub forward_points: u64,
+    pub inverse_points: u64,
+}
+
+/// Read the transform counters (saturating snapshot, never resets).
+pub fn transform_counts() -> TransformCounts {
+    TransformCounts {
+        forward: FWD_CALLS.load(Ordering::Relaxed),
+        inverse: INV_CALLS.load(Ordering::Relaxed),
+        forward_points: FWD_POINTS.load(Ordering::Relaxed),
+        inverse_points: INV_POINTS.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero the transform counters (bench sections bracket measured work
+/// with reset + snapshot).
+pub fn reset_transform_counts() {
+    FWD_CALLS.store(0, Ordering::Relaxed);
+    INV_CALLS.store(0, Ordering::Relaxed);
+    FWD_POINTS.store(0, Ordering::Relaxed);
+    INV_POINTS.store(0, Ordering::Relaxed);
+}
+
+fn count_transform(inverse: bool, points: usize) {
+    if inverse {
+        INV_CALLS.fetch_add(1, Ordering::Relaxed);
+        INV_POINTS.fetch_add(points as u64, Ordering::Relaxed);
+    } else {
+        FWD_CALLS.fetch_add(1, Ordering::Relaxed);
+        FWD_POINTS.fetch_add(points as u64, Ordering::Relaxed);
+    }
+}
 
 /// Smallest 5-smooth number (`2^a 3^b 5^c`) that is `>= n`.
 ///
@@ -195,6 +275,173 @@ impl FftPlan {
     }
 }
 
+enum RealPlanKind {
+    /// `n <= 1`: the identity transform.
+    Tiny,
+    /// Even `n`: the classic even/odd split. Pack
+    /// `z[j] = x[2j] + i x[2j+1]`, run one `m = n/2` complex transform,
+    /// and unscramble with the twiddles `tw[k] = exp(-2 pi i k / n)`
+    /// (`m + 1` entries, through the Nyquist bin).
+    Even { half: Arc<FftPlan>, tw: Vec<C64> },
+    /// Odd `n`: no radix-2 split exists, so run the full complex plan
+    /// and keep (forward) / mirror (inverse) the `n/2 + 1` bins.
+    Odd { full: Arc<FftPlan> },
+}
+
+/// A cached real-input DFT plan for one transform length: forward maps
+/// `n` reals to the `n/2 + 1` half-spectrum, inverse maps a
+/// half-spectrum back to `n` reals (including the `1/n` normalization).
+///
+/// The remaining bins of the full spectrum are redundant by conjugate
+/// symmetry (`X[n-k] = conj(X[k])`), so the half layout loses nothing
+/// while halving both work and storage.
+pub struct RealPlan {
+    n: usize,
+    kind: RealPlanKind,
+}
+
+impl RealPlan {
+    fn build(n: usize, cache: &FftPlanCache) -> RealPlan {
+        if n <= 1 {
+            return RealPlan { n, kind: RealPlanKind::Tiny };
+        }
+        if n % 2 == 0 {
+            let m = n / 2;
+            let tw: Vec<C64> = (0..=m)
+                .map(|k| C64::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+                .collect();
+            RealPlan { n, kind: RealPlanKind::Even { half: cache.plan(m), tw } }
+        } else {
+            RealPlan { n, kind: RealPlanKind::Odd { full: cache.plan(n) } }
+        }
+    }
+
+    /// Real transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Half-spectrum length `n/2 + 1`.
+    pub fn half_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Forward real -> half-spectrum (`out.len() == n/2 + 1`).
+    pub fn forward(&self, src: &[f64], out: &mut [C64]) {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        self.forward_with_scratch(src, out, &mut buf, &mut scratch);
+    }
+
+    /// Forward reusing caller-owned buffers — the allocation-free path
+    /// for batched row transforms in `rfftn_cached`.
+    pub fn forward_with_scratch(
+        &self,
+        src: &[f64],
+        out: &mut [C64],
+        buf: &mut Vec<C64>,
+        scratch: &mut Vec<C64>,
+    ) {
+        assert_eq!(src.len(), self.n, "signal length != plan length");
+        assert_eq!(out.len(), self.half_len(), "output length != n/2 + 1");
+        match &self.kind {
+            RealPlanKind::Tiny => {
+                if self.n == 1 {
+                    out[0] = C64::from_re(src[0]);
+                }
+            }
+            RealPlanKind::Even { half, tw } => {
+                let m = self.n / 2;
+                buf.clear();
+                buf.extend((0..m).map(|j| C64::new(src[2 * j], src[2 * j + 1])));
+                half.process_with_scratch(buf, scratch, false);
+                // X[k] = Xe[k] + w^k Xo[k] with
+                //   Xe[k] = (Z[k] + conj(Z[m-k])) / 2
+                //   Xo[k] = (Z[k] - conj(Z[m-k])) / 2i
+                // indices mod m; k = m is the Nyquist bin.
+                for (k, o) in out.iter_mut().enumerate() {
+                    let zk = buf[k % m];
+                    let zmk = buf[(m - k % m) % m].conj();
+                    let xe = (zk + zmk).scale(0.5);
+                    let diff = zk - zmk;
+                    let xo = C64::new(diff.im * 0.5, -diff.re * 0.5);
+                    *o = xe + tw[k] * xo;
+                }
+            }
+            RealPlanKind::Odd { full } => {
+                buf.clear();
+                buf.extend(src.iter().map(|&x| C64::from_re(x)));
+                full.process_with_scratch(buf, scratch, false);
+                out.copy_from_slice(&buf[..self.half_len()]);
+            }
+        }
+    }
+
+    /// Inverse half-spectrum -> real (`spec.len() == n/2 + 1`),
+    /// normalized by `1/n`.
+    pub fn inverse(&self, spec: &[C64], out: &mut [f64]) {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        self.inverse_with_scratch(spec, out, &mut buf, &mut scratch);
+    }
+
+    /// Inverse reusing caller-owned buffers.
+    pub fn inverse_with_scratch(
+        &self,
+        spec: &[C64],
+        out: &mut [f64],
+        buf: &mut Vec<C64>,
+        scratch: &mut Vec<C64>,
+    ) {
+        assert_eq!(spec.len(), self.half_len(), "spectrum length != n/2 + 1");
+        assert_eq!(out.len(), self.n, "output length != plan length");
+        match &self.kind {
+            RealPlanKind::Tiny => {
+                if self.n == 1 {
+                    out[0] = spec[0].re;
+                }
+            }
+            RealPlanKind::Even { half, tw } => {
+                let m = self.n / 2;
+                // Undo the split: from X[k] and conj(X[m-k]) recover
+                // Xe[k] and w^k Xo[k], then Z[k] = Xe[k] + i Xo[k] and
+                // one m-point complex inverse (its 1/m is exactly the
+                // 1/n the interleaved samples need).
+                buf.clear();
+                buf.extend((0..m).map(|k| {
+                    let a = spec[k];
+                    let b = spec[m - k].conj();
+                    let xe = (a + b).scale(0.5);
+                    let xo = tw[k].conj() * (a - b).scale(0.5);
+                    C64::new(xe.re - xo.im, xe.im + xo.re)
+                }));
+                half.process_with_scratch(buf, scratch, true);
+                for (j, z) in buf.iter().enumerate() {
+                    out[2 * j] = z.re;
+                    out[2 * j + 1] = z.im;
+                }
+            }
+            RealPlanKind::Odd { full } => {
+                let hn = self.half_len();
+                buf.clear();
+                buf.resize(self.n, C64::ZERO);
+                buf[..hn].copy_from_slice(spec);
+                for k in 1..hn {
+                    buf[self.n - k] = spec[k].conj();
+                }
+                full.process_with_scratch(buf, scratch, true);
+                for (o, z) in out.iter_mut().zip(buf.iter()) {
+                    *o = z.re;
+                }
+            }
+        }
+    }
+}
+
 /// Recursive mixed-radix decimation-in-time.
 ///
 /// `tw` is the twiddle table of the *root* transform (`root` entries,
@@ -238,9 +485,10 @@ fn fft_rec(data: &mut [C64], scratch: &mut [C64], tw: &[C64], root: usize, inver
     }
 }
 
-/// Length-keyed plan cache.
+/// Length-keyed plan cache (complex and real plans side by side).
 pub struct FftPlanCache {
     plans: Mutex<HashMap<usize, Arc<FftPlan>>>,
+    reals: Mutex<HashMap<usize, Arc<RealPlan>>>,
 }
 
 impl Default for FftPlanCache {
@@ -251,7 +499,7 @@ impl Default for FftPlanCache {
 
 impl FftPlanCache {
     pub fn new() -> FftPlanCache {
-        FftPlanCache { plans: Mutex::new(HashMap::new()) }
+        FftPlanCache { plans: Mutex::new(HashMap::new()), reals: Mutex::new(HashMap::new()) }
     }
 
     /// The process-wide cache: shared by the sequential solvers, every
@@ -277,6 +525,22 @@ impl FftPlanCache {
             .clone()
     }
 
+    /// Fetch (or build) the real-input plan for length `n`.
+    pub fn real_plan(&self, n: usize) -> Arc<RealPlan> {
+        if let Some(p) = self.reals.lock().unwrap().get(&n) {
+            return p.clone();
+        }
+        // Build outside the lock: the real plan fetches its complex
+        // sub-plan (`n/2` even, `n` odd) from this same cache.
+        let built = Arc::new(RealPlan::build(n, self));
+        self.reals
+            .lock()
+            .unwrap()
+            .entry(n)
+            .or_insert(built)
+            .clone()
+    }
+
     /// Number of distinct lengths currently planned.
     pub fn len(&self) -> usize {
         self.plans.lock().unwrap().len()
@@ -294,11 +558,18 @@ pub fn fftn_cached(buf: &mut [C64], dims: &[usize], inverse: bool) {
     if n == 0 {
         return;
     }
+    count_transform(inverse, n);
+    transform_axes(buf, dims, dims.len(), inverse);
+}
+
+/// Complex line transforms over axes `0..n_axes` of a row-major buffer
+/// (the shared inner loop of `fftn_cached` and the leading-axes pass of
+/// `rfftn_cached`/`irfftn_cached`).
+fn transform_axes(buf: &mut [C64], dims: &[usize], n_axes: usize, inverse: bool) {
     let cache = FftPlanCache::global();
-    let d = dims.len();
     let mut line: Vec<C64> = Vec::new();
     let mut scratch: Vec<C64> = Vec::new();
-    for axis in 0..d {
+    for axis in 0..n_axes {
         let len = dims[axis];
         if len <= 1 {
             continue;
@@ -320,6 +591,82 @@ pub fn fftn_cached(buf: &mut [C64], dims: &[usize], inverse: bool) {
                 }
             }
         }
+    }
+}
+
+/// Shape of the half-spectrum buffer for a real domain `dims`: the last
+/// axis shrinks to `w/2 + 1`, the remaining axes are unchanged.
+pub fn half_spectrum_dims(dims: &[usize]) -> Vec<usize> {
+    let mut h = dims.to_vec();
+    if let Some(last) = h.last_mut() {
+        *last = *last / 2 + 1;
+    }
+    h
+}
+
+/// n-dimensional real-input FFT: real row-major `real` over `dims` to
+/// the half-spectrum buffer over [`half_spectrum_dims`].
+///
+/// Layout (snippet-1 idiom): the last axis is transformed real-to-half
+/// first (rows are contiguous in row-major order), then the remaining
+/// axes get full complex line transforms over the half-dims buffer.
+pub fn rfftn_cached(real: &[f64], dims: &[usize]) -> Vec<C64> {
+    let n: usize = dims.iter().product();
+    assert_eq!(real.len(), n);
+    assert!(!dims.is_empty(), "rfftn_cached: empty dims");
+    if n == 0 {
+        return Vec::new();
+    }
+    count_transform(false, n / 2);
+    let r = dims.len();
+    let w = dims[r - 1];
+    let hw = w / 2 + 1;
+    let rows: usize = dims[..r - 1].iter().product();
+    let rplan = FftPlanCache::global().real_plan(w);
+    let mut out = vec![C64::ZERO; rows * hw];
+    let mut buf = Vec::new();
+    let mut scratch = Vec::new();
+    for i in 0..rows {
+        rplan.forward_with_scratch(
+            &real[i * w..(i + 1) * w],
+            &mut out[i * hw..(i + 1) * hw],
+            &mut buf,
+            &mut scratch,
+        );
+    }
+    let hdims = half_spectrum_dims(dims);
+    transform_axes(&mut out, &hdims, r - 1, false);
+    out
+}
+
+/// Inverse of [`rfftn_cached`]: half-spectrum buffer (consumed in
+/// place) back to the real domain `out` (`1/n` normalization applied
+/// through the per-axis inverses).
+pub fn irfftn_cached(spec: &mut [C64], dims: &[usize], out: &mut [f64]) {
+    let n: usize = dims.iter().product();
+    assert_eq!(out.len(), n);
+    assert!(!dims.is_empty(), "irfftn_cached: empty dims");
+    if n == 0 {
+        return;
+    }
+    count_transform(true, n / 2);
+    let r = dims.len();
+    let w = dims[r - 1];
+    let hw = w / 2 + 1;
+    let rows: usize = dims[..r - 1].iter().product();
+    let hdims = half_spectrum_dims(dims);
+    assert_eq!(spec.len(), rows * hw);
+    transform_axes(spec, &hdims, r - 1, true);
+    let rplan = FftPlanCache::global().real_plan(w);
+    let mut buf = Vec::new();
+    let mut scratch = Vec::new();
+    for i in 0..rows {
+        rplan.inverse_with_scratch(
+            &spec[i * hw..(i + 1) * hw],
+            &mut out[i * w..(i + 1) * w],
+            &mut buf,
+            &mut scratch,
+        );
     }
 }
 
@@ -485,6 +832,89 @@ mod tests {
         fftn_cached(&mut fb, &[n], false);
         assert!(close(&ga, &fa, 1e-9 * n as f64));
         assert!(close(&gb, &fb, 1e-9 * n as f64));
+    }
+
+    #[test]
+    fn real_plans_match_naive_dft_half_spectrum() {
+        // Even (smooth + non-smooth), odd (smooth + non-smooth), tiny.
+        let cache = FftPlanCache::new();
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 13, 14, 16, 22, 25, 27, 30, 45, 60, 81, 97, 128] {
+            let mut rng = Pcg64::seeded(300 + n as u64);
+            let sig: Vec<f64> = rng.normal_vec(n);
+            let rplan = cache.real_plan(n);
+            assert_eq!(rplan.len(), n);
+            assert_eq!(rplan.half_len(), n / 2 + 1);
+            let mut half = vec![C64::ZERO; n / 2 + 1];
+            rplan.forward(&sig, &mut half);
+            let full = dft_naive(&sig.iter().map(|&x| C64::from_re(x)).collect::<Vec<_>>());
+            assert!(close(&half, &full[..n / 2 + 1], 1e-8 * (n as f64).max(1.0)), "n={n}");
+            let mut back = vec![0.0f64; n];
+            rplan.inverse(&half, &mut back);
+            let ok = sig.iter().zip(&back).all(|(a, b)| (a - b).abs() < 1e-9 * (n as f64).max(1.0));
+            assert!(ok, "roundtrip n={n}");
+        }
+    }
+
+    #[test]
+    fn real_plan_cache_reuses_plans() {
+        let cache = FftPlanCache::new();
+        let a = cache.real_plan(60);
+        let b = cache.real_plan(60);
+        assert!(Arc::ptr_eq(&a, &b));
+        // The even split shares the m = n/2 complex sub-plan.
+        let sub = cache.plan(30);
+        let again = cache.plan(30);
+        assert!(Arc::ptr_eq(&sub, &again));
+    }
+
+    #[test]
+    fn rfftn_matches_fftn_truncation_2d() {
+        for dims in [vec![6usize, 10], vec![5, 9], vec![4, 7], vec![3, 3, 8]] {
+            let n: usize = dims.iter().product();
+            let mut rng = Pcg64::seeded(77 + n as u64);
+            let sig: Vec<f64> = rng.normal_vec(n);
+            let half = rfftn_cached(&sig, &dims);
+            let mut full: Vec<C64> = sig.iter().map(|&x| C64::from_re(x)).collect();
+            fftn_cached(&mut full, &dims, false);
+            let hdims = half_spectrum_dims(&dims);
+            let hn: usize = hdims.iter().product();
+            assert_eq!(half.len(), hn);
+            let w = dims[dims.len() - 1];
+            let hw = hdims[hdims.len() - 1];
+            let rows = hn / hw;
+            for i in 0..rows {
+                for j in 0..hw {
+                    let got = half[i * hw + j];
+                    let want = full[i * w + j];
+                    assert!((got - want).abs() < 1e-9 * (n as f64), "dims={dims:?} i={i} j={j}");
+                }
+            }
+            let mut spec = half.clone();
+            let mut back = vec![0.0f64; n];
+            irfftn_cached(&mut spec, &dims, &mut back);
+            let ok = sig.iter().zip(&back).all(|(a, b)| (a - b).abs() < 1e-9 * (n as f64));
+            assert!(ok, "rfftn roundtrip dims={dims:?}");
+        }
+    }
+
+    #[test]
+    fn transform_counters_charge_real_as_half() {
+        // Counters are process-global; use relative deltas so parallel
+        // tests only ever add.
+        let dims = [4usize, 16];
+        let sig = vec![1.0f64; 64];
+        let before = transform_counts();
+        let mut half = rfftn_cached(&sig, &dims);
+        let mid = transform_counts();
+        assert!(mid.forward >= before.forward + 1);
+        assert!(mid.forward_points >= before.forward_points + 32);
+        let mut out = vec![0.0f64; 64];
+        irfftn_cached(&mut half, &dims, &mut out);
+        let mut full: Vec<C64> = sig.iter().map(|&x| C64::from_re(x)).collect();
+        fftn_cached(&mut full, &dims, false);
+        let after = transform_counts();
+        assert!(after.inverse_points >= mid.inverse_points + 32);
+        assert!(after.forward_points >= mid.forward_points + 64);
     }
 
     #[test]

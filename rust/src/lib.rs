@@ -10,7 +10,20 @@
 //!
 //! The crate is layered bottom-up: [`tensor`] / [`fft`] / [`conv`]
 //! provide dense n-d arrays, cached-plan FFTs and the direct-vs-FFT
-//! correlation engine; [`csc`] defines the sparse-coding problem and
+//! correlation engine. All solver data is real, so the frequency
+//! backend defaults to a **half-spectrum rfft path**: cached
+//! [`fft::RealPlan`]s transform each real field with one `n/2`-length
+//! complex FFT (even/odd split), n-d spectra carry `w/2 + 1` bins on
+//! the last axis, and [`conv::CorrEngine`] caches, multiplies and
+//! accumulates dictionary/signal spectra on half bins only — ~2x less
+//! spectrum memory (observable as `spectra_bytes` in `PoolReport`) and
+//! roughly half the transform work (counted in complex-equivalent
+//! points by [`fft::transform_counts`]); `DICODILE_RFFT=off` restores
+//! the packed-complex layout, and the dispatch flop models follow the
+//! active layout. The V(u0) hot kernels in [`csc::beta`] are laid out
+//! as contiguous slice runs with the self-entry split hoisted out of
+//! the inner loops (autovectorization-friendly, bit-identical to the
+//! scalar reference loops). [`csc`] defines the sparse-coding problem and
 //! the sequential solvers (LGCD/greedy/randomized CD, FISTA) — its CD
 //! hot loop pairs the incremental beta maintenance with an
 //! **incremental selection state** ([`csc::select::SelectionState`]):

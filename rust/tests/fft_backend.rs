@@ -5,12 +5,19 @@
 //!   and multi-channel inputs;
 //! - the distributed workers' halo-window beta bootstrap must equal
 //!   the corresponding slice of the full-domain bootstrap for every
-//!   partition geometry (both the dispatched and the forced-FFT path).
+//!   partition geometry (both the dispatched and the forced-FFT path);
+//! - half-spectrum rfft parity: `rfftn` against the complex transform's
+//!   truncation (with roundtrip), and `CorrEngine` with the rfft path
+//!   forced on vs off;
+//! - bitwise gates pinning the restructured V(u0) beta kernels to
+//!   plain scalar reference loops (`apply_update`, `apply_update_fused`,
+//!   `best_candidate` must not drift by one ulp).
 
 use dicodile::conv::{self, CorrEngine};
-use dicodile::csc::beta::BetaWindow;
+use dicodile::csc::beta::{dz_value_inv, BetaWindow, ZWindow};
 use dicodile::csc::problem::CscProblem;
 use dicodile::dicod::partition::{PartitionKind, WorkerGrid};
+use dicodile::tensor::shape::{strides_of, Rect};
 use dicodile::tensor::NdTensor;
 use dicodile::util::proptest_lite::{check, FnGen};
 use dicodile::util::rng::Pcg64;
@@ -215,4 +222,300 @@ fn lambda_max_consistent_across_backends() {
     let via_engine = dicodile::csc::problem::lambda_max(&x, &d);
     let via_direct = conv::correlate_dict(&x, &d).norm_inf();
     assert!((via_engine - via_direct).abs() <= 1e-9 * (1.0 + via_direct));
+}
+
+/// Half-spectrum transforms must equal the truncation of the complex
+/// transform of the same real field, across random ranks/lengths
+/// (odd, even and non-smooth last axes), and round-trip exactly.
+#[test]
+fn rfftn_matches_complex_truncation_random_shapes() {
+    use dicodile::fft::complex::C64;
+    use dicodile::fft::fft::fftn;
+    use dicodile::fft::plan::{half_spectrum_dims, irfftn_cached, rfftn_cached};
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let rank = 1 + rng.below(3);
+        let dims: Vec<usize> = (0..rank)
+            .map(|i| {
+                if i + 1 == rank {
+                    1 + rng.below(64) // hits odd/even/prime last axes
+                } else {
+                    1 + rng.below(12)
+                }
+            })
+            .collect();
+        (dims, rng.next_u64())
+    });
+    check("rfftn == fftn truncation + roundtrip", 30, &gen, |(dims, seed)| {
+        let n: usize = dims.iter().product();
+        let mut rng = Pcg64::seeded(*seed);
+        let sig = rng.normal_vec(n);
+        let half = rfftn_cached(&sig, dims);
+        let mut full: Vec<C64> = sig.iter().map(|&v| C64::from_re(v)).collect();
+        fftn(&mut full, dims);
+        let hdims = half_spectrum_dims(dims);
+        let w = dims[dims.len() - 1];
+        let hw = hdims[hdims.len() - 1];
+        let tol = 1e-9 * (1.0 + n as f64);
+        for r in 0..n / w {
+            for c in 0..hw {
+                if (half[r * hw + c] - full[r * w + c]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        let mut spec = half;
+        let mut back = vec![0.0f64; n];
+        irfftn_cached(&mut spec, dims, &mut back);
+        sig.iter().zip(&back).all(|(a, b)| (a - b).abs() <= tol)
+    });
+}
+
+/// The engine's packed-complex fallback (`DICODILE_RFFT=off`) and the
+/// default half-spectrum path agree within scale-aware tolerance on
+/// both hot operators, across multi-channel 1-D/2-D geometries.
+#[test]
+fn engine_rfft_on_off_parity() {
+    let gen = FnGen(|rng: &mut Pcg64| {
+        let two_d = rng.bernoulli(0.5);
+        let seed = rng.next_u64();
+        (two_d, seed)
+    });
+    check("CorrEngine rfft on == off", 12, &gen, |&(two_d, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let (x, d) = if two_d {
+            let l0 = 2 + rng.below(5);
+            let l1 = 2 + rng.below(5);
+            let t0 = l0 + 1 + rng.below(30);
+            let t1 = l1 + 1 + rng.below(30);
+            let k = 1 + rng.below(3);
+            let p = 1 + rng.below(3);
+            (
+                rand_tensor(&[p, t0, t1], &mut rng),
+                rand_tensor(&[k, p, l0, l1], &mut rng),
+            )
+        } else {
+            let l = 2 + rng.below(12);
+            let t = l + 1 + rng.below(120);
+            let k = 1 + rng.below(4);
+            let p = 1 + rng.below(3);
+            (rand_tensor(&[p, t], &mut rng), rand_tensor(&[k, p, l], &mut rng))
+        };
+        let on = CorrEngine::new(d.clone()).with_rfft(true);
+        let off = CorrEngine::new(d.clone()).with_rfft(false);
+        if !close(&on.correlate_dict_fft(&x), &off.correlate_dict_fft(&x), 1e-9) {
+            return false;
+        }
+        let mut zdims = vec![d.dims()[0]];
+        zdims.extend(
+            x.dims()[1..]
+                .iter()
+                .zip(&d.dims()[2..])
+                .map(|(t, l)| t - l + 1),
+        );
+        let z = rand_tensor(&zdims, &mut rng);
+        close(&on.reconstruct_fft(&z), &off.reconstruct_fft(&z), 1e-9)
+    });
+}
+
+/// Pre-restructure scalar reference for `BetaWindow::apply_update`: the
+/// plain coordinate-at-a-time loop over V(u0) ∩ window (the generic-d
+/// arm's arithmetic), against which the slice-run kernels are gated.
+fn apply_update_reference(
+    bw: &mut BetaWindow,
+    p: &CscProblem,
+    k0: usize,
+    u0: &[i64],
+    dz: f64,
+) -> usize {
+    if dz == 0.0 {
+        return 0;
+    }
+    let ldims = p.atom_dims();
+    let k_tot = bw.n_atoms;
+    let sp = bw.spatial_len();
+    let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let cc_sp: usize = cc_dims.iter().product();
+    let dtd = p.dtd.data();
+    let vbox = Rect::new(
+        u0.iter().zip(ldims).map(|(x, &l)| x - l as i64 + 1).collect(),
+        u0.iter().zip(ldims).map(|(x, &l)| x + l as i64).collect(),
+    );
+    let inter = vbox.intersect(&bw.window_rect());
+    if inter.is_empty() {
+        return 0;
+    }
+    let cc_str = strides_of(&cc_dims);
+    let lstr = strides_of(&bw.local_dims);
+    let mut touched = 0;
+    for k in 0..k_tot {
+        let dtd_base = (k0 * k_tot + k) * cc_sp;
+        let beta_base = k * sp;
+        for v in inter.iter() {
+            if k == k0 && v == u0 {
+                continue;
+            }
+            let cc: usize = v
+                .iter()
+                .zip(u0)
+                .zip(ldims)
+                .zip(&cc_str)
+                .map(|(((vi, ui), &l), s)| (ui - vi + l as i64 - 1) as usize * s)
+                .sum();
+            let loff: usize = v
+                .iter()
+                .zip(&bw.origin)
+                .zip(&lstr)
+                .map(|((x, o), s)| (x - o) as usize * s)
+                .sum();
+            bw.data[beta_base + loff] -= dtd[dtd_base + cc] * dz;
+            touched += 1;
+        }
+    }
+    touched
+}
+
+/// Pre-restructure scalar reference for `BetaWindow::best_candidate`:
+/// coordinate-at-a-time scan in the same k-outer / row-major order with
+/// strict-`>` first-wins selection.
+fn best_candidate_reference(
+    bw: &BetaWindow,
+    p: &CscProblem,
+    z: &ZWindow,
+    rect: &Rect,
+) -> Option<(usize, Vec<i64>, f64)> {
+    let inter = rect.intersect(&bw.window_rect());
+    if inter.is_empty() {
+        return None;
+    }
+    let sp = bw.spatial_len();
+    let zsp = z.spatial_len();
+    let lstr = strides_of(&bw.local_dims);
+    let mut best = None;
+    let mut best_abs = 0.0;
+    for k in 0..bw.n_atoms {
+        let inv = p.inv_norms_sq[k];
+        for v in inter.iter() {
+            let loff: usize = v
+                .iter()
+                .zip(&bw.origin)
+                .zip(&lstr)
+                .map(|((x, o), s)| (x - o) as usize * s)
+                .sum();
+            let dz = dz_value_inv(
+                bw.data[k * sp + loff],
+                z.data[k * zsp + z.local_offset(&v)],
+                p.lambda,
+                inv,
+            );
+            if dz.abs() > best_abs {
+                best_abs = dz.abs();
+                best = Some((k, v.clone(), dz));
+            }
+        }
+    }
+    best
+}
+
+/// The restructured d=1/d=2 kernels must be *bit-identical* to the
+/// scalar reference loops — beta trajectories, touched counts, the
+/// fused dz_opt cache, and candidate selection (incl. tie order) — on
+/// random worker-like geometries: windows at nonzero origins, a wider
+/// Z rim, and update sites inside and outside the window.
+#[test]
+fn beta_kernels_bitwise_match_reference_scalars() {
+    let gen = FnGen(|rng: &mut Pcg64| (rng.bernoulli(0.5), rng.next_u64()));
+    check("beta kernels == scalar reference (bitwise)", 20, &gen, |&(two_d, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let p = if two_d {
+            let l0 = 2 + rng.below(3);
+            let l1 = 2 + rng.below(3);
+            let t0 = l0 + 6 + rng.below(8);
+            let t1 = l1 + 6 + rng.below(8);
+            let k = 1 + rng.below(3);
+            let x = rand_tensor(&[1, t0, t1], &mut rng);
+            let d = rand_tensor(&[k, 1, l0, l1], &mut rng);
+            CscProblem::new(x, d, 0.3)
+        } else {
+            let l = 2 + rng.below(5);
+            let t = l + 10 + rng.below(30);
+            let k = 1 + rng.below(4);
+            let x = rand_tensor(&[2, t], &mut rng);
+            let d = rand_tensor(&[k, 2, l], &mut rng);
+            CscProblem::new(x, d, 0.3)
+        };
+        let zsp = p.z_spatial_dims();
+        let k_tot = p.n_atoms();
+        // Beta window at a (usually nonzero) origin, arbitrary data.
+        let origin: Vec<i64> = zsp.iter().map(|&n| rng.below(n / 2 + 1) as i64).collect();
+        let extents: Vec<usize> = zsp
+            .iter()
+            .zip(&origin)
+            .map(|(&n, &o)| 1 + rng.below(n - o as usize))
+            .collect();
+        let sp: usize = extents.iter().product();
+        let mut bw = BetaWindow {
+            data: rng.normal_vec(k_tot * sp),
+            n_atoms: k_tot,
+            local_dims: extents.clone(),
+            origin: origin.clone(),
+        };
+        let mut bw_ref = bw.clone();
+        let mut bw_fused = bw.clone();
+        // Z on a wider window (the persistent workers' rim geometry).
+        let rim = rng.below(3) as i64;
+        let zorigin: Vec<i64> = origin.iter().map(|o| o - rim).collect();
+        let zextents: Vec<usize> = extents.iter().map(|e| e + 2 * rim as usize).collect();
+        let mut z = ZWindow::zeros(k_tot, &zorigin, &zextents);
+        for v in z.data.iter_mut() {
+            if rng.bernoulli(0.3) {
+                *v = rng.normal();
+            }
+        }
+        let win = bw.window_rect();
+        let mut dz_opt = vec![0.0; k_tot * sp];
+        for k in 0..k_tot {
+            for (i, u) in win.iter().enumerate() {
+                dz_opt[k * sp + i] =
+                    dz_value_inv(bw.at(k, &u), z.at(k, &u), p.lambda, p.inv_norms_sq[k]);
+            }
+        }
+        let mut ok = true;
+        for _ in 0..6 {
+            let k0 = rng.below(k_tot);
+            let u0: Vec<i64> = zsp.iter().map(|&n| rng.below(n) as i64).collect();
+            let dz = rng.normal();
+            let t_new = bw.apply_update(&p, k0, &u0, dz);
+            let t_fused = bw_fused.apply_update_fused(&p, k0, &u0, dz, &mut dz_opt, &z);
+            let t_ref = apply_update_reference(&mut bw_ref, &p, k0, &u0, dz);
+            ok &= t_new == t_ref && t_fused == t_ref;
+            ok &= bw.data.iter().zip(&bw_ref.data).all(|(a, b)| a.to_bits() == b.to_bits());
+            ok &= bw_fused
+                .data
+                .iter()
+                .zip(&bw_ref.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if z.contains(&u0) {
+                z.add_at(k0, &u0, dz);
+            }
+            for k in 0..k_tot {
+                for (i, u) in win.iter().enumerate() {
+                    let want =
+                        dz_value_inv(bw.at(k, &u), z.at(k, &u), p.lambda, p.inv_norms_sq[k]);
+                    ok &= dz_opt[k * sp + i].to_bits() == want.to_bits();
+                }
+            }
+            // Selection parity on a random query rect (may only
+            // partially overlap the window, or miss it entirely).
+            let lo: Vec<i64> = zsp.iter().map(|&n| rng.below(n) as i64).collect();
+            let hi: Vec<i64> = lo
+                .iter()
+                .zip(&zsp)
+                .map(|(l, &n)| l + 1 + rng.below(n) as i64)
+                .collect();
+            let rect = Rect::new(lo, hi);
+            ok &= bw.best_candidate(&p, &z, &rect)
+                == best_candidate_reference(&bw, &p, &z, &rect);
+        }
+        ok
+    });
 }

@@ -43,6 +43,13 @@ for w in 1 2 4; do
   DICODILE_TEST_WORKERS=$w cargo test -q --test select_parity
 done
 
+# Frequency-domain backend suite under BOTH spectrum layouts: the
+# default half-spectrum rfft path and the DICODILE_RFFT=off
+# packed-complex fallback must both hold the fft<->direct parity
+# properties, the engine on/off A/B, and the bitwise beta-kernel gates.
+cargo test -q --test fft_backend
+DICODILE_RFFT=off cargo test -q --test fft_backend
+
 # Examples smoke: the quickstart exercises the builder/session/model
 # round-trip end to end (facade regression canary).
 cargo run --release --example quickstart
@@ -54,6 +61,12 @@ cargo run --release --example quickstart
 # (encode_concurrent_s), to BENCH_cdl_outer.json (single rep for CI;
 # drop the env for real runs).
 DICODILE_BENCH_REPS=1 cargo bench --bench cdl_outer
+
+# Hot-path smoke bench: beta/selection kernels plus the rfft-vs-packed
+# A/B (warm-spectra correlate/reconstruct wall-clock and the
+# complex-equivalent transform counters at 128/256/512^2), written into
+# BENCH_beta_bootstrap.json (single rep for CI).
+DICODILE_BENCH_REPS=1 cargo bench --bench micro_hotpath
 
 # Selection smoke bench: A/Bs incremental dz_opt selection against the
 # full-rescan path at tol 1e-4 / 1e-8 on the 2-D texture workload,
