@@ -66,6 +66,7 @@ impl Dicodile {
             encode_max_iter: DicodileBuilder::default().encode_max_iter,
             backend,
             max_resident_pools: None,
+            max_inflight_requests: None,
             dict_cfg: cfg.dict_cfg.clone(),
             init: cfg.init,
             stat_workers: cfg.stat_workers,
@@ -126,9 +127,16 @@ pub struct DicodileBuilder {
     pub(crate) backend: Backend,
     /// Residency cap for the session's pool registry: `None` keeps
     /// every distinct observation resident until `close()` (the PR 3
-    /// behavior); `Some(n)` evicts the least-recently-used pool when a
-    /// call would leave more than `n` resident.
+    /// behavior); `Some(n)` evicts the costliest idle pools
+    /// (bytes × idle-age scoring) when a call would leave more than
+    /// `n` resident.
     pub(crate) max_resident_pools: Option<usize>,
+    /// Admission cap: at most this many concurrently admitted requests
+    /// across all clones (see [`Session::try_admit`]); `None` admits
+    /// everything.
+    ///
+    /// [`Session::try_admit`]: crate::api::Session::try_admit
+    pub(crate) max_inflight_requests: Option<usize>,
     pub(crate) dict_cfg: PgdConfig,
     pub(crate) init: InitStrategy,
     /// Threads for the teardown-mode φ/ψ map-reduce.
@@ -150,6 +158,7 @@ impl Default for DicodileBuilder {
             encode_max_iter: 1_000_000,
             backend: Backend::Sequential(Strategy::LocallyGreedy),
             max_resident_pools: None,
+            max_inflight_requests: None,
             dict_cfg: base.dict_cfg,
             init: base.init,
             stat_workers: base.stat_workers,
@@ -252,8 +261,10 @@ impl DicodileBuilder {
     }
 
     /// Bound the session's pool registry: once more than `n` pools
-    /// would be resident after a call completes, the least-recently-used
-    /// ones are shut down (observable via
+    /// would be resident after a call completes, the costliest idle
+    /// ones are shut down under the age+size-aware policy (scored
+    /// `resident spectra bytes × idle age`; equal footprints reduce to
+    /// LRU — observable via
     /// [`Session::pools_evicted`](crate::api::Session::pools_evicted)
     /// and the `evicted` flag on their final
     /// [`PoolReport`](crate::dicod::pool::PoolReport)). Unbounded by
@@ -263,6 +274,15 @@ impl DicodileBuilder {
     /// observation simply respawns (cold) on its next request.
     pub fn max_resident_pools(mut self, n: usize) -> Self {
         self.max_resident_pools = Some(n);
+        self
+    }
+
+    /// Cap concurrently admitted requests across all clones of the
+    /// session: [`Session::try_admit`](crate::api::Session::try_admit)
+    /// returns `None` once `n` permits are outstanding (the serving
+    /// layer turns that into a structured 429). Unlimited by default.
+    pub fn max_inflight_requests(mut self, n: usize) -> Self {
+        self.max_inflight_requests = Some(n);
         self
     }
 

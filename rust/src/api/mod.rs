@@ -8,7 +8,7 @@
 //!     .n_atoms(5)
 //!     .atom_dims(&[32])
 //!     .dicodile(4)            // DiCoDiLe-Z worker grid, resident pools
-//!     .max_resident_pools(64) // optional: LRU-evict beyond 64 tenants
+//!     .max_resident_pools(64) // optional: evict costliest idle pools beyond 64 tenants
 //!     .build();
 //!
 //! // Fit once...
@@ -49,10 +49,20 @@
 //!   `Clone + Send + Sync` (cheap `Arc` clone, clones share registry
 //!   and counters). Warm reuse across `fit` / `fit_corpus` / `encode`
 //!   (`SetDict` instead of respawn when only the dictionary changed),
-//!   per-pool locking for concurrent serving, optional LRU eviction,
-//!   and interleaved per-signal solves in `fit_corpus`.
+//!   per-pool locking for concurrent serving, optional cost-weighted
+//!   eviction, admission permits for serving layers, and interleaved
+//!   per-signal solves in `fit_corpus`.
 //! - [`TrainedModel`] ([`model`]) — the fit-once / apply-many handle:
-//!   `encode`, `reconstruct`, `denoise`, JSON `save` / `load`.
+//!   `encode`, `reconstruct`, `denoise`, JSON `save` / `load` (with a
+//!   `schema_version` tag and a compat path for version-less
+//!   artifacts).
+//!
+//! The network face of this facade lives in [`crate::serve`]: the
+//! `dicodile serve` HTTP front-end routes `POST /v1/encode` and
+//! friends onto one shared [`Session`], resolves models through the
+//! versioned on-disk registry, and sheds overload through
+//! [`Session::try_admit`] — the session carries the mechanism
+//! (permits, counters, eviction scoring), `serve` carries the policy.
 //!
 //! The legacy free functions (`learn_dictionary`,
 //! `learn_dictionary_batch`, `sparse_encode`) remain available as thin
@@ -67,6 +77,20 @@
 //!   Eviction is observable via [`Session::pools_evicted`] /
 //!   [`Session::evicted_pool_reports`] (reports flagged
 //!   `evicted: true`).
+//! - Eviction under the cap is **cost-weighted** (resident spectra
+//!   bytes × idle age), not pure LRU: with equal footprints it reduces
+//!   to LRU exactly, with unequal footprints one large idle pool is
+//!   reclaimed before several small slightly-older ones.
+//! - Admission is opt-in: [`Session::try_admit`] +
+//!   [`max_inflight_requests`] cap concurrently admitted requests for
+//!   serving layers; direct library calls never take permits
+//!   themselves.
+//! - Since the config unification, `BatchCdlConfig` is an alias of
+//!   `CdlConfig`, so `BatchCdlConfig::default().max_iter` is **30**
+//!   (the old standalone batch struct said 20). Set `max_iter`
+//!   explicitly if the previous cap mattered.
+//!
+//! [`max_inflight_requests`]: DicodileBuilder::max_inflight_requests
 //! - Since the config unification, `BatchCdlConfig` is an alias of
 //!   `CdlConfig`, so `BatchCdlConfig::default().max_iter` is **30**
 //!   (the old standalone batch struct said 20). Set `max_iter`
@@ -81,4 +105,4 @@ pub mod session;
 
 pub use builder::{Backend, Dicodile, DicodileBuilder};
 pub use model::TrainedModel;
-pub use session::Session;
+pub use session::{AdmissionPermit, Session};

@@ -30,6 +30,18 @@ use crate::util::json::Json;
 /// Serialization format tag (bump on layout changes).
 const MODEL_FORMAT: &str = "dicodile-model";
 const MODEL_VERSION: f64 = 1.0;
+/// Artifact schema revision. History:
+///
+/// - **1** — the PR 3 layout (`format`/`version`/`dims`/`data`/
+///   lambdas/`trace`), written *without* a `schema_version` field; a
+///   missing field is read as 1.
+/// - **2** — identical layout plus the explicit `schema_version` tag,
+///   so future revisions can be rejected with a clear error instead of
+///   a silent misparse.
+///
+/// Readers accept every schema `<= MODEL_SCHEMA_VERSION` and refuse
+/// newer ones (forward-written artifacts are not guessed at).
+pub const MODEL_SCHEMA_VERSION: u64 = 2;
 
 /// A learned convolutional dictionary plus everything needed to apply
 /// it to new data.
@@ -149,6 +161,7 @@ impl TrainedModel {
         Json::obj(vec![
             ("format", Json::str(MODEL_FORMAT)),
             ("version", Json::Num(MODEL_VERSION)),
+            ("schema_version", Json::Num(MODEL_SCHEMA_VERSION as f64)),
             ("dims", Json::arr_usize(self.d.dims())),
             ("data", Json::arr_num(self.d.data())),
             ("lambda", Json::Num(self.lambda)),
@@ -180,6 +193,22 @@ impl TrainedModel {
         anyhow::ensure!(
             format == MODEL_FORMAT,
             "not a dicodile model file (format {format:?})"
+        );
+        // PR 3-era artifacts predate the tag; a missing field reads as
+        // schema 1 and parses on the same path (the layout is a strict
+        // superset). Artifacts from the future are refused.
+        let schema = v
+            .get("schema_version")
+            .map(|s| {
+                s.as_usize().map(|n| n as u64).ok_or_else(|| {
+                    anyhow::anyhow!("model file: schema_version must be a non-negative integer")
+                })
+            })
+            .transpose()?
+            .unwrap_or(1);
+        anyhow::ensure!(
+            schema <= MODEL_SCHEMA_VERSION,
+            "model file uses schema_version {schema}, this build reads <= {MODEL_SCHEMA_VERSION}"
         );
         let dims: Vec<usize> = v
             .get("dims")
@@ -291,6 +320,43 @@ mod tests {
         assert_eq!(back.trace[0].cost, 10.5);
         assert_eq!(back.trace[0].z_nnz, 4);
         assert_eq!(back.trace[0].phipsi_path, "loaded");
+    }
+
+    #[test]
+    fn current_artifacts_carry_the_schema_tag() {
+        let j = toy_model().to_json();
+        assert_eq!(
+            j.get("schema_version").and_then(|s| s.as_usize()),
+            Some(MODEL_SCHEMA_VERSION as usize)
+        );
+    }
+
+    #[test]
+    fn versionless_legacy_artifacts_still_load() {
+        // A PR 3-era artifact: same layout, no schema_version field.
+        let m = toy_model();
+        let mut j = m.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("schema_version");
+        }
+        let back = TrainedModel::from_json(&Json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(back.d.dims(), m.d.dims());
+        assert_eq!(back.d.data(), m.d.data(), "legacy artifacts round-trip bit-exactly");
+        assert_eq!(back.lambda, m.lambda);
+        assert_eq!(back.trace.len(), m.trace.len());
+    }
+
+    #[test]
+    fn artifacts_from_the_future_are_refused() {
+        let mut j = toy_model().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "schema_version".into(),
+                Json::Num((MODEL_SCHEMA_VERSION + 1) as f64),
+            );
+        }
+        let err = TrainedModel::from_json(&j).unwrap_err();
+        assert!(format!("{err}").contains("schema_version"));
     }
 
     #[test]

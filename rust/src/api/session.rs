@@ -40,14 +40,34 @@
 //! [`close`](Session::close). A long-lived many-tenant server can bound
 //! its worker-thread count with
 //! [`max_resident_pools(n)`](crate::api::DicodileBuilder::max_resident_pools):
-//! when a call would leave more than `n` pools resident, the
-//! least-recently-used ones are shut down. Eviction never interrupts a
-//! pool that another thread is actively driving (busy entries are
-//! skipped and collected on a later call), and is observable through
-//! [`pools_evicted`](Session::pools_evicted) and
+//! when a call would leave more than `n` pools resident, the costliest
+//! idle ones are shut down under an **age+size-aware policy** — each
+//! entry is scored `resident_bytes × idle_age` (cached dictionary
+//! spectra via `spectra_bytes()`, LRU-clock ticks since last use), and
+//! the highest-cost entries go first. With equal footprints the score
+//! reduces to least-recently-used; with unequal footprints a large
+//! idle pool is reclaimed before several small slightly-older ones,
+//! which is the fair trade for a memory-bounded server. Eviction never
+//! interrupts a pool that another thread is actively driving (busy
+//! entries are skipped and collected on a later call), and is
+//! observable through [`pools_evicted`](Session::pools_evicted) and
 //! [`evicted_pool_reports`](Session::evicted_pool_reports) (final
 //! `PoolReport`s with `evicted: true`). An evicted observation simply
 //! respawns cold on its next request.
+//!
+//! ## Admission control
+//!
+//! A serving front-end also needs back-pressure *before* a request
+//! touches the registry:
+//! [`max_inflight_requests(n)`](crate::api::DicodileBuilder::max_inflight_requests)
+//! caps concurrently admitted requests across all clones.
+//! [`try_admit`](Session::try_admit) either returns an
+//! [`AdmissionPermit`] (released on drop) or `None` when the session is
+//! at capacity — the HTTP layer turns that into a structured 429, so an
+//! overloaded server sheds load with a clean error instead of an
+//! unbounded queue of blocked worker threads. Unlimited by default;
+//! direct library calls (`encode` et al.) do not take permits
+//! themselves, callers opt in at their entry point.
 //!
 //! ## Shutdown semantics
 //!
@@ -165,6 +185,10 @@ struct Resident {
     slot: Mutex<Option<PoolCell>>,
     /// LRU clock tick of the most recent acquire.
     last_used: AtomicU64,
+    /// Resident footprint of the pool's cached dictionary spectra
+    /// (refreshed on every spawn / `SetDict`), readable without the
+    /// slot lock so eviction can score entries it cannot lock.
+    resident_bytes: AtomicUsize,
 }
 
 impl Resident {
@@ -209,6 +233,22 @@ struct SessionInner {
     pools_evicted: AtomicUsize,
     /// Final reports of pools shut down by the residency policy.
     evicted_reports: Mutex<Vec<PoolReport>>,
+    /// Requests currently holding an [`AdmissionPermit`].
+    inflight: AtomicUsize,
+    requests_admitted: AtomicUsize,
+    requests_rejected: AtomicUsize,
+}
+
+/// Proof of admission under the session's in-flight cap (see
+/// [`Session::try_admit`]). Dropping the permit releases the slot.
+pub struct AdmissionPermit {
+    inner: Arc<SessionInner>,
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        self.inner.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 /// A configured, shareable entry point with resident pools (see the
@@ -230,6 +270,9 @@ impl Session {
                 warm_starts: AtomicUsize::new(0),
                 pools_evicted: AtomicUsize::new(0),
                 evicted_reports: Mutex::new(Vec::new()),
+                inflight: AtomicUsize::new(0),
+                requests_admitted: AtomicUsize::new(0),
+                requests_rejected: AtomicUsize::new(0),
             }),
         }
     }
@@ -539,6 +582,59 @@ impl Session {
         }
     }
 
+    // ---- admission control ---------------------------------------------
+
+    /// Admit one request under the session's in-flight cap
+    /// ([`max_inflight_requests`](crate::api::DicodileBuilder::max_inflight_requests)):
+    /// returns a permit whose drop releases the slot, or `None` when
+    /// the cap is already saturated (the rejection is counted). With no
+    /// cap configured every request is admitted — the permit then only
+    /// feeds the [`inflight`](Session::inflight) gauge.
+    ///
+    /// The session's own methods do not take permits; a serving front
+    /// end calls this once per request *before* doing any work, so an
+    /// overloaded server sheds load with a clean error instead of
+    /// queueing without bound.
+    pub fn try_admit(&self) -> Option<AdmissionPermit> {
+        let cap = self.inner.cfg.max_inflight_requests;
+        let mut cur = self.inner.inflight.load(Ordering::Relaxed);
+        loop {
+            if let Some(cap) = cap {
+                if cur >= cap {
+                    self.inner.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            }
+            match self.inner.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.inner.requests_admitted.fetch_add(1, Ordering::Relaxed);
+        Some(AdmissionPermit { inner: self.inner.clone() })
+    }
+
+    /// Requests currently holding an admission permit.
+    pub fn inflight(&self) -> usize {
+        self.inner.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Requests admitted by [`try_admit`](Session::try_admit) over the
+    /// session's lifetime.
+    pub fn requests_admitted(&self) -> usize {
+        self.inner.requests_admitted.load(Ordering::Relaxed)
+    }
+
+    /// Requests turned away at the in-flight cap.
+    pub fn requests_rejected(&self) -> usize {
+        self.inner.requests_rejected.load(Ordering::Relaxed)
+    }
+
     // ---- residency introspection --------------------------------------
 
     /// Worker pools spawned over the session's lifetime (reused pools
@@ -554,8 +650,9 @@ impl Session {
         self.inner.warm_starts.load(Ordering::Relaxed)
     }
 
-    /// Pools shut down by the LRU residency policy
-    /// (`max_resident_pools`) over the session's lifetime.
+    /// Pools shut down by the residency policy (`max_resident_pools`,
+    /// cost-weighted bytes×idle-age scoring) over the session's
+    /// lifetime.
     pub fn pools_evicted(&self) -> usize {
         self.inner.pools_evicted.load(Ordering::Relaxed)
     }
@@ -637,6 +734,7 @@ impl SessionInner {
             geom: d_dims.to_vec(),
             slot: Mutex::new(None),
             last_used: AtomicU64::new(0),
+            resident_bytes: AtomicUsize::new(0),
         });
         e.touch(&self.clock);
         reg.push(e.clone());
@@ -672,6 +770,9 @@ impl SessionInner {
                     // already hold.
                     cell.pool.set_dict(Arc::new(build(entry.x.clone())));
                     cell.encode_key = None;
+                    entry
+                        .resident_bytes
+                        .store(cell.pool.problem().corr.spectra_bytes(), Ordering::Relaxed);
                 }
                 return true;
             }
@@ -683,6 +784,7 @@ impl SessionInner {
         let problem = Arc::new(build(entry.x.clone()));
         let pool = WorkerPool::spawn(problem, dcfg, None);
         self.pools_spawned.fetch_add(1, Ordering::Relaxed);
+        entry.resident_bytes.store(pool.problem().corr.spectra_bytes(), Ordering::Relaxed);
         *slot = Some(PoolCell { pool, encode_key: None });
         false
     }
@@ -695,15 +797,20 @@ impl SessionInner {
         }
     }
 
-    /// Evict least-recently-used pools until the registry respects
-    /// `max_resident_pools`. Victims come only from the over-cap LRU
-    /// prefix (the `len - cap` least-recently-used entries) — the
-    /// recently-used pools the cap is meant to keep are never sacrificed
-    /// just because an older one is busy. Busy victims (another thread
-    /// holds the slot) are skipped — eviction never blocks on, or
-    /// interrupts, an in-flight call; if the whole prefix is busy the
-    /// registry stays transiently over and a later call retries.
-    /// Called only while holding no slot lock.
+    /// Evict pools until the registry respects `max_resident_pools`,
+    /// under the **cost-weighted policy**: each entry is scored
+    /// `resident_bytes × idle_age` (cached dictionary spectra, LRU-clock
+    /// ticks since last use — both readable without the slot lock) and
+    /// the highest-cost entries are reclaimed first. Equal footprints
+    /// reduce the score to pure LRU; unequal footprints reclaim a large
+    /// idle pool before several small slightly-older ones. Victims come
+    /// only from the over-cap cost prefix (the `len - cap` costliest
+    /// entries) — the cheap recently-used pools the cap is meant to
+    /// keep are never sacrificed just because a costlier one is busy.
+    /// Busy victims (another thread holds the slot) are skipped —
+    /// eviction never blocks on, or interrupts, an in-flight call; if
+    /// the whole prefix is busy the registry stays transiently over and
+    /// a later call retries. Called only while holding no slot lock.
     fn enforce_cap(&self) {
         let cap = match self.cfg.max_resident_pools {
             Some(cap) => cap,
@@ -719,8 +826,20 @@ impl SessionInner {
                     return;
                 }
                 let excess = reg.len() - cap;
+                let now = self.clock.load(Ordering::Relaxed);
+                // (cost, idle) per entry; idle alone breaks byte ties
+                // so the degenerate equal-size case stays exactly LRU.
+                let score = |e: &Resident| {
+                    let idle =
+                        now.saturating_sub(e.last_used.load(Ordering::Relaxed)) + 1;
+                    let bytes = e.resident_bytes.load(Ordering::Relaxed).max(1) as u128;
+                    (bytes * idle as u128, idle)
+                };
                 let mut order: Vec<usize> = (0..reg.len()).collect();
-                order.sort_by_key(|&i| reg[i].last_used.load(Ordering::Relaxed));
+                order.sort_by_key(|&i| {
+                    let (cost, idle) = score(&reg[i]);
+                    (std::cmp::Reverse(cost), std::cmp::Reverse(idle))
+                });
                 let mut found: Option<(usize, Option<PoolCell>)> = None;
                 for &i in order.iter().take(excess) {
                     match reg[i].slot.try_lock() {
@@ -867,6 +986,61 @@ mod tests {
         s.encode(&m8, &w8.x).unwrap();
         assert_eq!(s.pools_spawned(), 2);
         assert_eq!(s.warm_starts(), 1);
+    }
+
+    #[test]
+    fn admission_cap_rejects_and_releases() {
+        let s = Dicodile::builder().sequential().max_inflight_requests(2).build();
+        let p1 = s.try_admit().expect("first admit under cap 2");
+        let _p2 = s.try_admit().expect("second admit under cap 2");
+        assert_eq!(s.inflight(), 2);
+        assert!(s.try_admit().is_none(), "third request is over the cap");
+        assert_eq!(s.requests_rejected(), 1);
+        drop(p1);
+        assert_eq!(s.inflight(), 1);
+        let _p3 = s.try_admit().expect("a released slot is reusable");
+        assert_eq!(s.requests_admitted(), 3);
+    }
+
+    #[test]
+    fn admission_is_unbounded_by_default() {
+        let s = Dicodile::builder().sequential().build();
+        let permits: Vec<_> = (0..8).map(|_| s.try_admit().expect("no cap")).collect();
+        assert_eq!(s.inflight(), 8);
+        drop(permits);
+        assert_eq!(s.inflight(), 0);
+        assert_eq!(s.requests_admitted(), 8);
+        assert_eq!(s.requests_rejected(), 0);
+    }
+
+    #[test]
+    fn eviction_is_size_aware_not_pure_lru() {
+        // Small observation first, then a much larger one, cap 1. Pure
+        // LRU would evict the small idle pool; the bytes×idle-age score
+        // reclaims the large just-used one instead (its spectra
+        // footprint dwarfs the small pool's age advantage).
+        let small = SyntheticConfig::signal_1d(300, 2, 8).generate(8);
+        let big = SyntheticConfig::signal_1d(3000, 2, 8).generate(9);
+        let model = TrainedModel::from_dictionary(small.d_true.clone(), 0.1);
+        let s = Dicodile::builder()
+            .tol(1e-4)
+            .seed(8)
+            .dicodile(1)
+            .max_resident_pools(1)
+            .build();
+        s.encode(&model, &small.x).unwrap();
+        s.encode(&model, &big.x).unwrap();
+        assert_eq!(s.pools_evicted(), 1);
+        let kept = s.pool_reports();
+        let evicted = s.evicted_pool_reports();
+        assert_eq!(kept.len(), 1);
+        assert_eq!(evicted.len(), 1);
+        assert!(
+            evicted[0].spectra_bytes > kept[0].spectra_bytes,
+            "the larger pool must be the victim (evicted {} bytes, kept {})",
+            evicted[0].spectra_bytes,
+            kept[0].spectra_bytes
+        );
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub fn to_json(result: &CdlResult) -> Json {
                     ("segments_rescanned", Json::Num(p.stats.segments_rescanned as f64)),
                     ("dz_cache_filled", Json::Num(p.stats.dz_cache_filled as f64)),
                     ("spectra_bytes", Json::Num(p.spectra_bytes as f64)),
+                    // Residency outcome: true iff the pool was shut
+                    // down by the session's cost-weighted eviction
+                    // policy rather than surviving to close().
+                    ("evicted", Json::Bool(p.evicted)),
                 ]),
                 None => Json::Null,
             },
@@ -177,6 +181,7 @@ mod tests {
         assert_eq!(pool.get("n_workers").unwrap().as_f64(), Some(2.0));
         assert_eq!(pool.get("transport").unwrap().as_str(), Some("channel"));
         assert_eq!(pool.get("spectra_bytes").unwrap().as_f64(), Some(1024.0));
+        assert_eq!(pool.get("evicted"), Some(&Json::Bool(false)));
     }
 
     #[test]

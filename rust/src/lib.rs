@@ -50,8 +50,22 @@
 //! interior synchronization (an `RwLock` registry of per-observation
 //! `Mutex` slots), so every method takes `&self`, clones of one
 //! session serve concurrent encode requests on independent pools, a
-//! configurable LRU policy bounds residency for many-tenant servers,
-//! and corpus fits drive their per-signal solve loops interleaved.
+//! cost-weighted residency policy (`resident spectra bytes × idle
+//! age`, reducing to LRU for equal footprints) bounds many-tenant
+//! servers, admission permits ([`api::Session::try_admit`]) bound
+//! in-flight requests, and corpus fits drive their per-signal solve
+//! loops interleaved. [`serve`] puts that facade on the network:
+//! `dicodile serve` is a dependency-free HTTP/1.1 front-end (std
+//! listeners + a fixed worker pool, TCP or Unix-domain) routing
+//! `POST /v1/encode` / `/v1/reconstruct` / `/v1/denoise` and
+//! `GET /v1/models` / `/v1/status` onto one shared session, with a
+//! **versioned on-disk model registry**
+//! (`<root>/<name>/<version>/model.json`, resolved as `name@version`
+//! or bare-name → latest, warm-loaded once and generation-stamped so a
+//! re-publish is picked up without restart) and structured JSON errors
+//! for overload (429) and bad input — tensors cross the wire with
+//! shortest-roundtrip decimals, so a served encode is bit-identical to
+//! its in-process counterpart.
 //! Batch-heavy algebra can optionally be offloaded to AOT-compiled
 //! JAX/Pallas artifacts executed through the PJRT CPU client
 //! ([`runtime`], behind the `pjrt` feature), with native fallbacks for
@@ -106,6 +120,7 @@ pub mod cdl;
 pub mod admm;
 pub mod fft;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -5,16 +5,26 @@
 //!               `--model path.json` encodes against a saved trained model
 //!   learn       full CDL on a synthetic / starfield / texture workload;
 //!               `--save-model path.json` persists the trained model
+//!   serve       HTTP/1.1 serving front-end: route /v1/encode,
+//!               /v1/reconstruct, /v1/denoise, /v1/models, /v1/status
+//!               onto one shared session backed by a versioned model
+//!               registry (--listen host:port or a Unix socket path)
 //!   serve-bench concurrent-serving benchmark: N clients encode N distinct
-//!               observations through clones of ONE shared session
+//!               observations through clones of ONE shared session;
+//!               `--http <addr>` load-tests the real HTTP transport and
+//!               writes BENCH_serve.json
 //!   worker      serve one pool worker over a Unix-domain or TCP socket
 //!               (the multi-process end of the transport seam)
-//!   info        print artifact manifest + build information
+//!   info        print artifact manifest + build information;
+//!               `--registry <root>` lists published models instead
 //!   gen         generate a workload image and save it (.ndt / .pgm)
 //!
 //! Run `dicodile <subcommand> --help` for options.
 
+use std::sync::Arc;
+
 use dicodile::api::{Dicodile, DicodileBuilder, TrainedModel};
+use dicodile::bench::Timing;
 use dicodile::dicod::transport::{serve_worker_listen, TransportKind};
 use dicodile::cdl::init::InitStrategy;
 use dicodile::cdl::report;
@@ -24,8 +34,11 @@ use dicodile::data::starfield::StarfieldConfig;
 use dicodile::data::synthetic::SyntheticConfig;
 use dicodile::data::texture::TextureConfig;
 use dicodile::runtime::Manifest;
+use dicodile::serve::{self, HttpClient, HttpConfig, ModelRegistry, ServeState};
 use dicodile::tensor::NdTensor;
 use dicodile::util::cli::Parser;
+use dicodile::util::json::Json;
+use dicodile::util::rng::Pcg64;
 
 fn main() {
     let mut args = std::env::args().skip(1);
@@ -34,6 +47,7 @@ fn main() {
     let code = match sub.as_str() {
         "csc" => cmd_csc(rest),
         "learn" => cmd_learn(rest),
+        "serve" => cmd_serve(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "worker" => cmd_worker(rest),
         "info" => cmd_info(rest),
@@ -54,17 +68,23 @@ fn main() {
 fn print_help() {
     println!(
         "dicodile — Distributed Convolutional Dictionary Learning\n\n\
-         USAGE: dicodile <csc|learn|serve-bench|worker|info|gen> [options]\n\n\
+         USAGE: dicodile <csc|learn|serve|serve-bench|worker|info|gen> [options]\n\n\
          csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod;\n\
                 --model loads a saved trained model)\n\
          learn  learn a dictionary (workloads: synthetic, starfield, texture;\n\
                 --save-model persists the trained model)\n\
+         serve  HTTP front-end on --listen <host:port|uds-path>: POST /v1/encode,\n\
+                /v1/reconstruct, /v1/denoise + GET /v1/models, /v1/status over one\n\
+                shared session and a versioned model registry (--registry <root>)\n\
          serve-bench  concurrent encode serving: --clients N threads share one session\n\
-                (--model serves a saved model; --max-resident caps pool residency;\n\
-                --transport channel|socket picks the worker-grid wire)\n\
+                (--model serves a saved model of any geometry; --max-resident caps\n\
+                pool residency; --transport channel|socket picks the worker-grid\n\
+                wire; --http <addr> drives the real HTTP transport and writes\n\
+                BENCH_serve.json)\n\
          worker hold one pool worker on --listen <path|host:port> and serve a\n\
                 remote coordinator over length-prefixed socket frames\n\
-         info   show artifact manifest and build info\n\
+         info   show artifact manifest and build info (--registry <root> lists\n\
+                published models: names, versions, dims, size)\n\
          gen    generate a workload and save it to disk"
     );
 }
@@ -259,20 +279,118 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
     }
 }
 
+/// `dicodile serve`: bind the HTTP front-end and serve until killed.
+/// One shared session (admission-capped, cost-weighted eviction) plus
+/// a versioned model registry; see `dicodile::serve` for the routes.
+fn cmd_serve(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile serve", "HTTP serving front-end over one shared session")
+        .opt("listen", None, "bind address: host:port for TCP (port 0 = ephemeral), anything else a Unix socket path")
+        .opt("registry", Some("registry"), "model registry root (<root>/<name>/<version>/model.json)")
+        .opt("workers", Some("2"), "grid workers per resident pool")
+        .opt("http-threads", Some("4"), "HTTP worker threads")
+        .opt("tol", Some("1e-4"), "encode stopping tolerance")
+        .opt("max-resident", Some("8"), "max resident pools, cost-weighted eviction beyond (0 = unbounded)")
+        .opt("max-inflight", Some("32"), "max concurrently admitted requests; over-cap gets a 429 (0 = unlimited)")
+        .opt("seed", Some("0"), "rng seed")
+        .opt("transport", Some("channel"), "worker-grid transport: channel|socket");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let addr = match a.get("listen") {
+        Some(addr) => addr.clone(),
+        None => {
+            eprintln!("dicodile serve: --listen <host:port|uds-path> is required");
+            return 2;
+        }
+    };
+    let transport: TransportKind = match a.get_str("transport").parse() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut builder = Dicodile::builder()
+        .tol(a.get_f64("tol"))
+        .seed(a.get_u64("seed"))
+        .dicodile(a.get_usize("workers").max(1))
+        .transport(transport);
+    match a.get_usize("max-resident") {
+        0 => {}
+        n => builder = builder.max_resident_pools(n),
+    }
+    match a.get_usize("max-inflight") {
+        0 => {}
+        n => builder = builder.max_inflight_requests(n),
+    }
+    let registry_root = a.get_str("registry");
+    let state = Arc::new(ServeState::new(builder.build(), ModelRegistry::open(&registry_root)));
+    let bound = match serve::Bound::bind(&addr) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("dicodile serve: {e}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "dicodile serve: listening on {} (registry {registry_root}, {} http threads)",
+        bound.addr(),
+        a.get_usize("http-threads").max(1)
+    );
+    let cfg = HttpConfig { threads: a.get_usize("http-threads").max(1), ..Default::default() };
+    let handle = serve::spawn(bound, state, &cfg);
+    handle.join();
+    0
+}
+
+/// Synthetic observation matched to a model's *actual* geometry. 1-D
+/// single-channel models keep the paper's generator; any other rank or
+/// channel count gets a sparse random activation rendered through the
+/// model's own dictionary plus mild noise — so the serving benches
+/// accept whatever `learn` produced instead of rejecting non-1-D
+/// models. `t` is the total signal budget; d-dimensional observations
+/// use ~t^(1/d) per spatial axis (never below two atom lengths).
+fn observation_for_model(model: &TrainedModel, t: usize, seed: u64) -> NdTensor {
+    let l = model.atom_dims().to_vec();
+    if model.n_channels() == 1 && l.len() == 1 {
+        return SyntheticConfig::paper_1d(t, model.n_atoms(), l[0]).generate(seed).x;
+    }
+    let mut rng = Pcg64::seeded(seed);
+    let per = (t as f64).powf(1.0 / l.len() as f64).round() as usize;
+    let spatial: Vec<usize> = l.iter().map(|&li| per.max(2 * li)).collect();
+    let mut zdims = vec![model.n_atoms()];
+    zdims.extend(spatial.iter().zip(&l).map(|(s, li)| s - li + 1));
+    let zn: usize = zdims.iter().product();
+    let z = NdTensor::from_vec(&zdims, rng.bernoulli_gaussian_vec(zn, 0.02, 0.0, 1.0));
+    let mut x = dicodile::conv::reconstruct(&z, &model.d);
+    let sigma = 0.01 * x.norm2() / (x.len() as f64).sqrt().max(1.0);
+    for v in x.data_mut() {
+        *v += sigma * rng.normal();
+    }
+    x
+}
+
 /// Concurrent-serving benchmark: one shared `Session` (the registry of
 /// resident pools lives behind interior synchronization), cloned into
 /// `--clients` threads that each encode their own distinct observation
 /// `--requests` times. The sequential baseline issues the exact same
 /// requests one at a time through an identically-configured session, so
 /// the reported speedup isolates the concurrency of the serving layer.
+/// With `--http <addr>` the same workload is instead driven over the
+/// real HTTP transport (an in-process server, real sockets, one
+/// keep-alive client connection per thread) and the per-request
+/// latencies plus residency/admission counters land in
+/// BENCH_serve.json.
 fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
     let parser = Parser::new("dicodile serve-bench", "concurrent encode serving benchmark")
-        .opt("model", None, "trained model JSON (from `learn --save-model`); must be 1-D single-channel. Without it a small model is trained in-process")
+        .opt("model", None, "trained model JSON (from `learn --save-model`), any rank/channel count — the workload matches its geometry. Without it a small model is trained in-process")
+        .opt("http", None, "load-test the real HTTP transport at this address (host:port, port 0 = ephemeral, or a uds path); results land in BENCH_serve.json")
         .opt("clients", Some("4"), "concurrent clients, one distinct observation each")
         .opt("requests", Some("3"), "encode requests per client")
         .opt("workers", Some("2"), "grid workers per resident pool")
-        .opt("t", Some("4000"), "1-D observation length")
-        .opt("max-resident", Some("0"), "max resident pools, LRU-evicted beyond (0 = unbounded)")
+        .opt("t", Some("4000"), "observation length budget (d-dimensional models use ~t^(1/d) per axis)")
+        .opt("max-resident", Some("0"), "max resident pools, cost-weighted eviction beyond (0 = unbounded)")
         .opt("reg", Some("0.1"), "lambda fraction for the in-process model")
         .opt("seed", Some("0"), "rng seed")
         .opt("transport", Some("channel"), "worker-grid transport: channel|socket");
@@ -323,19 +441,25 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
             }
         }
     };
-    if model.n_channels() != 1 || model.atom_dims().len() != 1 {
-        eprintln!(
-            "model dictionary {:?} is not 1-D single-channel; serve-bench generates 1-D workloads",
-            model.d.dims()
-        );
-        return 2;
-    }
-
     // One distinct observation per client (distinct pools -> the
-    // requests are independent and may run truly in parallel).
+    // requests are independent and may run truly in parallel), shaped
+    // to whatever geometry the model actually has.
     let xs: Vec<NdTensor> = (0..clients)
-        .map(|c| SyntheticConfig::paper_1d(t, k, model.atom_dims()[0]).generate(seed + 100 + c as u64).x)
+        .map(|c| observation_for_model(&model, t, seed + 100 + c as u64))
         .collect();
+
+    if let Some(addr) = a.get("http") {
+        return serve_bench_http(
+            addr,
+            &model,
+            &xs,
+            requests,
+            workers,
+            transport,
+            a.get_usize("max-resident"),
+            seed,
+        );
+    }
 
     let mk_session = || {
         let b = Dicodile::builder().tol(1e-4).seed(seed).dicodile(workers).transport(transport);
@@ -409,6 +533,175 @@ fn cmd_serve_bench(tokens: Vec<String>) -> i32 {
     0
 }
 
+/// `serve-bench --http`: stand the real server up in-process (real
+/// sockets, the full router/admission path), publish the model into a
+/// throwaway registry, then drive it with one keep-alive client
+/// connection per thread. Per-request wall-clock latencies and the
+/// residency / admission / registry counters are written to
+/// BENCH_serve.json in the current directory.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_http(
+    addr: &str,
+    model: &TrainedModel,
+    xs: &[NdTensor],
+    requests: usize,
+    workers: usize,
+    transport: TransportKind,
+    max_resident: usize,
+    seed: u64,
+) -> i32 {
+    let root = std::env::temp_dir().join(format!("dicodile-serve-bench-{}", std::process::id()));
+    let registry = ModelRegistry::open(&root);
+    if let Err(e) = registry.publish("bench", "1", model) {
+        eprintln!("serve-bench --http: cannot publish model: {e}");
+        return 1;
+    }
+    let mut builder =
+        Dicodile::builder().tol(1e-4).seed(seed).dicodile(workers).transport(transport);
+    if max_resident > 0 {
+        builder = builder.max_resident_pools(max_resident);
+    }
+    let state = Arc::new(ServeState::new(builder.build(), registry));
+    let bound = match serve::Bound::bind(addr) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("serve-bench --http: cannot bind {addr}: {e}");
+            return 1;
+        }
+    };
+    let actual = bound.addr().to_string();
+    let cfg = HttpConfig { threads: xs.len().max(2), ..Default::default() };
+    let handle = serve::spawn(bound, Arc::clone(&state), &cfg);
+
+    let clients = xs.len();
+    let t0 = std::time::Instant::now();
+    let samples: Option<Vec<Vec<f64>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let actual = &actual;
+                scope.spawn(move || -> Option<Vec<f64>> {
+                    let mut client = match HttpClient::connect(actual) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            eprintln!("serve-bench --http: connect failed: {e}");
+                            return None;
+                        }
+                    };
+                    let body = Json::obj(vec![
+                        ("model", Json::str("bench@1")),
+                        ("x", serve::tensor_to_json(x)),
+                    ])
+                    .dumps();
+                    let mut lat = Vec::with_capacity(requests);
+                    for _ in 0..requests {
+                        let r0 = std::time::Instant::now();
+                        match client.request("POST", "/v1/encode", Some(&body)) {
+                            Ok((200, _)) => lat.push(r0.elapsed().as_secs_f64()),
+                            Ok((status, resp)) => {
+                                eprintln!("serve-bench --http: HTTP {status}: {resp}");
+                                return None;
+                            }
+                            Err(e) => {
+                                eprintln!("serve-bench --http: request failed: {e}");
+                                return None;
+                            }
+                        }
+                    }
+                    Some(lat)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let per_request: Vec<f64> = match samples {
+        Some(s) => s.into_iter().flatten().collect(),
+        None => {
+            handle.shutdown();
+            let _ = std::fs::remove_dir_all(&root);
+            return 1;
+        }
+    };
+    let timing = Timing::from_samples(per_request.clone());
+    let session = &state.session;
+    let record = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("mode", Json::str("http")),
+        ("addr", Json::str(&actual)),
+        ("clients", Json::Num(clients as f64)),
+        ("requests_per_client", Json::Num(requests as f64)),
+        ("workers_per_pool", Json::Num(workers as f64)),
+        ("transport", Json::str(transport.name())),
+        ("wall_s", Json::Num(wall_s)),
+        (
+            "latency_s",
+            Json::obj(vec![
+                ("median", Json::Num(timing.median)),
+                ("mean", Json::Num(timing.mean)),
+                ("min", Json::Num(timing.min)),
+                ("max", Json::Num(timing.max)),
+                ("p10", Json::Num(timing.p10)),
+                ("p90", Json::Num(timing.p90)),
+            ]),
+        ),
+        ("per_request_s", Json::Arr(per_request.iter().map(|&s| Json::Num(s)).collect())),
+        (
+            "session",
+            Json::obj(vec![
+                ("pools_spawned", Json::Num(session.pools_spawned() as f64)),
+                ("warm_starts", Json::Num(session.warm_starts() as f64)),
+                ("pools_evicted", Json::Num(session.pools_evicted() as f64)),
+                ("resident", Json::Num(session.n_resident_pools() as f64)),
+                ("requests_admitted", Json::Num(session.requests_admitted() as f64)),
+                ("requests_rejected", Json::Num(session.requests_rejected() as f64)),
+            ]),
+        ),
+        (
+            "registry",
+            Json::obj(vec![
+                ("disk_loads", Json::Num(state.registry.disk_loads() as f64)),
+                ("cached_models", Json::Num(state.registry.cached_models() as f64)),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj(vec![
+                ("http_served", Json::Num(state.http_served() as f64)),
+                ("http_errors", Json::Num(state.http_errors() as f64)),
+            ]),
+        ),
+    ]);
+    if let Err(e) = std::fs::write("BENCH_serve.json", record.dumps()) {
+        eprintln!("serve-bench --http: cannot write BENCH_serve.json: {e}");
+    }
+    println!(
+        "serve-bench --http: addr={actual} clients={clients} requests={requests} \
+         workers/pool={workers} transport={}",
+        transport.name()
+    );
+    println!(
+        "  wall {wall_s:.3}s  latency median {:.4}s mean {:.4}s p90 {:.4}s",
+        timing.median, timing.mean, timing.p90
+    );
+    println!(
+        "  session: pools_spawned={} warm_starts={} pools_evicted={} resident={} \
+         admitted={} rejected={}",
+        session.pools_spawned(),
+        session.warm_starts(),
+        session.pools_evicted(),
+        session.n_resident_pools(),
+        session.requests_admitted(),
+        session.requests_rejected()
+    );
+    println!("  registry: disk_loads={}  server: served={} errors={}", state.registry.disk_loads(), state.http_served(), state.http_errors());
+    println!("  wrote BENCH_serve.json");
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+    0
+}
+
 /// Serve ONE pool worker over a real socket: bind `--listen`, accept a
 /// single coordinator connection, and run the standard worker event
 /// loop over length-prefixed frames until Shutdown. An address
@@ -444,7 +737,39 @@ fn cmd_worker(tokens: Vec<String>) -> i32 {
     }
 }
 
-fn cmd_info(_tokens: Vec<String>) -> i32 {
+fn cmd_info(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile info", "build / artifact / registry information")
+        .opt("registry", None, "list the models published under this registry root instead of the artifact manifest");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    if let Some(root) = a.get("registry") {
+        let registry = ModelRegistry::open(root);
+        return match registry.list() {
+            Ok(entries) if entries.is_empty() => {
+                println!("registry {root}: no published models");
+                0
+            }
+            Ok(entries) => {
+                println!("registry {root}: {} model artifact(s)", entries.len());
+                for e in &entries {
+                    println!(
+                        "  {:24} dict={:?} {:>9} bytes  {}",
+                        format!("{}@{}", e.name, e.version),
+                        e.dims,
+                        e.bytes,
+                        if e.cached { "(warm)" } else { "" }
+                    );
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("registry {root}: {e}");
+                1
+            }
+        };
+    }
     println!("dicodile {} (rust {} build)", env!("CARGO_PKG_VERSION"), if cfg!(debug_assertions) { "debug" } else { "release" });
     let dir = Manifest::default_dir();
     match Manifest::load(&dir) {

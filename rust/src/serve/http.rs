@@ -1,0 +1,616 @@
+//! Dependency-free HTTP/1.1 transport for `dicodile serve`.
+//!
+//! The same philosophy as the worker-grid socket transport: std
+//! `TcpListener` / `UnixListener`, blocking I/O, explicit framing — no
+//! async runtime, no HTTP crate. The server implements the HTTP/1.1
+//! subset a JSON RPC surface needs:
+//!
+//! - request line + headers + `Content-Length` bodies (chunked
+//!   transfer encoding is rejected with 501),
+//! - persistent connections (HTTP/1.1 keep-alive by default,
+//!   `Connection: close` honored; HTTP/1.0 closes per request),
+//! - bounded inputs: header lines and bodies larger than
+//!   [`MAX_BODY_LEN`] / [`MAX_HEADER_LEN`] are refused, mirroring the
+//!   wire codec's `MAX_FRAME_LEN` stance (a malformed or hostile peer
+//!   gets an error, never an unbounded allocation).
+//!
+//! Concurrency is a **fixed-size worker thread pool**: one acceptor
+//! thread pushes connections onto a queue, `threads` workers drain it,
+//! each running the read → route → respond loop for its connection
+//! until the peer closes or times out. Back-pressure past the pool is
+//! the router's admission control (429), not an unbounded queue of
+//! threads.
+//!
+//! [`HttpClient`] is the matching minimal client, used by the loopback
+//! tests and `serve-bench --http` so the full wire — request framing,
+//! JSON bodies, keep-alive — is exercised end to end. Bind addresses
+//! follow the worker-transport convention: anything containing `:` is
+//! a TCP `host:port`, anything else a Unix-domain socket path.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::serve::router::route;
+use crate::serve::state::ServeState;
+
+/// Largest accepted request body (matches the spirit of the worker
+/// transport's frame cap: a corrupt length never allocates the moon).
+pub const MAX_BODY_LEN: usize = 1 << 30;
+/// Largest accepted request line / header line.
+pub const MAX_HEADER_LEN: usize = 64 << 10;
+/// Pending-connection queue depth between the acceptor and the pool.
+const ACCEPT_BACKLOG: usize = 128;
+
+// ---------------------------------------------------------------------------
+// connection plumbing
+// ---------------------------------------------------------------------------
+
+/// One accepted (or dialed) connection, TCP or Unix-domain.
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Dial `addr` (`host:port` TCP, otherwise a Unix-domain socket path).
+pub fn connect(addr: &str) -> std::io::Result<Conn> {
+    if addr.contains(':') {
+        let s = TcpStream::connect(addr)?;
+        let _ = s.set_nodelay(true);
+        Ok(Conn::Tcp(s))
+    } else {
+        #[cfg(unix)]
+        {
+            std::os::unix::net::UnixStream::connect(addr).map(Conn::Unix)
+        }
+        #[cfg(not(unix))]
+        {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                format!("unix-domain path {addr:?} unsupported on this platform"),
+            ))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request / response framing
+// ---------------------------------------------------------------------------
+
+/// A parsed request.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// Request body as UTF-8 (the JSON surface).
+    pub fn body_str(&self) -> Result<&str, std::str::Utf8Error> {
+        std::str::from_utf8(&self.body)
+    }
+}
+
+/// A response ready to frame: status code plus a JSON body.
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: crate::util::json::Json) -> Response {
+        Response { status, body: body.dumps() }
+    }
+
+    /// Structured error payload:
+    /// `{"error":{"code":N,"kind":"...","message":"..."}}`.
+    pub fn error(status: u16, kind: &str, message: &str) -> Response {
+        use crate::util::json::Json;
+        Response::json(
+            status,
+            Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::Num(status as f64)),
+                    ("kind", Json::str(kind)),
+                    ("message", Json::str(message)),
+                ]),
+            )]),
+        )
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Error",
+    }
+}
+
+/// Frame and write one response.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Why a request could not be parsed (maps to a response + close).
+enum ReadError {
+    /// Clean EOF at a request boundary, or an idle keep-alive timeout —
+    /// close silently.
+    Closed,
+    /// Protocol violation: respond with this status/message, then close.
+    Bad(u16, String),
+}
+
+fn read_line_bounded(r: &mut impl BufRead) -> Result<String, ReadError> {
+    let mut line = String::new();
+    loop {
+        let avail = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(ReadError::Closed)
+            }
+            Err(_) => return Err(ReadError::Closed),
+        };
+        if avail.is_empty() {
+            // EOF: clean only when nothing of this request was read yet.
+            return if line.is_empty() {
+                Err(ReadError::Closed)
+            } else {
+                Err(ReadError::Bad(400, "truncated request".into()))
+            };
+        }
+        let nl = avail.iter().position(|&b| b == b'\n');
+        let take = nl.map(|i| i + 1).unwrap_or(avail.len());
+        line.push_str(&String::from_utf8_lossy(&avail[..take]));
+        r.consume(take);
+        if nl.is_some() {
+            while line.ends_with('\n') || line.ends_with('\r') {
+                line.pop();
+            }
+            return Ok(line);
+        }
+        if line.len() > MAX_HEADER_LEN {
+            return Err(ReadError::Bad(413, "header line too long".into()));
+        }
+    }
+}
+
+/// Read one request off the connection.
+fn read_request(r: &mut BufReader<Conn>) -> Result<Request, ReadError> {
+    let start = read_line_bounded(r)?;
+    let mut parts = start.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let proto = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !proto.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(400, format!("malformed request line {start:?}")));
+    }
+    let mut keep_alive = proto == "HTTP/1.1";
+    let mut content_length: usize = 0;
+    loop {
+        let line = read_line_bounded(r)?;
+        if line.is_empty() {
+            break;
+        }
+        let (key, value) = match line.split_once(':') {
+            Some((k, v)) => (k.trim().to_ascii_lowercase(), v.trim().to_string()),
+            None => return Err(ReadError::Bad(400, format!("malformed header {line:?}"))),
+        };
+        match key.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| ReadError::Bad(400, format!("bad content-length {value:?}")))?;
+                if content_length > MAX_BODY_LEN {
+                    return Err(ReadError::Bad(413, format!("body of {content_length} bytes")));
+                }
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                if value.to_ascii_lowercase().contains("chunked") {
+                    return Err(ReadError::Bad(501, "chunked bodies unsupported".into()));
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|_| ReadError::Bad(400, "truncated body".into()))?;
+    Ok(Request { method, path, body, keep_alive })
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Worker threads draining the accepted-connection queue.
+    pub threads: usize,
+    /// Per-read timeout; an idle keep-alive connection past it is
+    /// closed so it cannot pin a pool worker forever.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { threads: 4, read_timeout: Some(Duration::from_secs(30)) }
+    }
+}
+
+enum Acceptor {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener, String),
+}
+
+/// A bound-but-not-yet-serving listener (bind errors surface before
+/// threads spawn; `addr()` reports the concrete address, which matters
+/// for `host:0` ephemeral-port binds).
+pub struct Bound {
+    acceptor: Acceptor,
+    addr: String,
+}
+
+impl Bound {
+    /// Bind `addr`: `host:port` is TCP (port 0 picks an ephemeral
+    /// port), anything else a Unix-domain socket path (a stale socket
+    /// file is replaced, like the worker transport).
+    pub fn bind(addr: &str) -> anyhow::Result<Bound> {
+        if addr.contains(':') {
+            let listener = TcpListener::bind(addr)
+                .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+            let actual = listener
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| addr.to_string());
+            Ok(Bound { acceptor: Acceptor::Tcp(listener), addr: actual })
+        } else {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(addr);
+                let listener = std::os::unix::net::UnixListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+                Ok(Bound {
+                    acceptor: Acceptor::Unix(listener, addr.to_string()),
+                    addr: addr.to_string(),
+                })
+            }
+            #[cfg(not(unix))]
+            {
+                anyhow::bail!("unix-domain path {addr:?} unsupported on this platform; use host:port")
+            }
+        }
+    }
+
+    /// The concrete bound address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        match &self.acceptor {
+            Acceptor::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Acceptor::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+
+    fn uds_path(&self) -> Option<String> {
+        match &self.acceptor {
+            Acceptor::Tcp(_) => None,
+            #[cfg(unix)]
+            Acceptor::Unix(_, p) => Some(p.clone()),
+        }
+    }
+}
+
+/// A running server: acceptor thread + fixed worker pool. Dropping the
+/// handle shuts the server down (tests); long-running callers use
+/// [`join`](ServerHandle::join) (the CLI) or an explicit
+/// [`shutdown`](ServerHandle::shutdown).
+pub struct ServerHandle {
+    addr: String,
+    uds_path: Option<String>,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Spawn the serving threads over a bound listener.
+pub fn spawn(bound: Bound, state: Arc<ServeState>, cfg: &HttpConfig) -> ServerHandle {
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = bound.addr().to_string();
+    let uds_path = bound.uds_path();
+    let read_timeout = cfg.read_timeout;
+    let (tx, rx): (SyncSender<Conn>, Receiver<Conn>) = sync_channel(ACCEPT_BACKLOG);
+    let rx = Arc::new(Mutex::new(rx));
+
+    let workers: Vec<JoinHandle<()>> = (0..cfg.threads.max(1))
+        .map(|_| {
+            let rx = Arc::clone(&rx);
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || loop {
+                // Take the next connection; the channel closing (sender
+                // dropped by the acceptor at shutdown) ends the worker.
+                let conn = match rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                let _ = conn.set_read_timeout(read_timeout);
+                handle_connection(conn, &state);
+            })
+        })
+        .collect();
+
+    let acceptor = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            loop {
+                match bound.accept() {
+                    Ok(conn) => {
+                        if stop.load(Ordering::Acquire) {
+                            return; // drops tx -> workers drain and exit
+                        }
+                        // Blocks when the backlog is full: accepting
+                        // slows instead of queueing without bound.
+                        if tx.send(conn).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        // Transient accept error; keep serving.
+                    }
+                }
+            }
+        })
+    };
+
+    ServerHandle { addr, uds_path, stop, acceptor: Some(acceptor), workers }
+}
+
+impl ServerHandle {
+    /// The concrete bound address (resolved port for `host:0`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting, drain queued connections, join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Serve until the acceptor thread exits (the foreground CLI path).
+    pub fn join(mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.acceptor.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::Release);
+        // Unblock the acceptor with one throwaway connection.
+        let _ = connect(&self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(p) = self.uds_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Serve one connection: read → route → respond until close.
+fn handle_connection(conn: Conn, state: &Arc<ServeState>) {
+    let reader_half = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_half);
+    let mut writer = conn;
+    loop {
+        match read_request(&mut reader) {
+            Ok(req) => {
+                let keep = req.keep_alive;
+                let resp = route(state, &req);
+                state.record(resp.status);
+                if write_response(&mut writer, resp.status, &resp.body, keep).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+            Err(ReadError::Closed) => return,
+            Err(ReadError::Bad(status, msg)) => {
+                state.record(status);
+                let body = Response::error(status, "bad_request", &msg).body;
+                let _ = write_response(&mut writer, status, &body, false);
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// Minimal keep-alive HTTP/1.1 client for loopback tests and
+/// `serve-bench --http`: one connection, sequential requests.
+pub struct HttpClient {
+    reader: BufReader<Conn>,
+    writer: Conn,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> std::io::Result<HttpClient> {
+        let conn = connect(addr)?;
+        let reader_half = conn.try_clone()?;
+        Ok(HttpClient { reader: BufReader::new(reader_half), writer: conn })
+    }
+
+    /// Issue one request; returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: dicodile\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes())?;
+        self.writer.write_all(body.as_bytes())?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> std::io::Result<(u16, String)> {
+        let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        let mut status_line = String::new();
+        if self.reader.read_line(&mut status_line)? == 0 {
+            return Err(bad("connection closed before response"));
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("malformed status line"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(bad("truncated response headers"));
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length =
+                        v.trim().parse().map_err(|_| bad("bad response content-length"))?;
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body)?;
+        String::from_utf8(body).map(|b| (status, b)).map_err(|_| bad("non-UTF-8 body"))
+    }
+}

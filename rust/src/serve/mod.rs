@@ -1,0 +1,42 @@
+//! `dicodile serve` — the network serving front-end.
+//!
+//! The paper's workflow is fit-once / apply-many: dictionaries learned
+//! on large frames are applied to arbitrarily many new observations.
+//! [`crate::api`] made that a library concern (`Session` is
+//! `Clone + Send + Sync` with resident pools); this module makes it a
+//! *network* concern, so consumers no longer need to link the crate:
+//!
+//! - [`http`] — a dependency-free HTTP/1.1 server in the spirit of the
+//!   PR 6 socket transport: std `TcpListener`/`UnixListener`, a fixed
+//!   worker thread pool, strict bounded framing, plus the minimal
+//!   client the loopback tests and `serve-bench --http` drive.
+//! - [`router`] — the JSON API: `POST /v1/encode` / `/v1/reconstruct`
+//!   / `/v1/denoise`, `GET /v1/models` / `/v1/status`, with structured
+//!   error bodies and bit-exact tensor transport.
+//! - [`registry`] — the versioned on-disk model store
+//!   (`<root>/<name>/<version>/model.json`), resolved by
+//!   `name@version` or bare `name` → latest, warm-loaded once per key
+//!   and re-loaded (generation bump) when a re-publish changes the
+//!   artifact on disk.
+//! - [`state`] — the shared `Arc<ServeState>`: one session, one
+//!   registry, the served/error counters behind `GET /v1/status`.
+//!
+//! Overload never queues without bound: admission permits from
+//! [`Session::try_admit`](crate::api::session::Session::try_admit)
+//! gate the apply verbs (structured 429 past the cap), and the
+//! session's cost-weighted eviction (`resident bytes × idle age`)
+//! bounds pool residency under `max_resident_pools`.
+//!
+//! Wiring lives in the binary (`dicodile serve --listen
+//! <host:port|uds-path>`); everything here is plain library code so the
+//! loopback test suite can stand a real server up in-process.
+
+pub mod http;
+pub mod registry;
+pub mod router;
+pub mod state;
+
+pub use http::{spawn, Bound, HttpClient, HttpConfig, Request, Response, ServerHandle};
+pub use registry::{CachedModel, ModelRegistry, RegistryEntry};
+pub use router::{route, tensor_from_json, tensor_to_json};
+pub use state::ServeState;

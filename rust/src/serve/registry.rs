@@ -1,0 +1,422 @@
+//! Versioned on-disk model registry.
+//!
+//! Serving needs a place where trained artifacts live *by name*, not by
+//! path: a fit publishes `TrainedModel` JSON under
+//! `<root>/<name>/<version>/model.json`, and requests address it as
+//! `name@version` — or just `name`, which resolves to the latest
+//! published version at request time. The layout is deliberately plain
+//! files so publishing is `dicodile learn --save-model` plus a rename,
+//! an rsync, or [`ModelRegistry::publish`]; no database, no daemon.
+//!
+//! Loading is **warm**: the first request for a `name@version` reads
+//! the file from disk exactly once (concurrent first requests for the
+//! same key serialize on that key's slot lock, so N racing threads
+//! still perform one load — asserted by `disk_loads`), and every later
+//! request is an `Arc` clone of the cached model. Each cached entry
+//! carries a **generation stamp**: the registry-wide load counter plus
+//! the file's `(len, mtime)` at load time. Every resolve re-stats the
+//! file; a re-published artifact (new bytes under the same
+//! name/version, or a new latest version under a bare name) is picked
+//! up on the next request — no restart, the generation bumps, and the
+//! stale `Arc` dies with its in-flight requests.
+//!
+//! Publishing is atomic (`model.json.tmp` + rename), so a resolve
+//! racing a publish sees either the old artifact or the new one,
+//! never a torn file.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use crate::api::model::TrainedModel;
+use crate::util::json::Json;
+
+/// File identity at load time: `(len, mtime)`. A re-published artifact
+/// changes at least one of the two (publish writes a fresh tmp file and
+/// renames it into place).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct FileStamp {
+    len: u64,
+    mtime: Option<SystemTime>,
+}
+
+impl FileStamp {
+    fn of(path: &Path) -> std::io::Result<FileStamp> {
+        let meta = std::fs::metadata(path)?;
+        Ok(FileStamp { len: meta.len(), mtime: meta.modified().ok() })
+    }
+}
+
+/// A resolved, cached model: the shared artifact plus its provenance.
+#[derive(Clone)]
+pub struct CachedModel {
+    pub model: Arc<TrainedModel>,
+    /// Registry name the model was resolved under.
+    pub name: String,
+    /// Concrete version that served the request (the resolved one, even
+    /// when the request said just `name`).
+    pub version: String,
+    /// Registry-wide monotone load counter at the time this artifact
+    /// was (re)loaded from disk — a re-publish shows up as a higher
+    /// generation under the same `name@version`.
+    pub generation: u64,
+    stamp: FileStamp,
+}
+
+impl CachedModel {
+    /// Canonical `name@version` of the artifact that served.
+    pub fn spec(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+}
+
+/// One `name@version` cache slot. Concurrent first requests serialize
+/// on `state`; distinct keys never touch each other's locks.
+struct ModelSlot {
+    state: Mutex<Option<CachedModel>>,
+}
+
+/// One registry entry as listed from disk (see [`ModelRegistry::list`]).
+#[derive(Clone, Debug)]
+pub struct RegistryEntry {
+    pub name: String,
+    pub version: String,
+    pub path: PathBuf,
+    /// Artifact file size in bytes.
+    pub bytes: u64,
+    /// Dictionary dims `[K, P, L..]` as recorded in the artifact
+    /// (empty if the file could not be parsed).
+    pub dims: Vec<usize>,
+    /// Whether this `name@version` is currently warm in the cache.
+    pub cached: bool,
+}
+
+/// The registry: a root directory plus a warm-model cache.
+pub struct ModelRegistry {
+    root: PathBuf,
+    slots: Mutex<HashMap<String, Arc<ModelSlot>>>,
+    disk_loads: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Open a registry rooted at `root`. The directory does not need to
+    /// exist yet — [`publish`](ModelRegistry::publish) creates it.
+    pub fn open(root: impl Into<PathBuf>) -> ModelRegistry {
+        ModelRegistry {
+            root: root.into(),
+            slots: Mutex::new(HashMap::new()),
+            disk_loads: AtomicU64::new(0),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Disk loads performed over the registry's lifetime (the
+    /// generation counter: cache hits do not move it).
+    pub fn disk_loads(&self) -> u64 {
+        self.disk_loads.load(Ordering::Relaxed)
+    }
+
+    /// Models currently warm in the cache.
+    pub fn cached_models(&self) -> usize {
+        let slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+        slots
+            .values()
+            .filter(|s| s.state.lock().unwrap_or_else(|p| p.into_inner()).is_some())
+            .count()
+    }
+
+    /// Resolve `name` or `name@version` to a served model, warm-loading
+    /// from disk on first request and re-loading when the artifact on
+    /// disk changed (publish-without-restart).
+    pub fn resolve(&self, spec: &str) -> anyhow::Result<CachedModel> {
+        let (name, version) = match spec.split_once('@') {
+            Some((n, v)) => (n.to_string(), v.to_string()),
+            None => {
+                let n = spec.to_string();
+                let v = self.latest_version(&n)?;
+                (n, v)
+            }
+        };
+        check_component(&name)?;
+        check_component(&version)?;
+        let path = self.model_path(&name, &version);
+        let stamp = FileStamp::of(&path).map_err(|e| {
+            anyhow::anyhow!("model {name}@{version} not found in registry {}: {e}", self.root.display())
+        })?;
+
+        let key = format!("{name}@{version}");
+        let slot = {
+            let mut slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+            slots
+                .entry(key)
+                .or_insert_with(|| Arc::new(ModelSlot { state: Mutex::new(None) }))
+                .clone()
+        };
+        // Per-key lock: concurrent first requests for one name@version
+        // queue here and all but one are served from the fresh cache.
+        let mut state = slot.state.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(cached) = state.as_ref() {
+            // Re-stat under the slot lock: the pre-lock stamp may be
+            // stale if a publish raced our wait on this lock.
+            let now = FileStamp::of(&path).unwrap_or(stamp);
+            if cached.stamp == now {
+                return Ok(cached.clone());
+            }
+        }
+        let model = TrainedModel::load(&path)
+            .map_err(|e| anyhow::anyhow!("registry artifact {name}@{version}: {e}"))?;
+        // Stamp the file as it was *before* the read: if a publish
+        // lands between stat and read we re-load once more on the next
+        // request instead of serving a new artifact under an old stamp.
+        let stamp = FileStamp::of(&path).unwrap_or(stamp);
+        let generation = self.disk_loads.fetch_add(1, Ordering::Relaxed) + 1;
+        let cached = CachedModel {
+            model: Arc::new(model),
+            name,
+            version,
+            generation,
+            stamp,
+        };
+        *state = Some(cached.clone());
+        Ok(cached)
+    }
+
+    /// Publish a model as `<root>/<name>/<version>/model.json`
+    /// (atomically: tmp file + rename, so concurrent resolvers never
+    /// see a torn artifact). Returns the artifact path.
+    pub fn publish(
+        &self,
+        name: &str,
+        version: &str,
+        model: &TrainedModel,
+    ) -> anyhow::Result<PathBuf> {
+        check_component(name)?;
+        check_component(version)?;
+        let dir = self.root.join(name).join(version);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+        let path = dir.join("model.json");
+        let tmp = dir.join("model.json.tmp");
+        model.save(&tmp)?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("cannot publish {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// The latest published version of `name` (numeric-aware ordering:
+    /// `10` > `9`, `1.10` > `1.9`; non-numeric segments compare
+    /// lexicographically).
+    pub fn latest_version(&self, name: &str) -> anyhow::Result<String> {
+        check_component(name)?;
+        let dir = self.root.join(name);
+        let mut versions: Vec<String> = Vec::new();
+        let entries = std::fs::read_dir(&dir).map_err(|e| {
+            anyhow::anyhow!("model {name:?} not found in registry {}: {e}", self.root.display())
+        })?;
+        for e in entries.flatten() {
+            let v = e.file_name().to_string_lossy().to_string();
+            if e.path().join("model.json").is_file() {
+                versions.push(v);
+            }
+        }
+        versions
+            .into_iter()
+            .max_by(|a, b| version_cmp(a, b))
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} has no published versions"))
+    }
+
+    /// Scan the registry directory: every published `name@version` with
+    /// size, dictionary dims and warm-cache status. Sorted by name then
+    /// version (newest last).
+    pub fn list(&self) -> anyhow::Result<Vec<RegistryEntry>> {
+        let mut out = Vec::new();
+        let names = std::fs::read_dir(&self.root)
+            .map_err(|e| anyhow::anyhow!("cannot read registry {}: {e}", self.root.display()))?;
+        for name_entry in names.flatten() {
+            let name = name_entry.file_name().to_string_lossy().to_string();
+            let versions = match std::fs::read_dir(name_entry.path()) {
+                Ok(v) => v,
+                Err(_) => continue,
+            };
+            for v_entry in versions.flatten() {
+                let version = v_entry.file_name().to_string_lossy().to_string();
+                let path = v_entry.path().join("model.json");
+                let meta = match std::fs::metadata(&path) {
+                    Ok(m) if m.is_file() => m,
+                    _ => continue,
+                };
+                let dims = std::fs::read_to_string(&path)
+                    .ok()
+                    .and_then(|text| Json::parse(&text).ok())
+                    .and_then(|v| {
+                        v.get("dims")
+                            .and_then(|d| d.as_arr())
+                            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    })
+                    .unwrap_or_default();
+                let cached = {
+                    let key = format!("{name}@{version}");
+                    let slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+                    slots.get(&key).map_or(false, |s| {
+                        s.state.lock().unwrap_or_else(|p| p.into_inner()).is_some()
+                    })
+                };
+                out.push(RegistryEntry {
+                    name: name.clone(),
+                    version,
+                    path,
+                    bytes: meta.len(),
+                    dims,
+                    cached,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name).then_with(|| version_cmp(&a.version, &b.version)));
+        Ok(out)
+    }
+
+    fn model_path(&self, name: &str, version: &str) -> PathBuf {
+        self.root.join(name).join(version).join("model.json")
+    }
+}
+
+/// Reject path-escaping registry components (names and versions are
+/// single path segments).
+fn check_component(s: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(!s.is_empty(), "empty registry name/version");
+    anyhow::ensure!(
+        !s.contains('/') && !s.contains('\\') && s != "." && s != "..",
+        "invalid registry name/version {s:?} (must be a single path segment)"
+    );
+    Ok(())
+}
+
+/// Numeric-aware version ordering: dot-separated segments compare
+/// numerically when both parse as integers, lexicographically
+/// otherwise; a longer version wins over its own prefix (`1.2.1 > 1.2`).
+pub fn version_cmp(a: &str, b: &str) -> std::cmp::Ordering {
+    let mut ia = a.split('.');
+    let mut ib = b.split('.');
+    loop {
+        match (ia.next(), ib.next()) {
+            (None, None) => return std::cmp::Ordering::Equal,
+            (None, Some(_)) => return std::cmp::Ordering::Less,
+            (Some(_), None) => return std::cmp::Ordering::Greater,
+            (Some(x), Some(y)) => {
+                let ord = match (x.parse::<u64>(), y.parse::<u64>()) {
+                    (Ok(nx), Ok(ny)) => nx.cmp(&ny),
+                    _ => x.cmp(y),
+                };
+                if ord != std::cmp::Ordering::Equal {
+                    return ord;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::NdTensor;
+    use crate::util::rng::Pcg64;
+    use std::cmp::Ordering;
+
+    fn toy_model(seed: u64, l: usize) -> TrainedModel {
+        let mut rng = Pcg64::seeded(seed);
+        TrainedModel::from_dictionary(NdTensor::from_vec(&[2, 1, l], rng.normal_vec(2 * l)), 0.1)
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("dicodile-registry-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn version_ordering_is_numeric_aware() {
+        assert_eq!(version_cmp("10", "9"), Ordering::Greater);
+        assert_eq!(version_cmp("1.10", "1.9"), Ordering::Greater);
+        assert_eq!(version_cmp("1.2.1", "1.2"), Ordering::Greater);
+        assert_eq!(version_cmp("2", "2"), Ordering::Equal);
+        assert_eq!(version_cmp("alpha", "beta"), Ordering::Less);
+    }
+
+    #[test]
+    fn publish_resolve_roundtrip_and_latest() {
+        let root = tmp_root("roundtrip");
+        let reg = ModelRegistry::open(&root);
+        let m1 = toy_model(1, 6);
+        let m2 = toy_model(2, 8);
+        reg.publish("stars", "1", &m1).unwrap();
+        reg.publish("stars", "2", &m2).unwrap();
+
+        let pinned = reg.resolve("stars@1").unwrap();
+        assert_eq!(pinned.version, "1");
+        assert_eq!(pinned.model.d.data(), m1.d.data(), "artifacts round-trip bit-exactly");
+
+        let latest = reg.resolve("stars").unwrap();
+        assert_eq!(latest.version, "2");
+        assert_eq!(latest.model.d.data(), m2.d.data());
+        assert_eq!(reg.disk_loads(), 2);
+
+        // Warm: repeat resolves do not touch disk again.
+        let again = reg.resolve("stars@1").unwrap();
+        assert!(Arc::ptr_eq(&again.model, &pinned.model));
+        assert_eq!(reg.disk_loads(), 2);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn republish_bumps_generation_without_restart() {
+        let root = tmp_root("republish");
+        let reg = ModelRegistry::open(&root);
+        reg.publish("m", "1", &toy_model(3, 6)).unwrap();
+        let first = reg.resolve("m@1").unwrap();
+        // Re-publish different content under the same version (the
+        // different atom length changes the file length, so the stamp
+        // flips even on coarse-mtime filesystems).
+        reg.publish("m", "1", &toy_model(4, 9)).unwrap();
+        let second = reg.resolve("m@1").unwrap();
+        assert!(second.generation > first.generation, "re-publish must reload");
+        assert_eq!(second.model.atom_dims(), &[9]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_models_and_bad_specs_error() {
+        let root = tmp_root("missing");
+        let reg = ModelRegistry::open(&root);
+        assert!(reg.resolve("nope").is_err());
+        assert!(reg.resolve("nope@1").is_err());
+        assert!(reg.resolve("../escape@1").is_err());
+        assert!(reg.publish("a/b", "1", &toy_model(5, 6)).is_err());
+        assert!(reg.publish("ok", "..", &toy_model(5, 6)).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn list_reports_entries_with_dims_and_cache_state() {
+        let root = tmp_root("list");
+        let reg = ModelRegistry::open(&root);
+        reg.publish("a", "1", &toy_model(6, 6)).unwrap();
+        reg.publish("b", "1", &toy_model(7, 8)).unwrap();
+        reg.resolve("b@1").unwrap();
+        let ls = reg.list().unwrap();
+        assert_eq!(ls.len(), 2);
+        assert_eq!(ls[0].name, "a");
+        assert_eq!(ls[0].dims, vec![2, 1, 6]);
+        assert!(!ls[0].cached);
+        assert_eq!(ls[1].name, "b");
+        assert_eq!(ls[1].dims, vec![2, 1, 8]);
+        assert!(ls[1].cached);
+        assert!(ls[1].bytes > 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,283 @@
+//! Request routing: the JSON API surface of `dicodile serve`.
+//!
+//! Five routes on one shared [`ServeState`]:
+//!
+//! | route                  | body                                   | returns |
+//! |------------------------|----------------------------------------|---------|
+//! | `POST /v1/encode`      | `{"model": spec, "x": tensor}`         | sparse code `z` + cost/lambda/convergence |
+//! | `POST /v1/reconstruct` | `{"model": spec, "z": tensor}`         | reconstruction `x = Z * D` |
+//! | `POST /v1/denoise`     | `{"model": spec, "x": tensor}`         | denoised `x` (encode + reconstruct) |
+//! | `GET /v1/models`       | —                                      | registry listing (names, versions, dims, cache state) |
+//! | `GET /v1/status`       | —                                      | server / session / registry counters |
+//!
+//! `spec` is a registry address — `name@version` or bare `name` for the
+//! latest published version; `tensor` is `{"dims": [...], "data":
+//! [...]}` ([`tensor_to_json`] / [`tensor_from_json`], row-major, f64).
+//! The JSON writer emits shortest-roundtrip decimals, so a served
+//! encode is **bit-identical** to the in-process `Session::encode` it
+//! wraps — asserted by the loopback suite.
+//!
+//! The apply verbs take an admission permit
+//! ([`Session::try_admit`](crate::api::session::Session::try_admit))
+//! *before* touching the registry; an over-cap request is turned away
+//! with a structured `429` body (`{"error": {"code": 429, "kind":
+//! "over_capacity", ...}}`) instead of queueing. Malformed JSON is
+//! `400`, an unknown model `404`, a geometry mismatch `422` — every
+//! error is the same structured shape, never a panic across the wire.
+
+use std::sync::Arc;
+
+use crate::serve::http::{Request, Response};
+use crate::serve::state::ServeState;
+use crate::tensor::NdTensor;
+use crate::util::json::Json;
+
+/// Dispatch one parsed request. Never panics: every failure maps to a
+/// structured error response.
+pub fn route(state: &Arc<ServeState>, req: &Request) -> Response {
+    // Tolerate (and ignore) a query string.
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/v1/status") => Response::json(200, state.status_json()),
+        ("GET", "/v1/models") => models(state),
+        ("POST", "/v1/encode") => admitted(state, req, encode),
+        ("POST", "/v1/reconstruct") => admitted(state, req, reconstruct),
+        ("POST", "/v1/denoise") => admitted(state, req, denoise),
+        (_, "/v1/status") | (_, "/v1/models") | (_, "/v1/encode") | (_, "/v1/reconstruct")
+        | (_, "/v1/denoise") => Response::error(
+            405,
+            "method_not_allowed",
+            &format!("{} not allowed on {path}", req.method),
+        ),
+        _ => Response::error(404, "not_found", &format!("no route {path}")),
+    }
+}
+
+/// Run an apply verb under an admission permit; over-cap requests get
+/// the structured 429 before any parsing or model resolution happens.
+fn admitted(
+    state: &Arc<ServeState>,
+    req: &Request,
+    verb: fn(&Arc<ServeState>, &Json) -> Result<Response, Response>,
+) -> Response {
+    let _permit = match state.session.try_admit() {
+        Some(p) => p,
+        None => {
+            return Response::error(
+                429,
+                "over_capacity",
+                "session at max_inflight_requests; retry later",
+            )
+        }
+    };
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    match verb(state, &body) {
+        Ok(resp) => resp,
+        Err(resp) => resp,
+    }
+}
+
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    let text = req
+        .body_str()
+        .map_err(|_| Response::error(400, "bad_json", "request body is not UTF-8"))?;
+    Json::parse(text).map_err(|e| Response::error(400, "bad_json", &format!("invalid JSON: {e}")))
+}
+
+/// Resolve the request's `"model"` spec through the registry.
+fn resolve_model(
+    state: &Arc<ServeState>,
+    body: &Json,
+) -> Result<crate::serve::registry::CachedModel, Response> {
+    let spec = body
+        .get("model")
+        .and_then(|m| m.as_str())
+        .ok_or_else(|| Response::error(422, "invalid_request", "missing \"model\" spec"))?;
+    state
+        .registry
+        .resolve(spec)
+        .map_err(|e| Response::error(404, "model_not_found", &format!("{e}")))
+}
+
+fn tensor_field<'a>(body: &'a Json, key: &str) -> Result<&'a Json, Response> {
+    body.get(key).ok_or_else(|| {
+        Response::error(422, "invalid_request", &format!("missing \"{key}\" tensor"))
+    })
+}
+
+// ---- verbs ----------------------------------------------------------------
+
+fn encode(state: &Arc<ServeState>, body: &Json) -> Result<Response, Response> {
+    let cached = resolve_model(state, body)?;
+    let x = tensor_from_json(tensor_field(body, "x")?)
+        .map_err(|e| Response::error(422, "invalid_request", &format!("x: {e}")))?;
+    let r = state
+        .session
+        .encode(&cached.model, &x)
+        .map_err(|e| Response::error(422, "encode_failed", &format!("{e}")))?;
+    Ok(Response::json(
+        200,
+        Json::obj(vec![
+            ("model", Json::str(&cached.spec())),
+            ("generation", Json::Num(cached.generation as f64)),
+            ("z", tensor_to_json(&r.z)),
+            ("cost", Json::Num(r.cost)),
+            ("lambda", Json::Num(r.lambda)),
+            ("nnz", Json::Num(r.z.nnz() as f64)),
+            ("converged", Json::Bool(r.converged)),
+            ("runtime", Json::Num(r.runtime)),
+        ]),
+    ))
+}
+
+fn reconstruct(state: &Arc<ServeState>, body: &Json) -> Result<Response, Response> {
+    let cached = resolve_model(state, body)?;
+    let z = tensor_from_json(tensor_field(body, "z")?)
+        .map_err(|e| Response::error(422, "invalid_request", &format!("z: {e}")))?;
+    let model = &cached.model;
+    if z.ndim() != model.d.ndim() - 1 || z.dims()[0] != model.n_atoms() {
+        return Err(Response::error(
+            422,
+            "invalid_request",
+            &format!(
+                "activation dims {:?} do not match model atoms {:?}",
+                z.dims(),
+                model.d.dims()
+            ),
+        ));
+    }
+    let x = model.reconstruct(&z);
+    Ok(Response::json(
+        200,
+        Json::obj(vec![
+            ("model", Json::str(&cached.spec())),
+            ("generation", Json::Num(cached.generation as f64)),
+            ("x", tensor_to_json(&x)),
+        ]),
+    ))
+}
+
+fn denoise(state: &Arc<ServeState>, body: &Json) -> Result<Response, Response> {
+    let cached = resolve_model(state, body)?;
+    let x = tensor_from_json(tensor_field(body, "x")?)
+        .map_err(|e| Response::error(422, "invalid_request", &format!("x: {e}")))?;
+    // Denoise = sparse-code on the shared session (resident pools,
+    // admission) + reconstruct; the l1 penalty rejects the noise.
+    let r = state
+        .session
+        .encode(&cached.model, &x)
+        .map_err(|e| Response::error(422, "encode_failed", &format!("{e}")))?;
+    let den = cached.model.reconstruct(&r.z);
+    Ok(Response::json(
+        200,
+        Json::obj(vec![
+            ("model", Json::str(&cached.spec())),
+            ("generation", Json::Num(cached.generation as f64)),
+            ("x", tensor_to_json(&den)),
+            ("cost", Json::Num(r.cost)),
+            ("nnz", Json::Num(r.z.nnz() as f64)),
+            ("converged", Json::Bool(r.converged)),
+        ]),
+    ))
+}
+
+fn models(state: &Arc<ServeState>) -> Response {
+    let entries = match state.registry.list() {
+        Ok(e) => e,
+        Err(e) => return Response::error(500, "registry_error", &format!("{e}")),
+    };
+    Response::json(
+        200,
+        Json::obj(vec![(
+            "models",
+            Json::Arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", Json::str(&e.name)),
+                            ("version", Json::str(&e.version)),
+                            ("spec", Json::str(&format!("{}@{}", e.name, e.version))),
+                            ("bytes", Json::Num(e.bytes as f64)),
+                            ("dims", Json::arr_usize(&e.dims)),
+                            ("cached", Json::Bool(e.cached)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )]),
+    )
+}
+
+// ---- tensor <-> JSON ------------------------------------------------------
+
+/// `{"dims": [...], "data": [...]}` — row-major f64, shortest-roundtrip
+/// decimals, so tensors cross the wire bit-exactly.
+pub fn tensor_to_json(t: &NdTensor) -> Json {
+    Json::obj(vec![
+        ("dims", Json::arr_usize(t.dims())),
+        ("data", Json::arr_num(t.data())),
+    ])
+}
+
+/// Parse a tensor written by [`tensor_to_json`]. Validates the
+/// dims/data contract instead of panicking in the tensor constructor.
+pub fn tensor_from_json(v: &Json) -> anyhow::Result<NdTensor> {
+    let dims: Vec<usize> = v
+        .get("dims")
+        .and_then(|d| d.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing dims"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("dims must be non-negative integers")))
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!dims.is_empty(), "dims must be non-empty");
+    let data: Vec<f64> = v
+        .get("data")
+        .and_then(|d| d.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing data"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("data must be numeric")))
+        .collect::<anyhow::Result<_>>()?;
+    let expect: usize = dims.iter().product();
+    anyhow::ensure!(
+        data.len() == expect,
+        "{} values for dims {dims:?} (expected {expect})",
+        data.len()
+    );
+    Ok(NdTensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn tensor_json_roundtrips_bit_exactly() {
+        let mut rng = Pcg64::seeded(11);
+        let t = NdTensor::from_vec(&[2, 3, 4], rng.normal_vec(24));
+        let back = tensor_from_json(&Json::parse(&tensor_to_json(&t).dumps()).unwrap()).unwrap();
+        assert_eq!(back.dims(), t.dims());
+        assert_eq!(back.data(), t.data(), "values must cross the wire bit-exactly");
+    }
+
+    #[test]
+    fn tensor_from_json_rejects_malformed_payloads() {
+        assert!(tensor_from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad_len = Json::obj(vec![
+            ("dims", Json::arr_usize(&[2, 3])),
+            ("data", Json::arr_num(&[1.0])),
+        ]);
+        assert!(tensor_from_json(&bad_len).is_err());
+        let no_dims = Json::obj(vec![("data", Json::arr_num(&[1.0]))]);
+        assert!(tensor_from_json(&no_dims).is_err());
+        let bad_dims = Json::obj(vec![
+            ("dims", Json::Arr(vec![Json::str("x")])),
+            ("data", Json::arr_num(&[1.0])),
+        ]);
+        assert!(tensor_from_json(&bad_dims).is_err());
+    }
+}

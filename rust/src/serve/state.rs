@@ -1,0 +1,104 @@
+//! Shared serving state: one `Session`, one `ModelRegistry`, and the
+//! server-side counters every worker thread reports into.
+//!
+//! This is the object the HTTP worker pool shares (`Arc<ServeState>`):
+//! the router resolves model specs through [`ServeState::registry`],
+//! runs the apply verbs on [`ServeState::session`], and
+//! [`record`](ServeState::record) keeps the request/error tallies that
+//! `GET /v1/status` and `serve-bench --http` report. All counters are
+//! atomics — no lock sits between two requests at this layer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::api::session::Session;
+use crate::serve::registry::ModelRegistry;
+use crate::util::json::Json;
+
+/// Everything a request handler needs, shared across the worker pool.
+pub struct ServeState {
+    /// The shared serving session (resident pools, admission permits,
+    /// eviction policy — see [`crate::api::session`]).
+    pub session: Session,
+    /// The versioned on-disk model registry.
+    pub registry: ModelRegistry,
+    started: Instant,
+    http_served: AtomicU64,
+    http_errors: AtomicU64,
+}
+
+impl ServeState {
+    pub fn new(session: Session, registry: ModelRegistry) -> ServeState {
+        ServeState {
+            session,
+            registry,
+            started: Instant::now(),
+            http_served: AtomicU64::new(0),
+            http_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Tally one completed response by status class.
+    pub fn record(&self, status: u16) {
+        self.http_served.fetch_add(1, Ordering::Relaxed);
+        if status >= 400 {
+            self.http_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Responses written since the server started (all statuses).
+    pub fn http_served(&self) -> u64 {
+        self.http_served.load(Ordering::Relaxed)
+    }
+
+    /// Responses with a 4xx/5xx status.
+    pub fn http_errors(&self) -> u64 {
+        self.http_errors.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since the state was created.
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// The `GET /v1/status` payload: server, session (residency +
+    /// admission) and registry counters in one snapshot.
+    pub fn status_json(&self) -> Json {
+        Json::obj(vec![
+            ("uptime_secs", Json::Num(self.uptime_secs())),
+            (
+                "server",
+                Json::obj(vec![
+                    ("http_served", Json::Num(self.http_served() as f64)),
+                    ("http_errors", Json::Num(self.http_errors() as f64)),
+                ]),
+            ),
+            (
+                "session",
+                Json::obj(vec![
+                    ("resident_pools", Json::Num(self.session.n_resident_pools() as f64)),
+                    ("pools_spawned", Json::Num(self.session.pools_spawned() as f64)),
+                    ("warm_starts", Json::Num(self.session.warm_starts() as f64)),
+                    ("pools_evicted", Json::Num(self.session.pools_evicted() as f64)),
+                    ("inflight", Json::Num(self.session.inflight() as f64)),
+                    (
+                        "requests_admitted",
+                        Json::Num(self.session.requests_admitted() as f64),
+                    ),
+                    (
+                        "requests_rejected",
+                        Json::Num(self.session.requests_rejected() as f64),
+                    ),
+                ]),
+            ),
+            (
+                "registry",
+                Json::obj(vec![
+                    ("root", Json::str(&self.registry.root().display().to_string())),
+                    ("disk_loads", Json::Num(self.registry.disk_loads() as f64)),
+                    ("cached_models", Json::Num(self.registry.cached_models() as f64)),
+                ]),
+            ),
+        ])
+    }
+}

@@ -1,0 +1,409 @@
+//! Loopback tests for the HTTP serving front-end (`dicodile::serve`):
+//!
+//! (a) a served `POST /v1/encode` over real loopback TCP is **bitwise
+//!     identical** to `Session::encode` on an identically-configured
+//!     in-process session — the custom JSON writer emits
+//!     shortest-roundtrip decimals, so tensors survive the wire exactly,
+//! (b) the Unix-domain listener serves the same API (unix only),
+//! (c) N threads racing the *first* request for one model warm-load it
+//!     with exactly one disk read (per-key slot lock; generation
+//!     counters asserted),
+//! (d) over-capacity requests are turned away with the structured 429
+//!     body instead of queueing,
+//! (e) a re-publish is picked up without restart (generation bump over
+//!     HTTP),
+//! (f) `/v1/models` + `/v1/status` report the registry and counters,
+//!     and every failure mode (404 / 405 / bad JSON / unknown model /
+//!     missing fields) is a structured JSON error,
+//! (g) `/v1/reconstruct` and `/v1/denoise` match the in-process model
+//!     methods bit for bit.
+//!
+//! All bitwise assertions run on single-worker pools (`dicodile(1)`):
+//! multi-worker cold solves are not reproducible across sessions.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+use dicodile::api::{Dicodile, Session, TrainedModel};
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::serve::{
+    spawn, tensor_from_json, tensor_to_json, Bound, HttpClient, HttpConfig, ModelRegistry,
+    ServeState,
+};
+use dicodile::tensor::NdTensor;
+use dicodile::util::json::Json;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "dicodile-serve-http-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn toy_model(seed: u64, k: usize, l: usize) -> TrainedModel {
+    let gen = SyntheticConfig::signal_1d(400, k, l).generate(seed);
+    TrainedModel::from_dictionary(gen.d_true, 0.1)
+}
+
+fn workload_1d(seed: u64, t: usize) -> NdTensor {
+    let mut gen = SyntheticConfig::signal_1d(t, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    gen.generate(seed).x
+}
+
+/// One-worker session: deterministic across identically-seeded
+/// instances, so the served side and the local reference agree exactly.
+fn session_1w() -> Session {
+    Dicodile::builder().tol(1e-4).seed(7).dicodile(1).build()
+}
+
+/// Stand a real server up on loopback TCP with a fresh registry holding
+/// `toy@1`. Returns everything the assertions need; the caller shuts
+/// the handle down.
+fn serve_toy(
+    tag: &str,
+    session: Session,
+) -> (Arc<ServeState>, dicodile::serve::ServerHandle, String, PathBuf) {
+    let root = tmp_root(tag);
+    let registry = ModelRegistry::open(&root);
+    registry.publish("toy", "1", &toy_model(3, 2, 8)).unwrap();
+    let state = Arc::new(ServeState::new(session, registry));
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let handle = spawn(bound, Arc::clone(&state), &HttpConfig { threads: 4, ..Default::default() });
+    let addr = handle.addr().to_string();
+    (state, handle, addr, root)
+}
+
+fn post(client: &mut HttpClient, path: &str, body: &Json) -> (u16, Json) {
+    let (status, text) = client.request("POST", path, Some(&body.dumps())).unwrap();
+    (status, Json::parse(&text).unwrap())
+}
+
+fn get(client: &mut HttpClient, path: &str) -> (u16, Json) {
+    let (status, text) = client.request("GET", path, None).unwrap();
+    (status, Json::parse(&text).unwrap())
+}
+
+fn assert_bits_equal(a: &NdTensor, b: &NdTensor, what: &str) {
+    assert_eq!(a.dims(), b.dims(), "{what}: dims differ");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at flat index {i}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (a) served encode == in-process encode, bit for bit (TCP loopback)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_encode_is_bitwise_identical_to_in_process() {
+    let (state, handle, addr, root) = serve_toy("tcp-bitwise", session_1w());
+    let x = workload_1d(21, 300);
+
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, resp) = post(
+        &mut client,
+        "/v1/encode",
+        &Json::obj(vec![("model", Json::str("toy")), ("x", tensor_to_json(&x))]),
+    );
+    assert_eq!(status, 200, "encode failed: {resp:?}");
+    assert_eq!(resp.get("model").unwrap().as_str(), Some("toy@1"));
+    assert_eq!(resp.get("generation").unwrap().as_f64(), Some(1.0));
+    let z_served = tensor_from_json(resp.get("z").unwrap()).unwrap();
+
+    // Identically-configured local session, same model artifact.
+    let local = session_1w();
+    let model = state.registry.resolve("toy").unwrap().model;
+    let r = local.encode(&model, &x).unwrap();
+    assert_bits_equal(&z_served, &r.z, "served z vs in-process z");
+    assert_eq!(
+        resp.get("cost").unwrap().as_f64().unwrap().to_bits(),
+        r.cost.to_bits(),
+        "served cost must round-trip bit-exactly"
+    );
+    assert_eq!(resp.get("nnz").unwrap().as_usize(), Some(r.z.nnz()));
+
+    local.close();
+    handle.shutdown();
+    state.session.close();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// (b) the Unix-domain listener serves the same API
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_serves_the_same_api() {
+    let root = tmp_root("uds");
+    let registry = ModelRegistry::open(&root);
+    registry.publish("toy", "1", &toy_model(3, 2, 8)).unwrap();
+    let state = Arc::new(ServeState::new(session_1w(), registry));
+    let sock = std::env::temp_dir().join(format!("dicodile-uds-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let bound = Bound::bind(sock.to_str().unwrap()).unwrap();
+    let handle =
+        spawn(bound, Arc::clone(&state), &HttpConfig { threads: 2, ..Default::default() });
+    let addr = handle.addr().to_string();
+
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, st) = get(&mut client, "/v1/status");
+    assert_eq!(status, 200);
+    assert!(st.get("uptime_secs").is_some());
+
+    let x = workload_1d(22, 300);
+    let (status, resp) = post(
+        &mut client,
+        "/v1/encode",
+        &Json::obj(vec![("model", Json::str("toy@1")), ("x", tensor_to_json(&x))]),
+    );
+    assert_eq!(status, 200, "uds encode failed: {resp:?}");
+    let z_served = tensor_from_json(resp.get("z").unwrap()).unwrap();
+    let local = session_1w();
+    let model = state.registry.resolve("toy@1").unwrap().model;
+    let r = local.encode(&model, &x).unwrap();
+    assert_bits_equal(&z_served, &r.z, "uds served z vs in-process z");
+
+    local.close();
+    handle.shutdown();
+    state.session.close();
+    assert!(!sock.exists(), "shutdown must remove the socket file");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// (c) concurrent first requests warm-load with exactly one disk read
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_first_request_warm_loads_once() {
+    let root = tmp_root("warmload");
+    let registry = ModelRegistry::open(&root);
+    registry.publish("toy", "1", &toy_model(3, 2, 8)).unwrap();
+    assert_eq!(registry.disk_loads(), 0, "publish alone must not load");
+
+    let n = 8;
+    let barrier = Barrier::new(n);
+    let generations: Vec<u64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let (reg, bar) = (&registry, &barrier);
+                scope.spawn(move || {
+                    bar.wait();
+                    reg.resolve("toy").unwrap().generation
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(registry.disk_loads(), 1, "N racing resolvers must share one disk load");
+    assert!(generations.iter().all(|&g| g == 1), "all resolvers see generation 1");
+    assert_eq!(registry.cached_models(), 1);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// (d) over-capacity -> structured 429, never a queue
+// ---------------------------------------------------------------------------
+
+#[test]
+fn over_capacity_requests_get_structured_429() {
+    // Cap 0: every apply-verb admission fails deterministically.
+    let session = Dicodile::builder().tol(1e-4).seed(7).dicodile(1).max_inflight_requests(0).build();
+    let (state, handle, addr, root) = serve_toy("429", session);
+
+    let x = workload_1d(23, 300);
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, resp) = post(
+        &mut client,
+        "/v1/encode",
+        &Json::obj(vec![("model", Json::str("toy")), ("x", tensor_to_json(&x))]),
+    );
+    assert_eq!(status, 429);
+    let err = resp.get("error").expect("429 body must be structured");
+    assert_eq!(err.get("code").unwrap().as_f64(), Some(429.0));
+    assert_eq!(err.get("kind").unwrap().as_str(), Some("over_capacity"));
+    assert!(state.session.requests_rejected() >= 1);
+    assert_eq!(state.session.requests_admitted(), 0);
+
+    // Introspection routes are not admission-gated.
+    let (status, _) = get(&mut client, "/v1/status");
+    assert_eq!(status, 200);
+
+    handle.shutdown();
+    state.session.close();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// (e) re-publish picked up without restart: generation bump over HTTP
+// ---------------------------------------------------------------------------
+
+#[test]
+fn republish_bumps_generation_over_http() {
+    let (state, handle, addr, root) = serve_toy("republish", session_1w());
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    let x1 = workload_1d(24, 300);
+    let (status, resp) = post(
+        &mut client,
+        "/v1/encode",
+        &Json::obj(vec![("model", Json::str("toy")), ("x", tensor_to_json(&x1))]),
+    );
+    assert_eq!(status, 200);
+    assert_eq!(resp.get("generation").unwrap().as_f64(), Some(1.0));
+    let z1 = tensor_from_json(resp.get("z").unwrap()).unwrap();
+    assert_eq!(z1.dims()[0], 2, "toy@1 has 2 atoms");
+
+    // Re-publish toy/1 with a different geometry (different file size
+    // -> the registry's stamp check must trigger a re-load). A fresh
+    // observation gets a fresh pool, so the geometry change is safe.
+    state.registry.publish("toy", "1", &toy_model(5, 3, 9)).unwrap();
+    let x2 = workload_1d(25, 310);
+    let (status, resp) = post(
+        &mut client,
+        "/v1/encode",
+        &Json::obj(vec![("model", Json::str("toy")), ("x", tensor_to_json(&x2))]),
+    );
+    assert_eq!(status, 200, "encode after republish failed: {resp:?}");
+    assert_eq!(
+        resp.get("generation").unwrap().as_f64(),
+        Some(2.0),
+        "re-publish must bump the generation without restart"
+    );
+    let z2 = tensor_from_json(resp.get("z").unwrap()).unwrap();
+    assert_eq!(z2.dims()[0], 3, "served code reflects the re-published dictionary");
+    assert_eq!(state.registry.disk_loads(), 2);
+
+    handle.shutdown();
+    state.session.close();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// (f) introspection routes + structured error taxonomy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn models_status_and_errors_are_structured() {
+    let (state, handle, addr, root) = serve_toy("errors", session_1w());
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    let (status, resp) = get(&mut client, "/v1/models");
+    assert_eq!(status, 200);
+    let models = resp.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("spec").unwrap().as_str(), Some("toy@1"));
+    assert_eq!(models[0].get("cached").unwrap(), &Json::Bool(false));
+    assert_eq!(
+        models[0].get("dims").unwrap().as_arr().unwrap().len(),
+        3,
+        "1-D dictionary dims are [k, p, l]"
+    );
+
+    let (status, resp) = get(&mut client, "/v1/status");
+    assert_eq!(status, 200);
+    assert!(resp.get("session").unwrap().get("resident_pools").is_some());
+    assert!(resp.get("registry").unwrap().get("disk_loads").is_some());
+
+    // Unknown route -> 404.
+    let (status, resp) = get(&mut client, "/v1/nope");
+    assert_eq!(status, 404);
+    assert_eq!(resp.get("error").unwrap().get("kind").unwrap().as_str(), Some("not_found"));
+
+    // Wrong method on a known route -> 405.
+    let (status, resp) = get(&mut client, "/v1/encode");
+    assert_eq!(status, 405);
+    assert_eq!(
+        resp.get("error").unwrap().get("kind").unwrap().as_str(),
+        Some("method_not_allowed")
+    );
+
+    // Malformed JSON -> 400.
+    let (status, text) = client.request("POST", "/v1/encode", Some("{not json")).unwrap();
+    assert_eq!(status, 400);
+    let resp = Json::parse(&text).unwrap();
+    assert_eq!(resp.get("error").unwrap().get("kind").unwrap().as_str(), Some("bad_json"));
+
+    // Unknown model -> 404 model_not_found.
+    let x = workload_1d(26, 300);
+    let (status, resp) = post(
+        &mut client,
+        "/v1/encode",
+        &Json::obj(vec![("model", Json::str("ghost")), ("x", tensor_to_json(&x))]),
+    );
+    assert_eq!(status, 404);
+    assert_eq!(
+        resp.get("error").unwrap().get("kind").unwrap().as_str(),
+        Some("model_not_found")
+    );
+
+    // Missing fields -> 422 invalid_request.
+    let (status, resp) =
+        post(&mut client, "/v1/encode", &Json::obj(vec![("x", tensor_to_json(&x))]));
+    assert_eq!(status, 422);
+    assert_eq!(
+        resp.get("error").unwrap().get("kind").unwrap().as_str(),
+        Some("invalid_request")
+    );
+
+    handle.shutdown();
+    state.session.close();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// (g) reconstruct / denoise match the in-process model methods
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reconstruct_and_denoise_match_model_methods() {
+    let (state, handle, addr, root) = serve_toy("verbs", session_1w());
+    let model = state.registry.resolve("toy").unwrap().model;
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // reconstruct: x = Z * D, pure model algebra.
+    let mut z = NdTensor::zeros(&[model.n_atoms(), 60]);
+    *z.at_mut(&[0, 5]) = 1.25;
+    *z.at_mut(&[1, 40]) = -0.75;
+    let (status, resp) = post(
+        &mut client,
+        "/v1/reconstruct",
+        &Json::obj(vec![("model", Json::str("toy")), ("z", tensor_to_json(&z))]),
+    );
+    assert_eq!(status, 200, "reconstruct failed: {resp:?}");
+    let x_served = tensor_from_json(resp.get("x").unwrap()).unwrap();
+    assert_bits_equal(&x_served, &model.reconstruct(&z), "served reconstruct");
+
+    // Geometry mismatch -> 422, not a panic across the wire.
+    let bad = NdTensor::zeros(&[model.n_atoms() + 1, 60]);
+    let (status, _) = post(
+        &mut client,
+        "/v1/reconstruct",
+        &Json::obj(vec![("model", Json::str("toy")), ("z", tensor_to_json(&bad))]),
+    );
+    assert_eq!(status, 422);
+
+    // denoise == encode on an identically-configured session + reconstruct.
+    let x = workload_1d(27, 300);
+    let (status, resp) = post(
+        &mut client,
+        "/v1/denoise",
+        &Json::obj(vec![("model", Json::str("toy")), ("x", tensor_to_json(&x))]),
+    );
+    assert_eq!(status, 200, "denoise failed: {resp:?}");
+    let den_served = tensor_from_json(resp.get("x").unwrap()).unwrap();
+    let local = session_1w();
+    let r = local.encode(&model, &x).unwrap();
+    assert_bits_equal(&den_served, &model.reconstruct(&r.z), "served denoise");
+
+    local.close();
+    handle.shutdown();
+    state.session.close();
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -20,7 +20,7 @@ cargo build --release --benches
 # resident ACROSS calls (fit + encode on one spawn, corpus pools), and
 # the concurrency suite proves the shared session serves parallel
 # clients (clones) correctly: distinct observations in parallel,
-# same-observation serialization, LRU eviction + respawn.
+# same-observation serialization, cost-weighted eviction + respawn.
 for w in 1 2 4; do
   # The pool + transport suites run once per wire: DICODILE_TRANSPORT
   # flips every WorkerPool in the run between in-process channels and
@@ -35,6 +35,12 @@ for w in 1 2 4; do
   done
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_session
   DICODILE_TEST_WORKERS=$w cargo test -q --test api_concurrency
+  # HTTP serving front-end: loopback TCP + Unix-domain servers, bitwise
+  # served-vs-in-process encode, racing warm-loads (one disk read),
+  # structured 429 admission, registry re-publish pickup. The suite
+  # pins its own pools to one worker (bitwise determinism), so the
+  # worker-count env only varies the surrounding build.
+  DICODILE_TEST_WORKERS=$w cargo test -q --test serve_http
   # Incremental-vs-rescan selection parity: sequential runs must be
   # bit-identical (Greedy now via the tournament tree over segment
   # champions); distributed runs must hold the clean/dirty counter
@@ -74,6 +80,20 @@ DICODILE_BENCH_REPS=1 cargo bench --bench micro_hotpath
 # wall-clock record to BENCH_lgcd_selection.json (single rep for CI;
 # the section filter skips fig3's slow Greedy strategy sweep).
 DICODILE_FIG3_SECTION=selection DICODILE_BENCH_REPS=1 cargo bench --bench fig3_strategies
+
+# Serving-transport smoke bench: stands the real HTTP server up on an
+# ephemeral loopback port, drives it with keep-alive clients, and
+# writes per-request latency + residency/admission counters to
+# BENCH_serve.json.
+cargo run --release -- serve-bench --http 127.0.0.1:0 --clients 2 --requests 2 --t 1500
+
+if cargo clippy --version >/dev/null 2>&1; then
+  # Advisory lint pass (same policy as fmt below): report, don't fail.
+  cargo clippy --release --no-deps -- -D warnings \
+    || echo "warning: cargo clippy reports lints" >&2
+else
+  echo "cargo clippy unavailable; skipping lint check" >&2
+fi
 
 if cargo fmt --version >/dev/null 2>&1; then
   # Advisory for now: the gate is build + tests; formatting drift is
