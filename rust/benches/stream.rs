@@ -1,0 +1,214 @@
+//! Streaming encode vs whole-signal encode on a long 1-D signal:
+//! steady-state per-chunk latency, end-to-end throughput, and the
+//! memory story — `peak_resident_rows` (solve window + buffered push)
+//! against the full signal length the batch path must materialize.
+//! Also reports the stitched-vs-whole objective gap at the shared
+//! frozen lambda, the quantity the parity suite gates.
+//! Writes BENCH_stream.json.
+//!
+//!     cargo bench --bench stream
+//!     DICODILE_BENCH_REPS=1 cargo bench --bench stream   # CI smoke
+
+use std::time::Instant;
+
+use dicodile::api::{Dicodile, TrainedModel};
+use dicodile::bench::{fmt_secs, BenchConfig, Table, Timing};
+use dicodile::conv::reconstruct;
+use dicodile::csc::cd::{solve_cd, CdConfig};
+use dicodile::csc::problem::CscProblem;
+use dicodile::tensor::NdTensor;
+use dicodile::util::json::Json;
+use dicodile::util::rng::Pcg64;
+
+const P: usize = 3;
+const K: usize = 5;
+const L: usize = 16;
+const TOL: f64 = 1e-6;
+const LAMBDA: f64 = 0.2;
+
+fn unit_dict(seed: u64) -> NdTensor {
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = rng.normal_vec(K * P * L);
+    for a in v.chunks_mut(P * L) {
+        let n = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+    NdTensor::from_vec(&[K, P, L], v)
+}
+
+fn sparse_signal(seed: u64, t: usize, d: &NdTensor) -> NdTensor {
+    let mut rng = Pcg64::seeded(seed);
+    let z = NdTensor::from_vec(
+        &[K, t - L + 1],
+        rng.bernoulli_gaussian_vec(K * (t - L + 1), 0.02, 0.0, 2.0),
+    );
+    let mut x = reconstruct(&z, d);
+    for v in x.data_mut().iter_mut() {
+        *v += 0.01 * rng.normal();
+    }
+    x
+}
+
+/// Stream `x` through an encoder in `push_rows`-row pushes, timing each
+/// push that actually triggers a solve. Returns (per-solve samples,
+/// total seconds, stitched z chunks in emission order, peak rows).
+fn run_stream(
+    cfg: &dicodile::api::DicodileBuilder,
+    model: &TrainedModel,
+    x: &NdTensor,
+    push_rows: usize,
+) -> (Vec<f64>, f64, Vec<dicodile::stream::ChunkResult>, usize) {
+    let t = x.dims()[1];
+    let session = cfg.clone().build();
+    let mut enc = session.open_stream(model).expect("open stream");
+    let mut samples = Vec::new();
+    let mut chunks = Vec::new();
+    let total0 = Instant::now();
+    let mut fed = 0;
+    while fed < t {
+        let take = push_rows.min(t - fed);
+        let mut cv = vec![0.0; P * take];
+        for pi in 0..P {
+            cv[pi * take..(pi + 1) * take]
+                .copy_from_slice(&x.slice0(pi)[fed..fed + take]);
+        }
+        let push = NdTensor::from_vec(&[P, take], cv);
+        let t0 = Instant::now();
+        let out = enc.push(&push).expect("push");
+        let dt = t0.elapsed().as_secs_f64();
+        if !out.is_empty() {
+            // Amortize: one push may flush several solve windows.
+            for _ in 0..out.len() {
+                samples.push(dt / out.len() as f64);
+            }
+            chunks.extend(out);
+        }
+        fed += take;
+    }
+    chunks.extend(enc.finish().expect("finish"));
+    let total = total0.elapsed().as_secs_f64();
+    (samples, total, chunks, enc.peak_resident_rows())
+}
+
+/// L2,1 objective of a stitched stream output against the whole signal.
+fn stitched_cost(chunks: &[dicodile::stream::ChunkResult], problem: &CscProblem) -> f64 {
+    let zt = problem.z_dims()[1];
+    let mut z = NdTensor::zeros(&[K, zt]);
+    for c in chunks {
+        let rows = c.z.dims()[1];
+        for k in 0..K {
+            z.slice0_mut(k)[c.offset..c.offset + rows].copy_from_slice(c.z.slice0(k));
+        }
+    }
+    problem.cost(&z)
+}
+
+fn main() {
+    let bc = BenchConfig::from_env();
+    let smoke = bc.reps <= 1;
+    let t = if smoke { 4_096 } else { 32_768 };
+    let chunk = 256usize;
+    let push_rows = 192usize; // deliberately != chunk: exercises buffering
+    println!("# stream — chunked encode vs whole-signal encode (P={P}, K={K}, L={L}, T={t})");
+
+    let d = unit_dict(11);
+    let x = sparse_signal(12, t, &d);
+    let mut model = TrainedModel::from_dictionary(d.clone(), 0.1);
+    model.lambda = LAMBDA;
+    let problem = CscProblem::new(x.clone(), d.clone(), LAMBDA);
+
+    // Whole-signal baseline: everything resident, one big solve.
+    let mut whole_samples = Vec::new();
+    let mut whole_cost = 0.0;
+    for _ in 0..bc.reps.max(1) {
+        let t0 = Instant::now();
+        let r = solve_cd(&problem, &CdConfig { tol: TOL, ..CdConfig::default() });
+        whole_samples.push(t0.elapsed().as_secs_f64());
+        whole_cost = problem.cost(&r.z);
+    }
+    let whole = Timing::from_samples(whole_samples);
+
+    // Streaming: bounded window, chunk results leave as they are ready.
+    let cfg = Dicodile::builder().sequential().tol(TOL).chunk_len(chunk);
+    let mut solve_samples = Vec::new();
+    let mut total_s = 0.0;
+    let mut chunks = Vec::new();
+    let mut peak = 0;
+    for _ in 0..bc.reps.max(1) {
+        let (s, tot, cks, pk) = run_stream(&cfg, &model, &x, push_rows);
+        solve_samples = s;
+        total_s = tot;
+        chunks = cks;
+        peak = pk;
+    }
+    let per_chunk = Timing::from_samples(solve_samples.clone());
+    let stream_cost = stitched_cost(&chunks, &problem);
+    let cost_gap = (stream_cost - whole_cost).abs() / whole_cost.abs().max(1e-12);
+
+    let mut table = Table::new(&["mode", "total", "per-chunk p50", "resident rows", "cost"]);
+    table.row(vec![
+        "whole".into(),
+        fmt_secs(whole.median),
+        "-".into(),
+        t.to_string(),
+        format!("{whole_cost:.6e}"),
+    ]);
+    table.row(vec![
+        "stream".into(),
+        fmt_secs(total_s),
+        fmt_secs(per_chunk.median),
+        peak.to_string(),
+        format!("{stream_cost:.6e}"),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "resident-memory ratio {:.1}x smaller; objective gap {cost_gap:.2e} (gate < 1e-3)",
+        t as f64 / peak.max(1) as f64
+    );
+
+    let timing_json = |tm: &Timing| {
+        Json::obj(vec![
+            ("reps", Json::Num(tm.reps as f64)),
+            ("median_s", Json::Num(tm.median)),
+            ("mean_s", Json::Num(tm.mean)),
+            ("p10_s", Json::Num(tm.p10)),
+            ("p90_s", Json::Num(tm.p90)),
+        ])
+    };
+    let record = Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                ("p", Json::Num(P as f64)),
+                ("k", Json::Num(K as f64)),
+                ("l", Json::Num(L as f64)),
+                ("t", Json::Num(t as f64)),
+                ("lambda", Json::Num(LAMBDA)),
+                ("tol", Json::Num(TOL)),
+            ]),
+        ),
+        ("chunk_len", Json::Num(chunk as f64)),
+        ("push_rows", Json::Num(push_rows as f64)),
+        ("whole_encode", timing_json(&whole)),
+        ("stream_total_s", Json::Num(total_s)),
+        ("per_chunk_latency", timing_json(&per_chunk)),
+        ("n_chunks", Json::Num(chunks.len() as f64)),
+        ("peak_resident_rows", Json::Num(peak as f64)),
+        ("whole_resident_rows", Json::Num(t as f64)),
+        ("whole_cost", Json::Num(whole_cost)),
+        ("stream_cost", Json::Num(stream_cost)),
+        ("cost_rel_gap", Json::Num(cost_gap)),
+    ]);
+    let path = "BENCH_stream.json";
+    match std::fs::write(path, record.dumps()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
+    assert!(
+        cost_gap < 1e-3,
+        "streamed objective drifted from the whole-signal solve: {cost_gap:.3e}"
+    );
+    assert!(peak < t, "streaming failed to bound residency: {peak} >= {t}");
+}

@@ -31,6 +31,7 @@ use crate::csc::select::Strategy;
 use crate::dicod::config::DicodConfig;
 use crate::dicod::transport::TransportKind;
 use crate::dict::pgd::PgdConfig;
+use crate::stream::HaloPolicy;
 
 /// Facade entry point: `Dicodile::builder()…build()` yields a
 /// [`Session`].
@@ -72,6 +73,9 @@ impl Dicodile {
             stat_workers: cfg.stat_workers,
             seed: cfg.seed,
             verbose: cfg.verbose,
+            chunk_len: 0,
+            halo_policy: HaloPolicy::Holdback,
+            online_forget: 1.0,
         }
     }
 
@@ -143,6 +147,16 @@ pub struct DicodileBuilder {
     pub(crate) stat_workers: usize,
     pub(crate) seed: u64,
     pub(crate) verbose: bool,
+    /// Steady-state interior rows emitted per streaming solve
+    /// (`Session::open_stream`); 0 picks an automatic size
+    /// (`max(4(L-1), 64)` along the streaming axis).
+    pub(crate) chunk_len: usize,
+    /// How a streaming chunk's trailing halo is resolved (see
+    /// [`crate::stream::HaloPolicy`]).
+    pub(crate) halo_policy: HaloPolicy,
+    /// Mairal forgetting factor for online dictionary updates:
+    /// `rho_t = (online_forget + 1) / (online_forget + t)`.
+    pub(crate) online_forget: f64,
 }
 
 impl Default for DicodileBuilder {
@@ -164,6 +178,9 @@ impl Default for DicodileBuilder {
             stat_workers: base.stat_workers,
             seed: base.seed,
             verbose: base.verbose,
+            chunk_len: 0,
+            halo_policy: HaloPolicy::Holdback,
+            online_forget: 1.0,
         }
     }
 }
@@ -335,6 +352,35 @@ impl DicodileBuilder {
         self
     }
 
+    /// Steady-state interior rows each streaming solve emits
+    /// ([`Session::open_stream`](crate::api::Session::open_stream)).
+    /// `0` (the default) picks `max(4(L-1), 64)` along the streaming
+    /// axis. Small values trade latency for per-row solve overhead;
+    /// values below the `2(L-1)` halo still work — pushes simply buffer
+    /// until a full window is available.
+    pub fn chunk_len(mut self, n: usize) -> Self {
+        self.chunk_len = n;
+        self
+    }
+
+    /// Boundary rule for the streaming overlap (see
+    /// [`crate::stream::HaloPolicy`]). `Holdback` (default) defers the
+    /// trailing `2(L-1)` rows of every solve to the next window;
+    /// `Truncate` emits everything up to the valid edge immediately.
+    pub fn halo_policy(mut self, p: HaloPolicy) -> Self {
+        self.halo_policy = p;
+        self
+    }
+
+    /// Mairal forgetting factor for [`crate::stream::OnlineCdl`]:
+    /// `rho_t = (online_forget + 1) / (online_forget + t)`. Larger
+    /// values forget old chunks faster; `rho_1 = 1` always (the first
+    /// chunk fully seeds the statistics).
+    pub fn online_forget(mut self, f: f64) -> Self {
+        self.online_forget = f;
+        self
+    }
+
     /// Finalize into a [`Session`] that owns resident pools.
     pub fn build(self) -> Session {
         Session::new(self)
@@ -497,6 +543,18 @@ mod tests {
         assert_eq!(Dicodile::builder().max_resident_pools(3).max_resident_pools, Some(3));
         let cfg = CdlConfig::default();
         assert_eq!(Dicodile::from_cdl_config(&cfg).max_resident_pools, None);
+    }
+
+    #[test]
+    fn stream_knobs_default_and_set() {
+        let b = Dicodile::builder();
+        assert_eq!(b.chunk_len, 0);
+        assert!(matches!(b.halo_policy, HaloPolicy::Holdback));
+        assert_eq!(b.online_forget, 1.0);
+        let b = b.chunk_len(96).halo_policy(HaloPolicy::Truncate).online_forget(4.0);
+        assert_eq!(b.chunk_len, 96);
+        assert!(matches!(b.halo_policy, HaloPolicy::Truncate));
+        assert_eq!(b.online_forget, 4.0);
     }
 
     #[test]

@@ -288,6 +288,17 @@ impl Session {
         &self.inner.cfg
     }
 
+    /// Open a streaming encoder for `model` under this session's
+    /// configuration (backend, chunk length, halo policy — see
+    /// [`crate::stream::StreamEncoder`]). The encoder owns its backend
+    /// state, including any resident worker pool it retargets per
+    /// window, so it lives outside the session's pool registry; take an
+    /// [`AdmissionPermit`] around it to count the stream against the
+    /// in-flight cap (the HTTP front-end does).
+    pub fn open_stream(&self, model: &TrainedModel) -> anyhow::Result<crate::stream::StreamEncoder> {
+        crate::stream::StreamEncoder::new(&self.inner.cfg, model)
+    }
+
     // ---- fit -----------------------------------------------------------
 
     /// Learn a dictionary on `x`; returns the reusable model handle.

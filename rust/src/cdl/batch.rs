@@ -41,7 +41,7 @@ use crate::dicod::coordinator::solve_distributed_warm;
 use crate::dicod::pool::{PoolReport, WorkerPool};
 use crate::dict::grad::cost_from_stats;
 use crate::dict::pgd::update_dict;
-use crate::dict::phi_psi::{compute_stats_auto, DictStats};
+use crate::dict::phi_psi::{compute_stats_with_engine, DictStats};
 use crate::tensor::NdTensor;
 
 /// Batch CDL configuration.
@@ -361,14 +361,19 @@ pub(crate) fn learn_batch_teardown(
 
         // ---- summed statistics + one dictionary update ----------------------
         let t1 = Instant::now();
+        // One engine per outer iteration: the engine-aware dispatch adds
+        // the FFT cross-spectra path for dense activations (early
+        // iterations, before the codes sparsify).
+        let stats_engine = crate::conv::CorrEngine::new(d.clone());
         let mut agg: Option<DictStats> = None;
         let mut phipsi_path: Option<&'static str> = None;
         for (x, z) in xs.iter().zip(&zs) {
-            let (s, path) = compute_stats_auto(
+            let (s, path) = compute_stats_with_engine(
                 z.as_ref().unwrap(),
                 x,
                 &cfg.atom_dims,
                 cfg.stat_workers,
+                &stats_engine,
             );
             phipsi_path = Some(match phipsi_path {
                 None => path,

@@ -34,7 +34,7 @@ use crate::dicod::coordinator::solve_distributed_warm;
 use crate::dicod::pool::{PoolReport, WorkerPool};
 use crate::dict::grad::cost_from_stats;
 use crate::dict::pgd::{update_dict, PgdConfig};
-use crate::dict::phi_psi::compute_stats_auto;
+use crate::dict::phi_psi::compute_stats_with_engine;
 use crate::tensor::NdTensor;
 
 // The alternation loops live here; the public entry point delegates to
@@ -112,7 +112,8 @@ pub struct IterRecord {
     pub dict_time: f64,
     pub elapsed: f64,
     /// Which φ/ψ path produced the dictionary statistics:
-    /// `"sparse-seq"`, `"dense-par"` or `"worker-partials"`.
+    /// `"sparse-seq"`, `"dense-par"`, `"fft"` or `"worker-partials"`
+    /// (`"mixed"` when a corpus iteration used several).
     pub phipsi_path: &'static str,
 }
 
@@ -301,7 +302,7 @@ pub(crate) fn learn_teardown(
         // ---- dictionary step ----------------------------------------------
         let t1 = Instant::now();
         let (stats, phipsi_path) =
-            compute_stats_auto(&z, x, &cfg.atom_dims, cfg.stat_workers);
+            compute_stats_with_engine(&z, x, &cfg.atom_dims, cfg.stat_workers, &problem.corr);
         let pgd = update_dict(&stats, &d, lambda, &cfg.dict_cfg);
         d = pgd.d;
         // Resample unused atoms from residual patches (as the reference

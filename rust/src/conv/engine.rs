@@ -458,6 +458,340 @@ impl CorrEngine {
         }
         out
     }
+
+    // ---- fused residual gradient (the FISTA hot loop) --------------------
+
+    /// Precompute the observation spectra for
+    /// [`correlate_residual`](CorrEngine::correlate_residual). FISTA
+    /// evaluates `corr(Z * D - X, D)` once per iteration on the *same*
+    /// observation; composing `reconstruct` + `residual` +
+    /// `correlate_dict` would re-transform X every time and round-trip
+    /// the residual through the spatial domain (`3P` extra transforms
+    /// per evaluation). This cache holds `X^` once — the streaming
+    /// analogue of the dictionary-spectra cache. (The carried "cache
+    /// z-spectra across backtracking steps" follow-up lands here:
+    /// this FISTA takes fixed `1/(1.01 L)` steps, so the redundancy to
+    /// eliminate is *across iterations* — the per-evaluation transforms
+    /// of X and the residual — not within a backtracking line search it
+    /// does not have.)
+    pub fn grad_cache(&self, x: &NdTensor) -> GradCache {
+        let (_, p, _) = self.dims_kpl();
+        let (px, tdims) = split_channels(x.dims());
+        assert_eq!(p, px, "X and D disagree on P");
+        let pdims = Self::padded_dims(tdims);
+        let xfields: Vec<&[f64]> = (0..p).map(|pi| x.slice0(pi)).collect();
+        let xhats = if self.rfft {
+            transform_real_fields_half(&xfields, tdims, &pdims)
+        } else {
+            transform_real_fields(&xfields, tdims, &pdims)
+        };
+        GradCache { tdims: tdims.to_vec(), pdims, xhats, rfft: self.rfft }
+    }
+
+    /// Should the fused FFT residual gradient serve a signal with
+    /// spatial dims `tdims`? FISTA iterates are dense, so the direct
+    /// path is charged at full density.
+    pub fn prefers_fft_residual(&self, tdims: &[usize]) -> bool {
+        let (k, p, ldims) = self.dims_kpl();
+        if tdims.iter().zip(ldims).any(|(t, l)| t < l) {
+            return false;
+        }
+        let out_sp: usize = valid_dims(tdims, ldims).iter().product();
+        let atom_sp: usize = ldims.iter().product();
+        let pdims = Self::padded_dims(tdims);
+        let pn: f64 = pdims.iter().product::<usize>() as f64;
+        let (kf, pf) = (k as f64, p as f64);
+        // Dense reconstruct + dense correlate per evaluation.
+        let direct = 4.0 * kf * pf * out_sp as f64 * atom_sp as f64;
+        let unit = if self.rfft { real_transform_flops(pn) } else { transform_flops(pn) };
+        // K z-forwards + K grad-inverses; the pointwise accumulation
+        // visits every (k, p) pair twice (residual + gradient). X^ and
+        // D^ builds amortize over the whole solve.
+        let fft = 2.0 * kf * unit
+            + 6.0 * kf * pf * pn
+            + (kf * pf + pf) * unit / SPECTRA_AMORTIZE_CALLS;
+        fft_beats_direct(direct, fft)
+    }
+
+    /// Fused `corr(Z * D - X, D) : [K, T'..]`, entirely in the
+    /// frequency domain against the cached `X^`:
+    /// `R^_p = sum_k Z^_k D^_kp - X^_p`, then
+    /// `grad_k = IFFT(sum_p R^_p conj(D^_kp))`. Wrap-free because the
+    /// padded domain covers the full reconstruction (`N >= T`) and the
+    /// valid correlation range stays below `T`.
+    pub fn correlate_residual(&self, cache: &GradCache, z: &NdTensor) -> NdTensor {
+        assert_eq!(cache.rfft, self.rfft, "grad cache layout mismatch");
+        let (k, p, ldims) = self.dims_kpl();
+        assert_eq!(z.dims()[0], k, "Z and D disagree on K");
+        let zsp: Vec<usize> = z.dims()[1..].to_vec();
+        assert_eq!(
+            zsp,
+            valid_dims(&cache.tdims, ldims),
+            "Z does not match the cached observation's activation domain"
+        );
+        let pdims = &cache.pdims;
+        let pn: usize = pdims.iter().product();
+        let spectra = self.spectra(pdims);
+        let zfields: Vec<&[f64]> = (0..k).map(|ki| z.slice0(ki)).collect();
+
+        let mut odims = vec![k];
+        odims.extend_from_slice(&zsp);
+        let mut out = NdTensor::zeros(&odims);
+
+        if self.rfft {
+            let hn: usize = half_spectrum_dims(pdims).iter().product();
+            let zhats = transform_real_fields_half(&zfields, &zsp, pdims);
+            // Residual spectra per channel (conjugate-symmetric: every
+            // factor comes from a real field).
+            let mut rhats = vec![vec![C64::ZERO; hn]; p];
+            for (pi, rh) in rhats.iter_mut().enumerate() {
+                for (ki, zh) in zhats.iter().enumerate() {
+                    let dh = &spectra[ki * p + pi];
+                    for ((r, zv), dv) in rh.iter_mut().zip(zh).zip(dh) {
+                        *r += *zv * *dv;
+                    }
+                }
+                for (r, xv) in rh.iter_mut().zip(&cache.xhats[pi]) {
+                    *r -= *xv;
+                }
+            }
+            let mut acc = vec![C64::ZERO; hn];
+            let mut padded = vec![0.0f64; pn];
+            for ki in 0..k {
+                acc.fill(C64::ZERO);
+                for (pi, rh) in rhats.iter().enumerate() {
+                    let dh = &spectra[ki * p + pi];
+                    for ((a, rv), dv) in acc.iter_mut().zip(rh).zip(dh) {
+                        *a += *rv * dv.conj();
+                    }
+                }
+                irfftn_cached(&mut acc, pdims, &mut padded);
+                extract_real_field(&padded, pdims, out.slice0_mut(ki), &zsp);
+            }
+            return out;
+        }
+
+        let zhats = transform_real_fields(&zfields, &zsp, pdims);
+        let mut rhats = vec![vec![C64::ZERO; pn]; p];
+        for (pi, rh) in rhats.iter_mut().enumerate() {
+            for (ki, zh) in zhats.iter().enumerate() {
+                let dh = &spectra[ki * p + pi];
+                for ((r, zv), dv) in rh.iter_mut().zip(zh).zip(dh) {
+                    *r += *zv * *dv;
+                }
+            }
+            for (r, xv) in rh.iter_mut().zip(&cache.xhats[pi]) {
+                *r -= *xv;
+            }
+        }
+        let mut acc = vec![C64::ZERO; pn];
+        for ki in 0..k {
+            acc.iter_mut().for_each(|a| *a = C64::ZERO);
+            for (pi, rh) in rhats.iter().enumerate() {
+                let dh = &spectra[ki * p + pi];
+                for ((a, rv), dv) in acc.iter_mut().zip(rh).zip(dh) {
+                    *a += *rv * dv.conj();
+                }
+            }
+            fftn_cached(&mut acc, pdims, true);
+            extract_real(&acc, pdims, out.slice0_mut(ki), &zsp);
+        }
+        out
+    }
+
+    // ---- phi/psi sufficient statistics -----------------------------------
+
+    /// Should the φ/ψ statistics for activation `z` on observation
+    /// spatial dims `tdims` take the FFT path? The direct kernels are
+    /// `nnz`-aware; the FFT cost is `K + P` forwards, `K(K+1)/2 + K P`
+    /// inverses and the pointwise products, all on the padded domain.
+    pub fn prefers_fft_stats(&self, z: &NdTensor, tdims: &[usize]) -> bool {
+        let (k, p, ldims) = self.dims_kpl();
+        if tdims.iter().zip(ldims).any(|(t, l)| t < l) {
+            return false;
+        }
+        let cc_sp: usize = ldims.iter().map(|&l| 2 * l - 1).product();
+        let atom_sp: usize = ldims.iter().product();
+        let pdims = Self::padded_dims(tdims);
+        let pn: f64 = pdims.iter().product::<usize>() as f64;
+        let (kf, pf) = (k as f64, p as f64);
+        let nnz = z.nnz() as f64;
+        // Direct: every nonzero correlates against K lag windows (phi)
+        // and P atom windows (psi).
+        let direct = 2.0 * nnz * (kf * cc_sp as f64 + pf * atom_sp as f64);
+        let unit = if self.rfft { real_transform_flops(pn) } else { transform_flops(pn) };
+        let pairs = kf * (kf + 1.0) / 2.0;
+        let fft = (kf + pf) * unit            // forwards
+            + (pairs + kf * pf) * unit        // inverses
+            + 3.0 * (pairs + kf * pf) * pn; //  pointwise products
+        fft_beats_direct(direct, fft)
+    }
+
+    /// φ/ψ sufficient statistics (eq. 16) via cached-plan FFTs:
+    /// `phi[k,k'][tau] = IFFT(conj(Z^_k) Z^_k')` on the lag box
+    /// `tau in [-(L-1), L-1]^d` (negative lags live at padded index
+    /// `N_i + tau_i`), `psi[k][p, l] = IFFT(conj(Z^_k) X^_p)` on
+    /// `[0, L)^d`. The padded domain is the signal's
+    /// (`N_i >= T_i = T'_i + L_i - 1`), which keeps every extracted lag
+    /// alias-free *and* reuses the engine's cached domains. Only the
+    /// upper triangle of the `(k, k')` pairs is inverse-transformed:
+    /// `phi[k',k][-tau] = phi[k,k'][tau]` fills the rest by mirroring.
+    ///
+    /// Returns `(phi, psi)`; the caller owns `x_norm_sq` / `z_l1`.
+    pub fn phi_psi_fft(&self, z: &NdTensor, x: &NdTensor) -> (NdTensor, NdTensor) {
+        let (k, p, ldims) = self.dims_kpl();
+        assert_eq!(z.dims()[0], k, "Z and D disagree on K");
+        let (px, tdims) = split_channels(x.dims());
+        assert_eq!(p, px, "X and D disagree on P");
+        let zsp: Vec<usize> = z.dims()[1..].to_vec();
+        assert_eq!(zsp, valid_dims(tdims, ldims), "Z does not match X's activation domain");
+        let pdims = Self::padded_dims(tdims);
+        let pn: usize = pdims.iter().product();
+        let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+        let cc_sp: usize = cc_dims.iter().product();
+        let atom_sp: usize = ldims.iter().product();
+
+        let zfields: Vec<&[f64]> = (0..k).map(|ki| z.slice0(ki)).collect();
+        let xfields: Vec<&[f64]> = (0..p).map(|pi| x.slice0(pi)).collect();
+
+        let mut phi_dims = vec![k, k];
+        phi_dims.extend_from_slice(&cc_dims);
+        let mut phi = NdTensor::zeros(&phi_dims);
+        let mut psi_dims = vec![k, p];
+        psi_dims.extend_from_slice(ldims);
+        let mut psi = NdTensor::zeros(&psi_dims);
+
+        if self.rfft {
+            let mut padded = vec![0.0f64; pn];
+            let hn: usize = half_spectrum_dims(&pdims).iter().product();
+            let zhats = transform_real_fields_half(&zfields, &zsp, &pdims);
+            let xhats = transform_real_fields_half(&xfields, tdims, &pdims);
+            let mut acc = vec![C64::ZERO; hn];
+            for k0 in 0..k {
+                for k1 in k0..k {
+                    for ((a, za), zb) in acc.iter_mut().zip(&zhats[k0]).zip(&zhats[k1]) {
+                        *a = za.conj() * *zb;
+                    }
+                    irfftn_cached(&mut acc, &pdims, &mut padded);
+                    let base = (k0 * k + k1) * cc_sp;
+                    extract_lag_box(
+                        &padded,
+                        &pdims,
+                        ldims,
+                        &mut phi.data_mut()[base..base + cc_sp],
+                    );
+                    if k1 > k0 {
+                        mirror_into(&mut phi, k0, k1, k, cc_sp);
+                    }
+                }
+                for pi in 0..p {
+                    for ((a, za), xv) in acc.iter_mut().zip(&zhats[k0]).zip(&xhats[pi]) {
+                        *a = za.conj() * *xv;
+                    }
+                    irfftn_cached(&mut acc, &pdims, &mut padded);
+                    let base = (k0 * p + pi) * atom_sp;
+                    extract_real_field(
+                        &padded,
+                        &pdims,
+                        &mut psi.data_mut()[base..base + atom_sp],
+                        ldims,
+                    );
+                }
+            }
+            return (phi, psi);
+        }
+
+        let zhats = transform_real_fields(&zfields, &zsp, &pdims);
+        let xhats = transform_real_fields(&xfields, tdims, &pdims);
+        let mut acc = vec![C64::ZERO; pn];
+        for k0 in 0..k {
+            for k1 in k0..k {
+                for ((a, za), zb) in acc.iter_mut().zip(&zhats[k0]).zip(&zhats[k1]) {
+                    *a = za.conj() * *zb;
+                }
+                fftn_cached(&mut acc, &pdims, true);
+                let base = (k0 * k + k1) * cc_sp;
+                extract_lag_box_complex(
+                    &acc,
+                    &pdims,
+                    ldims,
+                    &mut phi.data_mut()[base..base + cc_sp],
+                );
+                if k1 > k0 {
+                    mirror_into(&mut phi, k0, k1, k, cc_sp);
+                }
+            }
+            for pi in 0..p {
+                for ((a, za), xv) in acc.iter_mut().zip(&zhats[k0]).zip(&xhats[pi]) {
+                    *a = za.conj() * *xv;
+                }
+                fftn_cached(&mut acc, &pdims, true);
+                let base = (k0 * p + pi) * atom_sp;
+                extract_real(&acc, &pdims, &mut psi.data_mut()[base..base + atom_sp], ldims);
+            }
+        }
+        (phi, psi)
+    }
+}
+
+/// Cached observation spectra for repeated
+/// [`CorrEngine::correlate_residual`] evaluations (one per FISTA
+/// iteration). Tied to the layout of the engine that built it.
+pub struct GradCache {
+    /// Observation spatial dims.
+    tdims: Vec<usize>,
+    /// Padded (5-smooth) domain the spectra live on.
+    pdims: Vec<usize>,
+    /// `X^` channel spectra.
+    xhats: Vec<Vec<C64>>,
+    rfft: bool,
+}
+
+/// Copy the cross-correlation lag box `tau in [-(L-1), L-1]^d` out of
+/// a circular correlation on the padded domain: per axis, lag `tau`
+/// lives at padded index `tau` (`tau >= 0`) or `N + tau` (`tau < 0`),
+/// and lands at output index `tau + L - 1`.
+fn extract_lag_box(padded: &[f64], pdims: &[usize], ldims: &[usize], out: &mut [f64]) {
+    let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let pstr = crate::tensor::shape::strides_of(pdims);
+    for (off, o) in out.iter_mut().enumerate() {
+        let idx = crate::tensor::shape::index_of(off, &cc_dims);
+        let mut src = 0usize;
+        for ((&i, &l), (&n, &s)) in idx.iter().zip(ldims).zip(pdims.iter().zip(&pstr)) {
+            let tau = i as i64 - (l as i64 - 1);
+            let pi = if tau >= 0 { tau as usize } else { (n as i64 + tau) as usize };
+            src += pi * s;
+        }
+        *o = padded[src];
+    }
+}
+
+/// Packed-complex variant of [`extract_lag_box`] (real parts of a
+/// full inverse spectrum).
+fn extract_lag_box_complex(acc: &[C64], pdims: &[usize], ldims: &[usize], out: &mut [f64]) {
+    let cc_dims: Vec<usize> = ldims.iter().map(|&l| 2 * l - 1).collect();
+    let pstr = crate::tensor::shape::strides_of(pdims);
+    for (off, o) in out.iter_mut().enumerate() {
+        let idx = crate::tensor::shape::index_of(off, &cc_dims);
+        let mut src = 0usize;
+        for ((&i, &l), (&n, &s)) in idx.iter().zip(ldims).zip(pdims.iter().zip(&pstr)) {
+            let tau = i as i64 - (l as i64 - 1);
+            let pi = if tau >= 0 { tau as usize } else { (n as i64 + tau) as usize };
+            src += pi * s;
+        }
+        *o = acc[src].re;
+    }
+}
+
+/// `phi[k1, k0][-tau] = phi[k0, k1][tau]`: with contiguous lag-box
+/// strides the mirrored offset is just `cc_sp - 1 - offset`.
+fn mirror_into(phi: &mut NdTensor, k0: usize, k1: usize, k: usize, cc_sp: usize) {
+    let src_base = (k0 * k + k1) * cc_sp;
+    let dst_base = (k1 * k + k0) * cc_sp;
+    for off in 0..cc_sp {
+        let v = phi.data()[src_base + off];
+        phi.data_mut()[dst_base + cc_sp - 1 - off] = v;
+    }
 }
 
 /// Forward-transform a batch of equally-shaped real fields to
@@ -643,5 +977,109 @@ mod tests {
         let fft = eng.correlate_dict_fft(&x);
         assert!(auto.allclose(&direct, 1e-8 * (1.0 + direct.norm_inf())));
         assert!(fft.allclose(&direct, 1e-8 * (1.0 + direct.norm_inf())));
+    }
+
+    #[test]
+    fn fused_residual_gradient_matches_composed_ops() {
+        for rfft in [true, false] {
+            for (xdims, ddims) in [
+                (vec![2usize, 40], vec![3usize, 2, 6]),
+                (vec![2, 15, 18], vec![2, 2, 4, 5]),
+            ] {
+                let x = rand_tensor(&xdims, 30);
+                let d = rand_tensor(&ddims, 31);
+                let eng = CorrEngine::new(d.clone()).with_rfft(rfft);
+                let zdims: Vec<usize> = std::iter::once(ddims[0])
+                    .chain(
+                        xdims[1..]
+                            .iter()
+                            .zip(&ddims[2..])
+                            .map(|(&t, &l)| t - l + 1),
+                    )
+                    .collect();
+                let z = rand_tensor(&zdims, 32);
+                let cache = eng.grad_cache(&x);
+                let got = eng.correlate_residual(&cache, &z);
+                let resid = conv::reconstruct(&z, &d).sub(&x);
+                let want = conv::correlate_dict(&resid, &d);
+                assert!(
+                    got.allclose(&want, 1e-8 * (1.0 + want.norm_inf())),
+                    "rfft={rfft} x={xdims:?}: diff {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_cache_is_reusable_across_iterates() {
+        let x = rand_tensor(&[1, 50], 33);
+        let d = rand_tensor(&[2, 1, 7], 34);
+        let eng = CorrEngine::new(d.clone());
+        let cache = eng.grad_cache(&x);
+        for seed in [35u64, 36, 37] {
+            let z = rand_tensor(&[2, 44], seed);
+            let got = eng.correlate_residual(&cache, &z);
+            let want = conv::correlate_dict(&conv::reconstruct(&z, &d).sub(&x), &d);
+            assert!(got.allclose(&want, 1e-8 * (1.0 + want.norm_inf())));
+        }
+    }
+
+    #[test]
+    fn phi_psi_fft_matches_direct() {
+        let mut rng = Pcg64::seeded(40);
+        for rfft in [true, false] {
+            for (xdims, ddims) in [
+                (vec![2usize, 43], vec![3usize, 2, 6]),
+                (vec![1, 30], vec![2, 1, 5]),
+                (vec![2, 14, 17], vec![2, 2, 4, 3]),
+            ] {
+                let ldims: Vec<usize> = ddims[2..].to_vec();
+                let zdims: Vec<usize> = std::iter::once(ddims[0])
+                    .chain(xdims[1..].iter().zip(&ldims).map(|(&t, &l)| t - l + 1))
+                    .collect();
+                let x = rand_tensor(&xdims, rng.below(1 << 30) as u64);
+                let z = NdTensor::from_vec(
+                    &zdims,
+                    rng.bernoulli_gaussian_vec(zdims.iter().product(), 0.3, 0.0, 2.0),
+                );
+                let d = rand_tensor(&ddims, rng.below(1 << 30) as u64);
+                let eng = CorrEngine::new(d).with_rfft(rfft);
+                let (phi, psi) = eng.phi_psi_fft(&z, &x);
+                let phi_want = conv::compute_phi(&z, &ldims);
+                let psi_want = conv::compute_psi(&z, &x, &ldims);
+                assert!(
+                    phi.allclose(&phi_want, 1e-8 * (1.0 + phi_want.norm_inf())),
+                    "rfft={rfft} x={xdims:?}: phi diff {}",
+                    phi.max_abs_diff(&phi_want)
+                );
+                assert!(
+                    psi.allclose(&psi_want, 1e-8 * (1.0 + psi_want.norm_inf())),
+                    "rfft={rfft} x={xdims:?}: psi diff {}",
+                    psi.max_abs_diff(&psi_want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stats_dispatch_is_density_aware() {
+        if std::env::var("DICODILE_FFT_CROSSOVER").is_ok() {
+            eprintln!("skipping: DICODILE_FFT_CROSSOVER is set");
+            return;
+        }
+        let d = rand_tensor(&[8, 1, 16, 16], 50);
+        let eng = CorrEngine::new(d);
+        let mut z = NdTensor::zeros(&[8, 200, 200]);
+        *z.at_mut(&[0, 5, 5]) = 1.0;
+        assert!(
+            !eng.prefers_fft_stats(&z, &[215, 215]),
+            "near-empty Z must keep the direct stats path"
+        );
+        let zd = rand_tensor(&[8, 200, 200], 51);
+        assert!(
+            eng.prefers_fft_stats(&zd, &[215, 215]),
+            "dense large Z must take the FFT stats path"
+        );
     }
 }

@@ -21,6 +21,7 @@
 //! | `Stop`         | (ends the solve phase) | sent by the pool on convergence     | tag only                            |
 //! | `ComputeStats` | `Stats`                | local φ^w/ψ^w partials (eq. 17)     | tag / two tensors + `z_l1`, `z_nnz` |
 //! | `SetDict`      | `DictSet`              | swap D, warm beta re-init from Z    | [`DictUpdate`] (D + λ + fingerprint)|
+//! | `SetProblem`   | `ProblemSet`           | swap X *and* D (streaming chunks)   | [`ProblemUpdate`] (X + D + λ + Z0)  |
 //! | `Gather`       | `Done`                 | report the cell's activation values | tag / flat cell values + counters   |
 //! | `Shutdown`     | (thread exits)         |                                     | tag only                            |
 //!
@@ -130,6 +131,39 @@ pub enum SetDictMsg {
     Wire(DictUpdate),
 }
 
+/// Serializable problem swap: what crosses a process boundary on
+/// `SetProblem`. Unlike [`DictUpdate`] this carries the observation
+/// itself — the streaming encoder re-targets a resident grid at a new
+/// signal window every chunk, so the resident X is *wrong*, not merely
+/// stale. The optional `z0` warm-starts the activation window (the
+/// stitching holdback carried over from the previous chunk).
+#[derive(Clone, Debug)]
+pub struct ProblemUpdate {
+    /// The new observation `[P, T..]` (same dims as the resident one).
+    pub x: NdTensor,
+    /// The dictionary `[K, P, L..]`.
+    pub d: NdTensor,
+    /// The (absolute) regularization weight.
+    pub lambda: f64,
+    /// Optional full-domain warm-start activation `[K, T'..]`.
+    pub z0: Option<NdTensor>,
+}
+
+/// Problem broadcast for the streaming path. Mirrors [`SetDictMsg`]:
+/// the in-process transport ships `Shared` (one `Arc`d problem + warm
+/// start for the whole grid), the socket transport flattens it to the
+/// [`ProblemUpdate`] wire form and the receiving worker rebuilds a
+/// local `CscProblem`. The geometry (X dims, D dims) must match the
+/// resident problem exactly — the workers' windows were sized from it
+/// and are *not* re-partitioned on a swap.
+#[derive(Clone, Debug)]
+pub enum SetProblemMsg {
+    /// Same-process broadcast: one shared problem + optional warm start.
+    Shared { problem: Arc<CscProblem>, z0: Option<Arc<NdTensor>> },
+    /// Cross-process broadcast: rebuild locally from the wire tensors.
+    Wire(ProblemUpdate),
+}
+
 /// Coordinator/pool -> worker commands, plus worker -> worker traffic.
 #[derive(Clone, Debug)]
 pub enum WorkerMsg {
@@ -143,6 +177,9 @@ pub enum WorkerMsg {
     ComputeStats,
     /// Swap the dictionary; re-bootstrap beta warm from the resident Z.
     SetDict(SetDictMsg),
+    /// Swap observation + dictionary on an unchanged geometry; reset Z
+    /// (optionally to a provided warm start) and re-bootstrap beta.
+    SetProblem(SetProblemMsg),
     /// Report the cell's activation values (final assembly only).
     Gather,
     /// Exit the worker thread.
@@ -207,6 +244,7 @@ pub enum CoordMsg {
     SolveDone(SolveDoneMsg),
     Stats(StatsMsg),
     DictSet { from: usize },
+    ProblemSet { from: usize },
     Done(DoneMsg),
 }
 
@@ -363,6 +401,8 @@ const TAG_STATS: u8 = 11;
 const TAG_DICT_SET: u8 = 12;
 const TAG_DONE: u8 = 13;
 const TAG_BOOTSTRAP: u8 = 14;
+const TAG_SET_PROBLEM: u8 = 15;
+const TAG_PROBLEM_SET: u8 = 16;
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -440,6 +480,16 @@ fn put_dict_update(out: &mut Vec<u8>, du: &DictUpdate) {
     put_tensor(out, &du.d);
     put_f64(out, du.lambda);
     put_u64(out, du.fingerprint);
+}
+
+fn put_problem_update(out: &mut Vec<u8>, pu: &ProblemUpdate) {
+    put_tensor(out, &pu.x);
+    put_tensor(out, &pu.d);
+    put_f64(out, pu.lambda);
+    put_bool(out, pu.z0.is_some());
+    if let Some(z0) = &pu.z0 {
+        put_tensor(out, z0);
+    }
 }
 
 /// Strict little-endian payload reader. Every getter fails with
@@ -589,6 +639,21 @@ pub fn encode_worker_frame(msg: &WorkerMsg) -> Vec<u8> {
                 SetDictMsg::Wire(du) => put_dict_update(&mut out, du),
             }
         }
+        WorkerMsg::SetProblem(sp) => {
+            out.push(TAG_SET_PROBLEM);
+            match sp {
+                SetProblemMsg::Shared { problem, z0 } => put_problem_update(
+                    &mut out,
+                    &ProblemUpdate {
+                        x: (*problem.x).clone(),
+                        d: problem.d.clone(),
+                        lambda: problem.lambda,
+                        z0: z0.as_ref().map(|z| (**z).clone()),
+                    },
+                ),
+                SetProblemMsg::Wire(pu) => put_problem_update(&mut out, pu),
+            }
+        }
         WorkerMsg::Gather => out.push(TAG_GATHER),
         WorkerMsg::Shutdown => out.push(TAG_SHUTDOWN),
     }
@@ -623,6 +688,10 @@ pub fn encode_coord_frame(msg: &CoordMsg) -> Vec<u8> {
         }
         CoordMsg::DictSet { from } => {
             out.push(TAG_DICT_SET);
+            put_usize(&mut out, *from);
+        }
+        CoordMsg::ProblemSet { from } => {
+            out.push(TAG_PROBLEM_SET);
             put_usize(&mut out, *from);
         }
         CoordMsg::Done(d) => {
@@ -688,6 +757,15 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame, WireError> {
             let du = w.dict_update()?;
             w.finish(WireFrame::Worker(WorkerMsg::SetDict(SetDictMsg::Wire(du))))
         }
+        TAG_SET_PROBLEM => {
+            let x = w.tensor()?;
+            let d = w.tensor()?;
+            let lambda = w.f64_()?;
+            let z0 = if w.bool_()? { Some(w.tensor()?) } else { None };
+            w.finish(WireFrame::Worker(WorkerMsg::SetProblem(SetProblemMsg::Wire(
+                ProblemUpdate { x, d, lambda, z0 },
+            ))))
+        }
         TAG_GATHER => w.finish(WireFrame::Worker(WorkerMsg::Gather)),
         TAG_SHUTDOWN => w.finish(WireFrame::Worker(WorkerMsg::Shutdown)),
         TAG_FWD => {
@@ -723,6 +801,10 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame, WireError> {
         TAG_DICT_SET => {
             let from = w.usize_()?;
             w.finish(WireFrame::Coord(CoordMsg::DictSet { from }))
+        }
+        TAG_PROBLEM_SET => {
+            let from = w.usize_()?;
+            w.finish(WireFrame::Coord(CoordMsg::ProblemSet { from }))
         }
         TAG_DONE => {
             let d = DoneMsg { from: w.usize_()?, z_cell: w.vec_f64()?, stats: w.stats()? };
@@ -843,6 +925,71 @@ mod tests {
             }
             other => panic!("wrong frame: {other:?}"),
         }
+    }
+
+    #[test]
+    fn set_problem_frame_round_trips_exactly() {
+        for z0 in [None, Some(NdTensor::from_vec(&[2, 4], vec![0.0, 1.5, 0.0, -2.0, 0.0, 0.0, 3.0, 0.0]))] {
+            let pu = ProblemUpdate {
+                x: NdTensor::from_vec(&[1, 7], (0..7).map(|i| i as f64 * 0.5).collect()),
+                d: NdTensor::from_vec(&[2, 1, 4], (0..8).map(|i| -(i as f64)).collect()),
+                lambda: 0.125,
+                z0,
+            };
+            let frame =
+                encode_worker_frame(&WorkerMsg::SetProblem(SetProblemMsg::Wire(pu.clone())));
+            match decode_frame(&frame).unwrap() {
+                WireFrame::Worker(WorkerMsg::SetProblem(SetProblemMsg::Wire(got))) => {
+                    assert_eq!(got.x.data(), pu.x.data());
+                    assert_eq!(got.x.dims(), pu.x.dims());
+                    assert_eq!(got.d.data(), pu.d.data());
+                    assert_eq!(got.lambda, pu.lambda);
+                    match (&got.z0, &pu.z0) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            assert_eq!(a.dims(), b.dims());
+                            assert_eq!(a.data(), b.data());
+                        }
+                        other => panic!("z0 mismatch: {other:?}"),
+                    }
+                }
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn shared_set_problem_flattens_to_wire() {
+        // The channel->socket seam encodes a Shared broadcast down to
+        // its wire tensors; the decoded form must carry the same data.
+        let x = NdTensor::from_vec(&[1, 10], (0..10).map(|i| i as f64).collect());
+        let d = NdTensor::from_vec(&[1, 1, 3], vec![1.0, -1.0, 0.5]);
+        let p = Arc::new(CscProblem::new(x.clone(), d.clone(), 0.25));
+        let z0 = Arc::new(NdTensor::from_vec(&[1, 8], vec![0.0; 8]));
+        let frame = encode_worker_frame(&WorkerMsg::SetProblem(SetProblemMsg::Shared {
+            problem: p,
+            z0: Some(z0),
+        }));
+        match decode_frame(&frame).unwrap() {
+            WireFrame::Worker(WorkerMsg::SetProblem(SetProblemMsg::Wire(got))) => {
+                assert_eq!(got.x.data(), x.data());
+                assert_eq!(got.d.data(), d.data());
+                assert_eq!(got.lambda, 0.25);
+                assert_eq!(got.z0.unwrap().dims(), &[1, 8]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn problem_set_reply_round_trips() {
+        let frame = encode_coord_frame(&CoordMsg::ProblemSet { from: 5 });
+        match decode_frame(&frame).unwrap() {
+            WireFrame::Coord(CoordMsg::ProblemSet { from }) => assert_eq!(from, 5),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // Truncated reply payloads are rejected.
+        assert!(matches!(decode_frame(&frame[..frame.len() - 1]), Err(WireError::Truncated)));
     }
 
     #[test]

@@ -46,7 +46,7 @@ use std::time::{Duration, Instant};
 
 use crate::csc::problem::CscProblem;
 use crate::dicod::config::DicodConfig;
-use crate::dicod::messages::{CoordMsg, SetDictMsg, WorkerMsg, WorkerStats};
+use crate::dicod::messages::{CoordMsg, SetDictMsg, SetProblemMsg, WorkerMsg, WorkerStats};
 use crate::dicod::partition::WorkerGrid;
 use crate::dicod::transport::{make_transport, CoordEndpoint, RecvError, TransportKind};
 use crate::dicod::worker::{run_pool_worker, PoolWorkerCtx};
@@ -398,6 +398,50 @@ impl WorkerPool {
         });
     }
 
+    /// Broadcast a whole new problem — observation *and* dictionary —
+    /// on an unchanged geometry, optionally with a full-domain warm
+    /// start. This is the streaming-chunk swap: unlike
+    /// [`set_dict`](WorkerPool::set_dict) the observation may be a
+    /// different tensor (each chunk is a fresh signal window), so the
+    /// cached `x_norm_sq` is refreshed and the workers reset their
+    /// resident Z (to `z0` when given) and re-bootstrap beta. Geometry
+    /// (activation domain, atom count/dims) must match the spawn-time
+    /// problem: the worker windows are not re-partitioned.
+    pub fn set_problem(&mut self, problem: Arc<CscProblem>, z0: Option<&NdTensor>) {
+        assert_eq!(
+            problem.z_spatial_dims(),
+            self.problem.z_spatial_dims(),
+            "problem swap must preserve the activation domain"
+        );
+        assert_eq!(
+            problem.n_atoms(),
+            self.problem.n_atoms(),
+            "problem swap must preserve the atom count"
+        );
+        assert_eq!(
+            problem.atom_dims(),
+            self.problem.atom_dims(),
+            "problem swap must preserve the atom dims"
+        );
+        if let Some(z0) = z0 {
+            assert_eq!(
+                z0.dims(),
+                &problem.z_dims()[..],
+                "warm-start Z dims must match the problem's activation dims"
+            );
+        }
+        let z0 = z0.map(|z| Arc::new(z.clone()));
+        let w_tot = self.n_workers();
+        self.problem = problem.clone();
+        self.x_norm_sq = problem.x.norm_sq();
+        self.broadcast(WorkerMsg::SetProblem(SetProblemMsg::Shared { problem, z0 }));
+        let timeout = self.cfg.timeout;
+        Self::await_replies(self.coord.as_mut(), w_tot, timeout, "set_problem", |m| match m {
+            CoordMsg::ProblemSet { from } => Some(from),
+            _ => None,
+        });
+    }
+
     /// Assemble the full activation tensor from the workers' cells.
     /// This is the only point where Z is centralized — call it once,
     /// for the final result.
@@ -580,6 +624,58 @@ mod tests {
         assert!(stats.psi.allclose(&want.psi, 1e-9), "psi partial reduction mismatch");
         assert!((stats.z_l1 - want.z_l1).abs() < 1e-9 * (1.0 + want.z_l1));
         assert_eq!(nnz, z.nnz());
+    }
+
+    #[test]
+    fn set_problem_retargets_the_grid_at_a_new_observation() {
+        // Two independent problems with identical geometry: solving the
+        // second on a pool spawned for the first (via set_problem) must
+        // land on the same optimum as a fresh sequential solve, and the
+        // pool's x_norm_sq must follow the swap (compute_stats uses it).
+        let p0 = gen_problem_1d(27, 120, 2, 5);
+        let p1 = gen_problem_1d(28, 120, 2, 5);
+        let cfg = DicodConfig { n_workers: 3, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p0.clone()), &cfg, None);
+        assert!(pool.solve().converged);
+
+        pool.set_problem(Arc::new(p1.clone()), None);
+        assert!(pool.solve().converged, "swapped-in problem must converge");
+        let (stats, _) = pool.compute_stats();
+        assert!(
+            (stats.x_norm_sq - p1.x.norm_sq()).abs() < 1e-9 * (1.0 + p1.x.norm_sq()),
+            "x_norm_sq must track the swapped observation"
+        );
+        let z = pool.gather();
+        let seq = solve_cd(&p1, &CdConfig { tol: 1e-8, ..Default::default() });
+        let (cd, cs) = (p1.cost(&z), p1.cost(&seq.z));
+        assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "{cd} vs {cs}");
+        // Residency held: no respawn, one cold init at spawn plus one
+        // warm-or-cold re-bootstrap per worker at the swap.
+        assert_eq!(pool.workers_spawned(), pool.n_workers());
+        let agg = pool.aggregate_stats();
+        assert_eq!(agg.beta_cold_inits, 2 * pool.n_workers() as u64);
+    }
+
+    #[test]
+    fn set_problem_warm_start_is_loaded() {
+        // Broadcasting the sequential optimum as z0 must leave the grid
+        // already converged: the next solve does zero updates.
+        let p = gen_problem_1d(29, 120, 2, 5);
+        let seq = solve_cd(&p, &CdConfig { tol: 1e-8, ..Default::default() });
+        let cfg = DicodConfig { n_workers: 2, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        assert!(pool.solve().converged);
+        let updates_before = pool.aggregate_stats().updates;
+        pool.set_problem(Arc::new(p.clone()), Some(&seq.z));
+        assert!(pool.solve().converged);
+        let agg = pool.aggregate_stats();
+        assert_eq!(
+            agg.updates, updates_before,
+            "solve from the broadcast optimum must be a no-op"
+        );
+        assert_eq!(agg.beta_warm_inits, pool.n_workers() as u64);
+        let z = pool.gather();
+        assert!(z.allclose(&seq.z, 1e-12), "gathered Z must be the warm start");
     }
 
     #[test]

@@ -52,8 +52,8 @@ use crate::csc::problem::CscProblem;
 use crate::csc::select::{Segments, SelectMode, SelectionState, Strategy};
 use crate::dicod::config::DicodConfig;
 use crate::dicod::messages::{
-    CoordMsg, DictUpdate, DoneMsg, SetDictMsg, SolveDoneMsg, StatsMsg, StatusMsg, UpdateMsg,
-    WorkerMsg, WorkerStats,
+    CoordMsg, DictUpdate, DoneMsg, SetDictMsg, SetProblemMsg, SolveDoneMsg, StatsMsg, StatusMsg,
+    UpdateMsg, WorkerMsg, WorkerStats,
 };
 use crate::dicod::partition::{box_difference, NeighborLink, WorkerGrid};
 use crate::dicod::transport::{RecvError, WorkerEndpoint};
@@ -193,6 +193,55 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
                 stats.work += sel.coords_cache_filled - filled_before;
                 stats.beta_warm_reinits += 1;
                 endpoint.send_coord(CoordMsg::DictSet { from: rank });
+            }
+            Ok(WorkerMsg::SetProblem(msg)) => {
+                // Streaming chunk swap: new observation (and possibly a
+                // new dictionary/λ) on an *unchanged* geometry — the
+                // cell/extension/window rectangles computed at spawn
+                // stay valid, so the worker replays its bootstrap
+                // in place instead of being respawned.
+                let (p_new, z0_new) = match msg {
+                    SetProblemMsg::Shared { problem: p, z0 } => (p, z0),
+                    SetProblemMsg::Wire(pu) => (
+                        Arc::new(CscProblem::new(pu.x, pu.d, pu.lambda)),
+                        pu.z0.map(Arc::new),
+                    ),
+                };
+                assert_eq!(
+                    p_new.z_spatial_dims(),
+                    zsp,
+                    "worker {rank}: SetProblem must preserve the activation domain"
+                );
+                assert_eq!(
+                    p_new.n_atoms(),
+                    k_tot,
+                    "worker {rank}: SetProblem must preserve the atom count"
+                );
+                assert_eq!(
+                    p_new.atom_dims(),
+                    problem.atom_dims(),
+                    "worker {rank}: SetProblem must preserve the atom dims"
+                );
+                problem = p_new;
+                // The resident Z belongs to the *previous* observation:
+                // reset it, optionally to the broadcast warm start (the
+                // stitching holdback from the preceding chunk).
+                z = ZWindow::zeros(k_tot, &zwin.lo, &zwin.extents());
+                beta = match &z0_new {
+                    Some(z0) => {
+                        z.load_from_global(z0);
+                        stats.beta_warm_inits += 1;
+                        BetaWindow::init_window_warm(&problem, &ext.lo, &ext_dims, &z)
+                    }
+                    None => {
+                        stats.beta_cold_inits += 1;
+                        BetaWindow::init_window(&problem, &ext.lo, &ext_dims)
+                    }
+                };
+                let filled_before = sel.coords_cache_filled;
+                sel.rebuild(&problem, &beta, &z);
+                stats.work += sel.coords_cache_filled - filled_before;
+                endpoint.send_coord(CoordMsg::ProblemSet { from: rank });
             }
             Ok(WorkerMsg::Gather) => {
                 stats.gathers += 1;

@@ -9,6 +9,6 @@ pub mod phi_psi;
 pub use grad::{cost_from_stats, grad_from_stats};
 pub use pgd::{update_dict, PgdConfig, PgdResult};
 pub use phi_psi::{
-    compute_stats, compute_stats_auto, compute_stats_parallel, local_stats_windows,
-    worker_stats_partials, DictStats,
+    compute_stats, compute_stats_auto, compute_stats_parallel, compute_stats_with_engine,
+    local_stats_windows, worker_stats_partials, DictStats,
 };

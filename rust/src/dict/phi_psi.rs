@@ -122,6 +122,34 @@ pub fn compute_stats_auto(
     )
 }
 
+/// Engine-aware statistics dispatch: like [`compute_stats_auto`], but
+/// with a third candidate path — the half-spectrum FFT cross-spectra
+/// kernel ([`conv::CorrEngine::phi_psi_fft`]) — for the dense-Z regime
+/// where transform cost beats both direct kernels. Sparse post-CSC
+/// activations still take the nonzero-pair path; the FFT path kicks in
+/// when the activation is dense (early iterations, FISTA iterates,
+/// online chunks before the code sparsifies) *and* the engine's flop
+/// model says the transforms win. Reported paths: `"sparse-seq"`,
+/// `"dense-par"`, `"fft"`.
+pub fn compute_stats_with_engine(
+    z: &NdTensor,
+    x: &NdTensor,
+    ldims: &[usize],
+    n_workers: usize,
+    corr: &conv::CorrEngine,
+) -> (DictStats, &'static str) {
+    let density = z.nnz() as f64 / z.len().max(1) as f64;
+    let tdims: Vec<usize> = x.dims()[1..].to_vec();
+    if density >= phipsi_density_threshold() && corr.prefers_fft_stats(z, &tdims) {
+        let (phi, psi) = corr.phi_psi_fft(z, x);
+        return (
+            DictStats { phi, psi, x_norm_sq: x.norm_sq(), z_l1: z.norm1() },
+            "fft",
+        );
+    }
+    compute_stats_auto(z, x, ldims, n_workers)
+}
+
 /// Partial `(phi^w, psi^w)` with the outer sum restricted to `S_w`,
 /// computed from *global* tensors (the thread map-reduce path): copies
 /// the cell/extended windows and defers to [`local_stats_windows`].
@@ -341,6 +369,47 @@ mod tests {
         let zs = NdTensor::zeros(z.dims());
         let (_, path2) = compute_stats_auto(&zs, &x, &l, 4);
         assert_eq!(path2, "sparse-seq");
+    }
+
+    #[test]
+    fn engine_dispatch_matches_direct_stats() {
+        // Whatever path the engine-aware dispatch picks, the statistics
+        // must equal the direct sequential reference.
+        for (z, x, l) in [workload_1d(11), workload_2d(12)] {
+            let k = z.dims()[0];
+            let p = x.dims()[0];
+            let mut rng = Pcg64::seeded(13);
+            let mut ddims = vec![k, p];
+            ddims.extend_from_slice(&l);
+            let d = NdTensor::from_vec(&ddims, rng.normal_vec(ddims.iter().product()));
+            let corr = crate::conv::CorrEngine::new(d);
+            let seq = compute_stats(&z, &x, &l);
+            for w in [1usize, 3] {
+                let (s, path) = compute_stats_with_engine(&z, &x, &l, w, &corr);
+                assert!(
+                    matches!(path, "sparse-seq" | "dense-par" | "fft"),
+                    "unknown path {path}"
+                );
+                let tol = 1e-8 * (1.0 + seq.phi.norm_inf());
+                assert!(s.phi.allclose(&seq.phi, tol), "phi mismatch via {path}");
+                let tol = 1e-8 * (1.0 + seq.psi.norm_inf());
+                assert!(s.psi.allclose(&seq.psi, tol), "psi mismatch via {path}");
+                assert!((s.x_norm_sq - seq.x_norm_sq).abs() < 1e-10);
+                assert!((s.z_l1 - seq.z_l1).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_dispatch_keeps_sparse_path_for_sparse_z() {
+        // Near-empty activations must never pay transform cost.
+        let (z, x, l) = workload_1d(14);
+        let zs = NdTensor::zeros(z.dims());
+        let mut rng = Pcg64::seeded(15);
+        let d = NdTensor::from_vec(&[3, 2, 8], rng.normal_vec(48));
+        let corr = crate::conv::CorrEngine::new(d);
+        let (_, path) = compute_stats_with_engine(&zs, &x, &l, 4, &corr);
+        assert_eq!(path, "sparse-seq");
     }
 
     #[test]

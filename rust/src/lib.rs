@@ -66,6 +66,18 @@
 //! for overload (429) and bad input — tensors cross the wire with
 //! shortest-roundtrip decimals, so a served encode is bit-identical to
 //! its in-process counterpart.
+//! Above the facade, [`stream`] removes the whole-observation memory
+//! requirement: a [`stream::StreamEncoder`] consumes a signal in
+//! arbitrary pushes along spatial axis 0, keeping only a
+//! `2(L-1)`-halo solve window plus two `(L-1)`-row carried activation
+//! strips (ghost tail for exact conditioning on the emitted prefix,
+//! carry for warm starts) and re-targeting one resident worker pool
+//! per window through the `SetProblem` phase — so an unbounded stream
+//! is encoded without ever materializing it; and
+//! [`stream::OnlineCdl`] learns dictionaries Mairal-style from
+//! decaying running averages of the φ/ψ sufficient statistics, one
+//! chunk at a time (`dicodile stream` / `dicodile learn --online` /
+//! `POST /v1/encode-stream` are the CLI/HTTP faces).
 //! Batch-heavy algebra can optionally be offloaded to AOT-compiled
 //! JAX/Pallas artifacts executed through the PJRT CPU client
 //! ([`runtime`], behind the `pjrt` feature), with native fallbacks for
@@ -121,6 +133,7 @@ pub mod admm;
 pub mod fft;
 pub mod runtime;
 pub mod serve;
+pub mod stream;
 pub mod tensor;
 pub mod util;
 
@@ -133,6 +146,7 @@ pub mod prelude {
     pub use crate::csc::select::Strategy;
     pub use crate::data::synthetic::SyntheticConfig;
     pub use crate::dicod::config::{DicodConfig, PartitionKind, TransportKind};
+    pub use crate::stream::{ChunkResult, HaloPolicy, OnlineCdl, StreamEncoder};
     pub use crate::tensor::NdTensor;
     pub use crate::util::rng::Pcg64;
 }

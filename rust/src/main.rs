@@ -4,7 +4,13 @@
 //!   csc         sparse-code a (generated) workload with a chosen solver;
 //!               `--model path.json` encodes against a saved trained model
 //!   learn       full CDL on a synthetic / starfield / texture workload;
-//!               `--save-model path.json` persists the trained model
+//!               `--save-model path.json` persists the trained model;
+//!               `--online --chunk N` learns from decaying running
+//!               averages of per-chunk sufficient statistics instead of
+//!               whole-corpus alternations
+//!   stream      encode an unbounded signal incrementally: read rows from
+//!               stdin or a file, solve bounded windows, emit activation
+//!               chunks as JSON lines — the signal is never materialized
 //!   serve       HTTP/1.1 serving front-end: route /v1/encode,
 //!               /v1/reconstruct, /v1/denoise, /v1/models, /v1/status
 //!               onto one shared session backed by a versioned model
@@ -35,6 +41,7 @@ use dicodile::data::synthetic::SyntheticConfig;
 use dicodile::data::texture::TextureConfig;
 use dicodile::runtime::Manifest;
 use dicodile::serve::{self, HttpClient, HttpConfig, ModelRegistry, ServeState};
+use dicodile::stream::{HaloPolicy, OnlineCdl};
 use dicodile::tensor::NdTensor;
 use dicodile::util::cli::Parser;
 use dicodile::util::json::Json;
@@ -47,6 +54,7 @@ fn main() {
     let code = match sub.as_str() {
         "csc" => cmd_csc(rest),
         "learn" => cmd_learn(rest),
+        "stream" => cmd_stream(rest),
         "serve" => cmd_serve(rest),
         "serve-bench" => cmd_serve_bench(rest),
         "worker" => cmd_worker(rest),
@@ -68,11 +76,15 @@ fn main() {
 fn print_help() {
     println!(
         "dicodile — Distributed Convolutional Dictionary Learning\n\n\
-         USAGE: dicodile <csc|learn|serve|serve-bench|worker|info|gen> [options]\n\n\
+         USAGE: dicodile <csc|learn|stream|serve|serve-bench|worker|info|gen> [options]\n\n\
          csc    sparse-code a synthetic workload (solvers: lgcd, gcd, rcd, fista, dicodile, dicod;\n\
                 --model loads a saved trained model)\n\
          learn  learn a dictionary (workloads: synthetic, starfield, texture;\n\
-                --save-model persists the trained model)\n\
+                --save-model persists the trained model; --online --chunk N\n\
+                learns from streaming chunk statistics)\n\
+         stream encode an unbounded 1-D signal through a trained model: rows\n\
+                arrive on stdin (or --input file), bounded solve windows emit\n\
+                activation chunks as JSON lines — memory stays O(window)\n\
          serve  HTTP front-end on --listen <host:port|uds-path>: POST /v1/encode,\n\
                 /v1/reconstruct, /v1/denoise + GET /v1/models, /v1/status over one\n\
                 shared session and a versioned model registry (--registry <root>)\n\
@@ -221,6 +233,9 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
         .opt("seed", Some("0"), "rng seed")
         .opt("out", None, "save learned dictionary mosaic to this PGM path")
         .opt("save-model", None, "save the trained model (JSON) for `csc --model`")
+        .opt("chunk", Some("0"), "online mode: rows per chunk along spatial axis 0 (0 = auto)")
+        .opt("forget", Some("1"), "online mode: Mairal forgetting factor c in rho_t = (c+1)/(c+t)")
+        .flag("online", "learn from decaying running averages of per-chunk statistics (Mairal-style) instead of whole-signal alternations")
         .flag("verbose", "print per-iteration progress");
     let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
         eprintln!("{m}");
@@ -240,6 +255,9 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
         .seed(a.get_u64("seed"))
         .verbose(a.has_flag("verbose"));
     builder = if workers > 0 { builder.dicodile(workers) } else { builder.sequential() };
+    if a.has_flag("online") {
+        return learn_online(&a, builder, &x, l, reg);
+    }
     let session = builder.build();
     match session.fit_result(&x) {
         Ok(r) => {
@@ -277,6 +295,318 @@ fn cmd_learn(tokens: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+/// `dicodile learn --online`: slice the workload along spatial axis 0
+/// and feed the chunks to [`OnlineCdl`] — each is coded with the
+/// current dictionary, its φ/ψ statistics fold into decaying running
+/// averages, and one PGD step runs per chunk. Memory is bounded by one
+/// chunk regardless of the workload size.
+fn learn_online(
+    a: &dicodile::util::cli::Args,
+    builder: DicodileBuilder,
+    x: &NdTensor,
+    l: usize,
+    reg: f64,
+) -> i32 {
+    let builder = builder.online_forget(a.get_f64("forget").max(1e-9));
+    let t0 = x.dims()[1];
+    let chunk_rows = match a.get_usize("chunk") {
+        0 => (4 * l).max(64).min(t0),
+        n => n,
+    };
+    if chunk_rows < l {
+        eprintln!("--chunk {chunk_rows} is smaller than the atom extent {l}");
+        return 2;
+    }
+    let row_elems: usize = x.dims()[2..].iter().product::<usize>().max(1);
+    let p = x.dims()[0];
+    let slice_rows = |start: usize, take: usize| -> NdTensor {
+        let mut dims = vec![p, take];
+        dims.extend_from_slice(&x.dims()[2..]);
+        let mut data = Vec::with_capacity(p * take * row_elems);
+        for pi in 0..p {
+            data.extend_from_slice(&x.slice0(pi)[start * row_elems..(start + take) * row_elems]);
+        }
+        NdTensor::from_vec(&dims, data)
+    };
+
+    let mut online: Option<OnlineCdl> = None;
+    let mut start = 0usize;
+    while t0 - start >= l {
+        let take = chunk_rows.min(t0 - start);
+        let chunk = slice_rows(start, take);
+        if online.is_none() {
+            online = match OnlineCdl::init_from_chunk(&builder, &chunk) {
+                Ok(o) => Some(o),
+                Err(e) => {
+                    eprintln!("online init failed: {e}");
+                    return 1;
+                }
+            };
+        }
+        let o = online.as_mut().expect("initialized above");
+        match o.step(&chunk) {
+            Ok(s) => {
+                if a.has_flag("verbose") {
+                    println!(
+                        "t={:3}  rho={:.3}  cost {:.4e} -> {:.4e}  nnz={}  phipsi={}",
+                        s.t, s.rho, s.cost_before, s.cost, s.z_nnz, s.phipsi_path
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("online step failed at row {start}: {e}");
+                return 1;
+            }
+        }
+        start += take;
+    }
+    let online = match online {
+        Some(o) => o,
+        None => {
+            eprintln!("workload shorter than one atom extent; nothing to learn from");
+            return 1;
+        }
+    };
+    let steps = online.steps();
+    let (first, last) = {
+        let tr = online.trace();
+        (tr.first().map(|s| s.cost), tr.last().map(|s| s.cost))
+    };
+    let lambda = online.lambda();
+    let model = online.into_model();
+    println!(
+        "online CDL: {} chunks of {} rows, lambda {:.4e}, running-stats cost {:.4e} -> {:.4e}",
+        steps,
+        chunk_rows,
+        lambda,
+        first.unwrap_or(f64::NAN),
+        last.unwrap_or(f64::NAN)
+    );
+    if let Some(path) = a.get("out") {
+        if model.d.ndim() == 4 {
+            if let Err(e) = io::save_dict_mosaic(std::path::Path::new(path), &model.d, 5) {
+                eprintln!("cannot save mosaic: {e}");
+            } else {
+                println!("saved atom mosaic to {path}");
+            }
+        }
+    }
+    if let Some(path) = a.get("save-model") {
+        match model.save(path) {
+            Ok(()) => println!("saved model to {path}"),
+            Err(e) => {
+                eprintln!("cannot save model: {e}");
+                return 1;
+            }
+        }
+    }
+    let _ = reg; // lambda_frac already travels on the builder/model
+    0
+}
+
+/// `dicodile stream`: encode a 1-D signal of unbounded length. Rows
+/// arrive as text lines (one line per signal row, `P` whitespace-
+/// separated values) on stdin or `--input`; they are batched into
+/// pushes, solved on a bounded window (see `dicodile::stream`), and
+/// every emitted activation chunk leaves immediately as one JSON line
+/// `{"offset": n, "converged": b, "z": {"dims": [...], "data": [...]}}`.
+/// The whole signal is never resident: peak memory is one solve window
+/// plus one push, reported on stderr at the end.
+fn cmd_stream(tokens: Vec<String>) -> i32 {
+    let parser = Parser::new("dicodile stream", "streaming encode of an unbounded signal")
+        .opt("model", None, "trained model JSON (from `learn --save-model`); required")
+        .opt("input", Some("-"), "signal rows as text lines (- = stdin)")
+        .opt("output", Some("-"), "emitted activation chunks as JSON lines (- = stdout)")
+        .opt("chunk", Some("0"), "steady-state activation rows emitted per solve (0 = auto)")
+        .opt("push-rows", Some("256"), "input rows batched per encoder push")
+        .opt("halo", Some("holdback"), "boundary policy: holdback|truncate")
+        .opt("workers", Some("0"), "distributed workers per window (0 = sequential)")
+        .opt("tol", Some("1e-6"), "window solve tolerance")
+        .opt("seed", Some("0"), "rng seed");
+    let a = parser.parse_tokens(tokens).unwrap_or_else(|m| {
+        eprintln!("{m}");
+        std::process::exit(2)
+    });
+    let model = match a.get("model") {
+        Some(path) => match TrainedModel::load(path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("cannot load model: {e}");
+                return 1;
+            }
+        },
+        None => {
+            eprintln!("dicodile stream: --model <path.json> is required");
+            return 2;
+        }
+    };
+    if model.atom_dims().len() != 1 {
+        eprintln!(
+            "model atoms {:?} are not 1-D; text input streams along a single spatial axis",
+            model.atom_dims()
+        );
+        return 2;
+    }
+    let p = model.n_channels();
+    let halo: HaloPolicy = match a.get_str("halo").parse() {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let workers = a.get_usize("workers");
+    let mut builder = Dicodile::builder()
+        .tol(a.get_f64("tol"))
+        .seed(a.get_u64("seed"))
+        .chunk_len(a.get_usize("chunk"))
+        .halo_policy(halo);
+    builder = if workers > 0 { builder.dicodile(workers) } else { builder.sequential() };
+    let session = builder.build();
+    let mut enc = match session.open_stream(&model) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot open stream: {e}");
+            return 1;
+        }
+    };
+
+    let input = a.get_str("input");
+    let reader: Box<dyn std::io::BufRead> = if input == "-" {
+        Box::new(std::io::BufReader::new(std::io::stdin()))
+    } else {
+        match std::fs::File::open(&input) {
+            Ok(f) => Box::new(std::io::BufReader::new(f)),
+            Err(e) => {
+                eprintln!("cannot open {input}: {e}");
+                return 1;
+            }
+        }
+    };
+    let output = a.get_str("output");
+    let mut writer: Box<dyn std::io::Write> = if output == "-" {
+        Box::new(std::io::BufWriter::new(std::io::stdout()))
+    } else {
+        match std::fs::File::create(&output) {
+            Ok(f) => Box::new(std::io::BufWriter::new(f)),
+            Err(e) => {
+                eprintln!("cannot create {output}: {e}");
+                return 1;
+            }
+        }
+    };
+
+    let push_rows = a.get_usize("push-rows").max(1);
+    let mut bufs: Vec<Vec<f64>> = vec![Vec::with_capacity(push_rows); p];
+    let mut rows_in = 0usize;
+    let mut emit = |enc: &mut dicodile::stream::StreamEncoder,
+                    bufs: &mut Vec<Vec<f64>>,
+                    writer: &mut Box<dyn std::io::Write>|
+     -> Result<(), String> {
+        let rows = bufs[0].len();
+        if rows == 0 {
+            return Ok(());
+        }
+        let mut data = Vec::with_capacity(p * rows);
+        for b in bufs.iter_mut() {
+            data.append(b);
+        }
+        let chunk = NdTensor::from_vec(&[p, rows], data);
+        let out = enc.push(&chunk).map_err(|e| format!("push failed: {e}"))?;
+        for c in &out {
+            write_stream_chunk(writer, c).map_err(|e| format!("cannot write output: {e}"))?;
+        }
+        Ok(())
+    };
+
+    for (line_no, line) in reader.lines().enumerate() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("input read failed at line {}: {e}", line_no + 1);
+                return 1;
+            }
+        };
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> =
+            trimmed.split_whitespace().map(str::parse::<f64>).collect();
+        let vals = match vals {
+            Ok(v) if v.len() == p => v,
+            Ok(v) => {
+                eprintln!(
+                    "line {}: {} values for a {p}-channel model",
+                    line_no + 1,
+                    v.len()
+                );
+                return 1;
+            }
+            Err(e) => {
+                eprintln!("line {}: {e}", line_no + 1);
+                return 1;
+            }
+        };
+        for (b, v) in bufs.iter_mut().zip(&vals) {
+            b.push(*v);
+        }
+        rows_in += 1;
+        if bufs[0].len() >= push_rows {
+            if let Err(e) = emit(&mut enc, &mut bufs, &mut writer) {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    }
+    if let Err(e) = emit(&mut enc, &mut bufs, &mut writer) {
+        eprintln!("{e}");
+        return 1;
+    }
+    match enc.finish() {
+        Ok(out) => {
+            for c in &out {
+                if let Err(e) = write_stream_chunk(&mut writer, c) {
+                    eprintln!("cannot write output: {e}");
+                    return 1;
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("finish failed: {e}");
+            return 1;
+        }
+    }
+    if let Err(e) = writer.flush() {
+        eprintln!("cannot flush output: {e}");
+        return 1;
+    }
+    eprintln!(
+        "stream: {} rows in, {} activation rows out, lambda {:.4e}, \
+         peak resident {} rows (window {} + push)",
+        rows_in,
+        enc.emitted_rows(),
+        enc.lambda(),
+        enc.peak_resident_rows(),
+        enc.chunk_len()
+    );
+    0
+}
+
+/// One emitted chunk as a JSON line (same tensor wire format as the
+/// HTTP surface).
+fn write_stream_chunk(
+    w: &mut impl std::io::Write,
+    c: &dicodile::stream::ChunkResult,
+) -> std::io::Result<()> {
+    let rec = Json::obj(vec![
+        ("offset", Json::Num(c.offset as f64)),
+        ("converged", Json::Bool(c.converged)),
+        ("z", serve::tensor_to_json(&c.z)),
+    ]);
+    writeln!(w, "{}", rec.dumps())
 }
 
 /// `dicodile serve`: bind the HTTP front-end and serve until killed.

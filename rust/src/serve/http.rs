@@ -8,7 +8,10 @@
 //! - request line + headers + `Content-Length` bodies (chunked
 //!   transfer encoding is rejected with 501),
 //! - persistent connections (HTTP/1.1 keep-alive by default,
-//!   `Connection: close` honored; HTTP/1.0 closes per request),
+//!   `Connection: close` honored; HTTP/1.0 closes per request). An
+//!   idle keep-alive connection past the read timeout closes silently;
+//!   a peer that stalls *mid-request* gets a `408` first — either way
+//!   the pool worker is released, never pinned forever,
 //! - bounded inputs: header lines and bodies larger than
 //!   [`MAX_BODY_LEN`] / [`MAX_HEADER_LEN`] are refused, mirroring the
 //!   wire codec's `MAX_FRAME_LEN` stance (a malformed or hostile peer
@@ -210,14 +213,20 @@ pub fn write_response(
 
 /// Why a request could not be parsed (maps to a response + close).
 enum ReadError {
-    /// Clean EOF at a request boundary, or an idle keep-alive timeout —
-    /// close silently.
+    /// Clean EOF at a request boundary, or an idle keep-alive timeout
+    /// *between* requests — close silently.
     Closed,
+    /// The peer stalled mid-request (request line started, headers or
+    /// body unfinished past the read timeout): respond `408`, close.
+    TimedOut,
     /// Protocol violation: respond with this status/message, then close.
     Bad(u16, String),
 }
 
-fn read_line_bounded(r: &mut impl BufRead) -> Result<String, ReadError> {
+/// `started` marks reads past the request line: a timeout there is a
+/// stalled request (408), while a timeout on an idle connection waiting
+/// for its *next* request line is a clean keep-alive close.
+fn read_line_bounded(r: &mut impl BufRead, started: bool) -> Result<String, ReadError> {
     let mut line = String::new();
     loop {
         let avail = match r.fill_buf() {
@@ -226,7 +235,11 @@ fn read_line_bounded(r: &mut impl BufRead) -> Result<String, ReadError> {
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                return Err(ReadError::Closed)
+                return if started || !line.is_empty() {
+                    Err(ReadError::TimedOut)
+                } else {
+                    Err(ReadError::Closed)
+                }
             }
             Err(_) => return Err(ReadError::Closed),
         };
@@ -254,9 +267,19 @@ fn read_line_bounded(r: &mut impl BufRead) -> Result<String, ReadError> {
     }
 }
 
-/// Read one request off the connection.
-fn read_request(r: &mut BufReader<Conn>) -> Result<Request, ReadError> {
-    let start = read_line_bounded(r)?;
+/// Request line + headers, body not yet consumed — so routes that
+/// stream their body (`/v1/encode-stream`) can read it incrementally
+/// off the connection instead of buffering it whole.
+struct RequestHead {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    content_length: usize,
+}
+
+/// Read one request's head off the connection.
+fn read_request_head(r: &mut BufReader<Conn>) -> Result<RequestHead, ReadError> {
+    let start = read_line_bounded(r, false)?;
     let mut parts = start.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
@@ -267,7 +290,7 @@ fn read_request(r: &mut BufReader<Conn>) -> Result<Request, ReadError> {
     let mut keep_alive = proto == "HTTP/1.1";
     let mut content_length: usize = 0;
     loop {
-        let line = read_line_bounded(r)?;
+        let line = read_line_bounded(r, true)?;
         if line.is_empty() {
             break;
         }
@@ -300,10 +323,21 @@ fn read_request(r: &mut BufReader<Conn>) -> Result<Request, ReadError> {
             _ => {}
         }
     }
-    let mut body = vec![0u8; content_length];
-    r.read_exact(&mut body)
-        .map_err(|_| ReadError::Bad(400, "truncated body".into()))?;
-    Ok(Request { method, path, body, keep_alive })
+    Ok(RequestHead { method, path, keep_alive, content_length })
+}
+
+/// Read a request body of `len` bytes; a stall past the read timeout
+/// is a 408, a peer hangup mid-body a 400.
+fn read_body(r: &mut BufReader<Conn>, len: usize) -> Result<Vec<u8>, ReadError> {
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::WouldBlock || e.kind() == std::io::ErrorKind::TimedOut {
+            ReadError::TimedOut
+        } else {
+            ReadError::Bad(400, "truncated body".into())
+        }
+    })?;
+    Ok(body)
 }
 
 // ---------------------------------------------------------------------------
@@ -513,6 +547,21 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Respond to a fatal read error (nothing for a clean close) and let
+/// the caller drop the connection.
+fn respond_read_error(writer: &mut Conn, state: &Arc<ServeState>, e: ReadError) {
+    let (status, resp) = match e {
+        ReadError::Closed => return,
+        ReadError::TimedOut => (
+            408,
+            Response::error(408, "timeout", "connection stalled mid-request past the read timeout"),
+        ),
+        ReadError::Bad(status, msg) => (status, Response::error(status, "bad_request", &msg)),
+    };
+    state.record(status);
+    let _ = write_response(writer, status, &resp.body, false);
+}
+
 /// Serve one connection: read → route → respond until close.
 fn handle_connection(conn: Conn, state: &Arc<ServeState>) {
     let reader_half = match conn.try_clone() {
@@ -522,25 +571,41 @@ fn handle_connection(conn: Conn, state: &Arc<ServeState>) {
     let mut reader = BufReader::new(reader_half);
     let mut writer = conn;
     loop {
-        match read_request(&mut reader) {
-            Ok(req) => {
-                let keep = req.keep_alive;
-                let resp = route(state, &req);
-                state.record(resp.status);
-                if write_response(&mut writer, resp.status, &resp.body, keep).is_err() {
-                    return;
-                }
-                if !keep {
-                    return;
-                }
-            }
-            Err(ReadError::Closed) => return,
-            Err(ReadError::Bad(status, msg)) => {
-                state.record(status);
-                let body = Response::error(status, "bad_request", &msg).body;
-                let _ = write_response(&mut writer, status, &body, false);
+        let head = match read_request_head(&mut reader) {
+            Ok(h) => h,
+            Err(e) => return respond_read_error(&mut writer, state, e),
+        };
+        let keep = head.keep_alive;
+        // The streaming route reads its body incrementally off the
+        // connection (the signal is never buffered whole); every other
+        // route gets the fully-read body it expects.
+        if head.method == "POST"
+            && head.path.split('?').next().unwrap_or("") == "/v1/encode-stream"
+        {
+            let mut body = (&mut reader).take(head.content_length as u64);
+            let resp = crate::serve::router::route_stream(state, &mut body);
+            // Keep-alive framing: the handler may bail mid-body; drain
+            // what it left so the next request starts at a boundary.
+            let drained = std::io::copy(&mut body, &mut std::io::sink()).is_ok();
+            let keep = keep && drained;
+            state.record(resp.status);
+            if write_response(&mut writer, resp.status, &resp.body, keep).is_err() || !keep {
                 return;
             }
+            continue;
+        }
+        let body = match read_body(&mut reader, head.content_length) {
+            Ok(b) => b,
+            Err(e) => return respond_read_error(&mut writer, state, e),
+        };
+        let req = Request { method: head.method, path: head.path, body, keep_alive: keep };
+        let resp = route(state, &req);
+        state.record(resp.status);
+        if write_response(&mut writer, resp.status, &resp.body, keep).is_err() {
+            return;
+        }
+        if !keep {
+            return;
         }
     }
 }

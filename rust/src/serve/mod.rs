@@ -10,9 +10,12 @@
 //!   PR 6 socket transport: std `TcpListener`/`UnixListener`, a fixed
 //!   worker thread pool, strict bounded framing, plus the minimal
 //!   client the loopback tests and `serve-bench --http` drive.
-//! - [`router`] — the JSON API: `POST /v1/encode` / `/v1/reconstruct`
-//!   / `/v1/denoise`, `GET /v1/models` / `/v1/status`, with structured
-//!   error bodies and bit-exact tensor transport.
+//! - [`router`] — the JSON API: `POST /v1/encode` / `/v1/encode-stream`
+//!   (JSON-lines body decoded incrementally off the socket through a
+//!   [`crate::stream::StreamEncoder`], never buffered whole) /
+//!   `/v1/reconstruct` / `/v1/denoise`, `GET /v1/models` /
+//!   `/v1/status`, with structured error bodies and bit-exact tensor
+//!   transport.
 //! - [`registry`] — the versioned on-disk model store
 //!   (`<root>/<name>/<version>/model.json`), resolved by
 //!   `name@version` or bare `name` → latest, warm-loaded once per key
@@ -38,5 +41,5 @@ pub mod state;
 
 pub use http::{spawn, Bound, HttpClient, HttpConfig, Request, Response, ServerHandle};
 pub use registry::{CachedModel, ModelRegistry, RegistryEntry};
-pub use router::{route, tensor_from_json, tensor_to_json};
+pub use router::{route, route_stream, tensor_from_json, tensor_to_json};
 pub use state::ServeState;

@@ -1,14 +1,15 @@
 //! Request routing: the JSON API surface of `dicodile serve`.
 //!
-//! Five routes on one shared [`ServeState`]:
+//! Six routes on one shared [`ServeState`]:
 //!
-//! | route                  | body                                   | returns |
-//! |------------------------|----------------------------------------|---------|
-//! | `POST /v1/encode`      | `{"model": spec, "x": tensor}`         | sparse code `z` + cost/lambda/convergence |
-//! | `POST /v1/reconstruct` | `{"model": spec, "z": tensor}`         | reconstruction `x = Z * D` |
-//! | `POST /v1/denoise`     | `{"model": spec, "x": tensor}`         | denoised `x` (encode + reconstruct) |
-//! | `GET /v1/models`       | —                                      | registry listing (names, versions, dims, cache state) |
-//! | `GET /v1/status`       | —                                      | server / session / registry counters |
+//! | route                    | body                                   | returns |
+//! |--------------------------|----------------------------------------|---------|
+//! | `POST /v1/encode`        | `{"model": spec, "x": tensor}`         | sparse code `z` + cost/lambda/convergence |
+//! | `POST /v1/encode-stream` | JSON lines: header, then tensor chunks | emitted activation batches (see [`route_stream`]) |
+//! | `POST /v1/reconstruct`   | `{"model": spec, "z": tensor}`         | reconstruction `x = Z * D` |
+//! | `POST /v1/denoise`       | `{"model": spec, "x": tensor}`         | denoised `x` (encode + reconstruct) |
+//! | `GET /v1/models`         | —                                      | registry listing (names, versions, dims, cache state) |
+//! | `GET /v1/status`         | —                                      | server / session / registry counters |
 //!
 //! `spec` is a registry address — `name@version` or bare `name` for the
 //! latest published version; `tensor` is `{"dims": [...], "data":
@@ -44,7 +45,7 @@ pub fn route(state: &Arc<ServeState>, req: &Request) -> Response {
         ("POST", "/v1/reconstruct") => admitted(state, req, reconstruct),
         ("POST", "/v1/denoise") => admitted(state, req, denoise),
         (_, "/v1/status") | (_, "/v1/models") | (_, "/v1/encode") | (_, "/v1/reconstruct")
-        | (_, "/v1/denoise") => Response::error(
+        | (_, "/v1/denoise") | (_, "/v1/encode-stream") => Response::error(
             405,
             "method_not_allowed",
             &format!("{} not allowed on {path}", req.method),
@@ -182,6 +183,121 @@ fn denoise(state: &Arc<ServeState>, body: &Json) -> Result<Response, Response> {
             ("converged", Json::Bool(r.converged)),
         ]),
     ))
+}
+
+/// `POST /v1/encode-stream`: JSON-lines body, decoded incrementally.
+///
+/// The first line is a header `{"model": spec, "chunk": N?}` (`chunk`
+/// overrides the session's steady-state chunk length); every further
+/// line is one `{"dims": [P, rows, ...], "data": [...]}` tensor, fed to
+/// a [`StreamEncoder`](crate::stream::StreamEncoder) as soon as its
+/// line is parsed — the transport hands this handler the raw body
+/// reader, so the observation is never materialized whole server-side;
+/// residency is one solve window regardless of `Content-Length`. The
+/// response carries every emitted activation batch in order:
+/// `{"chunks": [{"offset": n, "z": tensor, "converged": b}, ...],
+/// "lambda": l, "emitted_rows": n, "peak_resident_rows": n}`.
+///
+/// Dispatched by the transport before normal routing (it is the one
+/// route that must not have its body pre-read); `route` still owns the
+/// 405 for other methods on the path.
+pub fn route_stream(state: &Arc<ServeState>, body: &mut impl std::io::BufRead) -> Response {
+    let _permit = match state.session.try_admit() {
+        Some(p) => p,
+        None => {
+            return Response::error(
+                429,
+                "over_capacity",
+                "session at max_inflight_requests; retry later",
+            )
+        }
+    };
+    let mut line = String::new();
+    match body.read_line(&mut line) {
+        Ok(0) => {
+            return Response::error(
+                422,
+                "invalid_request",
+                "empty stream body (expected a JSON-lines header)",
+            )
+        }
+        Ok(_) => {}
+        Err(_) => return Response::error(400, "bad_request", "unreadable stream body"),
+    }
+    let header = match Json::parse(line.trim()) {
+        Ok(h) => h,
+        Err(e) => return Response::error(400, "bad_json", &format!("stream header: {e}")),
+    };
+    let cached = match resolve_model(state, &header) {
+        Ok(c) => c,
+        Err(resp) => return resp,
+    };
+    let enc = match header.get("chunk").and_then(|c| c.as_usize()).filter(|&n| n > 0) {
+        Some(n) => crate::stream::StreamEncoder::new(
+            &state.session.config().clone().chunk_len(n),
+            &cached.model,
+        ),
+        None => state.session.open_stream(&cached.model),
+    };
+    let mut enc = match enc {
+        Ok(e) => e,
+        Err(e) => return Response::error(422, "stream_failed", &format!("{e}")),
+    };
+    let mut chunks: Vec<Json> = Vec::new();
+    let mut line_no = 1usize;
+    loop {
+        line.clear();
+        match body.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(_) => return Response::error(400, "bad_request", "unreadable stream body"),
+        }
+        line_no += 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let t = match Json::parse(trimmed)
+            .map_err(|e| format!("{e}"))
+            .and_then(|j| tensor_from_json(&j).map_err(|e| format!("{e}")))
+        {
+            Ok(t) => t,
+            Err(e) => {
+                return Response::error(
+                    422,
+                    "invalid_request",
+                    &format!("stream line {line_no}: {e}"),
+                )
+            }
+        };
+        match enc.push(&t) {
+            Ok(out) => chunks.extend(out.iter().map(chunk_to_json)),
+            Err(e) => return Response::error(422, "encode_failed", &format!("{e}")),
+        }
+    }
+    match enc.finish() {
+        Ok(out) => chunks.extend(out.iter().map(chunk_to_json)),
+        Err(e) => return Response::error(422, "encode_failed", &format!("{e}")),
+    }
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("model", Json::str(&cached.spec())),
+            ("generation", Json::Num(cached.generation as f64)),
+            ("chunks", Json::Arr(chunks)),
+            ("lambda", Json::Num(enc.lambda())),
+            ("emitted_rows", Json::Num(enc.emitted_rows() as f64)),
+            ("peak_resident_rows", Json::Num(enc.peak_resident_rows() as f64)),
+        ]),
+    )
+}
+
+fn chunk_to_json(c: &crate::stream::ChunkResult) -> Json {
+    Json::obj(vec![
+        ("offset", Json::Num(c.offset as f64)),
+        ("z", tensor_to_json(&c.z)),
+        ("converged", Json::Bool(c.converged)),
+    ])
 }
 
 fn models(state: &Arc<ServeState>) -> Response {

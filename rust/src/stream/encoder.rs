@@ -1,0 +1,644 @@
+//! Chunked streaming encode on a bounded resident window.
+//!
+//! See the module docs for the halo carry-over/stitching invariant.
+//! The encoder state is, per channel, the signal rows
+//! `[win_start, buf_end)` plus two `(L-1)`-row activation strips (ghost
+//! tail and warm-start carry) — independent of how much signal has
+//! streamed past.
+
+use std::sync::Arc;
+
+use crate::api::builder::{Backend, DicodileBuilder};
+use crate::api::TrainedModel;
+use crate::conv::CorrEngine;
+use crate::csc::cd::{solve_cd_warm, CdConfig};
+use crate::csc::problem::CscProblem;
+use crate::dicod::{DicodConfig, WorkerPool};
+use crate::stream::HaloPolicy;
+use crate::tensor::NdTensor;
+
+/// One batch of emitted activations.
+#[derive(Clone, Debug)]
+pub struct ChunkResult {
+    /// Emitted activation rows, `[K, rows, T1'..]`.
+    pub z: NdTensor,
+    /// Global activation row (streaming axis) of `z`'s first row.
+    pub offset: usize,
+    /// Whether the producing window solve hit its tolerance.
+    pub converged: bool,
+}
+
+enum StreamBackend {
+    /// Warm-started sequential coordinate descent.
+    Sequential(CdConfig),
+    /// Worker grid. With `cfg.persistent`, the pool for the
+    /// steady-state window geometry is spawned once and retargeted per
+    /// chunk via `set_problem`; odd-sized windows (the final partial
+    /// one) run on an ephemeral pool.
+    Distributed { cfg: DicodConfig, pool: Option<WorkerPool> },
+}
+
+/// Streaming encoder: feed signal rows with [`push`](StreamEncoder::push),
+/// collect activation rows as they become final, and drain the rest
+/// with [`finish`](StreamEncoder::finish).
+pub struct StreamEncoder {
+    d: NdTensor,
+    k: usize,
+    p: usize,
+    /// Atom extent along the streaming axis.
+    l0: usize,
+    /// Halo rows carried across windows: `2(L-1)`.
+    pad: usize,
+    /// Steady-state activation rows emitted per solve.
+    chunk_len: usize,
+    policy: HaloPolicy,
+    /// Frozen regularization; 0 until the first solve when derived
+    /// from data.
+    lambda: f64,
+    lambda_frac: f64,
+    backend: StreamBackend,
+    /// Shared spectra cache: every window problem is built on a clone
+    /// of this engine, so repeated steady-state geometry reuses the
+    /// dictionary spectra.
+    corr: CorrEngine,
+
+    // Geometry of the non-streamed axes, fixed by the first chunk.
+    sig_rest: Option<Vec<usize>>,
+    row_elems: usize,
+    z_rest: Vec<usize>,
+    z_row_elems: usize,
+
+    // Rolling state.
+    /// Per-channel signal rows `[win_start, buf_end)`, row-major.
+    buf: Vec<Vec<f64>>,
+    /// Global signal row of the buffer front.
+    win_start: usize,
+    /// Next global activation row to emit.
+    emit_lo: usize,
+    /// Activation rows `[win_start - (L-1), win_start)`, flat
+    /// `[K, L-1, T1'..]` (zeros for rows before the signal start).
+    z_tail: Vec<f64>,
+    /// Previous solve's values on activation rows
+    /// `[win_start, win_start + L - 1)`, same layout; warm start.
+    z_carry: Vec<f64>,
+    have_carry: bool,
+
+    peak_resident_rows: usize,
+    finished: bool,
+}
+
+impl StreamEncoder {
+    /// Build a streaming encoder for `model` under the session
+    /// configuration. Fails for the FISTA backend, which solves
+    /// fixed-size problems from scratch and cannot be warm-started
+    /// across windows.
+    pub(crate) fn new(cfg: &DicodileBuilder, model: &TrainedModel) -> anyhow::Result<StreamEncoder> {
+        let d = model.d.clone();
+        anyhow::ensure!(
+            d.ndim() >= 3,
+            "dictionary must be [K, P, L..], got {:?}",
+            d.dims()
+        );
+        let k = d.dims()[0];
+        let p = d.dims()[1];
+        let l0 = d.dims()[2];
+        anyhow::ensure!(l0 >= 1, "empty atom extent");
+        let pad = 2 * (l0 - 1);
+        let chunk_len = if cfg.chunk_len == 0 { (2 * pad).max(64) } else { cfg.chunk_len };
+        let backend = match &cfg.backend {
+            Backend::Sequential(s) => StreamBackend::Sequential(CdConfig {
+                strategy: *s,
+                tol: cfg.tol,
+                seed: cfg.seed,
+                ..CdConfig::default()
+            }),
+            Backend::Fista => anyhow::bail!(
+                "the FISTA backend cannot stream: pick .sequential() or .dicodile(w)"
+            ),
+            Backend::Distributed(dc) => StreamBackend::Distributed {
+                cfg: DicodConfig { tol: cfg.tol, ..dc.clone() },
+                pool: None,
+            },
+        };
+        Ok(StreamEncoder {
+            corr: CorrEngine::new(d.clone()),
+            d,
+            k,
+            p,
+            l0,
+            pad,
+            chunk_len,
+            policy: cfg.halo_policy,
+            lambda: model.lambda.max(0.0),
+            lambda_frac: model.lambda_frac,
+            backend,
+            sig_rest: None,
+            row_elems: 0,
+            z_rest: Vec::new(),
+            z_row_elems: 0,
+            buf: vec![Vec::new(); p],
+            win_start: 0,
+            emit_lo: 0,
+            z_tail: Vec::new(),
+            z_carry: Vec::new(),
+            have_carry: false,
+            peak_resident_rows: 0,
+            finished: false,
+        })
+    }
+
+    /// Steady-state activation rows emitted per solve.
+    pub fn chunk_len(&self) -> usize {
+        self.chunk_len
+    }
+
+    /// The frozen regularization (0 until the first solve derives it).
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Activation rows emitted so far.
+    pub fn emitted_rows(&self) -> usize {
+        self.emit_lo
+    }
+
+    /// Signal rows currently resident.
+    pub fn resident_rows(&self) -> usize {
+        self.rows_buffered()
+    }
+
+    /// High-water mark of resident signal rows — the RSS proxy the
+    /// stream bench reports against the whole-signal length.
+    pub fn peak_resident_rows(&self) -> usize {
+        self.peak_resident_rows
+    }
+
+    fn rows_buffered(&self) -> usize {
+        if self.row_elems == 0 { 0 } else { self.buf[0].len() / self.row_elems }
+    }
+
+    /// Feed `chunk` (`[P, rows, T1..]`; `rows` is arbitrary, the other
+    /// axes are fixed by the first chunk) and return every batch of
+    /// activation rows that became final.
+    pub fn push(&mut self, chunk: &NdTensor) -> anyhow::Result<Vec<ChunkResult>> {
+        anyhow::ensure!(!self.finished, "push after finish()");
+        let ldims = &self.d.dims()[2..];
+        anyhow::ensure!(
+            chunk.ndim() == ldims.len() + 1,
+            "chunk must be [P, rows{}], got {:?}",
+            if ldims.len() > 1 { ", T1.." } else { "" },
+            chunk.dims()
+        );
+        anyhow::ensure!(
+            chunk.dims()[0] == self.p,
+            "chunk channels {} vs dictionary channels {}",
+            chunk.dims()[0],
+            self.p
+        );
+        match &self.sig_rest {
+            None => {
+                let rest = chunk.dims()[2..].to_vec();
+                for (&t, &l) in rest.iter().zip(&ldims[1..]) {
+                    anyhow::ensure!(
+                        t >= l,
+                        "non-streamed axis extent {t} smaller than atom extent {l}"
+                    );
+                }
+                self.z_rest = rest.iter().zip(&ldims[1..]).map(|(&t, &l)| t - l + 1).collect();
+                self.row_elems = rest.iter().product::<usize>().max(1);
+                self.z_row_elems = self.z_rest.iter().product::<usize>().max(1);
+                self.z_tail = vec![0.0; self.k * (self.l0 - 1) * self.z_row_elems];
+                self.z_carry = vec![0.0; self.k * (self.l0 - 1) * self.z_row_elems];
+                self.sig_rest = Some(rest);
+            }
+            Some(rest) => anyhow::ensure!(
+                &chunk.dims()[2..] == &rest[..],
+                "chunk trailing dims {:?} changed mid-stream (expected {:?})",
+                &chunk.dims()[2..],
+                rest
+            ),
+        }
+        for pi in 0..self.p {
+            self.buf[pi].extend_from_slice(chunk.slice0(pi));
+        }
+        self.peak_resident_rows = self.peak_resident_rows.max(self.rows_buffered());
+
+        let mut out = Vec::new();
+        while self.rows_buffered() >= self.pad + self.chunk_len {
+            let win_len = self.pad + self.chunk_len;
+            if let Some(r) = self.solve_window(win_len, false)? {
+                out.push(r);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Solve whatever remains, emit every still-pending activation row
+    /// (including the held-back rim — the signal end *is* its right
+    /// context), and release the backend. The encoder stays readable
+    /// afterwards (`lambda()`, `peak_resident_rows()`) but accepts no
+    /// further pushes.
+    pub fn finish(&mut self) -> anyhow::Result<Vec<ChunkResult>> {
+        anyhow::ensure!(!self.finished, "finish() called twice");
+        self.finished = true;
+        let mut out = Vec::new();
+        let remaining = self.rows_buffered();
+        // Trailing signal rows shorter than one atom support no new
+        // activation row; nothing left to solve for them.
+        if remaining >= self.l0 && self.win_start + remaining - self.l0 + 1 > self.emit_lo {
+            if let Some(r) = self.solve_window(remaining, true)? {
+                out.push(r);
+            }
+        }
+        if let StreamBackend::Distributed { pool: Some(p), .. } = &mut self.backend {
+            p.shutdown();
+        }
+        Ok(out)
+    }
+
+    /// Solve the window `[win_start, win_start + win_len)`: assemble
+    /// the ghost-corrected observation, warm-start from the carry,
+    /// dispatch to the backend, emit the rows that became final, and
+    /// (for steady windows) roll the carried state forward.
+    fn solve_window(&mut self, win_len: usize, is_final: bool) -> anyhow::Result<Option<ChunkResult>> {
+        let (k, p, l0) = (self.k, self.p, self.l0);
+        let re = self.row_elems;
+        let zre = self.z_row_elems;
+        let win_end = self.win_start + win_len;
+        let zw_rows = win_len - l0 + 1;
+        let rest = self.sig_rest.clone().expect("solve before first chunk");
+
+        // Window observation.
+        let mut xdims = vec![p, win_len];
+        xdims.extend_from_slice(&rest);
+        let mut xw = NdTensor::zeros(&xdims);
+        for pi in 0..p {
+            xw.slice0_mut(pi).copy_from_slice(&self.buf[pi][..win_len * re]);
+        }
+
+        // Ghost correction: the frozen activations left of the window
+        // reach `L-1` signal rows into it; subtract their
+        // reconstruction so the window subproblem is the global one
+        // conditioned on that frozen prefix.
+        if self.win_start > 0 && l0 > 1 {
+            let mut tdims = vec![k, l0 - 1];
+            tdims.extend_from_slice(&self.z_rest);
+            let tail = NdTensor::from_vec(&tdims, self.z_tail.clone());
+            // recon rows map to global signal rows
+            // [win_start - (L-1), win_start + L - 1): only the last
+            // L-1 rows land inside the window.
+            let recon = crate::conv::reconstruct(&tail, &self.d);
+            for pi in 0..p {
+                let rp = recon.slice0(pi);
+                let xp = xw.slice0_mut(pi);
+                for i in 0..l0 - 1 {
+                    let src = &rp[(l0 - 1 + i) * re..(l0 + i) * re];
+                    for (x, r) in xp[i * re..(i + 1) * re].iter_mut().zip(src) {
+                        *x -= r;
+                    }
+                }
+            }
+        }
+
+        // Freeze lambda on the first solve when the model carries none.
+        if self.lambda <= 0.0 {
+            self.lambda = self.lambda_frac * self.corr.correlate_dict(&xw).norm_inf();
+            anyhow::ensure!(self.lambda > 0.0, "degenerate stream: lambda_max = 0 on the first window");
+        }
+
+        // Warm start from the carry on the shared rows.
+        let mut zdims = vec![k, zw_rows];
+        zdims.extend_from_slice(&self.z_rest);
+        let mut z0 = NdTensor::zeros(&zdims);
+        if self.have_carry && l0 > 1 {
+            let n = (l0 - 1).min(zw_rows);
+            for ki in 0..k {
+                z0.slice0_mut(ki)[..n * zre]
+                    .copy_from_slice(&self.z_carry[ki * (l0 - 1) * zre..][..n * zre]);
+            }
+        }
+
+        let problem = Arc::new(CscProblem::with_engine(
+            Arc::new(xw),
+            self.d.clone(),
+            self.lambda,
+            self.corr.clone(),
+        ));
+        let (z, converged) = self.dispatch(problem, &z0, !is_final)?;
+
+        // Emission.
+        let emit_hi = if is_final {
+            self.win_start + zw_rows
+        } else {
+            match self.policy {
+                HaloPolicy::Holdback => win_end - self.pad,
+                HaloPolicy::Truncate => win_end - l0 + 1,
+            }
+        };
+        let result = if emit_hi > self.emit_lo {
+            let lo = self.emit_lo - self.win_start;
+            let hi = emit_hi - self.win_start;
+            let mut edims = vec![k, hi - lo];
+            edims.extend_from_slice(&self.z_rest);
+            let mut ze = NdTensor::zeros(&edims);
+            for ki in 0..k {
+                ze.slice0_mut(ki)
+                    .copy_from_slice(&z.slice0(ki)[lo * zre..hi * zre]);
+            }
+            let offset = self.emit_lo;
+            self.emit_lo = emit_hi;
+            Some(ChunkResult { z: ze, offset, converged })
+        } else {
+            None
+        };
+
+        if !is_final {
+            let new_start = win_end - self.pad;
+            if l0 > 1 {
+                // Ghost tail <- activation rows
+                // [new_start - (L-1), new_start). With a short
+                // chunk_len some of them predate this window and come
+                // from the old tail.
+                let mut tail = vec![0.0; k * (l0 - 1) * zre];
+                for i in 0..l0 - 1 {
+                    let r = new_start - (l0 - 1) + i; // >= win_start - (L-1) >= 0 here
+                    for ki in 0..k {
+                        let dst = &mut tail[(ki * (l0 - 1) + i) * zre..][..zre];
+                        if r >= self.win_start {
+                            let loc = r - self.win_start;
+                            dst.copy_from_slice(&z.slice0(ki)[loc * zre..(loc + 1) * zre]);
+                        } else {
+                            let old = r - (self.win_start - (l0 - 1));
+                            dst.copy_from_slice(&self.z_tail[(ki * (l0 - 1) + old) * zre..][..zre]);
+                        }
+                    }
+                }
+                self.z_tail = tail;
+                // Carry <- this solve's values on the rows the next
+                // window re-solves: [new_start, new_start + L - 1)
+                // == local rows [zw_rows - (L-1), zw_rows).
+                for ki in 0..k {
+                    self.z_carry[ki * (l0 - 1) * zre..][..(l0 - 1) * zre]
+                        .copy_from_slice(&z.slice0(ki)[(zw_rows - (l0 - 1)) * zre..zw_rows * zre]);
+                }
+                self.have_carry = true;
+            }
+            let drop = (new_start - self.win_start) * re;
+            for pi in 0..p {
+                self.buf[pi].drain(..drop);
+            }
+            self.win_start = new_start;
+        }
+        Ok(result)
+    }
+
+    /// Run one window on the backend. `keep` marks a steady-state
+    /// window whose geometry repeats: the distributed backend keeps
+    /// its pool resident for those and retargets it with
+    /// `set_problem`; other windows use an ephemeral pool.
+    fn dispatch(
+        &mut self,
+        problem: Arc<CscProblem>,
+        z0: &NdTensor,
+        keep: bool,
+    ) -> anyhow::Result<(NdTensor, bool)> {
+        match &mut self.backend {
+            StreamBackend::Sequential(cfg) => {
+                let r = solve_cd_warm(&problem, cfg, Some(z0));
+                Ok((r.z, r.stats.converged))
+            }
+            StreamBackend::Distributed { cfg, pool } => {
+                if let Some(pl) = pool {
+                    if pl.problem().z_dims() == problem.z_dims() {
+                        pl.set_problem(problem, Some(z0));
+                        let s = pl.solve();
+                        anyhow::ensure!(!s.diverged, "stream window solve diverged");
+                        return Ok((pl.gather(), s.converged));
+                    }
+                }
+                let mut tmp = WorkerPool::spawn(problem, cfg, Some(z0));
+                let s = tmp.solve();
+                anyhow::ensure!(!s.diverged, "stream window solve diverged");
+                let z = tmp.gather();
+                if keep && cfg.persistent && pool.is_none() {
+                    *pool = Some(tmp);
+                } else {
+                    tmp.shutdown();
+                }
+                Ok((z, s.converged))
+            }
+        }
+    }
+}
+
+impl Drop for StreamEncoder {
+    fn drop(&mut self) {
+        if let StreamBackend::Distributed { pool: Some(p), .. } = &mut self.backend {
+            p.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Dicodile;
+    use crate::csc::cd::solve_cd;
+    use crate::util::rng::Pcg64;
+
+    fn sparse_signal_1d(seed: u64, p: usize, t: usize, d: &NdTensor) -> NdTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let k = d.dims()[0];
+        let l = d.dims()[2];
+        let z = NdTensor::from_vec(
+            &[k, t - l + 1],
+            rng.bernoulli_gaussian_vec(k * (t - l + 1), 0.03, 0.0, 2.0),
+        );
+        let mut x = crate::conv::reconstruct(&z, d);
+        for v in x.data_mut().iter_mut() {
+            *v += 0.01 * rng.normal();
+        }
+        assert_eq!(x.dims(), &[p, t]);
+        x
+    }
+
+    fn unit_dict(seed: u64, k: usize, p: usize, ldims: &[usize]) -> NdTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let sp: usize = ldims.iter().product();
+        let mut dims = vec![k, p];
+        dims.extend_from_slice(ldims);
+        let mut v = rng.normal_vec(k * p * sp);
+        for a in v.chunks_mut(p * sp) {
+            let n = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in a.iter_mut() {
+                *x /= n;
+            }
+        }
+        NdTensor::from_vec(&dims, v)
+    }
+
+    fn model_with_lambda(d: NdTensor, lambda: f64) -> TrainedModel {
+        let mut m = TrainedModel::from_dictionary(d, 0.1);
+        m.lambda = lambda;
+        m
+    }
+
+    /// Concatenate emitted chunks and compare against the whole-signal
+    /// sequential solve at the same frozen lambda.
+    #[test]
+    fn chunked_matches_whole_signal_within_tolerance() {
+        let d = unit_dict(11, 3, 2, &[7]);
+        let x = sparse_signal_1d(12, 2, 400, &d);
+        let lambda = 0.2;
+        let whole = solve_cd(
+            &CscProblem::new(x.clone(), d.clone(), lambda),
+            &CdConfig { tol: 1e-10, ..CdConfig::default() },
+        );
+
+        let cfg = Dicodile::builder().sequential().tol(1e-10).chunk_len(48);
+        let mut enc = StreamEncoder::new(&cfg, &model_with_lambda(d.clone(), lambda)).unwrap();
+        let mut results = Vec::new();
+        // Feed in uneven pushes to exercise buffering.
+        let mut fed = 0;
+        for step in [31usize, 64, 5, 120, 90, 90] {
+            let take = step.min(400 - fed);
+            if take == 0 {
+                break;
+            }
+            let mut cv = vec![0.0; 2 * take];
+            for pi in 0..2 {
+                cv[pi * take..(pi + 1) * take]
+                    .copy_from_slice(&x.slice0(pi)[fed..fed + take]);
+            }
+            let chunk = NdTensor::from_vec(&[2, take], cv);
+            results.extend(enc.push(&chunk).unwrap());
+            fed += take;
+        }
+        assert_eq!(fed, 400);
+        results.extend(enc.finish().unwrap());
+
+        // Stitch.
+        let zt = 400 - 7 + 1;
+        let mut z = NdTensor::zeros(&[3, zt]);
+        let mut next = 0;
+        for r in &results {
+            assert_eq!(r.offset, next, "emission must be gapless and ordered");
+            let rows = r.z.dims()[1];
+            for ki in 0..3 {
+                z.slice0_mut(ki)[r.offset..r.offset + rows].copy_from_slice(r.z.slice0(ki));
+            }
+            next += rows;
+        }
+        assert_eq!(next, zt, "stream must emit the full activation domain");
+
+        // Near-optimality: the stitched solution's objective on the
+        // whole problem matches the global solve's.
+        let prob = CscProblem::new(x, d, lambda);
+        let (cs, cw) = (prob.cost(&z), prob.cost(&whole.z));
+        assert!(
+            cs <= cw + 1e-4 * (1.0 + cw.abs()),
+            "stitched cost {cs} vs whole {cw}"
+        );
+        let diff = z.sub(&whole.z).norm2() / whole.z.norm2().max(1e-12);
+        assert!(diff < 1e-2, "stitched-vs-whole relative L2 {diff}");
+    }
+
+    /// Identical solve windows must arise no matter how the signal is
+    /// sliced into pushes — 1-row pushes and one big push give bitwise
+    /// equal emissions on the deterministic sequential backend.
+    #[test]
+    fn push_granularity_is_invisible() {
+        let d = unit_dict(21, 2, 1, &[5]);
+        let x = sparse_signal_1d(22, 1, 200, &d);
+        let cfg = Dicodile::builder().sequential().tol(1e-8).chunk_len(32);
+        let model = model_with_lambda(d, 0.15);
+
+        let run = |slices: &[usize]| -> Vec<ChunkResult> {
+            let mut enc = StreamEncoder::new(&cfg, &model).unwrap();
+            let mut out = Vec::new();
+            let mut fed = 0;
+            for &s in slices {
+                let take = s.min(200 - fed);
+                if take == 0 {
+                    break;
+                }
+                let chunk =
+                    NdTensor::from_vec(&[1, take], x.slice0(0)[fed..fed + take].to_vec());
+                out.extend(enc.push(&chunk).unwrap());
+                fed += take;
+            }
+            assert_eq!(fed, 200);
+            out.extend(enc.finish().unwrap());
+            out
+        };
+
+        let big = run(&[200]);
+        let tiny = run(&[1; 200]);
+        assert_eq!(big.len(), tiny.len());
+        for (a, b) in big.iter().zip(&tiny) {
+            assert_eq!(a.offset, b.offset);
+            assert!(a.z.allclose(&b.z, 0.0), "bitwise mismatch at offset {}", a.offset);
+        }
+    }
+
+    #[test]
+    fn short_stream_equals_one_shot_solve() {
+        // Total signal below one steady window: finish() must solve it
+        // whole — exactly the batch problem.
+        let d = unit_dict(31, 2, 1, &[6]);
+        let x = sparse_signal_1d(32, 1, 40, &d);
+        let cfg = Dicodile::builder().sequential().tol(1e-10).chunk_len(128);
+        let mut enc = StreamEncoder::new(&cfg, &model_with_lambda(d.clone(), 0.2)).unwrap();
+        assert!(enc.push(&x).unwrap().is_empty());
+        let out = enc.finish().unwrap();
+        assert_eq!(out.len(), 1);
+        let whole = solve_cd(
+            &CscProblem::new(x, d, 0.2),
+            &CdConfig { tol: 1e-10, ..CdConfig::default() },
+        );
+        assert!(out[0].z.allclose(&whole.z, 1e-12));
+        assert_eq!(out[0].offset, 0);
+    }
+
+    #[test]
+    fn truncate_emits_earlier_than_holdback() {
+        let d = unit_dict(41, 2, 1, &[5]);
+        let x = sparse_signal_1d(42, 1, 120, &d);
+        let model = model_with_lambda(d, 0.2);
+        let base = Dicodile::builder().sequential().chunk_len(32);
+        let mut hold = StreamEncoder::new(&base.clone(), &model).unwrap();
+        let mut trunc =
+            StreamEncoder::new(&base.halo_policy(HaloPolicy::Truncate), &model).unwrap();
+        hold.push(&x).unwrap();
+        trunc.push(&x).unwrap();
+        assert!(trunc.emitted_rows() > hold.emitted_rows());
+        hold.finish().unwrap();
+        trunc.finish().unwrap();
+    }
+
+    #[test]
+    fn fista_backend_is_rejected() {
+        let d = unit_dict(51, 2, 1, &[5]);
+        let err = StreamEncoder::new(
+            &Dicodile::builder().fista(),
+            &TrainedModel::from_dictionary(d, 0.1),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn resident_window_stays_bounded() {
+        let d = unit_dict(61, 2, 1, &[5]);
+        let cfg = Dicodile::builder().sequential().chunk_len(32);
+        let mut enc = StreamEncoder::new(&cfg, &model_with_lambda(d, 0.2)).unwrap();
+        let mut rng = Pcg64::seeded(62);
+        for _ in 0..50 {
+            let chunk = NdTensor::from_vec(&[1, 40], rng.normal_vec(40));
+            enc.push(&chunk).unwrap();
+        }
+        // 50 * 40 = 2000 rows streamed; residency is bounded by one
+        // window plus one push.
+        assert!(enc.peak_resident_rows() < 2 * (enc.chunk_len() + 2 * 4) + 40);
+        enc.finish().unwrap();
+    }
+}

@@ -1,0 +1,94 @@
+//! Streaming encode and online dictionary learning for unbounded
+//! signals.
+//!
+//! Every other entry point (`Session::encode`, the CDL drivers, the
+//! HTTP routes) requires the whole observation resident in memory.
+//! This module lifts that limit along **axis 0 of the spatial domain**
+//! (time for 1-D signals, rows for images): the observation arrives in
+//! chunks of arbitrary size and only a bounded window of it is ever
+//! materialized.
+//!
+//! ## The halo carry-over / stitching invariant
+//!
+//! Let `L` be the atom extent along the streaming axis and
+//! `pad = 2(L-1)` — the same rim the distributed workers keep around
+//! their cells (an activation interacts with neighbours up to `L-1`
+//! away, and its beta footprint reaches `L-1` further). The encoder
+//! keeps a solve window `[win_start, win_end)` of signal rows and three
+//! pieces of carried state:
+//!
+//! - **ghost tail** — the `L-1` activation rows immediately *left* of
+//!   the window (already emitted, frozen). Their reconstruction
+//!   overlaps the window's first `L-1` signal rows; subtracting it
+//!   makes the window subproblem exactly the global problem
+//!   conditioned on the frozen left context.
+//! - **carry** — the previous solve's values on the `L-1` activation
+//!   rows the two windows share, used to warm-start the re-solve.
+//! - **holdback** — the window's trailing `pad` signal rows. Their
+//!   activations still lack right context, so (under
+//!   [`HaloPolicy::Holdback`]) they are *not* emitted; the next window
+//!   starts `pad` rows back and re-solves them with full context.
+//!
+//! A window is solved whenever `pad + chunk_len` rows are buffered;
+//! the first `chunk_len` activation rows are emitted and the window
+//! advances by `chunk_len`. Boundary rule, documented per policy:
+//!
+//! - [`HaloPolicy::Holdback`] (default): an activation row is emitted
+//!   only once its full `pad` right context has been seen, so each
+//!   emitted row comes from the *last* solve that covers it. For
+//!   activations whose interaction graph does not cross a window
+//!   boundary chain, the concatenated stream equals the whole-signal
+//!   solve exactly; in general it is the whole-signal optimum
+//!   conditioned on the frozen prefix, and the parity suite pins the
+//!   tolerance.
+//! - [`HaloPolicy::Truncate`]: every solved activation row is emitted
+//!   immediately (lower latency). Later windows still re-solve the
+//!   rim internally — the internal recursion is identical to
+//!   `Holdback` — but revisions are never re-emitted, so the rim rows
+//!   of the output may predate their final context.
+//!
+//! `lambda` is frozen once per stream: the model's trained value when
+//! it carries one, else `lambda_frac · lambda_max` of the first
+//! window — a per-chunk lambda would make the pieces solutions of
+//! different objectives and stitching meaningless.
+//!
+//! ## Online learning
+//!
+//! [`OnlineCdl`] consumes the same chunk stream for *training*: each
+//! chunk is sparse-coded with the current dictionary, its sufficient
+//! statistics are folded into decaying running averages
+//! (`phi_t = (1-rho_t) phi_{t-1} + rho_t phi_chunk`, Mairal-style
+//! `rho_t = (c+1)/(c+t)`), and one projected-gradient dictionary step
+//! runs on the averaged statistics — memory stays bounded by the chunk
+//! size, never the corpus.
+
+mod encoder;
+mod online;
+
+pub use encoder::{ChunkResult, StreamEncoder};
+pub use online::{OnlineCdl, OnlineStep};
+
+/// How the trailing halo of a streaming solve window is resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HaloPolicy {
+    /// Hold back the trailing `2(L-1)` signal rows of each window:
+    /// an activation row is emitted only after its full right context
+    /// has been solved. Default; tightest match to the whole-signal
+    /// encode.
+    Holdback,
+    /// Emit every solved activation row immediately. Lower latency;
+    /// the `L-1` rows nearest a window boundary are emitted before
+    /// their right context arrives and are never revised.
+    Truncate,
+}
+
+impl std::str::FromStr for HaloPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "holdback" => Ok(HaloPolicy::Holdback),
+            "truncate" => Ok(HaloPolicy::Truncate),
+            other => Err(format!("unknown halo policy {other:?} (holdback|truncate)")),
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Online dictionary learning from streaming sufficient statistics.
+//!
+//! Mairal et al.'s online matrix-factorization scheme, transplanted to
+//! the convolutional setting: the dictionary subproblem depends on the
+//! data only through `phi = Z~ * Z` and `psi = Z~ * X`, which are tiny
+//! (`O(K^2 L^d)` / `O(K P L^d)`) and *additive* across observations.
+//! So instead of re-coding the whole corpus each alternation, fold
+//! every incoming chunk's statistics into decaying running averages
+//!
+//! ```text
+//! phi_t = (1 - rho_t) phi_{t-1} + rho_t phi_chunk      (same for psi)
+//! rho_t = (c + 1) / (c + t)
+//! ```
+//!
+//! and run the existing PGD step on the averages. `c` is the
+//! forgetting factor (`online_forget` builder knob): `c -> inf`
+//! approaches a flat all-history average, small `c` tracks drift
+//! faster. Memory is bounded by one chunk plus the statistics —
+//! independent of how much data has streamed past.
+//!
+//! The CSC step codes each chunk with warm-startable sequential LGCD;
+//! distributed *encoding* of an assembled stream is [`super::StreamEncoder`]'s
+//! job, while this type's chunks are independent observations.
+
+use std::sync::Arc;
+
+use crate::api::builder::DicodileBuilder;
+use crate::api::TrainedModel;
+use crate::conv::CorrEngine;
+use crate::csc::cd::{solve_cd_warm, CdConfig};
+use crate::csc::problem::CscProblem;
+use crate::dict::grad::cost_from_stats;
+use crate::dict::pgd::{update_dict, PgdConfig};
+use crate::dict::phi_psi::{compute_stats_with_engine, DictStats};
+use crate::tensor::NdTensor;
+
+/// One online step's record.
+#[derive(Clone, Debug)]
+pub struct OnlineStep {
+    /// 1-based chunk counter.
+    pub t: u64,
+    /// The blending weight this chunk received.
+    pub rho: f64,
+    /// Objective of the *running* statistics at the pre-step
+    /// dictionary.
+    pub cost_before: f64,
+    /// Same objective after the PGD dictionary step; PGD never accepts
+    /// an increase, so `cost <= cost_before` is an invariant the
+    /// parity suite gates.
+    pub cost: f64,
+    /// Nonzeros in this chunk's code.
+    pub z_nnz: usize,
+    /// Which φ/ψ path produced the chunk statistics.
+    pub phipsi_path: &'static str,
+}
+
+/// Streaming dictionary learner. Feed chunks with
+/// [`step`](OnlineCdl::step); read the current dictionary any time.
+pub struct OnlineCdl {
+    d: NdTensor,
+    /// Frozen after the first chunk (a moving lambda would make the
+    /// running statistics an average over different objectives).
+    lambda: f64,
+    lambda_frac: f64,
+    forget: f64,
+    t: u64,
+    stats: Option<DictStats>,
+    cd_cfg: CdConfig,
+    dict_cfg: PgdConfig,
+    stat_workers: usize,
+    trace: Vec<OnlineStep>,
+}
+
+impl OnlineCdl {
+    /// Build from an explicit initial dictionary `[K, P, L..]`.
+    pub fn new(cfg: &DicodileBuilder, d0: NdTensor) -> anyhow::Result<OnlineCdl> {
+        anyhow::ensure!(
+            d0.ndim() >= 3,
+            "initial dictionary must be [K, P, L..], got {:?}",
+            d0.dims()
+        );
+        anyhow::ensure!(cfg.online_forget > 0.0, "online_forget must be positive");
+        Ok(OnlineCdl {
+            d: d0,
+            lambda: 0.0,
+            lambda_frac: cfg.lambda_frac,
+            forget: cfg.online_forget,
+            t: 0,
+            stats: None,
+            cd_cfg: CdConfig { tol: cfg.tol, seed: cfg.seed, ..CdConfig::default() },
+            dict_cfg: cfg.dict_cfg.clone(),
+            stat_workers: cfg.stat_workers,
+            trace: Vec::new(),
+        })
+    }
+
+    /// Build with the session's init strategy applied to the first
+    /// chunk (the streaming counterpart of the batch driver's
+    /// `prepare`). The chunk is only used for initialization — pass it
+    /// to [`step`](OnlineCdl::step) afterwards to actually learn from it.
+    pub fn init_from_chunk(cfg: &DicodileBuilder, chunk: &NdTensor) -> anyhow::Result<OnlineCdl> {
+        let d0 = crate::cdl::init::init_dictionary(
+            chunk,
+            cfg.n_atoms,
+            &cfg.atom_dims,
+            cfg.init,
+            cfg.seed,
+        );
+        OnlineCdl::new(cfg, d0)
+    }
+
+    pub fn dictionary(&self) -> &NdTensor {
+        &self.d
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Chunks consumed so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    pub fn trace(&self) -> &[OnlineStep] {
+        &self.trace
+    }
+
+    /// Code `chunk` with the current dictionary, fold its φ/ψ into the
+    /// running averages, and take one PGD dictionary step on them.
+    pub fn step(&mut self, chunk: &NdTensor) -> anyhow::Result<OnlineStep> {
+        anyhow::ensure!(
+            chunk.ndim() == self.d.ndim() - 1,
+            "chunk must be [P, T..] matching the dictionary's spatial rank, got {:?}",
+            chunk.dims()
+        );
+        anyhow::ensure!(
+            chunk.dims()[0] == self.d.dims()[1],
+            "chunk channels {} vs dictionary channels {}",
+            chunk.dims()[0],
+            self.d.dims()[1]
+        );
+        let corr = CorrEngine::new(self.d.clone());
+        if self.lambda <= 0.0 {
+            self.lambda = self.lambda_frac * corr.correlate_dict(chunk).norm_inf();
+            anyhow::ensure!(self.lambda > 0.0, "degenerate first chunk: lambda_max = 0");
+        }
+
+        // CSC step at the frozen lambda.
+        let problem = CscProblem::with_engine(
+            Arc::new(chunk.clone()),
+            self.d.clone(),
+            self.lambda,
+            corr,
+        );
+        let r = solve_cd_warm(&problem, &self.cd_cfg, None);
+
+        // Chunk statistics (half-spectrum FFT path when it wins).
+        let ldims = self.d.dims()[2..].to_vec();
+        let (chunk_stats, path) =
+            compute_stats_with_engine(&r.z, chunk, &ldims, self.stat_workers, &problem.corr);
+
+        // Decaying averages.
+        let t = self.t + 1;
+        let rho = (self.forget + 1.0) / (self.forget + t as f64);
+        let stats = match self.stats.take() {
+            None => chunk_stats,
+            Some(prev) => blend(&prev, &chunk_stats, rho),
+        };
+
+        // Dictionary step on the averaged statistics.
+        let cost_before = cost_from_stats(&stats, &self.d, self.lambda);
+        let pgd = update_dict(&stats, &self.d, self.lambda, &self.dict_cfg);
+        let rec = OnlineStep {
+            t,
+            rho,
+            cost_before,
+            cost: pgd.cost,
+            z_nnz: r.z.nnz(),
+            phipsi_path: path,
+        };
+        self.d = pgd.d;
+        self.stats = Some(stats);
+        self.t = t;
+        self.trace.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Wrap the current dictionary as a model (lambda travels with it,
+    /// so streaming encode of further data reuses the training
+    /// regularization).
+    pub fn into_model(self) -> TrainedModel {
+        let mut m = TrainedModel::from_dictionary(self.d, self.lambda_frac);
+        m.lambda = self.lambda;
+        m.converged = self
+            .trace
+            .last()
+            .map(|s| s.cost <= s.cost_before)
+            .unwrap_or(false);
+        m
+    }
+}
+
+/// `(1-rho) * prev + rho * next`, element-wise over every statistic.
+fn blend(prev: &DictStats, next: &DictStats, rho: f64) -> DictStats {
+    let mut phi = prev.phi.scale(1.0 - rho);
+    phi.axpy(rho, &next.phi);
+    let mut psi = prev.psi.scale(1.0 - rho);
+    psi.axpy(rho, &next.psi);
+    DictStats {
+        phi,
+        psi,
+        x_norm_sq: (1.0 - rho) * prev.x_norm_sq + rho * next.x_norm_sq,
+        z_l1: (1.0 - rho) * prev.z_l1 + rho * next.z_l1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Dicodile;
+    use crate::util::rng::Pcg64;
+
+    fn gen_chunk(rng: &mut Pcg64, d_true: &NdTensor, t: usize) -> NdTensor {
+        let k = d_true.dims()[0];
+        let l = d_true.dims()[2];
+        let z = NdTensor::from_vec(
+            &[k, t - l + 1],
+            rng.bernoulli_gaussian_vec(k * (t - l + 1), 0.05, 0.0, 2.0),
+        );
+        let mut x = crate::conv::reconstruct(&z, d_true);
+        for v in x.data_mut().iter_mut() {
+            *v += 0.02 * rng.normal();
+        }
+        x
+    }
+
+    fn true_dict(seed: u64, k: usize, p: usize, l: usize) -> NdTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = rng.normal_vec(k * p * l);
+        for a in v.chunks_mut(p * l) {
+            let n = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in a.iter_mut() {
+                *x /= n;
+            }
+        }
+        NdTensor::from_vec(&[k, p, l], v)
+    }
+
+    #[test]
+    fn every_dict_step_is_monotone_on_the_running_stats() {
+        let d_true = true_dict(1, 3, 1, 6);
+        let mut rng = Pcg64::seeded(2);
+        let cfg = Dicodile::builder().n_atoms(3).atom_dims(&[6]).tol(1e-6);
+        let first = gen_chunk(&mut rng, &d_true, 150);
+        let mut online = OnlineCdl::init_from_chunk(&cfg, &first).unwrap();
+        let mut prev_step = online.step(&first).unwrap();
+        assert!((prev_step.rho - 1.0).abs() < 1e-12, "rho_1 must be 1");
+        for _ in 0..5 {
+            let chunk = gen_chunk(&mut rng, &d_true, 150);
+            let s = online.step(&chunk).unwrap();
+            assert!(
+                s.cost <= s.cost_before + 1e-12 * (1.0 + s.cost_before.abs()),
+                "t={}: {} vs {}",
+                s.t,
+                s.cost,
+                s.cost_before
+            );
+            prev_step = s;
+        }
+        assert_eq!(prev_step.t, 6);
+        assert!(online.lambda() > 0.0);
+    }
+
+    #[test]
+    fn atoms_stay_feasible_and_lambda_frozen() {
+        let d_true = true_dict(3, 2, 1, 5);
+        let mut rng = Pcg64::seeded(4);
+        let cfg = Dicodile::builder().n_atoms(2).atom_dims(&[5]);
+        let mut online =
+            OnlineCdl::new(&cfg, true_dict(5, 2, 1, 5)).unwrap();
+        online.step(&gen_chunk(&mut rng, &d_true, 100)).unwrap();
+        let l1 = online.lambda();
+        online.step(&gen_chunk(&mut rng, &d_true, 100)).unwrap();
+        assert_eq!(l1, online.lambda());
+        for k in 0..2 {
+            let n: f64 = online.dictionary().slice0(k).iter().map(|x| x * x).sum();
+            assert!(n <= 1.0 + 1e-9);
+        }
+        let m = online.into_model();
+        assert_eq!(m.lambda, l1);
+        assert_eq!(m.n_atoms(), 2);
+    }
+
+    #[test]
+    fn forget_one_weights_match_running_average_weights() {
+        // With c = 1: rho_t = 2/(1+t) — the weight profile of the
+        // arithmetic mean over t(t+1)/2 triangular weights; just pin
+        // the first few values.
+        let cfg = Dicodile::builder();
+        let mut online = OnlineCdl::new(&cfg, true_dict(7, 2, 1, 4)).unwrap();
+        let d_true = true_dict(8, 2, 1, 4);
+        let mut rng = Pcg64::seeded(9);
+        for (t, expect) in [(1u64, 1.0), (2, 2.0 / 3.0), (3, 0.5)] {
+            let s = online.step(&gen_chunk(&mut rng, &d_true, 80)).unwrap();
+            assert_eq!(s.t, t);
+            assert!((s.rho - expect).abs() < 1e-12, "t={t}: rho {}", s.rho);
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Streaming subsystem parity gates:
+//!
+//! (a) chunked encode == whole-signal encode within tolerance on 1-D
+//!     and 2-D sparse workloads, across chunk sizes including one
+//!     *smaller* than the `2(L-1)` halo, on sequential and distributed
+//!     backends (every worker count in `DICODILE_TEST_WORKERS`),
+//! (b) events separated by silence wider than the halo stitch to the
+//!     whole-signal solution near machine precision — the carried-halo
+//!     argument made concrete,
+//! (c) push granularity is unobservable: feeding row-by-row and
+//!     feeding huge slabs produce bitwise-identical activations on the
+//!     deterministic sequential backend,
+//! (d) the online learner's PGD step never increases the running
+//!     surrogate objective (`cost <= cost_before`, every step) and the
+//!     surrogate improves end-to-end — the online-vs-batch
+//!     monotonicity gate.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! distributed worker counts — `scripts/tier1.sh` runs this suite once
+//! per count.
+
+use dicodile::api::{Dicodile, DicodileBuilder, TrainedModel};
+use dicodile::conv::reconstruct;
+use dicodile::csc::cd::{solve_cd, CdConfig};
+use dicodile::csc::problem::CscProblem;
+use dicodile::stream::{ChunkResult, HaloPolicy, OnlineCdl};
+use dicodile::tensor::NdTensor;
+use dicodile::util::rng::Pcg64;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+/// `[K, P, L..]` dictionary with unit-norm atoms.
+fn unit_dict(seed: u64, k: usize, p: usize, ldims: &[usize]) -> NdTensor {
+    let mut rng = Pcg64::seeded(seed);
+    let sp: usize = ldims.iter().product();
+    let mut dims = vec![k, p];
+    dims.extend_from_slice(ldims);
+    let mut v = rng.normal_vec(k * p * sp);
+    for a in v.chunks_mut(p * sp) {
+        let n = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+    NdTensor::from_vec(&dims, v)
+}
+
+/// Bernoulli-Gaussian activations convolved with `d`, light noise.
+fn sparse_signal(seed: u64, tdims: &[usize], d: &NdTensor) -> NdTensor {
+    let mut rng = Pcg64::seeded(seed);
+    let k = d.dims()[0];
+    let zdims: Vec<usize> = std::iter::once(k)
+        .chain(tdims.iter().zip(&d.dims()[2..]).map(|(&t, &l)| t - l + 1))
+        .collect();
+    let n: usize = zdims.iter().product();
+    let z = NdTensor::from_vec(&zdims, rng.bernoulli_gaussian_vec(n, 0.02, 0.0, 2.0));
+    let mut x = reconstruct(&z, d);
+    for v in x.data_mut().iter_mut() {
+        *v += 0.01 * rng.normal();
+    }
+    x
+}
+
+fn model_with_lambda(d: NdTensor, lambda: f64) -> TrainedModel {
+    let mut m = TrainedModel::from_dictionary(d, 0.1);
+    m.lambda = lambda;
+    m
+}
+
+/// Stream `x` through `cfg` in `push_rows`-row pushes and stitch the
+/// emitted chunks into the full `[K, ZT0, ..]` activation tensor.
+fn stream_encode(
+    cfg: DicodileBuilder,
+    model: &TrainedModel,
+    x: &NdTensor,
+    push_rows: usize,
+) -> (NdTensor, usize) {
+    let session = cfg.build();
+    let mut enc = session.open_stream(model).expect("open stream");
+    let p = x.dims()[0];
+    let t0 = x.dims()[1];
+    let row_elems: usize = x.dims()[2..].iter().product::<usize>().max(1);
+    let mut chunks: Vec<ChunkResult> = Vec::new();
+    let mut fed = 0;
+    while fed < t0 {
+        let take = push_rows.min(t0 - fed);
+        let mut dims = vec![p, take];
+        dims.extend_from_slice(&x.dims()[2..]);
+        let mut cv = Vec::with_capacity(p * take * row_elems);
+        for pi in 0..p {
+            cv.extend_from_slice(&x.slice0(pi)[fed * row_elems..(fed + take) * row_elems]);
+        }
+        chunks.extend(enc.push(&NdTensor::from_vec(&dims, cv)).expect("push"));
+        fed += take;
+    }
+    chunks.extend(enc.finish().expect("finish"));
+    let peak = enc.peak_resident_rows();
+
+    let k = model.d.dims()[0];
+    let l0 = model.d.dims()[2];
+    let mut zdims = vec![k, t0 - l0 + 1];
+    zdims.extend(
+        x.dims()[2..]
+            .iter()
+            .zip(&model.d.dims()[3..])
+            .map(|(&t, &l)| t - l + 1),
+    );
+    let z_row: usize = zdims[2..].iter().product::<usize>().max(1);
+    let mut z = NdTensor::zeros(&zdims);
+    let mut covered = 0usize;
+    for c in &chunks {
+        let rows = c.z.dims()[1];
+        assert_eq!(c.offset, covered, "chunks must tile the activation axis in order");
+        for ki in 0..k {
+            z.slice0_mut(ki)[c.offset * z_row..(c.offset + rows) * z_row]
+                .copy_from_slice(c.z.slice0(ki));
+        }
+        covered += rows;
+    }
+    assert_eq!(covered, zdims[1], "emitted rows must cover the whole activation axis");
+    (z, peak)
+}
+
+fn rel_l2(a: &NdTensor, b: &NdTensor) -> f64 {
+    let num: f64 = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt();
+    num / b.data().iter().map(|y| y * y).sum::<f64>().sqrt().max(1e-12)
+}
+
+/// (a) — 1-D, every worker count x chunk sizes straddling the halo.
+#[test]
+fn chunked_equals_whole_1d_all_backends() {
+    let l = 8;
+    let pad = 2 * (l - 1); // 14
+    let d = unit_dict(21, 3, 2, &[l]);
+    let x = sparse_signal(22, &[420], &d);
+    let lambda = 0.2;
+    let model = model_with_lambda(d.clone(), lambda);
+    let whole = solve_cd(
+        &CscProblem::new(x.clone(), d.clone(), lambda),
+        &CdConfig { tol: 1e-10, ..CdConfig::default() },
+    );
+    let cost_ref = CscProblem::new(x.clone(), d.clone(), lambda).cost(&whole.z);
+
+    // chunk 8 < pad (the encoder must still make forward progress),
+    // chunk 48 is a few halos, chunk 400 ~ the whole signal in one go.
+    for chunk in [8usize, 48, 400] {
+        let mut builders: Vec<(String, DicodileBuilder)> = vec![(
+            "sequential".into(),
+            Dicodile::builder().sequential().tol(1e-9).chunk_len(chunk),
+        )];
+        for w in worker_counts() {
+            builders.push((
+                format!("dicodile({w})"),
+                Dicodile::builder().dicodile(w).tol(1e-9).chunk_len(chunk),
+            ));
+        }
+        for (label, cfg) in builders {
+            let (z, peak) = stream_encode(cfg, &model, &x, 64);
+            let cost = CscProblem::new(x.clone(), d.clone(), lambda).cost(&z);
+            // One-sided: at finite tolerance the stitched solution may
+            // legitimately edge out the whole-signal solve.
+            assert!(
+                cost <= cost_ref + 1e-4 * (1.0 + cost_ref.abs()),
+                "[{label} chunk={chunk}] stitched cost {cost:.8e} vs whole {cost_ref:.8e}"
+            );
+            assert!(
+                rel_l2(&z, &whole.z) < 1e-2,
+                "[{label} chunk={chunk}] stitched z drifted: rel L2 {:.2e}",
+                rel_l2(&z, &whole.z)
+            );
+            if chunk < 400 {
+                assert!(peak < 420, "[{label} chunk={chunk}] window not bounded: peak {peak}");
+            }
+            let _ = pad;
+        }
+    }
+}
+
+/// (a) — 2-D atoms, streamed along axis 0.
+#[test]
+fn chunked_equals_whole_2d() {
+    let d = unit_dict(31, 3, 1, &[5, 5]);
+    let x = sparse_signal(32, &[72, 30], &d);
+    let lambda = 0.2;
+    let model = model_with_lambda(d.clone(), lambda);
+    let whole = solve_cd(
+        &CscProblem::new(x.clone(), d.clone(), lambda),
+        &CdConfig { tol: 1e-10, ..CdConfig::default() },
+    );
+    let cost_ref = CscProblem::new(x.clone(), d.clone(), lambda).cost(&whole.z);
+
+    let mut builders: Vec<(String, DicodileBuilder)> = vec![(
+        "sequential".into(),
+        Dicodile::builder().sequential().tol(1e-9).chunk_len(16),
+    )];
+    if let Some(&w) = worker_counts().iter().max() {
+        builders.push((
+            format!("dicodile({w})"),
+            Dicodile::builder().dicodile(w).tol(1e-9).chunk_len(16),
+        ));
+    }
+    for (label, cfg) in builders {
+        let (z, _) = stream_encode(cfg, &model, &x, 24);
+        let cost = CscProblem::new(x.clone(), d.clone(), lambda).cost(&z);
+        assert!(
+            cost <= cost_ref + 1e-4 * (1.0 + cost_ref.abs()),
+            "[{label}] 2-D stitched cost {cost:.8e} vs whole {cost_ref:.8e}"
+        );
+        assert!(rel_l2(&z, &whole.z) < 1e-2, "[{label}] 2-D stitched z drifted");
+    }
+}
+
+/// (b) — events separated by silence wider than the halo: the carried
+/// boundary context is exact, so chunked == whole near machine
+/// precision, with the window split landing inside a silent span.
+#[test]
+fn separated_events_stitch_exactly() {
+    let l = 7;
+    let pad = 2 * (l - 1); // 12
+    let d = unit_dict(41, 2, 2, &[l]);
+    let t = 300;
+    // One activation spike every 60 rows — silence between events is
+    // ~53 rows, far wider than the 12-row halo.
+    let mut zv = vec![0.0; 2 * (t - l + 1)];
+    for (i, spike) in [(20usize, 1.5), (80, -2.0), (140, 1.0), (200, 2.5), (260, -1.2)]
+        .iter()
+        .enumerate()
+    {
+        zv[(i % 2) * (t - l + 1) + spike.0] = spike.1;
+    }
+    let x = reconstruct(&NdTensor::from_vec(&[2, t - l + 1], zv), &d);
+    let lambda = 0.05;
+    let model = model_with_lambda(d.clone(), lambda);
+    let whole = solve_cd(
+        &CscProblem::new(x.clone(), d.clone(), lambda),
+        &CdConfig { tol: 1e-12, ..CdConfig::default() },
+    );
+    for policy in [HaloPolicy::Holdback, HaloPolicy::Truncate] {
+        let cfg = Dicodile::builder()
+            .sequential()
+            .tol(1e-12)
+            .chunk_len(60)
+            .halo_policy(policy);
+        let (z, _) = stream_encode(cfg, &model, &x, 37);
+        let drift = rel_l2(&z, &whole.z);
+        assert!(
+            drift < 1e-6,
+            "separated events must stitch exactly ({policy:?}): rel L2 {drift:.2e}"
+        );
+    }
+    let _ = pad;
+}
+
+/// (c) — push granularity is unobservable (bitwise) on the
+/// deterministic sequential backend.
+#[test]
+fn push_granularity_is_bitwise_invisible() {
+    let d = unit_dict(51, 3, 2, &[7]);
+    let x = sparse_signal(52, &[350], &d);
+    let model = model_with_lambda(d.clone(), 0.2);
+    let cfg = || Dicodile::builder().sequential().tol(1e-8).chunk_len(40);
+    let (z_rows, _) = stream_encode(cfg(), &model, &x, 1); // row-by-row
+    let (z_slab, _) = stream_encode(cfg(), &model, &x, 350); // one slab
+    assert_eq!(z_rows.dims(), z_slab.dims());
+    for (i, (a, b)) in z_rows.data().iter().zip(z_slab.data()).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "activation {i} differs between push granularities: {a} vs {b}"
+        );
+    }
+}
+
+/// (d) — online learning: the PGD step on the running surrogate never
+/// increases it, and the surrogate improves over the stream.
+#[test]
+fn online_surrogate_is_monotone_per_step() {
+    let d_true = unit_dict(61, 4, 2, &[9]);
+    let x = sparse_signal(62, &[640], &d_true);
+    let cfg = Dicodile::builder()
+        .sequential()
+        .n_atoms(4)
+        .atom_dims(&[9])
+        .lambda_frac(0.1)
+        .tol(1e-6)
+        .seed(7)
+        .online_forget(1.0);
+
+    let chunk_rows = 160;
+    let p = x.dims()[0];
+    let t0 = x.dims()[1];
+    let mut online: Option<OnlineCdl> = None;
+    let mut steps = Vec::new();
+    let mut start = 0;
+    while t0 - start >= 9 {
+        let take = chunk_rows.min(t0 - start);
+        let mut cv = Vec::with_capacity(p * take);
+        for pi in 0..p {
+            cv.extend_from_slice(&x.slice0(pi)[start..start + take]);
+        }
+        let chunk = NdTensor::from_vec(&[p, take], cv);
+        if online.is_none() {
+            online = Some(OnlineCdl::init_from_chunk(&cfg, &chunk).expect("init"));
+        }
+        steps.push(online.as_mut().unwrap().step(&chunk).expect("step"));
+        start += take;
+    }
+    let online = online.expect("at least one chunk");
+    assert!(steps.len() >= 3, "need several chunks to exercise the decay");
+    for s in &steps {
+        // t = 1 measures cost_before on the raw init dictionary, which
+        // the PGD step first projects onto the unit ball — only from
+        // t = 2 are the two costs measured against the same feasible
+        // iterate, making the no-increase invariant exact.
+        if s.t >= 2 {
+            assert!(
+                s.cost <= s.cost_before + 1e-10 * (1.0 + s.cost_before.abs()),
+                "step t={} increased the surrogate: {:.8e} -> {:.8e}",
+                s.t,
+                s.cost_before,
+                s.cost
+            );
+        }
+        assert!(s.rho > 0.0 && s.rho <= 1.0, "rho out of range: {}", s.rho);
+    }
+    assert!(
+        (steps[0].rho - 1.0).abs() < 1e-12,
+        "first chunk must fully initialize the running statistics"
+    );
+    assert!(
+        steps.last().unwrap().cost < steps[0].cost_before,
+        "surrogate failed to improve over the stream: {:.6e} -> {:.6e}",
+        steps[0].cost_before,
+        steps.last().unwrap().cost
+    );
+    // The learned model reconstructs: encoding the signal with the
+    // final dictionary must beat the zero code (cost < 0.5 ||x||^2).
+    let model = online.into_model();
+    let problem = CscProblem::new(x.clone(), model.d.clone(), model.lambda);
+    let r = solve_cd(&problem, &CdConfig { tol: 1e-6, ..CdConfig::default() });
+    assert!(
+        problem.cost(&r.z) < 0.5 * x.data().iter().map(|v| v * v).sum::<f64>(),
+        "online-learned dictionary explains nothing"
+    );
+}

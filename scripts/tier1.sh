@@ -47,6 +47,13 @@ for w in 1 2 4; do
   # invariants and land on the sequential optimum (incl. SetDict
   # re-init and remote-update dirtying).
   DICODILE_TEST_WORKERS=$w cargo test -q --test select_parity
+  # Streaming subsystem: chunked == whole-signal encode within
+  # tolerance (1-D/2-D, chunk sizes straddling the 2(L-1) halo, the
+  # resident pool retargeted per window via SetProblem), exact
+  # stitching across silent spans, bitwise push-granularity
+  # invariance, and the online learner's per-step surrogate
+  # monotonicity gate.
+  DICODILE_TEST_WORKERS=$w cargo test -q --test stream_parity
 done
 
 # Frequency-domain backend suite under BOTH spectrum layouts: the
@@ -81,11 +88,30 @@ DICODILE_BENCH_REPS=1 cargo bench --bench micro_hotpath
 # the section filter skips fig3's slow Greedy strategy sweep).
 DICODILE_FIG3_SECTION=selection DICODILE_BENCH_REPS=1 cargo bench --bench fig3_strategies
 
+# Streaming smoke bench: chunked encode on a bounded window vs the
+# whole-signal solve — steady-state per-chunk latency, the
+# peak-resident-rows memory proxy, and the stitched-vs-whole objective
+# gap (asserted < 1e-3), written to BENCH_stream.json (single rep for
+# CI shrinks the signal).
+DICODILE_BENCH_REPS=1 cargo bench --bench stream
+
 # Serving-transport smoke bench: stands the real HTTP server up on an
 # ephemeral loopback port, drives it with keep-alive clients, and
 # writes per-request latency + residency/admission counters to
 # BENCH_serve.json.
 cargo run --release -- serve-bench --http 127.0.0.1:0 --clients 2 --requests 2 --t 1500
+
+# Streaming CLI smoke: learn a tiny 1-D model online, then pipe a text
+# signal through `dicodile stream` — proves the stdin -> JSON-lines
+# path end to end without materializing the signal.
+tmp_stream="$(mktemp -d)"
+cargo run --release -- learn --workload synthetic --size 30 --k 3 --l 8 \
+  --online --chunk 150 --workers 0 --save-model "$tmp_stream/model.json"
+awk 'BEGIN { srand(7); for (i = 0; i < 800; i++) print 2*rand()-1 }' \
+  | cargo run --release -- stream --model "$tmp_stream/model.json" \
+      --chunk 64 --push-rows 100 --output "$tmp_stream/chunks.jsonl"
+test -s "$tmp_stream/chunks.jsonl"
+rm -rf "$tmp_stream"
 
 if cargo clippy --version >/dev/null 2>&1; then
   # Advisory lint pass (same policy as fmt below): report, don't fail.
