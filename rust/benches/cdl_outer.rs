@@ -7,7 +7,11 @@
 //! parallel clients encoding C distinct observations through clones of
 //! ONE shared session (`encode_concurrent_s`), and the transport seam's
 //! price: the same persistent run over the socket wire vs in-process
-//! channels, with the SetDict frame codec isolated (`transport`).
+//! channels, with the SetDict frame codec isolated (`transport`), and
+//! the alternation-schedule A/B: the same persistent run under
+//! `Barrier` vs `Pipelined` alternation, with the per-iteration grid
+//! idle time (`dict_wait_s`, ~0 when pipelined) and speculative update
+//! counts recorded (`alternation`).
 //! Writes BENCH_cdl_outer.json.
 //!
 //!     cargo bench --bench cdl_outer
@@ -17,7 +21,7 @@ use dicodile::api::Dicodile;
 use dicodile::bench::{BenchConfig, Table};
 use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CdlResult, CscBackend};
 use dicodile::data::starfield::StarfieldConfig;
-use dicodile::dicod::config::DicodConfig;
+use dicodile::dicod::config::{Alternation, DicodConfig};
 use dicodile::dicod::messages::{decode_frame, encode_worker_frame, DictUpdate, SetDictMsg, WorkerMsg};
 use dicodile::dicod::transport::TransportKind;
 use dicodile::tensor::NdTensor;
@@ -27,6 +31,7 @@ fn run(
     x: &NdTensor,
     persistent: bool,
     transport: TransportKind,
+    alternation: Alternation,
     iters: usize,
     workers: usize,
 ) -> CdlResult {
@@ -40,6 +45,7 @@ fn run(
         csc: CscBackend::Distributed(DicodConfig {
             persistent,
             transport,
+            alternation,
             ..DicodConfig::dicodile(workers)
         }),
         seed: 1,
@@ -64,6 +70,14 @@ fn trace_entry(label: &str, r: &CdlResult) -> Json {
             Json::Arr(r.trace.iter().map(|t| Json::Num(t.cost)).collect()),
         ),
         (
+            "dict_wait_s",
+            Json::Arr(r.trace.iter().map(|t| Json::Num(t.dict_wait_s)).collect()),
+        ),
+        (
+            "overlap_updates",
+            Json::Arr(r.trace.iter().map(|t| Json::Num(t.overlap_updates as f64)).collect()),
+        ),
+        (
             "phipsi",
             Json::Arr(r.trace.iter().map(|t| Json::str(t.phipsi_path)).collect()),
         ),
@@ -82,18 +96,19 @@ fn main() {
     );
 
     // Best-of-reps totals; the per-iteration trace shown is the last run's.
-    let mut best = |persistent: bool, transport: TransportKind| -> (CdlResult, f64) {
-        let mut fastest = f64::MAX;
-        let mut last = None;
-        for _ in 0..bc.reps.max(1) {
-            let r = run(&x, persistent, transport, iters, workers);
-            fastest = fastest.min(r.runtime);
-            last = Some(r);
-        }
-        (last.unwrap(), fastest)
-    };
-    let (teardown, teardown_s) = best(false, TransportKind::Channel);
-    let (persistent, persistent_s) = best(true, TransportKind::Channel);
+    let mut best =
+        |persistent: bool, transport: TransportKind, alt: Alternation| -> (CdlResult, f64) {
+            let mut fastest = f64::MAX;
+            let mut last = None;
+            for _ in 0..bc.reps.max(1) {
+                let r = run(&x, persistent, transport, alt, iters, workers);
+                fastest = fastest.min(r.runtime);
+                last = Some(r);
+            }
+            (last.unwrap(), fastest)
+        };
+    let (teardown, teardown_s) = best(false, TransportKind::Channel, Alternation::Barrier);
+    let (persistent, persistent_s) = best(true, TransportKind::Channel, Alternation::Barrier);
 
     let mut table = Table::new(&["iter", "csc td[s]", "csc pp[s]", "dict td[s]", "dict pp[s]"]);
     for (a, b) in teardown.trace.iter().zip(&persistent.trace) {
@@ -205,12 +220,28 @@ fn main() {
     // the length-prefixed frame codec and a loopback socket. The ratio
     // against `persistent_total_s` is the end-to-end price of the wire;
     // the codec micro-number isolates the per-SetDict encode+decode cost.
-    let (_, socket_s) = best(true, TransportKind::Socket);
+    let (_, socket_s) = best(true, TransportKind::Socket, Alternation::Barrier);
     println!(
         "transport: channel {persistent_s:.2}s  socket {socket_s:.2}s  \
          (overhead {:.2}x)",
         socket_s / persistent_s.max(1e-12)
     );
+    // ---- alternation A/B: barrier vs pipelined dictionary step ---------
+    // Same persistent run with the pipelined schedule: workers resume
+    // coordinate descent speculatively while the φ/ψ reduce + PGD run,
+    // and the accepted dictionary lands as a mid-solve SetDict. The
+    // per-iteration `dict_wait_s` is the grid's idle time — the whole
+    // dictionary step under Barrier, only the ComputeStats/ResumeSolve
+    // broadcast pair (~0) under Pipelined.
+    let (pipelined, pipelined_s) = best(true, TransportKind::Channel, Alternation::Pipelined);
+    let wait_of = |r: &CdlResult| r.trace.iter().map(|t| t.dict_wait_s).sum::<f64>();
+    let (barrier_wait, pipelined_wait) = (wait_of(&persistent), wait_of(&pipelined));
+    println!(
+        "alternation: barrier {persistent_s:.2}s (grid idle {barrier_wait:.3}s)  \
+         pipelined {pipelined_s:.2}s (grid idle {pipelined_wait:.3}s)  ({:.2}x)",
+        persistent_s / pipelined_s.max(1e-12)
+    );
+
     let du = DictUpdate {
         d: model.d.clone(),
         lambda: model.lambda,
@@ -271,6 +302,27 @@ fn main() {
             ]),
         ),
         (
+            // Barrier-vs-Pipelined A/B on the same persistent run:
+            // end-to-end wall clock plus the summed per-iteration grid
+            // idle time (`dict_wait_s`; ~0 when pipelined — the reduce
+            // + PGD overlap with the speculative solve). Per-iteration
+            // arrays live in the matching `entries` traces.
+            "alternation",
+            Json::obj(vec![
+                ("barrier_total_s", Json::Num(persistent_s)),
+                ("pipelined_total_s", Json::Num(pipelined_s)),
+                ("speedup", Json::Num(persistent_s / pipelined_s.max(1e-12))),
+                ("barrier_dict_wait_s", Json::Num(barrier_wait)),
+                ("pipelined_dict_wait_s", Json::Num(pipelined_wait)),
+                (
+                    "pipelined_overlap_updates",
+                    Json::Num(
+                        pipelined.trace.iter().map(|t| t.overlap_updates).sum::<u64>() as f64,
+                    ),
+                ),
+            ]),
+        ),
+        (
             // Wall-clock for C parallel clients encoding C distinct
             // (pre-warmed) observations through one shared session.
             "encode_concurrent_s",
@@ -293,6 +345,7 @@ fn main() {
             Json::Arr(vec![
                 trace_entry("teardown", &teardown),
                 trace_entry("persistent", &persistent),
+                trace_entry("pipelined", &pipelined),
             ]),
         ),
     ]);

@@ -28,7 +28,7 @@ use crate::cdl::driver::{CdlConfig, CscBackend};
 use crate::cdl::init::InitStrategy;
 use crate::csc::encode::{EncodeConfig, Solver};
 use crate::csc::select::Strategy;
-use crate::dicod::config::DicodConfig;
+use crate::dicod::config::{Alternation, DicodConfig};
 use crate::dicod::transport::TransportKind;
 use crate::dict::pgd::PgdConfig;
 use crate::stream::HaloPolicy;
@@ -323,6 +323,22 @@ impl DicodileBuilder {
         self
     }
 
+    /// Select the CDL alternation schedule on a distributed backend
+    /// (no-op otherwise). `Barrier` (default) keeps the grid idle
+    /// during every dictionary PGD step and is bitwise reproducible;
+    /// `Pipelined` lets resident pools keep solving speculatively under
+    /// the old dictionary while the step runs, landing the accepted
+    /// dictionary as a mid-solve warm re-init (tolerance-level
+    /// reproducible; see [`crate::dicod::config::Alternation`]).
+    /// Overrides `DICODILE_ALTERNATION`. One-shot (non-persistent)
+    /// solves ignore the knob — there is no resident grid to overlap.
+    pub fn alternation(mut self, a: Alternation) -> Self {
+        if let Backend::Distributed(d) = &mut self.backend {
+            d.alternation = a;
+        }
+        self
+    }
+
     /// Dictionary-update (PGD) configuration.
     pub fn dict_cfg(mut self, cfg: PgdConfig) -> Self {
         self.dict_cfg = cfg;
@@ -504,6 +520,18 @@ mod tests {
         }
         // No-op on a sequential backend.
         let b = Dicodile::builder().sequential().transport(TransportKind::Socket);
+        assert!(matches!(b.backend, Backend::Sequential(_)));
+    }
+
+    #[test]
+    fn alternation_setter_targets_distributed_backends() {
+        let b = Dicodile::builder().dicodile(2).alternation(Alternation::Pipelined);
+        match &b.backend {
+            Backend::Distributed(d) => assert_eq!(d.alternation, Alternation::Pipelined),
+            other => panic!("expected distributed, got {other:?}"),
+        }
+        // No-op on a sequential backend.
+        let b = Dicodile::builder().sequential().alternation(Alternation::Pipelined);
         assert!(matches!(b.backend, Backend::Sequential(_)));
     }
 

@@ -247,6 +247,8 @@ impl TrainedModel {
                 dict_time: 0.0,
                 elapsed: 0.0,
                 phipsi_path: "loaded",
+                dict_wait_s: 0.0,
+                overlap_updates: 0,
             })
             .collect();
         Ok(TrainedModel {
@@ -303,6 +305,8 @@ mod tests {
             dict_time: 0.1,
             elapsed: 0.3,
             phipsi_path: "sparse-seq",
+            dict_wait_s: 0.1,
+            overlap_updates: 0,
         }];
         m
     }

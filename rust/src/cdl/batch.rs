@@ -24,7 +24,11 @@
 //!   pools" and "interleave the per-pool Solve supervision loops"
 //!   follow-ups from the persistent runtime work.
 //!   (`IterRecord.csc_time` covers the whole interleaved solve+stats
-//!   phase; `dict_time` is the reduce + PGD step.)
+//!   phase; `dict_time` is the reduce + PGD step.) Under
+//!   `Alternation::Pipelined` every grid additionally keeps solving
+//!   speculatively under the old dictionary while the reduce + PGD
+//!   run, and the accepted dictionary lands as a mid-solve `SetDict`
+//!   (see `dicod::pool` for the leg protocol).
 //! - **Teardown** (sequential, or distributed with `persistent:
 //!   false`): one warm-started one-shot solve per signal per
 //!   iteration, statistics recomputed from the gathered activations.
@@ -37,6 +41,7 @@ use crate::cdl::init::init_dictionary;
 use crate::csc::cd::{solve_cd_warm, CdConfig};
 use crate::csc::problem::CscProblem;
 use crate::csc::select::Strategy;
+use crate::dicod::config::Alternation;
 use crate::dicod::coordinator::solve_distributed_warm;
 use crate::dicod::pool::{PoolReport, WorkerPool};
 use crate::dict::grad::cost_from_stats;
@@ -139,6 +144,11 @@ pub(crate) fn learn_batch_on_pools(
     lambda: f64,
     start: Instant,
 ) -> anyhow::Result<BatchCdlResult> {
+    // Every pool of a corpus run is spawned from the same backend
+    // config, so the first pool's alternation mode speaks for all.
+    if pools.first().map_or(false, |p| p.config().alternation == Alternation::Pipelined) {
+        return learn_batch_on_pools_pipelined(pools, cfg, d, lambda, start);
+    }
     let x_arcs: Vec<Arc<NdTensor>> = pools.iter().map(|p| p.problem().x_shared()).collect();
     let mut trace: Vec<IterRecord> = Vec::new();
     let mut converged = false;
@@ -226,6 +236,11 @@ pub(crate) fn learn_batch_on_pools(
             dict_time,
             elapsed: start.elapsed().as_secs_f64(),
             phipsi_path: "worker-partials",
+            // Barrier alternation: every grid idles for the whole
+            // reduce + PGD span (supervisors still overlap across
+            // pools, but no pool solves during the dictionary step).
+            dict_wait_s: dict_time,
+            overlap_updates: 0,
         };
         if cfg.verbose {
             log_iter(&rec);
@@ -294,6 +309,182 @@ pub(crate) fn learn_batch_on_pools(
         }
     }
     anyhow::ensure!(!gather_panic, "corpus gather panicked (wedged pool abandoned)");
+    let reports: Vec<PoolReport> = pools.iter().map(|p| p.report()).collect();
+
+    Ok(BatchCdlResult {
+        d,
+        zs,
+        lambda,
+        trace,
+        converged,
+        runtime: start.elapsed().as_secs_f64(),
+        pools: reports,
+    })
+}
+
+/// Run `f` once per pool on scoped supervisor threads and join in
+/// signal order. A panicking supervisor (a wedged grid past its
+/// fail-loudly deadline) gets its pool abandoned — joining the grid
+/// would hang — and the call returns `Err` after every thread has been
+/// consumed, so one bad signal cannot poison the caller's other pools.
+fn run_on_pools<T: Send>(
+    pools: &mut [&mut WorkerPool],
+    it: usize,
+    what: &str,
+    f: impl Fn(usize, &mut WorkerPool) -> T + Sync,
+) -> anyhow::Result<Vec<T>> {
+    let f = &f;
+    let joined: Vec<std::thread::Result<T>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = pools
+            .iter_mut()
+            .enumerate()
+            .map(|(n, pool)| scope.spawn(move || f(n, &mut **pool)))
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let mut out = Vec::with_capacity(joined.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    for (n, r) in joined.into_iter().enumerate() {
+        match r {
+            Ok(v) => out.push(v),
+            Err(_) => {
+                pools[n].abandon();
+                first_err.get_or_insert_with(|| {
+                    anyhow::anyhow!(
+                        "corpus {what} for signal {n} panicked at outer iteration {it} \
+                         (worker grid wedged); pool abandoned"
+                    )
+                });
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+/// Pipelined corpus alternation: after each pool ships its φ/ψ
+/// partials, its grid resumes coordinate descent speculatively under
+/// the old dictionary while this thread reduces the partials across
+/// pools (still in signal order) and runs the PGD step. The accepted
+/// dictionary then lands as a mid-solve `SetDict` in every pool, so
+/// the already-running phases become the next iteration's CSC instead
+/// of fresh `Solve` broadcasts — the grids never idle for the
+/// dictionary step. Convergence gates are the same tolerance-based
+/// ones as the single-signal pipelined driver; the barrier driver
+/// above keeps bitwise reproducibility.
+fn learn_batch_on_pools_pipelined(
+    pools: &mut [&mut WorkerPool],
+    cfg: &CdlConfig,
+    mut d: NdTensor,
+    lambda: f64,
+    start: Instant,
+) -> anyhow::Result<BatchCdlResult> {
+    let x_arcs: Vec<Arc<NdTensor>> = pools.iter().map(|p| p.problem().x_shared()).collect();
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut converged = false;
+    let mut prev_overlap: u64 =
+        pools.iter().map(|p| p.aggregate_stats().overlap_updates).sum();
+
+    // Iteration 0's CSC phases; later iterations inherit the resumed
+    // phases supervised by the previous leg's mid-solve `SetDict`.
+    let t0 = Instant::now();
+    let mut phases = run_on_pools(pools, 0, "Solve supervisor", |_, pool| pool.solve())?;
+    let mut csc_time = t0.elapsed().as_secs_f64();
+
+    for it in 0..cfg.max_iter {
+        for (n, ph) in phases.iter().enumerate() {
+            anyhow::ensure!(
+                !ph.diverged,
+                "distributed CSC diverged on corpus signal {n} at outer iteration {it} \
+                 (divergence guard tripped; resident Z is unusable)"
+            );
+        }
+        // Partials + speculative resume, interleaved across pools. The
+        // grids only idle for the back-to-back broadcast pair; the
+        // reduce + PGD below overlaps with the resumed solves.
+        let legs = run_on_pools(pools, it, "ComputeStats supervisor", |_, pool| {
+            pool.compute_stats_overlapped()
+        })?;
+        let dict_wait_s = legs.iter().map(|l| l.2).fold(0.0, f64::max);
+
+        let t1 = Instant::now();
+        let mut agg: Option<DictStats> = None;
+        let mut nnz = 0usize;
+        for (s, z_nnz, _) in legs {
+            nnz += z_nnz;
+            agg = Some(match agg {
+                None => s,
+                Some(mut a) => {
+                    a.phi.add_assign(&s.phi);
+                    a.psi.add_assign(&s.psi);
+                    a.x_norm_sq += s.x_norm_sq;
+                    a.z_l1 += s.z_l1;
+                    a
+                }
+            });
+        }
+        let stats = agg.expect("corpus is non-empty");
+        let cost_after_csc = cost_from_stats(&stats, &d, lambda);
+        let pgd = update_dict(&stats, &d, lambda, &cfg.dict_cfg);
+        d = pgd.d;
+        let dict_time = t1.elapsed().as_secs_f64();
+        let prev = trace.last().map(|r: &IterRecord| r.cost);
+        let conv =
+            prev.is_some_and(|prev| (prev - pgd.cost).abs() / prev.abs().max(1e-300) < cfg.nu);
+        let last = it + 1 == cfg.max_iter;
+
+        // Land the accepted dictionary mid-solve in every pool (one
+        // shared engine per round, as in the barrier driver), or retire
+        // the speculative phases when the alternation is over.
+        let next_phases = if conv || last {
+            run_on_pools(pools, it, "Stop supervisor", |_, pool| pool.stop_resumed_solve())?
+        } else {
+            let corr = crate::conv::CorrEngine::new(d.clone());
+            let problems: Vec<Arc<CscProblem>> = x_arcs
+                .iter()
+                .map(|x| {
+                    Arc::new(CscProblem::with_engine(x.clone(), d.clone(), lambda, corr.clone()))
+                })
+                .collect();
+            let problems = &problems;
+            run_on_pools(pools, it, "SetDict supervisor", move |n, pool| {
+                pool.set_dict_midsolve(problems[n].clone())
+            })?
+        };
+
+        let agg_overlap: u64 =
+            pools.iter().map(|p| p.aggregate_stats().overlap_updates).sum();
+        let rec = IterRecord {
+            iter: it,
+            cost: pgd.cost,
+            cost_after_csc,
+            z_nnz: nnz,
+            csc_time,
+            dict_time,
+            elapsed: start.elapsed().as_secs_f64(),
+            phipsi_path: "worker-partials",
+            dict_wait_s,
+            overlap_updates: agg_overlap - prev_overlap,
+        };
+        prev_overlap = agg_overlap;
+        if cfg.verbose {
+            log_iter(&rec);
+        }
+        trace.push(rec);
+        if conv {
+            converged = true;
+        }
+        if converged || last {
+            break;
+        }
+        csc_time = next_phases.iter().map(|p| p.runtime).fold(0.0, f64::max);
+        phases = next_phases;
+    }
+
+    // Same single per-signal centralization as the barrier driver.
+    let zs = run_on_pools(pools, cfg.max_iter, "gather", |_, pool| pool.gather())?;
     let reports: Vec<PoolReport> = pools.iter().map(|p| p.report()).collect();
 
     Ok(BatchCdlResult {
@@ -405,6 +596,8 @@ pub(crate) fn learn_batch_teardown(
             dict_time,
             elapsed: start.elapsed().as_secs_f64(),
             phipsi_path: phipsi_path.unwrap_or("sparse-seq"),
+            dict_wait_s: 0.0,
+            overlap_updates: 0,
         };
         if cfg.verbose {
             log_iter(&rec);

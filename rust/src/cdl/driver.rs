@@ -29,7 +29,7 @@ use crate::cdl::init::{init_dictionary, InitStrategy};
 use crate::csc::cd::{solve_cd_warm, CdConfig};
 use crate::csc::problem::CscProblem;
 use crate::csc::select::Strategy;
-use crate::dicod::config::DicodConfig;
+use crate::dicod::config::{Alternation, DicodConfig};
 use crate::dicod::coordinator::solve_distributed_warm;
 use crate::dicod::pool::{PoolReport, WorkerPool};
 use crate::dict::grad::cost_from_stats;
@@ -115,6 +115,17 @@ pub struct IterRecord {
     /// `"sparse-seq"`, `"dense-par"`, `"fft"` or `"worker-partials"`
     /// (`"mixed"` when a corpus iteration used several).
     pub phipsi_path: &'static str,
+    /// Seconds the worker grid sat without a live solve phase this
+    /// iteration. Barrier alternation: the whole φ/ψ reduce + PGD span
+    /// (the hidden synchronization cost this field makes visible).
+    /// Pipelined: only the back-to-back `ComputeStats`/`ResumeSolve`
+    /// broadcast, ~0. Always 0 on the teardown/sequential paths (no
+    /// resident grid to keep busy).
+    pub dict_wait_s: f64,
+    /// Coordinate updates the grid accepted speculatively under the
+    /// old dictionary while the PGD ran (pipelined alternation only;
+    /// 0 under barrier and teardown).
+    pub overlap_updates: u64,
 }
 
 /// CDL result.
@@ -176,6 +187,9 @@ pub(crate) fn learn_on_pool(
     lambda: f64,
     start: Instant,
 ) -> anyhow::Result<CdlResult> {
+    if pool.config().alternation == Alternation::Pipelined {
+        return learn_on_pool_pipelined(pool, x, cfg, d, lambda, start);
+    }
     let x_shared = pool.problem().x_shared();
 
     let mut trace: Vec<IterRecord> = Vec::new();
@@ -218,6 +232,10 @@ pub(crate) fn learn_on_pool(
             dict_time,
             elapsed: start.elapsed().as_secs_f64(),
             phipsi_path: "worker-partials",
+            // Barrier alternation: the grid idles for the whole
+            // dictionary step.
+            dict_wait_s: dict_time,
+            overlap_updates: 0,
         };
         if cfg.verbose {
             log_iter(&rec);
@@ -241,6 +259,127 @@ pub(crate) fn learn_on_pool(
 
     // The single full-Z centralization of the run. The pool itself
     // stays up — the owning session decides when it dies.
+    let z = pool.gather();
+    let report = pool.report();
+
+    Ok(CdlResult {
+        d,
+        z,
+        lambda,
+        trace,
+        converged,
+        runtime: start.elapsed().as_secs_f64(),
+        pool: Some(report),
+    })
+}
+
+/// Pipelined alternation on a resident pool
+/// (`cfg.alternation == Pipelined`): the dictionary PGD overlaps the
+/// next solve phase instead of stalling the grid.
+///
+/// Iteration 0's CSC step is a plain solve phase; every later
+/// iteration's CSC step *is* the resumed phase the previous leg
+/// supervised to convergence under its new dictionary
+/// ([`WorkerPool::solve_overlapped`]). The `update` closure runs the
+/// cost bookkeeping + PGD while the grid keeps iterating speculatively
+/// under the old dictionary, and returns the rebuilt problem to land
+/// mid-solve — or `None` on the final iteration, on `nu`-convergence,
+/// or when an atom died (the dead-atom resample needs a mid-run gather,
+/// so that iteration falls back to barrier semantics: retire the
+/// speculative phase, gather, resample, `set_dict` between phases).
+fn learn_on_pool_pipelined(
+    pool: &mut WorkerPool,
+    x: &NdTensor,
+    cfg: &CdlConfig,
+    mut d: NdTensor,
+    lambda: f64,
+    start: Instant,
+) -> anyhow::Result<CdlResult> {
+    let x_shared = pool.problem().x_shared();
+
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut converged = false;
+    let mut prev_overlap = pool.aggregate_stats().overlap_updates;
+
+    let mut phase = pool.solve();
+    let mut csc_time = phase.runtime;
+
+    for it in 0..cfg.max_iter {
+        anyhow::ensure!(
+            !phase.diverged,
+            "distributed CSC diverged at outer iteration {it} \
+             (divergence guard tripped; resident Z is unusable)"
+        );
+
+        let prev_cost = trace.last().map(|r: &IterRecord| r.cost);
+        let last = it + 1 == cfg.max_iter;
+        let leg = pool.solve_overlapped(|stats, _z_nnz| {
+            let t1 = Instant::now();
+            let cost_after_csc = cost_from_stats(stats, &d, lambda);
+            let pgd = update_dict(stats, &d, lambda, &cfg.dict_cfg);
+            let dead = dead_atoms_from_phi(&stats.phi);
+            let conv = prev_cost
+                .is_some_and(|prev| (prev - pgd.cost).abs() / prev.abs().max(1e-300) < cfg.nu);
+            let next = if dead.is_empty() && !conv && !last {
+                Some(Arc::new(CscProblem::new(x_shared.clone(), pgd.d.clone(), lambda)))
+            } else {
+                // Converged / final / dead-atom iteration: retire the
+                // speculative phase instead of landing a dictionary the
+                // run won't solve under (the extra speculative updates
+                // were ordinary warm progress under the old dictionary).
+                None
+            };
+            (next, (pgd, cost_after_csc, dead, conv, t1.elapsed().as_secs_f64()))
+        });
+        let (pgd, cost_after_csc, dead, conv, mut dict_time) = leg.carry;
+        d = pgd.d;
+        if !dead.is_empty() {
+            // Dead-atom fallback (barrier semantics for this iteration):
+            // the speculative phase was already retired by the leg; pay
+            // the mid-run gather and resample from residual patches.
+            let t2 = Instant::now();
+            let z = pool.gather();
+            resample_dead_atoms(x, &z, &mut d, cfg.seed.wrapping_add(it as u64));
+            dict_time += t2.elapsed().as_secs_f64();
+        }
+
+        let agg_overlap = pool.aggregate_stats().overlap_updates;
+        let rec = IterRecord {
+            iter: it,
+            cost: pgd.cost,
+            cost_after_csc,
+            z_nnz: leg.z_nnz,
+            csc_time,
+            dict_time,
+            elapsed: start.elapsed().as_secs_f64(),
+            phipsi_path: "worker-partials",
+            dict_wait_s: leg.dict_wait_s,
+            overlap_updates: agg_overlap - prev_overlap,
+        };
+        prev_overlap = agg_overlap;
+        if cfg.verbose {
+            log_iter(&rec);
+        }
+        trace.push(rec);
+        if conv {
+            converged = true;
+        }
+        if converged || last {
+            break;
+        }
+
+        if dead.is_empty() {
+            // The leg landed the new dictionary mid-solve and supervised
+            // the resumed phase to convergence under it: that phase is
+            // iteration it+1's CSC step.
+            phase = leg.phase;
+        } else {
+            pool.set_dict(Arc::new(CscProblem::new(x_shared.clone(), d.clone(), lambda)));
+            phase = pool.solve();
+        }
+        csc_time = phase.runtime;
+    }
+
     let z = pool.gather();
     let report = pool.report();
 
@@ -320,6 +459,8 @@ pub(crate) fn learn_teardown(
             dict_time,
             elapsed: start.elapsed().as_secs_f64(),
             phipsi_path,
+            dict_wait_s: 0.0,
+            overlap_updates: 0,
         };
         if cfg.verbose {
             log_iter(&rec);

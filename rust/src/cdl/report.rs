@@ -6,11 +6,18 @@ use crate::util::json::Json;
 /// Render the iteration trace as an aligned text table.
 pub fn trace_table(result: &CdlResult) -> String {
     let mut s = String::new();
-    s.push_str("iter        cost   cost(csc)      nnz   csc[s]  dict[s]  phi/psi\n");
+    s.push_str("iter        cost   cost(csc)      nnz   csc[s]  dict[s]  wait[s]  phi/psi\n");
     for r in &result.trace {
         s.push_str(&format!(
-            "{:4}  {:10.4e}  {:10.4e}  {:7}  {:7.3}  {:7.3}  {}\n",
-            r.iter, r.cost, r.cost_after_csc, r.z_nnz, r.csc_time, r.dict_time, r.phipsi_path
+            "{:4}  {:10.4e}  {:10.4e}  {:7}  {:7.3}  {:7.3}  {:7.3}  {}\n",
+            r.iter,
+            r.cost,
+            r.cost_after_csc,
+            r.z_nnz,
+            r.csc_time,
+            r.dict_time,
+            r.dict_wait_s,
+            r.phipsi_path
         ));
     }
     s
@@ -64,6 +71,12 @@ pub fn to_json(result: &CdlResult) -> Json {
                             ("z_nnz", Json::Num(r.z_nnz as f64)),
                             ("csc_time", Json::Num(r.csc_time)),
                             ("dict_time", Json::Num(r.dict_time)),
+                            // Alternation provenance: how long the grid
+                            // sat idle for the dictionary step (~0 when
+                            // pipelined) and how many coordinate updates
+                            // it accepted speculatively meanwhile.
+                            ("dict_wait_s", Json::Num(r.dict_wait_s)),
+                            ("overlap_updates", Json::Num(r.overlap_updates as f64)),
                             ("elapsed", Json::Num(r.elapsed)),
                             ("phipsi", Json::str(r.phipsi_path)),
                         ])
@@ -130,6 +143,8 @@ mod tests {
                 dict_time: 0.2,
                 elapsed: 0.3,
                 phipsi_path: "sparse-seq",
+                dict_wait_s: 0.2,
+                overlap_updates: 0,
             }],
             converged: true,
             runtime: 0.3,

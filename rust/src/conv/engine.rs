@@ -794,51 +794,106 @@ fn mirror_into(phi: &mut NdTensor, k0: usize, k1: usize, k: usize, cc_sp: usize)
     }
 }
 
+/// Thread count for a batched spectra build of `units` independent
+/// transform units: one per hardware core, never more than one per
+/// unit, and 1 (serial) for single-unit batches where scoped-thread
+/// setup would dominate. Every unit is computed by the same sequence
+/// of operations on its own buffers whichever thread runs it, so the
+/// parallel build is bit-identical to the serial one.
+fn spectra_threads(units: usize) -> usize {
+    if units < 2 {
+        return 1;
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get()).min(units)
+}
+
 /// Forward-transform a batch of equally-shaped real fields to
 /// half-spectra (the rfft layout). Each field of dims `sdims` is
 /// zero-embedded at the low corner of the padded domain `pdims`.
+/// Fields are independent, so the batch fans out across scoped
+/// threads — this is the hot path of a per-worker dictionary-spectra
+/// rebuild after `SetDict` (K*P planes per padded domain).
 fn transform_real_fields_half(
     fields: &[&[f64]],
     sdims: &[usize],
     pdims: &[usize],
 ) -> Vec<Vec<C64>> {
     let pn: usize = pdims.iter().product();
-    let mut buf = vec![0.0f64; pn];
-    fields
-        .iter()
-        .map(|field| {
-            buf.fill(0.0);
-            embed_real_field(field, sdims, &mut buf, pdims);
-            rfftn_cached(&buf, pdims)
-        })
-        .collect()
+    let n_threads = spectra_threads(fields.len());
+    if n_threads < 2 {
+        let mut buf = vec![0.0f64; pn];
+        return fields
+            .iter()
+            .map(|field| {
+                buf.fill(0.0);
+                embed_real_field(field, sdims, &mut buf, pdims);
+                rfftn_cached(&buf, pdims)
+            })
+            .collect();
+    }
+    let mut out: Vec<Vec<C64>> = vec![Vec::new(); fields.len()];
+    let chunk = fields.len().div_ceil(n_threads);
+    std::thread::scope(|scope| {
+        for (fch, och) in fields.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                let mut buf = vec![0.0f64; pn];
+                for (field, slot) in fch.iter().zip(och.iter_mut()) {
+                    buf.fill(0.0);
+                    embed_real_field(field, sdims, &mut buf, pdims);
+                    *slot = rfftn_cached(&buf, pdims);
+                }
+            });
+        }
+    });
+    out
 }
 
 /// Forward-transform a batch of equally-shaped real fields, packing
 /// pairs into single complex transforms (the `DICODILE_RFFT=off`
 /// packed-complex layout). Each field of dims `sdims` is zero-embedded
-/// at the low corner of the padded domain `pdims`.
+/// at the low corner of the padded domain `pdims`. The pair units are
+/// independent, so the batch fans out across scoped threads; chunk
+/// boundaries stay on even field indices so the positional pairing —
+/// and hence the output — is identical to the serial build, with only
+/// the globally-last field of an odd batch left unpaired.
 fn transform_real_fields(fields: &[&[f64]], sdims: &[usize], pdims: &[usize]) -> Vec<Vec<C64>> {
     let pn: usize = pdims.iter().product();
-    let mut out = Vec::with_capacity(fields.len());
-    let mut i = 0;
-    while i < fields.len() {
-        let mut buf = vec![C64::ZERO; pn];
-        if i + 1 < fields.len() {
-            embed_real(fields[i], sdims, &mut buf, pdims, false);
-            embed_real(fields[i + 1], sdims, &mut buf, pdims, true);
-            fftn_cached(&mut buf, pdims, false);
-            let (a, b) = split_packed_spectrum(&buf, pdims);
-            out.push(a);
-            out.push(b);
-            i += 2;
-        } else {
-            embed_real(fields[i], sdims, &mut buf, pdims, false);
-            fftn_cached(&mut buf, pdims, false);
-            out.push(buf);
-            i += 1;
+    let transform_chunk = |fch: &[&[f64]], och: &mut [Vec<C64>]| {
+        let mut i = 0;
+        while i < fch.len() {
+            let mut buf = vec![C64::ZERO; pn];
+            if i + 1 < fch.len() {
+                embed_real(fch[i], sdims, &mut buf, pdims, false);
+                embed_real(fch[i + 1], sdims, &mut buf, pdims, true);
+                fftn_cached(&mut buf, pdims, false);
+                let (a, b) = split_packed_spectrum(&buf, pdims);
+                och[i] = a;
+                och[i + 1] = b;
+                i += 2;
+            } else {
+                embed_real(fch[i], sdims, &mut buf, pdims, false);
+                fftn_cached(&mut buf, pdims, false);
+                och[i] = buf;
+                i += 1;
+            }
         }
+    };
+    let mut out: Vec<Vec<C64>> = vec![Vec::new(); fields.len()];
+    let n_threads = spectra_threads(fields.len().div_ceil(2));
+    if n_threads < 2 {
+        transform_chunk(fields, &mut out);
+        return out;
     }
+    let mut chunk = fields.len().div_ceil(n_threads);
+    if chunk % 2 == 1 {
+        chunk += 1;
+    }
+    let transform_chunk = &transform_chunk;
+    std::thread::scope(|scope| {
+        for (fch, och) in fields.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || transform_chunk(fch, och));
+        }
+    });
     out
 }
 
@@ -851,6 +906,37 @@ mod tests {
     fn rand_tensor(dims: &[usize], seed: u64) -> NdTensor {
         let mut rng = Pcg64::seeded(seed);
         NdTensor::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    #[test]
+    fn batched_field_transforms_are_chunk_invariant() {
+        // The scoped-thread fan-out must be bit-identical to the
+        // serial build: single-unit batches take the serial path, so
+        // comparing the whole batch against per-field (half layout)
+        // and per-pair (packed layout) singleton builds pins the
+        // threading down to a pure scheduling change.
+        let mut rng = Pcg64::seeded(9);
+        let sdims = [4usize, 5];
+        let pdims = [8usize, 10];
+        let planes: Vec<Vec<f64>> = (0..5).map(|_| rng.normal_vec(20)).collect();
+        let fields: Vec<&[f64]> = planes.iter().map(|p| p.as_slice()).collect();
+
+        let half = transform_real_fields_half(&fields, &sdims, &pdims);
+        assert_eq!(half.len(), fields.len());
+        for (i, f) in fields.iter().enumerate() {
+            let solo = transform_real_fields_half(&[*f], &sdims, &pdims);
+            assert_eq!(half[i], solo[0], "half-spectrum plane {i} changed under threading");
+        }
+
+        let packed = transform_real_fields(&fields, &sdims, &pdims);
+        assert_eq!(packed.len(), fields.len());
+        for (c, pair) in fields.chunks(2).enumerate() {
+            let solo = transform_real_fields(pair, &sdims, &pdims);
+            for (j, s) in solo.iter().enumerate() {
+                let i = 2 * c + j;
+                assert_eq!(packed[i], *s, "packed plane {i} changed under threading");
+            }
+        }
     }
 
     #[test]

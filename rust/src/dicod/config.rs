@@ -4,6 +4,65 @@ pub use crate::dicod::partition::PartitionKind;
 pub use crate::dicod::transport::TransportKind;
 use crate::csc::select::{SelectMode, Strategy};
 
+/// Outer CDL alternation scheduling on a resident pool.
+///
+/// `Barrier` is the classical alternation: the whole grid idles while
+/// the coordinator reduces the φ/ψ partials and runs the dictionary
+/// PGD, then `SetDict` lands between solve phases. `Pipelined` resumes
+/// coordinate descent *speculatively under the old dictionary* the
+/// moment a worker has shipped its partial, and applies `SetDict`
+/// mid-solve as the ordinary warm beta re-init — the dictionary step's
+/// wall clock is hidden behind useful solver progress. Barrier stays
+/// bit-identical to the historical trajectory; Pipelined is gated by
+/// convergence invariants (surrogate cost monotone within `nu`, final
+/// KKT residual no worse at equal `tol`) rather than bitwise parity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Alternation {
+    /// Strict alternation: the grid waits for the dictionary update.
+    Barrier,
+    /// Speculative solve under the old dictionary while PGD runs;
+    /// `SetDict` is broadcast mid-solve.
+    Pipelined,
+}
+
+impl Alternation {
+    /// Stable lowercase name (used in bench records and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Alternation::Barrier => "barrier",
+            Alternation::Pipelined => "pipelined",
+        }
+    }
+
+    /// Resolve the run-wide default from `DICODILE_ALTERNATION`
+    /// (`barrier` | `pipelined`; unset or unrecognized falls back to
+    /// `Barrier` with a once-per-process warning).
+    pub fn from_env() -> Self {
+        match std::env::var("DICODILE_ALTERNATION") {
+            Ok(s) => s.parse().unwrap_or_else(|e: String| {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| eprintln!("warning: {e}; using barrier alternation"));
+                Alternation::Barrier
+            }),
+            Err(_) => Alternation::Barrier,
+        }
+    }
+}
+
+impl std::str::FromStr for Alternation {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" => Ok(Alternation::Barrier),
+            "pipelined" => Ok(Alternation::Pipelined),
+            other => Err(format!(
+                "unknown DICODILE_ALTERNATION '{other}' (expected 'barrier' or 'pipelined')"
+            )),
+        }
+    }
+}
+
 /// Configuration of a DiCoDiLe-Z / DICOD run.
 #[derive(Clone, Debug)]
 pub struct DicodConfig {
@@ -56,6 +115,15 @@ pub struct DicodConfig {
     /// serialization seam). Defaults from the `DICODILE_TRANSPORT` env
     /// toggle (`channel` | `socket`).
     pub transport: TransportKind,
+    /// Outer-loop scheduling for persistent CDL runs: `Barrier` (the
+    /// default — grid idles through the dictionary PGD, bit-identical
+    /// to the historical trajectory) or `Pipelined` (workers keep
+    /// iterating speculatively under the old dictionary while PGD
+    /// runs; `SetDict` lands mid-solve as a warm beta re-init).
+    /// Defaults from the `DICODILE_ALTERNATION` env toggle. Ignored by
+    /// one-shot solves and the teardown/respawn driver — there is no
+    /// resident grid to overlap with.
+    pub alternation: Alternation,
 }
 
 impl Default for DicodConfig {
@@ -74,6 +142,7 @@ impl Default for DicodConfig {
             inbox_every: 1,
             persistent: false,
             transport: TransportKind::from_env(),
+            alternation: Alternation::from_env(),
         }
     }
 }
@@ -123,5 +192,17 @@ mod tests {
         if std::env::var("DICODILE_TRANSPORT").is_err() {
             assert_eq!(DicodConfig::default().transport, TransportKind::Channel);
         }
+    }
+
+    #[test]
+    fn alternation_defaults_to_barrier() {
+        // (Holds unless the suite itself runs under DICODILE_ALTERNATION.)
+        if std::env::var("DICODILE_ALTERNATION").is_err() {
+            assert_eq!(DicodConfig::default().alternation, Alternation::Barrier);
+        }
+        assert_eq!("pipelined".parse::<Alternation>(), Ok(Alternation::Pipelined));
+        assert_eq!("Barrier".parse::<Alternation>(), Ok(Alternation::Barrier));
+        assert!("eager".parse::<Alternation>().is_err());
+        assert_eq!(Alternation::Pipelined.name(), "pipelined");
     }
 }

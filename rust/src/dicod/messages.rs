@@ -17,13 +17,23 @@
 //!
 //! | command        | worker reply           | effect                              | wire frame                          |
 //! |----------------|------------------------|-------------------------------------|-------------------------------------|
-//! | `Solve`        | `Status`… `SolveDone`  | run DiCoDiLe-Z from the resident Z  | tag only / status + 16 counters     |
+//! | `Solve`        | `Status`… `SolveDone`  | run DiCoDiLe-Z from the resident Z  | tag only / status + 17 counters     |
 //! | `Stop`         | (ends the solve phase) | sent by the pool on convergence     | tag only                            |
 //! | `ComputeStats` | `Stats`                | local φ^w/ψ^w partials (eq. 17)     | tag / two tensors + `z_l1`, `z_nnz` |
 //! | `SetDict`      | `DictSet`              | swap D, warm beta re-init from Z    | [`DictUpdate`] (D + λ + fingerprint)|
 //! | `SetProblem`   | `ProblemSet`           | swap X *and* D (streaming chunks)   | [`ProblemUpdate`] (X + D + λ + Z0)  |
+//! | `ResumeSolve`  | `Status`… `SolveDone`  | re-enter the solve loop in place    | tag only                            |
 //! | `Gather`       | `Done`                 | report the cell's activation values | tag / flat cell values + counters   |
 //! | `Shutdown`     | (thread exits)         |                                     | tag only                            |
+//!
+//! `ResumeSolve` is the pipelined-alternation leg: after shipping its
+//! φ/ψ partial the worker resumes coordinate descent *speculatively
+//! under the old dictionary* (its resident Z/beta are at the previous
+//! fixed point, so the speculative updates are ordinary warm progress)
+//! while the coordinator runs the dictionary PGD. The subsequent
+//! `SetDict` then lands *mid-solve* and is applied as the usual warm
+//! beta re-init without leaving the Solve phase. Under the default
+//! `Barrier` alternation neither mid-solve leg ever fires.
 //!
 //! Neighbour `Update` notifications ride the same seam: in channel mode
 //! a direct send into the destination inbox, in socket mode a `Fwd`
@@ -180,6 +190,11 @@ pub enum WorkerMsg {
     /// Swap observation + dictionary on an unchanged geometry; reset Z
     /// (optionally to a provided warm start) and re-bootstrap beta.
     SetProblem(SetProblemMsg),
+    /// Re-enter the solve loop speculatively under the current
+    /// dictionary (pipelined alternation: the coordinator overlaps the
+    /// dictionary PGD with this resumed solve and lands `SetDict`
+    /// mid-phase).
+    ResumeSolve,
     /// Report the cell's activation values (final assembly only).
     Gather,
     /// Exit the worker thread.
@@ -294,6 +309,11 @@ pub struct WorkerStats {
     /// `Gather` replies served (exactly one — the final assembly — per
     /// `learn_dictionary` run on the persistent path).
     pub gathers: u64,
+    /// Accepted coordinate updates made *speculatively under a stale
+    /// dictionary* — the updates a pipelined solve phase ran between a
+    /// `ResumeSolve` and the mid-solve `SetDict` that retired the old
+    /// dictionary. Always 0 under `Barrier` alternation.
+    pub overlap_updates: u64,
 }
 
 impl WorkerStats {
@@ -314,6 +334,7 @@ impl WorkerStats {
         self.beta_warm_inits += other.beta_warm_inits;
         self.beta_warm_reinits += other.beta_warm_reinits;
         self.gathers += other.gathers;
+        self.overlap_updates += other.overlap_updates;
     }
 }
 
@@ -403,6 +424,7 @@ const TAG_DONE: u8 = 13;
 const TAG_BOOTSTRAP: u8 = 14;
 const TAG_SET_PROBLEM: u8 = 15;
 const TAG_PROBLEM_SET: u8 = 16;
+const TAG_RESUME_SOLVE: u8 = 17;
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -464,6 +486,7 @@ fn put_stats(out: &mut Vec<u8>, s: &WorkerStats) {
         s.beta_warm_inits,
         s.beta_warm_reinits,
         s.gathers,
+        s.overlap_updates,
     ] {
         put_u64(out, v);
     }
@@ -590,6 +613,7 @@ impl<'a> Wire<'a> {
             beta_warm_inits: self.u64_()?,
             beta_warm_reinits: self.u64_()?,
             gathers: self.u64_()?,
+            overlap_updates: self.u64_()?,
         })
     }
 
@@ -654,6 +678,7 @@ pub fn encode_worker_frame(msg: &WorkerMsg) -> Vec<u8> {
                 SetProblemMsg::Wire(pu) => put_problem_update(&mut out, pu),
             }
         }
+        WorkerMsg::ResumeSolve => out.push(TAG_RESUME_SOLVE),
         WorkerMsg::Gather => out.push(TAG_GATHER),
         WorkerMsg::Shutdown => out.push(TAG_SHUTDOWN),
     }
@@ -766,6 +791,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame, WireError> {
                 ProblemUpdate { x, d, lambda, z0 },
             ))))
         }
+        TAG_RESUME_SOLVE => w.finish(WireFrame::Worker(WorkerMsg::ResumeSolve)),
         TAG_GATHER => w.finish(WireFrame::Worker(WorkerMsg::Gather)),
         TAG_SHUTDOWN => w.finish(WireFrame::Worker(WorkerMsg::Shutdown)),
         TAG_FWD => {
@@ -905,6 +931,20 @@ mod tests {
             WireFrame::Worker(WorkerMsg::Update(got)) => assert_eq!(got, m),
             other => panic!("wrong frame: {other:?}"),
         }
+    }
+
+    #[test]
+    fn resume_solve_frame_round_trips_exactly() {
+        let frame = encode_worker_frame(&WorkerMsg::ResumeSolve);
+        assert_eq!(frame.len(), 1, "ResumeSolve is a tag-only frame");
+        match decode_frame(&frame).unwrap() {
+            WireFrame::Worker(WorkerMsg::ResumeSolve) => {}
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // Strictness holds for the new tag too.
+        let mut padded = frame.clone();
+        padded.push(0);
+        assert!(matches!(decode_frame(&padded), Err(WireError::TrailingBytes(1))));
     }
 
     #[test]

@@ -27,6 +27,22 @@
 //! - `gather()` assembles the full Z — used exactly once, for the final
 //!   result.
 //!
+//! Two alternation modes drive these phases from the CDL driver
+//! ([`Alternation`](crate::dicod::config::Alternation)). *Barrier* (the
+//! default) runs them strictly in sequence — bit-identical to the
+//! historical trajectory. *Pipelined* fuses them with
+//! [`solve_overlapped`](WorkerPool::solve_overlapped): `ComputeStats`
+//! and `ResumeSolve` are broadcast back-to-back, so each worker ships
+//! its φ/ψ partial and immediately resumes coordinate descent
+//! *speculatively under the old dictionary* while the coordinator
+//! thread reduces the partials and runs the dictionary PGD; the
+//! accepted step then lands as a mid-solve `SetDict` — the ordinary
+//! warm beta re-init, applied inside the live phase — and the phase is
+//! supervised to convergence under the new dictionary. A worker's
+//! idle/converged state only counts toward the stop decision after its
+//! `DictSet` ack, so the Safra counter settlement is re-proved across
+//! the mid-solve swap.
+//!
 //! All delivery goes through the pluggable
 //! [`Transport`](crate::dicod::transport::Transport) seam
 //! (`DicodConfig::transport`): the pool holds only a [`CoordEndpoint`],
@@ -60,6 +76,39 @@ pub struct PoolSolve {
     pub diverged: bool,
     /// Wall-clock seconds of the phase.
     pub runtime: f64,
+}
+
+/// Outcome of one pipelined leg
+/// (see [`solve_overlapped`](WorkerPool::solve_overlapped)).
+pub struct OverlappedLeg<T> {
+    /// The reduced φ/ψ sufficient statistics (eq. 17).
+    pub stats: DictStats,
+    /// Total activation nonzeros at reduction time.
+    pub z_nnz: usize,
+    /// Whatever the `update` closure carried out (cost, the new
+    /// dictionary, convergence bookkeeping).
+    pub carry: T,
+    /// Outcome of the resumed phase: converged under the new
+    /// dictionary, or retired by `Stop` when `update` returned `None`.
+    pub phase: PoolSolve,
+    /// Seconds the grid spent without a live solve phase — from entry
+    /// (the caller invokes this right after the previous phase
+    /// settles) to the `ResumeSolve` broadcast. The pipelined analogue
+    /// of the barrier mode's full reduce + PGD + `SetDict` wait;
+    /// overlapping pushes it to ~0.
+    pub dict_wait_s: f64,
+}
+
+/// How a supervision loop enters a live solve phase (see
+/// [`WorkerPool::solve`], [`WorkerPool::set_dict_midsolve`],
+/// [`WorkerPool::stop_resumed_solve`]).
+struct Supervise {
+    /// Require a `DictSet` ack per worker before its idle/converged
+    /// state counts toward the stop decision (mid-solve swap: tracked
+    /// state predating a worker's ack reflects the old dictionary).
+    dict_acks: bool,
+    /// Broadcast `Stop` immediately (retiring a speculative phase).
+    stop_now: bool,
 }
 
 /// End-of-run summary of a pool (for `CdlResult` provenance and the
@@ -97,6 +146,10 @@ pub struct WorkerPool {
     x_norm_sq: f64,
     workers_spawned: usize,
     down: bool,
+    /// Recycled φ/ψ reduction buffers: `compute_stats` swaps them with
+    /// a worker partial each outer iteration, so the steady state
+    /// allocates no fresh accumulators pool-side.
+    stats_acc: Option<(NdTensor, NdTensor)>,
 }
 
 impl WorkerPool {
@@ -158,6 +211,7 @@ impl WorkerPool {
             x_norm_sq,
             workers_spawned: w_tot,
             down: false,
+            stats_acc: None,
         }
     }
 
@@ -196,6 +250,13 @@ impl WorkerPool {
         self.transport_kind
     }
 
+    /// The solver configuration this pool was spawned with (the CDL
+    /// driver reads `alternation` from here — the pool's config is
+    /// authoritative for the grid it spawned).
+    pub fn config(&self) -> &DicodConfig {
+        &self.cfg
+    }
+
     /// End-of-run summary.
     pub fn report(&self) -> PoolReport {
         PoolReport {
@@ -210,9 +271,10 @@ impl WorkerPool {
     }
 
     fn broadcast(&mut self, msg: WorkerMsg) {
-        for rank in 0..self.grid.n_workers() {
-            self.coord.send(rank, msg.clone());
-        }
+        // Route through the endpoint's broadcast so the socket
+        // transport can encode the frame once and share the bytes
+        // across ranks (a `SetDict` payload is the whole dictionary).
+        self.coord.broadcast(self.grid.n_workers(), msg);
     }
 
     /// Drain coordinator messages until every worker has produced this
@@ -262,13 +324,91 @@ impl WorkerPool {
     /// ack per worker.
     pub fn solve(&mut self) -> PoolSolve {
         let start = Instant::now();
-        let w_tot = self.n_workers();
         self.broadcast(WorkerMsg::Solve);
+        self.supervise_solve(start, Supervise { dict_acks: false, stop_now: false })
+    }
 
+    /// One pipelined alternation leg, fused (see the module docs):
+    /// broadcast `ComputeStats` + `ResumeSolve` back-to-back — each
+    /// worker ships its φ/ψ partial and immediately resumes coordinate
+    /// descent speculatively under the current dictionary — reduce the
+    /// partials, run `update` on this thread while the grid works,
+    /// then land the returned problem mid-solve and supervise the
+    /// resumed phase to convergence under it. When `update` returns
+    /// `None` the phase is retired with `Stop` instead (final
+    /// iteration, or the driver's dead-atom fallback to barrier
+    /// semantics) — the extra speculative updates are ordinary warm
+    /// progress under the unchanged dictionary, so the resident Z only
+    /// improves before a subsequent `Gather`.
+    pub fn solve_overlapped<T>(
+        &mut self,
+        update: impl FnOnce(&DictStats, usize) -> (Option<Arc<CscProblem>>, T),
+    ) -> OverlappedLeg<T> {
+        let (stats, z_nnz, dict_wait_s) = self.compute_stats_overlapped();
+        let (next, carry) = update(&stats, z_nnz);
+        let phase = match next {
+            Some(problem) => self.set_dict_midsolve(problem),
+            None => self.stop_resumed_solve(),
+        };
+        OverlappedLeg { stats, z_nnz, carry, phase, dict_wait_s }
+    }
+
+    /// First half of a pipelined leg, split out for drivers that must
+    /// reduce partials from *several* pools before they can build the
+    /// new dictionary (batch CDL): broadcast `ComputeStats` +
+    /// `ResumeSolve` back-to-back and collect this pool's φ/ψ partials
+    /// while its grid resumes coordinate descent speculatively under
+    /// the current dictionary. Returns `(stats, z_nnz, dict_wait_s)`.
+    /// The caller owns a live (resumed) solve phase afterwards and must
+    /// finish the leg with
+    /// [`set_dict_midsolve`](WorkerPool::set_dict_midsolve) or
+    /// [`stop_resumed_solve`](WorkerPool::stop_resumed_solve).
+    pub fn compute_stats_overlapped(&mut self) -> (DictStats, usize, f64) {
+        let t0 = Instant::now();
+        // FIFO inboxes order the pair: partials first, then re-entry.
+        self.broadcast(WorkerMsg::ComputeStats);
+        self.broadcast(WorkerMsg::ResumeSolve);
+        let dict_wait_s = t0.elapsed().as_secs_f64();
+        let (stats, z_nnz) = self.collect_stats();
+        (stats, z_nnz, dict_wait_s)
+    }
+
+    /// Retire a speculative (resumed) solve phase without landing a
+    /// new dictionary: broadcast `Stop` and collect the `SolveDone`
+    /// acks.
+    pub fn stop_resumed_solve(&mut self) -> PoolSolve {
+        let start = Instant::now();
+        self.supervise_solve(start, Supervise { dict_acks: false, stop_now: true })
+    }
+
+    /// Land a dictionary swap on a *running* (resumed) solve phase and
+    /// supervise it to convergence under the new dictionary —
+    /// [`set_dict`](WorkerPool::set_dict) + [`solve`](WorkerPool::solve)
+    /// fused into the live phase. Each worker applies the broadcast as
+    /// its usual warm beta re-init without leaving the solve loop;
+    /// supervision counts a worker's idle/converged state only after
+    /// its `DictSet` ack (per-worker FIFO order guarantees every
+    /// post-ack status reflects the new dictionary), so the Safra
+    /// settlement is re-proved across the swap.
+    pub fn set_dict_midsolve(&mut self, problem: Arc<CscProblem>) -> PoolSolve {
+        self.assert_dict_swap_geometry(&problem);
+        let start = Instant::now();
+        self.problem = problem.clone();
+        self.broadcast(WorkerMsg::SetDict(SetDictMsg::Shared(problem)));
+        self.supervise_solve(start, Supervise { dict_acks: true, stop_now: false })
+    }
+
+    /// Supervise a live solve phase to completion: Safra-style
+    /// termination tracking, one `Stop` broadcast, one `SolveDone` ack
+    /// per worker. Shared by [`solve`](WorkerPool::solve) and the
+    /// pipelined legs.
+    fn supervise_solve(&mut self, start: Instant, mode: Supervise) -> PoolSolve {
+        let w_tot = self.n_workers();
         let mut idle = vec![false; w_tot];
         let mut converged = vec![false; w_tot];
         let mut sent = vec![0u64; w_tot];
         let mut received = vec![0u64; w_tot];
+        let mut acked = vec![!mode.dict_acks; w_tot];
         let mut any_diverged = false;
         let mut stop_sent = false;
         let mut acks = 0usize;
@@ -277,6 +417,10 @@ impl WorkerPool {
         // against a wedged thread so a bad run fails loudly instead of
         // hanging (same shortfall policy as `await_replies`).
         let hard_deadline = deadline + Duration::from_secs_f64(self.cfg.timeout);
+        if mode.stop_now {
+            stop_sent = true;
+            self.broadcast(WorkerMsg::Stop);
+        }
 
         while acks < w_tot {
             let msg = self.coord.recv_timeout(Duration::from_millis(20));
@@ -289,13 +433,24 @@ impl WorkerPool {
                     if s.diverged {
                         any_diverged = true;
                     }
+                    let all_acked = acked.iter().all(|&b| b);
                     let all_idle = idle.iter().all(|&b| b);
                     let balanced =
                         sent.iter().sum::<u64>() == received.iter().sum::<u64>();
-                    if !stop_sent && (any_diverged || (all_idle && balanced)) {
+                    if !stop_sent && (any_diverged || (all_acked && all_idle && balanced)) {
                         stop_sent = true;
                         self.broadcast(WorkerMsg::Stop);
                     }
+                }
+                Ok(CoordMsg::DictSet { from }) => {
+                    // Mid-solve swap ack: whatever was tracked for this
+                    // worker predates the new dictionary — reset it so
+                    // convergence is re-proved post-swap (the worker
+                    // sends a fresh status right after this ack, or
+                    // keeps solving and reports when it pauses).
+                    acked[from] = true;
+                    idle[from] = false;
+                    converged[from] = false;
                 }
                 Ok(CoordMsg::SolveDone(d)) => {
                     self.per_worker[d.from] = d.stats;
@@ -327,8 +482,18 @@ impl WorkerPool {
     /// workers' resident windows (eq. 17). Returns the reduced stats
     /// and the total activation nonzero count. Full Z never travels.
     pub fn compute_stats(&mut self) -> (DictStats, usize) {
-        let w_tot = self.n_workers();
         self.broadcast(WorkerMsg::ComputeStats);
+        self.collect_stats()
+    }
+
+    /// Collect and reduce the φ/ψ partials after a `ComputeStats`
+    /// broadcast. Interleaved `Status` traffic is ignored, so this is
+    /// safe while a resumed solve phase runs (pipelined alternation) —
+    /// statuses are cumulative and every worker re-reports after the
+    /// mid-solve `SetDict`, so none of the dropped ones are load-
+    /// bearing.
+    fn collect_stats(&mut self) -> (DictStats, usize) {
+        let w_tot = self.n_workers();
         let mut parts: Vec<Option<(NdTensor, NdTensor, f64, usize)>> = vec![None; w_tot];
         let timeout = self.cfg.timeout;
         Self::await_replies(self.coord.as_mut(), w_tot, timeout, "compute_stats", |m| {
@@ -346,12 +511,31 @@ impl WorkerPool {
         let mut it = parts
             .into_iter()
             .map(|p| p.expect("every worker reports a stats partial"));
-        let (mut phi, mut psi, mut z_l1, mut z_nnz) = it.next().unwrap();
+        let (phi0, psi0, mut z_l1, mut z_nnz) = it.next().unwrap();
+        // Accumulate into the recycled reduction buffers when available
+        // (rank 0's partial becomes the next iteration's buffer, so the
+        // steady state allocates nothing pool-side). Seeding by copy
+        // keeps the reduction bitwise identical to accumulating into
+        // the rank-0 partial directly.
+        let (mut phi, mut psi) = match self.stats_acc.take() {
+            Some((mut a, mut b)) if a.dims() == phi0.dims() && b.dims() == psi0.dims() => {
+                a.data_mut().copy_from_slice(phi0.data());
+                b.data_mut().copy_from_slice(psi0.data());
+                self.stats_acc = Some((phi0, psi0));
+                (a, b)
+            }
+            _ => (phi0, psi0),
+        };
         for (p2, s2, l1, nnz) in it {
             phi.add_assign(&p2);
             psi.add_assign(&s2);
             z_l1 += l1;
             z_nnz += nnz;
+            if self.stats_acc.is_none() {
+                // First reduction (or a geometry change): keep one
+                // worker partial as the recycled buffer pair.
+                self.stats_acc = Some((p2, s2));
+            }
         }
         (DictStats { phi, psi, x_norm_sq: self.x_norm_sq, z_l1 }, z_nnz)
     }
@@ -360,8 +544,27 @@ impl WorkerPool {
     /// Workers re-bootstrap beta warm from their resident Z; the call
     /// returns once every worker has acknowledged the swap.
     pub fn set_dict(&mut self, problem: Arc<CscProblem>) {
-        // The swap must preserve the whole problem geometry: the
-        // workers' resident windows were sized from it.
+        self.assert_dict_swap_geometry(&problem);
+        let w_tot = self.n_workers();
+        self.problem = problem.clone();
+        // The coordinator always broadcasts the `Shared` form; the
+        // socket transport flattens it to a wire `DictUpdate` at the
+        // serialization seam (spectra then regenerate once per
+        // receiving host — see the messages module docs).
+        self.broadcast(WorkerMsg::SetDict(SetDictMsg::Shared(problem)));
+        let timeout = self.cfg.timeout;
+        Self::await_replies(self.coord.as_mut(), w_tot, timeout, "set_dict", |m| match m {
+            CoordMsg::DictSet { from } => Some(from),
+            _ => None,
+        });
+    }
+
+    /// A dictionary swap must preserve the whole problem geometry (the
+    /// workers' resident windows were sized from it) and reuse the
+    /// *same shared* X: compute_stats completes the objective with the
+    /// x_norm_sq cached at spawn, and the workers' windows slice X by
+    /// identity.
+    fn assert_dict_swap_geometry(&self, problem: &Arc<CscProblem>) {
         assert_eq!(
             problem.z_spatial_dims(),
             self.problem.z_spatial_dims(),
@@ -377,25 +580,10 @@ impl WorkerPool {
             self.problem.atom_dims(),
             "dictionary swap must preserve the atom dims"
         );
-        // The observation must be the *same shared* X: compute_stats
-        // completes the objective with the x_norm_sq cached at spawn,
-        // and the workers' windows slice X by identity.
         assert!(
             Arc::ptr_eq(&problem.x, &self.problem.x),
             "dictionary swap must reuse the pool's shared observation Arc"
         );
-        let w_tot = self.n_workers();
-        self.problem = problem.clone();
-        // The coordinator always broadcasts the `Shared` form; the
-        // socket transport flattens it to a wire `DictUpdate` at the
-        // serialization seam (spectra then regenerate once per
-        // receiving host — see the messages module docs).
-        self.broadcast(WorkerMsg::SetDict(SetDictMsg::Shared(problem)));
-        let timeout = self.cfg.timeout;
-        Self::await_replies(self.coord.as_mut(), w_tot, timeout, "set_dict", |m| match m {
-            CoordMsg::DictSet { from } => Some(from),
-            _ => None,
-        });
     }
 
     /// Broadcast a whole new problem — observation *and* dictionary —
@@ -707,5 +895,80 @@ mod tests {
         let agg = pool.aggregate_stats();
         assert_eq!(agg.beta_warm_reinits, pool.n_workers() as u64);
         assert_eq!(agg.beta_cold_inits, pool.n_workers() as u64);
+    }
+
+    #[test]
+    fn overlapped_leg_lands_dict_midsolve() {
+        // One pipelined leg over a converged grid: partials ship, the
+        // grid resumes speculatively under the old dictionary, and the
+        // new dictionary lands as a mid-solve `SetDict` (one warm
+        // re-init per worker, no phase desync). The resumed phase must
+        // settle at the same optimum a sequential solve reaches under
+        // the new dictionary.
+        let p0 = gen_problem_1d(61, 120, 2, 5);
+        let mut rng = Pcg64::seeded(62);
+        let d1 = NdTensor::from_vec(&[2, 1, 5], {
+            let mut v = rng.normal_vec(10);
+            for atom in v.chunks_mut(5) {
+                let n = atom.iter().map(|x| x * x).sum::<f64>().sqrt();
+                for x in atom.iter_mut() {
+                    *x /= n;
+                }
+            }
+            v
+        });
+        let mut p1 = p0.clone();
+        p1.update_dict(d1);
+
+        let w = 3usize;
+        let cfg = DicodConfig { n_workers: w, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p0.clone()), &cfg, None);
+        assert!(pool.solve().converged);
+        let leg = pool.solve_overlapped(|stats, z_nnz| {
+            // Partials come from the settled resident Z.
+            assert!(z_nnz > 0, "converged grid must hold activations");
+            assert!(stats.z_l1 > 0.0);
+            (Some(Arc::new(p1.clone())), ())
+        });
+        assert!(leg.phase.converged, "resumed phase must re-converge after the swap");
+        assert!(!leg.phase.diverged);
+        assert!(leg.dict_wait_s >= 0.0);
+
+        let agg = pool.aggregate_stats();
+        // The mid-solve swap is the ordinary warm re-init, once per
+        // worker, and `ResumeSolve` counts as a solve phase.
+        assert_eq!(agg.beta_warm_reinits, w as u64);
+        assert_eq!(agg.solves, 2 * w as u64);
+        // Safra settlement across the mid-solve broadcast: every
+        // worker-to-worker update was received.
+        assert_eq!(agg.msgs_sent, agg.msgs_received);
+
+        let z = pool.gather();
+        let seq = solve_cd(&p1, &CdConfig { tol: 1e-8, ..Default::default() });
+        let (cd, cs) = (p1.cost(&z), p1.cost(&seq.z));
+        assert!((cd - cs).abs() < 1e-6 * (1.0 + cs.abs()), "{cd} vs {cs}");
+    }
+
+    #[test]
+    fn overlapped_leg_retires_cleanly_without_a_dict() {
+        // `None` from the update closure stops the speculative phase
+        // immediately (converged/last-iteration path): the pool must be
+        // reusable afterwards and the grid must not have desynced.
+        let p = gen_problem_1d(63, 120, 2, 5);
+        let cfg = DicodConfig { n_workers: 2, tol: 1e-8, ..Default::default() };
+        let mut pool = WorkerPool::spawn(Arc::new(p.clone()), &cfg, None);
+        assert!(pool.solve().converged);
+        let nnz_before = pool.gather().nnz();
+        let leg = pool.solve_overlapped(|_, z_nnz| {
+            assert_eq!(z_nnz, nnz_before);
+            (None, ())
+        });
+        assert!(!leg.phase.diverged);
+        // No dictionary landed: no warm re-init, Z unchanged, and the
+        // pool still answers phases.
+        let agg = pool.aggregate_stats();
+        assert_eq!(agg.beta_warm_reinits, 0);
+        assert_eq!(pool.gather().nnz(), nnz_before);
+        assert!(pool.solve().converged);
     }
 }

@@ -56,7 +56,7 @@ use std::time::Duration;
 
 use crate::csc::problem::CscProblem;
 use crate::csc::select::{SelectMode, Strategy};
-use crate::dicod::config::DicodConfig;
+use crate::dicod::config::{Alternation, DicodConfig};
 use crate::dicod::messages::{
     decode_frame, encode_bootstrap_frame, encode_coord_frame, encode_fwd_frame,
     encode_worker_frame, BootstrapMsg, CoordMsg, UpdateMsg, WireFrame, WorkerMsg,
@@ -143,6 +143,16 @@ pub trait WorkerEndpoint: Send {
 pub trait CoordEndpoint: Send {
     /// Send a phase command (or routed update) to worker `rank`.
     fn send(&mut self, rank: usize, msg: WorkerMsg);
+    /// Send the same phase command to ranks `0..n`. The default is a
+    /// per-rank `send` loop (for the channel transport that is already
+    /// just `n` cheap `Arc` clones); transports with a serialization
+    /// seam override this to encode the payload once and share the
+    /// frame bytes across ranks.
+    fn broadcast(&mut self, n: usize, msg: WorkerMsg) {
+        for rank in 0..n {
+            self.send(rank, msg.clone());
+        }
+    }
     /// Wait up to `timeout` for the next worker reply. `Closed` means
     /// every worker endpoint is gone — the pool treats that as a dead
     /// grid and panics loudly.
@@ -591,10 +601,19 @@ struct SocketCoordEndpoint {
 
 impl CoordEndpoint for SocketCoordEndpoint {
     fn send(&mut self, rank: usize, msg: WorkerMsg) {
-        // Encode per destination: a `SetDict` broadcast serializes once
-        // per worker — the price of the wire (measured by the
-        // `cdl_outer` bench's transport section).
         let _ = self.outbox[rank].send(encode_worker_frame(&msg));
+    }
+
+    fn broadcast(&mut self, n: usize, msg: WorkerMsg) {
+        // Encode once, share the bytes: a `SetDict`/`SetProblem`
+        // broadcast serializes the `DictUpdate` a single time and every
+        // rank's writer thread ships the same frame — the same
+        // pre-encoded-frame discipline the hub already applies to
+        // routed worker→worker updates.
+        let frame = encode_worker_frame(&msg);
+        for tx in &self.outbox[..n] {
+            let _ = tx.send(frame.clone());
+        }
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<CoordMsg, RecvError> {
@@ -722,6 +741,9 @@ fn config_from_bootstrap(b: &BootstrapMsg) -> Result<DicodConfig, String> {
         inbox_every: b.inbox_every as usize,
         persistent: true,
         transport: TransportKind::Socket,
+        // A served worker only ever runs solve phases it is told to
+        // run; alternation scheduling lives with the coordinator.
+        alternation: Alternation::Barrier,
     })
 }
 

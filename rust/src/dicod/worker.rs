@@ -25,6 +25,20 @@
 //! windows stay consistent, and serves `ComputeStats` / `SetDict` /
 //! `Gather` commands from its resident state.
 //!
+//! Two alternation modes drive the phase protocol (see
+//! [`crate::dicod::config::Alternation`]). Under the default *barrier*
+//! alternation `SetDict` is applied by the dispatcher strictly between
+//! phases. Under *pipelined* alternation the pool issues `ResumeSolve`
+//! right after collecting the φ/ψ partials: the worker re-enters the
+//! solve loop speculatively under the old dictionary (its resident
+//! Z/beta sit at the previous fixed point, so speculative updates are
+//! ordinary warm coordinate descent), and the eventual `SetDict` lands
+//! *mid-solve*, applied inside the loop as the same warm beta re-init +
+//! dirty-all-segments rebuild, after which convergence is re-proved
+//! under the new dictionary before the phase can end. The
+//! speculative-solve invariant: a mid-solve swap is the same state
+//! transition as a between-phase swap — only its timing differs.
+//!
 //! Segment selection runs through the worker's resident
 //! [`SelectionState`] (see `csc::select`): clean segments answer their
 //! visit from a cached champion in O(1) and only segments dirtied by a
@@ -138,11 +152,14 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
             // Stray Stop (e.g. a timeout race after the phase already
             // ended): nothing to do outside a solve phase.
             Ok(WorkerMsg::Stop) => {}
-            Ok(WorkerMsg::Solve) => {
+            // `ResumeSolve` is the pipelined-alternation re-entry: same
+            // loop, warm from the resident windows, with the `SetDict`
+            // broadcast expected to land mid-phase.
+            Ok(WorkerMsg::Solve) | Ok(WorkerMsg::ResumeSolve) => {
                 stats.solves += 1;
                 let alive = solve_phase(SolveCtx {
                     rank,
-                    problem: problem.as_ref(),
+                    problem: &mut problem,
                     grid: grid.as_ref(),
                     cfg: cfg.as_ref(),
                     endpoint: endpoint.as_mut(),
@@ -150,6 +167,8 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
                     beta: &mut beta,
                     z: &mut z,
                     sel: &mut sel,
+                    ext: &ext,
+                    ext_dims: &ext_dims,
                     ext_parts: &ext_parts,
                     stats: &mut stats,
                 });
@@ -165,34 +184,18 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
                 endpoint.send_coord(CoordMsg::Stats(StatsMsg { from: rank, phi, psi, z_l1, z_nnz }));
             }
             Ok(WorkerMsg::SetDict(msg)) => {
-                problem = match msg {
-                    // In-process delivery: share the coordinator's
-                    // problem (FFT spectra included) by Arc.
-                    SetDictMsg::Shared(p) => p,
-                    // Wire delivery: rebuild a local CscProblem against
-                    // the resident X. Derived quantities (DtD, norms,
-                    // beta) are bit-identical to the shared path; the
-                    // FFT spectra are regenerated on this host — a
-                    // once-per-host cost the channel transport never
-                    // pays (see the messages module docs).
-                    SetDictMsg::Wire(du) => {
-                        assert_eq!(
-                            du.fingerprint,
-                            DictUpdate::geometry_fingerprint(problem.x.dims(), du.d.dims()),
-                            "worker {rank}: SetDict geometry fingerprint mismatch"
-                        );
-                        Arc::new(CscProblem::new(problem.x_shared(), du.d, du.lambda))
-                    }
-                };
-                beta = BetaWindow::init_window_warm(&problem, &ext.lo, &ext_dims, &z);
-                // beta was rebuilt wholesale under the new dictionary:
-                // refresh the dz_opt cache (charged to the simulated
-                // clock) and dirty every segment.
-                let filled_before = sel.coords_cache_filled;
-                sel.rebuild(&problem, &beta, &z);
-                stats.work += sel.coords_cache_filled - filled_before;
-                stats.beta_warm_reinits += 1;
-                endpoint.send_coord(CoordMsg::DictSet { from: rank });
+                apply_set_dict(
+                    rank,
+                    &mut problem,
+                    msg,
+                    &ext,
+                    &ext_dims,
+                    &z,
+                    &mut beta,
+                    &mut sel,
+                    &mut stats,
+                    endpoint.as_mut(),
+                );
             }
             Ok(WorkerMsg::SetProblem(msg)) => {
                 // Streaming chunk swap: new observation (and possibly a
@@ -255,10 +258,13 @@ pub fn run_pool_worker(ctx: PoolWorkerCtx) {
     }
 }
 
-/// Borrowed state for one solve phase.
+/// Borrowed state for one solve phase. `problem` is mutable because a
+/// pipelined `SetDict` can land mid-phase and swap it in place; `ext` /
+/// `ext_dims` are carried so the mid-solve warm beta re-init can run
+/// without leaving the loop.
 struct SolveCtx<'a> {
     rank: usize,
-    problem: &'a CscProblem,
+    problem: &'a mut Arc<CscProblem>,
     grid: &'a WorkerGrid,
     cfg: &'a DicodConfig,
     endpoint: &'a mut dyn WorkerEndpoint,
@@ -266,8 +272,59 @@ struct SolveCtx<'a> {
     beta: &'a mut BetaWindow,
     z: &'a mut ZWindow,
     sel: &'a mut SelectionState,
+    ext: &'a Rect,
+    ext_dims: &'a [usize],
     ext_parts: &'a [Rect],
     stats: &'a mut WorkerStats,
+}
+
+/// Apply a dictionary broadcast to the resident state: swap the
+/// problem, re-bootstrap beta warm from the resident Z, refresh the
+/// selection cache (dirtying every segment), and ack with `DictSet`.
+/// Called from the phase dispatcher (barrier alternation: between
+/// phases) and from inside [`solve_phase`] (pipelined alternation: the
+/// broadcast lands mid-solve) — the speculative-solve invariant is
+/// that both paths run exactly this transition.
+#[allow(clippy::too_many_arguments)]
+fn apply_set_dict(
+    rank: usize,
+    problem: &mut Arc<CscProblem>,
+    msg: SetDictMsg,
+    ext: &Rect,
+    ext_dims: &[usize],
+    z: &ZWindow,
+    beta: &mut BetaWindow,
+    sel: &mut SelectionState,
+    stats: &mut WorkerStats,
+    endpoint: &mut dyn WorkerEndpoint,
+) {
+    *problem = match msg {
+        // In-process delivery: share the coordinator's problem (FFT
+        // spectra included) by Arc.
+        SetDictMsg::Shared(p) => p,
+        // Wire delivery: rebuild a local CscProblem against the
+        // resident X. Derived quantities (DtD, norms, beta) are
+        // bit-identical to the shared path; the FFT spectra are
+        // regenerated on this host — a once-per-host cost the channel
+        // transport never pays (see the messages module docs).
+        SetDictMsg::Wire(du) => {
+            assert_eq!(
+                du.fingerprint,
+                DictUpdate::geometry_fingerprint(problem.x.dims(), du.d.dims()),
+                "worker {rank}: SetDict geometry fingerprint mismatch"
+            );
+            Arc::new(CscProblem::new(problem.x_shared(), du.d, du.lambda))
+        }
+    };
+    *beta = BetaWindow::init_window_warm(problem, &ext.lo, ext_dims, z);
+    // beta was rebuilt wholesale under the new dictionary: refresh the
+    // dz_opt cache (charged to the simulated clock) and dirty every
+    // segment.
+    let filled_before = sel.coords_cache_filled;
+    sel.rebuild(problem, beta, z);
+    stats.work += sel.coords_cache_filled - filled_before;
+    stats.beta_warm_reinits += 1;
+    endpoint.send_coord(CoordMsg::DictSet { from: rank });
 }
 
 /// Send a status report on the worker→coordinator edge (free function
@@ -304,6 +361,8 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
         beta,
         z,
         sel,
+        ext,
+        ext_dims,
         ext_parts,
         stats,
     } = ctx;
@@ -320,6 +379,10 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
     let mut capped = false;
     let mut diverged = false;
     let mut phase_updates = 0u64;
+    // Updates already counted as speculative this phase: everything
+    // accepted before a mid-solve `SetDict` ran under the dictionary
+    // that broadcast just retired.
+    let mut spec_baseline = 0u64;
     let mut stop = false;
     let mut alive = true;
 
@@ -358,8 +421,27 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
                     alive = false;
                     break;
                 }
-                // Phase commands never overlap a solve (the pool waits
-                // for SolveDone); ignore defensively.
+                // Pipelined alternation: the dictionary broadcast lands
+                // mid-solve. Apply the warm re-init in place and keep
+                // solving; convergence must be re-proved under the new
+                // dictionary, so the sweep tracker restarts and an idle
+                // worker wakes.
+                Ok(WorkerMsg::SetDict(msg)) => {
+                    apply_set_dict(rank, problem, msg, ext, ext_dims, z, beta, sel, stats, endpoint);
+                    stats.overlap_updates += phase_updates - spec_baseline;
+                    spec_baseline = phase_updates;
+                    sweep_max = 0.0;
+                    if idle {
+                        if !capped && !diverged {
+                            idle = false;
+                            send_status(endpoint, rank, false, false, false, stats);
+                        } else {
+                            send_status(endpoint, rank, true, false, diverged, stats);
+                        }
+                    }
+                }
+                // Other phase commands never overlap a solve (the pool
+                // waits for SolveDone); ignore defensively.
                 Ok(_) => {}
                 Err(_) => break,
             }
@@ -397,6 +479,21 @@ fn solve_phase(ctx: SolveCtx<'_>) -> bool {
                 Ok(WorkerMsg::Shutdown) => {
                     alive = false;
                     break 'main;
+                }
+                // Mid-solve dictionary broadcast while paused (see the
+                // drain branch): re-init warm and wake to re-prove
+                // convergence under the new dictionary.
+                Ok(WorkerMsg::SetDict(msg)) => {
+                    apply_set_dict(rank, problem, msg, ext, ext_dims, z, beta, sel, stats, endpoint);
+                    stats.overlap_updates += phase_updates - spec_baseline;
+                    spec_baseline = phase_updates;
+                    sweep_max = 0.0;
+                    if !capped && !diverged {
+                        idle = false;
+                        send_status(endpoint, rank, false, false, false, stats);
+                    } else {
+                        send_status(endpoint, rank, true, false, diverged, stats);
+                    }
                 }
                 Ok(_) => {}
                 Err(RecvError::Timeout) => {}

@@ -44,7 +44,15 @@
 //! `dicodile worker --listen` mode that serves one worker over a real
 //! socket for multi-process grids;
 //! [`cdl`] runs the alternating minimization (distributed CSC +
-//! sufficient-statistics PGD dictionary updates) on top of it; and
+//! sufficient-statistics PGD dictionary updates) on top of it, with a
+//! selectable **alternation schedule** (`DicodConfig::alternation` /
+//! `DICODILE_ALTERNATION=barrier|pipelined`): `Barrier` (default)
+//! idles the grid during every dictionary step and is bitwise
+//! reproducible, while `Pipelined` resumes coordinate descent
+//! speculatively under the old dictionary during the φ/ψ reduce + PGD
+//! and lands the accepted dictionary as a mid-solve warm beta re-init
+//! (tolerance-level reproducible; `IterRecord::dict_wait_s` /
+//! `overlap_updates` record the recovered idle time); and
 //! [`api`] is the **shared serving facade**: a `Clone + Send + Sync`
 //! [`api::Session`] holding a registry of resident pools behind
 //! interior synchronization (an `RwLock` registry of per-observation
@@ -145,7 +153,7 @@ pub mod prelude {
     pub use crate::csc::problem::CscProblem;
     pub use crate::csc::select::Strategy;
     pub use crate::data::synthetic::SyntheticConfig;
-    pub use crate::dicod::config::{DicodConfig, PartitionKind, TransportKind};
+    pub use crate::dicod::config::{Alternation, DicodConfig, PartitionKind, TransportKind};
     pub use crate::stream::{ChunkResult, HaloPolicy, OnlineCdl, StreamEncoder};
     pub use crate::tensor::NdTensor;
     pub use crate::util::rng::Pcg64;

@@ -1,0 +1,254 @@
+//! Gates for the CDL alternation schedules:
+//!
+//! (a) **Barrier** (the default) is the pre-PR trajectory: no
+//!     speculative updates, the grid idles for the whole dictionary
+//!     step (`dict_wait_s == dict_time`), the trace still matches the
+//!     untouched teardown/respawn driver cost-for-cost, and a
+//!     single-worker run is bitwise reproducible — which pins the
+//!     satellite changes riding along (shared broadcast frames,
+//!     recycled φ/ψ reduction buffers, threaded spectra rebuild) as
+//!     pure scheduling/allocation changes.
+//! (b) **Pipelined** is gated by convergence invariants, not bitwise
+//!     parity: the surrogate cost is monotone within tolerance, the
+//!     final KKT residual is no worse than Barrier's at the same
+//!     `tol`, and the Safra message counters settle across the
+//!     mid-solve `SetDict` broadcast.
+//!
+//! `DICODILE_TEST_WORKERS` (comma-separated, default "1,2,4") pins the
+//! worker counts and `DICODILE_ALTERNATION` picks the default-config
+//! mode — `scripts/tier1.sh` runs this suite across both modes × every
+//! worker count.
+
+use std::sync::Arc;
+
+use dicodile::cdl::driver::{learn_dictionary, CdlConfig, CdlResult, CscBackend};
+use dicodile::csc::cd::kkt_violation;
+use dicodile::csc::problem::CscProblem;
+use dicodile::data::synthetic::SyntheticConfig;
+use dicodile::dicod::config::{Alternation, DicodConfig};
+use dicodile::tensor::NdTensor;
+
+fn worker_counts() -> Vec<usize> {
+    std::env::var("DICODILE_TEST_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
+
+fn signal() -> NdTensor {
+    let mut gen = SyntheticConfig::signal_1d(700, 2, 8);
+    gen.rho = 0.02;
+    gen.noise_std = 0.02;
+    gen.generate(91).x
+}
+
+/// Persistent-pool CDL config pinned to one alternation mode. `nu = 0`
+/// runs every iteration in every mode, so traces stay comparable.
+fn cfg(w: usize, alternation: Alternation) -> CdlConfig {
+    CdlConfig {
+        n_atoms: 2,
+        atom_dims: vec![8],
+        max_iter: 5,
+        nu: 0.0,
+        csc_tol: 1e-6,
+        lambda_frac: 0.05,
+        csc: CscBackend::Persistent(DicodConfig {
+            tol: 1e-6,
+            alternation,
+            ..DicodConfig::dicodile(w)
+        }),
+        seed: 91,
+        ..Default::default()
+    }
+}
+
+/// KKT residual of a run's final activations under its final dictionary.
+fn final_kkt(x: &NdTensor, r: &CdlResult) -> f64 {
+    let p = CscProblem::new(Arc::new(x.clone()), r.d.clone(), r.lambda);
+    kkt_violation(&p, &r.z)
+}
+
+// ---------------------------------------------------------------------------
+// (a) Barrier: the pre-PR trajectory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_mode_records_no_overlap() {
+    let x = signal();
+    for w in worker_counts() {
+        let r = learn_dictionary(&x, &cfg(w, Alternation::Barrier)).unwrap();
+        for rec in &r.trace {
+            assert_eq!(rec.overlap_updates, 0, "W={w}: Barrier must never speculate");
+            assert_eq!(
+                rec.dict_wait_s.to_bits(),
+                rec.dict_time.to_bits(),
+                "W={w}: Barrier idles the grid for the whole dictionary step"
+            );
+        }
+        let report = r.pool.expect("persistent run records pool provenance");
+        assert_eq!(report.stats.overlap_updates, 0, "W={w}");
+    }
+}
+
+#[test]
+fn barrier_trace_still_matches_teardown() {
+    // The teardown/respawn driver is untouched by the alternation work,
+    // so cost-for-cost agreement with it pins explicit-Barrier runs to
+    // the pre-PR trajectory at every worker count.
+    let x = signal();
+    for w in worker_counts() {
+        let a = learn_dictionary(&x, &cfg(w, Alternation::Barrier)).unwrap();
+        let b = learn_dictionary(
+            &x,
+            &CdlConfig {
+                csc: CscBackend::Distributed(DicodConfig {
+                    persistent: false,
+                    tol: 1e-6,
+                    ..DicodConfig::dicodile(w)
+                }),
+                ..cfg(w, Alternation::Barrier)
+            },
+        )
+        .unwrap();
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (ra, rb) in a.trace.iter().zip(&b.trace) {
+            assert!(
+                (ra.cost - rb.cost).abs() < 1e-4 * (1.0 + rb.cost.abs()),
+                "W={w} iter {}: barrier {} vs teardown {}",
+                ra.iter,
+                ra.cost,
+                rb.cost
+            );
+        }
+    }
+}
+
+#[test]
+fn barrier_is_bitwise_reproducible_at_one_worker() {
+    // A single-worker grid has no message races: two identical runs
+    // must produce the same bits. This is the regression gate for the
+    // satellites on the Barrier path — pre-encoded broadcast frames,
+    // recycled φ/ψ reduction buffers (`copy_from_slice` seeding keeps
+    // signed zeros), and the scoped-thread spectra rebuild.
+    let x = signal();
+    let a = learn_dictionary(&x, &cfg(1, Alternation::Barrier)).unwrap();
+    let b = learn_dictionary(&x, &cfg(1, Alternation::Barrier)).unwrap();
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (ra, rb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(
+            ra.cost.to_bits(),
+            rb.cost.to_bits(),
+            "iter {}: cost diverged across identical Barrier runs",
+            ra.iter
+        );
+        assert_eq!(ra.cost_after_csc.to_bits(), rb.cost_after_csc.to_bits());
+        assert_eq!(ra.z_nnz, rb.z_nnz);
+    }
+    for (i, (da, db)) in a.d.data().iter().zip(b.d.data()).enumerate() {
+        assert_eq!(da.to_bits(), db.to_bits(), "D[{i}] diverged");
+    }
+    for (i, (za, zb)) in a.z.data().iter().zip(b.z.data()).enumerate() {
+        assert_eq!(za.to_bits(), zb.to_bits(), "Z[{i}] diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) Pipelined: convergence-invariant gates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_cost_monotone_and_kkt_no_worse_than_barrier() {
+    let x = signal();
+    for w in worker_counts() {
+        let barrier = learn_dictionary(&x, &cfg(w, Alternation::Barrier)).unwrap();
+        let pipelined = learn_dictionary(&x, &cfg(w, Alternation::Pipelined)).unwrap();
+
+        // Same alternation count (nu = 0 runs all iterations).
+        assert_eq!(pipelined.trace.len(), barrier.trace.len(), "W={w}");
+
+        // Surrogate cost monotone within tolerance: the mid-solve swap
+        // is the ordinary warm re-init, so each accepted PGD step still
+        // decreases the surrogate.
+        for win in pipelined.trace.windows(2) {
+            assert!(
+                win[1].cost <= win[0].cost * (1.0 + 1e-6) + 1e-9,
+                "W={w} iter {}: pipelined cost rose {} -> {}",
+                win[1].iter,
+                win[0].cost,
+                win[1].cost
+            );
+        }
+        // And each iteration's CSC phase reduced the cost its PGD
+        // started from.
+        for rec in &pipelined.trace {
+            assert!(rec.cost <= rec.cost_after_csc * (1.0 + 1e-6) + 1e-9, "W={w}");
+        }
+
+        // Per-iteration cost stays in the Barrier trajectory's
+        // neighborhood (same updates, different timing).
+        for (rp, rb) in pipelined.trace.iter().zip(&barrier.trace) {
+            assert!(
+                (rp.cost - rb.cost).abs() < 1e-3 * (1.0 + rb.cost.abs()),
+                "W={w} iter {}: pipelined {} vs barrier {}",
+                rp.iter,
+                rp.cost,
+                rb.cost
+            );
+        }
+
+        // Final KKT residual no worse than Barrier's at the same tol
+        // (small absolute slack: both settle at the solver tolerance).
+        let (kp, kb) = (final_kkt(&x, &pipelined), final_kkt(&x, &barrier));
+        assert!(
+            kp <= kb + 1e-5,
+            "W={w}: pipelined KKT {kp} worse than barrier {kb}"
+        );
+
+        // Safra settlement across the mid-solve broadcasts: every
+        // worker-to-worker update sent during speculative phases was
+        // received before the run ended.
+        let report = pipelined.pool.expect("persistent run records pool provenance");
+        assert_eq!(report.stats.msgs_sent, report.stats.msgs_received, "W={w}");
+
+        // Provenance: the recovered idle time is visible per iteration.
+        for rec in &pipelined.trace {
+            assert!(rec.dict_wait_s >= 0.0 && rec.dict_wait_s.is_finite(), "W={w}");
+        }
+    }
+}
+
+#[test]
+fn default_config_honors_env_mode() {
+    // `scripts/tier1.sh` runs this suite with `DICODILE_ALTERNATION`
+    // set to each mode: a default-constructed backend must follow the
+    // env and pass that mode's generic gates.
+    let x = signal();
+    let mode = std::env::var("DICODILE_ALTERNATION")
+        .ok()
+        .and_then(|s| s.parse::<Alternation>().ok())
+        .unwrap_or(Alternation::Barrier);
+    let r = learn_dictionary(
+        &x,
+        &CdlConfig {
+            csc: CscBackend::Persistent(DicodConfig { tol: 1e-6, ..DicodConfig::dicodile(2) }),
+            ..cfg(2, mode)
+        },
+    )
+    .unwrap();
+    assert_eq!(r.trace.len(), 5);
+    for win in r.trace.windows(2) {
+        assert!(win[1].cost <= win[0].cost * (1.0 + 1e-6) + 1e-9, "{mode:?}");
+    }
+    if mode == Alternation::Barrier {
+        for rec in &r.trace {
+            assert_eq!(rec.overlap_updates, 0);
+            assert_eq!(rec.dict_wait_s.to_bits(), rec.dict_time.to_bits());
+        }
+    }
+    assert!(final_kkt(&x, &r) < 1e-4, "{mode:?}");
+}

@@ -41,6 +41,15 @@ for w in 1 2 4; do
   # pins its own pools to one worker (bitwise determinism), so the
   # worker-count env only varies the surrounding build.
   DICODILE_TEST_WORKERS=$w cargo test -q --test serve_http
+  # Alternation-schedule gates, run under BOTH modes: the env pins the
+  # default-config path, and the suite's explicit configs check that
+  # Barrier stays the pre-PR trajectory (no speculation, bitwise
+  # reproducible at W=1, teardown cost parity) while Pipelined holds
+  # its convergence gates (surrogate cost monotone, final KKT no worse
+  # than Barrier, Safra settlement across the mid-solve SetDict).
+  for a in barrier pipelined; do
+    DICODILE_TEST_WORKERS=$w DICODILE_ALTERNATION=$a cargo test -q --test alternation_parity
+  done
   # Incremental-vs-rescan selection parity: sequential runs must be
   # bit-identical (Greedy now via the tournament tree over segment
   # champions); distributed runs must hold the clean/dirty counter
